@@ -1,0 +1,6 @@
+"""Pytest shim: make `pytest python/tests/` work from the repo root by
+putting the build-time python package (python/compile) on the path."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,52 @@
+//! Quickstart: build two subgraphs with NN-Descent and merge them with
+//! Two-way Merge (paper Alg. 1), then check the result against exact
+//! ground truth.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use knn_merge::construction::{NnDescent, NnDescentParams};
+use knn_merge::dataset::DatasetFamily;
+use knn_merge::distance::Metric;
+use knn_merge::eval::recall::{graph_recall, GroundTruth};
+use knn_merge::merge::{MergeParams, TwoWayMerge};
+
+fn main() {
+    // 1. A SIFT-like synthetic dataset (d=128, LID ~ 16, see Tab. II).
+    let n = 8_000;
+    let ds = DatasetFamily::Sift.generate(n, 42);
+    println!("dataset: {} vectors, dim {}", ds.len(), ds.dim);
+
+    // 2. Split into two disjoint subsets and build a subgraph on each —
+    //    in a real deployment these come from different machines or
+    //    different ingestion batches.
+    let parts = ds.split_contiguous(2);
+    let nnd = NnDescent::new(NnDescentParams {
+        k: 20,
+        lambda: 12,
+        ..Default::default()
+    });
+    let t0 = std::time::Instant::now();
+    let g1 = nnd.build(&parts[0].0, Metric::L2);
+    let g2 = nnd.build(&parts[1].0, Metric::L2);
+    println!("subgraphs built in {:.2}s", t0.elapsed().as_secs_f64());
+
+    // 3. Two-way Merge: one-shot sampling into the supporting graph S,
+    //    flag-driven Local-Join rounds, final MergeSort with G0.
+    let t1 = std::time::Instant::now();
+    let merged = TwoWayMerge::new(MergeParams {
+        k: 20,
+        lambda: 12,
+        ..Default::default()
+    })
+    .merge(&parts[0].0, &parts[1].0, &g1, &g2, Metric::L2);
+    println!("two-way merge in {:.2}s", t1.elapsed().as_secs_f64());
+
+    // 4. Quality check against exact (sampled) ground truth.
+    let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 300, 7);
+    let r10 = graph_recall(&merged, &truth, 10);
+    println!("merged graph recall@10 = {r10:.4}");
+    assert!(r10 > 0.9, "quickstart should reach recall@10 > 0.9");
+    println!("OK");
+}

@@ -1,0 +1,82 @@
+"""AOT lowering: JAX (L2+L1) -> HLO text -> artifacts/.
+
+HLO *text* is the interchange format (NOT ``lowered.compile()`` or a
+serialized ``HloModuleProto``): jax >= 0.5 emits protos with 64-bit
+instruction ids which the Rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (normally via ``make artifacts``):
+
+    python -m compile.aot --out-dir ../artifacts \
+        --dims 128,96,100,960 --batch 64 --nx 32 --ny 32
+
+Artifact naming is consumed by ``rust/src/runtime/mod.rs``:
+``l2xdist_b{B}_x{NX}_y{NY}_d{D}.hlo.txt``.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_cross_distance(b, nx, ny, d) -> str:
+    x = jax.ShapeDtypeStruct((b, nx, d), jnp.float32)
+    y = jax.ShapeDtypeStruct((b, ny, d), jnp.float32)
+    return to_hlo_text(jax.jit(model.cross_distance).lower(x, y))
+
+
+def lower_distance_topk(b, nx, ny, d, k) -> str:
+    x = jax.ShapeDtypeStruct((b, nx, d), jnp.float32)
+    y = jax.ShapeDtypeStruct((b, ny, d), jnp.float32)
+    fn = lambda x, y: model.distance_topk(x, y, k=k)
+    return to_hlo_text(jax.jit(fn).lower(x, y))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--dims", default="128",
+                    help="comma-separated vector dims to compile for")
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--nx", type=int, default=32)
+    ap.add_argument("--ny", type=int, default=32)
+    ap.add_argument("--topk", type=int, default=0,
+                    help="also emit the fused distance+topk artifact")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for d in [int(t) for t in args.dims.split(",") if t]:
+        name = f"l2xdist_b{args.batch}_x{args.nx}_y{args.ny}_d{d}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_cross_distance(args.batch, args.nx, args.ny, d)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+        if args.topk:
+            tname = (f"topk{args.topk}_b{args.batch}_x{args.nx}"
+                     f"_y{args.ny}_d{d}.hlo.txt")
+            tpath = os.path.join(args.out_dir, tname)
+            text = lower_distance_topk(args.batch, args.nx, args.ny, d,
+                                       args.topk)
+            with open(tpath, "w") as f:
+                f.write(text)
+            print(f"wrote {tpath} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Layer 1 — the Pallas cross-distance kernel.
+
+The Local-Join hot spot of the merge algorithms is a batch of small
+cross-distance tiles: every sampled neighbor of an element against every
+newly discovered one. On GPU (GNND) this is a shared-memory threadblock
+tile + WMMA matmul; the TPU mapping (DESIGN.md §Hardware-Adaptation) is:
+
+  * grid over the batch of tiles; per step, `BlockSpec` stages one
+    X tile `[NX, D]` and one Y tile `[NY, D]` from HBM into VMEM;
+  * the `X @ Y^T` contraction targets the MXU
+    (`preferred_element_type=float32`);
+  * the rank-1 norm corrections are VPU element-wise ops fused in the
+    same kernel, so the `[NX, NY]` result is written once — no HBM
+    round-trip for intermediates.
+
+`interpret=True` is mandatory on CPU-PJRT: real TPU lowering emits a
+Mosaic custom-call the CPU plugin cannot execute. The structure (tiling,
+fusion, memory schedule) is what carries to hardware; see
+EXPERIMENTS.md §Perf for the analytic VMEM/MXU estimates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _l2_tile_kernel(x_ref, y_ref, o_ref):
+    """One grid step: squared-L2 distances of one [NX, D] x [NY, D] tile.
+
+    Refs arrive blocked as [1, NX, D] / [1, NY, D] / [1, NX, NY].
+    """
+    x = x_ref[0]  # [NX, D] in VMEM
+    y = y_ref[0]  # [NY, D] in VMEM
+    # MXU contraction: X @ Y^T with f32 accumulation.
+    xy = jax.lax.dot_general(
+        x,
+        y,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # VPU: rank-1 norm corrections, fused in the same kernel.
+    xn = jnp.sum(x * x, axis=1, keepdims=True)  # [NX, 1]
+    yn = jnp.sum(y * y, axis=1, keepdims=True).T  # [1, NY]
+    d = xn + yn - 2.0 * xy
+    # Cancellation can push exact zeros slightly negative.
+    o_ref[0] = jnp.maximum(d, 0.0)
+
+
+def _l2_batch_kernel(x_ref, y_ref, o_ref):
+    """Whole-batch variant: one grid step over [B, NX, D] x [B, NY, D].
+
+    Same arithmetic as `_l2_tile_kernel`, batched with dot_general over
+    the shared leading dim (batch matmul hits the MXU per slice).
+    """
+    x = x_ref[...]
+    y = y_ref[...]
+    xy = jax.lax.dot_general(
+        x,
+        y,
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    xn = jnp.sum(x * x, axis=2)[:, :, None]
+    yn = jnp.sum(y * y, axis=2)[:, None, :]
+    o_ref[...] = jnp.maximum(xn + yn - 2.0 * xy, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "grid_over_batch"))
+def batched_cross_l2(x, y, *, interpret=True, grid_over_batch=False):
+    """Batched squared-L2 cross distances via the Pallas tile kernel.
+
+    x: [B, NX, D] float32, y: [B, NY, D] float32 -> [B, NX, NY] float32.
+
+    ``grid_over_batch=True`` is the TPU schedule: one grid step per batch
+    element, each staging a [NX, D]+[NY, D] tile HBM->VMEM (`vmem_bytes`
+    sizes it). On CPU-PJRT the interpreter executes grid steps as a
+    serialized loop with per-step overhead, so the AOT artifact for the
+    CPU runtime uses the single-block variant (`grid_over_batch=False`),
+    whose one step is the same fused arithmetic over the whole batch.
+    Both paths share the oracle tests.
+    """
+    b, nx, d = x.shape
+    _, ny, _ = y.shape
+    if grid_over_batch:
+        return pl.pallas_call(
+            _l2_tile_kernel,
+            grid=(b,),
+            in_specs=[
+                pl.BlockSpec((1, nx, d), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, ny, d), lambda i: (i, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, nx, ny), lambda i: (i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, nx, ny), jnp.float32),
+            interpret=interpret,
+        )(x, y)
+    return pl.pallas_call(
+        _l2_batch_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, nx, ny), jnp.float32),
+        interpret=interpret,
+    )(x, y)
+
+
+def vmem_bytes(nx, ny, d, dtype_bytes=4):
+    """Analytic VMEM footprint of one grid step (perf model §Perf).
+
+    X tile + Y tile + output tile, all resident simultaneously.
+    """
+    return dtype_bytes * (nx * d + ny * d + nx * ny)
+
+
+def mxu_utilization_estimate(nx, ny, d, mxu=128):
+    """Fraction of MXU lanes busy for the X @ Y^T contraction.
+
+    The 128x128 systolic array is fed [NX, D] x [D, NY] — utilization is
+    the product of the fill ratios of each dimension (padded to the MXU
+    tile). This is the structural estimate used to pick tile shapes; it
+    is exact for dense tiles and an upper bound under padding.
+    """
+    fill = lambda n: n / (((n + mxu - 1) // mxu) * mxu)
+    return fill(nx) * fill(ny) * fill(d)

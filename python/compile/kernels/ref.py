@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the L1 distance kernel.
+
+The kernel computes batched squared-L2 cross-distance tiles:
+
+    D[b, i, j] = || X[b, i, :] - Y[b, j, :] ||^2
+
+Two reference implementations are provided: the direct difference form
+(numerically exact, the correctness oracle) and the norm-expanded form
+(what the Pallas kernel computes on the MXU, used to bound the
+cancellation error accepted from the fast path).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_l2_direct(x, y):
+    """Direct sum((x - y)^2) — the oracle.
+
+    x: [B, NX, D], y: [B, NY, D] -> [B, NX, NY] (float32)
+    """
+    diff = x[:, :, None, :] - y[:, None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def cross_l2_expanded(x, y):
+    """Norm expansion ||x||^2 + ||y||^2 - 2 x.y (MXU-friendly form)."""
+    xn = jnp.sum(x * x, axis=-1)  # [B, NX]
+    yn = jnp.sum(y * y, axis=-1)  # [B, NY]
+    xy = jnp.einsum("bid,bjd->bij", x, y)
+    d = xn[:, :, None] + yn[:, None, :] - 2.0 * xy
+    return jnp.maximum(d, 0.0)
+
+
+def topk_neighbors(x, y, k):
+    """Reference for the L2 model's fused distance + top-k stage.
+
+    Returns (dists, idx): the k smallest distances per (b, i) row and the
+    corresponding Y indices, ascending by distance.
+    """
+    d = cross_l2_direct(x, y)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx

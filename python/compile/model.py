@@ -1,0 +1,35 @@
+"""Layer 2 — the JAX compute graph lowered for the Rust coordinator.
+
+Two exported entry points, both calling the L1 Pallas kernel so they
+lower into the same HLO module family:
+
+  * ``cross_distance`` — the batched distance tile evaluator the Rust
+    Local-Join hot path dispatches to (`runtime::XlaEngine`).
+  * ``distance_topk`` — distance tiles fused with a top-k selection,
+    the "candidate shortlist" graph used by the GNND-style baseline and
+    kept as a demonstration that L2 composes on top of L1 (XLA fuses
+    the top-k with the kernel output without an HBM round-trip of the
+    full distance tile).
+
+Build-time only: `aot.py` lowers these with fixed shapes into
+`artifacts/*.hlo.txt`; nothing here is imported at runtime.
+"""
+
+import jax
+
+from .kernels.l2_distance import batched_cross_l2
+
+
+def cross_distance(x, y):
+    """x: [B, NX, D], y: [B, NY, D] -> ([B, NX, NY],)"""
+    return (batched_cross_l2(x, y),)
+
+
+def distance_topk(x, y, *, k):
+    """Fused distance + k-smallest selection.
+
+    Returns (dists [B, NX, k] ascending, indices [B, NX, k] into NY).
+    """
+    d = batched_cross_l2(x, y)
+    neg, idx = jax.lax.top_k(-d, k)
+    return -neg, idx

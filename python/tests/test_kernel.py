@@ -1,0 +1,117 @@
+"""L1 kernel correctness: Pallas (interpret) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and value distributions; numpy brute force
+pins the oracle itself.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.l2_distance import (
+    batched_cross_l2,
+    mxu_utilization_estimate,
+    vmem_bytes,
+)
+
+
+def numpy_cross_l2(x, y):
+    b, nx, d = x.shape
+    _, ny, _ = y.shape
+    out = np.zeros((b, nx, ny), dtype=np.float64)
+    for t in range(b):
+        for i in range(nx):
+            for j in range(ny):
+                diff = x[t, i].astype(np.float64) - y[t, j].astype(np.float64)
+                out[t, i, j] = np.dot(diff, diff)
+    return out
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def test_oracle_matches_numpy():
+    x = rand((2, 3, 5), 1)
+    y = rand((2, 4, 5), 2)
+    got = np.asarray(ref.cross_l2_direct(jnp.asarray(x), jnp.asarray(y)))
+    want = numpy_cross_l2(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_expanded_form_matches_oracle():
+    x = rand((3, 8, 32), 3)
+    y = rand((3, 8, 32), 4)
+    a = np.asarray(ref.cross_l2_direct(jnp.asarray(x), jnp.asarray(y)))
+    b = np.asarray(ref.cross_l2_expanded(jnp.asarray(x), jnp.asarray(y)))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_kernel_matches_oracle_basic():
+    x = rand((4, 16, 64), 5)
+    y = rand((4, 16, 64), 6)
+    got = np.asarray(batched_cross_l2(jnp.asarray(x), jnp.asarray(y)))
+    want = np.asarray(ref.cross_l2_direct(jnp.asarray(x), jnp.asarray(y)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    nx=st.integers(1, 16),
+    ny=st.integers(1, 16),
+    d=st.integers(1, 96),
+    seed=st.integers(0, 2**31),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+)
+def test_pallas_kernel_matches_oracle_property(b, nx, ny, d, seed, scale):
+    x = rand((b, nx, d), seed, scale)
+    y = rand((b, ny, d), seed + 1, scale)
+    got = np.asarray(batched_cross_l2(jnp.asarray(x), jnp.asarray(y)))
+    want = numpy_cross_l2(x, y)
+    tol = max(1e-4, 1e-5 * scale * scale * d)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=tol)
+
+
+def test_kernel_nonnegative_and_zero_diagonal():
+    x = rand((2, 8, 16), 7)
+    got = np.asarray(batched_cross_l2(jnp.asarray(x), jnp.asarray(x)))
+    assert (got >= 0.0).all()
+    for t in range(2):
+        np.testing.assert_allclose(np.diag(got[t]), 0.0, atol=1e-3)
+
+
+def test_kernel_identical_rows_give_zero():
+    x = np.ones((1, 4, 8), dtype=np.float32) * 3.0
+    got = np.asarray(batched_cross_l2(jnp.asarray(x), jnp.asarray(x)))
+    np.testing.assert_allclose(got, 0.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_kernel_dtype_is_f32(dtype):
+    x = rand((1, 4, 8), 8).astype(dtype)
+    out = batched_cross_l2(jnp.asarray(x), jnp.asarray(x))
+    assert out.dtype == jnp.float32
+
+
+def test_vmem_model():
+    # 32x32 tile at d=128: X 16 KiB + Y 16 KiB + out 4 KiB = 36 KiB.
+    assert vmem_bytes(32, 32, 128) == 4 * (32 * 128 + 32 * 128 + 32 * 32)
+    # Must fit a TPU core's ~16 MiB VMEM with generous headroom.
+    assert vmem_bytes(32, 32, 960) < 16 * 2**20
+
+
+def test_mxu_estimate_monotone():
+    # Full 128-wide tiles use the array fully.
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    # Smaller tiles waste lanes.
+    assert mxu_utilization_estimate(32, 32, 128) == pytest.approx(
+        (32 / 128) ** 2
+    )
+    assert mxu_utilization_estimate(32, 32, 96) < mxu_utilization_estimate(
+        32, 32, 128
+    )

@@ -1,0 +1,60 @@
+"""L2 model + AOT pipeline tests: shapes, top-k fusion, HLO text
+generation (the artifact the Rust runtime loads)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+def test_cross_distance_shape_and_tuple():
+    x = jnp.asarray(rand((2, 8, 16), 0))
+    y = jnp.asarray(rand((2, 6, 16), 1))
+    out = model.cross_distance(x, y)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (2, 8, 6)
+
+
+def test_distance_topk_matches_reference():
+    x = jnp.asarray(rand((2, 8, 16), 2))
+    y = jnp.asarray(rand((2, 12, 16), 3))
+    d_got, i_got = model.distance_topk(x, y, k=4)
+    d_want, i_want = ref.topk_neighbors(x, y, 4)
+    np.testing.assert_allclose(np.asarray(d_got), np.asarray(d_want),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i_got), np.asarray(i_want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 8), ny=st.integers(8, 20), seed=st.integers(0, 999))
+def test_topk_is_sorted_and_within_range(k, ny, seed):
+    x = jnp.asarray(rand((1, 4, 8), seed))
+    y = jnp.asarray(rand((1, ny, 8), seed + 1))
+    d, i = model.distance_topk(x, y, k=k)
+    d = np.asarray(d)
+    i = np.asarray(i)
+    assert d.shape == (1, 4, k)
+    assert (np.diff(d, axis=-1) >= -1e-6).all(), "distances ascending"
+    assert (i >= 0).all() and (i < ny).all()
+
+
+def test_hlo_text_lowering_smoke():
+    text = aot.lower_cross_distance(2, 4, 4, 8)
+    assert "HloModule" in text
+    # The lowered module must expose the two parameters and a tuple root.
+    assert "f32[2,4,8]" in text
+    assert "f32[2,4,4]" in text
+
+
+def test_hlo_text_topk_lowering_smoke():
+    text = aot.lower_distance_topk(2, 4, 6, 8, 3)
+    assert "HloModule" in text
+    assert "f32[2,4,3]" in text or "s32[2,4,3]" in text

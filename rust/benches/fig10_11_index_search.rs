@@ -1,0 +1,150 @@
+//! Paper Figs. 10/11 (and appendix 15/16) — NN-search QPS vs Recall@10
+//! on merged indexing graphs versus graphs built from scratch, for HNSW
+//! and Vamana, with the dataset split into m = 2, 4, 8 subsets.
+//!
+//! Merging uses the Sec. III-B pipeline: Two-way hierarchy (or
+//! Multi-way at m=8) over the subgraph base layers with no-eviction
+//! union, then the source method's own diversification.
+//!
+//! Expected shape: merged-graph search curves within ~5% of scratch
+//! curves; see fig12_17 for the build-time side.
+
+use knn_merge::dataset::{Dataset, DatasetFamily};
+use knn_merge::distance::Metric;
+use knn_merge::eval::bench::{scaled, BenchReport, Row};
+use knn_merge::eval::recall::{search_recall, GroundTruth};
+use knn_merge::graph::KnnGraph;
+use knn_merge::index::search::run_queries;
+use knn_merge::index::{Hnsw, HnswParams, IndexGraph, Vamana, VamanaParams};
+use knn_merge::merge::index_merge::{
+    merge_many_index_graphs, merge_two_index_graphs, IndexKind,
+};
+use knn_merge::merge::MergeParams;
+
+/// Merge m subset indexes per the Sec. III-B pipeline. m = 2 uses plain
+/// two-way; m > 2 pairs hierarchically via intermediate k-NN unions
+/// except m = 8 which demonstrates the Multi-way path.
+fn merge_index(
+    parts: &[(Dataset, usize)],
+    knns: &[KnnGraph],
+    kind: IndexKind,
+    k: usize,
+    max_degree: usize,
+) -> IndexGraph {
+    let params = MergeParams {
+        k,
+        lambda: 16,
+        ..Default::default()
+    };
+    if parts.len() == 2 {
+        merge_two_index_graphs(
+            &parts[0].0,
+            &parts[1].0,
+            &knns[0],
+            &knns[1],
+            Metric::L2,
+            params,
+            kind,
+            max_degree,
+        )
+    } else {
+        let ds_refs: Vec<&Dataset> = parts.iter().map(|(d, _)| d).collect();
+        let g_refs: Vec<&KnnGraph> = knns.iter().collect();
+        merge_many_index_graphs(&ds_refs, &g_refs, Metric::L2, params, kind, max_degree)
+    }
+}
+
+fn sweep(
+    report: &mut BenchReport,
+    label: &str,
+    ds: &Dataset,
+    ig: &IndexGraph,
+    queries: &Dataset,
+    truth: &GroundTruth,
+) {
+    for ef in [10usize, 20, 40, 80, 160] {
+        let (results, qps, stats) = run_queries(ds, Metric::L2, ig, queries, 10, ef);
+        let r = search_recall(&results, truth, 10);
+        report.push(
+            Row::new(format!("{label} ef={ef}"))
+                .col("qps", qps)
+                .col("recall@10", r)
+                .col("dist_evals", stats.dist_evals as f64 / queries.len() as f64),
+        );
+    }
+}
+
+fn main() {
+    let mut report = BenchReport::new("fig10_11_index_search");
+    report.note("QPS/recall on 1 core; merged via Sec. III-B (multi-way at m=8)");
+    let n = scaled(6_000);
+    let queries_n = 100;
+    for family in [DatasetFamily::Sift, DatasetFamily::Deep] {
+        let ds = family.generate(n, 42);
+        let queries = family.generate_queries(queries_n, 42);
+        let truth = GroundTruth::for_queries(&ds, &queries, 10, Metric::L2);
+
+        // --- HNSW ---
+        let hp = HnswParams::default();
+        let scratch = Hnsw::build(&ds, Metric::L2, hp);
+        sweep(
+            &mut report,
+            &format!("{} hnsw scratch", family.name()),
+            &ds,
+            &scratch.base_index(),
+            &queries,
+            &truth,
+        );
+        for m in [2usize, 4, 8] {
+            let parts = ds.split_contiguous(m);
+            let knns: Vec<KnnGraph> = parts
+                .iter()
+                .map(|(d, _)| Hnsw::build(d, Metric::L2, hp).to_knn_graph(d, Metric::L2))
+                .collect();
+            let ig = merge_index(&parts, &knns, IndexKind::Hnsw, 2 * hp.m, 2 * hp.m);
+            sweep(
+                &mut report,
+                &format!("{} hnsw merged m={m}", family.name()),
+                &ds,
+                &ig,
+                &queries,
+                &truth,
+            );
+        }
+
+        // --- Vamana ---
+        let vp = VamanaParams::default();
+        let scratch = Vamana::build(&ds, Metric::L2, vp);
+        sweep(
+            &mut report,
+            &format!("{} vamana scratch", family.name()),
+            &ds,
+            &scratch.graph,
+            &queries,
+            &truth,
+        );
+        for m in [2usize, 4, 8] {
+            let parts = ds.split_contiguous(m);
+            let knns: Vec<KnnGraph> = parts
+                .iter()
+                .map(|(d, _)| Vamana::build(d, Metric::L2, vp).to_knn_graph(d, Metric::L2))
+                .collect();
+            let ig = merge_index(
+                &parts,
+                &knns,
+                IndexKind::Vamana { alpha: vp.alpha },
+                vp.r,
+                vp.r,
+            );
+            sweep(
+                &mut report,
+                &format!("{} vamana merged m={m}", family.name()),
+                &ds,
+                &ig,
+                &queries,
+                &truth,
+            );
+        }
+    }
+    report.finish();
+}

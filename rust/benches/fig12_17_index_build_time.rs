@@ -1,0 +1,126 @@
+//! Paper Fig. 12 (and appendix Fig. 17) — time to *merge* pre-built
+//! indexing subgraphs versus building the full index from scratch, for
+//! HNSW and Vamana.
+//!
+//! Expected shape: merge time ≪ scratch build time (the motivating
+//! economics of index merging), with multi-way cheaper than two-way at
+//! larger m.
+
+use knn_merge::dataset::{Dataset, DatasetFamily};
+use knn_merge::distance::Metric;
+use knn_merge::eval::bench::{scaled, time, BenchReport, Row};
+use knn_merge::graph::KnnGraph;
+use knn_merge::index::{Hnsw, HnswParams, Vamana, VamanaParams};
+use knn_merge::merge::index_merge::{
+    merge_many_index_graphs, merge_two_index_graphs, IndexKind,
+};
+use knn_merge::merge::MergeParams;
+
+fn main() {
+    let mut report = BenchReport::new("fig12_17_index_build_time");
+    report.note("merge cost includes Sec. III-B diversification post-processing");
+    let n = scaled(6_000);
+    for family in [DatasetFamily::Sift, DatasetFamily::Deep] {
+        let ds = family.generate(n, 42);
+
+        // --- HNSW ---
+        let hp = HnswParams::default();
+        let params = MergeParams {
+            k: 2 * hp.m,
+            lambda: 16,
+            ..Default::default()
+        };
+        let (_, scratch_secs) = time(|| Hnsw::build(&ds, Metric::L2, hp));
+        report.push(
+            Row::new(format!("{} hnsw scratch", family.name())).col("time_s", scratch_secs),
+        );
+        for m in [2usize, 4] {
+            let parts = ds.split_contiguous(m);
+            let knns: Vec<KnnGraph> = parts
+                .iter()
+                .map(|(d, _)| Hnsw::build(d, Metric::L2, hp).to_knn_graph(d, Metric::L2))
+                .collect();
+            let ds_refs: Vec<&Dataset> = parts.iter().map(|(d, _)| d).collect();
+            let g_refs: Vec<&KnnGraph> = knns.iter().collect();
+            let (_, merge_secs) = time(|| {
+                if m == 2 {
+                    merge_two_index_graphs(
+                        ds_refs[0],
+                        ds_refs[1],
+                        g_refs[0],
+                        g_refs[1],
+                        Metric::L2,
+                        params,
+                        IndexKind::Hnsw,
+                        2 * hp.m,
+                    )
+                } else {
+                    merge_many_index_graphs(
+                        &ds_refs,
+                        &g_refs,
+                        Metric::L2,
+                        params,
+                        IndexKind::Hnsw,
+                        2 * hp.m,
+                    )
+                }
+            });
+            report.push(
+                Row::new(format!("{} hnsw merge m={m}", family.name()))
+                    .col("time_s", merge_secs)
+                    .col("speedup_vs_scratch", scratch_secs / merge_secs),
+            );
+        }
+
+        // --- Vamana ---
+        let vp = VamanaParams::default();
+        let params = MergeParams {
+            k: vp.r,
+            lambda: 16,
+            ..Default::default()
+        };
+        let (_, scratch_secs) = time(|| Vamana::build(&ds, Metric::L2, vp));
+        report.push(
+            Row::new(format!("{} vamana scratch", family.name()))
+                .col("time_s", scratch_secs),
+        );
+        for m in [2usize, 4] {
+            let parts = ds.split_contiguous(m);
+            let knns: Vec<KnnGraph> = parts
+                .iter()
+                .map(|(d, _)| Vamana::build(d, Metric::L2, vp).to_knn_graph(d, Metric::L2))
+                .collect();
+            let ds_refs: Vec<&Dataset> = parts.iter().map(|(d, _)| d).collect();
+            let g_refs: Vec<&KnnGraph> = knns.iter().collect();
+            let (_, merge_secs) = time(|| {
+                if m == 2 {
+                    merge_two_index_graphs(
+                        ds_refs[0],
+                        ds_refs[1],
+                        g_refs[0],
+                        g_refs[1],
+                        Metric::L2,
+                        params,
+                        IndexKind::Vamana { alpha: vp.alpha },
+                        vp.r,
+                    )
+                } else {
+                    merge_many_index_graphs(
+                        &ds_refs,
+                        &g_refs,
+                        Metric::L2,
+                        params,
+                        IndexKind::Vamana { alpha: vp.alpha },
+                        vp.r,
+                    )
+                }
+            });
+            report.push(
+                Row::new(format!("{} vamana merge m={m}", family.name()))
+                    .col("time_s", merge_secs)
+                    .col("speedup_vs_scratch", scratch_secs / merge_secs),
+            );
+        }
+    }
+    report.finish();
+}

@@ -1,0 +1,53 @@
+//! Paper Fig. 13 — construction time as the node count grows (3..9
+//! nodes), for the three large datasets (scaled here).
+//!
+//! Expected shape: modelled makespan drops steadily with more nodes but
+//! with diminishing returns as exchange costs grow (see fig14 for the
+//! breakdown).
+
+use knn_merge::config::RunConfig;
+use knn_merge::construction::NnDescentParams;
+use knn_merge::dataset::DatasetFamily;
+use knn_merge::distance::Metric;
+use knn_merge::distributed::run_cluster;
+use knn_merge::eval::bench::{scaled, BenchReport, Row};
+use knn_merge::eval::recall::{graph_recall, GroundTruth};
+use knn_merge::merge::MergeParams;
+
+fn main() {
+    let mut report = BenchReport::new("fig13_node_scaling");
+    report.note("modelled makespan = slowest node's uncontended compute + 1 Gbps exchange");
+    let k = 20;
+    let lambda = 12;
+    for (family, n) in [
+        (DatasetFamily::Sift, scaled(24_000)),
+        (DatasetFamily::Deep, scaled(24_000)),
+    ] {
+        let ds = family.generate(n, 42);
+        let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 200, 7);
+        for nodes in [3usize, 5, 7, 9] {
+            let cfg = RunConfig {
+                parts: nodes,
+                merge: MergeParams {
+                    k,
+                    lambda,
+                    ..Default::default()
+                },
+                nnd: NnDescentParams {
+                    k,
+                    lambda,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let result = run_cluster(&ds, &cfg);
+            report.push(
+                Row::new(format!("{} nodes={nodes}", family.name()))
+                    .col("makespan_s", result.modelled_makespan())
+                    .col("recall@10", graph_recall(&result.graph, &truth, 10))
+                    .col("exchanged_MB", result.bytes_exchanged() as f64 / 1e6),
+            );
+        }
+    }
+    report.finish();
+}

@@ -1,0 +1,51 @@
+//! Paper Fig. 5 — impact of lambda on Two-way Merge (SIFT1M, k=100):
+//! converged merge time and Recall@10 / Recall@100 as lambda grows.
+//!
+//! Expected shape: both time and quality rise with lambda; quality
+//! saturates past lambda ~ 4–20 while time keeps growing linearly.
+
+use knn_merge::construction::{NnDescent, NnDescentParams};
+use knn_merge::dataset::DatasetFamily;
+use knn_merge::distance::Metric;
+use knn_merge::eval::bench::{scaled, time, BenchReport, Row};
+use knn_merge::eval::recall::{graph_recall, GroundTruth};
+use knn_merge::merge::{MergeParams, TwoWayMerge};
+
+fn main() {
+    let n = scaled(12_000);
+    let k = 40; // paper uses k=100 at 1M scale; scaled with the dataset
+    let ds = DatasetFamily::Sift.generate(n, 42);
+    let parts = ds.split_contiguous(2);
+    let nnd = NnDescent::new(NnDescentParams {
+        k,
+        lambda: k / 2,
+        ..Default::default()
+    });
+    let g1 = nnd.build(&parts[0].0, Metric::L2);
+    let g2 = nnd.build(&parts[1].0, Metric::L2);
+    let truth = GroundTruth::sampled(&ds, 100.min(k), Metric::L2, 300, 7);
+
+    let mut report = BenchReport::new("fig5_lambda_sweep");
+    report.note(format!(
+        "two-way merge on sift-like n={n} k={k}; paper: SIFT1M k=100"
+    ));
+    report.note("expected: recall saturates by lambda~20, time grows ~linearly");
+    for lambda in [1usize, 2, 4, 8, 12, 16, 20, 24, 32] {
+        let merger = TwoWayMerge::new(MergeParams {
+            k,
+            lambda,
+            ..Default::default()
+        });
+        let (merged, secs) =
+            time(|| merger.merge(&parts[0].0, &parts[1].0, &g1, &g2, Metric::L2));
+        let r10 = graph_recall(&merged, &truth, 10);
+        let r100 = graph_recall(&merged, &truth, 100.min(k));
+        report.push(
+            Row::new(format!("lambda={lambda}"))
+                .col("merge_s", secs)
+                .col("recall@10", r10)
+                .col(&format!("recall@{}", 100.min(k)), r100),
+        );
+    }
+    report.finish();
+}

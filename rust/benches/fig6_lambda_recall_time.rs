@@ -1,0 +1,65 @@
+//! Paper Fig. 6 — Recall@10 versus merge time for several lambda
+//! settings, on a low-LID family (SIFT-like) and a high-LID family
+//! (GIST-like). k = 100 in the paper, scaled here.
+//!
+//! Expected shape: low-LID saturates with small lambda; high-LID needs
+//! larger lambda to reach the same recall; past lambda~20 extra time
+//! buys little quality.
+
+use knn_merge::construction::{NnDescent, NnDescentParams};
+use knn_merge::dataset::DatasetFamily;
+use knn_merge::distance::Metric;
+use knn_merge::eval::bench::{scaled, BenchReport, Row};
+use knn_merge::eval::recall::{graph_recall, GroundTruth};
+use knn_merge::merge::{MergeParams, TwoWayMerge};
+
+fn main() {
+    let mut report = BenchReport::new("fig6_lambda_recall_time");
+    report.note("recall-vs-time curve points (iteration snapshots) per lambda");
+    for (family, n) in [
+        (DatasetFamily::Sift, scaled(10_000)),
+        (DatasetFamily::Gist, scaled(3_000)),
+    ] {
+        let k = 40;
+        let ds = family.generate(n, 42);
+        let parts = ds.split_contiguous(2);
+        let nnd = NnDescent::new(NnDescentParams {
+            k,
+            lambda: k / 2,
+            ..Default::default()
+        });
+        let g1 = nnd.build(&parts[0].0, Metric::L2);
+        let g2 = nnd.build(&parts[1].0, Metric::L2);
+        let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 200, 7);
+        for lambda in [4usize, 8, 16, 24] {
+            // Record (time, recall) at each merge iteration — one curve.
+            let mut snaps: Vec<(f64, knn_merge::KnnGraph)> = Vec::new();
+            let merger = TwoWayMerge::new(MergeParams {
+                k,
+                lambda,
+                ..Default::default()
+            });
+            let g0 = knn_merge::KnnGraph::concat(&[&g1, &g2], &[0, parts[0].0.len()]);
+            let _ = merger.merge_observed(
+                &parts[0].0,
+                &parts[1].0,
+                &g1,
+                &g2,
+                Metric::L2,
+                &knn_merge::distance::ScalarEngine,
+                &mut |_, secs, shared| {
+                    snaps.push((secs, shared.snapshot().merge_sorted(&g0)));
+                },
+            );
+            for (i, (secs, graph)) in snaps.iter().enumerate() {
+                let r = graph_recall(graph, &truth, 10);
+                report.push(
+                    Row::new(format!("{} lam={lambda} iter={i}", family.name()))
+                        .col("time_s", *secs)
+                        .col("recall@10", r),
+                );
+            }
+        }
+    }
+    report.finish();
+}

@@ -1,0 +1,58 @@
+//! Paper Fig. 7 — correlation between subgraph quality and merged-graph
+//! quality (SIFT1M + GIST1M, k=100, lambda=20).
+//!
+//! Subgraphs are degraded to controlled recall levels; expected shape:
+//! merged recall tracks (≈ averages) the subgraph recalls, and merge
+//! time is flat w.r.t. subgraph quality.
+
+use knn_merge::construction::bruteforce;
+use knn_merge::dataset::DatasetFamily;
+use knn_merge::distance::Metric;
+use knn_merge::eval::bench::{scaled, time, BenchReport, Row};
+use knn_merge::eval::recall::{degrade_graph, graph_recall, GroundTruth};
+use knn_merge::merge::{MergeParams, TwoWayMerge};
+
+fn main() {
+    let mut report = BenchReport::new("fig7_subgraph_quality");
+    report.note("subgraphs degraded to target recalls; k=20 lambda=12 here");
+    for (family, n) in [
+        (DatasetFamily::Sift, scaled(6_000)),
+        (DatasetFamily::Gist, scaled(2_000)),
+    ] {
+        let k = 20;
+        let ds = family.generate(n, 42);
+        let parts = ds.split_contiguous(2);
+        // Exact subgraphs, then degraded copies at several qualities.
+        let exact1 = bruteforce::build(&parts[0].0, k, Metric::L2);
+        let exact2 = bruteforce::build(&parts[1].0, k, Metric::L2);
+        let truth = GroundTruth::sampled(&ds, k, Metric::L2, 200, 7);
+        let sub_truth1 = GroundTruth::sampled(&parts[0].0, k, Metric::L2, 150, 8);
+        let sub_truth2 = GroundTruth::sampled(&parts[1].0, k, Metric::L2, 150, 9);
+
+        for keep in [0.1f64, 0.3, 0.5, 0.7, 1.0] {
+            let g1 = degrade_graph(&exact1, &parts[0].0, Metric::L2, keep, 1);
+            let g2 = degrade_graph(&exact2, &parts[1].0, Metric::L2, keep, 2);
+            let q1 = graph_recall(&g1, &sub_truth1, k);
+            let q2 = graph_recall(&g2, &sub_truth2, k);
+            let merger = TwoWayMerge::new(MergeParams {
+                k,
+                lambda: 12,
+                ..Default::default()
+            });
+            let (merged, secs) =
+                time(|| merger.merge(&parts[0].0, &parts[1].0, &g1, &g2, Metric::L2));
+            let rm = graph_recall(&merged, &truth, 10);
+            let rmk = graph_recall(&merged, &truth, k);
+            report.push(
+                Row::new(format!("{} keep={keep:.1}", family.name()))
+                    .col("sub1_recall", q1)
+                    .col("sub2_recall", q2)
+                    .col("merged_recall@10", rm)
+                    .col("merged_recall@k", rmk)
+                    .col("merge_s", secs),
+            );
+        }
+    }
+    report.note("expected: merged_recall ~ avg(sub recalls) at high quality; merge_s flat");
+    report.finish();
+}

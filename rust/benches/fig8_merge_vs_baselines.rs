@@ -1,0 +1,98 @@
+//! Paper Fig. 8 — Recall@10 versus time: Two-way Merge vs S-Merge vs
+//! NN-Descent-from-scratch, across the dataset families (k=100,
+//! lambda=20 in the paper; scaled here).
+//!
+//! Expected shape: Two-way Merge reaches any given recall ≥2x faster
+//! than S-Merge and ~3x faster than scratch NN-Descent, with a flatter
+//! top tail (no resampling of converged neighbors).
+
+use knn_merge::construction::{NnDescent, NnDescentParams};
+use knn_merge::dataset::DatasetFamily;
+use knn_merge::distance::Metric;
+use knn_merge::eval::bench::{scaled, BenchReport, Row};
+use knn_merge::eval::recall::{graph_recall, GroundTruth};
+use knn_merge::graph::KnnGraph;
+use knn_merge::merge::{MergeParams, SMerge, TwoWayMerge};
+
+fn main() {
+    let mut report = BenchReport::new("fig8_merge_vs_baselines");
+    report.note("per-iteration (time, recall@10) snapshots; subgraph build time excluded (paper protocol)");
+    let k = 20;
+    let lambda = 12;
+    for (family, n) in [
+        (DatasetFamily::Sift, scaled(10_000)),
+        (DatasetFamily::Deep, scaled(10_000)),
+        (DatasetFamily::Spacev, scaled(10_000)),
+        (DatasetFamily::Gist, scaled(3_000)),
+    ] {
+        let ds = family.generate(n, 42);
+        let parts = ds.split_contiguous(2);
+        let nnd = NnDescent::new(NnDescentParams {
+            k,
+            lambda,
+            ..Default::default()
+        });
+        let g1 = nnd.build(&parts[0].0, Metric::L2);
+        let g2 = nnd.build(&parts[1].0, Metric::L2);
+        let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 200, 7);
+        let g0 = KnnGraph::concat(&[&g1, &g2], &[0, parts[0].0.len()]);
+        let params = MergeParams {
+            k,
+            lambda,
+            ..Default::default()
+        };
+
+        // Two-way Merge curve.
+        let mut rows: Vec<(String, f64, f64)> = Vec::new();
+        TwoWayMerge::new(params).merge_observed(
+            &parts[0].0,
+            &parts[1].0,
+            &g1,
+            &g2,
+            Metric::L2,
+            &knn_merge::distance::ScalarEngine,
+            &mut |iter, secs, shared| {
+                let g = shared.snapshot().merge_sorted(&g0);
+                rows.push((
+                    format!("{} two-way iter={iter}", family.name()),
+                    secs,
+                    graph_recall(&g, &truth, 10),
+                ));
+            },
+        );
+        // S-Merge curve.
+        SMerge::new(params).merge_observed(
+            &parts[0].0,
+            &parts[1].0,
+            &g1,
+            &g2,
+            Metric::L2,
+            &mut |iter, secs, shared| {
+                let g = shared.snapshot();
+                rows.push((
+                    format!("{} s-merge iter={iter}", family.name()),
+                    secs,
+                    graph_recall(&g, &truth, 10),
+                ));
+            },
+        );
+        // NN-Descent-from-scratch curve.
+        NnDescent::new(NnDescentParams {
+            k,
+            lambda,
+            ..Default::default()
+        })
+        .build_observed(&ds, Metric::L2, &mut |iter, secs, shared| {
+            let g = shared.snapshot();
+            rows.push((
+                format!("{} nn-descent iter={iter}", family.name()),
+                secs,
+                graph_recall(&g, &truth, 10),
+            ));
+        });
+        for (label, secs, recall) in rows {
+            report.push(Row::new(label).col("time_s", secs).col("recall@10", recall));
+        }
+    }
+    report.finish();
+}

@@ -1,0 +1,65 @@
+//! Paper Fig. 9 — merging m subgraphs (m = 2..64): Recall@10 and time
+//! for Two-way Merge (bottom-up hierarchy, Fig. 3a) versus Multi-way
+//! Merge (all at once, Fig. 3b), on SIFT-like and DEEP-like data.
+//!
+//! Expected shape: hierarchy quality stays flat as m grows while
+//! Multi-way drops slightly (~0.002-0.003 in the paper); Multi-way's
+//! time advantage grows with m.
+
+use knn_merge::construction::{NnDescent, NnDescentParams};
+use knn_merge::dataset::DatasetFamily;
+use knn_merge::distance::Metric;
+use knn_merge::eval::bench::{scaled, time, BenchReport, Row};
+use knn_merge::eval::recall::{graph_recall, GroundTruth};
+use knn_merge::graph::KnnGraph;
+use knn_merge::merge::{hierarchy, MergeParams, MultiWayMerge};
+
+fn main() {
+    let mut report = BenchReport::new("fig9_multiway_scaling");
+    report.note("hierarchy = repeated two-way (Fig 3a); multi-way = one call (Fig 3b)");
+    let k = 20;
+    let lambda = 12;
+    let params = MergeParams {
+        k,
+        lambda,
+        ..Default::default()
+    };
+    for family in [DatasetFamily::Sift, DatasetFamily::Deep] {
+        let n = scaled(10_000);
+        let ds = family.generate(n, 42);
+        let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 200, 7);
+        for m in [2usize, 4, 8, 16, 32] {
+            let parts = ds.split_contiguous(m);
+            let nnd = NnDescent::new(NnDescentParams {
+                k,
+                lambda,
+                ..Default::default()
+            });
+            let datasets: Vec<_> = parts.iter().map(|(d, _)| d.clone()).collect();
+            let graphs: Vec<KnnGraph> =
+                datasets.iter().map(|d| nnd.build(d, Metric::L2)).collect();
+            let ds_refs: Vec<&_> = datasets.iter().collect();
+            let g_refs: Vec<&KnnGraph> = graphs.iter().collect();
+
+            let ((two_way, calls), t_two) = time(|| {
+                hierarchy::merge_hierarchical(&ds_refs, &g_refs, Metric::L2, params)
+            });
+            let (multi, t_multi) =
+                time(|| MultiWayMerge::new(params).merge(&ds_refs, &g_refs, Metric::L2));
+            let r_two = graph_recall(&two_way, &truth, 10);
+            let r_multi = graph_recall(&multi, &truth, 10);
+            report.push(
+                Row::new(format!("{} m={m} two-way", family.name()))
+                    .col("time_s", t_two)
+                    .col("recall@10", r_two)
+                    .col("merge_calls", calls as f64),
+            );
+            report.push(
+                Row::new(format!("{} m={m} multi-way", family.name()))
+                    .col("time_s", t_multi)
+                    .col("recall@10", r_multi),
+            );
+        }
+    }
+    report.finish();
+}

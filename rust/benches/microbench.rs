@@ -1,0 +1,113 @@
+//! Hot-path microbenchmarks (§Perf substrate):
+//!
+//! - distance kernels (scalar vs norm-expanded vs XLA/Pallas engine)
+//!   across block sizes — locates the engine crossover point;
+//! - neighbor-list insertion throughput;
+//! - one NN-Descent Local-Join round;
+//! - serialization throughput (network/storage payload path).
+
+use knn_merge::dataset::DatasetFamily;
+use knn_merge::distance::engine::NormExpandEngine;
+use knn_merge::distance::{DistanceEngine, ScalarEngine};
+use knn_merge::eval::bench::{median_secs, BenchReport, Row};
+use knn_merge::graph::{serial, KnnGraph, NeighborList, SharedGraph};
+use knn_merge::runtime::XlaEngine;
+use knn_merge::util::Rng;
+
+fn main() {
+    let mut report = BenchReport::new("microbench");
+    let dim = 128;
+    let mut rng = Rng::seeded(1);
+
+    // --- distance engines across block sizes ---
+    let xla = XlaEngine::load_for_dim(&XlaEngine::default_artifact_dir(), dim).ok();
+    if xla.is_none() {
+        report.note("xla engine unavailable (run `make artifacts`)");
+    }
+    for &(b, nx, ny) in &[(1usize, 8usize, 8usize), (16, 16, 16), (64, 32, 32), (256, 32, 32)] {
+        let xs: Vec<f32> = (0..b * nx * dim).map(|_| rng.gen_normal()).collect();
+        let ys: Vec<f32> = (0..b * ny * dim).map(|_| rng.gen_normal()).collect();
+        let mut out = vec![0.0f32; b * nx * ny];
+        let pairs = (b * nx * ny) as f64;
+        let mut row = Row::new(format!("cross_l2 b={b} {nx}x{ny} d={dim}"));
+        let t = median_secs(5, || {
+            ScalarEngine.batch_cross_l2(&xs, &ys, dim, b, nx, ny, &mut out)
+        });
+        row = row.col("scalar_Mpairs/s", pairs / t / 1e6);
+        let t = median_secs(5, || {
+            NormExpandEngine.batch_cross_l2(&xs, &ys, dim, b, nx, ny, &mut out)
+        });
+        row = row.col("expand_Mpairs/s", pairs / t / 1e6);
+        if let Some(engine) = &xla {
+            let t = median_secs(3, || {
+                engine.batch_cross_l2(&xs, &ys, dim, b, nx, ny, &mut out)
+            });
+            row = row.col("xla_Mpairs/s", pairs / t / 1e6);
+        }
+        report.push(row);
+    }
+
+    // --- neighbor-list insertion ---
+    {
+        let inserts = 200_000usize;
+        let ids: Vec<u32> = (0..inserts).map(|_| rng.gen_range(1000) as u32).collect();
+        let dists: Vec<f32> = (0..inserts).map(|_| rng.gen_f32()).collect();
+        let t = median_secs(5, || {
+            let mut list = NeighborList::new(40);
+            for i in 0..inserts {
+                list.insert(ids[i], dists[i], true);
+            }
+        });
+        report.push(
+            Row::new("neighborlist insert k=40").col("Minserts/s", inserts as f64 / t / 1e6),
+        );
+        let shared = SharedGraph::empty(1000, 40);
+        let t = median_secs(5, || {
+            for i in 0..inserts {
+                shared.insert(i % 1000, ids[i], dists[i], true);
+            }
+        });
+        report.push(
+            Row::new("sharedgraph insert k=40").col("Minserts/s", inserts as f64 / t / 1e6),
+        );
+    }
+
+    // --- one NN-Descent local-join round (end-to-end hot path) ---
+    {
+        let ds = DatasetFamily::Sift.generate(5_000, 3);
+        let t = median_secs(3, || {
+            use knn_merge::construction::{NnDescent, NnDescentParams};
+            let _ = NnDescent::new(NnDescentParams {
+                k: 20,
+                lambda: 12,
+                max_iters: 1,
+                ..Default::default()
+            })
+            .build(&ds, knn_merge::distance::Metric::L2);
+        });
+        report.push(Row::new("nn-descent init+1 round n=5k").col("time_s", t));
+    }
+
+    // --- serialization throughput ---
+    {
+        let mut g = KnnGraph::empty(20_000, 20);
+        for i in 0..20_000 {
+            for _ in 0..20 {
+                g.lists[i].insert(rng.gen_range(20_000) as u32, rng.gen_f32(), false);
+            }
+        }
+        let bytes = serial::graph_to_bytes(&g);
+        let t_ser = median_secs(5, || {
+            let _ = serial::graph_to_bytes(&g);
+        });
+        let t_de = median_secs(5, || {
+            let _ = serial::graph_from_bytes(&bytes).unwrap();
+        });
+        report.push(
+            Row::new("graph serialize 20k x k=20")
+                .col("ser_MBps", bytes.len() as f64 / t_ser / 1e6)
+                .col("deser_MBps", bytes.len() as f64 / t_de / 1e6),
+        );
+    }
+    report.finish();
+}

@@ -1,0 +1,179 @@
+//! Lloyd's k-means with k-means++-style seeding — substrate for IVF-PQ
+//! and the DiskANN-style overlapping partitioner.
+
+use crate::dataset::Dataset;
+use crate::distance::l2_sq;
+use crate::util::{parallel_map, Rng};
+
+/// k-means result: centroids (row-major `k x d`) and per-point
+/// assignment.
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    pub centroids: Vec<f32>,
+    pub k: usize,
+    pub dim: usize,
+    pub assignment: Vec<u32>,
+}
+
+impl KMeans {
+    /// Index of the centroid nearest to `v`.
+    pub fn nearest(&self, v: &[f32]) -> u32 {
+        self.nearest_n(v, 1)[0]
+    }
+
+    /// Indices of the `n` nearest centroids, ascending by distance.
+    pub fn nearest_n(&self, v: &[f32], n: usize) -> Vec<u32> {
+        let mut scored: Vec<(f32, u32)> = (0..self.k)
+            .map(|c| {
+                (
+                    l2_sq(v, &self.centroids[c * self.dim..(c + 1) * self.dim]),
+                    c as u32,
+                )
+            })
+            .collect();
+        scored.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        scored.into_iter().take(n).map(|(_, c)| c).collect()
+    }
+
+    /// Members of cluster `c`.
+    pub fn cluster_members(&self, c: u32) -> Vec<usize> {
+        self.assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a == c)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Run k-means (`iters` Lloyd steps; seeding = first centroid uniform,
+/// rest by distance-weighted sampling, i.e. k-means++).
+pub fn kmeans(ds: &Dataset, k: usize, iters: usize, seed: u64) -> KMeans {
+    let n = ds.len();
+    let d = ds.dim;
+    let k = k.min(n).max(1);
+    let mut rng = Rng::seeded(seed);
+
+    // --- k-means++ seeding ---
+    let mut centroids = vec![0.0f32; k * d];
+    let first = rng.gen_range(n);
+    centroids[..d].copy_from_slice(ds.vector(first));
+    let mut min_d: Vec<f32> = (0..n)
+        .map(|i| l2_sq(ds.vector(i), &centroids[..d]))
+        .collect();
+    for c in 1..k {
+        let total: f64 = min_d.iter().map(|&v| v as f64).sum();
+        let pick = if total <= 0.0 {
+            rng.gen_range(n)
+        } else {
+            let mut target = rng.gen_f64() * total;
+            let mut chosen = n - 1;
+            for (i, &v) in min_d.iter().enumerate() {
+                target -= v as f64;
+                if target <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            chosen
+        };
+        centroids[c * d..(c + 1) * d].copy_from_slice(ds.vector(pick));
+        for i in 0..n {
+            let dist = l2_sq(ds.vector(i), &centroids[c * d..(c + 1) * d]);
+            if dist < min_d[i] {
+                min_d[i] = dist;
+            }
+        }
+    }
+
+    // --- Lloyd iterations ---
+    let mut assignment = vec![0u32; n];
+    for _ in 0..iters.max(1) {
+        let model = KMeans {
+            centroids: centroids.clone(),
+            k,
+            dim: d,
+            assignment: Vec::new(),
+        };
+        assignment = parallel_map(n, |i| model.nearest(ds.vector(i)));
+        // Recompute means.
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = assignment[i] as usize;
+            counts[c] += 1;
+            for (j, &v) in ds.vector(i).iter().enumerate() {
+                sums[c * d + j] += v as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed empty cluster on a random point.
+                let p = rng.gen_range(n);
+                centroids[c * d..(c + 1) * d].copy_from_slice(ds.vector(p));
+            } else {
+                for j in 0..d {
+                    centroids[c * d + j] = (sums[c * d + j] / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+    KMeans {
+        centroids,
+        k,
+        dim: d,
+        assignment,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_blob_dataset() -> Dataset {
+        let mut rng = Rng::seeded(1);
+        let mut data = Vec::new();
+        for i in 0..200 {
+            let off = if i < 100 { 0.0 } else { 10.0 };
+            data.push(off + rng.gen_normal() * 0.3);
+            data.push(off + rng.gen_normal() * 0.3);
+        }
+        Dataset::from_raw(data, 2)
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let ds = two_blob_dataset();
+        let km = kmeans(&ds, 2, 10, 7);
+        // All points of one blob share a cluster, the other blob the other.
+        let first = km.assignment[0];
+        assert!(km.assignment[..100].iter().all(|&a| a == first));
+        assert!(km.assignment[100..].iter().all(|&a| a != first));
+    }
+
+    #[test]
+    fn nearest_n_sorted_and_distinct() {
+        let ds = two_blob_dataset();
+        let km = kmeans(&ds, 4, 5, 3);
+        let near = km.nearest_n(ds.vector(0), 3);
+        assert_eq!(near.len(), 3);
+        let set: std::collections::HashSet<_> = near.iter().collect();
+        assert_eq!(set.len(), 3);
+        assert_eq!(near[0], km.nearest(ds.vector(0)));
+    }
+
+    #[test]
+    fn cluster_members_partition_points() {
+        let ds = two_blob_dataset();
+        let km = kmeans(&ds, 3, 5, 9);
+        let total: usize = (0..3).map(|c| km.cluster_members(c).len()).sum();
+        assert_eq!(total, ds.len());
+    }
+
+    #[test]
+    fn handles_k_greater_than_n() {
+        let ds = Dataset::from_raw(vec![0.0, 1.0, 2.0], 1);
+        let km = kmeans(&ds, 10, 3, 1);
+        assert_eq!(km.k, 3);
+    }
+}

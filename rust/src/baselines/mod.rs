@@ -1,0 +1,19 @@
+//! Baseline methods the paper compares against (Tab. III, Sec. V-E):
+//!
+//! - [`kmeans`] — Lloyd's k-means, the substrate for IVF-PQ and the
+//!   DiskANN-style overlapping partitioner.
+//! - [`ivfpq`] — IVF-PQ k-NN graph construction (the Faiss comparison
+//!   row): coarse quantizer + product-quantized residuals, graph built
+//!   by probing nearest inverted lists with ADC distances.
+//! - [`diskann_partition`] — the DiskANN merge strategy: k-means with
+//!   multiple assignment into overlapping subsets, per-subset NN-Descent,
+//!   merge-sort reduce (no cross-matching — the quality gap the paper
+//!   reports).
+//! - [`gnnd`] — a batch-synchronous GPU-NN-Descent stand-in running on
+//!   the batched distance engine (documented substitution; see
+//!   DESIGN.md §Hardware-Adaptation).
+
+pub mod diskann_partition;
+pub mod gnnd;
+pub mod ivfpq;
+pub mod kmeans;

@@ -1,0 +1,140 @@
+//! Minimal CLI argument parser (no `clap` in the vendored set).
+//!
+//! Supports `command [--flag] [--key value] [--set section.key=value]`
+//! with typed accessors and a generated usage message.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First non-flag token.
+    pub command: Option<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+    /// `--key value` and `--flag` (value = "true") options.
+    options: BTreeMap<String, String>,
+    /// Repeated `--set k=v` overrides.
+    pub overrides: Vec<(String, String)>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if name == "set" {
+                    let Some(kv) = it.next() else {
+                        bail!("--set requires key=value");
+                    };
+                    let Some((k, v)) = kv.split_once('=') else {
+                        bail!("--set expects key=value, got '{kv}'");
+                    };
+                    args.overrides.push((k.to_string(), v.to_string()));
+                    continue;
+                }
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    args.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.options.insert(name.to_string(), "true".to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_options_positionals() {
+        let a = parse("build --n 5000 --family gist out.bin --verbose");
+        assert_eq!(a.command.as_deref(), Some("build"));
+        assert_eq!(a.get("n"), Some("5000"));
+        assert_eq!(a.get("family"), Some("gist"));
+        assert_eq!(a.positional, vec!["out.bin"]);
+        assert!(a.get_flag("verbose"));
+        assert!(!a.get_flag("quiet"));
+    }
+
+    #[test]
+    fn parses_equals_form_and_sets() {
+        let a = parse("run --n=100 --set merge.k=64 --set dataset.n=9");
+        assert_eq!(a.get("n"), Some("100"));
+        assert_eq!(
+            a.overrides,
+            vec![
+                ("merge.k".to_string(), "64".to_string()),
+                ("dataset.n".to_string(), "9".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("x --n 42");
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        let b = parse("x --n abc");
+        assert!(b.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Args::parse(["--set".to_string()]).is_err());
+        assert!(Args::parse(["--set".to_string(), "noequals".to_string()]).is_err());
+    }
+}

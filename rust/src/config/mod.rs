@@ -1,0 +1,273 @@
+//! Run configuration: a TOML-lite format (flat `key = value` pairs under
+//! `[section]` headers — the subset actually needed for experiment
+//! configs) plus typed accessors and the [`RunConfig`] used by the CLI
+//! and examples. JSON configs are accepted too (via `util::json`).
+
+use crate::construction::NnDescentParams;
+use crate::dataset::DatasetFamily;
+use crate::distance::Metric;
+use crate::merge::MergeParams;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed flat config: `section.key -> raw string value`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConfigMap {
+    values: BTreeMap<String, String>,
+}
+
+impl ConfigMap {
+    /// Parse TOML-lite text: `[section]` headers, `key = value` lines,
+    /// `#` comments, quoted or bare scalar values.
+    pub fn parse(text: &str) -> Result<ConfigMap> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("line {}: expected 'key = value'", lineno + 1);
+            };
+            let key = key.trim();
+            let mut value = value.trim().to_string();
+            if (value.starts_with('"') && value.ends_with('"') && value.len() >= 2)
+                || (value.starts_with('\'') && value.ends_with('\'') && value.len() >= 2)
+            {
+                value = value[1..value.len() - 1].to_string();
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, value);
+        }
+        Ok(ConfigMap { values })
+    }
+
+    pub fn load(path: &Path) -> Result<ConfigMap> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse::<usize>().with_context(|| format!("{key} = {v}")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| v.parse::<f64>().with_context(|| format!("{key} = {v}")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.get(key)
+            .map(|v| v.parse::<u64>().with_context(|| format!("{key} = {v}")))
+            .transpose()
+    }
+
+    /// Override a value (CLI `--set section.key=value`).
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+}
+
+/// A complete run configuration for the coordinator.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Synthetic dataset family.
+    pub family: DatasetFamily,
+    /// Number of base vectors.
+    pub n: usize,
+    /// Distance metric.
+    pub metric: Metric,
+    /// Number of subsets / simulated nodes.
+    pub parts: usize,
+    /// Merge parameters (k, lambda, delta, iters, seed).
+    pub merge: MergeParams,
+    /// Subgraph-construction parameters.
+    pub nnd: NnDescentParams,
+    /// Network bandwidth between nodes, bits per second (paper: 1 Gbps).
+    pub bandwidth_bps: f64,
+    /// Per-message network latency, seconds.
+    pub latency_s: f64,
+    /// External-storage throughput, bytes/s (paper's SSD: ~7 GB/s read).
+    pub storage_bps: f64,
+    /// Scratch directory for out-of-core spills.
+    pub scratch_dir: String,
+    /// Dataset seed.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            family: DatasetFamily::Sift,
+            n: 10_000,
+            metric: Metric::L2,
+            parts: 3,
+            merge: MergeParams::default(),
+            nnd: NnDescentParams::default(),
+            bandwidth_bps: 1e9,   // 1000 Mbps, Sec. V-E
+            latency_s: 100e-6,    // typical same-rack RTT/2
+            storage_bps: 7.45e9,  // paper's SSD sequential read
+            scratch_dir: std::env::temp_dir()
+                .join("knn-merge-scratch")
+                .to_string_lossy()
+                .to_string(),
+            seed: 42,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from a parsed [`ConfigMap`]; missing keys keep defaults.
+    pub fn from_map(map: &ConfigMap) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        if let Some(name) = map.get("dataset.family") {
+            cfg.family = DatasetFamily::from_name(name)
+                .with_context(|| format!("unknown dataset family '{name}'"))?;
+        }
+        if let Some(v) = map.get_usize("dataset.n")? {
+            cfg.n = v;
+        }
+        if let Some(v) = map.get_u64("dataset.seed")? {
+            cfg.seed = v;
+        }
+        if let Some(name) = map.get("dataset.metric") {
+            cfg.metric =
+                Metric::from_name(name).with_context(|| format!("unknown metric '{name}'"))?;
+        }
+        if let Some(v) = map.get_usize("run.parts")? {
+            cfg.parts = v;
+        }
+        if let Some(v) = map.get_usize("merge.k")? {
+            cfg.merge.k = v;
+            cfg.nnd.k = v;
+        }
+        if let Some(v) = map.get_usize("merge.lambda")? {
+            cfg.merge.lambda = v;
+            cfg.nnd.lambda = v;
+        }
+        if let Some(v) = map.get_f64("merge.delta")? {
+            cfg.merge.delta = v;
+            cfg.nnd.delta = v;
+        }
+        if let Some(v) = map.get_usize("merge.max_iters")? {
+            cfg.merge.max_iters = v;
+            cfg.nnd.max_iters = v;
+        }
+        if let Some(v) = map.get_u64("merge.seed")? {
+            cfg.merge.seed = v;
+            cfg.nnd.seed = v;
+        }
+        if let Some(v) = map.get_f64("network.bandwidth_gbps")? {
+            cfg.bandwidth_bps = v * 1e9;
+        }
+        if let Some(v) = map.get_f64("network.latency_us")? {
+            cfg.latency_s = v * 1e-6;
+        }
+        if let Some(v) = map.get_f64("storage.bandwidth_gbps")? {
+            cfg.storage_bps = v * 1e9;
+        }
+        if let Some(v) = map.get("storage.scratch_dir") {
+            cfg.scratch_dir = v.to_string();
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a TOML-lite file.
+    pub fn load(path: &Path) -> Result<RunConfig> {
+        Self::from_map(&ConfigMap::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+[dataset]
+family = "gist"
+n = 5000
+metric = 'l2'
+
+[run]
+parts = 5
+
+[merge]
+k = 40
+lambda = 16
+
+[network]
+bandwidth_gbps = 10
+latency_us = 50
+"#;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let map = ConfigMap::parse(SAMPLE).unwrap();
+        assert_eq!(map.get("dataset.family"), Some("gist"));
+        assert_eq!(map.get_usize("dataset.n").unwrap(), Some(5000));
+        assert_eq!(map.get("dataset.metric"), Some("l2"));
+        assert_eq!(map.get_usize("run.parts").unwrap(), Some(5));
+    }
+
+    #[test]
+    fn run_config_from_map() {
+        let map = ConfigMap::parse(SAMPLE).unwrap();
+        let cfg = RunConfig::from_map(&map).unwrap();
+        assert_eq!(cfg.family, DatasetFamily::Gist);
+        assert_eq!(cfg.n, 5000);
+        assert_eq!(cfg.parts, 5);
+        assert_eq!(cfg.merge.k, 40);
+        assert_eq!(cfg.merge.lambda, 16);
+        assert_eq!(cfg.nnd.k, 40);
+        assert!((cfg.bandwidth_bps - 10e9).abs() < 1.0);
+        assert!((cfg.latency_s - 50e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(ConfigMap::parse("[unclosed").is_err());
+        assert!(ConfigMap::parse("novalue").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_family() {
+        let map = ConfigMap::parse("[dataset]\nfamily = bogus").unwrap();
+        assert!(RunConfig::from_map(&map).is_err());
+    }
+
+    #[test]
+    fn cli_set_overrides() {
+        let mut map = ConfigMap::parse(SAMPLE).unwrap();
+        map.set("merge.k", "64");
+        let cfg = RunConfig::from_map(&map).unwrap();
+        assert_eq!(cfg.merge.k, 64);
+    }
+
+    #[test]
+    fn defaults_match_paper_testbed() {
+        let cfg = RunConfig::default();
+        assert!((cfg.bandwidth_bps - 1e9).abs() < 1.0, "1000 Mbps default");
+        assert_eq!(cfg.parts, 3);
+    }
+}

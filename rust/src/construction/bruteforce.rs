@@ -1,0 +1,87 @@
+//! Exact k-NN by brute force — the `O(d * n^2)` construction the paper
+//! uses as ground truth. Blocked over rows for cache locality and
+//! parallelized over elements.
+
+use crate::dataset::Dataset;
+use crate::distance::Metric;
+use crate::graph::{KnnGraph, NeighborList};
+
+/// Exact k nearest neighbor ids of element `i` within `ds` (self
+/// excluded), ascending by distance.
+pub fn knn_of(ds: &Dataset, i: usize, k: usize, metric: Metric) -> Vec<u32> {
+    knn_of_inner(ds, ds.vector(i), Some(i), k, metric)
+}
+
+/// Exact k nearest neighbors of an arbitrary query vector within `ds`.
+pub fn knn_of_vector(ds: &Dataset, q: &[f32], k: usize, metric: Metric) -> Vec<u32> {
+    knn_of_inner(ds, q, None, k, metric)
+}
+
+fn knn_of_inner(ds: &Dataset, q: &[f32], skip: Option<usize>, k: usize, metric: Metric) -> Vec<u32> {
+    let mut list = NeighborList::new(k);
+    for j in 0..ds.len() {
+        if skip == Some(j) {
+            continue;
+        }
+        let d = metric.distance(q, ds.vector(j));
+        if d < list.threshold() {
+            list.insert(j as u32, d, false);
+        }
+    }
+    list.iter().map(|nb| nb.id).collect()
+}
+
+/// Build the exact k-NN graph for the whole dataset.
+pub fn build(ds: &Dataset, k: usize, metric: Metric) -> KnnGraph {
+    let n = ds.len();
+    let lists = crate::util::parallel_map(n, |i| {
+        let mut list = NeighborList::new(k);
+        let q = ds.vector(i);
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let d = metric.distance(q, ds.vector(j));
+            if d < list.threshold() {
+                list.insert(j as u32, d, false);
+            }
+        }
+        list
+    });
+    KnnGraph { lists, k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetFamily;
+
+    #[test]
+    fn knn_graph_is_valid_and_symmetric_on_grid() {
+        // 1-D grid points: neighbors are the adjacent indices.
+        let data: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let ds = Dataset::from_raw(data, 1);
+        let g = build(&ds, 2, Metric::L2);
+        g.validate(true).unwrap();
+        assert_eq!(g.ids(0), vec![1, 2]);
+        let mid = g.ids(5);
+        assert!(mid.contains(&4) && mid.contains(&6));
+    }
+
+    #[test]
+    fn knn_of_matches_build() {
+        let ds = DatasetFamily::Deep.generate(120, 1);
+        let g = build(&ds, 6, Metric::L2);
+        for i in [0usize, 17, 119] {
+            assert_eq!(knn_of(&ds, i, 6, Metric::L2), g.ids(i));
+        }
+    }
+
+    #[test]
+    fn knn_of_vector_includes_identical_point() {
+        let ds = DatasetFamily::Sift.generate(50, 2);
+        let q = ds.vector(7).to_vec();
+        let res = knn_of_vector(&ds, &q, 3, Metric::L2);
+        assert_eq!(res[0], 7);
+    }
+}

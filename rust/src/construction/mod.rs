@@ -1,0 +1,7 @@
+//! Graph construction substrates: exact brute force (ground truth) and
+//! NN-Descent (the subgraph builder and single-node baseline).
+
+pub mod bruteforce;
+pub mod nndescent;
+
+pub use nndescent::{NnDescent, NnDescentParams};

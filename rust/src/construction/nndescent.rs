@@ -1,0 +1,295 @@
+//! NN-Descent (Dong, Moses & Li, WWW'11) — the paper's subgraph builder
+//! and single-node baseline (Fig. 8, Tab. III).
+//!
+//! Starts from a random graph and iterates *Sampling* + *Local-Join*:
+//! for each element, lambda flagged-new and lambda old neighbors (plus
+//! reverse neighbors, capped at lambda) are collected; new x new and
+//! new x old pairs are cross-matched and inserted when close enough.
+//! Convergence: a round's accepted-insert count drops below
+//! `delta * n * k`.
+
+use crate::dataset::Dataset;
+use crate::distance::Metric;
+use crate::graph::{KnnGraph, SharedGraph};
+use crate::util::{parallel_for, Rng};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// NN-Descent parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct NnDescentParams {
+    /// Neighborhood size `k`.
+    pub k: usize,
+    /// Sample bound `lambda` per neighborhood (the classic rho*k).
+    pub lambda: usize,
+    /// Convergence threshold `delta` (fraction of `n*k`).
+    pub delta: f64,
+    /// Hard iteration cap.
+    pub max_iters: usize,
+    /// PRNG seed.
+    pub seed: u64,
+}
+
+impl Default for NnDescentParams {
+    fn default() -> Self {
+        NnDescentParams {
+            k: 20,
+            lambda: 10,
+            delta: 0.001,
+            max_iters: 30,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// NN-Descent builder.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NnDescent {
+    pub params: NnDescentParams,
+}
+
+/// Observer invoked after every iteration: `(iter, elapsed_secs, graph)`.
+/// Snapshotting is the observer's choice; it receives a consistent view
+/// (all workers quiescent).
+pub type IterObserver<'a> = &'a mut dyn FnMut(usize, f64, &SharedGraph);
+
+impl NnDescent {
+    pub fn new(params: NnDescentParams) -> Self {
+        NnDescent { params }
+    }
+
+    /// Build the approximate k-NN graph of `ds`.
+    pub fn build(&self, ds: &Dataset, metric: Metric) -> KnnGraph {
+        self.build_observed(ds, metric, &mut |_, _, _| {})
+    }
+
+    /// Build with a per-iteration observer (recall-vs-time curves).
+    pub fn build_observed(
+        &self,
+        ds: &Dataset,
+        metric: Metric,
+        observer: IterObserver,
+    ) -> KnnGraph {
+        let p = self.params;
+        let n = ds.len();
+        assert!(n > p.k, "need n > k (n={n}, k={})", p.k);
+        let start = Instant::now();
+
+        // Random initialization: k distinct random neighbors per entry.
+        let graph = SharedGraph::empty(n, p.k);
+        let init_seeds: Vec<u64> = {
+            let mut rng = Rng::seeded(p.seed);
+            (0..n).map(|_| rng.next_u64()).collect()
+        };
+        parallel_for(n, |i| {
+            let mut rng = Rng::seeded(init_seeds[i]);
+            let mut picked = 0usize;
+            while picked < p.k {
+                let j = rng.gen_range(n);
+                if j != i {
+                    let d = metric.distance(ds.vector(i), ds.vector(j));
+                    if graph.insert(i, j as u32, d, true) {
+                        picked += 1;
+                    }
+                }
+            }
+        });
+        graph.take_updates();
+
+        let threshold = (p.delta * n as f64 * p.k as f64).max(1.0) as u64;
+        for iter in 0..p.max_iters {
+            let updates = local_join_round(ds, metric, &graph, p.lambda, None);
+            observer(iter, start.elapsed().as_secs_f64(), &graph);
+            if updates < threshold {
+                break;
+            }
+        }
+        graph.into_graph()
+    }
+}
+
+/// One NN-Descent round: sample (new/old/reverse) then Local-Join.
+/// `restrict` optionally filters which joins are allowed (used by the
+/// GNND stand-in); `None` = classic behaviour. Returns accepted inserts.
+pub(crate) fn local_join_round(
+    ds: &Dataset,
+    metric: Metric,
+    graph: &SharedGraph,
+    lambda: usize,
+    restrict: Option<&(dyn Fn(u32, u32) -> bool + Sync)>,
+) -> u64 {
+    let n = graph.len();
+
+    // Phase 1: per-entry forward samples.
+    let mut new_s: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut old_s: Vec<Vec<u32>> = vec![Vec::new(); n];
+    {
+        let new_slots: Vec<Mutex<&mut Vec<u32>>> = new_s.iter_mut().map(Mutex::new).collect();
+        let old_slots: Vec<Mutex<&mut Vec<u32>>> = old_s.iter_mut().map(Mutex::new).collect();
+        parallel_for(n, |i| {
+            graph.with_entry(i, |entry| {
+                // Old first (flags unchanged), then new (clears flags).
+                **old_slots[i].lock().unwrap() = entry.sample_old(lambda);
+                **new_slots[i].lock().unwrap() = entry.sample_new(lambda);
+            });
+        });
+    }
+
+    // Phase 2: reverse samples, capped at lambda each.
+    let r_new: Vec<Mutex<Vec<u32>>> = (0..n).map(|_| Mutex::new(Vec::new())).collect();
+    let r_old: Vec<Mutex<Vec<u32>>> = (0..n).map(|_| Mutex::new(Vec::new())).collect();
+    parallel_for(n, |i| {
+        for &u in &new_s[i] {
+            let mut r = r_new[u as usize].lock().unwrap();
+            if r.len() < lambda {
+                r.push(i as u32);
+            }
+        }
+        for &u in &old_s[i] {
+            let mut r = r_old[u as usize].lock().unwrap();
+            if r.len() < lambda {
+                r.push(i as u32);
+            }
+        }
+    });
+
+    // Phase 3: integrate reverse samples (dedup), then Local-Join.
+    parallel_for(n, |i| {
+        let news = &new_s[i];
+        let olds = &old_s[i];
+        let mut all_new: Vec<u32> = news.clone();
+        for &u in r_new[i].lock().unwrap().iter() {
+            if !all_new.contains(&u) {
+                all_new.push(u);
+            }
+        }
+        let mut all_old: Vec<u32> = olds.clone();
+        for &u in r_old[i].lock().unwrap().iter() {
+            if !all_old.contains(&u) {
+                all_old.push(u);
+            }
+        }
+        // new x new
+        for (a_idx, &u) in all_new.iter().enumerate() {
+            for &v in &all_new[a_idx + 1..] {
+                join_pair(ds, metric, graph, u, v, restrict);
+            }
+        }
+        // new x old
+        for &u in &all_new {
+            for &v in &all_old {
+                if u != v {
+                    join_pair(ds, metric, graph, u, v, restrict);
+                }
+            }
+        }
+    });
+    graph.take_updates()
+}
+
+#[inline]
+pub(crate) fn join_pair(
+    ds: &Dataset,
+    metric: Metric,
+    graph: &SharedGraph,
+    u: u32,
+    v: u32,
+    restrict: Option<&(dyn Fn(u32, u32) -> bool + Sync)>,
+) {
+    if u == v {
+        return;
+    }
+    if let Some(f) = restrict {
+        if !f(u, v) {
+            return;
+        }
+    }
+    // Specialized L2 path (see merge::join — lets l2_sq inline, §Perf).
+    let d = if metric == Metric::L2 {
+        crate::distance::l2_sq(ds.vector(u as usize), ds.vector(v as usize))
+    } else {
+        metric.distance(ds.vector(u as usize), ds.vector(v as usize))
+    };
+    graph.insert(u as usize, v, d, true);
+    graph.insert(v as usize, u, d, true);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetFamily;
+    use crate::eval::recall::{graph_recall, GroundTruth};
+
+    #[test]
+    fn converges_to_high_recall_on_small_set() {
+        let ds = DatasetFamily::Deep.generate(600, 1);
+        let params = NnDescentParams {
+            k: 10,
+            lambda: 10,
+            ..Default::default()
+        };
+        let g = NnDescent::new(params).build(&ds, Metric::L2);
+        g.validate(true).unwrap();
+        let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 100, 2);
+        let r = graph_recall(&g, &truth, 10);
+        assert!(r > 0.90, "recall@10 = {r}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = DatasetFamily::Sift.generate(200, 3);
+        let params = NnDescentParams {
+            k: 8,
+            lambda: 8,
+            max_iters: 4,
+            ..Default::default()
+        };
+        let a = NnDescent::new(params).build(&ds, Metric::L2);
+        let b = NnDescent::new(params).build(&ds, Metric::L2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn observer_sees_monotone_time() {
+        let ds = DatasetFamily::Deep.generate(200, 4);
+        let mut times = Vec::new();
+        let params = NnDescentParams {
+            k: 8,
+            lambda: 8,
+            max_iters: 5,
+            ..Default::default()
+        };
+        NnDescent::new(params).build_observed(&ds, Metric::L2, &mut |iter, secs, g| {
+            assert_eq!(g.len(), 200);
+            times.push((iter, secs));
+        });
+        assert!(!times.is_empty());
+        for w in times.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+            assert_eq!(w[1].0, w[0].0 + 1);
+        }
+    }
+
+    #[test]
+    fn quality_improves_over_random_init() {
+        let ds = DatasetFamily::Sift.generate(400, 5);
+        let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 80, 6);
+        let one_iter = NnDescent::new(NnDescentParams {
+            k: 10,
+            lambda: 10,
+            max_iters: 1,
+            ..Default::default()
+        })
+        .build(&ds, Metric::L2);
+        let many = NnDescent::new(NnDescentParams {
+            k: 10,
+            lambda: 10,
+            max_iters: 12,
+            ..Default::default()
+        })
+        .build(&ds, Metric::L2);
+        let r1 = graph_recall(&one_iter, &truth, 10);
+        let rm = graph_recall(&many, &truth, 10);
+        assert!(rm > r1, "recall did not improve: {r1} -> {rm}");
+    }
+}

@@ -1,0 +1,15 @@
+//! High-level drivers ("the launcher"): given a [`RunConfig`], run the
+//! complete pipelines the paper evaluates and return graphs + cost
+//! ledgers.
+//!
+//! - [`single_node`] — build subgraphs, then merge with Two-way
+//!   (hierarchy) or Multi-way.
+//! - [`out_of_core`] — the Sec. IV single-node mode with external
+//!   storage: only two subsets resident at any time.
+//! - multi-node lives in [`crate::distributed::driver`].
+
+pub mod out_of_core;
+pub mod single_node;
+
+pub use out_of_core::build_out_of_core;
+pub use single_node::{build_single_node, MergeStrategy, SingleNodeResult};

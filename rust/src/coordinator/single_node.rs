@@ -1,0 +1,138 @@
+//! Single-node pipeline: partition → subgraph construction → merge.
+
+use crate::config::RunConfig;
+use crate::construction::NnDescent;
+use crate::dataset::Dataset;
+use crate::graph::KnnGraph;
+use crate::merge::{hierarchy, MultiWayMerge, TwoWayMerge};
+use crate::metrics::{CostLedger, Phase};
+
+/// Which merge algorithm drives the single-node pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeStrategy {
+    /// Bottom-up hierarchy of Two-way Merges (Fig. 3a).
+    TwoWayHierarchy,
+    /// One Multi-way Merge over all subgraphs (Fig. 3b).
+    MultiWay,
+}
+
+impl MergeStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MergeStrategy::TwoWayHierarchy => "two-way",
+            MergeStrategy::MultiWay => "multi-way",
+        }
+    }
+}
+
+/// Output of the single-node pipeline.
+pub struct SingleNodeResult {
+    pub graph: KnnGraph,
+    pub ledger: CostLedger,
+    /// Per-subgraph build seconds (they could run on separate machines;
+    /// the paper reports them separately from the merge).
+    pub subgraph_secs: Vec<f64>,
+    pub merge_secs: f64,
+}
+
+/// Run the full single-node pipeline on `ds` with `cfg.parts` subsets.
+pub fn build_single_node(
+    ds: &Dataset,
+    cfg: &RunConfig,
+    strategy: MergeStrategy,
+) -> SingleNodeResult {
+    let ledger = CostLedger::new();
+    let parts = ds.split_contiguous(cfg.parts.max(2));
+    let nnd = NnDescent::new(cfg.nnd);
+
+    let mut subgraph_secs = Vec::with_capacity(parts.len());
+    let mut subsets: Vec<&Dataset> = Vec::with_capacity(parts.len());
+    let mut graphs: Vec<KnnGraph> = Vec::with_capacity(parts.len());
+    for (sub, _) in &parts {
+        let start = std::time::Instant::now();
+        let g = nnd.build(sub, cfg.metric);
+        let secs = start.elapsed().as_secs_f64();
+        ledger.add(Phase::Build, secs);
+        subgraph_secs.push(secs);
+        graphs.push(g);
+    }
+    for (sub, _) in &parts {
+        subsets.push(sub);
+    }
+    let graph_refs: Vec<&KnnGraph> = graphs.iter().collect();
+
+    let start = std::time::Instant::now();
+    let graph = match strategy {
+        MergeStrategy::TwoWayHierarchy => {
+            if parts.len() == 2 {
+                TwoWayMerge::new(cfg.merge).merge(
+                    subsets[0], subsets[1], graph_refs[0], graph_refs[1], cfg.metric,
+                )
+            } else {
+                hierarchy::merge_hierarchical(&subsets, &graph_refs, cfg.metric, cfg.merge).0
+            }
+        }
+        MergeStrategy::MultiWay => {
+            MultiWayMerge::new(cfg.merge).merge(&subsets, &graph_refs, cfg.metric)
+        }
+    };
+    let merge_secs = start.elapsed().as_secs_f64();
+    ledger.add(Phase::Merge, merge_secs);
+
+    SingleNodeResult {
+        graph,
+        ledger,
+        subgraph_secs,
+        merge_secs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::construction::NnDescentParams;
+    use crate::dataset::DatasetFamily;
+    use crate::distance::Metric;
+    use crate::eval::recall::{graph_recall, GroundTruth};
+    use crate::merge::MergeParams;
+
+    fn cfg(parts: usize) -> RunConfig {
+        RunConfig {
+            parts,
+            merge: MergeParams {
+                k: 10,
+                lambda: 10,
+                ..Default::default()
+            },
+            nnd: NnDescentParams {
+                k: 10,
+                lambda: 10,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn both_strategies_reach_quality() {
+        let ds = DatasetFamily::Deep.generate(800, 1);
+        let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 120, 2);
+        for strategy in [MergeStrategy::TwoWayHierarchy, MergeStrategy::MultiWay] {
+            let result = build_single_node(&ds, &cfg(4), strategy);
+            result.graph.validate(true).unwrap();
+            let r = graph_recall(&result.graph, &truth, 10);
+            assert!(r > 0.85, "{} recall={r}", strategy.name());
+            assert_eq!(result.subgraph_secs.len(), 4);
+            assert!(result.merge_secs > 0.0);
+            assert!(result.ledger.secs(crate::metrics::Phase::Build) > 0.0);
+        }
+    }
+
+    #[test]
+    fn two_parts_uses_plain_two_way() {
+        let ds = DatasetFamily::Sift.generate(400, 2);
+        let result = build_single_node(&ds, &cfg(2), MergeStrategy::TwoWayHierarchy);
+        assert_eq!(result.graph.len(), 400);
+        result.graph.validate(true).unwrap();
+    }
+}

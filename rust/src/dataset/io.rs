@@ -1,0 +1,242 @@
+//! TexMex-style vector file IO: `.fvecs` (f32), `.bvecs` (u8) and
+//! `.ivecs` (i32) — the formats the paper's datasets (SIFT/GIST/DEEP)
+//! ship in. Each record is `<d: little-endian i32> <d values>`.
+//!
+//! Also provides a compact internal binary format (`.knnv`) used by the
+//! out-of-core mode to spill subsets to external storage without the
+//! per-row dimension overhead.
+
+use super::Dataset;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Read an `.fvecs` file; `limit` caps the number of vectors (None = all).
+pub fn read_fvecs(path: &Path, limit: Option<usize>) -> Result<Dataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut data = Vec::new();
+    let mut dim = 0usize;
+    let mut count = 0usize;
+    loop {
+        if let Some(l) = limit {
+            if count >= l {
+                break;
+            }
+        }
+        let mut head = [0u8; 4];
+        match r.read_exact(&mut head) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+        let d = i32::from_le_bytes(head);
+        if d <= 0 {
+            bail!("invalid dimension {d} in {path:?}");
+        }
+        let d = d as usize;
+        if dim == 0 {
+            dim = d;
+        } else if d != dim {
+            bail!("inconsistent dimension {d} != {dim} in {path:?}");
+        }
+        let mut buf = vec![0u8; d * 4];
+        r.read_exact(&mut buf)?;
+        data.extend(buf.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])));
+        count += 1;
+    }
+    if dim == 0 {
+        bail!("empty fvecs file {path:?}");
+    }
+    Ok(Dataset { data, dim })
+}
+
+/// Write a dataset as `.fvecs`.
+pub fn write_fvecs(path: &Path, ds: &Dataset) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    for i in 0..ds.len() {
+        w.write_all(&(ds.dim as i32).to_le_bytes())?;
+        for &v in ds.vector(i) {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a `.bvecs` file (u8 components, converted to f32).
+pub fn read_bvecs(path: &Path, limit: Option<usize>) -> Result<Dataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut data = Vec::new();
+    let mut dim = 0usize;
+    let mut count = 0usize;
+    loop {
+        if let Some(l) = limit {
+            if count >= l {
+                break;
+            }
+        }
+        let mut head = [0u8; 4];
+        match r.read_exact(&mut head) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+        let d = i32::from_le_bytes(head);
+        if d <= 0 {
+            bail!("invalid dimension {d} in {path:?}");
+        }
+        let d = d as usize;
+        if dim == 0 {
+            dim = d;
+        } else if d != dim {
+            bail!("inconsistent dimension in {path:?}");
+        }
+        let mut buf = vec![0u8; d];
+        r.read_exact(&mut buf)?;
+        data.extend(buf.iter().map(|&b| b as f32));
+        count += 1;
+    }
+    if dim == 0 {
+        bail!("empty bvecs file {path:?}");
+    }
+    Ok(Dataset { data, dim })
+}
+
+/// Read an `.ivecs` file (e.g. ground-truth neighbor ids).
+pub fn read_ivecs(path: &Path, limit: Option<usize>) -> Result<Vec<Vec<u32>>> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut rows = Vec::new();
+    loop {
+        if let Some(l) = limit {
+            if rows.len() >= l {
+                break;
+            }
+        }
+        let mut head = [0u8; 4];
+        match r.read_exact(&mut head) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+        let d = i32::from_le_bytes(head);
+        if d < 0 {
+            bail!("invalid row length {d} in {path:?}");
+        }
+        let mut buf = vec![0u8; d as usize * 4];
+        r.read_exact(&mut buf)?;
+        rows.push(
+            buf.chunks_exact(4)
+                .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect(),
+        );
+    }
+    Ok(rows)
+}
+
+/// Write an `.ivecs` file.
+pub fn write_ivecs(path: &Path, rows: &[Vec<u32>]) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    for row in rows {
+        w.write_all(&(row.len() as i32).to_le_bytes())?;
+        for &v in row {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Compact internal format: `magic, dim: u32, n: u64, data: n*d f32`.
+const KNNV_MAGIC: u32 = 0x4B_4E_4E_56; // "KNNV"
+
+/// Write the compact internal `.knnv` format (out-of-core spill files).
+pub fn write_knnv(path: &Path, ds: &Dataset) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&KNNV_MAGIC.to_le_bytes())?;
+    w.write_all(&(ds.dim as u32).to_le_bytes())?;
+    w.write_all(&(ds.len() as u64).to_le_bytes())?;
+    // Bulk write: safe because f32 slices have no padding.
+    let bytes: Vec<u8> = ds.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    w.write_all(&bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read the compact internal `.knnv` format.
+pub fn read_knnv(path: &Path) -> Result<Dataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut u32buf = [0u8; 4];
+    r.read_exact(&mut u32buf)?;
+    if u32::from_le_bytes(u32buf) != KNNV_MAGIC {
+        bail!("bad magic in {path:?}");
+    }
+    r.read_exact(&mut u32buf)?;
+    let dim = u32::from_le_bytes(u32buf) as usize;
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u64buf)?;
+    let n = u64::from_le_bytes(u64buf) as usize;
+    let mut bytes = vec![0u8; n * dim * 4];
+    r.read_exact(&mut bytes)?;
+    let data = bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Ok(Dataset { data, dim })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetFamily;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("knnmerge-io-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let ds = DatasetFamily::Deep.generate(37, 5);
+        let path = tmpdir().join("t.fvecs");
+        write_fvecs(&path, &ds).unwrap();
+        let back = read_fvecs(&path, None).unwrap();
+        assert_eq!(back.dim, ds.dim);
+        assert_eq!(back.data, ds.data);
+        let limited = read_fvecs(&path, Some(5)).unwrap();
+        assert_eq!(limited.len(), 5);
+    }
+
+    #[test]
+    fn ivecs_roundtrip() {
+        let rows = vec![vec![1u32, 2, 3], vec![7, 8], vec![]];
+        let path = tmpdir().join("t.ivecs");
+        write_ivecs(&path, &rows).unwrap();
+        let back = read_ivecs(&path, None).unwrap();
+        assert_eq!(back, rows);
+    }
+
+    #[test]
+    fn knnv_roundtrip() {
+        let ds = DatasetFamily::Sift.generate(16, 8);
+        let path = tmpdir().join("t.knnv");
+        write_knnv(&path, &ds).unwrap();
+        let back = read_knnv(&path).unwrap();
+        assert_eq!(back.dim, ds.dim);
+        assert_eq!(back.data, ds.data);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpdir().join("bad.knnv");
+        std::fs::write(&path, b"garbagegarbage").unwrap();
+        assert!(read_knnv(&path).is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Local Intrinsic Dimensionality (LID) estimation.
+//!
+//! The paper uses LID (Amsaleg et al., "Intrinsic dimensionality
+//! estimation within tight localities") as the dataset-difficulty measure
+//! in Tab. II and to justify lambda settings (Sec. V-B). This module
+//! implements the maximum-likelihood (Hill) estimator over k-NN distances:
+//!
+//! `LID(x) = - ( (1/k) * sum_{i=1..k} ln( r_i / r_k ) )^{-1}`
+//!
+//! averaged over a sample of points, which is the standard aggregate form.
+
+use super::Dataset;
+use crate::distance::l2_sq;
+use crate::util::Rng;
+
+/// MLE estimate of a single point's LID from its k-NN distance profile
+/// (`dists` sorted ascending, squared L2). Returns None for degenerate
+/// profiles (all-equal or zero distances).
+pub fn lid_from_knn_dists(dists_sq: &[f32]) -> Option<f64> {
+    let k = dists_sq.len();
+    if k < 2 {
+        return None;
+    }
+    let rk = (dists_sq[k - 1] as f64).sqrt();
+    if rk <= 0.0 {
+        return None;
+    }
+    let mut acc = 0.0;
+    let mut cnt = 0usize;
+    for &d in &dists_sq[..k - 1] {
+        let r = (d as f64).sqrt();
+        if r > 0.0 {
+            acc += (r / rk).ln();
+            cnt += 1;
+        }
+    }
+    if cnt == 0 || acc >= 0.0 {
+        return None;
+    }
+    Some(-(cnt as f64) / acc)
+}
+
+/// Estimate the dataset-level LID: average of per-point MLE estimates
+/// over `samples` random points, each using its `k` exact nearest
+/// neighbors (excluding self) found by brute force against the whole set.
+pub fn estimate_lid(ds: &Dataset, k: usize, samples: usize, seed: u64) -> f64 {
+    let n = ds.len();
+    assert!(n > k + 1, "need more points than k");
+    let mut rng = Rng::seeded(seed);
+    let picks = rng.sample_distinct(n, samples.min(n));
+    let estimates: Vec<f64> = crate::util::parallel_map(picks.len(), |pi| {
+        let i = picks[pi];
+        let q = ds.vector(i);
+        // Track the k smallest distances with a simple bounded max-heap
+        // (insertion into a sorted array; k is small).
+        let mut top: Vec<f32> = Vec::with_capacity(k + 1);
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let d = l2_sq(q, ds.vector(j));
+            if top.len() < k {
+                top.push(d);
+                if top.len() == k {
+                    top.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                }
+            } else if d < top[k - 1] {
+                let pos = top.partition_point(|&v| v < d);
+                top.insert(pos, d);
+                top.pop();
+            }
+        }
+        if top.len() < k {
+            top.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        lid_from_knn_dists(&top).unwrap_or(f64::NAN)
+    });
+    let valid: Vec<f64> = estimates.into_iter().filter(|v| v.is_finite()).collect();
+    if valid.is_empty() {
+        return f64::NAN;
+    }
+    valid.iter().sum::<f64>() / valid.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{DatasetFamily, GeneratorConfig};
+
+    #[test]
+    fn lid_of_uniform_cube_matches_dimension() {
+        // Points uniform in a D-dim cube have LID ~= D.
+        for d in [4usize, 8] {
+            let mut rng = Rng::seeded(d as u64);
+            let n = 3000;
+            let data: Vec<f32> = (0..n * d).map(|_| rng.gen_f32()).collect();
+            let ds = Dataset::from_raw(data, d);
+            let lid = estimate_lid(&ds, 50, 100, 1);
+            assert!(
+                (lid - d as f64).abs() < d as f64 * 0.35,
+                "d={d} lid={lid}"
+            );
+        }
+    }
+
+    #[test]
+    fn lid_sees_intrinsic_not_ambient_dim() {
+        // 4-dim manifold embedded in 32 ambient dims -> LID near 4.
+        let cfg = GeneratorConfig {
+            n: 3000,
+            dim: 32,
+            clusters: 1,
+            intrinsic_dim: 4,
+            noise_sigma: 0.0,
+            normalize: false,
+            nonnegative: false,
+            center_scale: 0.6,
+        };
+        let ds = cfg.generate(3);
+        let lid = estimate_lid(&ds, 50, 100, 2);
+        assert!(lid < 8.0, "lid={lid} should be near 4, far from 32");
+        assert!(lid > 2.0, "lid={lid}");
+    }
+
+    #[test]
+    fn generator_families_are_lid_ordered() {
+        // The paper's key ordering: SIFT/DEEP (low LID) vs SPACEV/GIST
+        // (high LID). Verify the generators preserve the ordering.
+        let n = 2000;
+        let lo = estimate_lid(&DatasetFamily::Sift.generate(n, 7), 40, 60, 1);
+        let hi = estimate_lid(&DatasetFamily::Gist.generate(n, 7), 40, 60, 1);
+        assert!(
+            lo < hi,
+            "sift-like LID {lo} should be below gist-like {hi}"
+        );
+    }
+
+    #[test]
+    fn degenerate_profiles_return_none() {
+        assert_eq!(lid_from_knn_dists(&[]), None);
+        assert_eq!(lid_from_knn_dists(&[1.0]), None);
+        assert_eq!(lid_from_knn_dists(&[0.0, 0.0, 0.0]), None);
+        assert_eq!(lid_from_knn_dists(&[1.0, 1.0, 1.0]), None);
+    }
+
+    #[test]
+    fn lid_formula_on_known_profile() {
+        // r_i = (i/k), k=4: LID = -3 / sum ln(r_i/r_4)
+        let r: Vec<f32> = (1..=4).map(|i| (i as f32 / 4.0).powi(2)).collect();
+        let expect = -3.0
+            / ((0.25f64 / 1.0).ln() + (0.5f64 / 1.0).ln() + (0.75f64 / 1.0).ln());
+        let got = lid_from_knn_dists(&r).unwrap();
+        assert!((got - expect).abs() < 1e-9, "{got} vs {expect}");
+    }
+}

@@ -1,0 +1,144 @@
+//! Datasets: dense vector storage, synthetic generators calibrated to the
+//! paper's Tab. II dataset families, `fvecs`/`bvecs`/`ivecs` IO for real
+//! data, and a Local Intrinsic Dimensionality (LID) estimator used to
+//! validate the generators.
+
+pub mod generator;
+pub mod io;
+pub mod lid;
+
+pub use generator::{DatasetFamily, GeneratorConfig};
+
+/// A dense row-major `n x d` f32 vector set.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    /// Row-major data, `n * d` values.
+    pub data: Vec<f32>,
+    /// Dimensionality of each vector.
+    pub dim: usize,
+}
+
+impl Dataset {
+    /// Create from raw row-major data.
+    pub fn from_raw(data: Vec<f32>, dim: usize) -> Self {
+        assert!(dim > 0, "dim must be positive");
+        assert_eq!(data.len() % dim, 0, "data length not a multiple of dim");
+        Dataset { data, dim }
+    }
+
+    /// Number of vectors.
+    #[inline]
+    pub fn len(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.data.len() / self.dim
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Borrow vector `i`.
+    #[inline]
+    pub fn vector(&self, i: usize) -> &[f32] {
+        let d = self.dim;
+        &self.data[i * d..(i + 1) * d]
+    }
+
+    /// Append one vector (must match `dim`).
+    pub fn push(&mut self, v: &[f32]) {
+        assert_eq!(v.len(), self.dim);
+        self.data.extend_from_slice(v);
+    }
+
+    /// Extract the sub-dataset with the given row indices.
+    pub fn subset(&self, indices: &[usize]) -> Dataset {
+        let mut data = Vec::with_capacity(indices.len() * self.dim);
+        for &i in indices {
+            data.extend_from_slice(self.vector(i));
+        }
+        Dataset { data, dim: self.dim }
+    }
+
+    /// Split into `parts` contiguous, near-equal subsets (the paper's
+    /// disjoint `C_1..C_m`). Returns the datasets and the global-id offset
+    /// of each part.
+    pub fn split_contiguous(&self, parts: usize) -> Vec<(Dataset, usize)> {
+        crate::util::parallel::split_ranges(self.len(), parts)
+            .into_iter()
+            .map(|r| {
+                let ds = Dataset {
+                    data: self.data[r.start * self.dim..r.end * self.dim].to_vec(),
+                    dim: self.dim,
+                };
+                (ds, r.start)
+            })
+            .collect()
+    }
+
+    /// Concatenate several datasets (all must share `dim`).
+    pub fn concat(parts: &[&Dataset]) -> Dataset {
+        assert!(!parts.is_empty());
+        let dim = parts[0].dim;
+        let mut data = Vec::with_capacity(parts.iter().map(|p| p.data.len()).sum());
+        for p in parts {
+            assert_eq!(p.dim, dim, "dimension mismatch in concat");
+            data.extend_from_slice(&p.data);
+        }
+        Dataset { data, dim }
+    }
+
+    /// Bytes of raw vector payload (used by the network/storage models).
+    pub fn payload_bytes(&self) -> u64 {
+        (self.data.len() * std::mem::size_of::<f32>()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Dataset {
+        Dataset::from_raw((0..12).map(|v| v as f32).collect(), 3)
+    }
+
+    #[test]
+    fn len_and_vector_access() {
+        let ds = small();
+        assert_eq!(ds.len(), 4);
+        assert_eq!(ds.vector(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(ds.vector(3), &[9.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn subset_picks_rows() {
+        let ds = small();
+        let sub = ds.subset(&[2, 0]);
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.vector(0), ds.vector(2));
+        assert_eq!(sub.vector(1), ds.vector(0));
+    }
+
+    #[test]
+    fn split_contiguous_roundtrip() {
+        let ds = small();
+        let parts = ds.split_contiguous(3);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].1, 0);
+        let total: usize = parts.iter().map(|(p, _)| p.len()).sum();
+        assert_eq!(total, ds.len());
+        let refs: Vec<&Dataset> = parts.iter().map(|(p, _)| p).collect();
+        let joined = Dataset::concat(&refs);
+        assert_eq!(joined.data, ds.data);
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_wrong_dim_panics() {
+        let mut ds = small();
+        ds.push(&[1.0, 2.0]);
+    }
+}

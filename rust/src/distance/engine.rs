@@ -1,0 +1,224 @@
+//! Batched distance engines.
+//!
+//! The Local-Join step of the merge algorithms evaluates *blocks* of
+//! pairwise distances (every sampled `u` against every sampled `v` of a
+//! neighborhood, across many neighborhoods). [`DistanceEngine`] abstracts
+//! where those blocks are computed:
+//!
+//! - [`ScalarEngine`] — tight unrolled loops on the CPU (always available).
+//! - `runtime::XlaEngine` — the AOT-lowered Pallas kernel executed via
+//!   PJRT; profitable for large blocks where the fixed PJRT dispatch cost
+//!   amortizes (see `benches/microbench.rs` for the crossover).
+
+use super::l2_sq;
+
+/// A batched cross-distance evaluator. All distances are **squared L2**
+/// (the monotone form used throughout the crate).
+pub trait DistanceEngine: Send + Sync {
+    /// Human-readable engine name (for logs and bench rows).
+    fn name(&self) -> &'static str;
+
+    /// Compute the full `nx x ny` cross-distance matrix between the
+    /// row-major blocks `xs` (`nx * dim`) and `ys` (`ny * dim`), writing
+    /// row-major results into `out` (`nx * ny`).
+    fn cross_l2(
+        &self,
+        xs: &[f32],
+        ys: &[f32],
+        dim: usize,
+        nx: usize,
+        ny: usize,
+        out: &mut [f32],
+    );
+
+    /// Convenience wrapper allocating the output.
+    fn cross_l2_alloc(&self, xs: &[f32], ys: &[f32], dim: usize, nx: usize, ny: usize) -> Vec<f32> {
+        let mut out = vec![0.0; nx * ny];
+        self.cross_l2(xs, ys, dim, nx, ny, &mut out);
+        out
+    }
+
+    /// Whether Local-Join should accumulate blocks and dispatch them in
+    /// batches through [`DistanceEngine::batch_cross_l2`] (true for
+    /// dispatch-cost engines like the PJRT path) instead of per-pair
+    /// scalar evaluation.
+    fn prefers_batches(&self) -> bool {
+        false
+    }
+
+    /// Tile shape `(nx, ny)` the engine's batched path is compiled for.
+    /// [`crate::merge::join::BatchJoiner`] splits/pads blocks to this.
+    fn batch_tile(&self) -> (usize, usize) {
+        (32, 32)
+    }
+
+    /// Batched form: `b` independent `nx x ny` blocks. `xs` is
+    /// `b * nx * dim`, `ys` is `b * ny * dim`, `out` is `b * nx * ny`.
+    /// Default loops over [`DistanceEngine::cross_l2`]; engines with
+    /// dispatch overhead override with a single fused call.
+    fn batch_cross_l2(
+        &self,
+        xs: &[f32],
+        ys: &[f32],
+        dim: usize,
+        b: usize,
+        nx: usize,
+        ny: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(xs.len(), b * nx * dim);
+        debug_assert_eq!(ys.len(), b * ny * dim);
+        debug_assert_eq!(out.len(), b * nx * ny);
+        for t in 0..b {
+            self.cross_l2(
+                &xs[t * nx * dim..(t + 1) * nx * dim],
+                &ys[t * ny * dim..(t + 1) * ny * dim],
+                dim,
+                nx,
+                ny,
+                &mut out[t * nx * ny..(t + 1) * nx * ny],
+            );
+        }
+    }
+}
+
+/// Pure-Rust engine: per-pair unrolled loops. For the small, ragged
+/// blocks Local-Join mostly produces this beats any dispatch-based path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScalarEngine;
+
+impl DistanceEngine for ScalarEngine {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn cross_l2(
+        &self,
+        xs: &[f32],
+        ys: &[f32],
+        dim: usize,
+        nx: usize,
+        ny: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(xs.len(), nx * dim);
+        debug_assert_eq!(ys.len(), ny * dim);
+        debug_assert_eq!(out.len(), nx * ny);
+        for i in 0..nx {
+            let x = &xs[i * dim..(i + 1) * dim];
+            let row = &mut out[i * ny..(i + 1) * ny];
+            for (j, o) in row.iter_mut().enumerate() {
+                *o = l2_sq(x, &ys[j * dim..(j + 1) * dim]);
+            }
+        }
+    }
+}
+
+/// Norm-expansion engine: computes `||x||^2 + ||y||^2 - 2 x.y` with a
+/// blocked matmul-style inner loop — the same formulation the Pallas
+/// kernel uses, kept here as (a) a CPU reference for the XLA path and
+/// (b) the faster choice for large dense blocks.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NormExpandEngine;
+
+impl DistanceEngine for NormExpandEngine {
+    fn name(&self) -> &'static str {
+        "norm-expand"
+    }
+
+    fn cross_l2(
+        &self,
+        xs: &[f32],
+        ys: &[f32],
+        dim: usize,
+        nx: usize,
+        ny: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(xs.len(), nx * dim);
+        debug_assert_eq!(ys.len(), ny * dim);
+        debug_assert_eq!(out.len(), nx * ny);
+        let xn: Vec<f32> = (0..nx).map(|i| super::dot(&xs[i * dim..(i + 1) * dim], &xs[i * dim..(i + 1) * dim])).collect();
+        let yn: Vec<f32> = (0..ny).map(|j| super::dot(&ys[j * dim..(j + 1) * dim], &ys[j * dim..(j + 1) * dim])).collect();
+        for i in 0..nx {
+            let x = &xs[i * dim..(i + 1) * dim];
+            let row = &mut out[i * ny..(i + 1) * ny];
+            for (j, o) in row.iter_mut().enumerate() {
+                let d = xn[i] + yn[j] - 2.0 * super::dot(x, &ys[j * dim..(j + 1) * dim]);
+                // Clamp tiny negatives from cancellation.
+                *o = d.max(0.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_property;
+
+    fn rand_block(rng: &mut crate::util::Rng, n: usize, d: usize) -> Vec<f32> {
+        (0..n * d).map(|_| rng.gen_normal()).collect()
+    }
+
+    #[test]
+    fn scalar_engine_matches_pointwise() {
+        check_property("scalar-engine", 200, |rng| {
+            let d = 1 + rng.gen_range(64);
+            let nx = 1 + rng.gen_range(8);
+            let ny = 1 + rng.gen_range(8);
+            let xs = rand_block(rng, nx, d);
+            let ys = rand_block(rng, ny, d);
+            let out = ScalarEngine.cross_l2_alloc(&xs, &ys, d, nx, ny);
+            for i in 0..nx {
+                for j in 0..ny {
+                    let expect = l2_sq(&xs[i * d..(i + 1) * d], &ys[j * d..(j + 1) * d]);
+                    assert_eq!(out[i * ny + j], expect);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn batch_default_matches_per_block() {
+        check_property("batch-default", 202, |rng| {
+            let d = 1 + rng.gen_range(32);
+            let b = 1 + rng.gen_range(4);
+            let nx = 1 + rng.gen_range(6);
+            let ny = 1 + rng.gen_range(6);
+            let xs = rand_block(rng, b * nx, d);
+            let ys = rand_block(rng, b * ny, d);
+            let mut out = vec![0.0; b * nx * ny];
+            ScalarEngine.batch_cross_l2(&xs, &ys, d, b, nx, ny, &mut out);
+            for t in 0..b {
+                let expect = ScalarEngine.cross_l2_alloc(
+                    &xs[t * nx * d..(t + 1) * nx * d],
+                    &ys[t * ny * d..(t + 1) * ny * d],
+                    d,
+                    nx,
+                    ny,
+                );
+                assert_eq!(&out[t * nx * ny..(t + 1) * nx * ny], &expect[..]);
+            }
+        });
+    }
+
+    #[test]
+    fn norm_expand_matches_scalar() {
+        check_property("norm-expand", 201, |rng| {
+            let d = 1 + rng.gen_range(128);
+            let nx = 1 + rng.gen_range(16);
+            let ny = 1 + rng.gen_range(16);
+            let xs = rand_block(rng, nx, d);
+            let ys = rand_block(rng, ny, d);
+            let a = ScalarEngine.cross_l2_alloc(&xs, &ys, d, nx, ny);
+            let b = NormExpandEngine.cross_l2_alloc(&xs, &ys, d, nx, ny);
+            for (x, y) in a.iter().zip(&b) {
+                assert!(
+                    (x - y).abs() <= 1e-3 * x.abs().max(1.0),
+                    "scalar={x} expand={y}"
+                );
+            }
+        });
+    }
+}

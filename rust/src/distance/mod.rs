@@ -1,0 +1,182 @@
+//! Distance metrics and the batched distance engine abstraction.
+//!
+//! Every construction / merge algorithm in the crate is generic over
+//! [`Metric`]; the Local-Join hot path additionally uses a
+//! [`DistanceEngine`] so batched candidate blocks can be routed either to
+//! tight scalar loops ([`ScalarEngine`]) or to the AOT-compiled
+//! XLA/Pallas kernel (`runtime::XlaEngine`).
+
+pub mod engine;
+
+pub use engine::{DistanceEngine, ScalarEngine};
+
+/// Distance metric over f32 vectors. Smaller = closer everywhere in the
+/// crate (the paper's convention).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// Squared Euclidean distance (monotone with L2; what the paper's
+    /// datasets use).
+    L2,
+    /// Negative inner product (so smaller = more similar).
+    InnerProduct,
+    /// Cosine distance `1 - cos(a, b)`.
+    Cosine,
+}
+
+impl Metric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::L2 => "l2",
+            Metric::InnerProduct => "ip",
+            Metric::Cosine => "cosine",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Metric> {
+        match s.to_ascii_lowercase().as_str() {
+            "l2" => Some(Metric::L2),
+            "ip" | "innerproduct" | "inner_product" => Some(Metric::InnerProduct),
+            "cos" | "cosine" => Some(Metric::Cosine),
+            _ => None,
+        }
+    }
+
+    /// Compute the distance between two vectors.
+    #[inline]
+    pub fn distance(&self, a: &[f32], b: &[f32]) -> f32 {
+        match self {
+            Metric::L2 => l2_sq(a, b),
+            Metric::InnerProduct => -dot(a, b),
+            Metric::Cosine => cosine_dist(a, b),
+        }
+    }
+}
+
+/// Squared L2 distance, 8-wide accumulator blocks over `chunks_exact`
+/// — the shape LLVM turns into packed `vsubps`/`vfmadd` at the
+/// x86-64-v3 baseline this workspace compiles with (see
+/// `.cargo/config.toml`; EXPERIMENTS.md §Perf has the measurements).
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for j in 0..8 {
+            let d = xa[j] - xb[j];
+            acc[j] = d.mul_add(d, acc[j]);
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        let d = x - y;
+        tail += d * d;
+    }
+    let s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    s + tail
+}
+
+/// Dot product, 8-wide FMA accumulators (same codegen shape as
+/// [`l2_sq`]).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for j in 0..8 {
+            acc[j] = xa[j].mul_add(xb[j], acc[j]);
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    let s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    s + tail
+}
+
+/// Cosine distance `1 - <a,b>/(|a||b|)`; zero vectors yield distance 1.
+#[inline]
+pub fn cosine_dist(a: &[f32], b: &[f32]) -> f32 {
+    let ab = dot(a, b);
+    let na = dot(a, a).sqrt();
+    let nb = dot(b, b).sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 1.0;
+    }
+    1.0 - ab / (na * nb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_property;
+    use crate::util::Rng;
+
+    fn rand_vec(rng: &mut Rng, d: usize) -> Vec<f32> {
+        (0..d).map(|_| rng.gen_normal()).collect()
+    }
+
+    #[test]
+    fn l2_matches_naive() {
+        check_property("l2-naive", 100, |rng| {
+            let d = 1 + rng.gen_range(300);
+            let a = rand_vec(rng, d);
+            let b = rand_vec(rng, d);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            let fast = l2_sq(&a, &b);
+            assert!(
+                (naive - fast).abs() <= 1e-4 * naive.abs().max(1.0),
+                "naive={naive} fast={fast} d={d}"
+            );
+        });
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        check_property("dot-naive", 101, |rng| {
+            let d = 1 + rng.gen_range(300);
+            let a = rand_vec(rng, d);
+            let b = rand_vec(rng, d);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let fast = dot(&a, &b);
+            assert!((naive - fast).abs() <= 1e-3 * naive.abs().max(1.0));
+        });
+    }
+
+    #[test]
+    fn l2_identity_and_symmetry() {
+        check_property("l2-axioms", 102, |rng| {
+            let d = 1 + rng.gen_range(64);
+            let a = rand_vec(rng, d);
+            let b = rand_vec(rng, d);
+            assert_eq!(l2_sq(&a, &a), 0.0);
+            assert!((l2_sq(&a, &b) - l2_sq(&b, &a)).abs() < 1e-5);
+            assert!(l2_sq(&a, &b) >= 0.0);
+        });
+    }
+
+    #[test]
+    fn cosine_range_and_self() {
+        let a = vec![1.0, 0.0];
+        let b = vec![0.0, 1.0];
+        let c = vec![-1.0, 0.0];
+        assert!((cosine_dist(&a, &a)).abs() < 1e-6);
+        assert!((cosine_dist(&a, &b) - 1.0).abs() < 1e-6);
+        assert!((cosine_dist(&a, &c) - 2.0).abs() < 1e-6);
+        assert_eq!(cosine_dist(&a, &[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn metric_dispatch() {
+        let a = vec![1.0, 2.0];
+        let b = vec![3.0, 4.0];
+        assert_eq!(Metric::L2.distance(&a, &b), 8.0);
+        assert_eq!(Metric::InnerProduct.distance(&a, &b), -11.0);
+        assert_eq!(Metric::from_name("L2"), Some(Metric::L2));
+        assert_eq!(Metric::from_name("bogus"), None);
+    }
+}

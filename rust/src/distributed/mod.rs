@@ -1,0 +1,23 @@
+//! The distributed peer-to-peer graph construction procedure (Alg. 3)
+//! and its substrates.
+//!
+//! - [`network`] — in-process message-passing cluster with a
+//!   byte-accounted bandwidth/latency model standing in for the paper's
+//!   OpenMPI over 1000 Mbps Ethernet.
+//! - [`scheduler`] — the ring pairing schedule `t = (i+iter) % m`,
+//!   `j = (i-iter+m) % m` over `ceil((m-1)/2)` rounds.
+//! - [`node`] — the per-node worker running Alg. 3.
+//! - [`storage`] — external-storage spill area for the out-of-core
+//!   single-node mode (Sec. IV, last paragraphs).
+//! - [`driver`] — top-level: spawn node threads, collect the merged
+//!   graph and the per-phase cost ledgers.
+
+pub mod driver;
+pub mod network;
+pub mod node;
+pub mod scheduler;
+pub mod storage;
+
+pub use driver::{run_cluster, run_cluster_threaded, ClusterResult};
+pub use network::{Cluster, LinkModel, NodeNet};
+pub use scheduler::ring_schedule;

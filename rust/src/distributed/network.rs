@@ -1,0 +1,185 @@
+//! In-process cluster network with a modelled cost.
+//!
+//! Node threads exchange real serialized payloads over channels; every
+//! message is byte-accounted and assigned a *modelled* transfer time
+//! `latency + bytes * 8 / bandwidth` matching the paper's testbed
+//! (1000 Mbps Ethernet). Modelled seconds go into the receiver's
+//! [`Phase::Exchange`] ledger so Fig. 13/14 can report the network share
+//! without needing nine physical machines.
+
+use crate::metrics::{CostLedger, Phase};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// Bandwidth/latency model of one link.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// Bits per second (paper: 1e9).
+    pub bandwidth_bps: f64,
+    /// Seconds of fixed per-message latency.
+    pub latency_s: f64,
+}
+
+impl LinkModel {
+    /// Modelled wall-clock seconds to move `bytes`.
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        self.latency_s + (bytes as f64) * 8.0 / self.bandwidth_bps
+    }
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        LinkModel {
+            bandwidth_bps: 1e9,
+            latency_s: 100e-6,
+        }
+    }
+}
+
+/// A tagged message between nodes.
+#[derive(Debug)]
+pub struct Message {
+    pub from: usize,
+    pub tag: u32,
+    pub payload: Vec<u8>,
+}
+
+/// Per-node endpoint: send to any peer, receive with (from, tag)
+/// matching (out-of-order arrivals are parked in an inbox).
+pub struct NodeNet {
+    pub id: usize,
+    senders: Vec<Sender<Message>>,
+    receiver: Receiver<Message>,
+    inbox: VecDeque<Message>,
+    link: LinkModel,
+    /// Per-node cost ledger (shared with the node worker).
+    pub ledger: Arc<CostLedger>,
+}
+
+impl NodeNet {
+    /// Send `payload` to node `to` with a tag. Accounts bytes on the
+    /// sender; modelled transfer time is charged to the receiver at
+    /// receive time (the receiver is the one that waits).
+    pub fn send(&self, to: usize, tag: u32, payload: Vec<u8>) {
+        self.ledger.add_bytes_sent(payload.len() as u64);
+        self.senders[to]
+            .send(Message {
+                from: self.id,
+                tag,
+                payload,
+            })
+            .expect("peer hung up");
+    }
+
+    /// Blocking receive of the next message matching `(from, tag)`.
+    /// Other messages are parked.
+    pub fn recv_from(&mut self, from: usize, tag: u32) -> Vec<u8> {
+        // Check the inbox first.
+        if let Some(pos) = self
+            .inbox
+            .iter()
+            .position(|m| m.from == from && m.tag == tag)
+        {
+            let m = self.inbox.remove(pos).unwrap();
+            self.ledger
+                .add(Phase::Exchange, self.link.transfer_secs(m.payload.len() as u64));
+            return m.payload;
+        }
+        loop {
+            let m = self.receiver.recv().expect("cluster channel closed");
+            if m.from == from && m.tag == tag {
+                self.ledger
+                    .add(Phase::Exchange, self.link.transfer_secs(m.payload.len() as u64));
+                return m.payload;
+            }
+            self.inbox.push_back(m);
+        }
+    }
+}
+
+/// Factory: build `m` connected [`NodeNet`] endpoints.
+pub struct Cluster;
+
+impl Cluster {
+    pub fn connect(m: usize, link: LinkModel) -> Vec<NodeNet> {
+        let mut senders = Vec::with_capacity(m);
+        let mut receivers = Vec::with_capacity(m);
+        for _ in 0..m {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        receivers
+            .into_iter()
+            .enumerate()
+            .map(|(id, receiver)| NodeNet {
+                id,
+                senders: senders.clone(),
+                receiver,
+                inbox: VecDeque::new(),
+                link,
+                ledger: Arc::new(CostLedger::new()),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_model_matches_arithmetic() {
+        let link = LinkModel {
+            bandwidth_bps: 1e9,
+            latency_s: 1e-4,
+        };
+        // 125 MB over 1 Gbps = 1 s (+latency)
+        let t = link.transfer_secs(125_000_000);
+        assert!((t - 1.0001).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn messages_route_between_threads() {
+        let mut nodes = Cluster::connect(3, LinkModel::default());
+        let n2 = nodes.pop().unwrap();
+        let mut n1 = nodes.pop().unwrap();
+        let n0 = nodes.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            n0.send(1, 7, vec![1, 2, 3]);
+        });
+        let h2 = std::thread::spawn(move || {
+            n2.send(1, 7, vec![9]);
+        });
+        // Receive in the *opposite* order of arrival possibility.
+        let from2 = n1.recv_from(2, 7);
+        let from0 = n1.recv_from(0, 7);
+        assert_eq!(from2, vec![9]);
+        assert_eq!(from0, vec![1, 2, 3]);
+        h.join().unwrap();
+        h2.join().unwrap();
+        assert!(n1.ledger.secs(Phase::Exchange) > 0.0);
+    }
+
+    #[test]
+    fn tag_mismatch_is_parked_not_lost() {
+        let mut nodes = Cluster::connect(2, LinkModel::default());
+        let n1 = nodes.pop().unwrap();
+        let mut n0 = nodes.pop().unwrap();
+        n1.send(0, 1, vec![1]);
+        n1.send(0, 2, vec![2]);
+        assert_eq!(n0.recv_from(1, 2), vec![2]);
+        assert_eq!(n0.recv_from(1, 1), vec![1]);
+    }
+
+    #[test]
+    fn sender_accounts_bytes() {
+        let mut nodes = Cluster::connect(2, LinkModel::default());
+        let mut n1 = nodes.pop().unwrap();
+        let n0 = nodes.pop().unwrap();
+        n0.send(1, 0, vec![0u8; 1000]);
+        assert_eq!(n0.ledger.bytes_sent(), 1000);
+        let _ = n1.recv_from(0, 0);
+    }
+}

@@ -1,0 +1,262 @@
+//! The per-node worker of Alg. 3.
+//!
+//! Every node holds the dataset (distributed ahead of time, as the paper
+//! assumes), owns its subset `C_i`, builds `G_i` + `S_i` locally, and
+//! then runs the ring schedule: ship `S_i`, receive `S_j`, run Two-way
+//! Merge locally, split the cross graph into `G_i^j` / `G_j^i`, keep one
+//! and ship the other back.
+//!
+//! The worker is factored into explicit **phases** so the driver can run
+//! it two ways:
+//!
+//! - *threaded* — one OS thread per node, phases in sequence (real
+//!   concurrency; wall-clock only meaningful with ≥ m cores);
+//! - *lockstep* — the driver interleaves phases of all nodes on one
+//!   core; each node's ledger then measures **uncontended** compute, so
+//!   the modelled makespan `max_i(compute_i + exchange_i)` reproduces
+//!   what an m-machine cluster would observe (the Fig. 13/14 protocol
+//!   on this single-core container).
+
+use super::network::NodeNet;
+use super::scheduler::{round_count, RoundPeers};
+use crate::construction::{NnDescent, NnDescentParams};
+use crate::dataset::Dataset;
+use crate::distance::Metric;
+use crate::graph::{serial, KnnGraph, Neighbor, NeighborList};
+use crate::merge::{MergeParams, SupportLists, TwoWayMerge};
+use crate::metrics::Phase;
+use std::sync::Arc;
+
+/// Message tags.
+pub const TAG_SUPPORT: u32 = 1;
+pub const TAG_CROSS: u32 = 2;
+
+/// Inputs for one node worker.
+pub struct NodeTask {
+    /// Full dataset (shared; every node has a copy in the paper).
+    pub dataset: Arc<Dataset>,
+    /// Global id offset of each subset.
+    pub offsets: Arc<Vec<usize>>,
+    /// Subset sizes.
+    pub sizes: Arc<Vec<usize>>,
+    /// This node's index.
+    pub id: usize,
+    pub metric: Metric,
+    pub nnd: NnDescentParams,
+    pub merge: MergeParams,
+}
+
+impl NodeTask {
+    fn subset(&self, s: usize) -> Dataset {
+        let d = self.dataset.dim;
+        let start = self.offsets[s];
+        let len = self.sizes[s];
+        Dataset {
+            data: self.dataset.data[start * d..(start + len) * d].to_vec(),
+            dim: d,
+        }
+    }
+}
+
+/// Phase-structured Alg. 3 worker.
+pub struct NodeWorker {
+    task: NodeTask,
+    net: NodeNet,
+    ds_i: Dataset,
+    s_i: SupportLists,
+    s_i_bytes: Vec<u8>,
+    /// Accumulated graph in **global** ids.
+    g_i: KnnGraph,
+}
+
+impl NodeWorker {
+    pub fn new(task: NodeTask, net: NodeNet) -> NodeWorker {
+        let ds_i = task.subset(task.id);
+        NodeWorker {
+            ds_i,
+            task,
+            net,
+            s_i: SupportLists::default(),
+            s_i_bytes: Vec::new(),
+            g_i: KnnGraph::default(),
+        }
+    }
+
+    pub fn rounds(&self) -> usize {
+        round_count(self.task.sizes.len())
+    }
+
+    /// Lines 2–3: local subgraph + supporting graph.
+    pub fn phase_build(&mut self) {
+        let ledger = self.net.ledger.clone();
+        let g_local = ledger.time(Phase::Build, || {
+            NnDescent::new(self.task.nnd).build(&self.ds_i, self.task.metric)
+        });
+        self.s_i = ledger.time(Phase::Merge, || {
+            SupportLists::build(&g_local, self.task.merge.lambda)
+        });
+        self.s_i_bytes = self.s_i.to_bytes();
+        self.g_i = to_global(&g_local, self.task.offsets[self.task.id] as u32);
+    }
+
+    /// Line 8: send `S_i` to this round's target.
+    pub fn phase_send_support(&mut self, iter: usize) {
+        let RoundPeers { send_to, .. } =
+            super::scheduler::ring_peers(self.task.sizes.len(), self.task.id, iter);
+        self.net.send(send_to, TAG_SUPPORT, self.s_i_bytes.clone());
+    }
+
+    /// Lines 9–12: receive `S_j`, run Two-way Merge, keep `G_i^j`, ship
+    /// `G_j^i` back.
+    pub fn phase_merge(&mut self, iter: usize) {
+        let m = self.task.sizes.len();
+        let i = self.task.id;
+        let RoundPeers { recv_from: j, .. } = super::scheduler::ring_peers(m, i, iter);
+        let ledger = self.net.ledger.clone();
+
+        let s_j = SupportLists::from_bytes(&self.net.recv_from(j, TAG_SUPPORT))
+            .expect("corrupt support payload");
+        let ds_j = self.task.subset(j);
+        let (g_ij, g_ji) = ledger.time(Phase::Merge, || {
+            let mut support = self.s_i.clone();
+            let mut remote = s_j;
+            remote.offset_ids(self.ds_i.len() as u32);
+            support.lists.append(&mut remote.lists);
+            let cross = TwoWayMerge::new(self.task.merge).cross_graph(
+                &self.ds_i,
+                &ds_j,
+                &support,
+                self.task.metric,
+            );
+            split_cross(
+                &cross,
+                self.ds_i.len(),
+                self.task.offsets[i] as u32,
+                self.task.offsets[j] as u32,
+            )
+        });
+        self.g_i = ledger.time(Phase::Merge, || self.g_i.merge_sorted(&g_ij));
+        self.net.send(j, TAG_CROSS, serial::graph_to_bytes(&g_ji));
+    }
+
+    /// Lines 13–14: reclaim `G_i^t` from the node we sent `S_i` to.
+    pub fn phase_reclaim(&mut self, iter: usize) {
+        let RoundPeers { send_to: t, .. } =
+            super::scheduler::ring_peers(self.task.sizes.len(), self.task.id, iter);
+        let ledger = self.net.ledger.clone();
+        let g_it = serial::graph_from_bytes(&self.net.recv_from(t, TAG_CROSS))
+            .expect("corrupt cross payload");
+        self.g_i = ledger.time(Phase::Merge, || self.g_i.merge_sorted(&g_it));
+    }
+
+    /// Finish: the node's rows of the full graph (global ids).
+    pub fn into_graph(self) -> KnnGraph {
+        self.g_i
+    }
+}
+
+/// Run all phases in order (the threaded mode's body).
+pub fn run_node(task: NodeTask, net: NodeNet) -> KnnGraph {
+    let mut worker = NodeWorker::new(task, net);
+    worker.phase_build();
+    for iter in 1..=worker.rounds() {
+        worker.phase_send_support(iter);
+        worker.phase_merge(iter);
+        worker.phase_reclaim(iter);
+    }
+    worker.into_graph()
+}
+
+/// Split the pairwise cross graph (concat space: `C_i` rows first) into
+/// `G_i^j` (rows of `C_i`, neighbor ids translated to global) and
+/// `G_j^i` (rows of `C_j`, ids translated to global).
+pub(crate) fn split_cross(
+    cross: &KnnGraph,
+    n_i: usize,
+    off_i: u32,
+    off_j: u32,
+) -> (KnnGraph, KnnGraph) {
+    let translate = |rows: std::ops::Range<usize>, other_off: u32, split_at: u32| {
+        let lists: Vec<NeighborList> = rows
+            .map(|r| {
+                let mut out = NeighborList::new(cross.k);
+                for nb in cross.lists[r].iter() {
+                    // Cross-graph invariant: rows of C_i only hold ids
+                    // >= n_i (C_j side) and vice versa.
+                    let global = if split_at > 0 {
+                        debug_assert!(nb.id >= split_at);
+                        nb.id - split_at + other_off
+                    } else {
+                        nb.id + other_off
+                    };
+                    out.push_unchecked(Neighbor {
+                        id: global,
+                        dist: nb.dist,
+                        new: nb.new,
+                    });
+                }
+                out
+            })
+            .collect();
+        KnnGraph { lists, k: cross.k }
+    };
+    // Rows of C_i: neighbor ids >= n_i, translate to off_j + (id - n_i).
+    let g_ij = translate(0..n_i, off_j, n_i as u32);
+    // Rows of C_j: neighbor ids < n_i, translate to off_i + id.
+    let g_ji = translate(n_i..cross.len(), off_i, 0);
+    (g_ij, g_ji)
+}
+
+/// Translate a subset-local graph into global ids (shift by `offset`).
+fn to_global(g: &KnnGraph, offset: u32) -> KnnGraph {
+    if offset == 0 {
+        return g.clone();
+    }
+    let lists = g
+        .lists
+        .iter()
+        .map(|l| {
+            let mut out = NeighborList::new(g.k);
+            for nb in l.iter() {
+                out.push_unchecked(Neighbor {
+                    id: nb.id + offset,
+                    dist: nb.dist,
+                    new: nb.new,
+                });
+            }
+            out
+        })
+        .collect();
+    KnnGraph { lists, k: g.k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_cross_translates_ids() {
+        // concat space: C_i = {0,1} (global 10,11), C_j = {2,3} (global 20,21)
+        let mut cross = KnnGraph::empty(4, 2);
+        cross.lists[0].insert(2, 0.5, true); // row of C_i -> C_j local 0
+        cross.lists[1].insert(3, 0.3, true);
+        cross.lists[2].insert(0, 0.5, true); // row of C_j -> C_i local 0
+        cross.lists[3].insert(1, 0.3, true);
+        let (g_ij, g_ji) = split_cross(&cross, 2, 10, 20);
+        assert_eq!(g_ij.ids(0), vec![20]);
+        assert_eq!(g_ij.ids(1), vec![21]);
+        assert_eq!(g_ji.ids(0), vec![10]);
+        assert_eq!(g_ji.ids(1), vec![11]);
+    }
+
+    #[test]
+    fn to_global_shifts_ids() {
+        let mut g = KnnGraph::empty(2, 2);
+        g.lists[0].insert(1, 0.5, true);
+        g.lists[1].insert(0, 0.5, false);
+        let shifted = to_global(&g, 100);
+        assert_eq!(shifted.ids(0), vec![101]);
+        assert_eq!(shifted.ids(1), vec![100]);
+        assert_eq!(to_global(&g, 0), g);
+    }
+}

@@ -1,0 +1,109 @@
+//! The ring pairing schedule of Alg. 3.
+//!
+//! In round `iter` (1-based), node `i` **sends** its supporting graph to
+//! `t = (i + iter) % m` and **receives** one from `j = (i - iter + m) % m`,
+//! then performs the Two-way Merge against `C_j` locally. Over
+//! `ceil((m-1)/2)` rounds every unordered subset pair is merged exactly
+//! once (twice for antipodal pairs when `m` is even — a benign duplicate
+//! the original algorithm also incurs).
+
+/// One round's peers from node `i`'s perspective.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoundPeers {
+    /// Node that receives our supporting graph (we later reclaim
+    /// `G_i^t` from it).
+    pub send_to: usize,
+    /// Node whose supporting graph we receive (we merge with `C_j` and
+    /// send `G_j^i` back).
+    pub recv_from: usize,
+}
+
+/// Number of rounds for `m` nodes: `ceil((m-1)/2)`.
+pub fn round_count(m: usize) -> usize {
+    (m.saturating_sub(1)).div_ceil(2)
+}
+
+/// Peers of node `i` in round `iter` (1-based), for an `m`-node ring.
+pub fn ring_peers(m: usize, i: usize, iter: usize) -> RoundPeers {
+    debug_assert!(iter >= 1 && iter <= round_count(m));
+    RoundPeers {
+        send_to: (i + iter) % m,
+        recv_from: (i + m - (iter % m)) % m,
+    }
+}
+
+/// Full schedule for node `i`.
+pub fn ring_schedule(m: usize, i: usize) -> Vec<RoundPeers> {
+    (1..=round_count(m)).map(|it| ring_peers(m, i, it)).collect()
+}
+
+/// All unordered pairs `{a, b}` merged across the whole schedule, with
+/// multiplicity. Node `x` computes the merge of pair `{x, recv_from}`.
+pub fn merged_pairs(m: usize) -> Vec<(usize, usize)> {
+    let mut pairs = Vec::new();
+    for i in 0..m {
+        for peers in ring_schedule(m, i) {
+            let (a, b) = (i.min(peers.recv_from), i.max(peers.recv_from));
+            pairs.push((a, b));
+        }
+    }
+    pairs.sort_unstable();
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_counts_match_paper() {
+        assert_eq!(round_count(2), 1);
+        assert_eq!(round_count(3), 1);
+        assert_eq!(round_count(5), 2); // Fig. 4's 5-node example
+        assert_eq!(round_count(9), 4);
+    }
+
+    #[test]
+    fn send_recv_are_duals() {
+        // If i sends to t, then t receives from i in the same round.
+        for m in 2..10 {
+            for iter in 1..=round_count(m) {
+                for i in 0..m {
+                    let p = ring_peers(m, i, iter);
+                    let q = ring_peers(m, p.send_to, iter);
+                    assert_eq!(q.recv_from, i, "m={m} iter={iter} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_pair_merged_at_least_once() {
+        for m in 2..10 {
+            let pairs = merged_pairs(m);
+            for a in 0..m {
+                for b in (a + 1)..m {
+                    let count = pairs.iter().filter(|&&p| p == (a, b)).count();
+                    let antipodal = m % 2 == 0 && b == a + m / 2;
+                    let expect = if antipodal { 2 } else { 1 };
+                    assert_eq!(
+                        count, expect,
+                        "pair ({a},{b}) merged {count}x for m={m}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_self_pairs() {
+        for m in 2..10 {
+            for i in 0..m {
+                for p in ring_schedule(m, i) {
+                    assert_ne!(p.recv_from, i);
+                    assert_ne!(p.send_to, i);
+                }
+            }
+        }
+    }
+}

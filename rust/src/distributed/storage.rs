@@ -1,0 +1,144 @@
+//! External-storage spill area for the out-of-core mode (Sec. IV):
+//! when a node's memory cannot hold all subgraphs, subsets and graphs
+//! are parked on disk and swapped in two at a time.
+//!
+//! Time accounting is *modelled* from payload bytes at the configured
+//! sequential throughput (the paper's SSD: 7450/6900 MB/s read/write) —
+//! the container's tmpfs throughput would not be representative — while
+//! the real bytes are still written and read back (so correctness is
+//! exercised end to end).
+
+use crate::dataset::{io, Dataset};
+use crate::graph::{serial, KnnGraph};
+use crate::metrics::{CostLedger, Phase};
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Modelled storage throughputs.
+#[derive(Clone, Copy, Debug)]
+pub struct StorageModel {
+    pub read_bps: f64,
+    pub write_bps: f64,
+}
+
+impl Default for StorageModel {
+    fn default() -> Self {
+        StorageModel {
+            read_bps: 7.45e9,  // paper's SSD max sequential read
+            write_bps: 6.9e9,  // ... and write
+        }
+    }
+}
+
+/// A spill directory with byte-accounted, time-modelled IO.
+pub struct ExternalStorage {
+    dir: PathBuf,
+    model: StorageModel,
+}
+
+impl ExternalStorage {
+    /// Create (and clear) a spill area under `dir`.
+    pub fn create(dir: impl Into<PathBuf>, model: StorageModel) -> Result<ExternalStorage> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir).with_context(|| format!("create {dir:?}"))?;
+        Ok(ExternalStorage { dir, model })
+    }
+
+    fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    /// Spill a subset's vectors.
+    pub fn put_subset(&self, s: usize, ds: &Dataset, ledger: &CostLedger) -> Result<()> {
+        let path = self.path(&format!("subset-{s}.knnv"));
+        io::write_knnv(&path, ds)?;
+        let bytes = std::fs::metadata(&path)?.len();
+        ledger.add_bytes_stored(bytes);
+        ledger.add(Phase::Storage, bytes as f64 / self.model.write_bps);
+        Ok(())
+    }
+
+    /// Load a subset's vectors back.
+    pub fn get_subset(&self, s: usize, ledger: &CostLedger) -> Result<Dataset> {
+        let path = self.path(&format!("subset-{s}.knnv"));
+        let bytes = std::fs::metadata(&path)?.len();
+        let ds = io::read_knnv(&path)?;
+        ledger.add(Phase::Storage, bytes as f64 / self.model.read_bps);
+        Ok(ds)
+    }
+
+    /// Spill a (sub)graph.
+    pub fn put_graph(&self, name: &str, g: &KnnGraph, ledger: &CostLedger) -> Result<()> {
+        let path = self.path(&format!("graph-{name}.bin"));
+        serial::write_graph(&path, g)?;
+        let bytes = std::fs::metadata(&path)?.len();
+        ledger.add_bytes_stored(bytes);
+        ledger.add(Phase::Storage, bytes as f64 / self.model.write_bps);
+        Ok(())
+    }
+
+    /// Load a (sub)graph back.
+    pub fn get_graph(&self, name: &str, ledger: &CostLedger) -> Result<KnnGraph> {
+        let path = self.path(&format!("graph-{name}.bin"));
+        let bytes = std::fs::metadata(&path)?.len();
+        let g = serial::read_graph(&path)?;
+        ledger.add(Phase::Storage, bytes as f64 / self.model.read_bps);
+        Ok(g)
+    }
+
+    /// Remove all spill files.
+    pub fn cleanup(&self) -> Result<()> {
+        if self.dir.exists() {
+            std::fs::remove_dir_all(&self.dir)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetFamily;
+
+    fn fixture(name: &str) -> ExternalStorage {
+        let dir = std::env::temp_dir().join(format!(
+            "knnmerge-storage-{name}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        ExternalStorage::create(dir, StorageModel::default()).unwrap()
+    }
+
+    #[test]
+    fn subset_roundtrip_with_modelled_time() {
+        let st = fixture("subset");
+        let ledger = CostLedger::new();
+        let ds = DatasetFamily::Sift.generate(100, 1);
+        st.put_subset(0, &ds, &ledger).unwrap();
+        let back = st.get_subset(0, &ledger).unwrap();
+        assert_eq!(back.data, ds.data);
+        assert!(ledger.secs(Phase::Storage) > 0.0);
+        assert!(ledger.bytes_stored() > (100 * 128 * 4) as u64);
+        st.cleanup().unwrap();
+    }
+
+    #[test]
+    fn graph_roundtrip() {
+        let st = fixture("graph");
+        let ledger = CostLedger::new();
+        let mut g = KnnGraph::empty(10, 4);
+        g.lists[0].insert(3, 0.5, true);
+        st.put_graph("g0", &g, &ledger).unwrap();
+        let back = st.get_graph("g0", &ledger).unwrap();
+        assert_eq!(back, g);
+        st.cleanup().unwrap();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let st = fixture("missing");
+        let ledger = CostLedger::new();
+        assert!(st.get_graph("nope", &ledger).is_err());
+        st.cleanup().unwrap();
+    }
+}

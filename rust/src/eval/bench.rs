@@ -1,0 +1,231 @@
+//! Bench harness: aligned-table printing + JSON result files.
+//!
+//! The vendored set has no `criterion`; each `rust/benches/*` binary is a
+//! plain `main()` that builds a [`BenchReport`], prints the paper-style
+//! rows, and writes `results/<name>.json` for EXPERIMENTS.md.
+
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// One row of a result table: label + named numeric columns.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub values: Vec<(String, f64)>,
+}
+
+impl Row {
+    pub fn new(label: impl Into<String>) -> Row {
+        Row {
+            label: label.into(),
+            values: Vec::new(),
+        }
+    }
+
+    pub fn col(mut self, name: &str, value: f64) -> Row {
+        self.values.push((name.to_string(), value));
+        self
+    }
+}
+
+/// A named report: free-form notes + rows, printable and serializable.
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    pub name: String,
+    pub notes: Vec<String>,
+    pub rows: Vec<Row>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn push(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    /// Render as an aligned text table.
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.name));
+        for n in &self.notes {
+            out.push_str(&format!("# {n}\n"));
+        }
+        if self.rows.is_empty() {
+            return out;
+        }
+        // Column set = union over rows, in first-seen order.
+        let mut cols: Vec<String> = Vec::new();
+        for row in &self.rows {
+            for (c, _) in &row.values {
+                if !cols.contains(c) {
+                    cols.push(c.clone());
+                }
+            }
+        }
+        let label_w = self
+            .rows
+            .iter()
+            .map(|r| r.label.len())
+            .chain(std::iter::once(8))
+            .max()
+            .unwrap();
+        let fmt_val = |v: f64| -> String {
+            if v == 0.0 {
+                "0".to_string()
+            } else if v.abs() >= 1000.0 || v == v.trunc() && v.abs() >= 1.0 {
+                format!("{v:.0}")
+            } else if v.abs() >= 1.0 {
+                format!("{v:.3}")
+            } else {
+                format!("{v:.4}")
+            }
+        };
+        let col_w: Vec<usize> = cols
+            .iter()
+            .map(|c| {
+                self.rows
+                    .iter()
+                    .filter_map(|r| {
+                        r.values
+                            .iter()
+                            .find(|(rc, _)| rc == c)
+                            .map(|(_, v)| fmt_val(*v).len())
+                    })
+                    .chain(std::iter::once(c.len()))
+                    .max()
+                    .unwrap()
+            })
+            .collect();
+        out.push_str(&format!("{:label_w$}", ""));
+        for (c, w) in cols.iter().zip(&col_w) {
+            out.push_str(&format!("  {c:>w$}"));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&format!("{:label_w$}", row.label));
+            for (c, w) in cols.iter().zip(&col_w) {
+                match row.values.iter().find(|(rc, _)| rc == c) {
+                    Some((_, v)) => out.push_str(&format!("  {:>w$}", fmt_val(*v))),
+                    None => out.push_str(&format!("  {:>w$}", "-")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("name", self.name.as_str());
+        obj.set("notes", self.notes.iter().map(|n| Json::Str(n.clone())).collect::<Vec<_>>());
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("label", r.label.as_str());
+                for (c, v) in &r.values {
+                    o.set(c, *v);
+                }
+                o
+            })
+            .collect();
+        obj.set("rows", rows);
+        obj
+    }
+
+    /// Print the table and write `results/<name>.json` (best effort).
+    pub fn finish(&self) {
+        print!("{}", self.to_table());
+        let dir = std::path::Path::new("results");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.json", self.name));
+        if let Err(e) = std::fs::write(&path, self.to_json().to_pretty()) {
+            eprintln!("warn: could not write {path:?}: {e}");
+        } else {
+            println!("-> wrote {path:?}");
+        }
+    }
+}
+
+/// Bench workload size: `default` scaled by the `KNN_BENCH_SCALE`
+/// env var (e.g. `KNN_BENCH_SCALE=0.25` for a quick pass, `4` for a
+/// longer run on a bigger machine).
+pub fn scaled(default: usize) -> usize {
+    match std::env::var("KNN_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+    {
+        Some(s) if s > 0.0 => ((default as f64 * s) as usize).max(64),
+        _ => default,
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let start = Instant::now();
+    let r = f();
+    (r, start.elapsed().as_secs_f64())
+}
+
+/// Median wall-clock seconds of `reps` runs of `f` (used by microbenches).
+pub fn median_secs(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let start = Instant::now();
+            f();
+            start.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_all_rows_and_columns() {
+        let mut rep = BenchReport::new("unit");
+        rep.note("note line");
+        rep.push(Row::new("a").col("time_s", 1.5).col("recall", 0.991));
+        rep.push(Row::new("longer-label").col("time_s", 20.0));
+        let t = rep.to_table();
+        assert!(t.contains("unit"));
+        assert!(t.contains("note line"));
+        assert!(t.contains("recall"));
+        assert!(t.contains("longer-label"));
+        assert!(t.contains("0.991"));
+        // missing column renders as '-'
+        assert!(t.lines().last().unwrap().trim_end().ends_with('-'));
+    }
+
+    #[test]
+    fn json_contains_rows() {
+        let mut rep = BenchReport::new("unit2");
+        rep.push(Row::new("x").col("v", 2.0));
+        let j = rep.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("unit2"));
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("v").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn timing_helpers_return_positive() {
+        let (_, t) = time(|| std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(t >= 0.001);
+        let m = median_secs(3, || {});
+        assert!(m >= 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation: graph quality (Recall@k against exact ground truth), NN
+//! search QPS/recall curves, and the lightweight bench harness used by
+//! every `rust/benches/*` binary.
+
+pub mod bench;
+pub mod recall;
+
+pub use bench::{BenchReport, Row};
+pub use recall::{graph_recall, search_recall, GroundTruth};

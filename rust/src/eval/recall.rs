@@ -1,0 +1,180 @@
+//! Recall@k evaluation (the paper's graph-quality metric, Sec. V-A).
+//!
+//! `Recall@k = sum_i R(i,k) / (n * k)` where `R(i,k)` counts
+//! true-positive neighbors in the top-k list of element `i`.
+
+use crate::construction::bruteforce;
+use crate::dataset::Dataset;
+use crate::distance::Metric;
+use crate::graph::KnnGraph;
+use crate::util::Rng;
+
+/// Exact top-k ground truth, possibly only for a sample of elements
+/// (evaluating a 100k-point graph exactly at k=100 is itself O(n^2); the
+/// paper's recall protocol samples as well at scale).
+#[derive(Clone, Debug)]
+pub struct GroundTruth {
+    /// Element ids the truth covers.
+    pub ids: Vec<usize>,
+    /// For each covered id, its exact k nearest neighbor ids (ascending
+    /// distance, self excluded).
+    pub neighbors: Vec<Vec<u32>>,
+    pub k: usize,
+}
+
+impl GroundTruth {
+    /// Exact truth for every element (brute force).
+    pub fn exact(ds: &Dataset, k: usize, metric: Metric) -> GroundTruth {
+        let g = bruteforce::build(ds, k, metric);
+        GroundTruth {
+            ids: (0..ds.len()).collect(),
+            neighbors: (0..ds.len()).map(|i| g.ids(i)).collect(),
+            k,
+        }
+    }
+
+    /// Exact truth for a random sample of `samples` elements.
+    pub fn sampled(ds: &Dataset, k: usize, metric: Metric, samples: usize, seed: u64) -> GroundTruth {
+        let n = ds.len();
+        let mut rng = Rng::seeded(seed);
+        let ids = rng.sample_distinct(n, samples.min(n));
+        let neighbors = crate::util::parallel_map(ids.len(), |t| {
+            bruteforce::knn_of(ds, ids[t], k, metric)
+        });
+        GroundTruth { ids, neighbors, k }
+    }
+
+    /// Truth for explicit query vectors (search evaluation): neighbors of
+    /// each query within `base`.
+    pub fn for_queries(base: &Dataset, queries: &Dataset, k: usize, metric: Metric) -> GroundTruth {
+        let neighbors = crate::util::parallel_map(queries.len(), |q| {
+            bruteforce::knn_of_vector(base, queries.vector(q), k, metric)
+        });
+        GroundTruth {
+            ids: (0..queries.len()).collect(),
+            neighbors,
+            k,
+        }
+    }
+}
+
+/// Recall@k of graph `g` against `truth` (k = `at` must be <= truth.k).
+pub fn graph_recall(g: &KnnGraph, truth: &GroundTruth, at: usize) -> f64 {
+    assert!(at <= truth.k, "truth has only k={} (requested {at})", truth.k);
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for (t, &i) in truth.ids.iter().enumerate() {
+        let truth_set: std::collections::HashSet<u32> =
+            truth.neighbors[t].iter().take(at).copied().collect();
+        let got = g.ids(i);
+        hit += got.iter().take(at).filter(|id| truth_set.contains(id)).count();
+        total += truth_set.len();
+    }
+    if total == 0 {
+        return 0.0;
+    }
+    hit as f64 / total as f64
+}
+
+/// Recall@k of search result lists (one per query) against `truth`.
+pub fn search_recall(results: &[Vec<u32>], truth: &GroundTruth, at: usize) -> f64 {
+    assert!(at <= truth.k);
+    assert_eq!(results.len(), truth.ids.len());
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for (res, tn) in results.iter().zip(&truth.neighbors) {
+        let truth_set: std::collections::HashSet<u32> = tn.iter().take(at).copied().collect();
+        hit += res.iter().take(at).filter(|id| truth_set.contains(id)).count();
+        total += truth_set.len();
+    }
+    if total == 0 {
+        return 0.0;
+    }
+    hit as f64 / total as f64
+}
+
+/// Degrade a graph to an approximate target recall by replacing a
+/// fraction of each entry's tail with random non-neighbors. Used by the
+/// Fig. 7 experiment (subgraph-quality -> merged-quality correlation).
+pub fn degrade_graph(
+    g: &KnnGraph,
+    ds: &Dataset,
+    metric: Metric,
+    keep_fraction: f64,
+    seed: u64,
+) -> KnnGraph {
+    let n = g.len();
+    let mut out = KnnGraph::empty(n, g.k);
+    let mut rng = Rng::seeded(seed);
+    for i in 0..n {
+        let keep = ((g.lists[i].len() as f64) * keep_fraction).round() as usize;
+        let mut kept: Vec<u32> = g.ids(i).into_iter().take(keep).collect();
+        while kept.len() < g.lists[i].len() {
+            let r = rng.gen_range(n) as u32;
+            if r as usize != i && !kept.contains(&r) {
+                kept.push(r);
+            }
+        }
+        for id in kept {
+            let d = metric.distance(ds.vector(i), ds.vector(id as usize));
+            out.lists[i].insert(id, d, true);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetFamily;
+
+    #[test]
+    fn perfect_graph_has_recall_one() {
+        let ds = DatasetFamily::Deep.generate(200, 1);
+        let truth = GroundTruth::exact(&ds, 5, Metric::L2);
+        let g = bruteforce::build(&ds, 5, Metric::L2);
+        let r = graph_recall(&g, &truth, 5);
+        assert!((r - 1.0).abs() < 1e-12, "recall={r}");
+    }
+
+    #[test]
+    fn empty_graph_has_recall_zero() {
+        let ds = DatasetFamily::Deep.generate(100, 2);
+        let truth = GroundTruth::sampled(&ds, 5, Metric::L2, 20, 3);
+        let g = KnnGraph::empty(100, 5);
+        assert_eq!(graph_recall(&g, &truth, 5), 0.0);
+    }
+
+    #[test]
+    fn sampled_truth_matches_exact_on_overlap() {
+        let ds = DatasetFamily::Sift.generate(150, 3);
+        let exact = GroundTruth::exact(&ds, 4, Metric::L2);
+        let sampled = GroundTruth::sampled(&ds, 4, Metric::L2, 30, 7);
+        for (t, &i) in sampled.ids.iter().enumerate() {
+            assert_eq!(sampled.neighbors[t], exact.neighbors[i], "element {i}");
+        }
+    }
+
+    #[test]
+    fn degrade_hits_target_quality_roughly() {
+        let ds = DatasetFamily::Deep.generate(300, 4);
+        let truth = GroundTruth::exact(&ds, 10, Metric::L2);
+        let g = bruteforce::build(&ds, 10, Metric::L2);
+        let half = degrade_graph(&g, &ds, Metric::L2, 0.5, 5);
+        let r = graph_recall(&half, &truth, 10);
+        assert!(r > 0.4 && r < 0.75, "recall={r} (expected near 0.5+)");
+        half.validate(true).unwrap();
+    }
+
+    #[test]
+    fn search_recall_counts_prefix_hits() {
+        let truth = GroundTruth {
+            ids: vec![0, 1],
+            neighbors: vec![vec![1, 2, 3], vec![4, 5, 6]],
+            k: 3,
+        };
+        let results = vec![vec![1, 2, 9], vec![9, 9, 9]];
+        let r = search_recall(&results, &truth, 3);
+        assert!((r - 2.0 / 6.0).abs() < 1e-12);
+    }
+}

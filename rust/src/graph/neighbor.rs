@@ -1,0 +1,309 @@
+//! Bounded, sorted, flagged neighbor lists — the per-entry structure of
+//! every graph in the crate.
+//!
+//! Each neighbor carries the *new* flag of Alg. 1/2: newly inserted
+//! neighbors are marked `new = true`; once they are sampled into
+//! `new[i]` the flag is cleared so they are never re-sampled (the key
+//! difference from S-Merge / NN-Descent resampling).
+
+/// One directed edge: neighbor id, distance, and the sampling flag.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Neighbor {
+    pub id: u32,
+    pub dist: f32,
+    /// True until this neighbor is sampled into a Local-Join round.
+    pub new: bool,
+}
+
+/// A neighbor list bounded at capacity `cap`, kept sorted ascending by
+/// distance with distinct ids (ties broken by id for determinism).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NeighborList {
+    items: Vec<Neighbor>,
+    cap: usize,
+}
+
+impl NeighborList {
+    pub fn new(cap: usize) -> Self {
+        NeighborList {
+            items: Vec::with_capacity(cap.min(256)),
+            cap,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    #[inline]
+    pub fn iter(&self) -> std::slice::Iter<'_, Neighbor> {
+        self.items.iter()
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[Neighbor] {
+        &self.items
+    }
+
+    /// Distance of the current worst (furthest) neighbor, or `+inf` when
+    /// the list has spare capacity.
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.items.len() < self.cap {
+            f32::INFINITY
+        } else {
+            self.items.last().map(|nb| nb.dist).unwrap_or(f32::INFINITY)
+        }
+    }
+
+    /// Try to insert `(id, dist)`; returns `true` when the list changed.
+    ///
+    /// Rejects duplicates (same id) and candidates no better than the
+    /// current worst when full — the paper's "try insert ... into G[v]".
+    pub fn insert(&mut self, id: u32, dist: f32, new: bool) -> bool {
+        // Binary search by (dist, id) for the insertion point.
+        let pos = self
+            .items
+            .partition_point(|nb| (nb.dist, nb.id) < (dist, id));
+        if pos < self.items.len() && self.items[pos].id == id && self.items[pos].dist == dist {
+            return false;
+        }
+        if pos >= self.cap {
+            return false;
+        }
+        // Duplicate-id scan: the same id can sit elsewhere with a
+        // different distance (common under exact recomputation noise);
+        // keep only the better copy.
+        if let Some(dup) = self.items.iter().position(|nb| nb.id == id) {
+            if dup < pos {
+                return false; // better copy already present
+            }
+            self.items.remove(dup);
+        }
+        self.items.insert(pos, Neighbor { id, dist, new });
+        if self.items.len() > self.cap {
+            self.items.pop();
+        }
+        true
+    }
+
+    /// Append without bound/sort checks (used when constructing from
+    /// already-sorted data). Debug-asserts order is preserved.
+    pub fn push_unchecked(&mut self, nb: Neighbor) {
+        debug_assert!(self
+            .items
+            .last()
+            .map(|last| (last.dist, last.id) <= (nb.dist, nb.id))
+            .unwrap_or(true));
+        self.items.push(nb);
+    }
+
+    /// Take up to `max` ids currently flagged `new`, clearing their flags
+    /// (Alg. 1 lines 13/19). The closest flagged neighbors win.
+    pub fn sample_new(&mut self, max: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(max.min(self.items.len()));
+        for nb in self.items.iter_mut() {
+            if out.len() >= max {
+                break;
+            }
+            if nb.new {
+                nb.new = false;
+                out.push(nb.id);
+            }
+        }
+        out
+    }
+
+    /// Up to `max` ids with `new == false` (Alg. 2's `old[i]`), closest
+    /// first. Does not modify flags.
+    pub fn sample_old(&self, max: usize) -> Vec<u32> {
+        self.items
+            .iter()
+            .filter(|nb| !nb.new)
+            .take(max)
+            .map(|nb| nb.id)
+            .collect()
+    }
+
+    /// The closest `max` neighbor ids regardless of flag.
+    pub fn top_ids(&self, max: usize) -> Vec<u32> {
+        self.items.iter().take(max).map(|nb| nb.id).collect()
+    }
+
+    /// Entry-wise merge keeping the `k` nearest distinct ids — the
+    /// paper's per-entry MergeSort.
+    pub fn merged(a: &NeighborList, b: &NeighborList, k: usize) -> NeighborList {
+        let mut out = NeighborList::new(k);
+        let mut seen = std::collections::HashSet::with_capacity(k * 2);
+        let (mut i, mut j) = (0, 0);
+        while out.items.len() < k && (i < a.items.len() || j < b.items.len()) {
+            let take_a = match (a.items.get(i), b.items.get(j)) {
+                (Some(x), Some(y)) => (x.dist, x.id) <= (y.dist, y.id),
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            let nb = if take_a {
+                i += 1;
+                a.items[i - 1]
+            } else {
+                j += 1;
+                b.items[j - 1]
+            };
+            if seen.insert(nb.id) {
+                out.items.push(nb);
+            }
+        }
+        out
+    }
+
+    /// Count of neighbors currently flagged `new`.
+    pub fn new_count(&self) -> usize {
+        self.items.iter().filter(|nb| nb.new).count()
+    }
+
+    /// Truncate to the `k` nearest (used when deriving lower-k graphs).
+    pub fn truncate(&mut self, k: usize) {
+        self.items.truncate(k);
+        self.cap = self.cap.min(k.max(1));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_property;
+
+    #[test]
+    fn insert_keeps_sorted_and_bounded() {
+        let mut l = NeighborList::new(3);
+        assert!(l.insert(5, 0.5, true));
+        assert!(l.insert(1, 0.1, true));
+        assert!(l.insert(9, 0.9, true));
+        assert!(l.insert(3, 0.3, true)); // evicts 9
+        assert_eq!(l.len(), 3);
+        let ids: Vec<u32> = l.iter().map(|nb| nb.id).collect();
+        assert_eq!(ids, vec![1, 3, 5]);
+        // Too far: rejected.
+        assert!(!l.insert(7, 0.7, true));
+    }
+
+    #[test]
+    fn insert_rejects_duplicates() {
+        let mut l = NeighborList::new(4);
+        assert!(l.insert(2, 0.2, true));
+        assert!(!l.insert(2, 0.2, true));
+        // Same id with a *different* distance keeps the better copy only.
+        assert!(l.insert(2, 0.1, true));
+        assert_eq!(l.len(), 1);
+        assert_eq!(l.as_slice()[0].dist, 0.1);
+        assert!(!l.insert(2, 0.3, false));
+        assert_eq!(l.len(), 1);
+    }
+
+    #[test]
+    fn sample_new_clears_flags_and_prefers_closest() {
+        let mut l = NeighborList::new(8);
+        for (id, d) in [(1u32, 0.1f32), (2, 0.2), (3, 0.3), (4, 0.4)] {
+            l.insert(id, d, true);
+        }
+        let s = l.sample_new(2);
+        assert_eq!(s, vec![1, 2]);
+        assert_eq!(l.new_count(), 2);
+        assert_eq!(l.sample_old(10), vec![1, 2]);
+        let s2 = l.sample_new(10);
+        assert_eq!(s2, vec![3, 4]);
+        assert_eq!(l.new_count(), 0);
+    }
+
+    #[test]
+    fn merged_dedups_and_orders() {
+        let mut a = NeighborList::new(4);
+        let mut b = NeighborList::new(4);
+        a.insert(1, 0.1, false);
+        a.insert(2, 0.4, false);
+        b.insert(1, 0.1, true);
+        b.insert(3, 0.2, true);
+        let m = NeighborList::merged(&a, &b, 3);
+        let ids: Vec<u32> = m.iter().map(|nb| nb.id).collect();
+        assert_eq!(ids, vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn property_insert_invariants() {
+        check_property("neighborlist-invariants", 300, |rng| {
+            let cap = 1 + rng.gen_range(20);
+            let mut l = NeighborList::new(cap);
+            let mut reference: std::collections::HashMap<u32, f32> =
+                std::collections::HashMap::new();
+            for _ in 0..200 {
+                let id = rng.gen_range(30) as u32;
+                let dist = (rng.gen_range(1000) as f32) / 100.0;
+                l.insert(id, dist, rng.gen_f32() < 0.5);
+                let e = reference.entry(id).or_insert(f32::INFINITY);
+                if dist < *e {
+                    *e = dist;
+                }
+            }
+            // sorted, distinct, bounded
+            assert!(l.len() <= cap);
+            let mut prev = (f32::NEG_INFINITY, 0u32);
+            let mut seen = std::collections::HashSet::new();
+            for nb in l.iter() {
+                assert!((nb.dist, nb.id) >= prev);
+                prev = (nb.dist, nb.id);
+                assert!(seen.insert(nb.id));
+            }
+            // The k best distinct (id -> min dist) candidates must be a
+            // superset-match: every kept item's dist >= the true best for
+            // that id is impossible to violate by construction, but also
+            // check the list's worst is <= any excluded candidate would be
+            // only when list is full — skip; main invariants above.
+        });
+    }
+
+    #[test]
+    fn property_merged_equals_naive() {
+        check_property("merged-naive", 301, |rng| {
+            let k = 1 + rng.gen_range(10);
+            let mk = |rng: &mut crate::util::Rng| {
+                let mut l = NeighborList::new(k);
+                for _ in 0..k * 2 {
+                    l.insert(
+                        rng.gen_range(40) as u32,
+                        (rng.gen_range(100) as f32) / 10.0,
+                        false,
+                    );
+                }
+                l
+            };
+            let a = mk(rng);
+            let b = mk(rng);
+            let m = NeighborList::merged(&a, &b, k);
+            // Naive: pool, sort, dedup by first occurrence, take k.
+            let mut pool: Vec<Neighbor> =
+                a.iter().chain(b.iter()).cloned().collect();
+            pool.sort_by(|x, y| (x.dist, x.id).partial_cmp(&(y.dist, y.id)).unwrap());
+            let mut seen = std::collections::HashSet::new();
+            let naive: Vec<u32> = pool
+                .iter()
+                .filter(|nb| seen.insert(nb.id))
+                .take(k)
+                .map(|nb| nb.id)
+                .collect();
+            let got: Vec<u32> = m.iter().map(|nb| nb.id).collect();
+            assert_eq!(got, naive);
+        });
+    }
+}

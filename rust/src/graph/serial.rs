@@ -1,0 +1,146 @@
+//! Compact binary (de)serialization for graphs and the supporting-graph
+//! payloads exchanged by the distributed procedure (Alg. 3).
+//!
+//! Wire format (little-endian):
+//! ```text
+//! graph   := magic:u32  k:u32  n:u64  entry*n
+//! entry   := len:u16  (id:u32 dist:f32 flags:u8)*len
+//! ```
+//! The same bytes are written to external storage by the out-of-core
+//! mode, so payload sizes measured by the network model match what a
+//! real deployment would ship over MPI.
+
+use super::{KnnGraph, Neighbor, NeighborList};
+use anyhow::{bail, Result};
+
+const GRAPH_MAGIC: u32 = 0x4B_4E_47_31; // "KNG1"
+
+/// Serialize a graph to bytes.
+pub fn graph_to_bytes(g: &KnnGraph) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + g.edge_count() * 9);
+    out.extend_from_slice(&GRAPH_MAGIC.to_le_bytes());
+    out.extend_from_slice(&(g.k as u32).to_le_bytes());
+    out.extend_from_slice(&(g.len() as u64).to_le_bytes());
+    for list in &g.lists {
+        assert!(list.len() <= u16::MAX as usize);
+        out.extend_from_slice(&(list.len() as u16).to_le_bytes());
+        for nb in list.iter() {
+            out.extend_from_slice(&nb.id.to_le_bytes());
+            out.extend_from_slice(&nb.dist.to_le_bytes());
+            out.push(u8::from(nb.new));
+        }
+    }
+    out
+}
+
+/// Exact byte size [`graph_to_bytes`] would produce, without building it.
+pub fn graph_payload_bytes(g: &KnnGraph) -> u64 {
+    16 + g.lists.len() as u64 * 2 + g.edge_count() as u64 * 9
+}
+
+/// Deserialize a graph from bytes.
+pub fn graph_from_bytes(bytes: &[u8]) -> Result<KnnGraph> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > bytes.len() {
+            bail!("truncated graph payload at byte {}", *pos);
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let magic = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    if magic != GRAPH_MAGIC {
+        bail!("bad graph magic {magic:#x}");
+    }
+    let k = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let n = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+    let mut lists = Vec::with_capacity(n);
+    for _ in 0..n {
+        let len = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+        let mut list = NeighborList::new(k);
+        for _ in 0..len {
+            let id = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+            let dist = f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+            let flags = take(&mut pos, 1)?[0];
+            list.push_unchecked(Neighbor {
+                id,
+                dist,
+                new: flags != 0,
+            });
+        }
+        lists.push(list);
+    }
+    if pos != bytes.len() {
+        bail!("trailing bytes in graph payload");
+    }
+    Ok(KnnGraph { lists, k })
+}
+
+/// Write a graph to a file.
+pub fn write_graph(path: &std::path::Path, g: &KnnGraph) -> Result<()> {
+    std::fs::write(path, graph_to_bytes(g))?;
+    Ok(())
+}
+
+/// Read a graph from a file.
+pub fn read_graph(path: &std::path::Path) -> Result<KnnGraph> {
+    graph_from_bytes(&std::fs::read(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_property;
+
+    fn random_graph(rng: &mut crate::util::Rng) -> KnnGraph {
+        let n = 1 + rng.gen_range(30);
+        let k = 1 + rng.gen_range(10);
+        let mut g = KnnGraph::empty(n, k);
+        for i in 0..n {
+            for _ in 0..rng.gen_range(k + 1) {
+                g.lists[i].insert(
+                    rng.gen_range(n) as u32,
+                    (rng.gen_range(1000) as f32) / 100.0,
+                    rng.gen_f32() < 0.5,
+                );
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        check_property("graph-serial-roundtrip", 400, |rng| {
+            let g = random_graph(rng);
+            let bytes = graph_to_bytes(&g);
+            assert_eq!(bytes.len() as u64, graph_payload_bytes(&g));
+            let back = graph_from_bytes(&bytes).unwrap();
+            assert_eq!(back, g);
+        });
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(graph_from_bytes(b"nope").is_err());
+        assert!(graph_from_bytes(&[]).is_err());
+        let g = KnnGraph::empty(2, 2);
+        let mut bytes = graph_to_bytes(&g);
+        bytes.push(0); // trailing byte
+        assert!(graph_from_bytes(&bytes).is_err());
+        let g2 = graph_to_bytes(&g);
+        assert!(graph_from_bytes(&g2[..g2.len() - 1]).is_err()); // truncated
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("knnmerge-gser-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = crate::util::Rng::seeded(1);
+        let g = random_graph(&mut rng);
+        let path = dir.join("g.bin");
+        write_graph(&path, &g).unwrap();
+        let back = read_graph(&path).unwrap();
+        assert_eq!(back, g);
+    }
+}

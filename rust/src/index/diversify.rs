@@ -1,0 +1,222 @@
+//! Neighborhood diversification — the paper's Eq. (1).
+//!
+//! Given neighbors `x_a`, `x_b` of `x_i` (with `metric(x_i, x_a) <
+//! metric(x_i, x_b)`), `x_b` is *occluded* and removed when
+//! `alpha * metric(x_a, x_b) < metric(x_i, x_b)`. With `alpha = 1` this
+//! is HNSW's "heuristic" selection; Vamana uses `alpha > 1` (typically
+//! 1.2) to retain long-range edges. After merging two indexing graphs
+//! the merged neighborhoods may violate the rule, so the same
+//! diversification is applied as post-processing (Sec. III-B).
+
+use super::IndexGraph;
+use crate::dataset::Dataset;
+use crate::distance::Metric;
+use crate::graph::KnnGraph;
+
+/// Apply Eq. (1) to a candidate list (ids sorted ascending by distance
+/// to `i`). Returns the retained ids, at most `max_degree`.
+pub fn robust_prune(
+    ds: &Dataset,
+    metric: Metric,
+    i: usize,
+    candidates: &[(u32, f32)],
+    alpha: f32,
+    max_degree: usize,
+) -> Vec<u32> {
+    robust_prune_opt(ds, metric, i, candidates, alpha, max_degree, false)
+}
+
+/// [`robust_prune`] with HNSW's `keepPrunedConnections` extension
+/// (Alg. 4 of the HNSW paper): after occlusion pruning, the closest
+/// *discarded* candidates pad the list back up to `max_degree`. Vamana
+/// does not pad (its `alpha > 1` keeps long edges instead).
+pub fn robust_prune_opt(
+    ds: &Dataset,
+    metric: Metric,
+    i: usize,
+    candidates: &[(u32, f32)],
+    alpha: f32,
+    max_degree: usize,
+    keep_pruned: bool,
+) -> Vec<u32> {
+    debug_assert!(candidates.windows(2).all(|w| w[0].1 <= w[1].1));
+    let mut kept: Vec<(u32, f32)> = Vec::with_capacity(max_degree);
+    let mut discarded: Vec<u32> = Vec::new();
+    let mut seen = std::collections::HashSet::with_capacity(candidates.len());
+    for &(b, d_ib) in candidates {
+        if b as usize == i || !seen.insert(b) {
+            continue;
+        }
+        if kept.len() >= max_degree {
+            break;
+        }
+        // Occlusion check against every already-kept (closer) neighbor.
+        let occluded = kept.iter().any(|&(a, _)| {
+            let d_ab = metric.distance(ds.vector(a as usize), ds.vector(b as usize));
+            alpha * d_ab < d_ib
+        });
+        if !occluded {
+            kept.push((b, d_ib));
+        } else if keep_pruned {
+            discarded.push(b);
+        }
+    }
+    let mut out: Vec<u32> = kept.into_iter().map(|(id, _)| id).collect();
+    if keep_pruned {
+        for b in discarded {
+            if out.len() >= max_degree {
+                break;
+            }
+            out.push(b);
+        }
+    }
+    out
+}
+
+/// Diversify every neighborhood of a k-NN graph into an index graph
+/// (the "derive graph index from a pre-built k-NN graph" pipeline).
+pub fn diversify_knn(
+    ds: &Dataset,
+    metric: Metric,
+    g: &KnnGraph,
+    alpha: f32,
+    max_degree: usize,
+) -> IndexGraph {
+    let adj = crate::util::parallel_map(g.len(), |i| {
+        let cands: Vec<(u32, f32)> = g.lists[i].iter().map(|nb| (nb.id, nb.dist)).collect();
+        robust_prune(ds, metric, i, &cands, alpha, max_degree)
+    });
+    IndexGraph {
+        adj,
+        max_degree,
+        entry: medoid(ds, metric),
+    }
+}
+
+/// Re-diversify an index graph in place (post-merge step): each
+/// neighborhood's candidates are re-scored and re-pruned. Pass
+/// `keep_pruned = true` when the source indexes are HNSW-style (their
+/// construction pads with pruned candidates; Sec. III-B applies "the
+/// same diversification scheme as the original method").
+pub fn rediversify_opt(
+    ds: &Dataset,
+    metric: Metric,
+    g: &IndexGraph,
+    alpha: f32,
+    max_degree: usize,
+    keep_pruned: bool,
+) -> IndexGraph {
+    let adj = crate::util::parallel_map(g.len(), |i| {
+        let mut cands: Vec<(u32, f32)> = g.adj[i]
+            .iter()
+            .map(|&v| (v, metric.distance(ds.vector(i), ds.vector(v as usize))))
+            .collect();
+        cands.sort_by(|a, b| (a.1, a.0).partial_cmp(&(b.1, b.0)).unwrap());
+        cands.dedup_by_key(|c| c.0);
+        robust_prune_opt(ds, metric, i, &cands, alpha, max_degree, keep_pruned)
+    });
+    IndexGraph {
+        adj,
+        max_degree,
+        entry: g.entry,
+    }
+}
+
+/// [`rediversify_opt`] without pruned-candidate padding (Vamana-style).
+pub fn rediversify(
+    ds: &Dataset,
+    metric: Metric,
+    g: &IndexGraph,
+    alpha: f32,
+    max_degree: usize,
+) -> IndexGraph {
+    rediversify_opt(ds, metric, g, alpha, max_degree, false)
+}
+
+/// Approximate medoid: the element closest to the dataset mean — the
+/// natural entry point for Vamana-style graphs.
+pub fn medoid(ds: &Dataset, metric: Metric) -> u32 {
+    let d = ds.dim;
+    let n = ds.len();
+    if n == 0 {
+        return 0;
+    }
+    let mut mean = vec![0.0f32; d];
+    for i in 0..n {
+        for (m, &v) in mean.iter_mut().zip(ds.vector(i)) {
+            *m += v;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f32;
+    }
+    let mut best = (0u32, f32::INFINITY);
+    for i in 0..n {
+        let dist = metric.distance(&mean, ds.vector(i));
+        if dist < best.1 {
+            best = (i as u32, dist);
+        }
+    }
+    best.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::construction::bruteforce;
+    use crate::dataset::DatasetFamily;
+
+    #[test]
+    fn prune_removes_occluded_neighbor() {
+        // Collinear points: 0 at origin, 1 at x=1, 2 at x=2.
+        // For i=0: neighbor 1 (d=1) occludes 2 (d=4) since
+        // alpha * d(1,2)=1 < d(0,2)=4.
+        let ds = Dataset::from_raw(vec![0.0, 1.0, 2.0], 1);
+        let cands = vec![(1u32, 1.0f32), (2u32, 4.0f32)];
+        let kept = robust_prune(&ds, Metric::L2, 0, &cands, 1.0, 8);
+        assert_eq!(kept, vec![1]);
+        // Larger alpha retains the long edge.
+        let kept_relaxed = robust_prune(&ds, Metric::L2, 0, &cands, 5.0, 8);
+        assert_eq!(kept_relaxed, vec![1, 2]);
+    }
+
+    #[test]
+    fn prune_respects_degree_bound_and_self() {
+        let ds = Dataset::from_raw(vec![0.0, 10.0, 20.0, 30.0], 1);
+        let cands = vec![(0u32, 0.0f32), (1, 100.0), (2, 400.0), (3, 900.0)];
+        let kept = robust_prune(&ds, Metric::L2, 0, &cands, 10.0, 2);
+        assert!(!kept.contains(&0));
+        assert!(kept.len() <= 2);
+    }
+
+    #[test]
+    fn diversified_graph_has_fewer_edges_but_reachable() {
+        let ds = DatasetFamily::Deep.generate(300, 1);
+        let knn = bruteforce::build(&ds, 16, Metric::L2);
+        let ig = diversify_knn(&ds, Metric::L2, &knn, 1.0, 16);
+        ig.validate().unwrap();
+        assert!(
+            ig.edge_count() < knn.edge_count(),
+            "diversification should remove edges"
+        );
+        // Every vertex keeps its nearest neighbor (never occluded).
+        for i in 0..ds.len() {
+            assert_eq!(ig.adj[i].first(), Some(&knn.ids(i)[0]), "vertex {i}");
+        }
+    }
+
+    #[test]
+    fn medoid_is_central_on_line() {
+        let ds = Dataset::from_raw(vec![0.0, 1.0, 2.0, 3.0, 4.0], 1);
+        assert_eq!(medoid(&ds, Metric::L2), 2);
+    }
+
+    #[test]
+    fn rediversify_is_idempotent_on_diversified() {
+        let ds = DatasetFamily::Sift.generate(150, 2);
+        let knn = bruteforce::build(&ds, 12, Metric::L2);
+        let ig = diversify_knn(&ds, Metric::L2, &knn, 1.0, 12);
+        let again = rediversify(&ds, Metric::L2, &ig, 1.0, 12);
+        assert_eq!(ig.adj, again.adj);
+    }
+}

@@ -1,0 +1,281 @@
+//! HNSW (Malkov & Yashunin, TPAMI'20) — incremental indexing-graph
+//! construction with on-the-fly diversification (the paper's second
+//! index-construction category, Sec. II-B).
+//!
+//! Faithful to the reference hnswlib structure: exponentially
+//! distributed levels, greedy descent through upper layers, beam search
+//! + heuristic (Eq. 1, alpha = 1) neighbor selection at insertion, base
+//! layer degree `2M`, upper layers `M`.
+
+use super::diversify::robust_prune_opt;
+use super::search::beam_search_from;
+use super::IndexGraph;
+use crate::dataset::Dataset;
+use crate::distance::Metric;
+use crate::graph::{KnnGraph, Neighbor, NeighborList};
+use crate::util::Rng;
+
+/// HNSW parameters (paper Sec. V-D uses M=32, EF=512).
+#[derive(Clone, Copy, Debug)]
+pub struct HnswParams {
+    /// Degree parameter `M`: upper layers keep `M` edges, base `2M`.
+    pub m: usize,
+    /// Construction beam width `efConstruction`.
+    pub ef_construction: usize,
+    /// PRNG seed for level assignment.
+    pub seed: u64,
+}
+
+impl Default for HnswParams {
+    fn default() -> Self {
+        HnswParams {
+            m: 16,
+            ef_construction: 128,
+            seed: 0x4E53,
+        }
+    }
+}
+
+/// A built HNSW index.
+#[derive(Clone, Debug)]
+pub struct Hnsw {
+    /// `layers[l].adj[i]` — neighbors of `i` at layer `l` (empty Vec for
+    /// vertices that do not reach layer `l`).
+    pub layers: Vec<Vec<Vec<u32>>>,
+    /// Level of each vertex.
+    pub levels: Vec<usize>,
+    /// Entry point (vertex with the highest level).
+    pub entry: u32,
+    pub params: HnswParams,
+}
+
+impl Hnsw {
+    /// Build over a dataset (sequential insertion, deterministic).
+    pub fn build(ds: &Dataset, metric: Metric, params: HnswParams) -> Hnsw {
+        let n = ds.len();
+        assert!(n > 0);
+        let m = params.m;
+        let max_base = 2 * m;
+        let ml = 1.0 / (m as f64).ln().max(1e-9);
+        let mut rng = Rng::seeded(params.seed);
+        let levels: Vec<usize> = (0..n)
+            .map(|_| {
+                let u = rng.gen_f64().max(1e-12);
+                ((-u.ln() * ml) as usize).min(31)
+            })
+            .collect();
+        let max_level = levels.iter().copied().max().unwrap_or(0);
+        let mut layers: Vec<Vec<Vec<u32>>> =
+            (0..=max_level).map(|_| vec![Vec::new(); n]).collect();
+        let mut entry = 0u32;
+        let mut entry_level = levels[0];
+
+        for i in 1..n {
+            let q = ds.vector(i);
+            let l_i = levels[i];
+            let mut ep = entry;
+            // Greedy descent through layers above l_i.
+            let top = entry_level;
+            for l in ((l_i + 1)..=top).rev() {
+                ep = greedy_step(ds, metric, &layers[l], ep, q);
+            }
+            // Insert at layers min(top, l_i)..0.
+            for l in (0..=l_i.min(top)).rev() {
+                let cap = if l == 0 { max_base } else { m };
+                let ig = IndexGraph {
+                    adj: layers[l].clone(),
+                    max_degree: cap,
+                    entry: ep,
+                };
+                let (cands, _) = beam_search_from(
+                    ds,
+                    metric,
+                    &ig,
+                    ep,
+                    q,
+                    params.ef_construction,
+                    params.ef_construction,
+                );
+                let scored: Vec<(u32, f32)> = cands
+                    .iter()
+                    .map(|&c| (c, metric.distance(q, ds.vector(c as usize))))
+                    .collect();
+                let selected = robust_prune_opt(ds, metric, i, &scored, 1.0, cap, true);
+                if let Some(&best) = selected.first() {
+                    ep = best;
+                }
+                layers[l][i] = selected.clone();
+                // Back edges with overflow pruning.
+                for &v in &selected {
+                    let nbrs = &mut layers[l][v as usize];
+                    nbrs.push(i as u32);
+                    if nbrs.len() > cap {
+                        let mut scored: Vec<(u32, f32)> = nbrs
+                            .iter()
+                            .map(|&w| {
+                                (
+                                    w,
+                                    metric.distance(
+                                        ds.vector(v as usize),
+                                        ds.vector(w as usize),
+                                    ),
+                                )
+                            })
+                            .collect();
+                        scored.sort_by(|a, b| {
+                            (a.1, a.0).partial_cmp(&(b.1, b.0)).unwrap()
+                        });
+                        *(&mut layers[l][v as usize]) =
+                            robust_prune_opt(ds, metric, v as usize, &scored, 1.0, cap, true);
+                    }
+                }
+            }
+            if l_i > entry_level {
+                entry = i as u32;
+                entry_level = l_i;
+            }
+        }
+        Hnsw {
+            layers,
+            levels,
+            entry,
+            params,
+        }
+    }
+
+    /// NN search: greedy descent then beam at the base layer.
+    pub fn search(
+        &self,
+        ds: &Dataset,
+        metric: Metric,
+        query: &[f32],
+        topk: usize,
+        ef: usize,
+    ) -> Vec<u32> {
+        let mut ep = self.entry;
+        for l in (1..self.layers.len()).rev() {
+            ep = greedy_step(ds, metric, &self.layers[l], ep, query);
+        }
+        let base = self.base_index();
+        beam_search_from(ds, metric, &base, ep, query, topk, ef).0
+    }
+
+    /// The base layer as a flat [`IndexGraph`] (what gets merged).
+    pub fn base_index(&self) -> IndexGraph {
+        IndexGraph {
+            adj: self.layers[0].clone(),
+            max_degree: 2 * self.params.m,
+            entry: self.entry,
+        }
+    }
+
+    /// Base layer as a [`KnnGraph`] with computed distances — the input
+    /// format the merge algorithms consume (paper Sec. V-D: `k` is set
+    /// to the max neighborhood size, 2M).
+    pub fn to_knn_graph(&self, ds: &Dataset, metric: Metric) -> KnnGraph {
+        let k = 2 * self.params.m;
+        let lists = crate::util::parallel_map(self.layers[0].len(), |i| {
+            let mut scored: Vec<Neighbor> = self.layers[0][i]
+                .iter()
+                .map(|&v| Neighbor {
+                    id: v,
+                    dist: metric.distance(ds.vector(i), ds.vector(v as usize)),
+                    new: true,
+                })
+                .collect();
+            scored.sort_by(|a, b| (a.dist, a.id).partial_cmp(&(b.dist, b.id)).unwrap());
+            let mut list = NeighborList::new(k);
+            for nb in scored {
+                list.push_unchecked(nb);
+            }
+            list
+        });
+        KnnGraph { lists, k }
+    }
+}
+
+/// One greedy hill-climbing pass at a single layer.
+fn greedy_step(
+    ds: &Dataset,
+    metric: Metric,
+    layer: &[Vec<u32>],
+    mut cur: u32,
+    q: &[f32],
+) -> u32 {
+    let mut cur_d = metric.distance(q, ds.vector(cur as usize));
+    loop {
+        let mut improved = false;
+        for &v in &layer[cur as usize] {
+            let d = metric.distance(q, ds.vector(v as usize));
+            if d < cur_d {
+                cur = v;
+                cur_d = d;
+                improved = true;
+            }
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetFamily;
+    use crate::eval::recall::{search_recall, GroundTruth};
+
+    #[test]
+    fn search_reaches_high_recall() {
+        let ds = DatasetFamily::Deep.generate(600, 1);
+        let hnsw = Hnsw::build(&ds, Metric::L2, HnswParams::default());
+        let queries = DatasetFamily::Deep.generate_queries(25, 1);
+        let truth = GroundTruth::for_queries(&ds, &queries, 10, Metric::L2);
+        let results: Vec<Vec<u32>> = (0..queries.len())
+            .map(|i| hnsw.search(&ds, Metric::L2, queries.vector(i), 10, 128))
+            .collect();
+        let r = search_recall(&results, &truth, 10);
+        assert!(r > 0.9, "hnsw recall={r}");
+    }
+
+    #[test]
+    fn base_layer_is_valid_and_bounded() {
+        let ds = DatasetFamily::Sift.generate(300, 2);
+        let hnsw = Hnsw::build(&ds, Metric::L2, HnswParams::default());
+        let base = hnsw.base_index();
+        base.validate().unwrap();
+        assert_eq!(base.max_degree, 2 * hnsw.params.m);
+    }
+
+    #[test]
+    fn to_knn_graph_preserves_edges_with_distances() {
+        let ds = DatasetFamily::Deep.generate(200, 3);
+        let hnsw = Hnsw::build(&ds, Metric::L2, HnswParams::default());
+        let g = hnsw.to_knn_graph(&ds, Metric::L2);
+        g.validate(true).unwrap();
+        for i in 0..g.len() {
+            let mut base_ids = hnsw.layers[0][i].clone();
+            base_ids.sort_unstable();
+            let mut knn_ids = g.ids(i);
+            knn_ids.sort_unstable();
+            assert_eq!(base_ids, knn_ids, "vertex {i}");
+        }
+    }
+
+    #[test]
+    fn entry_has_max_level() {
+        let ds = DatasetFamily::Sift.generate(250, 4);
+        let hnsw = Hnsw::build(&ds, Metric::L2, HnswParams::default());
+        let max = hnsw.levels.iter().copied().max().unwrap();
+        assert_eq!(hnsw.levels[hnsw.entry as usize], max);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = DatasetFamily::Deep.generate(150, 5);
+        let a = Hnsw::build(&ds, Metric::L2, HnswParams::default());
+        let b = Hnsw::build(&ds, Metric::L2, HnswParams::default());
+        assert_eq!(a.layers, b.layers);
+        assert_eq!(a.entry, b.entry);
+    }
+}

@@ -1,0 +1,118 @@
+//! Indexing graphs (RNG derivatives of k-NN graphs) and graph-based NN
+//! search — the substrate for the paper's Sec. V-D experiments.
+//!
+//! - [`hnsw`] — Hierarchical Navigable Small World graphs (Malkov &
+//!   Yashunin).
+//! - [`vamana`] — the DiskANN construction (Subramanya et al.).
+//! - [`diversify`] — the Eq. (1) edge-occlusion rule, used both inside
+//!   the builders and as the post-merge diversification step
+//!   (Sec. III-B).
+//! - [`search`] — best-first beam search over any directed graph, the
+//!   QPS/recall measurement harness.
+
+pub mod diversify;
+pub mod hnsw;
+pub mod search;
+pub mod vamana;
+
+pub use hnsw::{Hnsw, HnswParams};
+pub use search::{beam_search, SearchStats};
+pub use vamana::{Vamana, VamanaParams};
+
+use crate::graph::KnnGraph;
+
+/// A flat indexing graph: fixed-capacity adjacency lists plus an entry
+/// point. Both HNSW (its base layer) and Vamana reduce to this for
+/// search and for merging.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IndexGraph {
+    /// Adjacency: `adj[i]` = neighbor ids of `i` (unsorted by contract,
+    /// though builders generally keep them distance-sorted).
+    pub adj: Vec<Vec<u32>>,
+    /// Maximum out-degree.
+    pub max_degree: usize,
+    /// Search entry point.
+    pub entry: u32,
+}
+
+impl IndexGraph {
+    pub fn len(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.adj.is_empty()
+    }
+
+    /// Convert a k-NN graph (with distances) into an index graph,
+    /// entry = element 0 by default (callers can set a medoid).
+    pub fn from_knn(g: &KnnGraph) -> IndexGraph {
+        IndexGraph {
+            adj: (0..g.len()).map(|i| g.ids(i)).collect(),
+            max_degree: g.k,
+            entry: 0,
+        }
+    }
+
+    /// Total directed edges.
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum()
+    }
+
+    /// Structural validation: ids in range, no self loops, degree bound.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.adj.len() as u32;
+        if self.entry >= n && n > 0 {
+            return Err("entry point out of range".into());
+        }
+        for (i, nbrs) in self.adj.iter().enumerate() {
+            if nbrs.len() > self.max_degree {
+                return Err(format!("vertex {i} exceeds max degree"));
+            }
+            for &v in nbrs {
+                if v >= n {
+                    return Err(format!("vertex {i} has out-of-range edge {v}"));
+                }
+                if v as usize == i {
+                    return Err(format!("vertex {i} has self loop"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_knn_copies_adjacency() {
+        let mut g = KnnGraph::empty(3, 2);
+        g.lists[0].insert(1, 0.5, true);
+        g.lists[0].insert(2, 0.2, true);
+        g.lists[1].insert(0, 0.5, true);
+        let ig = IndexGraph::from_knn(&g);
+        assert_eq!(ig.adj[0], vec![2, 1]);
+        assert_eq!(ig.adj[1], vec![0]);
+        assert!(ig.adj[2].is_empty());
+        ig.validate().unwrap();
+        assert_eq!(ig.edge_count(), 3);
+    }
+
+    #[test]
+    fn validate_rejects_bad_graphs() {
+        let g = IndexGraph {
+            adj: vec![vec![0]],
+            max_degree: 4,
+            entry: 0,
+        };
+        assert!(g.validate().is_err()); // self loop
+        let g2 = IndexGraph {
+            adj: vec![vec![7]],
+            max_degree: 4,
+            entry: 0,
+        };
+        assert!(g2.validate().is_err()); // out of range
+    }
+}

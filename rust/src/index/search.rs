@@ -1,0 +1,241 @@
+//! Best-first beam search over an [`IndexGraph`] — the NN search
+//! procedure shared by HNSW (per layer), Vamana (construction and
+//! query), and the QPS/recall evaluation harness (paper Figs. 10/11,
+//! 15/16).
+
+use super::IndexGraph;
+use crate::dataset::Dataset;
+use crate::distance::Metric;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Max-heap entry (peek = worst kept candidate).
+#[derive(PartialEq)]
+struct Far(f32, u32);
+impl Eq for Far {}
+impl PartialOrd for Far {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Far {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (self.0, self.1)
+            .partial_cmp(&(other.0, other.1))
+            .unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Min-heap entry via reversed ordering (peek = best frontier node).
+#[derive(PartialEq)]
+struct Near(f32, u32);
+impl Eq for Near {}
+impl PartialOrd for Near {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Near {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (other.0, other.1)
+            .partial_cmp(&(self.0, self.1))
+            .unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Search effort/result statistics (distance computations ≙ the
+/// machine-independent cost measure; hops = expanded vertices).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SearchStats {
+    pub dist_evals: usize,
+    pub hops: usize,
+}
+
+/// Best-first beam search: returns up to `topk` ids (ascending
+/// distance) found with beam width `ef`, plus stats.
+pub fn beam_search(
+    ds: &Dataset,
+    metric: Metric,
+    graph: &IndexGraph,
+    query: &[f32],
+    topk: usize,
+    ef: usize,
+) -> (Vec<u32>, SearchStats) {
+    beam_search_from(ds, metric, graph, graph.entry, query, topk, ef)
+}
+
+/// [`beam_search`] from an explicit entry vertex.
+pub fn beam_search_from(
+    ds: &Dataset,
+    metric: Metric,
+    graph: &IndexGraph,
+    entry: u32,
+    query: &[f32],
+    topk: usize,
+    ef: usize,
+) -> (Vec<u32>, SearchStats) {
+    let n = graph.len();
+    let mut stats = SearchStats::default();
+    if n == 0 {
+        return (Vec::new(), stats);
+    }
+    let ef = ef.max(topk).max(1);
+    let mut visited = vec![false; n];
+    let mut frontier = BinaryHeap::new(); // min-heap by distance
+    let mut kept: BinaryHeap<Far> = BinaryHeap::new(); // max-heap, size <= ef
+
+    let d0 = metric.distance(query, ds.vector(entry as usize));
+    stats.dist_evals += 1;
+    visited[entry as usize] = true;
+    frontier.push(Near(d0, entry));
+    kept.push(Far(d0, entry));
+
+    while let Some(Near(d, u)) = frontier.pop() {
+        // Stop when the closest frontier node is worse than the worst
+        // kept candidate and the beam is full.
+        if kept.len() >= ef && d > kept.peek().unwrap().0 {
+            break;
+        }
+        stats.hops += 1;
+        for &v in &graph.adj[u as usize] {
+            let vi = v as usize;
+            if visited[vi] {
+                continue;
+            }
+            visited[vi] = true;
+            let dv = metric.distance(query, ds.vector(vi));
+            stats.dist_evals += 1;
+            if kept.len() < ef {
+                kept.push(Far(dv, v));
+                frontier.push(Near(dv, v));
+            } else if dv < kept.peek().unwrap().0 {
+                kept.pop();
+                kept.push(Far(dv, v));
+                frontier.push(Near(dv, v));
+            }
+        }
+    }
+    let mut results: Vec<(f32, u32)> = kept.into_iter().map(|Far(d, id)| (d, id)).collect();
+    results.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+    results.truncate(topk);
+    (results.into_iter().map(|(_, id)| id).collect(), stats)
+}
+
+/// Run a query batch, returning result lists and the measured QPS
+/// (single-threaded, like the paper's NN search protocol).
+pub fn run_queries(
+    ds: &Dataset,
+    metric: Metric,
+    graph: &IndexGraph,
+    queries: &Dataset,
+    topk: usize,
+    ef: usize,
+) -> (Vec<Vec<u32>>, f64, SearchStats) {
+    let start = std::time::Instant::now();
+    let mut results = Vec::with_capacity(queries.len());
+    let mut total = SearchStats::default();
+    for q in 0..queries.len() {
+        let (ids, stats) = beam_search(ds, metric, graph, queries.vector(q), topk, ef);
+        total.dist_evals += stats.dist_evals;
+        total.hops += stats.hops;
+        results.push(ids);
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let qps = queries.len() as f64 / secs.max(1e-9);
+    (results, qps, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::construction::bruteforce;
+    use crate::eval::recall::{search_recall, GroundTruth};
+    use crate::index::diversify::diversify_knn;
+
+    fn index_fixture(n: usize) -> (Dataset, IndexGraph) {
+        // Single-cluster data: a plain k-NN graph over *multi*-cluster
+        // data is disconnected (each cluster holds > k members), which
+        // is exactly why index builders like HNSW/Vamana exist; here we
+        // test the search loop itself, so keep the graph connected.
+        let ds = crate::dataset::GeneratorConfig {
+            n,
+            dim: 32,
+            clusters: 1,
+            intrinsic_dim: 12,
+            noise_sigma: 0.05,
+            normalize: false,
+            nonnegative: false,
+            center_scale: 0.6,
+        }
+        .generate(1);
+        let knn = bruteforce::build(&ds, 16, Metric::L2);
+        let ig = diversify_knn(&ds, Metric::L2, &knn, 1.2, 16);
+        (ds, ig)
+    }
+
+    fn queries_like(ds: &Dataset, n: usize, seed: u64) -> Dataset {
+        // Perturbed base vectors: same distribution, not identical.
+        let mut rng = crate::util::Rng::seeded(seed);
+        let mut out = Dataset { data: Vec::new(), dim: ds.dim };
+        for q in 0..n {
+            let base = ds.vector((q * 7) % ds.len());
+            let v: Vec<f32> = base.iter().map(|x| x + rng.gen_normal() * 0.05).collect();
+            out.push(&v);
+        }
+        out
+    }
+
+    #[test]
+    fn finds_exact_nn_with_wide_beam() {
+        let (ds, ig) = index_fixture(400);
+        let queries = queries_like(&ds, 20, 1);
+        let truth = GroundTruth::for_queries(&ds, &queries, 10, Metric::L2);
+        let (results, qps, stats) =
+            run_queries(&ds, Metric::L2, &ig, &queries, 10, 128);
+        let r = search_recall(&results, &truth, 10);
+        assert!(r > 0.95, "recall={r}");
+        assert!(qps > 0.0);
+        assert!(stats.dist_evals > 0 && stats.hops > 0);
+    }
+
+    #[test]
+    fn results_sorted_by_distance() {
+        let (ds, ig) = index_fixture(200);
+        let q = ds.vector(3).to_vec();
+        let (ids, _) = beam_search(&ds, Metric::L2, &ig, &q, 8, 64);
+        let dists: Vec<f32> = ids
+            .iter()
+            .map(|&id| Metric::L2.distance(&q, ds.vector(id as usize)))
+            .collect();
+        for w in dists.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert_eq!(ids[0], 3, "identical point should be first");
+    }
+
+    #[test]
+    fn larger_ef_never_hurts_recall() {
+        let (ds, ig) = index_fixture(500);
+        let queries = queries_like(&ds, 15, 2);
+        let truth = GroundTruth::for_queries(&ds, &queries, 10, Metric::L2);
+        let (r_small, _, s_small) = run_queries(&ds, Metric::L2, &ig, &queries, 10, 10);
+        let (r_large, _, s_large) = run_queries(&ds, Metric::L2, &ig, &queries, 10, 200);
+        let rs = search_recall(&r_small, &truth, 10);
+        let rl = search_recall(&r_large, &truth, 10);
+        assert!(rl >= rs, "ef=200 recall {rl} < ef=10 recall {rs}");
+        assert!(s_large.dist_evals > s_small.dist_evals);
+    }
+
+    #[test]
+    fn empty_graph_returns_empty() {
+        let ds = Dataset::from_raw(vec![], 4);
+        let ig = IndexGraph {
+            adj: vec![],
+            max_degree: 4,
+            entry: 0,
+        };
+        let (ids, stats) = beam_search(&ds, Metric::L2, &ig, &[0.0; 4], 5, 10);
+        assert!(ids.is_empty());
+        assert_eq!(stats.dist_evals, 0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Vamana (DiskANN, Subramanya et al., NeurIPS'19) — the second
+//! indexing-graph family of the paper's Sec. V-D (R=64, L=256,
+//! alpha=1.2 in the original).
+//!
+//! Construction: start from a random R-regular graph, then two passes
+//! over the points in random order; each point runs a greedy search
+//! from the medoid (beam L), robust-prunes the visited candidates
+//! (alpha=1 on pass one, alpha>1 on pass two) and adds pruned back
+//! edges.
+
+use super::diversify::{medoid, robust_prune};
+use super::search::beam_search_from;
+use super::IndexGraph;
+use crate::dataset::Dataset;
+use crate::distance::Metric;
+use crate::graph::{KnnGraph, Neighbor, NeighborList};
+use crate::util::Rng;
+
+/// Vamana parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct VamanaParams {
+    /// Max out-degree `R`.
+    pub r: usize,
+    /// Construction beam width `L`.
+    pub l: usize,
+    /// Diversification slack `alpha` (second pass).
+    pub alpha: f32,
+    pub seed: u64,
+}
+
+impl Default for VamanaParams {
+    fn default() -> Self {
+        VamanaParams {
+            r: 32,
+            l: 64,
+            alpha: 1.2,
+            seed: 0x56414D,
+        }
+    }
+}
+
+/// A built Vamana index.
+#[derive(Clone, Debug)]
+pub struct Vamana {
+    pub graph: IndexGraph,
+    pub params: VamanaParams,
+}
+
+impl Vamana {
+    pub fn build(ds: &Dataset, metric: Metric, params: VamanaParams) -> Vamana {
+        let n = ds.len();
+        assert!(n > 1);
+        let r = params.r.min(n - 1);
+        let mut rng = Rng::seeded(params.seed);
+
+        // Random R-regular initialization.
+        let mut adj: Vec<Vec<u32>> = (0..n)
+            .map(|i| {
+                let mut nbrs = Vec::with_capacity(r);
+                while nbrs.len() < r {
+                    let v = rng.gen_range(n);
+                    if v != i && !nbrs.contains(&(v as u32)) {
+                        nbrs.push(v as u32);
+                    }
+                }
+                nbrs
+            })
+            .collect();
+        let entry = medoid(ds, metric);
+
+        for pass in 0..2 {
+            let alpha = if pass == 0 { 1.0 } else { params.alpha };
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            for &i in &order {
+                let q = ds.vector(i);
+                // Greedy search; visited set = candidate pool.
+                let ig = IndexGraph {
+                    adj: adj.clone(),
+                    max_degree: r,
+                    entry,
+                };
+                let (visited, _) =
+                    beam_search_from(ds, metric, &ig, entry, q, params.l, params.l);
+                let mut pool: Vec<(u32, f32)> = visited
+                    .into_iter()
+                    .chain(adj[i].iter().copied())
+                    .filter(|&v| v as usize != i)
+                    .map(|v| (v, metric.distance(q, ds.vector(v as usize))))
+                    .collect();
+                pool.sort_by(|a, b| (a.1, a.0).partial_cmp(&(b.1, b.0)).unwrap());
+                pool.dedup_by_key(|c| c.0);
+                adj[i] = robust_prune(ds, metric, i, &pool, alpha, r);
+                // Back edges with overflow pruning.
+                let out = adj[i].clone();
+                for v in out {
+                    let nbrs = &mut adj[v as usize];
+                    if !nbrs.contains(&(i as u32)) {
+                        nbrs.push(i as u32);
+                        if nbrs.len() > r {
+                            let mut scored: Vec<(u32, f32)> = nbrs
+                                .iter()
+                                .map(|&w| {
+                                    (
+                                        w,
+                                        metric.distance(
+                                            ds.vector(v as usize),
+                                            ds.vector(w as usize),
+                                        ),
+                                    )
+                                })
+                                .collect();
+                            scored.sort_by(|a, b| {
+                                (a.1, a.0).partial_cmp(&(b.1, b.0)).unwrap()
+                            });
+                            adj[v as usize] =
+                                robust_prune(ds, metric, v as usize, &scored, alpha, r);
+                        }
+                    }
+                }
+            }
+        }
+        Vamana {
+            graph: IndexGraph {
+                adj,
+                max_degree: r,
+                entry,
+            },
+            params,
+        }
+    }
+
+    /// NN search (beam from the medoid entry).
+    pub fn search(
+        &self,
+        ds: &Dataset,
+        metric: Metric,
+        query: &[f32],
+        topk: usize,
+        ef: usize,
+    ) -> Vec<u32> {
+        beam_search_from(ds, metric, &self.graph, self.graph.entry, query, topk, ef).0
+    }
+
+    /// Graph as a [`KnnGraph`] with distances — merge-algorithm input
+    /// (k = R, the max neighborhood size).
+    pub fn to_knn_graph(&self, ds: &Dataset, metric: Metric) -> KnnGraph {
+        let k = self.params.r;
+        let lists = crate::util::parallel_map(self.graph.len(), |i| {
+            let mut scored: Vec<Neighbor> = self.graph.adj[i]
+                .iter()
+                .map(|&v| Neighbor {
+                    id: v,
+                    dist: metric.distance(ds.vector(i), ds.vector(v as usize)),
+                    new: true,
+                })
+                .collect();
+            scored.sort_by(|a, b| (a.dist, a.id).partial_cmp(&(b.dist, b.id)).unwrap());
+            let mut list = NeighborList::new(k);
+            for nb in scored.into_iter().take(k) {
+                list.push_unchecked(nb);
+            }
+            list
+        });
+        KnnGraph { lists, k }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetFamily;
+    use crate::eval::recall::{search_recall, GroundTruth};
+
+    #[test]
+    fn search_reaches_high_recall() {
+        let ds = DatasetFamily::Deep.generate(600, 1);
+        let vam = Vamana::build(&ds, Metric::L2, VamanaParams::default());
+        vam.graph.validate().unwrap();
+        let queries = DatasetFamily::Deep.generate_queries(25, 1);
+        let truth = GroundTruth::for_queries(&ds, &queries, 10, Metric::L2);
+        let results: Vec<Vec<u32>> = (0..queries.len())
+            .map(|i| vam.search(&ds, Metric::L2, queries.vector(i), 10, 128))
+            .collect();
+        let r = search_recall(&results, &truth, 10);
+        assert!(r > 0.9, "vamana recall={r}");
+    }
+
+    #[test]
+    fn degree_bounded_by_r() {
+        let ds = DatasetFamily::Sift.generate(300, 2);
+        let params = VamanaParams {
+            r: 16,
+            l: 32,
+            ..Default::default()
+        };
+        let vam = Vamana::build(&ds, Metric::L2, params);
+        assert!(vam.graph.adj.iter().all(|a| a.len() <= 16));
+    }
+
+    #[test]
+    fn to_knn_graph_valid() {
+        let ds = DatasetFamily::Deep.generate(200, 3);
+        let vam = Vamana::build(&ds, Metric::L2, VamanaParams::default());
+        let g = vam.to_knn_graph(&ds, Metric::L2);
+        g.validate(true).unwrap();
+        assert_eq!(g.k, vam.params.r);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = DatasetFamily::Sift.generate(150, 4);
+        let a = Vamana::build(&ds, Metric::L2, VamanaParams::default());
+        let b = Vamana::build(&ds, Metric::L2, VamanaParams::default());
+        assert_eq!(a.graph, b.graph);
+    }
+}

@@ -1,0 +1,43 @@
+//! # knn-merge
+//!
+//! Reproduction of *"Towards the Distributed Large-scale k-NN Graph
+//! Construction by Graph Merge"* (Zhang et al., CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The crate provides:
+//!
+//! - **Graph merge algorithms** — [`merge::two_way`] (Alg. 1),
+//!   [`merge::multi_way`] (Alg. 2) and the [`merge::s_merge`] baseline.
+//! - **Graph construction substrates** — [`construction::nndescent`],
+//!   [`construction::bruteforce`], [`index::hnsw`], [`index::vamana`].
+//! - **The distributed peer-to-peer construction procedure** (Alg. 3) in
+//!   [`distributed`], with a byte-accounted network model and an
+//!   out-of-core single-node mode.
+//! - **Baselines** used in the paper's evaluation — [`baselines::ivfpq`],
+//!   [`baselines::diskann_partition`], [`baselines::gnnd`].
+//! - **An XLA/PJRT runtime** ([`runtime`]) that executes the AOT-lowered
+//!   Pallas distance kernel from the Rust hot path (Python is never on
+//!   the request path).
+//!
+//! See `DESIGN.md` for the paper → module inventory and `EXPERIMENTS.md`
+//! for the reproduced tables and figures.
+
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod construction;
+pub mod coordinator;
+pub mod dataset;
+pub mod distance;
+pub mod distributed;
+pub mod eval;
+pub mod graph;
+pub mod index;
+pub mod merge;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+
+pub use config::RunConfig;
+pub use dataset::Dataset;
+pub use graph::KnnGraph;

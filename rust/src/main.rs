@@ -1,0 +1,221 @@
+//! `knn-merge` — the launcher binary.
+//!
+//! ```text
+//! knn-merge build        --family sift --n 20000 --parts 4 --strategy multi-way
+//! knn-merge distributed  --family deep --n 30000 --nodes 5
+//! knn-merge out-of-core  --family sift --n 20000 --parts 4
+//! knn-merge lid          --family gist --n 5000
+//! knn-merge artifacts    # report which AOT artifacts are loadable
+//! ```
+//!
+//! Every command accepts `--config path.toml` plus `--set section.key=v`
+//! overrides; see `config/` for the schema and `examples/` for API use.
+
+use anyhow::{bail, Result};
+use knn_merge::cli::Args;
+use knn_merge::config::{ConfigMap, RunConfig};
+use knn_merge::coordinator::{build_out_of_core, build_single_node, MergeStrategy};
+use knn_merge::dataset::{lid, DatasetFamily};
+use knn_merge::distance::Metric;
+use knn_merge::distributed::run_cluster;
+use knn_merge::eval::recall::{graph_recall, GroundTruth};
+use knn_merge::metrics::Phase;
+use knn_merge::runtime::XlaEngine;
+use knn_merge::util::fmt_secs;
+
+const USAGE: &str = "\
+knn-merge — distributed k-NN graph construction by graph merge
+
+USAGE:
+  knn-merge <command> [options] [--config cfg.toml] [--set sec.key=val]
+
+COMMANDS:
+  build         single-node pipeline (subgraphs + merge)
+  distributed   multi-node pipeline (Alg. 3, simulated cluster)
+  out-of-core   single node with external storage (Sec. IV)
+  lid           estimate a dataset family's LID
+  artifacts     list loadable AOT kernel artifacts
+
+COMMON OPTIONS:
+  --family <sift|deep|spacev|gist>   synthetic dataset family
+  --n <count>                        number of base vectors
+  --parts/--nodes <m>                subsets / simulated nodes
+  --k <k> --lambda <l>               graph / sampling parameters
+  --strategy <two-way|multi-way>     merge strategy (build)
+  --seed <seed>                      dataset seed
+  --eval <samples>                   recall sample count (0 = skip)
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn build_config(args: &Args) -> Result<RunConfig> {
+    let mut map = match args.get("config") {
+        Some(path) => ConfigMap::load(std::path::Path::new(path))?,
+        None => ConfigMap::default(),
+    };
+    for (k, v) in &args.overrides {
+        map.set(k, v);
+    }
+    let mut cfg = RunConfig::from_map(&map)?;
+    if let Some(f) = args.get("family") {
+        cfg.family = DatasetFamily::from_name(f)
+            .ok_or_else(|| anyhow::anyhow!("unknown family '{f}'"))?;
+    }
+    cfg.n = args.get_usize("n", cfg.n)?;
+    cfg.parts = args.get_usize("parts", args.get_usize("nodes", cfg.parts)?)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    let k = args.get_usize("k", cfg.merge.k)?;
+    let lambda = args.get_usize("lambda", cfg.merge.lambda)?;
+    cfg.merge.k = k;
+    cfg.merge.lambda = lambda;
+    cfg.nnd.k = k;
+    cfg.nnd.lambda = lambda;
+    Ok(cfg)
+}
+
+fn maybe_eval(
+    args: &Args,
+    ds: &knn_merge::Dataset,
+    g: &knn_merge::KnnGraph,
+    k: usize,
+) -> Result<()> {
+    let samples = args.get_usize("eval", 200)?;
+    if samples == 0 {
+        return Ok(());
+    }
+    let truth = GroundTruth::sampled(ds, k.min(10), Metric::L2, samples, 7);
+    let r = graph_recall(g, &truth, k.min(10));
+    println!("recall@{}: {r:.4} ({} sampled elements)", k.min(10), samples);
+    Ok(())
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let Some(command) = args.command.clone() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match command.as_str() {
+        "build" => {
+            let cfg = build_config(&args)?;
+            let strategy = match args.get("strategy").unwrap_or("two-way") {
+                "two-way" => MergeStrategy::TwoWayHierarchy,
+                "multi-way" => MergeStrategy::MultiWay,
+                s => bail!("unknown strategy '{s}'"),
+            };
+            println!(
+                "building {} x {} ({} parts, {} merge, k={} lambda={})",
+                cfg.family.name(),
+                cfg.n,
+                cfg.parts,
+                strategy.name(),
+                cfg.merge.k,
+                cfg.merge.lambda
+            );
+            let ds = cfg.family.generate(cfg.n, cfg.seed);
+            let result = build_single_node(&ds, &cfg, strategy);
+            println!(
+                "subgraphs: {} (total {:.2}s)   merge: {:.2}s",
+                result
+                    .subgraph_secs
+                    .iter()
+                    .map(|s| format!("{s:.2}s"))
+                    .collect::<Vec<_>>()
+                    .join(" "),
+                result.subgraph_secs.iter().sum::<f64>(),
+                result.merge_secs
+            );
+            maybe_eval(&args, &ds, &result.graph, cfg.merge.k)?;
+            if let Some(out) = args.get("out") {
+                knn_merge::graph::serial::write_graph(
+                    std::path::Path::new(out),
+                    &result.graph,
+                )?;
+                println!("wrote graph to {out}");
+            }
+        }
+        "distributed" => {
+            let cfg = build_config(&args)?;
+            println!(
+                "distributed build: {} x {} on {} nodes (1 Gbps model)",
+                cfg.family.name(),
+                cfg.n,
+                cfg.parts
+            );
+            let ds = cfg.family.generate(cfg.n, cfg.seed);
+            let result = run_cluster(&ds, &cfg);
+            println!(
+                "wall: {}   modelled makespan: {}   exchanged: {:.1} MB",
+                fmt_secs(std::time::Duration::from_secs_f64(result.wall_secs)),
+                fmt_secs(std::time::Duration::from_secs_f64(
+                    result.modelled_makespan()
+                )),
+                result.bytes_exchanged() as f64 / 1e6
+            );
+            for (phase, pct) in result.breakdown() {
+                println!("  {:>9}: {pct:5.1}%", phase.name());
+            }
+            maybe_eval(&args, &ds, &result.graph, cfg.merge.k)?;
+        }
+        "out-of-core" => {
+            let cfg = build_config(&args)?;
+            println!(
+                "out-of-core build: {} x {} in {} parts (scratch: {})",
+                cfg.family.name(),
+                cfg.n,
+                cfg.parts,
+                cfg.scratch_dir
+            );
+            let ds = cfg.family.generate(cfg.n, cfg.seed);
+            let (graph, ledger) = build_out_of_core(&ds, &cfg)?;
+            println!(
+                "build {:.2}s  merge {:.2}s  storage(model) {:.2}s  spilled {:.1} MB",
+                ledger.secs(Phase::Build),
+                ledger.secs(Phase::Merge),
+                ledger.secs(Phase::Storage),
+                ledger.bytes_stored() as f64 / 1e6
+            );
+            maybe_eval(&args, &ds, &graph, cfg.merge.k)?;
+        }
+        "lid" => {
+            let cfg = build_config(&args)?;
+            let ds = cfg.family.generate(cfg.n, cfg.seed);
+            let est = lid::estimate_lid(&ds, 40, 100.min(cfg.n / 10), 1);
+            println!(
+                "{}: measured LID = {est:.1} (paper Tab. II target: {:.1})",
+                cfg.family.name(),
+                cfg.family.target_lid()
+            );
+        }
+        "artifacts" => {
+            let dir = XlaEngine::default_artifact_dir();
+            let shapes = XlaEngine::available(&dir);
+            if shapes.is_empty() {
+                println!("no artifacts in {dir:?} — run `make artifacts`");
+            } else {
+                for s in shapes {
+                    print!(
+                        "{}: tile {}x{} batch {} dim {} — ",
+                        s.artifact_name(),
+                        s.nx,
+                        s.ny,
+                        s.b,
+                        s.dim
+                    );
+                    match XlaEngine::load(&dir, s) {
+                        Ok(_) => println!("loads + compiles OK"),
+                        Err(e) => println!("FAILED: {e}"),
+                    }
+                }
+            }
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => bail!("unknown command '{other}' (try `knn-merge help`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Bottom-up hierarchical merging (paper Fig. 3a): merge `m` subgraphs
+//! into one by `m - 1` calls of Two-way Merge, pairing neighbors level
+//! by level. The comparison target for Multi-way Merge in Fig. 9.
+
+use super::two_way::TwoWayMerge;
+use super::MergeParams;
+use crate::dataset::Dataset;
+use crate::distance::Metric;
+use crate::graph::KnnGraph;
+
+/// Merge `m` subgraphs by a bottom-up hierarchy of Two-way Merges.
+///
+/// `subsets[i]` / `subgraphs[i]` use subset-local ids; the result lives
+/// on the concatenation in input order. Returns the merged graph and the
+/// number of Two-way Merge calls performed (`m - 1`).
+pub fn merge_hierarchical(
+    subsets: &[&Dataset],
+    subgraphs: &[&KnnGraph],
+    metric: Metric,
+    params: MergeParams,
+) -> (KnnGraph, usize) {
+    assert_eq!(subsets.len(), subgraphs.len());
+    assert!(!subsets.is_empty());
+    let merger = TwoWayMerge::new(params);
+
+    // Level 0: own the data.
+    let mut level: Vec<(Dataset, KnnGraph)> = subsets
+        .iter()
+        .zip(subgraphs)
+        .map(|(d, g)| ((*d).clone(), (*g).clone()))
+        .collect();
+    let mut calls = 0usize;
+
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some((d1, g1)) = it.next() {
+            match it.next() {
+                Some((d2, g2)) => {
+                    let merged = merger.merge(&d1, &d2, &g1, &g2, metric);
+                    calls += 1;
+                    next.push((Dataset::concat(&[&d1, &d2]), merged));
+                }
+                None => next.push((d1, g1)), // odd one carries over
+            }
+        }
+        level = next;
+    }
+    let (_, graph) = level.pop().unwrap();
+    (graph, calls)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::construction::{NnDescent, NnDescentParams};
+    use crate::dataset::DatasetFamily;
+    use crate::eval::recall::{graph_recall, GroundTruth};
+
+    #[test]
+    fn hierarchy_of_four_matches_quality() {
+        let ds = DatasetFamily::Deep.generate(600, 1);
+        let nnd = NnDescent::new(NnDescentParams {
+            k: 10,
+            lambda: 10,
+            ..Default::default()
+        });
+        let parts = ds.split_contiguous(4);
+        let datasets: Vec<Dataset> = parts.iter().map(|(d, _)| d.clone()).collect();
+        let graphs: Vec<KnnGraph> =
+            datasets.iter().map(|d| nnd.build(d, Metric::L2)).collect();
+        let (merged, calls) = merge_hierarchical(
+            &datasets.iter().collect::<Vec<_>>(),
+            &graphs.iter().collect::<Vec<_>>(),
+            Metric::L2,
+            MergeParams {
+                k: 10,
+                lambda: 10,
+                ..Default::default()
+            },
+        );
+        assert_eq!(calls, 3);
+        assert_eq!(merged.len(), 600);
+        merged.validate(true).unwrap();
+        let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 120, 2);
+        let r = graph_recall(&merged, &truth, 10);
+        assert!(r > 0.85, "hierarchy recall@10 = {r}");
+    }
+
+    #[test]
+    fn handles_odd_subgraph_count() {
+        let ds = DatasetFamily::Sift.generate(300, 2);
+        let nnd = NnDescent::new(NnDescentParams {
+            k: 6,
+            lambda: 6,
+            ..Default::default()
+        });
+        let parts = ds.split_contiguous(3);
+        let datasets: Vec<Dataset> = parts.iter().map(|(d, _)| d.clone()).collect();
+        let graphs: Vec<KnnGraph> =
+            datasets.iter().map(|d| nnd.build(d, Metric::L2)).collect();
+        let (merged, calls) = merge_hierarchical(
+            &datasets.iter().collect::<Vec<_>>(),
+            &graphs.iter().collect::<Vec<_>>(),
+            Metric::L2,
+            MergeParams {
+                k: 6,
+                lambda: 6,
+                ..Default::default()
+            },
+        );
+        assert_eq!(calls, 2); // (0,1) then (01,2)
+        assert_eq!(merged.len(), 300);
+        merged.validate(true).unwrap();
+    }
+
+    #[test]
+    fn single_subgraph_is_identity() {
+        let ds = DatasetFamily::Sift.generate(100, 3);
+        let nnd = NnDescent::new(NnDescentParams {
+            k: 5,
+            lambda: 5,
+            ..Default::default()
+        });
+        let g = nnd.build(&ds, Metric::L2);
+        let (merged, calls) =
+            merge_hierarchical(&[&ds], &[&g], Metric::L2, MergeParams::default());
+        assert_eq!(calls, 0);
+        assert_eq!(merged, g);
+    }
+}

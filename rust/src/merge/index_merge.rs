@@ -1,0 +1,196 @@
+//! Indexing-graph merge (paper Sec. III-B).
+//!
+//! "When Two-way Merge is undertaken on the graphs built by HNSW, no
+//! element will be removed from a neighborhood during the merge
+//! process": the merged neighborhood is the **union** of the original
+//! (already diversified) subgraph edges `G_0[i]` and the cross-subset
+//! edges discovered by the merge — eviction would throw away exactly the
+//! long-range edges that make the index navigable. Diversification
+//! (Eq. 1, the source method's own scheme) then prunes the union back to
+//! the degree bound as post-processing.
+
+use super::{MergeParams, MultiWayMerge, SupportLists, TwoWayMerge};
+use crate::dataset::Dataset;
+use crate::distance::Metric;
+use crate::graph::KnnGraph;
+use crate::index::diversify::{medoid, robust_prune_opt};
+use crate::index::IndexGraph;
+
+/// Diversification scheme of the source index (Sec. III-B: "the same
+/// diversification scheme as the original indexing graph construction
+/// method is adopted during the post-processing").
+#[derive(Clone, Copy, Debug)]
+pub enum IndexKind {
+    /// HNSW: alpha = 1, pruned candidates pad the list back to capacity.
+    Hnsw,
+    /// Vamana/DiskANN: alpha > 1 (typically 1.2), no padding.
+    Vamana { alpha: f32 },
+}
+
+impl IndexKind {
+    fn alpha(&self) -> f32 {
+        match self {
+            IndexKind::Hnsw => 1.0,
+            IndexKind::Vamana { alpha } => *alpha,
+        }
+    }
+
+    fn keep_pruned(&self) -> bool {
+        matches!(self, IndexKind::Hnsw)
+    }
+}
+
+/// Merge two indexing subgraphs (as distance-annotated [`KnnGraph`]s
+/// from `Hnsw::to_knn_graph` / `Vamana::to_knn_graph`) into one index
+/// over the concatenated dataset.
+pub fn merge_two_index_graphs(
+    ds1: &Dataset,
+    ds2: &Dataset,
+    g1: &KnnGraph,
+    g2: &KnnGraph,
+    metric: Metric,
+    params: MergeParams,
+    kind: IndexKind,
+    max_degree: usize,
+) -> IndexGraph {
+    let mut s1 = SupportLists::build(g1, params.lambda);
+    let mut s2 = SupportLists::build(g2, params.lambda);
+    s2.offset_ids(ds1.len() as u32);
+    s1.lists.append(&mut s2.lists);
+    let cross = TwoWayMerge::new(params).cross_graph(ds1, ds2, &s1, metric);
+    let g0 = KnnGraph::concat(&[g1, g2], &[0, ds1.len()]);
+    let ds = Dataset::concat(&[ds1, ds2]);
+    union_and_diversify(&ds, metric, &g0, &cross, kind, max_degree)
+}
+
+/// Merge `m` indexing subgraphs at once (Multi-way Merge core).
+pub fn merge_many_index_graphs(
+    subsets: &[&Dataset],
+    subgraphs: &[&KnnGraph],
+    metric: Metric,
+    params: MergeParams,
+    kind: IndexKind,
+    max_degree: usize,
+) -> IndexGraph {
+    assert_eq!(subsets.len(), subgraphs.len());
+    let sizes: Vec<usize> = subsets.iter().map(|d| d.len()).collect();
+    let map = super::SubsetMap::from_sizes(&sizes);
+    let mut support = SupportLists { lists: Vec::new() };
+    for (s, g) in subgraphs.iter().enumerate() {
+        let mut part = SupportLists::build(g, params.lambda);
+        part.offset_ids(map.range(s).start as u32);
+        support.lists.append(&mut part.lists);
+    }
+    let cross = MultiWayMerge::new(params).cross_graph_observed(
+        subsets,
+        &support,
+        metric,
+        &crate::distance::ScalarEngine,
+        &mut |_, _, _| {},
+    );
+    let offsets: Vec<usize> = (0..subsets.len()).map(|s| map.range(s).start).collect();
+    let g0 = KnnGraph::concat(subgraphs, &offsets);
+    let ds = Dataset::concat(subsets);
+    union_and_diversify(&ds, metric, &g0, &cross, kind, max_degree)
+}
+
+/// The Sec. III-B post-processing: per-entry union of `G_0[i]` and the
+/// cross edges (nothing evicted), then the source method's own
+/// diversification down to `max_degree`.
+pub fn union_and_diversify(
+    ds: &Dataset,
+    metric: Metric,
+    g0: &KnnGraph,
+    cross: &KnnGraph,
+    kind: IndexKind,
+    max_degree: usize,
+) -> IndexGraph {
+    assert_eq!(g0.len(), cross.len());
+    let adj = crate::util::parallel_map(g0.len(), |i| {
+        let mut cands: Vec<(u32, f32)> = g0.lists[i]
+            .iter()
+            .chain(cross.lists[i].iter())
+            .map(|nb| (nb.id, nb.dist))
+            .collect();
+        cands.sort_by(|a, b| (a.1, a.0).partial_cmp(&(b.1, b.0)).unwrap());
+        cands.dedup_by_key(|c| c.0);
+        robust_prune_opt(
+            ds,
+            metric,
+            i,
+            &cands,
+            kind.alpha(),
+            max_degree,
+            kind.keep_pruned(),
+        )
+    });
+    IndexGraph {
+        adj,
+        max_degree,
+        entry: medoid(ds, metric),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetFamily;
+    use crate::eval::recall::{search_recall, GroundTruth};
+    use crate::index::search::run_queries;
+    use crate::index::{Hnsw, HnswParams};
+
+    #[test]
+    fn union_keeps_both_edge_sources() {
+        let ds = DatasetFamily::Deep.generate(100, 1);
+        let mut g0 = KnnGraph::empty(100, 4);
+        let mut cross = KnnGraph::empty(100, 4);
+        g0.lists[0].insert(1, 0.1, false);
+        cross.lists[0].insert(2, 0.2, false);
+        let merged = union_and_diversify(
+            &ds,
+            Metric::L2,
+            &g0,
+            &cross,
+            IndexKind::Vamana { alpha: 100.0 }, // effectively no pruning
+            8,
+        );
+        assert!(merged.adj[0].contains(&1));
+        assert!(merged.adj[0].contains(&2));
+    }
+
+    #[test]
+    fn merged_hnsw_two_subsets_search_parity() {
+        let ds = DatasetFamily::Deep.generate(1_000, 4);
+        let queries = DatasetFamily::Deep.generate_queries(30, 4);
+        let truth = GroundTruth::for_queries(&ds, &queries, 10, Metric::L2);
+        let parts = ds.split_contiguous(2);
+        let hp = HnswParams::default();
+        let scratch = Hnsw::build(&ds, Metric::L2, hp);
+        let h1 = Hnsw::build(&parts[0].0, Metric::L2, hp);
+        let h2 = Hnsw::build(&parts[1].0, Metric::L2, hp);
+        let merged = merge_two_index_graphs(
+            &parts[0].0,
+            &parts[1].0,
+            &h1.to_knn_graph(&parts[0].0, Metric::L2),
+            &h2.to_knn_graph(&parts[1].0, Metric::L2),
+            Metric::L2,
+            MergeParams {
+                k: 2 * hp.m,
+                lambda: 16,
+                ..Default::default()
+            },
+            IndexKind::Hnsw,
+            2 * hp.m,
+        );
+        merged.validate().unwrap();
+        let (rs, _, _) =
+            run_queries(&ds, Metric::L2, &scratch.base_index(), &queries, 10, 96);
+        let (rm, _, _) = run_queries(&ds, Metric::L2, &merged, &queries, 10, 96);
+        let recall_scratch = search_recall(&rs, &truth, 10);
+        let recall_merged = search_recall(&rm, &truth, 10);
+        assert!(
+            recall_merged > recall_scratch - 0.05,
+            "merged {recall_merged} vs scratch {recall_scratch}"
+        );
+    }
+}

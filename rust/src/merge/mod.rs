@@ -1,0 +1,280 @@
+//! Graph merge — the paper's core contribution.
+//!
+//! - [`two_way`] — Alg. 1: merge two subgraphs with one-shot sampling
+//!   into a fixed supporting graph `S` and flag-driven `new[i]` caches.
+//! - [`multi_way`] — Alg. 2: merge `m` subgraphs at once with additional
+//!   cross-matching inside `new[i]` and between `new[i]`/`old[i]`.
+//! - [`s_merge`] — the S-Merge baseline (Zhao et al., TBD'22) the paper
+//!   compares against.
+//! - [`hierarchy`] — bottom-up hierarchical merging of `m` subgraphs by
+//!   repeated Two-way Merge (Fig. 3a).
+//! - [`join`] — the shared Local-Join machinery (scalar or batched via a
+//!   [`crate::distance::DistanceEngine`]).
+
+pub mod hierarchy;
+pub mod index_merge;
+pub mod join;
+pub mod multi_way;
+pub mod s_merge;
+pub mod two_way;
+
+pub use multi_way::MultiWayMerge;
+pub use s_merge::SMerge;
+pub use two_way::TwoWayMerge;
+
+use crate::graph::KnnGraph;
+
+/// Parameters shared by the merge algorithms.
+#[derive(Clone, Copy, Debug)]
+pub struct MergeParams {
+    /// Output neighborhood size `k`.
+    pub k: usize,
+    /// Sampling bound `lambda` (paper: `lambda <= k`, typical 16–24).
+    pub lambda: usize,
+    /// Convergence threshold as a fraction of `n * k` accepted inserts.
+    pub delta: f64,
+    /// Hard iteration cap.
+    pub max_iters: usize,
+    /// PRNG seed (first-iteration random cross samples).
+    pub seed: u64,
+}
+
+impl Default for MergeParams {
+    fn default() -> Self {
+        MergeParams {
+            k: 20,
+            lambda: 10,
+            delta: 0.001,
+            max_iters: 30,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Maps a concatenated-space element id to its subset (the paper's
+/// `SoF`). Subsets are contiguous id ranges.
+#[derive(Clone, Debug)]
+pub struct SubsetMap {
+    /// Start offset of each subset, plus a final total-length sentinel.
+    offsets: Vec<usize>,
+}
+
+impl SubsetMap {
+    /// Build from subset sizes.
+    pub fn from_sizes(sizes: &[usize]) -> SubsetMap {
+        let mut offsets = Vec::with_capacity(sizes.len() + 1);
+        let mut acc = 0;
+        offsets.push(0);
+        for &s in sizes {
+            acc += s;
+            offsets.push(acc);
+        }
+        SubsetMap { offsets }
+    }
+
+    /// Number of subsets.
+    pub fn subsets(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total number of elements.
+    pub fn total(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// The paper's `SoF(i)`: which subset contains element `i`.
+    #[inline]
+    pub fn sof(&self, i: usize) -> usize {
+        debug_assert!(i < self.total());
+        // Binary search over offsets (subsets are few; this is cheap).
+        match self.offsets.binary_search(&i) {
+            Ok(pos) if pos == self.offsets.len() - 1 => pos - 1,
+            Ok(pos) => pos,
+            Err(pos) => pos - 1,
+        }
+    }
+
+    /// Id range of subset `s`.
+    pub fn range(&self, s: usize) -> std::ops::Range<usize> {
+        self.offsets[s]..self.offsets[s + 1]
+    }
+
+    /// Size of subset `s`.
+    pub fn size(&self, s: usize) -> usize {
+        self.range(s).len()
+    }
+}
+
+/// The supporting graph `S`: for each element, the ids sampled **once**
+/// from its subgraph neighborhood and reverse neighborhood (Alg. 1 lines
+/// 4–7). Ids live in whatever space the source graph used — subgraph-
+/// local for the distributed procedure (shipped over the network, then
+/// offset by the receiver) or concatenated-global on a single node.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SupportLists {
+    pub lists: Vec<Vec<u32>>,
+}
+
+impl SupportLists {
+    /// Sample `S[i] = top-lambda of G[i]  ∪  top-lambda of reverse(G)[i]`.
+    pub fn build(g: &KnnGraph, lambda: usize) -> SupportLists {
+        let rev = g.reverse(lambda);
+        let lists = (0..g.len())
+            .map(|i| {
+                let mut s = g.lists[i].top_ids(lambda);
+                for &r in &rev[i] {
+                    if !s.contains(&r) {
+                        s.push(r);
+                    }
+                }
+                s
+            })
+            .collect();
+        SupportLists { lists }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lists.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lists.is_empty()
+    }
+
+    /// Shift every id by `offset` (receiver-side placement into the
+    /// concatenated id space).
+    pub fn offset_ids(&mut self, offset: u32) {
+        for list in &mut self.lists {
+            for id in list.iter_mut() {
+                *id += offset;
+            }
+        }
+    }
+
+    /// Serialized payload size in bytes (network model).
+    pub fn payload_bytes(&self) -> u64 {
+        8 + self
+            .lists
+            .iter()
+            .map(|l| 2 + 4 * l.len() as u64)
+            .sum::<u64>()
+    }
+
+    /// Serialize (wire format for Alg. 3 exchanges).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.payload_bytes() as usize);
+        out.extend_from_slice(&(self.lists.len() as u64).to_le_bytes());
+        for l in &self.lists {
+            out.extend_from_slice(&(l.len() as u16).to_le_bytes());
+            for &id in l {
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Deserialize.
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<SupportLists> {
+        use anyhow::bail;
+        let mut pos = 0usize;
+        if bytes.len() < 8 {
+            bail!("truncated support payload");
+        }
+        let n = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+        pos += 8;
+        let mut lists = Vec::with_capacity(n);
+        for _ in 0..n {
+            if pos + 2 > bytes.len() {
+                bail!("truncated support payload");
+            }
+            let len = u16::from_le_bytes(bytes[pos..pos + 2].try_into().unwrap()) as usize;
+            pos += 2;
+            if pos + len * 4 > bytes.len() {
+                bail!("truncated support payload");
+            }
+            let mut l = Vec::with_capacity(len);
+            for t in 0..len {
+                l.push(u32::from_le_bytes(
+                    bytes[pos + t * 4..pos + t * 4 + 4].try_into().unwrap(),
+                ));
+            }
+            pos += len * 4;
+            lists.push(l);
+        }
+        if pos != bytes.len() {
+            bail!("trailing bytes in support payload");
+        }
+        Ok(SupportLists { lists })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_property;
+
+    #[test]
+    fn subset_map_sof() {
+        let m = SubsetMap::from_sizes(&[3, 2, 4]);
+        assert_eq!(m.subsets(), 3);
+        assert_eq!(m.total(), 9);
+        let expect = [0, 0, 0, 1, 1, 2, 2, 2, 2];
+        for (i, &e) in expect.iter().enumerate() {
+            assert_eq!(m.sof(i), e, "i={i}");
+        }
+        assert_eq!(m.range(1), 3..5);
+        assert_eq!(m.size(2), 4);
+    }
+
+    #[test]
+    fn support_build_includes_forward_and_reverse() {
+        let mut g = KnnGraph::empty(3, 4);
+        g.lists[0].insert(1, 0.1, true);
+        g.lists[1].insert(2, 0.2, true);
+        g.lists[2].insert(0, 0.3, true);
+        let s = SupportLists::build(&g, 4);
+        // forward + reverse: 0 -> {1 (fwd), 2 (rev)}
+        assert!(s.lists[0].contains(&1));
+        assert!(s.lists[0].contains(&2));
+        assert!(s.lists[1].contains(&2) && s.lists[1].contains(&0));
+    }
+
+    #[test]
+    fn support_respects_lambda() {
+        let mut g = KnnGraph::empty(6, 5);
+        for j in 1..6u32 {
+            g.lists[0].insert(j, j as f32, true);
+        }
+        let s = SupportLists::build(&g, 2);
+        // top-2 forward; element 0 has no reverse neighbors here
+        assert_eq!(s.lists[0], vec![1, 2]);
+    }
+
+    #[test]
+    fn support_serialization_roundtrip() {
+        check_property("support-roundtrip", 500, |rng| {
+            let n = 1 + rng.gen_range(20);
+            let lists: Vec<Vec<u32>> = (0..n)
+                .map(|_| {
+                    (0..rng.gen_range(8))
+                        .map(|_| rng.gen_range(1000) as u32)
+                        .collect()
+                })
+                .collect();
+            let s = SupportLists { lists };
+            let bytes = s.to_bytes();
+            assert_eq!(bytes.len() as u64, s.payload_bytes());
+            let back = SupportLists::from_bytes(&bytes).unwrap();
+            assert_eq!(back, s);
+        });
+    }
+
+    #[test]
+    fn offset_ids_shifts_everything() {
+        let mut s = SupportLists {
+            lists: vec![vec![0, 1], vec![5]],
+        };
+        s.offset_ids(10);
+        assert_eq!(s.lists, vec![vec![10, 11], vec![15]]);
+    }
+}

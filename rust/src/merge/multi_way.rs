@@ -1,0 +1,335 @@
+//! Multi-way Merge (paper Alg. 2): merge `m > 2` subgraphs at once.
+//!
+//! Extends Two-way Merge with additional cross-matching: the newly found
+//! neighbors in `G[i]` may come from *different* subsets, and elements
+//! sharing the neighborhood `G[i]` are likely neighbors of each other.
+//! Per round, Local-Join therefore runs between
+//!
+//! 1. `new[i]` and `S[i]`                (as in Two-way Merge),
+//! 2. pairs within `new[i]`              (new x new), and
+//! 3. `new[i]` and `old[i]`              (new x old),
+//!
+//! with pairs from the same subset excluded (their subgraph already
+//! connected them). Complexity `O(3 * 4 lambda^2 * t * n)` vs the
+//! hierarchy's `O(4 lambda^2 * t * n * log2 m)` — Multi-way wins for
+//! m > 8 in theory and earlier in practice (paper Fig. 9).
+
+use super::join::JoinContext;
+use super::{MergeParams, SubsetMap, SupportLists};
+use crate::dataset::Dataset;
+use crate::distance::{DistanceEngine, Metric, ScalarEngine};
+use crate::graph::{KnnGraph, SharedGraph};
+use crate::util::{parallel_for, Rng};
+use std::sync::Mutex;
+use std::time::Instant;
+
+pub use super::two_way::MergeObserver;
+
+/// Multi-way Merge (Alg. 2).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MultiWayMerge {
+    pub params: MergeParams,
+}
+
+impl MultiWayMerge {
+    pub fn new(params: MergeParams) -> Self {
+        MultiWayMerge { params }
+    }
+
+    /// Merge `m` subgraphs (subset-local ids) over their subsets into the
+    /// complete graph on the concatenation; includes the final MergeSort
+    /// with `G_0`.
+    pub fn merge(
+        &self,
+        subsets: &[&Dataset],
+        subgraphs: &[&KnnGraph],
+        metric: Metric,
+    ) -> KnnGraph {
+        self.merge_observed(subsets, subgraphs, metric, &ScalarEngine, &mut |_, _, _| {})
+    }
+
+    /// [`MultiWayMerge::merge`] with engine + observer.
+    pub fn merge_observed(
+        &self,
+        subsets: &[&Dataset],
+        subgraphs: &[&KnnGraph],
+        metric: Metric,
+        engine: &dyn DistanceEngine,
+        observer: MergeObserver,
+    ) -> KnnGraph {
+        assert_eq!(subsets.len(), subgraphs.len());
+        assert!(subsets.len() >= 2, "need at least two subgraphs");
+        let sizes: Vec<usize> = subsets.iter().map(|d| d.len()).collect();
+        let map = SubsetMap::from_sizes(&sizes);
+
+        // Build S in concatenated space (one-shot, as in Alg. 1).
+        let mut support = SupportLists { lists: Vec::with_capacity(map.total()) };
+        for (s, g) in subgraphs.iter().enumerate() {
+            let mut part = SupportLists::build(g, self.params.lambda);
+            part.offset_ids(map.range(s).start as u32);
+            support.lists.append(&mut part.lists);
+        }
+
+        let cross = self.cross_graph_observed(subsets, &support, metric, engine, observer);
+        let offsets: Vec<usize> = (0..subsets.len()).map(|s| map.range(s).start).collect();
+        let g0 = KnnGraph::concat(subgraphs, &offsets);
+        cross.merge_sorted(&g0)
+    }
+
+    /// The iteration core (Alg. 2 lines 8–38): returns graph `G` where
+    /// `G[i]` holds the discovered neighbors of `i` outside `SoF(i)`.
+    pub fn cross_graph_observed(
+        &self,
+        subsets: &[&Dataset],
+        support: &SupportLists,
+        metric: Metric,
+        engine: &dyn DistanceEngine,
+        observer: MergeObserver,
+    ) -> KnnGraph {
+        let p = self.params;
+        let sizes: Vec<usize> = subsets.iter().map(|d| d.len()).collect();
+        let map = SubsetMap::from_sizes(&sizes);
+        let n = map.total();
+        assert_eq!(support.len(), n);
+        let ds = Dataset::concat(subsets);
+        let start = Instant::now();
+
+        let graph = SharedGraph::empty(n, p.k);
+        let ctx = JoinContext {
+            ds: &ds,
+            metric,
+            engine,
+            graph: &graph,
+        };
+        // Same-subset exclusion for paths 2 and 3 (Alg. 2 line 31).
+        let cross_only = |u: u32, v: u32| map.sof(u as usize) != map.sof(v as usize);
+
+        let r_new: Vec<Mutex<Vec<u32>>> = (0..n).map(|_| Mutex::new(Vec::new())).collect();
+        let r_old: Vec<Mutex<Vec<u32>>> = (0..n).map(|_| Mutex::new(Vec::new())).collect();
+        let seeds: Vec<u64> = {
+            let mut rng = Rng::seeded(p.seed);
+            (0..n).map(|_| rng.next_u64()).collect()
+        };
+
+        let threshold = (p.delta * n as f64 * p.k as f64).max(1.0) as u64;
+        let mut new_cache: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut old_cache: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for iter in 0..p.max_iters {
+            // --- Sampling (lines 9–23) ---
+            {
+                let new_slots: Vec<Mutex<&mut Vec<u32>>> =
+                    new_cache.iter_mut().map(Mutex::new).collect();
+                let old_slots: Vec<Mutex<&mut Vec<u32>>> =
+                    old_cache.iter_mut().map(Mutex::new).collect();
+                parallel_for(n, |i| {
+                    let (news, olds) = if iter == 0 {
+                        // Random cross-subset seeds (line 11).
+                        let mut rng = Rng::seeded(seeds[i]);
+                        let own = map.sof(i);
+                        let mut picks: Vec<u32> = Vec::with_capacity(p.lambda);
+                        let budget = p.lambda.min(n - map.size(own));
+                        while picks.len() < budget {
+                            let v = rng.gen_range(n);
+                            if map.sof(v) != own && !picks.contains(&(v as u32)) {
+                                picks.push(v as u32);
+                            }
+                        }
+                        (picks, Vec::new())
+                    } else {
+                        graph.with_entry(i, |entry| {
+                            // Old BEFORE new: sample_new clears flags.
+                            let olds = entry.sample_old(p.lambda);
+                            let news = entry.sample_new(p.lambda);
+                            (news, olds)
+                        })
+                    };
+                    // Reverse collection (lines 15–20).
+                    for &u in &news {
+                        let mut ru = r_new[u as usize].lock().unwrap();
+                        if ru.len() < p.lambda {
+                            ru.push(i as u32);
+                        }
+                    }
+                    for &u in &olds {
+                        let mut ru = r_old[u as usize].lock().unwrap();
+                        if ru.len() < p.lambda {
+                            ru.push(i as u32);
+                        }
+                    }
+                    **new_slots[i].lock().unwrap() = news;
+                    **old_slots[i].lock().unwrap() = olds;
+                });
+            }
+            // --- Integrate reverse caches (lines 24–29) ---
+            {
+                let new_slots: Vec<Mutex<&mut Vec<u32>>> =
+                    new_cache.iter_mut().map(Mutex::new).collect();
+                let old_slots: Vec<Mutex<&mut Vec<u32>>> =
+                    old_cache.iter_mut().map(Mutex::new).collect();
+                parallel_for(n, |i| {
+                    let mut rn = r_new[i].lock().unwrap();
+                    let mut slot = new_slots[i].lock().unwrap();
+                    for &u in rn.iter() {
+                        if !slot.contains(&u) {
+                            slot.push(u);
+                        }
+                    }
+                    rn.clear();
+                    let mut ro = r_old[i].lock().unwrap();
+                    let mut slot = old_slots[i].lock().unwrap();
+                    for &u in ro.iter() {
+                        if !slot.contains(&u) {
+                            slot.push(u);
+                        }
+                    }
+                    ro.clear();
+                });
+            }
+            // --- Local-Join (lines 30–36) ---
+            parallel_for(n, |i| {
+                let news = &new_cache[i];
+                let olds = &old_cache[i];
+                // 1. new[i] x S[i]  (S is same-subset by construction)
+                ctx.join(&support.lists[i], news, &|_, _| true);
+                // 2. within new[i], different subsets only
+                ctx.join_triangle(news, &cross_only);
+                // 3. new[i] x old[i], different subsets only
+                ctx.join(news, olds, &cross_only);
+            });
+            let updates = graph.take_updates();
+            observer(iter, start.elapsed().as_secs_f64(), &graph);
+            if updates < threshold {
+                break;
+            }
+        }
+        graph.into_graph()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::construction::{NnDescent, NnDescentParams};
+    use crate::dataset::DatasetFamily;
+    use crate::eval::recall::{graph_recall, GroundTruth};
+
+    fn build_parts(ds: &Dataset, m: usize, k: usize) -> (Vec<Dataset>, Vec<KnnGraph>) {
+        let nnd = NnDescent::new(NnDescentParams {
+            k,
+            lambda: k,
+            ..Default::default()
+        });
+        let parts = ds.split_contiguous(m);
+        let graphs = parts
+            .iter()
+            .map(|(d, _)| nnd.build(d, Metric::L2))
+            .collect();
+        (parts.into_iter().map(|(d, _)| d).collect(), graphs)
+    }
+
+    #[test]
+    fn merges_four_subgraphs_to_high_recall() {
+        let ds = DatasetFamily::Deep.generate(800, 1);
+        let (parts, graphs) = build_parts(&ds, 4, 10);
+        let merged = MultiWayMerge::new(MergeParams {
+            k: 10,
+            lambda: 10,
+            ..Default::default()
+        })
+        .merge(
+            &parts.iter().collect::<Vec<_>>(),
+            &graphs.iter().collect::<Vec<_>>(),
+            Metric::L2,
+        );
+        merged.validate(true).unwrap();
+        let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 150, 2);
+        let r = graph_recall(&merged, &truth, 10);
+        assert!(r > 0.85, "multi-way recall@10 = {r}");
+    }
+
+    #[test]
+    fn cross_graph_excludes_same_subset_edges() {
+        let ds = DatasetFamily::Sift.generate(300, 3);
+        let (parts, graphs) = build_parts(&ds, 3, 6);
+        let sizes: Vec<usize> = parts.iter().map(|d| d.len()).collect();
+        let map = SubsetMap::from_sizes(&sizes);
+        let mut support = SupportLists { lists: Vec::new() };
+        for (s, g) in graphs.iter().enumerate() {
+            let mut part = SupportLists::build(g, 6);
+            part.offset_ids(map.range(s).start as u32);
+            support.lists.append(&mut part.lists);
+        }
+        let cross = MultiWayMerge::new(MergeParams {
+            k: 6,
+            lambda: 6,
+            max_iters: 4,
+            ..Default::default()
+        })
+        .cross_graph_observed(
+            &parts.iter().collect::<Vec<_>>(),
+            &support,
+            Metric::L2,
+            &ScalarEngine,
+            &mut |_, _, _| {},
+        );
+        for i in 0..cross.len() {
+            for id in cross.ids(i) {
+                assert_ne!(
+                    map.sof(i),
+                    map.sof(id as usize),
+                    "same-subset edge {i}->{id}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn works_with_uneven_subsets() {
+        let ds = DatasetFamily::Deep.generate(500, 5);
+        let p1 = ds.subset(&(0..100).collect::<Vec<_>>());
+        let p2 = ds.subset(&(100..350).collect::<Vec<_>>());
+        let p3 = ds.subset(&(350..500).collect::<Vec<_>>());
+        let nnd = NnDescent::new(NnDescentParams {
+            k: 8,
+            lambda: 8,
+            ..Default::default()
+        });
+        let graphs: Vec<KnnGraph> =
+            [&p1, &p2, &p3].iter().map(|d| nnd.build(d, Metric::L2)).collect();
+        let merged = MultiWayMerge::new(MergeParams {
+            k: 8,
+            lambda: 8,
+            ..Default::default()
+        })
+        .merge(
+            &[&p1, &p2, &p3],
+            &graphs.iter().collect::<Vec<_>>(),
+            Metric::L2,
+        );
+        assert_eq!(merged.len(), 500);
+        merged.validate(true).unwrap();
+        let truth = GroundTruth::sampled(&ds, 8, Metric::L2, 100, 6);
+        let r = graph_recall(&merged, &truth, 8);
+        assert!(r > 0.8, "recall={r}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = DatasetFamily::Sift.generate(200, 7);
+        let (parts, graphs) = build_parts(&ds, 4, 6);
+        let params = MergeParams {
+            k: 6,
+            lambda: 6,
+            max_iters: 3,
+            ..Default::default()
+        };
+        let run = || {
+            MultiWayMerge::new(params).merge(
+                &parts.iter().collect::<Vec<_>>(),
+                &graphs.iter().collect::<Vec<_>>(),
+                Metric::L2,
+            )
+        };
+        assert_eq!(run(), run());
+    }
+}

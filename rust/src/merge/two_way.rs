@@ -1,0 +1,324 @@
+//! Two-way Merge (paper Alg. 1).
+//!
+//! Given subgraphs `G_1`, `G_2` over disjoint subsets `C_1`, `C_2`, the
+//! merge discovers, for every element, its neighbors in the *other*
+//! subset. In contrast to S-Merge / NN-Descent:
+//!
+//! - the concatenated graph `G_0` is sampled **once** into the fixed
+//!   supporting graph `S` (neighbors + reverse neighbors, lambda each);
+//! - per round, only the **newly inserted** (flagged) neighbors of the
+//!   cross graph `G` are sampled into `new[i]`, so converged neighbors
+//!   are never rejoined;
+//! - reverse neighbors `R[i]` are collected on the fly and cleared right
+//!   after the round's Local-Join — the full reverse graph is never
+//!   materialized (the memory-efficiency claim of Sec. III-A).
+//!
+//! The round's Local-Join runs between `S[i]` and `new[i]`; the complete
+//! k-NN graph is `MergeSort(G, G_0)`.
+
+use super::join::{BatchJoiner, JoinContext};
+use super::{MergeParams, SubsetMap, SupportLists};
+use crate::dataset::Dataset;
+use crate::distance::{DistanceEngine, Metric, ScalarEngine};
+use crate::graph::{KnnGraph, SharedGraph};
+use crate::util::{parallel_for, Rng};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Observer invoked after each merge round: `(iter, secs, cross_graph)`.
+pub type MergeObserver<'a> = &'a mut dyn FnMut(usize, f64, &SharedGraph);
+
+/// Two-way Merge (Alg. 1).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TwoWayMerge {
+    pub params: MergeParams,
+}
+
+impl TwoWayMerge {
+    pub fn new(params: MergeParams) -> Self {
+        TwoWayMerge { params }
+    }
+
+    /// Full single-node pipeline: build `S` from the subgraphs, run the
+    /// iteration, and MergeSort the cross graph with `G_0`. `g1`/`g2` use
+    /// subset-local ids; the result lives in the concatenated space
+    /// (`ds1` rows first).
+    pub fn merge(
+        &self,
+        ds1: &Dataset,
+        ds2: &Dataset,
+        g1: &KnnGraph,
+        g2: &KnnGraph,
+        metric: Metric,
+    ) -> KnnGraph {
+        self.merge_observed(ds1, ds2, g1, g2, metric, &ScalarEngine, &mut |_, _, _| {})
+    }
+
+    /// [`TwoWayMerge::merge`] with an explicit engine and observer.
+    pub fn merge_observed(
+        &self,
+        ds1: &Dataset,
+        ds2: &Dataset,
+        g1: &KnnGraph,
+        g2: &KnnGraph,
+        metric: Metric,
+        engine: &dyn DistanceEngine,
+        observer: MergeObserver,
+    ) -> KnnGraph {
+        let mut s1 = SupportLists::build(g1, self.params.lambda);
+        let mut s2 = SupportLists::build(g2, self.params.lambda);
+        s2.offset_ids(ds1.len() as u32);
+        s1.lists.append(&mut s2.lists);
+        let support = s1;
+
+        let cross = self.cross_graph_observed(ds1, ds2, &support, metric, engine, observer);
+        let g0 = KnnGraph::concat(&[g1, g2], &[0, ds1.len()]);
+        cross.merge_sorted(&g0)
+    }
+
+    /// The iteration core (Alg. 1 lines 8–33): returns the cross graph
+    /// `G` in which `G[i]` holds neighbors of `i` from the other subset.
+    /// `support` must already be in concatenated-id space.
+    ///
+    /// The distributed procedure (Alg. 3) calls this directly with a
+    /// locally built `S_i` and a received `S_j`, then splits the result
+    /// into `G_i^j` / `G_j^i`.
+    pub fn cross_graph_observed(
+        &self,
+        ds1: &Dataset,
+        ds2: &Dataset,
+        support: &SupportLists,
+        metric: Metric,
+        engine: &dyn DistanceEngine,
+        observer: MergeObserver,
+    ) -> KnnGraph {
+        let p = self.params;
+        let n1 = ds1.len();
+        let n = n1 + ds2.len();
+        assert_eq!(support.len(), n, "support must cover both subsets");
+        let map = SubsetMap::from_sizes(&[n1, ds2.len()]);
+        let ds = Dataset::concat(&[ds1, ds2]);
+        let start = Instant::now();
+
+        let graph = SharedGraph::empty(n, p.k);
+        let ctx = JoinContext {
+            ds: &ds,
+            metric,
+            engine,
+            graph: &graph,
+        };
+
+        // Per-round reverse caches R[i] — cleared after every Local-Join
+        // (the on-the-fly reverse collection of Alg. 1).
+        let r: Vec<Mutex<Vec<u32>>> = (0..n).map(|_| Mutex::new(Vec::new())).collect();
+        let seeds: Vec<u64> = {
+            let mut rng = Rng::seeded(p.seed);
+            (0..n).map(|_| rng.next_u64()).collect()
+        };
+
+        let threshold = (p.delta * n as f64 * p.k as f64).max(1.0) as u64;
+        let mut new_cache: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for iter in 0..p.max_iters {
+            // --- Sampling (lines 9–21) ---
+            {
+                let slots: Vec<Mutex<&mut Vec<u32>>> =
+                    new_cache.iter_mut().map(Mutex::new).collect();
+                parallel_for(n, |i| {
+                    let sampled: Vec<u32> = if iter == 0 {
+                        // First round: lambda random elements from the
+                        // other subset (line 11).
+                        let mut rng = Rng::seeded(seeds[i]);
+                        let other = 1 - map.sof(i);
+                        let range = map.range(other);
+                        let mut picks = Vec::with_capacity(p.lambda);
+                        while picks.len() < p.lambda.min(range.len()) {
+                            let v = (range.start + rng.gen_range(range.len())) as u32;
+                            if !picks.contains(&v) {
+                                picks.push(v);
+                            }
+                        }
+                        picks
+                    } else {
+                        // Later rounds: flagged-new entries of G[i],
+                        // clearing flags (lines 13, 19).
+                        graph.with_entry(i, |entry| entry.sample_new(p.lambda))
+                    };
+                    // Reverse collection (lines 14–18).
+                    for &u in &sampled {
+                        let mut ru = r[u as usize].lock().unwrap();
+                        if ru.len() < p.lambda {
+                            ru.push(i as u32);
+                        }
+                    }
+                    **slots[i].lock().unwrap() = sampled;
+                });
+            }
+            // --- Integrate reverse neighbors (lines 22–25) ---
+            {
+                let slots: Vec<Mutex<&mut Vec<u32>>> =
+                    new_cache.iter_mut().map(Mutex::new).collect();
+                parallel_for(n, |i| {
+                    let mut ri = r[i].lock().unwrap();
+                    let mut slot = slots[i].lock().unwrap();
+                    for &u in ri.iter() {
+                        if !slot.contains(&u) {
+                            slot.push(u);
+                        }
+                    }
+                    ri.clear(); // R[i] <- empty (line 24): never kept.
+                });
+            }
+            // --- Local-Join between S[i] and new[i] (lines 26–32) ---
+            if engine.prefers_batches() && metric == Metric::L2 {
+                // Batched path: accumulate per-element blocks, flush
+                // through the engine (AOT kernel) in large batches.
+                let tile = engine.batch_tile();
+                let mut joiner = BatchJoiner::new(&ctx, tile, 4096);
+                for i in 0..n {
+                    joiner.push(&support.lists[i], &new_cache[i]);
+                }
+                joiner.flush();
+            } else {
+                parallel_for(n, |i| {
+                    ctx.join(&support.lists[i], &new_cache[i], &|_, _| true);
+                });
+            }
+            let updates = graph.take_updates();
+            observer(iter, start.elapsed().as_secs_f64(), &graph);
+            if updates < threshold {
+                break;
+            }
+        }
+        graph.into_graph()
+    }
+
+    /// Convenience wrapper over [`TwoWayMerge::cross_graph_observed`].
+    pub fn cross_graph(
+        &self,
+        ds1: &Dataset,
+        ds2: &Dataset,
+        support: &SupportLists,
+        metric: Metric,
+    ) -> KnnGraph {
+        self.cross_graph_observed(ds1, ds2, support, metric, &ScalarEngine, &mut |_, _, _| {})
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::construction::{NnDescent, NnDescentParams};
+    use crate::dataset::DatasetFamily;
+    use crate::eval::recall::{graph_recall, GroundTruth};
+
+    fn subgraphs(
+        ds: &Dataset,
+        k: usize,
+    ) -> (Dataset, Dataset, KnnGraph, KnnGraph) {
+        let parts = ds.split_contiguous(2);
+        let nnd = NnDescent::new(NnDescentParams {
+            k,
+            lambda: k,
+            ..Default::default()
+        });
+        let g1 = nnd.build(&parts[0].0, Metric::L2);
+        let g2 = nnd.build(&parts[1].0, Metric::L2);
+        (parts[0].0.clone(), parts[1].0.clone(), g1, g2)
+    }
+
+    #[test]
+    fn merged_graph_reaches_subgraph_quality() {
+        let ds = DatasetFamily::Deep.generate(800, 1);
+        let (d1, d2, g1, g2) = subgraphs(&ds, 10);
+        let merged = TwoWayMerge::new(MergeParams {
+            k: 10,
+            lambda: 10,
+            ..Default::default()
+        })
+        .merge(&d1, &d2, &g1, &g2, Metric::L2);
+        merged.validate(true).unwrap();
+        assert_eq!(merged.len(), 800);
+        let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 150, 3);
+        let r = graph_recall(&merged, &truth, 10);
+        assert!(r > 0.88, "merged recall@10 = {r}");
+    }
+
+    #[test]
+    fn cross_graph_only_holds_cross_subset_edges() {
+        let ds = DatasetFamily::Sift.generate(300, 2);
+        let (d1, d2, g1, g2) = subgraphs(&ds, 8);
+        let params = MergeParams {
+            k: 8,
+            lambda: 8,
+            max_iters: 4,
+            ..Default::default()
+        };
+        let mut s1 = SupportLists::build(&g1, 8);
+        let mut s2 = SupportLists::build(&g2, 8);
+        s2.offset_ids(d1.len() as u32);
+        s1.lists.append(&mut s2.lists);
+        let cross =
+            TwoWayMerge::new(params).cross_graph(&d1, &d2, &s1, Metric::L2);
+        let n1 = d1.len();
+        for i in 0..cross.len() {
+            for id in cross.ids(i) {
+                let same_side = (i < n1) == ((id as usize) < n1);
+                assert!(!same_side, "entry {i} has same-subset neighbor {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_beats_concatenation_quality() {
+        // Without cross-matching (plain concat) recall is capped well
+        // below the merged graph's.
+        let ds = DatasetFamily::Deep.generate(500, 4);
+        let (d1, d2, g1, g2) = subgraphs(&ds, 10);
+        let g0 = KnnGraph::concat(&[&g1, &g2], &[0, d1.len()]);
+        let merged = TwoWayMerge::new(MergeParams {
+            k: 10,
+            lambda: 10,
+            ..Default::default()
+        })
+        .merge(&d1, &d2, &g1, &g2, Metric::L2);
+        let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 100, 5);
+        let r0 = graph_recall(&g0, &truth, 10);
+        let rm = graph_recall(&merged, &truth, 10);
+        assert!(
+            rm > r0 + 0.1,
+            "merge should clearly beat concat: {r0} vs {rm}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = DatasetFamily::Sift.generate(240, 6);
+        let (d1, d2, g1, g2) = subgraphs(&ds, 6);
+        let params = MergeParams {
+            k: 6,
+            lambda: 6,
+            max_iters: 3,
+            ..Default::default()
+        };
+        let a = TwoWayMerge::new(params).merge(&d1, &d2, &g1, &g2, Metric::L2);
+        let b = TwoWayMerge::new(params).merge(&d1, &d2, &g1, &g2, Metric::L2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn observer_runs_per_iteration() {
+        let ds = DatasetFamily::Deep.generate(200, 7);
+        let (d1, d2, g1, g2) = subgraphs(&ds, 6);
+        let mut iters = 0usize;
+        TwoWayMerge::new(MergeParams {
+            k: 6,
+            lambda: 6,
+            max_iters: 5,
+            ..Default::default()
+        })
+        .merge_observed(&d1, &d2, &g1, &g2, Metric::L2, &ScalarEngine, &mut |_, _, _| {
+            iters += 1;
+        });
+        assert!(iters >= 1 && iters <= 5);
+    }
+}

@@ -1,0 +1,174 @@
+//! Phase-labelled cost accounting.
+//!
+//! The distributed procedure reports *where* time goes (paper Fig. 14:
+//! subgraph construction vs merge compute vs data exchange vs storage
+//! access). [`CostLedger`] accumulates seconds per [`Phase`], mixing
+//! measured wall-clock (compute) and modelled time (network/storage,
+//! derived from byte counts and the configured bandwidths).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Cost categories (Fig. 14's breakdown).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Subgraph construction (NN-Descent / HNSW / Vamana).
+    Build,
+    /// Merge compute (sampling + Local-Join + merge sort).
+    Merge,
+    /// Network data exchange (modelled from payload bytes).
+    Exchange,
+    /// External-storage reads/writes (measured or modelled).
+    Storage,
+    /// Everything else (scheduling, serialization).
+    Other,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Build => "build",
+            Phase::Merge => "merge",
+            Phase::Exchange => "exchange",
+            Phase::Storage => "storage",
+            Phase::Other => "other",
+        }
+    }
+
+    pub fn all() -> [Phase; 5] {
+        [
+            Phase::Build,
+            Phase::Merge,
+            Phase::Exchange,
+            Phase::Storage,
+            Phase::Other,
+        ]
+    }
+}
+
+/// Thread-safe accumulator of per-phase seconds and byte counters.
+#[derive(Debug, Default)]
+pub struct CostLedger {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    secs: BTreeMap<Phase, f64>,
+    bytes_sent: u64,
+    bytes_stored: u64,
+}
+
+impl CostLedger {
+    pub fn new() -> CostLedger {
+        CostLedger::default()
+    }
+
+    /// Add `secs` to a phase.
+    pub fn add(&self, phase: Phase, secs: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.secs.entry(phase).or_insert(0.0) += secs;
+    }
+
+    /// Time a closure into a phase.
+    pub fn time<R>(&self, phase: Phase, f: impl FnOnce() -> R) -> R {
+        let start = Instant::now();
+        let r = f();
+        self.add(phase, start.elapsed().as_secs_f64());
+        r
+    }
+
+    /// Record network payload bytes (the modelled exchange time is added
+    /// separately by the link model).
+    pub fn add_bytes_sent(&self, bytes: u64) {
+        self.inner.lock().unwrap().bytes_sent += bytes;
+    }
+
+    /// Record storage payload bytes.
+    pub fn add_bytes_stored(&self, bytes: u64) {
+        self.inner.lock().unwrap().bytes_stored += bytes;
+    }
+
+    pub fn secs(&self, phase: Phase) -> f64 {
+        *self.inner.lock().unwrap().secs.get(&phase).unwrap_or(&0.0)
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.inner.lock().unwrap().secs.values().sum()
+    }
+
+    pub fn bytes_sent(&self) -> u64 {
+        self.inner.lock().unwrap().bytes_sent
+    }
+
+    pub fn bytes_stored(&self) -> u64 {
+        self.inner.lock().unwrap().bytes_stored
+    }
+
+    /// Percentage breakdown (phase -> share of total), Fig. 14's series.
+    pub fn breakdown(&self) -> Vec<(Phase, f64)> {
+        let total = self.total_secs().max(1e-12);
+        Phase::all()
+            .into_iter()
+            .map(|p| (p, self.secs(p) / total * 100.0))
+            .collect()
+    }
+
+    /// Merge another ledger into this one (per-node -> cluster totals).
+    pub fn absorb(&self, other: &CostLedger) {
+        let o = other.inner.lock().unwrap();
+        let mut s = self.inner.lock().unwrap();
+        for (p, v) in &o.secs {
+            *s.secs.entry(*p).or_insert(0.0) += v;
+        }
+        s.bytes_sent += o.bytes_sent;
+        s.bytes_stored += o.bytes_stored;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_per_phase() {
+        let l = CostLedger::new();
+        l.add(Phase::Build, 1.0);
+        l.add(Phase::Build, 0.5);
+        l.add(Phase::Exchange, 2.5);
+        assert_eq!(l.secs(Phase::Build), 1.5);
+        assert_eq!(l.secs(Phase::Exchange), 2.5);
+        assert_eq!(l.total_secs(), 4.0);
+    }
+
+    #[test]
+    fn breakdown_sums_to_hundred() {
+        let l = CostLedger::new();
+        l.add(Phase::Build, 3.0);
+        l.add(Phase::Merge, 1.0);
+        let total: f64 = l.breakdown().iter().map(|(_, v)| v).sum();
+        assert!((total - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_measures_closure() {
+        let l = CostLedger::new();
+        l.time(Phase::Merge, || {
+            std::thread::sleep(std::time::Duration::from_millis(5))
+        });
+        assert!(l.secs(Phase::Merge) >= 0.004);
+    }
+
+    #[test]
+    fn absorb_combines_ledgers() {
+        let a = CostLedger::new();
+        let b = CostLedger::new();
+        a.add(Phase::Build, 1.0);
+        b.add(Phase::Build, 2.0);
+        b.add_bytes_sent(100);
+        a.absorb(&b);
+        assert_eq!(a.secs(Phase::Build), 3.0);
+        assert_eq!(a.bytes_sent(), 100);
+    }
+}

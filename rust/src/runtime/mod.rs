@@ -1,0 +1,295 @@
+//! XLA/PJRT runtime: loads the AOT-lowered Pallas distance kernel
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts` /
+//! `python/compile/aot.py`) and serves batched distance blocks to the
+//! Rust hot path. Python is never on the request path — the HLO text is
+//! compiled by the in-process PJRT CPU client at startup.
+//!
+//! Interchange is HLO **text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! DESIGN.md and /opt/xla-example/README.md).
+
+use crate::distance::DistanceEngine;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Fixed tile geometry an artifact was lowered for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileShape {
+    /// Batch of independent tiles per dispatch.
+    pub b: usize,
+    /// Rows per tile.
+    pub nx: usize,
+    /// Columns per tile.
+    pub ny: usize,
+    /// Vector dimensionality.
+    pub dim: usize,
+}
+
+impl TileShape {
+    /// Canonical artifact file name for this shape.
+    pub fn artifact_name(&self) -> String {
+        format!(
+            "l2xdist_b{}_x{}_y{}_d{}.hlo.txt",
+            self.b, self.nx, self.ny, self.dim
+        )
+    }
+
+    /// Parse a file name produced by [`TileShape::artifact_name`].
+    pub fn parse_name(name: &str) -> Option<TileShape> {
+        let rest = name.strip_prefix("l2xdist_b")?.strip_suffix(".hlo.txt")?;
+        let (b, rest) = rest.split_once("_x")?;
+        let (nx, rest) = rest.split_once("_y")?;
+        let (ny, dim) = rest.split_once("_d")?;
+        Some(TileShape {
+            b: b.parse().ok()?,
+            nx: nx.parse().ok()?,
+            ny: ny.parse().ok()?,
+            dim: dim.parse().ok()?,
+        })
+    }
+}
+
+/// Wrapper making the PJRT executable transferable across threads.
+///
+/// SAFETY: `PjRtLoadedExecutable` holds an `Rc` + raw pointer into the
+/// PJRT client. We only ever touch it while holding the engine's Mutex,
+/// so no two threads access it (or clone the Rc) concurrently, and the
+/// PJRT CPU client has no thread-affinity. This is the standard pattern
+/// for sharing a single compiled executable across worker threads.
+struct ExeCell(xla::PjRtLoadedExecutable);
+unsafe impl Send for ExeCell {}
+
+/// PJRT-backed distance engine executing the AOT Pallas kernel.
+pub struct XlaEngine {
+    exe: Mutex<ExeCell>,
+    shape: TileShape,
+    /// Dispatch counter (perf accounting).
+    dispatches: std::sync::atomic::AtomicU64,
+}
+
+impl XlaEngine {
+    /// Default artifact directory (`$KNN_MERGE_ARTIFACTS` or
+    /// `artifacts/` relative to the workspace root).
+    pub fn default_artifact_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("KNN_MERGE_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        // Tests/benches run from the workspace root.
+        PathBuf::from("artifacts")
+    }
+
+    /// List tile shapes available in a directory.
+    pub fn available(dir: &Path) -> Vec<TileShape> {
+        let Ok(entries) = std::fs::read_dir(dir) else {
+            return Vec::new();
+        };
+        let mut shapes: Vec<TileShape> = entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| TileShape::parse_name(&e.file_name().to_string_lossy()))
+            .collect();
+        shapes.sort_by_key(|s| (s.dim, s.b, s.nx, s.ny));
+        shapes
+    }
+
+    /// Load the artifact for `dim` from `dir` (any batch geometry).
+    pub fn load_for_dim(dir: &Path, dim: usize) -> Result<XlaEngine> {
+        let shape = Self::available(dir)
+            .into_iter()
+            .find(|s| s.dim == dim)
+            .with_context(|| format!("no l2xdist artifact for dim {dim} in {dir:?} (run `make artifacts`)"))?;
+        Self::load(dir, shape)
+    }
+
+    /// Load and compile a specific artifact.
+    pub fn load(dir: &Path, shape: TileShape) -> Result<XlaEngine> {
+        let path = dir.join(shape.artifact_name());
+        if !path.exists() {
+            bail!("artifact {path:?} missing (run `make artifacts`)");
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(XlaEngine {
+            exe: Mutex::new(ExeCell(exe)),
+            shape,
+            dispatches: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    pub fn shape(&self) -> TileShape {
+        self.shape
+    }
+
+    /// Number of PJRT dispatches so far.
+    pub fn dispatch_count(&self) -> u64 {
+        self.dispatches.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// One PJRT dispatch over exactly `shape.b` tiles.
+    fn dispatch(&self, xs: &[f32], ys: &[f32], out: &mut [f32]) -> Result<()> {
+        let TileShape { b, nx, ny, dim } = self.shape;
+        debug_assert_eq!(xs.len(), b * nx * dim);
+        debug_assert_eq!(ys.len(), b * ny * dim);
+        debug_assert_eq!(out.len(), b * nx * ny);
+        let x = xla::Literal::vec1(xs)
+            .reshape(&[b as i64, nx as i64, dim as i64])
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let y = xla::Literal::vec1(ys)
+            .reshape(&[b as i64, ny as i64, dim as i64])
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let exe = self.exe.lock().unwrap();
+        let result = exe
+            .0
+            .execute::<xla::Literal>(&[x, y])
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        drop(exe);
+        self.dispatches
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
+        let tuple = result.to_tuple1().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let values = tuple
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        out.copy_from_slice(&values);
+        Ok(())
+    }
+}
+
+impl DistanceEngine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn prefers_batches(&self) -> bool {
+        true
+    }
+
+    fn batch_tile(&self) -> (usize, usize) {
+        (self.shape.nx, self.shape.ny)
+    }
+
+    fn cross_l2(
+        &self,
+        xs: &[f32],
+        ys: &[f32],
+        dim: usize,
+        nx: usize,
+        ny: usize,
+        out: &mut [f32],
+    ) {
+        // Route through the batched path as a single (padded) tile set.
+        self.batch_cross_l2(xs, ys, dim, 1, nx, ny, out);
+    }
+
+    fn batch_cross_l2(
+        &self,
+        xs: &[f32],
+        ys: &[f32],
+        dim: usize,
+        b: usize,
+        nx: usize,
+        ny: usize,
+        out: &mut [f32],
+    ) {
+        let s = self.shape;
+        assert_eq!(dim, s.dim, "artifact compiled for dim {}, got {dim}", s.dim);
+        assert!(
+            nx <= s.nx && ny <= s.ny,
+            "tile {nx}x{ny} exceeds artifact tile {}x{}",
+            s.nx,
+            s.ny
+        );
+        // Pad tiles (nx,ny) -> (s.nx,s.ny) and batch -> multiples of s.b.
+        let mut t = 0usize;
+        let mut xbuf = vec![0.0f32; s.b * s.nx * dim];
+        let mut ybuf = vec![0.0f32; s.b * s.ny * dim];
+        let mut obuf = vec![0.0f32; s.b * s.nx * s.ny];
+        while t < b {
+            let chunk = (b - t).min(s.b);
+            xbuf.iter_mut().for_each(|v| *v = 0.0);
+            ybuf.iter_mut().for_each(|v| *v = 0.0);
+            for c in 0..chunk {
+                for r in 0..nx {
+                    let src = ((t + c) * nx + r) * dim;
+                    let dst = (c * s.nx + r) * dim;
+                    xbuf[dst..dst + dim].copy_from_slice(&xs[src..src + dim]);
+                }
+                for r in 0..ny {
+                    let src = ((t + c) * ny + r) * dim;
+                    let dst = (c * s.ny + r) * dim;
+                    ybuf[dst..dst + dim].copy_from_slice(&ys[src..src + dim]);
+                }
+            }
+            self.dispatch(&xbuf, &ybuf, &mut obuf)
+                .expect("PJRT dispatch failed");
+            for c in 0..chunk {
+                for r in 0..nx {
+                    let src = (c * s.nx + r) * s.ny;
+                    let dst = ((t + c) * nx + r) * ny;
+                    out[dst..dst + ny].copy_from_slice(&obuf[src..src + ny]);
+                }
+            }
+            t += chunk;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::{DistanceEngine, ScalarEngine};
+    use crate::util::Rng;
+
+    #[test]
+    fn tile_shape_name_roundtrip() {
+        let s = TileShape {
+            b: 64,
+            nx: 32,
+            ny: 32,
+            dim: 128,
+        };
+        assert_eq!(s.artifact_name(), "l2xdist_b64_x32_y32_d128.hlo.txt");
+        assert_eq!(TileShape::parse_name(&s.artifact_name()), Some(s));
+        assert_eq!(TileShape::parse_name("model.hlo.txt"), None);
+        assert_eq!(TileShape::parse_name("l2xdist_bX_x1_y1_d1.hlo.txt"), None);
+    }
+
+    // Executed only when artifacts exist (i.e. after `make artifacts`);
+    // correctness of the kernel itself is pinned by python/tests and by
+    // the integration test in rust/tests/.
+    #[test]
+    fn xla_engine_matches_scalar_when_artifacts_present() {
+        let dir = XlaEngine::default_artifact_dir();
+        let Some(shape) = XlaEngine::available(&dir).into_iter().next() else {
+            eprintln!("skipping: no artifacts in {dir:?}");
+            return;
+        };
+        let engine = XlaEngine::load(&dir, shape).unwrap();
+        let mut rng = Rng::seeded(1);
+        let dim = shape.dim;
+        let (b, nx, ny) = (3usize, shape.nx.min(5), shape.ny.min(7));
+        let xs: Vec<f32> = (0..b * nx * dim).map(|_| rng.gen_normal()).collect();
+        let ys: Vec<f32> = (0..b * ny * dim).map(|_| rng.gen_normal()).collect();
+        let mut got = vec![0.0f32; b * nx * ny];
+        let mut want = vec![0.0f32; b * nx * ny];
+        engine.batch_cross_l2(&xs, &ys, dim, b, nx, ny, &mut got);
+        ScalarEngine.batch_cross_l2(&xs, &ys, dim, b, nx, ny, &mut want);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                "xla={g} scalar={w}"
+            );
+        }
+        assert!(engine.dispatch_count() >= 1);
+    }
+}

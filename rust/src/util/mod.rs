@@ -1,0 +1,50 @@
+//! Shared substrates built from scratch for this reproduction: a fast
+//! deterministic PRNG, a parallel-for helper (OpenMP stand-in), a JSON
+//! writer for result files, and a tiny property-testing driver.
+
+pub mod json;
+pub mod parallel;
+pub mod proptest;
+pub mod rng;
+
+pub use parallel::{num_threads, parallel_for, parallel_map};
+pub use rng::Rng;
+
+/// Format a `std::time::Duration` as compact human-readable seconds.
+pub fn fmt_secs(d: std::time::Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 100.0 {
+        format!("{s:.0}s")
+    } else if s >= 1.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}ms", s * 1e3)
+    }
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(8, 4), 2);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(std::time::Duration::from_millis(5)), "5.0ms");
+        assert_eq!(fmt_secs(std::time::Duration::from_secs(2)), "2.00s");
+        assert_eq!(fmt_secs(std::time::Duration::from_secs(120)), "120s");
+    }
+}

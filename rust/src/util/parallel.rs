@@ -1,0 +1,148 @@
+//! Parallel-for helper — stand-in for the paper's OpenMP `parallel for`.
+//!
+//! The vendored dependency set has no `rayon`, so chunked fork-join
+//! parallelism is implemented directly on `std::thread::scope`. The worker
+//! count defaults to the number of logical CPUs and can be overridden with
+//! the `KNN_MERGE_THREADS` environment variable (useful both for the
+//! single-core CI container and for pinning experiments).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Number of worker threads used by [`parallel_for`] / [`parallel_map`].
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("KNN_MERGE_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// Run `body(i)` for every `i in 0..n`, work-stealing over a shared atomic
+/// counter in blocks. `body` must be `Sync` (it may be called from several
+/// threads concurrently, with disjoint indices).
+pub fn parallel_for<F>(n: usize, body: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n < 2 {
+        for i in 0..n {
+            body(i);
+        }
+        return;
+    }
+    // Block size balances scheduling overhead against load balance.
+    let block = (n / (workers * 8)).clamp(1, 1024);
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let start = next.fetch_add(block, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + block).min(n);
+                for i in start..end {
+                    body(i);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map: `out[i] = f(i)` for `i in 0..n`.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<std::sync::Mutex<&mut T>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for(n, |i| {
+            let mut slot = slots[i].lock().unwrap();
+            **slot = f(i);
+        });
+    }
+    out
+}
+
+/// Split `0..n` into `parts` near-equal contiguous ranges.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1);
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_handles_small_n() {
+        for n in 0..5 {
+            let count = AtomicUsize::new(0);
+            parallel_for(n, |_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(count.load(Ordering::Relaxed), n);
+        }
+    }
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let out = parallel_map(1000, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn split_ranges_covers_exactly() {
+        for n in [0usize, 1, 7, 100, 101] {
+            for parts in [1usize, 2, 3, 8] {
+                let rs = split_ranges(n, parts);
+                assert_eq!(rs.len(), parts);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n);
+                let mut expect = 0;
+                for r in &rs {
+                    assert_eq!(r.start, expect);
+                    expect = r.end;
+                }
+                let max = rs.iter().map(|r| r.len()).max().unwrap_or(0);
+                let min = rs.iter().map(|r| r.len()).min().unwrap_or(0);
+                assert!(max - min <= 1, "imbalanced: {rs:?}");
+            }
+        }
+    }
+}

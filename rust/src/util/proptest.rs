@@ -1,0 +1,95 @@
+//! Tiny property-testing driver (the vendored set has no `proptest`).
+//!
+//! A property is a closure over a seeded [`Rng`]; the driver runs it for a
+//! number of cases with distinct derived seeds and reports the failing
+//! seed on panic, so failures are reproducible with
+//! `check_property_seeded(<seed>, ..)`.
+
+use super::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` for [`DEFAULT_CASES`] random cases derived from `base_seed`.
+/// Panics (with the case seed) on the first failing case.
+pub fn check_property<F>(name: &str, base_seed: u64, prop: F)
+where
+    F: Fn(&mut Rng),
+{
+    check_property_cases(name, base_seed, DEFAULT_CASES, prop)
+}
+
+/// Like [`check_property`] with an explicit case count.
+pub fn check_property_cases<F>(name: &str, base_seed: u64, cases: usize, prop: F)
+where
+    F: Fn(&mut Rng),
+{
+    for case in 0..cases {
+        let seed = derive_seed(base_seed, case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::seeded(seed);
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}): {msg}\n\
+                 reproduce with: check_property_seeded({seed}, ..)"
+            );
+        }
+    }
+}
+
+/// Run a property once with an explicit seed (reproduction helper).
+pub fn check_property_seeded<F>(seed: u64, prop: F)
+where
+    F: Fn(&mut Rng),
+{
+    let mut rng = Rng::seeded(seed);
+    prop(&mut rng);
+}
+
+fn derive_seed(base: u64, case: u64) -> u64 {
+    let mut s = base ^ case.wrapping_mul(0xA24BAED4963EE407);
+    super::rng::splitmix64(&mut s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::sync::atomic::AtomicUsize::new(0);
+        check_property_cases("count", 1, 10, |_| {
+            count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(count.load(std::sync::atomic::Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check_property_cases("always-fails", 2, 4, |_| {
+                panic!("boom");
+            });
+        });
+        let msg = match result {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("seed"), "message: {msg}");
+        assert!(msg.contains("boom"), "message: {msg}");
+    }
+
+    #[test]
+    fn seeds_vary_across_cases() {
+        let a = derive_seed(7, 0);
+        let b = derive_seed(7, 1);
+        assert_ne!(a, b);
+    }
+}

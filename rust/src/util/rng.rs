@@ -1,0 +1,223 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The vendored dependency set has no `rand` crate, so this module
+//! implements SplitMix64 (for seeding) and Xoshiro256\*\* (the workhorse
+//! generator) from the published reference algorithms. Every stochastic
+//! component in the crate draws from [`Rng`] with an explicit seed, which
+//! makes experiments and tests reproducible bit-for-bit.
+
+/// SplitMix64 step — used to expand a single `u64` seed into the four
+/// words of Xoshiro state (and useful on its own as a cheap hash).
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Xoshiro256\*\* pseudo-random generator (Blackman & Vigna).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent stream for a sub-task (e.g. one per thread
+    /// or per element) without correlation with the parent stream.
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let mut sm = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        Rng::seeded(splitmix64(&mut sm))
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform integer in `[0, bound)`. `bound` must be non-zero.
+    #[inline]
+    pub fn gen_range(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        // Lemire's multiply-shift rejection method.
+        let bound = bound as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn gen_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal sample (Box–Muller; one value per call, the spare
+    /// is discarded to keep the generator state simple).
+    pub fn gen_normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.gen_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.gen_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `count` distinct values from `[0, bound)`.
+    /// Uses Floyd's algorithm, O(count) expected.
+    pub fn sample_distinct(&mut self, bound: usize, count: usize) -> Vec<usize> {
+        let count = count.min(bound);
+        if count * 3 >= bound {
+            // Dense case: shuffle a full index vector prefix.
+            let mut all: Vec<usize> = (0..bound).collect();
+            for i in 0..count {
+                let j = i + self.gen_range(bound - i);
+                all.swap(i, j);
+            }
+            all.truncate(count);
+            return all;
+        }
+        let mut chosen = std::collections::HashSet::with_capacity(count);
+        let mut out = Vec::with_capacity(count);
+        for j in (bound - count)..bound {
+            let t = self.gen_range(j + 1);
+            let v = if chosen.contains(&t) { j } else { t };
+            chosen.insert(v);
+            out.push(v);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::seeded(42);
+        let mut b = Rng::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::seeded(1);
+        let mut b = Rng::seeded(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn gen_range_in_bounds_and_covers() {
+        let mut r = Rng::seeded(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.gen_range(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gen_f32_unit_interval() {
+        let mut r = Rng::seeded(3);
+        for _ in 0..1000 {
+            let v = r.gen_f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn normal_moments_roughly_standard() {
+        let mut r = Rng::seeded(11);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gen_normal() as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.08, "var={var}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_bounded() {
+        let mut r = Rng::seeded(5);
+        for &(bound, count) in &[(10usize, 3usize), (100, 40), (5, 5), (7, 20)] {
+            let s = r.sample_distinct(bound, count);
+            assert_eq!(s.len(), count.min(bound));
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), s.len(), "duplicates in {s:?}");
+            assert!(s.iter().all(|&v| v < bound));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seeded(9);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut parent = Rng::seeded(1234);
+        let mut c1 = parent.fork(0);
+        let mut c2 = parent.fork(1);
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert!(same < 2);
+    }
+}

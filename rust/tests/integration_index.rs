@@ -1,0 +1,152 @@
+//! Integration: indexing-graph merge pipeline (Sec. III-B / V-D) —
+//! HNSW/Vamana subset indexes, Two-way Merge of their base graphs with
+//! no-eviction union, Eq. (1) re-diversification, and search-quality
+//! parity with scratch builds.
+
+use knn_merge::dataset::DatasetFamily;
+use knn_merge::distance::Metric;
+use knn_merge::eval::recall::{search_recall, GroundTruth};
+use knn_merge::index::search::run_queries;
+use knn_merge::index::{Hnsw, HnswParams, Vamana, VamanaParams};
+use knn_merge::merge::index_merge::{merge_two_index_graphs, IndexKind};
+use knn_merge::merge::MergeParams;
+
+#[test]
+fn merged_hnsw_search_parity() {
+    let ds = DatasetFamily::Deep.generate(1_500, 1);
+    let queries = DatasetFamily::Deep.generate_queries(40, 1);
+    let truth = GroundTruth::for_queries(&ds, &queries, 10, Metric::L2);
+    let parts = ds.split_contiguous(2);
+    let hp = HnswParams::default();
+
+    let scratch = Hnsw::build(&ds, Metric::L2, hp);
+    let h1 = Hnsw::build(&parts[0].0, Metric::L2, hp);
+    let h2 = Hnsw::build(&parts[1].0, Metric::L2, hp);
+    let merged = merge_two_index_graphs(
+        &parts[0].0,
+        &parts[1].0,
+        &h1.to_knn_graph(&parts[0].0, Metric::L2),
+        &h2.to_knn_graph(&parts[1].0, Metric::L2),
+        Metric::L2,
+        MergeParams {
+            k: 2 * hp.m,
+            lambda: 16,
+            ..Default::default()
+        },
+        IndexKind::Hnsw,
+        2 * hp.m,
+    );
+    merged.validate().unwrap();
+
+    let (rs, _, _) = run_queries(&ds, Metric::L2, &scratch.base_index(), &queries, 10, 96);
+    let (rm, _, _) = run_queries(&ds, Metric::L2, &merged, &queries, 10, 96);
+    let recall_scratch = search_recall(&rs, &truth, 10);
+    let recall_merged = search_recall(&rm, &truth, 10);
+    // Paper: merged within ~5% of scratch (often better).
+    assert!(
+        recall_merged > recall_scratch - 0.05,
+        "merged {recall_merged} vs scratch {recall_scratch}"
+    );
+}
+
+#[test]
+fn merged_vamana_search_parity() {
+    let ds = DatasetFamily::Sift.generate(1_500, 2);
+    let queries = DatasetFamily::Sift.generate_queries(40, 2);
+    let truth = GroundTruth::for_queries(&ds, &queries, 10, Metric::L2);
+    let parts = ds.split_contiguous(2);
+    let vp = VamanaParams::default();
+
+    let scratch = Vamana::build(&ds, Metric::L2, vp);
+    let v1 = Vamana::build(&parts[0].0, Metric::L2, vp);
+    let v2 = Vamana::build(&parts[1].0, Metric::L2, vp);
+    let merged = merge_two_index_graphs(
+        &parts[0].0,
+        &parts[1].0,
+        &v1.to_knn_graph(&parts[0].0, Metric::L2),
+        &v2.to_knn_graph(&parts[1].0, Metric::L2),
+        Metric::L2,
+        MergeParams {
+            k: vp.r,
+            lambda: 16,
+            ..Default::default()
+        },
+        IndexKind::Vamana { alpha: vp.alpha },
+        vp.r,
+    );
+    merged.validate().unwrap();
+
+    let (rs, _, _) = run_queries(&ds, Metric::L2, &scratch.graph, &queries, 10, 96);
+    let (rm, _, _) = run_queries(&ds, Metric::L2, &merged, &queries, 10, 96);
+    let recall_scratch = search_recall(&rs, &truth, 10);
+    let recall_merged = search_recall(&rm, &truth, 10);
+    assert!(
+        recall_merged > recall_scratch - 0.05,
+        "merged {recall_merged} vs scratch {recall_scratch}"
+    );
+}
+
+#[test]
+fn diversification_post_processing_reduces_cost_not_recall() {
+    // The union graph WITHOUT diversification has over-full redundant
+    // neighborhoods; after Eq. (1) pruning, search needs fewer distance
+    // evaluations at near-equal recall — the Sec. III-B rationale.
+    use knn_merge::graph::KnnGraph;
+    use knn_merge::index::IndexGraph;
+    use knn_merge::merge::index_merge::union_and_diversify;
+    use knn_merge::merge::{SupportLists, TwoWayMerge};
+
+    let ds = DatasetFamily::Deep.generate(1_200, 3);
+    let queries = DatasetFamily::Deep.generate_queries(30, 3);
+    let truth = GroundTruth::for_queries(&ds, &queries, 10, Metric::L2);
+    let parts = ds.split_contiguous(2);
+    let hp = HnswParams::default();
+    let h1 = Hnsw::build(&parts[0].0, Metric::L2, hp);
+    let h2 = Hnsw::build(&parts[1].0, Metric::L2, hp);
+    let g1 = h1.to_knn_graph(&parts[0].0, Metric::L2);
+    let g2 = h2.to_knn_graph(&parts[1].0, Metric::L2);
+    let params = MergeParams {
+        k: 2 * hp.m,
+        lambda: 16,
+        ..Default::default()
+    };
+    let mut s1 = SupportLists::build(&g1, params.lambda);
+    let mut s2 = SupportLists::build(&g2, params.lambda);
+    s2.offset_ids(parts[0].0.len() as u32);
+    s1.lists.append(&mut s2.lists);
+    let cross =
+        TwoWayMerge::new(params).cross_graph(&parts[0].0, &parts[1].0, &s1, Metric::L2);
+    let g0 = KnnGraph::concat(&[&g1, &g2], &[0, parts[0].0.len()]);
+
+    // Raw union (no diversification): capacity-unbounded adjacency.
+    let raw = IndexGraph {
+        adj: (0..g0.len())
+            .map(|i| {
+                let mut ids = g0.ids(i);
+                for id in cross.ids(i) {
+                    if !ids.contains(&id) {
+                        ids.push(id);
+                    }
+                }
+                ids
+            })
+            .collect(),
+        max_degree: 4 * hp.m,
+        entry: 0,
+    };
+    let pruned = union_and_diversify(&ds, Metric::L2, &g0, &cross, IndexKind::Hnsw, 2 * hp.m);
+    assert!(pruned.edge_count() < raw.edge_count());
+
+    let (r_raw, _, s_raw) = run_queries(&ds, Metric::L2, &raw, &queries, 10, 64);
+    let (r_pruned, _, s_pruned) = run_queries(&ds, Metric::L2, &pruned, &queries, 10, 64);
+    let recall_raw = search_recall(&r_raw, &truth, 10);
+    let recall_pruned = search_recall(&r_pruned, &truth, 10);
+    assert!(
+        recall_pruned > recall_raw - 0.05,
+        "pruned {recall_pruned} vs raw {recall_raw}"
+    );
+    assert!(
+        s_pruned.dist_evals < s_raw.dist_evals,
+        "pruning should reduce search cost"
+    );
+}

@@ -1,0 +1,86 @@
+//! Integration: the three construction pipelines (single-node merge,
+//! distributed Alg. 3, out-of-core) must all produce valid graphs of
+//! equivalent quality on the same dataset.
+
+use knn_merge::config::RunConfig;
+use knn_merge::construction::NnDescentParams;
+use knn_merge::coordinator::{build_out_of_core, build_single_node, MergeStrategy};
+use knn_merge::dataset::DatasetFamily;
+use knn_merge::distance::Metric;
+use knn_merge::distributed::run_cluster;
+use knn_merge::eval::recall::{graph_recall, GroundTruth};
+use knn_merge::merge::MergeParams;
+
+fn cfg(parts: usize) -> RunConfig {
+    RunConfig {
+        parts,
+        merge: MergeParams {
+            k: 10,
+            lambda: 10,
+            ..Default::default()
+        },
+        nnd: NnDescentParams {
+            k: 10,
+            lambda: 10,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn all_pipelines_reach_equivalent_quality() {
+    let ds = DatasetFamily::Deep.generate(900, 1);
+    let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 150, 2);
+    let c = cfg(3);
+
+    let single = build_single_node(&ds, &c, MergeStrategy::TwoWayHierarchy);
+    let multi = build_single_node(&ds, &c, MergeStrategy::MultiWay);
+    let cluster = run_cluster(&ds, &c);
+    let (ooc, _) = build_out_of_core(&ds, &c).unwrap();
+
+    for (name, g) in [
+        ("single/two-way", &single.graph),
+        ("single/multi-way", &multi.graph),
+        ("distributed", &cluster.graph),
+        ("out-of-core", &ooc),
+    ] {
+        g.validate(true).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(g.len(), 900, "{name}");
+        let r = graph_recall(g, &truth, 10);
+        assert!(r > 0.85, "{name} recall@10 = {r}");
+    }
+}
+
+#[test]
+fn distributed_quality_stable_across_node_counts() {
+    let ds = DatasetFamily::Sift.generate(800, 3);
+    let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 120, 4);
+    let mut recalls = Vec::new();
+    for nodes in [2usize, 3, 4, 5] {
+        let result = run_cluster(&ds, &cfg(nodes));
+        result.graph.validate(true).unwrap();
+        recalls.push(graph_recall(&result.graph, &truth, 10));
+    }
+    for (i, r) in recalls.iter().enumerate() {
+        assert!(*r > 0.8, "nodes={} recall={r}", i + 2);
+    }
+}
+
+#[test]
+fn config_file_drives_the_pipeline() {
+    let dir = std::env::temp_dir().join(format!("knnmerge-itcfg-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.toml");
+    std::fs::write(
+        &path,
+        "[dataset]\nfamily = \"deep\"\nn = 500\n[run]\nparts = 2\n[merge]\nk = 8\nlambda = 8\n",
+    )
+    .unwrap();
+    let cfg = RunConfig::load(&path).unwrap();
+    assert_eq!(cfg.n, 500);
+    let ds = cfg.family.generate(cfg.n, cfg.seed);
+    let result = build_single_node(&ds, &cfg, MergeStrategy::TwoWayHierarchy);
+    assert_eq!(result.graph.len(), 500);
+    result.graph.validate(true).unwrap();
+}

@@ -1,0 +1,112 @@
+//! Integration across the three layers: the AOT Pallas artifact
+//! (L1/L2, authored in python, lowered once) executed from the Rust
+//! coordinator (L3) must agree numerically with the scalar engine and
+//! must drive Two-way Merge to the same quality.
+//!
+//! These tests skip gracefully when `make artifacts` has not run — the
+//! `make test` target always builds artifacts first.
+
+use knn_merge::construction::{NnDescent, NnDescentParams};
+use knn_merge::dataset::DatasetFamily;
+use knn_merge::distance::{DistanceEngine, Metric, ScalarEngine};
+use knn_merge::eval::recall::{graph_recall, GroundTruth};
+use knn_merge::merge::{MergeParams, TwoWayMerge};
+use knn_merge::runtime::XlaEngine;
+use knn_merge::util::Rng;
+
+fn engine_for(dim: usize) -> Option<XlaEngine> {
+    match XlaEngine::load_for_dim(&XlaEngine::default_artifact_dir(), dim) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pallas_artifact_matches_scalar_engine_all_dims() {
+    let dir = XlaEngine::default_artifact_dir();
+    let shapes = XlaEngine::available(&dir);
+    if shapes.is_empty() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut rng = Rng::seeded(7);
+    for shape in shapes {
+        let engine = XlaEngine::load(&dir, shape).unwrap();
+        let (b, nx, ny, dim) = (2usize, shape.nx, shape.ny, shape.dim);
+        let xs: Vec<f32> = (0..b * nx * dim).map(|_| rng.gen_normal() * 3.0).collect();
+        let ys: Vec<f32> = (0..b * ny * dim).map(|_| rng.gen_normal() * 3.0).collect();
+        let mut got = vec![0.0f32; b * nx * ny];
+        let mut want = vec![0.0f32; b * nx * ny];
+        engine.batch_cross_l2(&xs, &ys, dim, b, nx, ny, &mut got);
+        ScalarEngine.batch_cross_l2(&xs, &ys, dim, b, nx, ny, &mut want);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g - w).abs() <= 2e-3 * w.abs().max(1.0),
+                "dim={dim}: xla={g} scalar={w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn merge_via_pallas_engine_matches_scalar_quality() {
+    let Some(engine) = engine_for(128) else { return };
+    let ds = DatasetFamily::Sift.generate(1_000, 5);
+    let parts = ds.split_contiguous(2);
+    let nnd = NnDescent::new(NnDescentParams {
+        k: 10,
+        lambda: 8,
+        ..Default::default()
+    });
+    let g1 = nnd.build(&parts[0].0, Metric::L2);
+    let g2 = nnd.build(&parts[1].0, Metric::L2);
+    let params = MergeParams {
+        k: 10,
+        lambda: 8,
+        ..Default::default()
+    };
+    let scalar = TwoWayMerge::new(params).merge(&parts[0].0, &parts[1].0, &g1, &g2, Metric::L2);
+    let xla = TwoWayMerge::new(params).merge_observed(
+        &parts[0].0,
+        &parts[1].0,
+        &g1,
+        &g2,
+        Metric::L2,
+        &engine,
+        &mut |_, _, _| {},
+    );
+    assert!(engine.dispatch_count() > 0, "engine was not used");
+    let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 150, 6);
+    let r_scalar = graph_recall(&scalar, &truth, 10);
+    let r_xla = graph_recall(&xla, &truth, 10);
+    assert!(
+        (r_scalar - r_xla).abs() < 0.03,
+        "scalar={r_scalar} xla={r_xla}"
+    );
+    xla.validate(true).unwrap();
+}
+
+#[test]
+fn gnnd_standin_runs_on_pallas_engine() {
+    let Some(engine) = engine_for(128) else { return };
+    let ds = DatasetFamily::Sift.generate(600, 9);
+    let g = knn_merge::baselines::gnnd::build(
+        &ds,
+        Metric::L2,
+        knn_merge::baselines::gnnd::GnndParams {
+            k: 10,
+            lambda: 8,
+            max_iters: 10,
+            ..Default::default()
+        },
+        &engine,
+    );
+    g.validate(true).unwrap();
+    let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 100, 10);
+    let r = graph_recall(&g, &truth, 10);
+    assert!(r > 0.65, "gnnd-on-xla recall = {r}");
+    assert!(engine.dispatch_count() > 0);
+}

@@ -1,0 +1,214 @@
+//! Cross-module property tests: coordinator invariants (routing /
+//! batching / state) under randomized configurations.
+
+use knn_merge::config::RunConfig;
+use knn_merge::construction::NnDescentParams;
+use knn_merge::dataset::{DatasetFamily, GeneratorConfig};
+use knn_merge::distance::Metric;
+use knn_merge::distributed::{run_cluster, scheduler};
+use knn_merge::eval::recall::{graph_recall, GroundTruth};
+use knn_merge::graph::serial;
+use knn_merge::merge::{MergeParams, MultiWayMerge, SubsetMap, SupportLists, TwoWayMerge};
+use knn_merge::util::proptest::check_property_cases;
+
+#[test]
+fn property_cluster_graph_always_valid() {
+    check_property_cases("cluster-valid", 42, 6, |rng| {
+        let n = 300 + rng.gen_range(300);
+        let parts = 2 + rng.gen_range(4);
+        let k = 4 + rng.gen_range(8);
+        let ds = DatasetFamily::Deep.generate(n, rng.next_u64());
+        let cfg = RunConfig {
+            parts,
+            merge: MergeParams {
+                k,
+                lambda: k,
+                max_iters: 4,
+                ..Default::default()
+            },
+            nnd: NnDescentParams {
+                k,
+                lambda: k,
+                max_iters: 4,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let result = run_cluster(&ds, &cfg);
+        assert_eq!(result.graph.len(), n);
+        result.graph.validate(true).unwrap();
+        // Every node sent its support each round plus cross graphs.
+        assert!(result.bytes_exchanged() > 0);
+    });
+}
+
+#[test]
+fn property_two_way_cross_edges_only() {
+    check_property_cases("two-way-cross-only", 43, 8, |rng| {
+        let n1 = 80 + rng.gen_range(120);
+        let n2 = 80 + rng.gen_range(120);
+        let k = 4 + rng.gen_range(6);
+        let cfgen = |n: usize, seed: u64| {
+            GeneratorConfig {
+                n,
+                dim: 16,
+                clusters: 4,
+                intrinsic_dim: 6,
+                noise_sigma: 0.05,
+                normalize: false,
+                nonnegative: false,
+                center_scale: 0.6,
+            }
+            .generate(seed)
+        };
+        let d1 = cfgen(n1, rng.next_u64());
+        let d2 = cfgen(n2, rng.next_u64());
+        let nnd = knn_merge::construction::NnDescent::new(NnDescentParams {
+            k,
+            lambda: k,
+            max_iters: 5,
+            ..Default::default()
+        });
+        let g1 = nnd.build(&d1, Metric::L2);
+        let g2 = nnd.build(&d2, Metric::L2);
+        let mut s1 = SupportLists::build(&g1, k);
+        let mut s2 = SupportLists::build(&g2, k);
+        s2.offset_ids(n1 as u32);
+        s1.lists.append(&mut s2.lists);
+        let cross = TwoWayMerge::new(MergeParams {
+            k,
+            lambda: k,
+            max_iters: 4,
+            ..Default::default()
+        })
+        .cross_graph(&d1, &d2, &s1, Metric::L2);
+        // Invariant: G[i] holds only cross-subset neighbors (the routing
+        // property Alg. 3 depends on to split G into G_i^j / G_j^i).
+        for i in 0..cross.len() {
+            for id in cross.ids(i) {
+                assert_ne!(
+                    i < n1,
+                    (id as usize) < n1,
+                    "same-subset edge {i}->{id}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn property_multiway_respects_sof_exclusion() {
+    check_property_cases("multi-way-sof", 44, 5, |rng| {
+        let m = 3 + rng.gen_range(3);
+        let k = 4 + rng.gen_range(4);
+        let n = (60 + rng.gen_range(60)) * m;
+        let ds = DatasetFamily::Sift.generate(n, rng.next_u64());
+        let parts = ds.split_contiguous(m);
+        let sizes: Vec<usize> = parts.iter().map(|(d, _)| d.len()).collect();
+        let map = SubsetMap::from_sizes(&sizes);
+        let nnd = knn_merge::construction::NnDescent::new(NnDescentParams {
+            k,
+            lambda: k,
+            max_iters: 4,
+            ..Default::default()
+        });
+        let graphs: Vec<_> = parts.iter().map(|(d, _)| nnd.build(d, Metric::L2)).collect();
+        let mut support = SupportLists { lists: Vec::new() };
+        for (s, g) in graphs.iter().enumerate() {
+            let mut part = SupportLists::build(g, k);
+            part.offset_ids(map.range(s).start as u32);
+            support.lists.append(&mut part.lists);
+        }
+        let subsets: Vec<&_> = parts.iter().map(|(d, _)| d).collect();
+        let cross = MultiWayMerge::new(MergeParams {
+            k,
+            lambda: k,
+            max_iters: 3,
+            ..Default::default()
+        })
+        .cross_graph_observed(
+            &subsets,
+            &support,
+            Metric::L2,
+            &knn_merge::distance::ScalarEngine,
+            &mut |_, _, _| {},
+        );
+        for i in 0..cross.len() {
+            for id in cross.ids(i) {
+                assert_ne!(map.sof(i), map.sof(id as usize));
+            }
+        }
+    });
+}
+
+#[test]
+fn property_serialization_total() {
+    // Any graph the pipelines produce must round-trip the wire format
+    // (the payload path of Alg. 3).
+    check_property_cases("wire-roundtrip", 45, 8, |rng| {
+        let n = 100 + rng.gen_range(200);
+        let k = 4 + rng.gen_range(8);
+        let ds = DatasetFamily::Deep.generate(n, rng.next_u64());
+        let g = knn_merge::construction::NnDescent::new(NnDescentParams {
+            k,
+            lambda: k,
+            max_iters: 3,
+            ..Default::default()
+        })
+        .build(&ds, Metric::L2);
+        let bytes = serial::graph_to_bytes(&g);
+        assert_eq!(bytes.len() as u64, g.payload_bytes());
+        assert_eq!(serial::graph_from_bytes(&bytes).unwrap(), g);
+    });
+}
+
+#[test]
+fn property_ring_schedule_covers_all_pairs() {
+    check_property_cases("ring-cover", 46, 32, |rng| {
+        let m = 2 + rng.gen_range(14);
+        let pairs = scheduler::merged_pairs(m);
+        for a in 0..m {
+            for b in (a + 1)..m {
+                assert!(
+                    pairs.contains(&(a, b)),
+                    "pair ({a},{b}) never merged for m={m}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn property_merge_quality_monotone_in_subgraph_quality() {
+    // Fig. 7's core claim as a property: better subgraphs never yield a
+    // (much) worse merged graph.
+    check_property_cases("quality-monotone", 47, 3, |rng| {
+        let n = 400;
+        let ds = DatasetFamily::Deep.generate(n, rng.next_u64());
+        let parts = ds.split_contiguous(2);
+        let exact1 = knn_merge::construction::bruteforce::build(&parts[0].0, 8, Metric::L2);
+        let exact2 = knn_merge::construction::bruteforce::build(&parts[1].0, 8, Metric::L2);
+        let truth = GroundTruth::sampled(&ds, 8, Metric::L2, 80, rng.next_u64());
+        let merger = TwoWayMerge::new(MergeParams {
+            k: 8,
+            lambda: 8,
+            ..Default::default()
+        });
+        let mut last = 0.0;
+        for keep in [0.3, 0.7, 1.0] {
+            let g1 = knn_merge::eval::recall::degrade_graph(
+                &exact1, &parts[0].0, Metric::L2, keep, 1,
+            );
+            let g2 = knn_merge::eval::recall::degrade_graph(
+                &exact2, &parts[1].0, Metric::L2, keep, 2,
+            );
+            let merged = merger.merge(&parts[0].0, &parts[1].0, &g1, &g2, Metric::L2);
+            let r = graph_recall(&merged, &truth, 8);
+            assert!(
+                r > last - 0.08,
+                "recall dropped from {last} to {r} at keep={keep}"
+            );
+            last = r;
+        }
+    });
+}
