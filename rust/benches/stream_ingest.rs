@@ -1,0 +1,78 @@
+//! Streaming microbench: sustained insert throughput and p50 search
+//! latency of the online segment-log index at three segment sizes.
+//!
+//! Smaller segments seal cheaply (low ingest latency) but fan every
+//! query out over more probes; larger segments amortize compaction but
+//! pause ingest longer per seal. Emits `results/stream_ingest.json` in
+//! the same shape as the other bench outputs.
+
+use knn_merge::config::StreamConfig;
+use knn_merge::dataset::DatasetFamily;
+use knn_merge::distance::Metric;
+use knn_merge::eval::bench::{scaled, BenchReport, Row};
+use knn_merge::eval::recall::{search_recall, GroundTruth};
+use knn_merge::merge::MergeParams;
+use knn_merge::stream::StreamingIndex;
+use std::time::Instant;
+
+fn main() {
+    let n = scaled(20_000);
+    let topk = 10;
+    let ef = 64;
+    let ds = DatasetFamily::Sift.generate(n, 42);
+    let queries = DatasetFamily::Sift.generate_queries(200, 7);
+    let truth = GroundTruth::for_queries(&ds, &queries, topk, Metric::L2);
+
+    let mut report = BenchReport::new("stream_ingest");
+    report.note(format!(
+        "streaming ingest, sift-like n={n} dim={} k=20 lambda=10; inline tick() compaction",
+        ds.dim
+    ));
+    report.note(format!(
+        "p50/p99 over {} single-query searches (topk={topk}, ef={ef}) on the final set",
+        queries.len()
+    ));
+
+    for segment_size in [512usize, 1024, 2048] {
+        let cfg = StreamConfig {
+            segment_size,
+            merge: MergeParams {
+                k: 20,
+                lambda: 10,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let index = StreamingIndex::new(ds.dim, Metric::L2, cfg);
+        let t0 = Instant::now();
+        for i in 0..ds.len() {
+            index.insert(ds.vector(i));
+            index.tick();
+        }
+        index.flush();
+        let ingest_secs = t0.elapsed().as_secs_f64();
+
+        let mut lat: Vec<f64> = Vec::with_capacity(queries.len());
+        let mut results: Vec<Vec<u32>> = Vec::with_capacity(queries.len());
+        for q in 0..queries.len() {
+            let t = Instant::now();
+            let ids = index.search(queries.vector(q), topk);
+            lat.push(t.elapsed().as_secs_f64());
+            results.push(ids);
+        }
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = lat[lat.len() / 2];
+        let p99 = lat[(lat.len() * 99) / 100];
+        let stats = index.stats();
+        report.push(
+            Row::new(format!("segment={segment_size}"))
+                .col("inserts_per_s", n as f64 / ingest_secs.max(1e-9))
+                .col("p50_search_ms", p50 * 1e3)
+                .col("p99_search_ms", p99 * 1e3)
+                .col("recall@10", search_recall(&results, &truth, topk))
+                .col("segments", stats.live_segments as f64)
+                .col("compactions", stats.compactions as f64),
+        );
+    }
+    report.finish();
+}

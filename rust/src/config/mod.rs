@@ -88,6 +88,105 @@ impl ConfigMap {
     }
 }
 
+/// Which search structure streaming segments maintain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamGraphMode {
+    /// Raw k-NN graphs; search runs over the unplugged adjacency.
+    Knn,
+    /// Diversified indexing graphs (Eq. 1 pruning after each merge).
+    Index,
+}
+
+impl StreamGraphMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StreamGraphMode::Knn => "knn",
+            StreamGraphMode::Index => "index",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<StreamGraphMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "knn" => Some(StreamGraphMode::Knn),
+            "index" | "indexing" => Some(StreamGraphMode::Index),
+            _ => None,
+        }
+    }
+}
+
+/// Configuration of the online streaming subsystem (`stream::`): the
+/// LSM-of-subgraphs segment log. `segment_size` trades ingest latency
+/// (seal/compaction pauses grow with it) against search fan-out (more,
+/// smaller segments must each be probed); `merge.lambda` plays the same
+/// cost/quality role it plays in the batch pipeline, once per
+/// compaction.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Memtable capacity: vectors buffered before sealing a segment.
+    pub segment_size: usize,
+    /// Seal builds brute-force up to this size, NN-Descent above it.
+    pub brute_threshold: usize,
+    /// Search structure kept per segment.
+    pub mode: StreamGraphMode,
+    /// Diversification alpha (Index mode; Vamana-style, typically 1.2).
+    pub alpha: f32,
+    /// Degree bound of the per-segment index graph.
+    pub max_degree: usize,
+    /// Default beam width for `StreamingIndex::search`.
+    pub ef: usize,
+    /// Compaction / graph parameters (k, lambda, delta, iters, seed).
+    pub merge: MergeParams,
+    /// Segment-build parameters (NN-Descent above `brute_threshold`).
+    pub nnd: NnDescentParams,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        let merge = MergeParams::default();
+        StreamConfig {
+            segment_size: 1024,
+            brute_threshold: 512,
+            mode: StreamGraphMode::Knn,
+            alpha: 1.2,
+            max_degree: merge.k,
+            ef: 64,
+            merge,
+            nnd: NnDescentParams::default(),
+        }
+    }
+}
+
+impl StreamConfig {
+    /// Build from a parsed [`ConfigMap`] `[stream]` section; missing keys
+    /// keep defaults. The `[merge]` keys feed the compaction parameters
+    /// through [`RunConfig::from_map`].
+    pub fn apply_map(&mut self, map: &ConfigMap) -> Result<()> {
+        if let Some(v) = map.get_usize("stream.segment_size")? {
+            if v == 0 {
+                bail!("stream.segment_size must be positive");
+            }
+            self.segment_size = v;
+        }
+        if let Some(v) = map.get_usize("stream.brute_threshold")? {
+            self.brute_threshold = v;
+        }
+        if let Some(name) = map.get("stream.mode") {
+            self.mode = StreamGraphMode::from_name(name)
+                .with_context(|| format!("unknown stream mode '{name}'"))?;
+        }
+        if let Some(v) = map.get_f64("stream.alpha")? {
+            self.alpha = v as f32;
+        }
+        if let Some(v) = map.get_usize("stream.max_degree")? {
+            self.max_degree = v;
+        }
+        if let Some(v) = map.get_usize("stream.ef")? {
+            self.ef = v;
+        }
+        Ok(())
+    }
+}
+
 /// A complete run configuration for the coordinator.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -113,6 +212,8 @@ pub struct RunConfig {
     pub scratch_dir: String,
     /// Dataset seed.
     pub seed: u64,
+    /// Online streaming subsystem parameters.
+    pub stream: StreamConfig,
 }
 
 impl Default for RunConfig {
@@ -132,6 +233,7 @@ impl Default for RunConfig {
                 .to_string_lossy()
                 .to_string(),
             seed: 42,
+            stream: StreamConfig::default(),
         }
     }
 }
@@ -189,6 +291,12 @@ impl RunConfig {
         if let Some(v) = map.get("storage.scratch_dir") {
             cfg.scratch_dir = v.to_string();
         }
+        // The [merge] keys drive compaction too; [stream] keys override
+        // the subsystem's own knobs.
+        cfg.stream.merge = cfg.merge;
+        cfg.stream.nnd = cfg.nnd;
+        cfg.stream.max_degree = cfg.merge.k;
+        cfg.stream.apply_map(map)?;
         Ok(cfg)
     }
 
@@ -262,6 +370,39 @@ latency_us = 50
         map.set("merge.k", "64");
         let cfg = RunConfig::from_map(&map).unwrap();
         assert_eq!(cfg.merge.k, 64);
+    }
+
+    #[test]
+    fn stream_config_from_map() {
+        let text = r#"
+[merge]
+k = 24
+lambda = 12
+
+[stream]
+segment_size = 2048
+mode = "index"
+alpha = 1.3
+ef = 96
+"#;
+        let map = ConfigMap::parse(text).unwrap();
+        let cfg = RunConfig::from_map(&map).unwrap();
+        assert_eq!(cfg.stream.segment_size, 2048);
+        assert_eq!(cfg.stream.mode, StreamGraphMode::Index);
+        assert!((cfg.stream.alpha - 1.3).abs() < 1e-6);
+        assert_eq!(cfg.stream.ef, 96);
+        // merge keys propagate into the compaction parameters
+        assert_eq!(cfg.stream.merge.k, 24);
+        assert_eq!(cfg.stream.merge.lambda, 12);
+        assert_eq!(cfg.stream.max_degree, 24);
+    }
+
+    #[test]
+    fn stream_config_rejects_bad_values() {
+        let map = ConfigMap::parse("[stream]\nsegment_size = 0").unwrap();
+        assert!(RunConfig::from_map(&map).is_err());
+        let map = ConfigMap::parse("[stream]\nmode = bogus").unwrap();
+        assert!(RunConfig::from_map(&map).is_err());
     }
 
     #[test]

@@ -54,9 +54,49 @@ impl IndexGraph {
         }
     }
 
+    /// Convert a k-NN graph into an *undirected* index graph: forward
+    /// neighbors plus up to `k` reverse neighbors per vertex (degree
+    /// bound `2k`). Directed k-NN graphs fragment into per-cluster
+    /// sinks; the symmetrized graph keeps overlapping clusters mutually
+    /// reachable for best-first search without a full index build.
+    pub fn from_knn_undirected(g: &KnnGraph) -> IndexGraph {
+        let rev = g.reverse(g.k.max(1));
+        let adj = crate::util::parallel_map(g.len(), |i| {
+            let mut a = g.ids(i);
+            for &r in &rev[i] {
+                if !a.contains(&r) {
+                    a.push(r);
+                }
+            }
+            a
+        });
+        IndexGraph {
+            adj,
+            max_degree: 2 * g.k.max(1),
+            entry: 0,
+        }
+    }
+
     /// Total directed edges.
     pub fn edge_count(&self) -> usize {
         self.adj.iter().map(|a| a.len()).sum()
+    }
+
+    /// Rebuild a distance-annotated [`KnnGraph`] from the adjacency
+    /// (distances recomputed against `ds`) — the inverse of
+    /// [`IndexGraph::from_knn`], needed when a diversified index must
+    /// re-enter a merge (the merge substrate carries distances).
+    pub fn to_knn(&self, ds: &crate::dataset::Dataset, metric: crate::distance::Metric) -> KnnGraph {
+        let k = self.max_degree.max(1);
+        let lists = crate::util::parallel_map(self.len(), |i| {
+            let mut list = crate::graph::NeighborList::new(k);
+            for &v in &self.adj[i] {
+                let d = metric.distance(ds.vector(i), ds.vector(v as usize));
+                list.insert(v, d, false);
+            }
+            list
+        });
+        KnnGraph { lists, k }
     }
 
     /// Structural validation: ids in range, no self loops, degree bound.
@@ -82,6 +122,20 @@ impl IndexGraph {
     }
 }
 
+/// Segments and other callers can hand a k-NN graph anywhere an index
+/// graph is expected without ad-hoc copying at the call site.
+impl From<&KnnGraph> for IndexGraph {
+    fn from(g: &KnnGraph) -> IndexGraph {
+        IndexGraph::from_knn(g)
+    }
+}
+
+impl From<KnnGraph> for IndexGraph {
+    fn from(g: KnnGraph) -> IndexGraph {
+        IndexGraph::from_knn(&g)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,6 +152,45 @@ mod tests {
         assert!(ig.adj[2].is_empty());
         ig.validate().unwrap();
         assert_eq!(ig.edge_count(), 3);
+    }
+
+    #[test]
+    fn from_knn_undirected_adds_reverse_edges() {
+        let mut g = KnnGraph::empty(3, 2);
+        g.lists[0].insert(1, 0.5, true); // 0 -> 1
+        g.lists[2].insert(1, 0.2, true); // 2 -> 1
+        let ig = IndexGraph::from_knn_undirected(&g);
+        ig.validate().unwrap();
+        // 1 gains reverse edges to both pointers; originals kept.
+        assert!(ig.adj[0].contains(&1));
+        assert!(ig.adj[2].contains(&1));
+        assert!(ig.adj[1].contains(&0) && ig.adj[1].contains(&2));
+        assert_eq!(ig.max_degree, 4);
+    }
+
+    #[test]
+    fn from_impls_match_from_knn() {
+        let mut g = KnnGraph::empty(3, 2);
+        g.lists[0].insert(1, 0.5, true);
+        g.lists[1].insert(2, 0.3, true);
+        let by_ref: IndexGraph = (&g).into();
+        assert_eq!(by_ref, IndexGraph::from_knn(&g));
+        let by_val: IndexGraph = g.clone().into();
+        assert_eq!(by_val, by_ref);
+    }
+
+    #[test]
+    fn to_knn_roundtrips_adjacency() {
+        let ds = crate::dataset::Dataset::from_raw(vec![0.0, 1.0, 3.0], 1);
+        let ig = IndexGraph {
+            adj: vec![vec![1], vec![0, 2], vec![1]],
+            max_degree: 2,
+            entry: 1,
+        };
+        let knn = ig.to_knn(&ds, crate::distance::Metric::L2);
+        assert_eq!(knn.ids(1), vec![0, 2]); // sorted: d(1,0)=1 < d(1,2)=4
+        assert_eq!(IndexGraph::from_knn(&knn).adj[1], vec![0, 2]);
+        assert!((knn.lists[1].as_slice()[1].dist - 4.0).abs() < 1e-6);
     }
 
     #[test]

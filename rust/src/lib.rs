@@ -18,9 +18,14 @@
 //! - **An XLA/PJRT runtime** ([`runtime`]) that executes the AOT-lowered
 //!   Pallas distance kernel from the Rust hot path (Python is never on
 //!   the request path).
+//! - **An online streaming subsystem** ([`stream`]) — an LSM-style log
+//!   of subgraph segments where Two-way Merge is the compaction
+//!   primitive: concurrent `insert`/`search` with atomic segment-set
+//!   snapshots.
 //!
-//! See `DESIGN.md` for the paper → module inventory and `EXPERIMENTS.md`
-//! for the reproduced tables and figures.
+//! See `rust/DESIGN.md` for the paper → module inventory; the
+//! `rust/benches/` binaries reproduce the paper's tables and figures
+//! (each writes `results/<name>.json`).
 
 pub mod baselines;
 pub mod cli;
@@ -36,8 +41,10 @@ pub mod index;
 pub mod merge;
 pub mod metrics;
 pub mod runtime;
+pub mod stream;
 pub mod util;
 
 pub use config::RunConfig;
 pub use dataset::Dataset;
 pub use graph::KnnGraph;
+pub use stream::StreamingIndex;

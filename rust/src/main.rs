@@ -4,6 +4,7 @@
 //! knn-merge build        --family sift --n 20000 --parts 4 --strategy multi-way
 //! knn-merge distributed  --family deep --n 30000 --nodes 5
 //! knn-merge out-of-core  --family sift --n 20000 --parts 4
+//! knn-merge stream       --family sift --n 10000 --segment-size 1024 --rate 5000
 //! knn-merge lid          --family gist --n 5000
 //! knn-merge artifacts    # report which AOT artifacts are loadable
 //! ```
@@ -33,6 +34,7 @@ COMMANDS:
   build         single-node pipeline (subgraphs + merge)
   distributed   multi-node pipeline (Alg. 3, simulated cluster)
   out-of-core   single node with external storage (Sec. IV)
+  stream        online ingest: insert-while-search over the segment log
   lid           estimate a dataset family's LID
   artifacts     list loadable AOT kernel artifacts
 
@@ -44,6 +46,13 @@ COMMON OPTIONS:
   --strategy <two-way|multi-way>     merge strategy (build)
   --seed <seed>                      dataset seed
   --eval <samples>                   recall sample count (0 = skip)
+
+STREAM OPTIONS:
+  --file <path.fvecs> [--limit <n>]  ingest real vectors instead of --family
+  --segment-size <s> --mode <knn|index>
+  --rate <inserts/s>                 throttle ingest (0 = unthrottled)
+  --report-every <n> --queries <q> --topk <k> --ef <ef>
+  --background                       compact from a background thread
 ";
 
 fn main() {
@@ -181,6 +190,9 @@ fn run() -> Result<()> {
                 ledger.bytes_stored() as f64 / 1e6
             );
             maybe_eval(&args, &ds, &graph, cfg.merge.k)?;
+        }
+        "stream" => {
+            knn_merge::stream::ingest::cli_stream(&args)?;
         }
         "lid" => {
             let cfg = build_config(&args)?;

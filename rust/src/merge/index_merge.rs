@@ -53,12 +53,7 @@ pub fn merge_two_index_graphs(
     kind: IndexKind,
     max_degree: usize,
 ) -> IndexGraph {
-    let mut s1 = SupportLists::build(g1, params.lambda);
-    let mut s2 = SupportLists::build(g2, params.lambda);
-    s2.offset_ids(ds1.len() as u32);
-    s1.lists.append(&mut s2.lists);
-    let cross = TwoWayMerge::new(params).cross_graph(ds1, ds2, &s1, metric);
-    let g0 = KnnGraph::concat(&[g1, g2], &[0, ds1.len()]);
+    let (cross, g0) = TwoWayMerge::new(params).cross_and_concat(ds1, ds2, g1, g2, metric);
     let ds = Dataset::concat(&[ds1, ds2]);
     union_and_diversify(&ds, metric, &g0, &cross, kind, max_degree)
 }

@@ -65,6 +65,26 @@ impl TwoWayMerge {
         engine: &dyn DistanceEngine,
         observer: MergeObserver,
     ) -> KnnGraph {
+        let (cross, g0) =
+            self.cross_and_concat_observed(ds1, ds2, g1, g2, metric, engine, observer);
+        cross.merge_sorted(&g0)
+    }
+
+    /// The shared front half of the pipeline: build `S` from the
+    /// subgraphs, run the iteration, and return `(cross, G_0)` in the
+    /// concatenated id space. [`TwoWayMerge::merge`] MergeSorts the
+    /// pair; indexing-graph callers (Sec. III-B — `merge::index_merge`,
+    /// streaming Index-mode compaction) union-and-diversify it instead.
+    pub fn cross_and_concat_observed(
+        &self,
+        ds1: &Dataset,
+        ds2: &Dataset,
+        g1: &KnnGraph,
+        g2: &KnnGraph,
+        metric: Metric,
+        engine: &dyn DistanceEngine,
+        observer: MergeObserver,
+    ) -> (KnnGraph, KnnGraph) {
         let mut s1 = SupportLists::build(g1, self.params.lambda);
         let mut s2 = SupportLists::build(g2, self.params.lambda);
         s2.offset_ids(ds1.len() as u32);
@@ -73,7 +93,20 @@ impl TwoWayMerge {
 
         let cross = self.cross_graph_observed(ds1, ds2, &support, metric, engine, observer);
         let g0 = KnnGraph::concat(&[g1, g2], &[0, ds1.len()]);
-        cross.merge_sorted(&g0)
+        (cross, g0)
+    }
+
+    /// [`TwoWayMerge::cross_and_concat_observed`] with the scalar engine
+    /// and no observer.
+    pub fn cross_and_concat(
+        &self,
+        ds1: &Dataset,
+        ds2: &Dataset,
+        g1: &KnnGraph,
+        g2: &KnnGraph,
+        metric: Metric,
+    ) -> (KnnGraph, KnnGraph) {
+        self.cross_and_concat_observed(ds1, ds2, g1, g2, metric, &ScalarEngine, &mut |_, _, _| {})
     }
 
     /// The iteration core (Alg. 1 lines 8–33): returns the cross graph

@@ -1,0 +1,219 @@
+//! Leveled compaction: fuse same-level segment pairs with the existing
+//! Two-way Merge, exactly as the batch hierarchy (Fig. 3a) does —
+//! unrolled over time instead of over a tree.
+//!
+//! A segment sealed from the memtable enters at level 0; fusing two
+//! level-`l` segments yields one level-`l+1` segment of twice the size.
+//! Segment sizes therefore grow geometrically and every vector is
+//! merged `O(log n)` times, keeping total compaction work `O(n log n)`
+//! — the same bound the paper's hierarchical merge gives the batch
+//! build. No merge logic is duplicated here: the Knn mode calls
+//! [`TwoWayMerge::merge`] verbatim, and the Index mode runs the same
+//! [`TwoWayMerge::cross_graph`] core followed by the Sec. III-B
+//! union-and-diversify post-processing.
+
+use super::segment::Segment;
+use super::snapshot::SegmentSet;
+use crate::config::{StreamConfig, StreamGraphMode};
+use crate::dataset::Dataset;
+use crate::distance::Metric;
+use crate::merge::index_merge::{union_and_diversify, IndexKind};
+use crate::merge::TwoWayMerge;
+use std::sync::Arc;
+
+/// Record of one executed compaction.
+#[derive(Clone, Copy, Debug)]
+pub struct Compaction {
+    /// Ids of the two fused input segments.
+    pub inputs: [u64; 2],
+    /// Id of the output segment.
+    pub output: u64,
+    /// Level of the output segment.
+    pub level: usize,
+    /// Wall-clock seconds spent fusing.
+    pub secs: f64,
+}
+
+/// The compaction policy + merge executor.
+#[derive(Clone, Debug)]
+pub struct Compactor {
+    pub cfg: StreamConfig,
+    pub metric: Metric,
+}
+
+impl Compactor {
+    pub fn new(cfg: StreamConfig, metric: Metric) -> Compactor {
+        Compactor { cfg, metric }
+    }
+
+    /// Pick the next pair to fuse: the two oldest segments at the lowest
+    /// level holding at least two (`strict`), or — for final drains —
+    /// the two lowest-level segments regardless of level equality.
+    pub fn pick(set: &SegmentSet, strict: bool) -> Option<[Arc<Segment>; 2]> {
+        let mut segs: Vec<&Arc<Segment>> = set.segments.iter().collect();
+        if segs.len() < 2 {
+            return None;
+        }
+        segs.sort_by_key(|s| (s.level, s.id));
+        if strict {
+            segs.windows(2)
+                .find(|w| w[0].level == w[1].level)
+                .map(|w| [Arc::clone(w[0]), Arc::clone(w[1])])
+        } else {
+            Some([Arc::clone(segs[0]), Arc::clone(segs[1])])
+        }
+    }
+
+    /// Fuse two segments into one at `max(level) + 1` via Two-way Merge.
+    /// Global-id mappings concatenate in `(a, b)` order, mirroring the
+    /// merge's concatenated id space.
+    pub fn fuse(&self, a: &Segment, b: &Segment, out_id: u64) -> Segment {
+        let mut params = self.cfg.merge;
+        params.seed ^= out_id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let merger = TwoWayMerge::new(params);
+        let data = Dataset::concat(&[&a.data, &b.data]);
+        let mut global_ids = a.global_ids.clone();
+        global_ids.extend_from_slice(&b.global_ids);
+        let level = a.level.max(b.level) + 1;
+        match self.cfg.mode {
+            StreamGraphMode::Knn => {
+                let knn = merger.merge(&a.data, &b.data, &a.knn, &b.knn, self.metric);
+                Segment::from_knn(out_id, level, data, global_ids, knn, self.metric, &self.cfg)
+            }
+            StreamGraphMode::Index => {
+                // Sec. III-B: keep the union of G0 and the cross edges,
+                // then re-apply the source diversification — eviction
+                // would drop exactly the long-range edges that keep the
+                // index navigable.
+                let (cross, g0) =
+                    merger.cross_and_concat(&a.data, &b.data, &a.knn, &b.knn, self.metric);
+                let index = union_and_diversify(
+                    &data,
+                    self.metric,
+                    &g0,
+                    &cross,
+                    IndexKind::Vamana {
+                        alpha: self.cfg.alpha,
+                    },
+                    self.cfg.max_degree,
+                );
+                let knn = cross.merge_sorted(&g0);
+                let entries = vec![index.entry];
+                Segment {
+                    id: out_id,
+                    level,
+                    data,
+                    global_ids,
+                    knn,
+                    index,
+                    entries,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetFamily;
+    use crate::eval::recall::{graph_recall, GroundTruth};
+    use crate::merge::MergeParams;
+
+    fn cfg_k(k: usize) -> StreamConfig {
+        StreamConfig {
+            merge: MergeParams {
+                k,
+                lambda: k,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    fn two_segments(n: usize, seed: u64, cfg: &StreamConfig) -> (Dataset, Segment, Segment) {
+        let ds = DatasetFamily::Deep.generate(n, seed);
+        let parts = ds.split_contiguous(2);
+        let g1: Vec<u32> = (0..parts[0].0.len() as u32).collect();
+        let off = parts[0].0.len() as u32;
+        let g2: Vec<u32> = (0..parts[1].0.len() as u32).map(|i| i + off).collect();
+        let a = Segment::seal(0, 0, parts[0].0.clone(), g1, Metric::L2, cfg);
+        let b = Segment::seal(1, 0, parts[1].0.clone(), g2, Metric::L2, cfg);
+        (ds, a, b)
+    }
+
+    #[test]
+    fn fuse_reaches_batch_quality_via_two_way_merge() {
+        let cfg = cfg_k(10);
+        let (ds, a, b) = two_segments(600, 9, &cfg);
+        let merged = Compactor::new(cfg, Metric::L2).fuse(&a, &b, 2);
+        merged.validate().unwrap();
+        assert_eq!(merged.len(), 600);
+        assert_eq!(merged.level, 1);
+        // In-order global ids: the fused graph is already in global space.
+        let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 150, 3);
+        let r = graph_recall(&merged.knn_in_global_space(), &truth, 10);
+        assert!(r > 0.9, "fused recall@10 = {r}");
+    }
+
+    #[test]
+    fn fuse_concatenates_global_ids_and_rows() {
+        let cfg = cfg_k(6);
+        let (ds, a, b) = two_segments(200, 10, &cfg);
+        let merged = Compactor::new(cfg, Metric::L2).fuse(&a, &b, 2);
+        assert_eq!(merged.global_ids.len(), 200);
+        for i in 0..200 {
+            assert_eq!(merged.global_ids[i], i as u32);
+            assert_eq!(merged.data.vector(i), ds.vector(i));
+        }
+    }
+
+    #[test]
+    fn index_mode_fuse_produces_bounded_navigable_graph() {
+        let mut cfg = cfg_k(12);
+        cfg.mode = StreamGraphMode::Index;
+        cfg.max_degree = 12;
+        let (ds, a, b) = two_segments(400, 11, &cfg);
+        let merged = Compactor::new(cfg, Metric::L2).fuse(&a, &b, 2);
+        merged.validate().unwrap();
+        // Search the fused index directly: exact-match queries must come
+        // back first.
+        for probe in [3usize, 211, 399] {
+            let hits = merged.search(Metric::L2, ds.vector(probe), 3, 64);
+            assert_eq!(hits[0].1, probe as u32, "probe {probe}");
+        }
+    }
+
+    #[test]
+    fn pick_prefers_lowest_level_oldest_pair() {
+        let cfg = cfg_k(4);
+        let ds = DatasetFamily::Sift.generate(40, 12);
+        let mk = |id: u64, level: usize, rows: std::ops::Range<usize>| {
+            let idx: Vec<usize> = rows.clone().collect();
+            let gids: Vec<u32> = rows.map(|r| r as u32).collect();
+            Arc::new(Segment::seal(id, level, ds.subset(&idx), gids, Metric::L2, &cfg))
+        };
+        let set = SegmentSet {
+            segments: vec![
+                mk(5, 1, 0..10),
+                mk(7, 0, 10..20),
+                mk(9, 0, 20..30),
+                mk(11, 0, 30..40),
+            ],
+        };
+        let pair = Compactor::pick(&set, true).unwrap();
+        assert_eq!([pair[0].id, pair[1].id], [7, 9]);
+        // Strict finds nothing once levels are all distinct.
+        let set2 = SegmentSet {
+            segments: vec![mk(1, 0, 0..10), mk(2, 1, 10..20)],
+        };
+        assert!(Compactor::pick(&set2, true).is_none());
+        let forced = Compactor::pick(&set2, false).unwrap();
+        assert_eq!([forced[0].id, forced[1].id], [1, 2]);
+        // Singleton: nothing to do either way.
+        let set3 = SegmentSet {
+            segments: vec![mk(1, 0, 0..10)],
+        };
+        assert!(Compactor::pick(&set3, false).is_none());
+    }
+}

@@ -1,0 +1,451 @@
+//! The user-facing [`StreamingIndex`]: concurrent `insert` / `search`
+//! over the memtable + segment log, with compaction either driven
+//! explicitly (`tick`, deterministic for tests) or by a background
+//! thread ([`StreamingIndex::spawn_compactor`]).
+//!
+//! Concurrency model:
+//!
+//! - the live segment set is published as an `Arc<SegmentSet>` behind a
+//!   mutex; readers clone the `Arc` (O(1)) and search lock-free on the
+//!   snapshot, so a compaction swap can never tear a query's view;
+//! - the memtable sits behind its own mutex; sealing happens while it
+//!   is held, so every inserted vector is visible to the next search
+//!   (either still in the memtable or already in a sealed segment);
+//! - compactions are serialized by `compact_lock`, fuse **outside** the
+//!   segment-set mutex, and re-resolve the current set when swapping —
+//!   seals that landed mid-fuse are preserved.
+
+use super::compactor::{Compaction, Compactor};
+use super::memtable::MemTable;
+use super::snapshot::{merge_topk, SegmentSet};
+use crate::config::StreamConfig;
+use crate::distance::Metric;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Counters exposed by [`StreamingIndex::stats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamStats {
+    /// Vectors inserted since creation.
+    pub inserted: usize,
+    /// Segments sealed from the memtable.
+    pub sealed: usize,
+    /// Compactions executed.
+    pub compactions: usize,
+    /// Currently live segments.
+    pub live_segments: usize,
+    /// Vectors currently buffered in the memtable.
+    pub memtable_len: usize,
+}
+
+/// An online k-NN index over an LSM-style log of subgraph segments.
+pub struct StreamingIndex {
+    cfg: StreamConfig,
+    metric: Metric,
+    dim: usize,
+    memtable: Mutex<MemTable>,
+    segments: Mutex<Arc<SegmentSet>>,
+    compact_lock: Mutex<()>,
+    next_gid: AtomicU32,
+    next_segment_id: AtomicU64,
+    inserted: AtomicUsize,
+    sealed: AtomicUsize,
+    compactions: AtomicUsize,
+}
+
+impl StreamingIndex {
+    pub fn new(dim: usize, metric: Metric, cfg: StreamConfig) -> StreamingIndex {
+        assert!(dim > 0, "dim must be positive");
+        assert!(cfg.segment_size > 0, "segment_size must be positive");
+        StreamingIndex {
+            memtable: Mutex::new(MemTable::new(dim)),
+            segments: Mutex::new(Arc::new(SegmentSet::empty())),
+            compact_lock: Mutex::new(()),
+            next_gid: AtomicU32::new(0),
+            next_segment_id: AtomicU64::new(0),
+            inserted: AtomicUsize::new(0),
+            sealed: AtomicUsize::new(0),
+            compactions: AtomicUsize::new(0),
+            cfg,
+            metric,
+            dim,
+        }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    /// Total vectors inserted so far (== the next global id).
+    pub fn len(&self) -> usize {
+        self.inserted.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Insert one vector; returns its global id. Global ids are assigned
+    /// in arrival order. When the memtable reaches `segment_size` the
+    /// call also seals it into a level-0 segment (the ingest-latency
+    /// spike `segment_size` trades against search fan-out).
+    pub fn insert(&self, v: &[f32]) -> u32 {
+        assert_eq!(v.len(), self.dim, "vector dimension mismatch");
+        let mut mt = self.memtable.lock().unwrap();
+        let gid = self.next_gid.fetch_add(1, Ordering::Relaxed);
+        mt.insert(v, gid);
+        self.inserted.fetch_add(1, Ordering::Relaxed);
+        if mt.len() >= self.cfg.segment_size {
+            self.seal_locked(&mut mt);
+        }
+        gid
+    }
+
+    /// Seal whatever the memtable holds (used before a final compaction
+    /// or a shutdown). No-op when the memtable is empty.
+    pub fn flush(&self) {
+        let mut mt = self.memtable.lock().unwrap();
+        self.seal_locked(&mut mt);
+    }
+
+    fn seal_locked(&self, mt: &mut MemTable) {
+        if mt.is_empty() {
+            return;
+        }
+        let (data, gids) = mt.drain();
+        let id = self.next_segment_id.fetch_add(1, Ordering::Relaxed);
+        let seg = Arc::new(super::Segment::seal(id, 0, data, gids, self.metric, &self.cfg));
+        let mut cur = self.segments.lock().unwrap();
+        let mut v = cur.segments.clone();
+        v.push(seg);
+        *cur = Arc::new(SegmentSet { segments: v });
+        self.sealed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The current segment set (O(1) `Arc` clone; never torn).
+    pub fn snapshot(&self) -> Arc<SegmentSet> {
+        self.segments.lock().unwrap().clone()
+    }
+
+    /// Search with the configured default beam width; returns global ids
+    /// ascending by distance.
+    pub fn search(&self, query: &[f32], topk: usize) -> Vec<u32> {
+        self.search_ef(query, topk, self.cfg.ef)
+            .into_iter()
+            .map(|(_, id)| id)
+            .collect()
+    }
+
+    /// Search with an explicit beam width; returns `(distance, global
+    /// id)` ascending. Fans out over all live segments plus the
+    /// memtable and merge-sorts the per-source top-k lists.
+    pub fn search_ef(&self, query: &[f32], topk: usize, ef: usize) -> Vec<(f32, u32)> {
+        assert_eq!(query.len(), self.dim, "query dimension mismatch");
+        // Memtable first, snapshot second: a seal between the two steps
+        // moves vectors memtable -> segment, and this order sees them
+        // in at least one source (possibly both; merge_topk dedups by
+        // global id). Snapshot-first would let a concurrent seal hide
+        // up to segment_size freshly inserted vectors.
+        let mem_hits = self.memtable.lock().unwrap().search(self.metric, query, topk);
+        let snap = self.snapshot();
+        let seg_hits = snap.search(self.metric, query, topk, ef);
+        merge_topk(vec![seg_hits, mem_hits], topk)
+    }
+
+    /// Run one strict (same-level) compaction if a pair is available.
+    /// Deterministic test driver and the background thread's work unit.
+    pub fn tick(&self) -> Option<Compaction> {
+        self.compact_once(true)
+    }
+
+    /// Compact until a single segment remains: strict same-level passes
+    /// first (geometric schedule), then forced mixed-level drains.
+    pub fn compact_all(&self) {
+        while self.compact_once(true).is_some() {}
+        while self.compact_once(false).is_some() {}
+    }
+
+    fn compact_once(&self, strict: bool) -> Option<Compaction> {
+        let _serialize = self.compact_lock.lock().unwrap();
+        let snap = self.snapshot();
+        let pair = Compactor::pick(&snap, strict)?;
+        let out_id = self.next_segment_id.fetch_add(1, Ordering::Relaxed);
+        let start = Instant::now();
+        let compactor = Compactor::new(self.cfg.clone(), self.metric);
+        let merged = Arc::new(compactor.fuse(&pair[0], &pair[1], out_id));
+        let level = merged.level;
+        // Swap against the *current* set: seals that happened while we
+        // were fusing stay live.
+        let mut cur = self.segments.lock().unwrap();
+        let mut v: Vec<Arc<super::Segment>> = cur
+            .segments
+            .iter()
+            .filter(|s| s.id != pair[0].id && s.id != pair[1].id)
+            .cloned()
+            .collect();
+        v.push(merged);
+        v.sort_by_key(|s| s.id);
+        *cur = Arc::new(SegmentSet { segments: v });
+        drop(cur);
+        self.compactions.fetch_add(1, Ordering::Relaxed);
+        Some(Compaction {
+            inputs: [pair[0].id, pair[1].id],
+            output: out_id,
+            level,
+            secs: start.elapsed().as_secs_f64(),
+        })
+    }
+
+    pub fn stats(&self) -> StreamStats {
+        StreamStats {
+            inserted: self.inserted.load(Ordering::Relaxed),
+            sealed: self.sealed.load(Ordering::Relaxed),
+            compactions: self.compactions.load(Ordering::Relaxed),
+            live_segments: self.snapshot().count(),
+            memtable_len: self.memtable.lock().unwrap().len(),
+        }
+    }
+
+    /// Spawn a background compaction thread polling `tick()`; idle
+    /// periods park for `poll`. Call on an `Arc` clone
+    /// (`Arc::clone(&index).spawn_compactor(..)`); stop it with
+    /// [`CompactorHandle::stop`].
+    pub fn spawn_compactor(self: Arc<Self>, poll: std::time::Duration) -> CompactorHandle {
+        let stop = Arc::new(AtomicBool::new(false));
+        let index = self;
+        let stop_flag = Arc::clone(&stop);
+        let join = std::thread::spawn(move || {
+            while !stop_flag.load(Ordering::Relaxed) {
+                if index.tick().is_none() {
+                    std::thread::park_timeout(poll);
+                }
+            }
+        });
+        CompactorHandle { stop, join }
+    }
+}
+
+/// Handle to a background compaction thread.
+pub struct CompactorHandle {
+    stop: Arc<AtomicBool>,
+    join: std::thread::JoinHandle<()>,
+}
+
+impl CompactorHandle {
+    /// Signal the thread and join it (any in-flight fuse completes).
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.join.thread().unpark();
+        let _ = self.join.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StreamGraphMode;
+    use crate::construction::{NnDescent, NnDescentParams};
+    use crate::dataset::DatasetFamily;
+    use crate::eval::recall::{graph_recall, GroundTruth};
+    use crate::merge::MergeParams;
+    use crate::util::proptest::check_property_cases;
+
+    fn small_cfg(k: usize, segment_size: usize) -> StreamConfig {
+        StreamConfig {
+            segment_size,
+            brute_threshold: 512,
+            merge: MergeParams {
+                k,
+                lambda: k,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn insert_assigns_sequential_ids_and_seals() {
+        let index = StreamingIndex::new(4, Metric::L2, small_cfg(4, 10));
+        for i in 0..25u32 {
+            let gid = index.insert(&[i as f32, 0.0, 0.0, 0.0]);
+            assert_eq!(gid, i);
+        }
+        let st = index.stats();
+        assert_eq!(st.inserted, 25);
+        assert_eq!(st.sealed, 2);
+        assert_eq!(st.live_segments, 2);
+        assert_eq!(st.memtable_len, 5);
+        index.flush();
+        assert_eq!(index.stats().live_segments, 3);
+        assert_eq!(index.stats().memtable_len, 0);
+    }
+
+    #[test]
+    fn search_sees_memtable_and_segments() {
+        let ds = DatasetFamily::Deep.generate(350, 21);
+        let index = StreamingIndex::new(ds.dim, Metric::L2, small_cfg(8, 100));
+        for i in 0..ds.len() {
+            index.insert(ds.vector(i));
+        }
+        // 3 sealed segments + 50 in the memtable; exact-match queries
+        // must surface from both regions.
+        for probe in [0usize, 150, 320, 349] {
+            let hits = index.search_ef(ds.vector(probe), 1, 64);
+            assert_eq!(hits[0].1 as usize, probe, "probe {probe}");
+            assert!(hits[0].0 <= 1e-6);
+        }
+    }
+
+    #[test]
+    fn tick_follows_geometric_schedule() {
+        let ds = DatasetFamily::Sift.generate(400, 22);
+        let index = StreamingIndex::new(ds.dim, Metric::L2, small_cfg(6, 100));
+        for i in 0..ds.len() {
+            index.insert(ds.vector(i));
+        }
+        // 4 level-0 segments -> two L0 fuses, then one L1 fuse.
+        let c1 = index.tick().unwrap();
+        assert_eq!(c1.level, 1);
+        let c2 = index.tick().unwrap();
+        assert_eq!(c2.level, 1);
+        let c3 = index.tick().unwrap();
+        assert_eq!(c3.level, 2);
+        assert!(index.tick().is_none());
+        let snap = index.snapshot();
+        assert_eq!(snap.count(), 1);
+        assert_eq!(snap.total_vectors(), 400);
+    }
+
+    #[test]
+    fn streamed_recall_matches_batch_build() {
+        // ISSUE acceptance: after full compaction, the streamed graph's
+        // recall@10 is >= 0.95 and within 0.05 of a batch NN-Descent
+        // build over the same data.
+        let n = 800;
+        let ds = DatasetFamily::Deep.generate(n, 23);
+        let params = MergeParams {
+            k: 10,
+            lambda: 10,
+            ..Default::default()
+        };
+        let mut cfg = small_cfg(10, 200);
+        cfg.merge.delta = 2e-4; // run compaction merges to full convergence
+        let index = StreamingIndex::new(ds.dim, Metric::L2, cfg);
+        for i in 0..n {
+            index.insert(ds.vector(i));
+        }
+        index.flush();
+        index.compact_all();
+        let snap = index.snapshot();
+        assert_eq!(snap.count(), 1);
+        let streamed = snap.segments[0].knn_in_global_space();
+        let batch = NnDescent::new(NnDescentParams {
+            k: params.k,
+            lambda: params.lambda,
+            ..Default::default()
+        })
+        .build(&ds, Metric::L2);
+        let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 200, 5);
+        let rs = graph_recall(&streamed, &truth, 10);
+        let rb = graph_recall(&batch, &truth, 10);
+        assert!(rs >= 0.95, "streamed recall@10 = {rs}");
+        assert!(rs >= rb - 0.05, "streamed {rs} vs batch {rb}");
+    }
+
+    #[test]
+    fn global_ids_survive_compaction_rounds() {
+        // Proptest over insert orders: after >= 2 compaction rounds the
+        // final segment's rows must still map (via global_ids) to the
+        // exact vectors inserted under those ids.
+        check_property_cases("stream-global-id-mapping", 77, 6, |rng| {
+            let n = 160 + rng.gen_range(60);
+            let ds = DatasetFamily::Deep.generate(n, rng.next_u64());
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            let index = StreamingIndex::new(ds.dim, Metric::L2, small_cfg(8, 40));
+            let mut row_of_gid: Vec<usize> = Vec::with_capacity(n);
+            for &row in &order {
+                let gid = index.insert(ds.vector(row));
+                assert_eq!(gid as usize, row_of_gid.len());
+                row_of_gid.push(row);
+            }
+            index.flush();
+            index.compact_all(); // >= 4 L0 segments -> >= 2 rounds
+            let snap = index.snapshot();
+            assert_eq!(snap.count(), 1);
+            let seg = &snap.segments[0];
+            seg.validate().unwrap();
+            assert_eq!(seg.len(), n);
+            for local in 0..seg.len() {
+                let gid = seg.global(local) as usize;
+                assert_eq!(
+                    seg.data.vector(local),
+                    ds.vector(row_of_gid[gid]),
+                    "row payload for gid {gid} corrupted"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn index_mode_end_to_end() {
+        let ds = DatasetFamily::Deep.generate(500, 25);
+        let mut cfg = small_cfg(12, 125);
+        cfg.mode = StreamGraphMode::Index;
+        cfg.max_degree = 12;
+        let index = StreamingIndex::new(ds.dim, Metric::L2, cfg);
+        for i in 0..ds.len() {
+            index.insert(ds.vector(i));
+        }
+        index.flush();
+        index.compact_all();
+        for probe in [1usize, 250, 499] {
+            let ids = index.search(ds.vector(probe), 5);
+            assert_eq!(ids[0] as usize, probe, "probe {probe}");
+        }
+    }
+
+    #[test]
+    fn concurrent_insert_search_compact() {
+        let ds = DatasetFamily::Sift.generate(600, 26);
+        let index = Arc::new(StreamingIndex::new(ds.dim, Metric::L2, small_cfg(6, 64)));
+        let handle = Arc::clone(&index).spawn_compactor(std::time::Duration::from_millis(1));
+        std::thread::scope(|scope| {
+            let writer = Arc::clone(&index);
+            let w = scope.spawn(move || {
+                for i in 0..ds.len() {
+                    writer.insert(ds.vector(i));
+                }
+            });
+            let reader = Arc::clone(&index);
+            scope.spawn(move || {
+                let q = vec![0.0f32; reader.dim()];
+                while !w.is_finished() {
+                    let hits = reader.search_ef(&q, 10, 32);
+                    // Snapshots are never torn: no duplicate ids, sorted.
+                    let mut seen = std::collections::HashSet::new();
+                    for w2 in hits.windows(2) {
+                        assert!(w2[0].0 <= w2[1].0);
+                    }
+                    for &(_, id) in &hits {
+                        assert!(seen.insert(id), "duplicate id {id} in results");
+                    }
+                }
+            });
+        });
+        handle.stop();
+        index.flush();
+        index.compact_all();
+        let snap = index.snapshot();
+        assert_eq!(snap.total_vectors(), 600);
+        assert_eq!(snap.count(), 1);
+        assert_eq!(index.len(), 600);
+    }
+}

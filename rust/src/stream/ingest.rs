@@ -1,0 +1,357 @@
+//! Rate-controlled ingest driver: stream a dataset into a
+//! [`StreamingIndex`], answer query batches *during* ingest, and report
+//! QPS / recall over time. Shared by the CLI `stream` subcommand, the
+//! smoke test, and `examples/streaming_ingest.rs`.
+
+use super::engine::StreamingIndex;
+use crate::cli::Args;
+use crate::config::{ConfigMap, RunConfig, StreamConfig};
+use crate::dataset::{io, Dataset};
+use crate::distance::Metric;
+use crate::eval::recall::{search_recall, GroundTruth};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Options of one ingest run.
+#[derive(Clone, Copy, Debug)]
+pub struct IngestOptions {
+    /// Target insert rate per second; 0 = unthrottled.
+    pub rate: f64,
+    /// Run a query batch every this many inserts (0 = final batch only).
+    pub report_every: usize,
+    /// Queries answered per batch.
+    pub topk: usize,
+    /// Beam width used for the measured searches.
+    pub ef: usize,
+    /// Drive compaction from a background thread instead of inline
+    /// `tick()` calls after each insert (inline is deterministic).
+    pub background_compaction: bool,
+    /// Compact down to a single segment after the last insert.
+    pub final_compact: bool,
+}
+
+impl Default for IngestOptions {
+    fn default() -> Self {
+        IngestOptions {
+            rate: 0.0,
+            report_every: 2000,
+            topk: 10,
+            ef: 64,
+            background_compaction: false,
+            final_compact: true,
+        }
+    }
+}
+
+/// One mid-ingest measurement: a query batch answered while ingest was
+/// at `inserted` vectors, with recall computed against exact ground
+/// truth over the inserted prefix.
+#[derive(Clone, Copy, Debug)]
+pub struct IngestReportRow {
+    pub inserted: usize,
+    pub segments: usize,
+    pub qps: f64,
+    pub recall: f64,
+    pub elapsed_s: f64,
+}
+
+/// Final summary of an ingest run.
+#[derive(Clone, Debug)]
+pub struct IngestSummary {
+    pub rows: Vec<IngestReportRow>,
+    /// Recall@topk of the final index over the full dataset.
+    pub final_recall: f64,
+    /// Final-state query throughput (the last measured batch).
+    pub final_qps: f64,
+    /// Sustained inserts/sec over the whole run (seals included).
+    pub insert_rate: f64,
+    pub total_secs: f64,
+    pub compactions: usize,
+    pub segments: usize,
+}
+
+/// Stream `ds` (in row order; row index == global id) into a fresh
+/// [`StreamingIndex`], answering `queries` periodically. `observer` sees
+/// every mid-ingest row as it is measured (print hook for the CLI).
+pub fn stream_ingest(
+    ds: &Dataset,
+    queries: &Dataset,
+    cfg: &StreamConfig,
+    metric: Metric,
+    opts: &IngestOptions,
+    observer: &mut dyn FnMut(&IngestReportRow),
+) -> IngestSummary {
+    let index = Arc::new(StreamingIndex::new(ds.dim, metric, cfg.clone()));
+    stream_ingest_into(&index, ds, queries, opts, observer)
+}
+
+/// [`stream_ingest`] into a caller-owned index (kept alive afterwards,
+/// e.g. to inspect the final segment graph).
+pub fn stream_ingest_into(
+    index: &Arc<StreamingIndex>,
+    ds: &Dataset,
+    queries: &Dataset,
+    opts: &IngestOptions,
+    observer: &mut dyn FnMut(&IngestReportRow),
+) -> IngestSummary {
+    assert!(!ds.is_empty(), "nothing to ingest");
+    let background = opts
+        .background_compaction
+        .then(|| Arc::clone(index).spawn_compactor(Duration::from_millis(1)));
+    let start = Instant::now();
+    let mut rows = Vec::new();
+    for i in 0..ds.len() {
+        index.insert(ds.vector(i));
+        if !opts.background_compaction {
+            index.tick();
+        }
+        if opts.rate > 0.0 {
+            let scheduled = (i + 1) as f64 / opts.rate;
+            let elapsed = start.elapsed().as_secs_f64();
+            if scheduled > elapsed {
+                std::thread::sleep(Duration::from_secs_f64(scheduled - elapsed));
+            }
+        }
+        if opts.report_every > 0 && (i + 1) % opts.report_every == 0 && (i + 1) < ds.len() {
+            let row = measure(index, ds, queries, i + 1, opts, &start);
+            observer(&row);
+            rows.push(row);
+        }
+    }
+    if let Some(handle) = background {
+        handle.stop();
+    }
+    index.flush();
+    if opts.final_compact {
+        index.compact_all();
+    }
+    let total_secs = start.elapsed().as_secs_f64();
+    let final_row = measure(index, ds, queries, ds.len(), opts, &start);
+    observer(&final_row);
+    rows.push(final_row);
+    let stats = index.stats();
+    IngestSummary {
+        final_recall: final_row.recall,
+        final_qps: final_row.qps,
+        insert_rate: ds.len() as f64 / total_secs.max(1e-9),
+        total_secs,
+        compactions: stats.compactions,
+        segments: stats.live_segments,
+        rows,
+    }
+}
+
+/// Answer the query batch against the live index and score it against
+/// exact truth over the inserted prefix (rows `0..inserted` of `ds`).
+fn measure(
+    index: &StreamingIndex,
+    ds: &Dataset,
+    queries: &Dataset,
+    inserted: usize,
+    opts: &IngestOptions,
+    start: &Instant,
+) -> IngestReportRow {
+    if queries.is_empty() {
+        return IngestReportRow {
+            inserted,
+            segments: index.stats().live_segments,
+            qps: 0.0,
+            recall: 0.0,
+            elapsed_s: start.elapsed().as_secs_f64(),
+        };
+    }
+    let prefix = Dataset::from_raw(ds.data[..inserted * ds.dim].to_vec(), ds.dim);
+    let truth = GroundTruth::for_queries(&prefix, queries, opts.topk, index.metric());
+    let t = Instant::now();
+    let results: Vec<Vec<u32>> = (0..queries.len())
+        .map(|q| {
+            index
+                .search_ef(queries.vector(q), opts.topk, opts.ef)
+                .into_iter()
+                .map(|(_, id)| id)
+                .collect()
+        })
+        .collect();
+    let secs = t.elapsed().as_secs_f64();
+    IngestReportRow {
+        inserted,
+        segments: index.stats().live_segments,
+        qps: queries.len() as f64 / secs.max(1e-9),
+        recall: search_recall(&results, &truth, opts.topk),
+        elapsed_s: start.elapsed().as_secs_f64(),
+    }
+}
+
+/// The CLI `stream` subcommand: ingest a synthetic family or an fvecs
+/// file, report QPS/recall over time, and summarize. Returns the
+/// summary so tests can assert on it.
+pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
+    let mut map = match args.get("config") {
+        Some(path) => ConfigMap::load(std::path::Path::new(path))?,
+        None => ConfigMap::default(),
+    };
+    for (k, v) in &args.overrides {
+        map.set(k, v);
+    }
+    let mut cfg = RunConfig::from_map(&map)?;
+    if let Some(f) = args.get("family") {
+        cfg.family = crate::dataset::DatasetFamily::from_name(f)
+            .with_context(|| format!("unknown family '{f}'"))?;
+    }
+    cfg.n = args.get_usize("n", cfg.n)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    let k = args.get_usize("k", cfg.merge.k)?;
+    let lambda = args.get_usize("lambda", cfg.merge.lambda)?;
+    cfg.stream.merge.k = k;
+    cfg.stream.merge.lambda = lambda;
+    cfg.stream.nnd.k = k;
+    cfg.stream.nnd.lambda = lambda;
+    cfg.stream.max_degree = args.get_usize("max-degree", cfg.stream.max_degree)?;
+    cfg.stream.segment_size = args.get_usize("segment-size", cfg.stream.segment_size)?;
+    cfg.stream.ef = args.get_usize("ef", cfg.stream.ef)?;
+    if let Some(mode) = args.get("mode") {
+        cfg.stream.mode = crate::config::StreamGraphMode::from_name(mode)
+            .with_context(|| format!("unknown stream mode '{mode}'"))?;
+    }
+
+    let ds = match args.get("file") {
+        Some(path) => {
+            let limit = args.get_usize("limit", 0)?;
+            io::read_fvecs(
+                std::path::Path::new(path),
+                if limit == 0 { None } else { Some(limit) },
+            )?
+        }
+        None => cfg.family.generate(cfg.n, cfg.seed),
+    };
+    let n_queries = args.get_usize("queries", 20)?;
+    let queries = match args.get("file") {
+        // Real data: probe with evenly spaced base rows.
+        Some(_) => {
+            let stride = (ds.len() / n_queries.max(1)).max(1);
+            let idx: Vec<usize> = (0..n_queries.min(ds.len())).map(|q| q * stride).collect();
+            ds.subset(&idx)
+        }
+        None => cfg.family.generate_queries(n_queries, cfg.seed ^ 0x51EA),
+    };
+
+    let rate = match args.get("rate") {
+        Some(v) => v
+            .parse::<f64>()
+            .map_err(|_| anyhow::anyhow!("--rate expects a number, got '{v}'"))?,
+        None => 0.0,
+    };
+    let opts = IngestOptions {
+        rate,
+        report_every: args.get_usize("report-every", 2000)?,
+        topk: args.get_usize("topk", 10)?,
+        ef: cfg.stream.ef,
+        background_compaction: args.get_flag("background"),
+        final_compact: !args.get_flag("no-final-compact"),
+    };
+
+    println!(
+        "streaming ingest: {} vectors dim {} (segment_size={}, mode={}, k={}, lambda={}, rate={})",
+        ds.len(),
+        ds.dim,
+        cfg.stream.segment_size,
+        cfg.stream.mode.name(),
+        k,
+        lambda,
+        if rate > 0.0 {
+            format!("{rate}/s")
+        } else {
+            "unthrottled".to_string()
+        }
+    );
+    let summary = stream_ingest(&ds, &queries, &cfg.stream, cfg.metric, &opts, &mut |row| {
+        println!(
+            "  t={:6.2}s  inserted {:>8}  segments {:>3}  qps {:>8.0}  recall@{} {:.4}",
+            row.elapsed_s, row.inserted, row.segments, row.qps, opts.topk, row.recall
+        );
+    });
+    println!(
+        "final: recall@{} {:.4}  inserts/s {:.0}  compactions {}  live segments {}  total {:.2}s",
+        opts.topk,
+        summary.final_recall,
+        summary.insert_rate,
+        summary.compactions,
+        summary.segments,
+        summary.total_secs
+    );
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetFamily;
+    use crate::merge::MergeParams;
+
+    #[test]
+    fn ingest_reports_and_reaches_quality() {
+        let ds = DatasetFamily::Deep.generate(600, 31);
+        let queries = DatasetFamily::Deep.generate_queries(15, 32);
+        let cfg = StreamConfig {
+            segment_size: 150,
+            merge: MergeParams {
+                k: 10,
+                lambda: 10,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut seen = 0usize;
+        let summary = stream_ingest(
+            &ds,
+            &queries,
+            &cfg,
+            Metric::L2,
+            &IngestOptions {
+                report_every: 200,
+                ..Default::default()
+            },
+            &mut |_| seen += 1,
+        );
+        // 200/400 mid-ingest rows plus the final row.
+        assert_eq!(summary.rows.len(), 3);
+        assert_eq!(seen, 3);
+        assert_eq!(summary.rows[0].inserted, 200);
+        assert_eq!(summary.segments, 1, "final compaction should leave one segment");
+        assert!(summary.final_recall > 0.85, "recall={}", summary.final_recall);
+        assert!(summary.insert_rate > 0.0);
+        // Mid-ingest batches answered while only a prefix was inserted.
+        assert!(summary.rows[0].recall > 0.5);
+    }
+
+    #[test]
+    fn throttled_ingest_respects_rate() {
+        let ds = DatasetFamily::Sift.generate(50, 33);
+        let cfg = StreamConfig {
+            segment_size: 25,
+            merge: MergeParams {
+                k: 4,
+                lambda: 4,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let queries = Dataset::from_raw(Vec::new(), ds.dim);
+        let summary = stream_ingest(
+            &ds,
+            &queries,
+            &cfg,
+            Metric::L2,
+            &IngestOptions {
+                rate: 1000.0,
+                report_every: 0,
+                ..Default::default()
+            },
+            &mut |_| {},
+        );
+        // 50 inserts at 1000/s >= 50ms of wall clock.
+        assert!(summary.total_secs >= 0.045, "took {}", summary.total_secs);
+        assert!(summary.insert_rate <= 1200.0);
+    }
+}

@@ -1,0 +1,105 @@
+//! The mutable ingest buffer: absorbs `insert` calls until it reaches
+//! `segment_size`, then drains into a sealed [`super::Segment`].
+//!
+//! Queries scan it brute-force — it is small by construction, and exact
+//! answers over the freshest vectors cost one pass of at most
+//! `segment_size` distances.
+
+use crate::dataset::Dataset;
+use crate::distance::Metric;
+use crate::graph::NeighborList;
+
+/// A small mutable buffer of `(vector, global id)` pairs.
+#[derive(Clone, Debug)]
+pub struct MemTable {
+    data: Dataset,
+    global_ids: Vec<u32>,
+}
+
+impl MemTable {
+    pub fn new(dim: usize) -> MemTable {
+        MemTable {
+            data: Dataset::from_raw(Vec::new(), dim),
+            global_ids: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.global_ids.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.global_ids.is_empty()
+    }
+
+    /// Append one vector under the given global id.
+    pub fn insert(&mut self, v: &[f32], global_id: u32) {
+        self.data.push(v);
+        self.global_ids.push(global_id);
+    }
+
+    /// Exact brute-force scan: up to `topk` `(distance, global id)` hits
+    /// ascending by distance.
+    pub fn search(&self, metric: Metric, query: &[f32], topk: usize) -> Vec<(f32, u32)> {
+        let mut list = NeighborList::new(topk.max(1));
+        for (row, &gid) in self.global_ids.iter().enumerate() {
+            let d = metric.distance(query, self.data.vector(row));
+            if d < list.threshold() {
+                list.insert(gid, d, false);
+            }
+        }
+        list.iter().map(|nb| (nb.dist, nb.id)).collect()
+    }
+
+    /// Take the buffered contents (insertion order preserved), leaving
+    /// the memtable empty.
+    pub fn drain(&mut self) -> (Dataset, Vec<u32>) {
+        let dim = self.data.dim;
+        let data = std::mem::replace(&mut self.data, Dataset::from_raw(Vec::new(), dim));
+        let gids = std::mem::take(&mut self.global_ids);
+        (data, gids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::construction::bruteforce;
+    use crate::dataset::DatasetFamily;
+
+    #[test]
+    fn search_matches_brute_force() {
+        let ds = DatasetFamily::Sift.generate(120, 1);
+        let mut mt = MemTable::new(ds.dim);
+        for i in 0..ds.len() {
+            mt.insert(ds.vector(i), i as u32);
+        }
+        let q = ds.vector(33);
+        let hits = mt.search(Metric::L2, q, 5);
+        let exact = bruteforce::knn_of_vector(&ds, q, 5, Metric::L2);
+        let got: Vec<u32> = hits.iter().map(|&(_, id)| id).collect();
+        assert_eq!(got, exact);
+        for w in hits.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+    }
+
+    #[test]
+    fn drain_preserves_order_and_resets() {
+        let mut mt = MemTable::new(2);
+        mt.insert(&[0.0, 1.0], 7);
+        mt.insert(&[2.0, 3.0], 9);
+        assert_eq!(mt.len(), 2);
+        let (data, gids) = mt.drain();
+        assert_eq!(gids, vec![7, 9]);
+        assert_eq!(data.vector(0), &[0.0, 1.0]);
+        assert_eq!(data.vector(1), &[2.0, 3.0]);
+        assert!(mt.is_empty());
+        assert!(mt.search(Metric::L2, &[0.0, 0.0], 3).is_empty());
+        // The memtable stays usable after a drain.
+        mt.insert(&[4.0, 5.0], 10);
+        assert_eq!(mt.len(), 1);
+    }
+}

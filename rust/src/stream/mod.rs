@@ -1,0 +1,41 @@
+//! Online streaming subsystem: an LSM-of-subgraphs segment log.
+//!
+//! The batch pipeline builds a k-NN graph once; production traffic also
+//! *ingests* new vectors while answering queries. This subsystem treats
+//! the paper's Two-way Merge as the **compaction primitive** of an
+//! LSM-style stack of immutable subgraph segments:
+//!
+//! - [`memtable`] — a small mutable buffer absorbing `insert` calls;
+//!   sealed into a segment when it reaches `segment_size`.
+//! - [`segment`] — an immutable `(Dataset slice, graph)` pair carrying
+//!   its local-row → global-id mapping.
+//! - [`compactor`] — leveled compaction: same-level segment pairs are
+//!   fused with the existing [`crate::merge::TwoWayMerge`] (or the
+//!   Sec. III-B union-and-diversify path in indexing-graph mode).
+//!   Levels grow geometrically, so total merge work stays `O(n log n)`
+//!   — the same hierarchy as the batch Fig. 3a build, unrolled in time.
+//! - [`snapshot`] — the immutable segment-set view queries run against.
+//! - [`engine`] — the user-facing [`StreamingIndex`]: concurrent
+//!   `insert`/`search`/`tick`, with atomic `Arc` snapshot swaps so
+//!   queries never observe a torn segment set.
+//! - [`ingest`] — the rate-controlled ingest driver behind the CLI
+//!   `stream` subcommand, the smoke test, and the example.
+//!
+//! Tuning: `segment_size` trades ingest latency (seal and compaction
+//! pauses grow with it) against search fan-out (smaller segments mean
+//! more per-query probes); `lambda` plays its usual merge cost/quality
+//! role, paid once per compaction.
+
+pub mod compactor;
+pub mod engine;
+pub mod ingest;
+pub mod memtable;
+pub mod segment;
+pub mod snapshot;
+
+pub use compactor::{Compaction, Compactor};
+pub use engine::{CompactorHandle, StreamStats, StreamingIndex};
+pub use ingest::{stream_ingest, stream_ingest_into, IngestOptions, IngestSummary};
+pub use memtable::MemTable;
+pub use segment::Segment;
+pub use snapshot::{merge_topk, SegmentSet};

@@ -1,0 +1,326 @@
+//! Immutable sealed segments: a dataset slice plus its subgraph, with a
+//! local-row → global-id mapping into the stream's id space.
+//!
+//! A segment is built once (at memtable seal or as a compaction output)
+//! and never mutated; concurrent readers share it behind an `Arc`. The
+//! distance-annotated [`KnnGraph`] is the merge substrate for future
+//! compactions; the [`IndexGraph`] is the search structure (either the
+//! raw adjacency or its Eq. 1 diversification, per
+//! [`StreamGraphMode`]).
+
+use super::snapshot::merge_topk;
+use crate::config::{StreamConfig, StreamGraphMode};
+use crate::construction::{bruteforce, NnDescent};
+use crate::dataset::Dataset;
+use crate::distance::Metric;
+use crate::graph::KnnGraph;
+use crate::index::diversify::diversify_knn;
+use crate::index::search::beam_search_from;
+use crate::index::IndexGraph;
+
+/// An immutable sealed segment of the stream.
+#[derive(Clone, Debug)]
+pub struct Segment {
+    /// Unique, monotonically increasing segment id.
+    pub id: u64,
+    /// Compaction level: seals start at 0, each fuse bumps the max + 1.
+    pub level: usize,
+    /// The segment's vectors (local rows).
+    pub data: Dataset,
+    /// Local row -> global stream id.
+    pub global_ids: Vec<u32>,
+    /// Distance-annotated k-NN graph over local ids (merge substrate).
+    pub knn: KnnGraph,
+    /// Search structure over local ids.
+    pub index: IndexGraph,
+    /// Search entry vertices. Diversified (Index-mode) graphs are
+    /// navigable from their single medoid entry; raw k-NN adjacency has
+    /// no long-range edges, so Knn mode probes from a few spread
+    /// entries — clusters the primary entry cannot reach stay
+    /// searchable.
+    pub entries: Vec<u32>,
+}
+
+impl Segment {
+    /// Build a level-`level` segment from raw rows: brute force up to
+    /// `brute_threshold` (exact — seal preserves the true neighbors),
+    /// NN-Descent above it. Deterministic given `(cfg, id, data)`.
+    pub fn seal(
+        id: u64,
+        level: usize,
+        data: Dataset,
+        global_ids: Vec<u32>,
+        metric: Metric,
+        cfg: &StreamConfig,
+    ) -> Segment {
+        assert!(!data.is_empty(), "cannot seal an empty segment");
+        assert_eq!(data.len(), global_ids.len());
+        let n = data.len();
+        let k = cfg.merge.k;
+        let knn = if n <= cfg.brute_threshold.max(k + 1) {
+            bruteforce::build(&data, k, metric)
+        } else {
+            let mut p = cfg.nnd;
+            p.k = k;
+            // Per-segment seed so identical payloads in different
+            // segments don't share sampling patterns; still a pure
+            // function of the insert sequence.
+            p.seed = cfg.nnd.seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            NnDescent::new(p).build(&data, metric)
+        };
+        Segment::from_knn(id, level, data, global_ids, knn, metric, cfg)
+    }
+
+    /// Wrap an already-built k-NN graph (seal or Knn-mode compaction
+    /// output) into a segment, deriving the search structure per mode.
+    pub fn from_knn(
+        id: u64,
+        level: usize,
+        data: Dataset,
+        global_ids: Vec<u32>,
+        knn: KnnGraph,
+        metric: Metric,
+        cfg: &StreamConfig,
+    ) -> Segment {
+        let (index, entries) = match cfg.mode {
+            StreamGraphMode::Knn => {
+                // Undirected adjacency: a raw directed k-NN graph
+                // fragments into per-cluster sinks, which would strand
+                // best-first search at whatever cluster the entry sits
+                // in.
+                let index = IndexGraph::from_knn_undirected(&knn);
+                let entries = spread_entries(data.len(), index.entry, 4);
+                (index, entries)
+            }
+            StreamGraphMode::Index => {
+                let index = diversify_knn(&data, metric, &knn, cfg.alpha, cfg.max_degree);
+                let entries = vec![index.entry];
+                (index, entries)
+            }
+        };
+        Segment {
+            id,
+            level,
+            data,
+            global_ids,
+            knn,
+            index,
+            entries,
+        }
+    }
+
+    /// Number of vectors in the segment.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Global id of local row `local`.
+    #[inline]
+    pub fn global(&self, local: usize) -> u32 {
+        self.global_ids[local]
+    }
+
+    /// Best-first search within the segment (from every entry vertex);
+    /// results are `(distance, global id)` ascending by distance.
+    pub fn search(&self, metric: Metric, query: &[f32], topk: usize, ef: usize) -> Vec<(f32, u32)> {
+        let parts: Vec<Vec<(f32, u32)>> = self
+            .entries
+            .iter()
+            .map(|&entry| {
+                let (ids, _) =
+                    beam_search_from(&self.data, metric, &self.index, entry, query, topk, ef);
+                ids.into_iter()
+                    .map(|local| {
+                        let d = metric.distance(query, self.data.vector(local as usize));
+                        (d, self.global_ids[local as usize])
+                    })
+                    .collect()
+            })
+            .collect();
+        merge_topk(parts, topk)
+    }
+
+    /// Re-key the segment's k-NN graph into the global id space: entry
+    /// `global(i)` of the result holds `knn[i]` with neighbor ids mapped
+    /// through `global_ids`. Rows for global ids outside the segment are
+    /// empty; the result has `max(global_ids) + 1` entries.
+    pub fn knn_in_global_space(&self) -> KnnGraph {
+        let n = self
+            .global_ids
+            .iter()
+            .map(|&g| g as usize + 1)
+            .max()
+            .unwrap_or(0);
+        let mut out = KnnGraph::empty(n, self.knn.k);
+        for local in 0..self.len() {
+            let gi = self.global_ids[local] as usize;
+            for nb in self.knn.lists[local].iter() {
+                out.lists[gi].insert(self.global_ids[nb.id as usize], nb.dist, false);
+            }
+        }
+        out
+    }
+
+    /// Structural invariants (used by tests): mapping length, graph
+    /// sizes, distinct global ids.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.global_ids.len() != self.data.len() {
+            return Err("global_ids length mismatch".into());
+        }
+        if self.knn.len() != self.data.len() {
+            return Err("knn graph size mismatch".into());
+        }
+        if self.index.len() != self.data.len() {
+            return Err("index graph size mismatch".into());
+        }
+        let mut seen = std::collections::HashSet::with_capacity(self.global_ids.len());
+        for &g in &self.global_ids {
+            if !seen.insert(g) {
+                return Err(format!("duplicate global id {g}"));
+            }
+        }
+        if self.entries.is_empty() && !self.data.is_empty() {
+            return Err("segment has no search entries".into());
+        }
+        for &e in &self.entries {
+            if e as usize >= self.data.len() {
+                return Err(format!("entry {e} out of range"));
+            }
+        }
+        self.knn.validate(true)?;
+        self.index.validate()
+    }
+}
+
+/// The primary entry plus up to `probes - 1` rows spread evenly across
+/// the segment (distinct, in-range).
+fn spread_entries(n: usize, primary: u32, probes: usize) -> Vec<u32> {
+    let mut entries = vec![primary];
+    if n > 1 {
+        let stride = (n / probes.max(1)).max(1);
+        for p in 1..probes {
+            let e = ((p * stride) % n) as u32;
+            if !entries.contains(&e) {
+                entries.push(e);
+            }
+        }
+    }
+    entries
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::DatasetFamily;
+
+    fn cfg_k(k: usize) -> StreamConfig {
+        StreamConfig {
+            merge: crate::merge::MergeParams {
+                k,
+                lambda: k,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn seal_below_threshold_is_exact_brute_force() {
+        let ds = DatasetFamily::Deep.generate(300, 3);
+        let cfg = cfg_k(8);
+        assert!(300 <= cfg.brute_threshold);
+        let gids: Vec<u32> = (100..400).collect();
+        let seg = Segment::seal(0, 0, ds.clone(), gids, Metric::L2, &cfg);
+        seg.validate().unwrap();
+        // The sealed graph must equal the exact brute-force graph.
+        assert_eq!(seg.knn, bruteforce::build(&ds, 8, Metric::L2));
+        assert_eq!(seg.global(0), 100);
+    }
+
+    #[test]
+    fn seal_above_threshold_uses_nndescent_with_good_recall() {
+        let ds = DatasetFamily::Deep.generate(900, 4);
+        let mut cfg = cfg_k(10);
+        cfg.brute_threshold = 100;
+        let gids: Vec<u32> = (0..900).collect();
+        let seg = Segment::seal(1, 0, ds.clone(), gids, Metric::L2, &cfg);
+        seg.validate().unwrap();
+        let truth = crate::eval::recall::GroundTruth::sampled(&ds, 10, Metric::L2, 120, 5);
+        let r = crate::eval::recall::graph_recall(&seg.knn, &truth, 10);
+        assert!(r > 0.9, "sealed NN-Descent recall@10 = {r}");
+    }
+
+    #[test]
+    fn search_returns_global_ids_sorted_by_distance() {
+        let ds = DatasetFamily::Sift.generate(250, 5);
+        let cfg = cfg_k(8);
+        let gids: Vec<u32> = (0..250).map(|i| i * 2).collect(); // sparse ids
+        let seg = Segment::seal(0, 0, ds.clone(), gids, Metric::L2, &cfg);
+        let hits = seg.search(Metric::L2, ds.vector(17), 5, 64);
+        assert!(!hits.is_empty());
+        // Exact match first, mapped through the sparse global ids.
+        assert_eq!(hits[0].1, 34);
+        assert!(hits[0].0 <= 1e-6);
+        for w in hits.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+    }
+
+    #[test]
+    fn global_space_graph_rekeys_entries_and_neighbors() {
+        let ds = DatasetFamily::Deep.generate(60, 6);
+        let cfg = cfg_k(4);
+        let gids: Vec<u32> = (0..60).map(|i| 59 - i).collect(); // reversed
+        let seg = Segment::seal(0, 0, ds.clone(), gids, Metric::L2, &cfg);
+        let g = seg.knn_in_global_space();
+        assert_eq!(g.len(), 60);
+        // Entry for global id 59 is local row 0: same neighbor distances.
+        let local_d: Vec<f32> = seg.knn.lists[0].iter().map(|nb| nb.dist).collect();
+        let global_d: Vec<f32> = g.lists[59].iter().map(|nb| nb.dist).collect();
+        assert_eq!(local_d, global_d);
+        // Neighbor ids are mapped: local id j -> 59 - j.
+        for (nb_l, nb_g) in seg.knn.lists[0].iter().zip(g.lists[59].iter()) {
+            assert_eq!(nb_g.id, 59 - nb_l.id);
+        }
+    }
+
+    #[test]
+    fn spread_entries_are_distinct_and_in_range() {
+        assert_eq!(spread_entries(1, 0, 4), vec![0]);
+        let e = spread_entries(100, 7, 4);
+        assert_eq!(e[0], 7);
+        assert!(e.len() > 1 && e.len() <= 4);
+        let distinct: std::collections::HashSet<u32> = e.iter().copied().collect();
+        assert_eq!(distinct.len(), e.len());
+        assert!(e.iter().all(|&x| x < 100));
+        // A sealed Knn-mode segment gets multiple probes; Index mode one.
+        let ds = DatasetFamily::Deep.generate(120, 8);
+        let seg = Segment::seal(0, 0, ds.clone(), (0..120).collect(), Metric::L2, &cfg_k(6));
+        assert!(seg.entries.len() > 1);
+        let mut icfg = cfg_k(6);
+        icfg.mode = StreamGraphMode::Index;
+        let iseg = Segment::seal(1, 0, ds, (0..120).collect(), Metric::L2, &icfg);
+        assert_eq!(iseg.entries.len(), 1);
+    }
+
+    #[test]
+    fn index_mode_diversifies_the_search_graph() {
+        let ds = DatasetFamily::Deep.generate(300, 7);
+        let mut cfg = cfg_k(16);
+        cfg.mode = StreamGraphMode::Index;
+        cfg.max_degree = 16;
+        let gids: Vec<u32> = (0..300).collect();
+        let seg = Segment::seal(0, 0, ds, gids, Metric::L2, &cfg);
+        seg.validate().unwrap();
+        assert!(
+            seg.index.edge_count() < seg.knn.edge_count(),
+            "diversification should prune edges"
+        );
+    }
+}

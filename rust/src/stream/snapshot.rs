@@ -1,0 +1,100 @@
+//! Immutable segment-set snapshots — the view a query runs against.
+//!
+//! The engine publishes the live set as an `Arc<SegmentSet>`; readers
+//! clone the `Arc` and search without any further synchronization, so a
+//! compaction swap can never tear the set mid-query.
+
+use super::segment::Segment;
+use std::sync::Arc;
+
+/// An immutable snapshot of the live segments, ordered by segment id.
+#[derive(Clone, Debug, Default)]
+pub struct SegmentSet {
+    pub segments: Vec<Arc<Segment>>,
+}
+
+impl SegmentSet {
+    pub fn empty() -> SegmentSet {
+        SegmentSet::default()
+    }
+
+    /// Number of live segments.
+    pub fn count(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Total vectors across all segments.
+    pub fn total_vectors(&self) -> usize {
+        self.segments.iter().map(|s| s.len()).sum()
+    }
+
+    /// `(level, segment count)` pairs, ascending by level.
+    pub fn level_histogram(&self) -> Vec<(usize, usize)> {
+        let mut hist = std::collections::BTreeMap::new();
+        for s in &self.segments {
+            *hist.entry(s.level).or_insert(0usize) += 1;
+        }
+        hist.into_iter().collect()
+    }
+
+    /// Fan a query out across every segment and merge-sort the
+    /// per-segment top-k into a global `(distance, global id)` top-k.
+    pub fn search(
+        &self,
+        metric: crate::distance::Metric,
+        query: &[f32],
+        topk: usize,
+        ef: usize,
+    ) -> Vec<(f32, u32)> {
+        let parts: Vec<Vec<(f32, u32)>> = self
+            .segments
+            .iter()
+            .map(|s| s.search(metric, query, topk, ef))
+            .collect();
+        merge_topk(parts, topk)
+    }
+}
+
+/// Merge per-segment result lists (each ascending by distance) into one
+/// global top-k, deduplicated by global id.
+pub fn merge_topk(parts: Vec<Vec<(f32, u32)>>, topk: usize) -> Vec<(f32, u32)> {
+    let mut all: Vec<(f32, u32)> = parts.into_iter().flatten().collect();
+    all.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+    let mut seen = std::collections::HashSet::with_capacity(all.len());
+    all.retain(|&(_, id)| seen.insert(id));
+    all.truncate(topk);
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_topk_orders_dedups_truncates() {
+        let parts = vec![
+            vec![(0.1, 1), (0.5, 2)],
+            vec![(0.2, 3), (0.5, 2)], // duplicate id 2
+            vec![(0.05, 4)],
+        ];
+        let merged = merge_topk(parts, 3);
+        assert_eq!(merged.iter().map(|&(_, id)| id).collect::<Vec<_>>(), vec![4, 1, 3]);
+    }
+
+    #[test]
+    fn merge_topk_handles_empty() {
+        assert!(merge_topk(Vec::new(), 5).is_empty());
+        assert!(merge_topk(vec![Vec::new(), Vec::new()], 5).is_empty());
+    }
+
+    #[test]
+    fn empty_set_reports_zero() {
+        let s = SegmentSet::empty();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.total_vectors(), 0);
+        assert!(s.level_histogram().is_empty());
+        assert!(s
+            .search(crate::distance::Metric::L2, &[0.0; 4], 5, 10)
+            .is_empty());
+    }
+}

@@ -1,0 +1,47 @@
+//! Smoke test for the `stream` CLI subcommand: drives the exact code
+//! path `main.rs` dispatches to (`stream::ingest::cli_stream`) on a
+//! generated 2k-vector dataset and checks the run summary.
+
+use knn_merge::cli::Args;
+use knn_merge::stream::ingest::cli_stream;
+
+fn args(tokens: &str) -> Args {
+    Args::parse(tokens.split_whitespace().map(String::from)).unwrap()
+}
+
+#[test]
+fn stream_cli_smoke_on_2k_vectors() {
+    let a = args(
+        "stream --family deep --n 2000 --seed 5 --k 10 --lambda 10 \
+         --segment-size 500 --report-every 1000 --queries 10 --topk 10",
+    );
+    let summary = cli_stream(&a).unwrap();
+    assert_eq!(summary.segments, 1, "final compaction should leave one segment");
+    assert!(summary.compactions >= 3, "4 L0 segments need >= 3 fuses");
+    assert!(
+        summary.final_recall > 0.85,
+        "final recall@10 = {}",
+        summary.final_recall
+    );
+    // Mid-ingest batches were answered while ingest was in flight.
+    assert!(summary.rows.len() >= 2);
+    assert!(summary.rows[0].inserted < 2000);
+    assert!(summary.rows[0].recall > 0.5);
+}
+
+#[test]
+fn stream_cli_accepts_config_overrides() {
+    let a = args(
+        "stream --family sift --n 600 --segment-size 200 --mode index \
+         --report-every 0 --queries 5 --set stream.ef=96",
+    );
+    let summary = cli_stream(&a).unwrap();
+    assert_eq!(summary.segments, 1);
+    assert!(summary.final_recall > 0.7, "recall = {}", summary.final_recall);
+}
+
+#[test]
+fn stream_cli_rejects_bad_mode() {
+    let a = args("stream --n 100 --mode bogus");
+    assert!(cli_stream(&a).is_err());
+}
