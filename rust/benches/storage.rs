@@ -1,0 +1,173 @@
+//! Storage-layer bench: allocation footprint and throughput of the
+//! zero-copy view operations, plus peak resident allocation of the
+//! split → build → merge pipeline.
+//!
+//! A counting global allocator tracks live and peak heap bytes, so the
+//! rows below are *measured* guarantees, not claims:
+//!
+//! - `split_*` / `seal_drain`: bytes allocated by `split_contiguous`
+//!   and the memtable → segment drain. With Arc-backed views these are
+//!   O(parts) bookkeeping bytes, not O(n·d) vector copies (the old
+//!   owned-`Vec` layout allocated the full payload again).
+//! - `pipeline_*`: peak live bytes while running the single-node
+//!   split-build-merge pipeline, reported as a multiple of the vector
+//!   payload — the number future PRs regress against.
+//!
+//! Emits `results/storage.json` in the same shape as the other bench
+//! outputs (a `BENCH_*` trajectory point).
+
+use knn_merge::config::RunConfig;
+use knn_merge::construction::NnDescentParams;
+use knn_merge::coordinator::{build_single_node, MergeStrategy};
+use knn_merge::dataset::DatasetFamily;
+use knn_merge::eval::bench::{scaled, BenchReport, Row};
+use knn_merge::merge::MergeParams;
+use knn_merge::stream::MemTable;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// System allocator wrapper counting live and peak bytes.
+struct CountingAlloc;
+
+static LIVE: AtomicU64 = AtomicU64::new(0);
+static PEAK: AtomicU64 = AtomicU64::new(0);
+static TOTAL: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let size = layout.size() as u64;
+            let live = LIVE.fetch_add(size, Ordering::Relaxed) + size;
+            TOTAL.fetch_add(size, Ordering::Relaxed);
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+        System.dealloc(ptr, layout);
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Run `f`, returning `(result, bytes_allocated_during, peak_extra_live)`.
+fn measured<R>(f: impl FnOnce() -> R) -> (R, u64, u64) {
+    let live0 = LIVE.load(Ordering::Relaxed);
+    let total0 = TOTAL.load(Ordering::Relaxed);
+    PEAK.store(live0, Ordering::Relaxed);
+    let r = f();
+    let allocated = TOTAL.load(Ordering::Relaxed) - total0;
+    let peak_extra = PEAK.load(Ordering::Relaxed).saturating_sub(live0);
+    (r, allocated, peak_extra)
+}
+
+fn main() {
+    let n = scaled(50_000);
+    let dim_ds = DatasetFamily::Sift.generate(n, 42);
+    let payload = dim_ds.payload_bytes();
+
+    let mut report = BenchReport::new("storage");
+    report.note(format!(
+        "zero-copy storage layer: sift-like n={n} dim={} (payload {:.1} MB); \
+         alloc columns measured by a counting global allocator",
+        dim_ds.dim,
+        payload as f64 / 1e6
+    ));
+    report.note(
+        "split/seal rows must stay O(1) in the payload — the acceptance gate for \
+         Arc-view storage; pipeline peak is the regression trajectory"
+            .to_string(),
+    );
+
+    // --- split_contiguous: views, not copies ---
+    for parts in [4usize, 16] {
+        let (split, alloc_bytes, _) = measured(|| dim_ds.split_contiguous(parts));
+        let t0 = Instant::now();
+        let mut keep = 0usize;
+        for _ in 0..100 {
+            let again = dim_ds.split_contiguous(parts);
+            keep += again.len();
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        assert_eq!(keep, parts * 100);
+        assert!(
+            alloc_bytes < payload / 100,
+            "split_contiguous({parts}) allocated {alloc_bytes} bytes — copying?"
+        );
+        report.push(
+            Row::new(format!("split_p{parts}"))
+                .col("alloc_bytes", alloc_bytes as f64)
+                .col("alloc_frac_of_payload", alloc_bytes as f64 / payload as f64)
+                .col("splits_per_s", 100.0 * parts as f64 / secs.max(1e-9)),
+        );
+        drop(split);
+    }
+
+    // --- memtable drain -> seal input: allocation is handed over ---
+    {
+        let rows = 2048.min(n);
+        let mut mt = MemTable::new(dim_ds.dim);
+        for i in 0..rows {
+            mt.insert(dim_ds.vector(i), i as u32);
+        }
+        let (drained, alloc_bytes, _) = measured(|| mt.drain());
+        // The drain moves the buffer: only view bookkeeping is allocated.
+        let row_payload = (rows * dim_ds.dim * 4) as u64;
+        assert!(
+            alloc_bytes < row_payload / 10,
+            "memtable drain allocated {alloc_bytes} bytes for a {row_payload}-byte buffer"
+        );
+        report.push(
+            Row::new("seal_drain")
+                .col("alloc_bytes", alloc_bytes as f64)
+                .col("rows", rows as f64)
+                .col("alloc_frac_of_payload", alloc_bytes as f64 / row_payload as f64),
+        );
+        drop(drained);
+    }
+
+    // --- pipeline peak: split + build + two-way merge ---
+    {
+        let pn = scaled(6_000);
+        let ds = DatasetFamily::Deep.generate(pn, 7);
+        let ppayload = ds.payload_bytes();
+        let cfg = RunConfig {
+            parts: 2,
+            merge: MergeParams {
+                k: 10,
+                lambda: 10,
+                ..Default::default()
+            },
+            nnd: NnDescentParams {
+                k: 10,
+                lambda: 10,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let (result, _, peak_extra) =
+            measured(|| build_single_node(&ds, &cfg, MergeStrategy::TwoWayHierarchy));
+        let secs = t0.elapsed().as_secs_f64();
+        result.graph.validate(true).unwrap();
+        report.push(
+            Row::new("pipeline_2way")
+                .col("n", pn as f64)
+                .col("peak_extra_bytes", peak_extra as f64)
+                .col("peak_extra_over_payload", peak_extra as f64 / ppayload as f64)
+                .col("merge_secs", result.merge_secs)
+                .col("total_secs", secs)
+                .col(
+                    "vectors_per_s",
+                    pn as f64 / secs.max(1e-9),
+                ),
+        );
+    }
+
+    report.finish();
+}

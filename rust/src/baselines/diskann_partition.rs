@@ -13,7 +13,8 @@ use super::kmeans::kmeans;
 use crate::construction::{NnDescent, NnDescentParams};
 use crate::dataset::Dataset;
 use crate::distance::Metric;
-use crate::graph::{KnnGraph, NeighborList};
+use crate::graph::{IdRemap, KnnGraph, NeighborList};
+use std::sync::Arc;
 
 /// Parameters for the overlapping-partition baseline.
 #[derive(Clone, Copy, Debug)]
@@ -40,7 +41,11 @@ impl Default for DiskannPartitionParams {
 
 /// Build a k-NN graph via overlapping partitions + merge-sort reduce.
 /// Returns the graph plus the partition sizes (for cost reporting).
-pub fn build(ds: &Dataset, metric: Metric, params: DiskannPartitionParams) -> (KnnGraph, Vec<usize>) {
+pub fn build(
+    ds: &Dataset,
+    metric: Metric,
+    params: DiskannPartitionParams,
+) -> (KnnGraph, Vec<usize>) {
     let n = ds.len();
     let k = params.nnd.k;
     let km = kmeans(ds, params.partitions, 8, params.seed);
@@ -57,12 +62,16 @@ pub fn build(ds: &Dataset, metric: Metric, params: DiskannPartitionParams) -> (K
     let mut global = KnnGraph::empty(n, k);
     let nnd = NnDescent::new(params.nnd);
     for member_ids in members.iter().filter(|m| m.len() > k + 1) {
-        let sub = ds.subset(member_ids);
+        let sub = ds.subset(member_ids); // zero-copy gather view
         let sub_graph = nnd.build(&sub, metric);
+        // Partition-local -> dataset ids through a checked table remap.
+        let to_global = IdRemap::table(Arc::new(
+            member_ids.iter().map(|&m| m as u32).collect::<Vec<u32>>(),
+        ));
         for (local, &global_id) in member_ids.iter().enumerate() {
             let mut remapped = NeighborList::new(k);
             for nb in sub_graph.lists[local].iter() {
-                remapped.insert(member_ids[nb.id as usize] as u32, nb.dist, false);
+                remapped.insert(to_global.map(nb.id), nb.dist, false);
             }
             global.lists[global_id] =
                 NeighborList::merged(&global.lists[global_id], &remapped, k);

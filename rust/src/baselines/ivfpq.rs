@@ -173,7 +173,7 @@ impl IvfPq {
             }
             list
         });
-        KnnGraph { lists, k }
+        KnnGraph::from_lists(lists, k)
     }
 }
 

@@ -48,7 +48,7 @@ pub fn build(ds: &Dataset, k: usize, metric: Metric) -> KnnGraph {
         }
         list
     });
-    KnnGraph { lists, k }
+    KnnGraph::from_lists(lists, k)
 }
 
 #[cfg(test)]

@@ -5,12 +5,26 @@
 //! same pairwise flow as Alg. 3 — `C(p,2)` Two-way Merges in total (the
 //! paper's "4 subgraph constructions and 6 rounds of two-way merge" for
 //! p = 4).
+//!
+//! Id discipline: subgraphs are rebased to **global** ids once, right
+//! after construction, and every spill file carries its [`IdSpan`] in
+//! the wire format — so reloads always know which space a graph is in.
+//! The old `ensure_global` "does this look local?" guessing (and its
+//! double-shift hazard) is gone; see the regression test below.
+//!
+//! Residency: subsets are *views* — the initial split is zero-copy, and
+//! `get_subset` returns a demand-paged view over the spill file. The
+//! merge's pair space is a chained view (no materialized pair copy), so
+//! a round's joins fault rows in on demand and residency converges to
+//! at most the two subsets in play (~2/p of the dataset, Sec. IV's
+//! bound) rather than the old "deserialize both subsets, then copy
+//! them again into the concatenated buffer".
 
 use crate::config::RunConfig;
 use crate::construction::NnDescent;
 use crate::dataset::Dataset;
 use crate::distributed::storage::{ExternalStorage, StorageModel};
-use crate::graph::{KnnGraph, Neighbor, NeighborList};
+use crate::graph::{IdRemap, IdSpan, KnnGraph, Neighbor, NeighborList};
 use crate::merge::{SupportLists, TwoWayMerge};
 use crate::metrics::{CostLedger, Phase};
 use anyhow::Result;
@@ -29,23 +43,32 @@ pub fn build_out_of_core(ds: &Dataset, cfg: &RunConfig) -> Result<(KnnGraph, Cos
         },
     )?;
 
-    // Phase 1: split + spill vectors (in a real deployment the subsets
-    // arrive on disk; we account the initial write as storage too).
+    // Phase 1: split (zero-copy views) + spill vectors (in a real
+    // deployment the subsets arrive on disk; we account the initial
+    // write as storage too).
     let parts = ds.split_contiguous(p);
     let offsets: Vec<usize> = parts.iter().map(|(_, off)| *off).collect();
     let sizes: Vec<usize> = parts.iter().map(|(d, _)| d.len()).collect();
+    let spans: Vec<IdSpan> = offsets
+        .iter()
+        .zip(&sizes)
+        .map(|(&off, &len)| IdSpan::new(off as u32, len as u32))
+        .collect();
     for (s, (sub, _)) in parts.iter().enumerate() {
         storage.put_subset(s, sub, &ledger)?;
     }
-    drop(parts); // nothing resident now
+    drop(parts); // the split views are gone; only spill files remain
 
-    // Phase 2: subgraphs one at a time (one subset resident).
+    // Phase 2: subgraphs one at a time (one subset resident). Supports
+    // are sampled in subset-local space; the subgraph itself is rebased
+    // to global ids *once*, before it is spilled — every later load sees
+    // the span in the file and never has to guess.
     let nnd = NnDescent::new(cfg.nnd);
     for s in 0..p {
         let sub = storage.get_subset(s, &ledger)?;
         let g = ledger.time(Phase::Build, || nnd.build(&sub, cfg.metric));
         let support = SupportLists::build(&g, cfg.merge.lambda);
-        storage.put_graph(&format!("sub-{s}"), &g, &ledger)?;
+        storage.put_graph(&format!("sub-{s}"), &g.rebase(spans[s].offset), &ledger)?;
         // Supports ride along as a graph-shaped file (ids only).
         storage.put_graph(&format!("sup-{s}"), &support_as_graph(&support), &ledger)?;
     }
@@ -55,57 +78,47 @@ pub fn build_out_of_core(ds: &Dataset, cfg: &RunConfig) -> Result<(KnnGraph, Cos
         for j in (i + 1)..p {
             let ds_i = storage.get_subset(i, &ledger)?;
             let ds_j = storage.get_subset(j, &ledger)?;
-            let mut g_i = storage.get_graph(&format!("sub-{i}"), &ledger)?;
-            let mut g_j = storage.get_graph(&format!("sub-{j}"), &ledger)?;
+            let g_i = storage.get_graph(&format!("sub-{i}"), &ledger)?;
+            let g_j = storage.get_graph(&format!("sub-{j}"), &ledger)?;
+            debug_assert_eq!(g_i.span(), spans[i]);
+            debug_assert_eq!(g_j.span(), spans[j]);
             let s_i = graph_as_support(&storage.get_graph(&format!("sup-{i}"), &ledger)?);
             let s_j = graph_as_support(&storage.get_graph(&format!("sup-{j}"), &ledger)?);
 
+            let (n_i, n_j) = (ds_i.len(), ds_j.len());
             let (gi_new, gj_new) = ledger.time(Phase::Merge, || {
-                let mut support = s_i;
-                let mut remote = s_j;
-                remote.offset_ids(ds_i.len() as u32);
-                let mut lists = support.lists;
-                lists.append(&mut remote.lists);
-                support = SupportLists { lists };
+                let support = SupportLists::concat_pair(s_i, s_j, n_i);
                 let cross = TwoWayMerge::new(cfg.merge).cross_graph(
                     &ds_i, &ds_j, &support, cfg.metric,
                 );
-                // Split cross graph rows; translate C_j-side ids.
-                let n_i = ds_i.len();
-                let g_ij = cross.slice_rows(0..n_i);
-                let g_ji = cross.slice_rows(n_i..cross.len());
-                // g_i is subset-local with *pair-local* cross ids: keep
-                // everything in "pair space" and convert at the end.
-                // Simpler: convert cross ids to global now.
-                let to_global_i = shift_ids(&g_ij, |id| {
-                    // ids >= n_i are C_j-local
-                    id - n_i as u32 + offsets[j] as u32
-                });
-                let to_global_j = shift_ids(&g_ji, |id| id + offsets[i] as u32);
-                (to_global_i, to_global_j)
+                // Split the pair-space cross graph and translate each
+                // half into its global row span.
+                let to_global = IdRemap::pair(n_i, n_j, spans[i].offset, spans[j].offset);
+                let g_ij = cross.slice_rows(0..n_i).remapped(&to_global, spans[i]);
+                let g_ji = cross
+                    .slice_rows(n_i..n_i + n_j)
+                    .remapped(&to_global, spans[j]);
+                (g_ij, g_ji)
             });
-            // MergeSort into the stored subgraphs. Subgraph ids are
-            // subset-local; convert them to global on first touch.
-            g_i = ensure_global(&g_i, offsets[i] as u32, sizes[i]);
-            g_j = ensure_global(&g_j, offsets[j] as u32, sizes[j]);
-            g_i = g_i.merge_sorted(&gi_new);
-            g_j = g_j.merge_sorted(&gj_new);
+            // MergeSort into the stored subgraphs — all four graphs are
+            // in global space, enforced by the span check inside
+            // merge_sorted.
+            let g_i = g_i.merge_sorted(&gi_new);
+            let g_j = g_j.merge_sorted(&gj_new);
             storage.put_graph(&format!("sub-{i}"), &g_i, &ledger)?;
             storage.put_graph(&format!("sub-{j}"), &g_j, &ledger)?;
         }
     }
 
-    // Phase 4: assemble (stream the final rows; ids are global).
-    let mut lists = Vec::with_capacity(ds.len());
-    let mut k = cfg.merge.k;
+    // Phase 4: assemble the global row blocks (spans checked to be
+    // consecutive).
+    let mut blocks = Vec::with_capacity(p);
     for s in 0..p {
-        let g = storage.get_graph(&format!("sub-{s}"), &ledger)?;
-        let g = ensure_global(&g, offsets[s] as u32, sizes[s]);
-        k = k.max(g.k);
-        lists.extend(g.lists);
+        blocks.push(storage.get_graph(&format!("sub-{s}"), &ledger)?);
     }
+    let graph = KnnGraph::assemble(blocks);
     storage.cleanup()?;
-    Ok((KnnGraph { lists, k }, ledger))
+    Ok((graph, ledger))
 }
 
 /// Store supports in the graph wire format (ids only, dist = position).
@@ -126,49 +139,12 @@ fn support_as_graph(s: &SupportLists) -> KnnGraph {
             nl
         })
         .collect();
-    KnnGraph { lists, k }
+    KnnGraph::from_lists(lists, k)
 }
 
 fn graph_as_support(g: &KnnGraph) -> SupportLists {
     SupportLists {
         lists: (0..g.len()).map(|i| g.ids(i)).collect(),
-    }
-}
-
-fn shift_ids(g: &KnnGraph, f: impl Fn(u32) -> u32) -> KnnGraph {
-    let lists = g
-        .lists
-        .iter()
-        .map(|l| {
-            let mut out = NeighborList::new(g.k);
-            for nb in l.iter() {
-                out.push_unchecked(Neighbor {
-                    id: f(nb.id),
-                    dist: nb.dist,
-                    new: nb.new,
-                });
-            }
-            out
-        })
-        .collect();
-    KnnGraph { lists, k: g.k }
-}
-
-/// Convert a subgraph to global ids if it still looks subset-local
-/// (every id < subset size and offset > 0 implies local).
-fn ensure_global(g: &KnnGraph, offset: u32, local_size: usize) -> KnnGraph {
-    if offset == 0 {
-        return g.clone();
-    }
-    let looks_local = g
-        .lists
-        .iter()
-        .flat_map(|l| l.iter())
-        .all(|nb| (nb.id as usize) < local_size);
-    if looks_local && g.edge_count() > 0 {
-        shift_ids(g, |id| id + offset)
-    } else {
-        g.clone()
     }
 }
 
@@ -179,6 +155,7 @@ mod tests {
     use crate::dataset::DatasetFamily;
     use crate::distance::Metric;
     use crate::eval::recall::{graph_recall, GroundTruth};
+    use crate::graph::serial;
     use crate::merge::MergeParams;
 
     #[test]
@@ -208,5 +185,40 @@ mod tests {
         assert!(ledger.secs(Phase::Build) > 0.0);
         assert!(ledger.secs(Phase::Merge) > 0.0);
         assert!(ledger.bytes_stored() > 0);
+    }
+
+    /// Regression for the old `ensure_global` double-shift hazard: a
+    /// *global* subgraph whose ids all happen to fall below the subset
+    /// size used to "look local" and get shifted a second time. With
+    /// spans in the type (and in the spill format), `to_global` is a
+    /// checked no-op on an already-global graph — this test is the spec.
+    #[test]
+    fn global_ids_below_local_size_are_not_reshifted() {
+        // Subset of 100 rows living at global offset 100, but every
+        // neighbor id points into 0..50 — numerically indistinguishable
+        // from subset-local ids.
+        let span = IdSpan::new(100, 100);
+        let mut local = KnnGraph::empty(100, 4);
+        for i in 0..100usize {
+            local.lists[i].insert((i as u32 + 1) % 50, 0.5, false);
+        }
+        // Build the global graph via an explicit remap (ids into 0..50
+        // of the *global* space, rows at 100..200).
+        let global = local.remapped(&IdRemap::identity(100), span);
+        assert_eq!(global.span(), span);
+
+        // Round-trip through the spill format: the span survives.
+        let reloaded = serial::graph_from_bytes(&serial::graph_to_bytes(&global)).unwrap();
+        assert_eq!(reloaded.span(), span);
+
+        // The checked "ensure global" is a pass-through: ids unchanged.
+        let ensured = reloaded.to_global(span);
+        assert_eq!(ensured, global);
+        assert_eq!(ensured.ids(0), vec![1]);
+
+        // And the hazard itself is a type-state error now: rebasing an
+        // already-global graph panics instead of silently double-shifting.
+        let hazard = std::panic::catch_unwind(|| global.rebase(100));
+        assert!(hazard.is_err(), "double shift must not be expressible");
     }
 }

@@ -198,7 +198,7 @@ impl GeneratorConfig {
                 }
             });
         }
-        Dataset { data, dim: d }
+        Dataset::from_raw(data, d)
     }
 }
 
@@ -212,7 +212,7 @@ mod tests {
             let ds = fam.generate(200, 1);
             assert_eq!(ds.len(), 200);
             assert_eq!(ds.dim, fam.dim());
-            assert!(ds.data.iter().all(|v| v.is_finite()));
+            assert!(ds.to_vec().iter().all(|v| v.is_finite()));
         }
     }
 
@@ -220,15 +220,15 @@ mod tests {
     fn deterministic_per_seed() {
         let a = DatasetFamily::Sift.generate(100, 9);
         let b = DatasetFamily::Sift.generate(100, 9);
-        assert_eq!(a.data, b.data);
+        assert_eq!(a, b);
         let c = DatasetFamily::Sift.generate(100, 10);
-        assert_ne!(a.data, c.data);
+        assert_ne!(a, c);
     }
 
     #[test]
     fn sift_like_is_nonnegative() {
         let ds = DatasetFamily::Sift.generate(100, 2);
-        assert!(ds.data.iter().all(|&v| (0.0..=255.0).contains(&v)));
+        assert!(ds.to_vec().iter().all(|&v| (0.0..=255.0).contains(&v)));
     }
 
     #[test]
@@ -245,7 +245,7 @@ mod tests {
         let base = DatasetFamily::Deep.generate(100, 4);
         let q = DatasetFamily::Deep.generate_queries(10, 4);
         assert_eq!(q.len(), 10);
-        assert_ne!(&base.data[..q.data.len()], &q.data[..]);
+        assert_ne!(base.slice_rows(0..q.len()), q);
     }
 
     #[test]

@@ -48,7 +48,7 @@ pub fn read_fvecs(path: &Path, limit: Option<usize>) -> Result<Dataset> {
     if dim == 0 {
         bail!("empty fvecs file {path:?}");
     }
-    Ok(Dataset { data, dim })
+    Ok(Dataset::from_raw(data, dim))
 }
 
 /// Write a dataset as `.fvecs`.
@@ -102,7 +102,7 @@ pub fn read_bvecs(path: &Path, limit: Option<usize>) -> Result<Dataset> {
     if dim == 0 {
         bail!("empty bvecs file {path:?}");
     }
-    Ok(Dataset { data, dim })
+    Ok(Dataset::from_raw(data, dim))
 }
 
 /// Read an `.ivecs` file (e.g. ground-truth neighbor ids).
@@ -152,7 +152,7 @@ pub fn write_ivecs(path: &Path, rows: &[Vec<u32>]) -> Result<()> {
 }
 
 /// Compact internal format: `magic, dim: u32, n: u64, data: n*d f32`.
-const KNNV_MAGIC: u32 = 0x4B_4E_4E_56; // "KNNV"
+pub(crate) const KNNV_MAGIC: u32 = 0x4B_4E_4E_56; // "KNNV"
 
 /// Write the compact internal `.knnv` format (out-of-core spill files).
 pub fn write_knnv(path: &Path, ds: &Dataset) -> Result<()> {
@@ -161,9 +161,16 @@ pub fn write_knnv(path: &Path, ds: &Dataset) -> Result<()> {
     w.write_all(&KNNV_MAGIC.to_le_bytes())?;
     w.write_all(&(ds.dim as u32).to_le_bytes())?;
     w.write_all(&(ds.len() as u64).to_le_bytes())?;
-    // Bulk write: safe because f32 slices have no padding.
-    let bytes: Vec<u8> = ds.data.iter().flat_map(|v| v.to_le_bytes()).collect();
-    w.write_all(&bytes)?;
+    // Row-wise write: the dataset may be a gather view or paged, so
+    // there is no single contiguous buffer to bulk-copy from.
+    let mut row_bytes = Vec::with_capacity(ds.dim * 4);
+    for i in 0..ds.len() {
+        row_bytes.clear();
+        for &v in ds.vector(i) {
+            row_bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&row_bytes)?;
+    }
     w.flush()?;
     Ok(())
 }
@@ -188,7 +195,7 @@ pub fn read_knnv(path: &Path) -> Result<Dataset> {
         .chunks_exact(4)
         .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
         .collect();
-    Ok(Dataset { data, dim })
+    Ok(Dataset::from_raw(data, dim))
 }
 
 #[cfg(test)]
@@ -209,7 +216,7 @@ mod tests {
         write_fvecs(&path, &ds).unwrap();
         let back = read_fvecs(&path, None).unwrap();
         assert_eq!(back.dim, ds.dim);
-        assert_eq!(back.data, ds.data);
+        assert_eq!(back, ds);
         let limited = read_fvecs(&path, Some(5)).unwrap();
         assert_eq!(limited.len(), 5);
     }
@@ -230,7 +237,13 @@ mod tests {
         write_knnv(&path, &ds).unwrap();
         let back = read_knnv(&path).unwrap();
         assert_eq!(back.dim, ds.dim);
-        assert_eq!(back.data, ds.data);
+        assert_eq!(back, ds);
+        // A gather view writes its selected rows, not the whole store.
+        let view = ds.subset(&[3, 1]);
+        let vpath = tmpdir().join("view.knnv");
+        write_knnv(&vpath, &view).unwrap();
+        let vback = read_knnv(&vpath).unwrap();
+        assert_eq!(vback, view);
     }
 
     #[test]

@@ -1,99 +1,315 @@
-//! Datasets: dense vector storage, synthetic generators calibrated to the
-//! paper's Tab. II dataset families, `fvecs`/`bvecs`/`ivecs` IO for real
-//! data, and a Local Intrinsic Dimensionality (LID) estimator used to
-//! validate the generators.
+//! Datasets: zero-copy views over shared vector storage, synthetic
+//! generators calibrated to the paper's Tab. II dataset families,
+//! `fvecs`/`bvecs`/`ivecs` IO for real data, and a Local Intrinsic
+//! Dimensionality (LID) estimator used to validate the generators.
+//!
+//! # Memory model
+//!
+//! A [`Dataset`] is a *view*: an `Arc<VectorStore>` (one allocation, or
+//! a demand-paged file — see [`store`]) plus a row selection. Cloning a
+//! dataset, [`Dataset::split_contiguous`], [`Dataset::slice_rows`] and
+//! [`Dataset::subset`] never copy vector payload; they share the store
+//! and narrow the selection. [`Dataset::concat`] is zero-copy too for
+//! range views: adjacent ranges of one store widen the range, and
+//! anything else chains the blocks behind one store
+//! ([`VectorStore::chained`]) — so the split → build → merge pipeline,
+//! the distributed node pairs, and the out-of-core rounds all stay at
+//! one resident copy of the vectors instead of the ~2x the old
+//! owned-`Vec` layout paid. Only `concat` of gather views materializes.
 
 pub mod generator;
 pub mod io;
 pub mod lid;
+pub mod store;
 
 pub use generator::{DatasetFamily, GeneratorConfig};
+pub use store::{PagedFormat, VectorStore};
 
-/// A dense row-major `n x d` f32 vector set.
-#[derive(Clone, Debug, Default)]
+use std::sync::Arc;
+
+/// Which rows of the store a view exposes.
+#[derive(Clone, Debug)]
+enum Selection {
+    /// Rows `start..start + len` of the store.
+    Range { start: usize, len: usize },
+    /// Rows `idx[start..start + len]` of the store (gather).
+    Gather {
+        idx: Arc<Vec<u32>>,
+        start: usize,
+        len: usize,
+    },
+}
+
+/// A dense row-major `n x d` f32 vector set — a cheap view over a
+/// [`VectorStore`] (see the module docs for the memory model).
+#[derive(Clone, Debug)]
 pub struct Dataset {
-    /// Row-major data, `n * d` values.
-    pub data: Vec<f32>,
-    /// Dimensionality of each vector.
+    store: Arc<VectorStore>,
+    sel: Selection,
+    /// Dimensionality of each vector (cached from the store).
     pub dim: usize,
 }
 
+impl Default for Dataset {
+    fn default() -> Self {
+        Dataset::from_store(Arc::new(VectorStore::from_vec(Vec::new(), 0)))
+    }
+}
+
 impl Dataset {
-    /// Create from raw row-major data.
+    /// Create from raw row-major data (takes the allocation, no copy).
     pub fn from_raw(data: Vec<f32>, dim: usize) -> Self {
         assert!(dim > 0, "dim must be positive");
-        assert_eq!(data.len() % dim, 0, "data length not a multiple of dim");
-        Dataset { data, dim }
+        Dataset::from_store(Arc::new(VectorStore::from_vec(data, dim)))
+    }
+
+    /// Wrap a whole store as a full-range view.
+    pub fn from_store(store: Arc<VectorStore>) -> Self {
+        let dim = store.dim();
+        let len = store.len();
+        Dataset {
+            store,
+            sel: Selection::Range { start: 0, len },
+            dim,
+        }
+    }
+
+    /// Open a `.knnv` file as a demand-paged dataset (rows fault in on
+    /// first touch; see [`store::VectorStore::open_paged`]).
+    pub fn open_knnv_paged(path: &std::path::Path) -> anyhow::Result<Dataset> {
+        Ok(Dataset::from_store(Arc::new(VectorStore::open_paged(
+            path,
+            PagedFormat::Knnv,
+            None,
+        )?)))
+    }
+
+    /// Open an `.fvecs` file as a demand-paged dataset.
+    pub fn open_fvecs_paged(
+        path: &std::path::Path,
+        limit: Option<usize>,
+    ) -> anyhow::Result<Dataset> {
+        Ok(Dataset::from_store(Arc::new(VectorStore::open_paged(
+            path,
+            PagedFormat::Fvecs,
+            limit,
+        )?)))
+    }
+
+    /// Open a `.bvecs` file as a demand-paged dataset (u8 decoded to f32).
+    pub fn open_bvecs_paged(
+        path: &std::path::Path,
+        limit: Option<usize>,
+    ) -> anyhow::Result<Dataset> {
+        Ok(Dataset::from_store(Arc::new(VectorStore::open_paged(
+            path,
+            PagedFormat::Bvecs,
+            limit,
+        )?)))
     }
 
     /// Number of vectors.
     #[inline]
     pub fn len(&self) -> usize {
-        if self.dim == 0 {
-            0
-        } else {
-            self.data.len() / self.dim
+        match &self.sel {
+            Selection::Range { len, .. } | Selection::Gather { len, .. } => *len,
         }
     }
 
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len() == 0
+    }
+
+    /// Store row index behind view row `i`. A hard bounds check: a
+    /// range view shares its store with neighboring partitions, so an
+    /// out-of-range access would otherwise silently read *their* rows
+    /// (the old owned layout panicked on the slice index; keep that).
+    #[inline]
+    fn abs_row(&self, i: usize) -> usize {
+        match &self.sel {
+            Selection::Range { start, len } => {
+                assert!(i < *len, "row {i} out of range (len={len})");
+                start + i
+            }
+            Selection::Gather { idx, start, len } => {
+                assert!(i < *len, "row {i} out of range (len={len})");
+                idx[start + i] as usize
+            }
+        }
     }
 
     /// Borrow vector `i`.
     #[inline]
     pub fn vector(&self, i: usize) -> &[f32] {
-        let d = self.dim;
-        &self.data[i * d..(i + 1) * d]
+        self.store.row(self.abs_row(i))
     }
 
-    /// Append one vector (must match `dim`).
-    pub fn push(&mut self, v: &[f32]) {
-        assert_eq!(v.len(), self.dim);
-        self.data.extend_from_slice(v);
+    /// The shared storage behind this view.
+    #[inline]
+    pub fn store(&self) -> &Arc<VectorStore> {
+        &self.store
     }
 
-    /// Extract the sub-dataset with the given row indices.
-    pub fn subset(&self, indices: &[usize]) -> Dataset {
-        let mut data = Vec::with_capacity(indices.len() * self.dim);
-        for &i in indices {
-            data.extend_from_slice(self.vector(i));
+    /// Whether two views share the same underlying allocation (used by
+    /// tests asserting zero-copy behaviour).
+    pub fn shares_store(&self, other: &Dataset) -> bool {
+        Arc::ptr_eq(&self.store, &other.store)
+    }
+
+    /// Zero-copy view of rows `range` (in view coordinates).
+    pub fn slice_rows(&self, range: std::ops::Range<usize>) -> Dataset {
+        assert!(range.end <= self.len(), "slice {range:?} out of range");
+        let sel = match &self.sel {
+            Selection::Range { start, .. } => Selection::Range {
+                start: start + range.start,
+                len: range.len(),
+            },
+            Selection::Gather { idx, start, .. } => Selection::Gather {
+                idx: Arc::clone(idx),
+                start: start + range.start,
+                len: range.len(),
+            },
+        };
+        Dataset {
+            store: Arc::clone(&self.store),
+            sel,
+            dim: self.dim,
         }
-        Dataset { data, dim: self.dim }
     }
 
-    /// Split into `parts` contiguous, near-equal subsets (the paper's
-    /// disjoint `C_1..C_m`). Returns the datasets and the global-id offset
-    /// of each part.
+    /// Zero-copy gather view of the given row indices (in view
+    /// coordinates; duplicates allowed).
+    pub fn subset(&self, indices: &[usize]) -> Dataset {
+        let idx: Vec<u32> = indices.iter().map(|&i| self.abs_row(i) as u32).collect();
+        Dataset {
+            store: Arc::clone(&self.store),
+            sel: Selection::Gather {
+                len: idx.len(),
+                idx: Arc::new(idx),
+                start: 0,
+            },
+            dim: self.dim,
+        }
+    }
+
+    /// Split into `parts` contiguous, near-equal subset views (the
+    /// paper's disjoint `C_1..C_m`). Returns the views and the
+    /// global-id offset of each part. Zero-copy: every part shares this
+    /// view's store.
     pub fn split_contiguous(&self, parts: usize) -> Vec<(Dataset, usize)> {
         crate::util::parallel::split_ranges(self.len(), parts)
             .into_iter()
             .map(|r| {
-                let ds = Dataset {
-                    data: self.data[r.start * self.dim..r.end * self.dim].to_vec(),
-                    dim: self.dim,
-                };
-                (ds, r.start)
+                let start = r.start;
+                (self.slice_rows(r), start)
             })
             .collect()
     }
 
-    /// Concatenate several datasets (all must share `dim`).
+    /// Concatenate several datasets (all must share `dim`) — zero-copy
+    /// whenever possible. Adjacent ranges of the *same* store become a
+    /// wider range view; range views of different stores (the Two-way
+    /// Merge's pair space, distributed node pairs, out-of-core rounds)
+    /// become a chained store that dispatches reads per block, so paged
+    /// blocks keep faulting in on demand. Only gather views fall back
+    /// to materializing a fresh owned store.
     pub fn concat(parts: &[&Dataset]) -> Dataset {
         assert!(!parts.is_empty());
         let dim = parts[0].dim;
-        let mut data = Vec::with_capacity(parts.iter().map(|p| p.data.len()).sum());
         for p in parts {
             assert_eq!(p.dim, dim, "dimension mismatch in concat");
-            data.extend_from_slice(&p.data);
         }
-        Dataset { data, dim }
+        if let Some(view) = Self::concat_adjacent(parts) {
+            return view;
+        }
+        if let Some(view) = Self::concat_chained(parts) {
+            return view;
+        }
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        let mut data = Vec::with_capacity(total * dim);
+        for p in parts {
+            for i in 0..p.len() {
+                data.extend_from_slice(p.vector(i));
+            }
+        }
+        Dataset::from_store(Arc::new(VectorStore::from_vec(data, dim)))
+    }
+
+    /// The zero-copy fast path of [`Dataset::concat`]: all parts are
+    /// consecutive range views of one store.
+    fn concat_adjacent(parts: &[&Dataset]) -> Option<Dataset> {
+        let first = parts[0];
+        let Selection::Range { start, len } = first.sel else {
+            return None;
+        };
+        let mut end = start + len;
+        for p in &parts[1..] {
+            let Selection::Range { start: s, len: l } = p.sel else {
+                return None;
+            };
+            if !Arc::ptr_eq(&p.store, &first.store) || s != end {
+                return None;
+            }
+            end = s + l;
+        }
+        Some(Dataset {
+            store: Arc::clone(&first.store),
+            sel: Selection::Range {
+                start,
+                len: end - start,
+            },
+            dim: first.dim,
+        })
+    }
+
+    /// The chained zero-copy path of [`Dataset::concat`]: every part is
+    /// a range view (of any store), so the result can be a
+    /// [`VectorStore::chained`] store referencing the blocks in place.
+    fn concat_chained(parts: &[&Dataset]) -> Option<Dataset> {
+        let mut blocks = Vec::with_capacity(parts.len());
+        for p in parts {
+            let Selection::Range { start, len } = p.sel else {
+                return None;
+            };
+            blocks.push((Arc::clone(&p.store), start, len));
+        }
+        Some(Dataset::from_store(Arc::new(VectorStore::chained(blocks))))
+    }
+
+    /// Materialize the view's rows into one owned buffer (copies).
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len() * self.dim);
+        for i in 0..self.len() {
+            out.extend_from_slice(self.vector(i));
+        }
+        out
+    }
+
+    /// Copy the view into a fresh owned flat store. Use where a
+    /// *long-lived* artifact should neither pin its input stores nor
+    /// pay chained/gather dispatch on every row access (e.g. stream
+    /// compaction outputs, which would otherwise nest one chain level
+    /// per compaction generation). Transient pair spaces inside a merge
+    /// should stay chained views instead.
+    pub fn materialize(&self) -> Dataset {
+        Dataset::from_store(Arc::new(VectorStore::from_vec(self.to_vec(), self.dim)))
     }
 
     /// Bytes of raw vector payload (used by the network/storage models).
     pub fn payload_bytes(&self) -> u64 {
-        (self.data.len() * std::mem::size_of::<f32>()) as u64
+        (self.len() * self.dim * std::mem::size_of::<f32>()) as u64
+    }
+}
+
+/// Row-wise equality (views compare equal when they expose the same
+/// vectors, regardless of backing or selection shape).
+impl PartialEq for Dataset {
+    fn eq(&self, other: &Dataset) -> bool {
+        if self.dim != other.dim || self.len() != other.len() {
+            return false;
+        }
+        (0..self.len()).all(|i| self.vector(i) == other.vector(i))
     }
 }
 
@@ -114,31 +330,104 @@ mod tests {
     }
 
     #[test]
-    fn subset_picks_rows() {
+    fn subset_picks_rows_without_copying() {
         let ds = small();
         let sub = ds.subset(&[2, 0]);
         assert_eq!(sub.len(), 2);
         assert_eq!(sub.vector(0), ds.vector(2));
         assert_eq!(sub.vector(1), ds.vector(0));
+        assert!(sub.shares_store(&ds), "subset must be a view");
+        // Subset of a subset composes.
+        let sub2 = sub.subset(&[1]);
+        assert_eq!(sub2.vector(0), ds.vector(0));
+        assert!(sub2.shares_store(&ds));
     }
 
     #[test]
-    fn split_contiguous_roundtrip() {
+    fn split_contiguous_roundtrip_zero_copy() {
         let ds = small();
         let parts = ds.split_contiguous(3);
         assert_eq!(parts.len(), 3);
         assert_eq!(parts[0].1, 0);
         let total: usize = parts.iter().map(|(p, _)| p.len()).sum();
         assert_eq!(total, ds.len());
+        for (p, _) in &parts {
+            assert!(p.shares_store(&ds), "split parts must be views");
+        }
         let refs: Vec<&Dataset> = parts.iter().map(|(p, _)| p).collect();
         let joined = Dataset::concat(&refs);
-        assert_eq!(joined.data, ds.data);
+        assert_eq!(joined, ds);
+        assert!(
+            joined.shares_store(&ds),
+            "concat of adjacent views must stay a view"
+        );
+    }
+
+    #[test]
+    fn slice_rows_of_split_stays_aligned() {
+        let ds = small();
+        let tail = ds.slice_rows(1..4);
+        assert_eq!(tail.len(), 3);
+        assert_eq!(tail.vector(0), ds.vector(1));
+        let inner = tail.slice_rows(1..3);
+        assert_eq!(inner.vector(0), ds.vector(2));
+    }
+
+    #[test]
+    fn concat_of_foreign_stores_chains_without_copy() {
+        let a = Dataset::from_raw(vec![0.0, 1.0], 2);
+        let b = Dataset::from_raw(vec![2.0, 3.0], 2);
+        let before = (a.store().resident_bytes(), b.store().resident_bytes());
+        let joined = Dataset::concat(&[&a, &b]);
+        assert_eq!(joined.len(), 2);
+        assert_eq!(joined.vector(0), &[0.0, 1.0]);
+        assert_eq!(joined.vector(1), &[2.0, 3.0]);
+        // Chained, not copied: the parts' allocations are unchanged and
+        // the chain reports exactly their residency.
+        assert_eq!(
+            joined.store().resident_bytes(),
+            before.0 + before.1,
+            "chain must reference, not duplicate"
+        );
+    }
+
+    #[test]
+    fn concat_out_of_order_views_chains_correctly() {
+        let ds = small();
+        let parts = ds.split_contiguous(2);
+        // Reversed order breaks adjacency -> chained view, same rows.
+        let joined = Dataset::concat(&[&parts[1].0, &parts[0].0]);
+        assert_eq!(joined.len(), 4);
+        assert_eq!(joined.vector(0), ds.vector(2));
+        assert_eq!(joined.vector(2), ds.vector(0));
+        // Both blocks share ds's store: residency counted once.
+        assert_eq!(
+            joined.store().resident_bytes(),
+            ds.store().resident_bytes()
+        );
+    }
+
+    #[test]
+    fn concat_of_gather_views_materializes() {
+        let ds = small();
+        let sub = ds.subset(&[3, 0]);
+        let joined = Dataset::concat(&[&sub, &sub]);
+        assert_eq!(joined.len(), 4);
+        assert_eq!(joined.vector(0), ds.vector(3));
+        assert_eq!(joined.vector(3), ds.vector(0));
+        assert!(!joined.shares_store(&ds));
+    }
+
+    #[test]
+    fn to_vec_matches_rows() {
+        let ds = small();
+        assert_eq!(ds.to_vec(), (0..12).map(|v| v as f32).collect::<Vec<_>>());
+        assert_eq!(ds.slice_rows(2..4).to_vec(), ds.to_vec()[6..].to_vec());
     }
 
     #[test]
     #[should_panic]
-    fn push_wrong_dim_panics() {
-        let mut ds = small();
-        ds.push(&[1.0, 2.0]);
+    fn from_raw_rejects_ragged_data() {
+        let _ = Dataset::from_raw(vec![1.0, 2.0], 3);
     }
 }

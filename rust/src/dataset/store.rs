@@ -1,0 +1,557 @@
+//! Shared vector storage — the allocation layer under [`super::Dataset`].
+//!
+//! A [`VectorStore`] owns the raw `n x d` payload exactly once; datasets
+//! are cheap *views* (`Arc<VectorStore>` + a row selection) built on top
+//! of it, so `split_contiguous` / `subset` / stream segment seals never
+//! duplicate vectors. Three backings share the same API:
+//!
+//! - **in-memory** — a single `Vec<f32>` allocation (the batch pipeline
+//!   and synthetic generators);
+//! - **paged** — a `fvecs`/`bvecs`/`.knnv` file whose rows are faulted
+//!   in chunk by chunk on first touch. This is the mmap role of the
+//!   paper's out-of-core mode (Sec. IV): the vendored dependency set has
+//!   no `libc`/`memmap`, so paging is implemented with positioned reads
+//!   (`read_at`) into per-chunk `OnceLock` slots — untouched rows are
+//!   never resident, touched chunks are read exactly once and then
+//!   shared lock-free, mirroring OS page-cache behaviour;
+//! - **chained** — row-ranges of other stores exposed as one store
+//!   ([`VectorStore::chained`]), the zero-copy pair/concat space of the
+//!   merge pipelines.
+//!
+//! Residency is observable through [`VectorStore::resident_bytes`] (the
+//! storage bench and the out-of-core docs rely on it).
+
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// Target in-memory size of one paged chunk (bytes of decoded f32s).
+const CHUNK_BYTES: usize = 1 << 20;
+
+/// On-disk layout of a paged vector file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PagedFormat {
+    /// TexMex `.fvecs`: per record `<d: i32> <d x f32>`.
+    Fvecs,
+    /// TexMex `.bvecs`: per record `<d: i32> <d x u8>` (decoded to f32).
+    Bvecs,
+    /// Internal `.knnv`: 16-byte header, then flat row-major f32 rows.
+    Knnv,
+}
+
+/// Immutable, shareable vector storage: one allocation (or one file)
+/// behind any number of dataset views.
+#[derive(Debug)]
+pub struct VectorStore {
+    dim: usize,
+    backing: Backing,
+}
+
+#[derive(Debug)]
+enum Backing {
+    Mem(Vec<f32>),
+    Paged(PagedVectors),
+    /// Zero-copy concatenation of row-ranges of other stores (the
+    /// Two-way Merge's pair space without materializing the pair).
+    Chain(ChainedStores),
+}
+
+/// Ordered row-ranges of other stores exposed as one store.
+#[derive(Debug)]
+struct ChainedStores {
+    /// `(store, first store-row of the block)` per block.
+    parts: Vec<(Arc<VectorStore>, usize)>,
+    /// Cumulative end row of each block in chain coordinates.
+    bounds: Vec<usize>,
+}
+
+impl ChainedStores {
+    #[inline]
+    fn row(&self, r: usize) -> &[f32] {
+        // First block whose end bound exceeds r (one or two compares
+        // for the pairwise merges that dominate).
+        let p = self.bounds.partition_point(|&b| b <= r);
+        let block_start = if p == 0 { 0 } else { self.bounds[p - 1] };
+        let (store, first) = &self.parts[p];
+        store.row(first + (r - block_start))
+    }
+}
+
+impl VectorStore {
+    /// Wrap an owned buffer (takes the allocation as-is, no copy).
+    pub fn from_vec(data: Vec<f32>, dim: usize) -> VectorStore {
+        if dim == 0 {
+            assert!(data.is_empty(), "dim 0 requires empty data");
+        } else {
+            assert_eq!(data.len() % dim, 0, "data length not a multiple of dim");
+        }
+        VectorStore {
+            dim,
+            backing: Backing::Mem(data),
+        }
+    }
+
+    /// Open a vector file for demand paging; `limit` caps the row count.
+    /// The header/geometry is validated eagerly; payload chunks are read
+    /// lazily on first row access.
+    pub fn open_paged(
+        path: &Path,
+        format: PagedFormat,
+        limit: Option<usize>,
+    ) -> Result<VectorStore> {
+        let paged = PagedVectors::open(path, format, limit)?;
+        Ok(VectorStore {
+            dim: paged.dim,
+            backing: Backing::Paged(paged),
+        })
+    }
+
+    /// Chain row-ranges `(store, start_row, len)` of existing stores
+    /// into one logical store without copying (all dims must agree).
+    /// Reads dispatch to the underlying blocks, so paged blocks keep
+    /// faulting in on demand.
+    pub fn chained(blocks: Vec<(Arc<VectorStore>, usize, usize)>) -> VectorStore {
+        assert!(!blocks.is_empty(), "cannot chain zero blocks");
+        let dim = blocks[0].0.dim();
+        let mut parts = Vec::with_capacity(blocks.len());
+        let mut bounds = Vec::with_capacity(blocks.len());
+        let mut total = 0usize;
+        for (store, start, len) in blocks {
+            assert_eq!(store.dim(), dim, "dimension mismatch in chain");
+            assert!(start + len <= store.len(), "chained block out of range");
+            total += len;
+            parts.push((store, start));
+            bounds.push(total);
+        }
+        VectorStore {
+            dim,
+            backing: Backing::Chain(ChainedStores { parts, bounds }),
+        }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn len(&self) -> usize {
+        match &self.backing {
+            Backing::Mem(data) => {
+                if self.dim == 0 {
+                    0
+                } else {
+                    data.len() / self.dim
+                }
+            }
+            Backing::Paged(p) => p.rows,
+            Backing::Chain(c) => c.bounds.last().copied().unwrap_or(0),
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Row dimensionality.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Borrow row `r`. Paged backing faults the containing chunk in on
+    /// first touch; a read error at fault time panics (the moral
+    /// equivalent of an mmap `SIGBUS` — geometry was validated at open).
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        let d = self.dim;
+        match &self.backing {
+            Backing::Mem(data) => &data[r * d..(r + 1) * d],
+            Backing::Paged(p) => p.row(r),
+            Backing::Chain(c) => c.row(r),
+        }
+    }
+
+    /// Whether reads may fault pages in from a file (directly, or via
+    /// any chained block).
+    pub fn is_paged(&self) -> bool {
+        match &self.backing {
+            Backing::Mem(_) => false,
+            Backing::Paged(_) => true,
+            Backing::Chain(c) => c.parts.iter().any(|(s, _)| s.is_paged()),
+        }
+    }
+
+    /// Bytes of vector payload currently resident in memory. For the
+    /// in-memory backing this is the whole allocation; for the paged
+    /// backing it grows chunk by chunk as rows are touched; a chain
+    /// sums its distinct underlying stores (no double counting when
+    /// two blocks share a store).
+    pub fn resident_bytes(&self) -> u64 {
+        match &self.backing {
+            Backing::Mem(data) => (data.len() * std::mem::size_of::<f32>()) as u64,
+            Backing::Paged(p) => p.resident.load(Ordering::Relaxed),
+            Backing::Chain(c) => {
+                let mut seen: Vec<*const VectorStore> = Vec::new();
+                let mut total = 0u64;
+                for (s, _) in &c.parts {
+                    let ptr = Arc::as_ptr(s);
+                    if !seen.contains(&ptr) {
+                        seen.push(ptr);
+                        total += s.resident_bytes();
+                    }
+                }
+                total
+            }
+        }
+    }
+}
+
+/// A demand-paged vector file: rows decode into fixed-size chunks, each
+/// loaded at most once behind a `OnceLock` (concurrent readers of an
+/// unloaded chunk race benignly; one result wins, extras are dropped).
+struct PagedVectors {
+    file: File,
+    path: PathBuf,
+    format: PagedFormat,
+    dim: usize,
+    rows: usize,
+    /// Byte offset of the first record.
+    base: u64,
+    /// On-disk bytes per record (including any per-row header).
+    record_bytes: u64,
+    /// Rows per chunk (last chunk may be short).
+    chunk_rows: usize,
+    chunks: Vec<OnceLock<Box<[f32]>>>,
+    resident: AtomicU64,
+    #[cfg(not(unix))]
+    io_lock: std::sync::Mutex<()>,
+}
+
+impl std::fmt::Debug for PagedVectors {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagedVectors")
+            .field("path", &self.path)
+            .field("format", &self.format)
+            .field("dim", &self.dim)
+            .field("rows", &self.rows)
+            .field("chunk_rows", &self.chunk_rows)
+            .field("resident_bytes", &self.resident.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl PagedVectors {
+    fn open(path: &Path, format: PagedFormat, limit: Option<usize>) -> Result<PagedVectors> {
+        let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let file_len = file.metadata()?.len();
+
+        let (dim, base, record_bytes, rows) = match format {
+            PagedFormat::Knnv => {
+                let mut head = [0u8; 16];
+                read_exact_at_file(&file, &mut head, 0)
+                    .with_context(|| format!("read header of {path:?}"))?;
+                let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+                if magic != super::io::KNNV_MAGIC {
+                    bail!("bad magic in {path:?}");
+                }
+                let dim = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+                let n = u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize;
+                if dim == 0 {
+                    bail!("zero dimension in {path:?}");
+                }
+                let record = (dim * 4) as u64;
+                if file_len < 16 + n as u64 * record {
+                    bail!("truncated knnv file {path:?}");
+                }
+                (dim, 16u64, record, n)
+            }
+            PagedFormat::Fvecs | PagedFormat::Bvecs => {
+                let mut head = [0u8; 4];
+                read_exact_at_file(&file, &mut head, 0)
+                    .with_context(|| format!("read header of {path:?}"))?;
+                let d = i32::from_le_bytes(head);
+                if d <= 0 {
+                    bail!("invalid dimension {d} in {path:?}");
+                }
+                let dim = d as usize;
+                let elem = if format == PagedFormat::Fvecs { 4 } else { 1 };
+                let record = (4 + dim * elem) as u64;
+                let complete = (file_len / record) as usize;
+                // A truncated trailing record is tolerated when `limit`
+                // only asks for the complete prefix — matching the
+                // eager readers, which stop after `limit` records.
+                let within_limit = limit.is_some_and(|l| l <= complete);
+                if file_len % record != 0 && !within_limit {
+                    bail!(
+                        "file size {file_len} of {path:?} is not a multiple of \
+                         the record size {record}"
+                    );
+                }
+                // Cheap raggedness screen: the last complete record's
+                // header must agree with the first. Interior raggedness
+                // (which the eager reader rejects at read time) is
+                // caught at fault time by load_chunk's per-record check
+                // — the paged analog of an mmap SIGBUS.
+                if complete > 1 {
+                    let mut tail = [0u8; 4];
+                    read_exact_at_file(&file, &mut tail, (complete as u64 - 1) * record)
+                        .with_context(|| format!("read tail record of {path:?}"))?;
+                    let td = i32::from_le_bytes(tail);
+                    if td as usize != dim {
+                        bail!("inconsistent dimension {td} != {dim} in {path:?}");
+                    }
+                }
+                (dim, 0u64, record, complete)
+            }
+        };
+        // rows == 0 is legal (an empty spill part, or limit 0): it
+        // yields an empty dataset, as the eager readers do.
+        let rows = match limit {
+            Some(l) => rows.min(l),
+            None => rows,
+        };
+        let chunk_rows = (CHUNK_BYTES / (dim * 4)).max(1);
+        let chunk_count = rows.div_ceil(chunk_rows);
+        Ok(PagedVectors {
+            file,
+            path: path.to_path_buf(),
+            format,
+            dim,
+            rows,
+            base,
+            record_bytes,
+            chunk_rows,
+            chunks: (0..chunk_count).map(|_| OnceLock::new()).collect(),
+            resident: AtomicU64::new(0),
+            #[cfg(not(unix))]
+            io_lock: std::sync::Mutex::new(()),
+        })
+    }
+
+    #[inline]
+    fn row(&self, r: usize) -> &[f32] {
+        debug_assert!(r < self.rows, "row {r} out of range (rows={})", self.rows);
+        let c = r / self.chunk_rows;
+        let chunk = self.chunks[c].get_or_init(|| self.load_chunk(c));
+        let local = r - c * self.chunk_rows;
+        &chunk[local * self.dim..(local + 1) * self.dim]
+    }
+
+    /// Decode chunk `c` from disk. Panics on IO/format errors: geometry
+    /// was validated at open, so a failure here means the file changed
+    /// underneath us (mmap would deliver a SIGBUS for the same fault).
+    fn load_chunk(&self, c: usize) -> Box<[f32]> {
+        let r0 = c * self.chunk_rows;
+        let r1 = (r0 + self.chunk_rows).min(self.rows);
+        let nrows = r1 - r0;
+        let byte_start = self.base + r0 as u64 * self.record_bytes;
+        let byte_len = nrows as u64 * self.record_bytes;
+        let mut raw = vec![0u8; byte_len as usize];
+        self.read_exact_at(&mut raw, byte_start).unwrap_or_else(|e| {
+            panic!("paged read of {:?} chunk {c} failed: {e}", self.path);
+        });
+
+        let d = self.dim;
+        let mut out = vec![0.0f32; nrows * d];
+        match self.format {
+            PagedFormat::Knnv => {
+                for (o, b) in out.iter_mut().zip(raw.chunks_exact(4)) {
+                    *o = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                }
+            }
+            PagedFormat::Fvecs => {
+                for (row, rec) in raw.chunks_exact(self.record_bytes as usize).enumerate() {
+                    let rd = i32::from_le_bytes(rec[0..4].try_into().unwrap());
+                    assert_eq!(
+                        rd as usize, d,
+                        "inconsistent dimension at row {} of {:?}",
+                        r0 + row,
+                        self.path
+                    );
+                    for (j, b) in rec[4..].chunks_exact(4).enumerate() {
+                        out[row * d + j] = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                    }
+                }
+            }
+            PagedFormat::Bvecs => {
+                for (row, rec) in raw.chunks_exact(self.record_bytes as usize).enumerate() {
+                    let rd = i32::from_le_bytes(rec[0..4].try_into().unwrap());
+                    assert_eq!(
+                        rd as usize, d,
+                        "inconsistent dimension at row {} of {:?}",
+                        r0 + row,
+                        self.path
+                    );
+                    for (j, &b) in rec[4..].iter().enumerate() {
+                        out[row * d + j] = b as f32;
+                    }
+                }
+            }
+        }
+        let decoded_bytes = (out.len() * std::mem::size_of::<f32>()) as u64;
+        self.resident.fetch_add(decoded_bytes, Ordering::Relaxed);
+        out.into_boxed_slice()
+    }
+
+    #[cfg(unix)]
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+        read_exact_at_file(&self.file, buf, offset)
+    }
+
+    #[cfg(not(unix))]
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+        // Seek+read must not interleave across threads on one handle.
+        let _guard = self.io_lock.lock().unwrap();
+        read_exact_at_file(&self.file, buf, offset)
+    }
+}
+
+#[cfg(unix)]
+fn read_exact_at_file(file: &File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, offset)
+}
+
+#[cfg(not(unix))]
+fn read_exact_at_file(file: &File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = file;
+    f.seek(SeekFrom::Start(offset))?;
+    f.read_exact(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{io, Dataset, DatasetFamily};
+
+    fn tmpdir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("knnmerge-store-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn mem_store_rows_match_source() {
+        let data: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let st = VectorStore::from_vec(data.clone(), 3);
+        assert_eq!(st.len(), 4);
+        assert_eq!(st.dim(), 3);
+        assert!(!st.is_paged());
+        assert_eq!(st.row(2), &data[6..9]);
+        assert_eq!(st.resident_bytes(), 48);
+    }
+
+    #[test]
+    fn paged_knnv_pages_in_on_demand() {
+        // 960-dim rows: ~273 rows per 1 MiB chunk, so 500 rows span
+        // two chunks and partial residency is observable.
+        let ds = DatasetFamily::Gist.generate(500, 11);
+        let path = tmpdir().join("paged.knnv");
+        io::write_knnv(&path, &ds).unwrap();
+        let st = VectorStore::open_paged(&path, PagedFormat::Knnv, None).unwrap();
+        assert_eq!(st.len(), 500);
+        assert_eq!(st.dim(), ds.dim);
+        assert!(st.is_paged());
+        assert_eq!(st.resident_bytes(), 0, "nothing resident before first touch");
+        assert_eq!(st.row(3), ds.vector(3));
+        let after_one = st.resident_bytes();
+        assert!(after_one > 0, "first touch pages a chunk in");
+        assert!(
+            after_one < 500 * ds.dim as u64 * 4,
+            "one touch must not load the whole file"
+        );
+        // Every row matches the source.
+        for i in 0..500 {
+            assert_eq!(st.row(i), ds.vector(i), "row {i}");
+        }
+        assert_eq!(st.resident_bytes(), 500 * ds.dim as u64 * 4);
+    }
+
+    #[test]
+    fn paged_fvecs_respects_limit_and_layout() {
+        let ds = DatasetFamily::Sift.generate(40, 12);
+        let path = tmpdir().join("paged.fvecs");
+        io::write_fvecs(&path, &ds).unwrap();
+        let st = VectorStore::open_paged(&path, PagedFormat::Fvecs, Some(10)).unwrap();
+        assert_eq!(st.len(), 10);
+        for i in 0..10 {
+            assert_eq!(st.row(i), ds.vector(i));
+        }
+    }
+
+    #[test]
+    fn paged_open_rejects_garbage() {
+        let path = tmpdir().join("garbage.knnv");
+        std::fs::write(&path, b"not a vector file").unwrap();
+        assert!(VectorStore::open_paged(&path, PagedFormat::Knnv, None).is_err());
+        let empty = tmpdir().join("missing.fvecs");
+        assert!(VectorStore::open_paged(&empty, PagedFormat::Fvecs, None).is_err());
+    }
+
+    #[test]
+    fn chained_store_dispatches_per_block() {
+        let a = VectorStore::from_vec(vec![0.0, 1.0, 2.0, 3.0], 2); // rows 0,1
+        let b = VectorStore::from_vec(vec![4.0, 5.0, 6.0, 7.0], 2); // rows 0,1
+        let chain = VectorStore::chained(vec![
+            (Arc::new(a), 1, 1), // row (2,3)
+            (Arc::new(b), 0, 2), // rows (4,5),(6,7)
+        ]);
+        assert_eq!(chain.len(), 3);
+        assert_eq!(chain.dim(), 2);
+        assert_eq!(chain.row(0), &[2.0, 3.0]);
+        assert_eq!(chain.row(1), &[4.0, 5.0]);
+        assert_eq!(chain.row(2), &[6.0, 7.0]);
+        assert!(!chain.is_paged());
+    }
+
+    #[test]
+    fn chained_paged_blocks_stay_lazy() {
+        let ds = DatasetFamily::Gist.generate(600, 14);
+        let path = tmpdir().join("chain.knnv");
+        io::write_knnv(&path, &ds).unwrap();
+        let p1 = Arc::new(VectorStore::open_paged(&path, PagedFormat::Knnv, None).unwrap());
+        let p2 = Arc::new(VectorStore::open_paged(&path, PagedFormat::Knnv, None).unwrap());
+        let chain = VectorStore::chained(vec![(Arc::clone(&p1), 0, 300), (p2, 300, 300)]);
+        assert!(chain.is_paged());
+        assert_eq!(chain.resident_bytes(), 0, "nothing faulted yet");
+        assert_eq!(chain.row(0), ds.vector(0));
+        assert_eq!(chain.row(599), ds.vector(599));
+        let resident = chain.resident_bytes();
+        assert!(resident > 0);
+        assert!(
+            resident < 600 * ds.dim as u64 * 4,
+            "two touches must not fault the whole chain"
+        );
+    }
+
+    #[test]
+    fn paged_fvecs_tolerates_truncated_tail_under_limit() {
+        let ds = DatasetFamily::Sift.generate(10, 15);
+        let path = tmpdir().join("trunc.fvecs");
+        io::write_fvecs(&path, &ds).unwrap();
+        // Chop the final record in half.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 40]).unwrap();
+        // Full open rejects the malformed tail...
+        assert!(VectorStore::open_paged(&path, PagedFormat::Fvecs, None).is_err());
+        // ...but a limit within the complete prefix succeeds, matching
+        // the eager reader's behaviour.
+        let st = VectorStore::open_paged(&path, PagedFormat::Fvecs, Some(9)).unwrap();
+        assert_eq!(st.len(), 9);
+        for i in 0..9 {
+            assert_eq!(st.row(i), ds.vector(i));
+        }
+    }
+
+    #[test]
+    fn dataset_over_paged_store_behaves_like_memory() {
+        let ds = DatasetFamily::Deep.generate(200, 13);
+        let path = tmpdir().join("view.knnv");
+        io::write_knnv(&path, &ds).unwrap();
+        let paged = Dataset::open_knnv_paged(&path).unwrap();
+        assert_eq!(paged, ds);
+        let half = paged.slice_rows(50..150);
+        assert_eq!(half.vector(0), ds.vector(50));
+    }
+}

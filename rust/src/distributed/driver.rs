@@ -54,6 +54,9 @@ fn make_tasks(ds: &Dataset, cfg: &RunConfig, m: usize) -> Vec<NodeTask> {
     let ranges = split_ranges(ds.len(), m);
     let offsets: Arc<Vec<usize>> = Arc::new(ranges.iter().map(|r| r.start).collect());
     let sizes: Arc<Vec<usize>> = Arc::new(ranges.iter().map(|r| r.len()).collect());
+    // A Dataset is a view — this clone shares the vector store, and the
+    // per-node subsets are row-range views into the same allocation, so
+    // an m-node simulation holds ONE copy of the vectors.
     let dataset = Arc::new(ds.clone());
     (0..m)
         .map(|id| NodeTask {
@@ -72,12 +75,12 @@ fn make_tasks(ds: &Dataset, cfg: &RunConfig, m: usize) -> Vec<NodeTask> {
 }
 
 fn assemble(parts: Vec<KnnGraph>, default_k: usize) -> KnnGraph {
-    let k = parts.iter().map(|g| g.k).max().unwrap_or(default_k);
-    let mut lists = Vec::new();
-    for g in parts {
-        lists.extend(g.lists);
+    if parts.is_empty() {
+        return KnnGraph::empty(0, default_k);
     }
-    KnnGraph { lists, k }
+    // Each node returns its rows at a global span; assembly checks the
+    // spans are consecutive instead of trusting the ordering.
+    KnnGraph::assemble(parts)
 }
 
 /// Run the distributed construction (Alg. 3) over `cfg.parts` simulated

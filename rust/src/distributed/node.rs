@@ -6,6 +6,12 @@
 //! Merge locally, split the cross graph into `G_i^j` / `G_j^i`, keep one
 //! and ship the other back.
 //!
+//! Subsets are zero-copy views into the shared dataset (`slice_rows`),
+//! and all id translation goes through [`IdSpan`]/[`IdRemap`]: the
+//! accumulated `G_i` carries its global span, received cross graphs are
+//! span-checked by `merge_sorted`, and the pair-space → global
+//! translation of the cross graph is one checked [`IdRemap::pair`].
+//!
 //! The worker is factored into explicit **phases** so the driver can run
 //! it two ways:
 //!
@@ -22,7 +28,7 @@ use super::scheduler::{round_count, RoundPeers};
 use crate::construction::{NnDescent, NnDescentParams};
 use crate::dataset::Dataset;
 use crate::distance::Metric;
-use crate::graph::{serial, KnnGraph, Neighbor, NeighborList};
+use crate::graph::{serial, IdRemap, IdSpan, KnnGraph};
 use crate::merge::{MergeParams, SupportLists, TwoWayMerge};
 use crate::metrics::Phase;
 use std::sync::Arc;
@@ -47,14 +53,15 @@ pub struct NodeTask {
 }
 
 impl NodeTask {
+    /// Zero-copy view of subset `s` (shares the dataset's store).
     fn subset(&self, s: usize) -> Dataset {
-        let d = self.dataset.dim;
         let start = self.offsets[s];
-        let len = self.sizes[s];
-        Dataset {
-            data: self.dataset.data[start * d..(start + len) * d].to_vec(),
-            dim: d,
-        }
+        self.dataset.slice_rows(start..start + self.sizes[s])
+    }
+
+    /// Global span of subset `s`.
+    fn span(&self, s: usize) -> IdSpan {
+        IdSpan::new(self.offsets[s] as u32, self.sizes[s] as u32)
     }
 }
 
@@ -65,7 +72,7 @@ pub struct NodeWorker {
     ds_i: Dataset,
     s_i: SupportLists,
     s_i_bytes: Vec<u8>,
-    /// Accumulated graph in **global** ids.
+    /// Accumulated graph, expressed at this node's global span.
     g_i: KnnGraph,
 }
 
@@ -96,7 +103,7 @@ impl NodeWorker {
             SupportLists::build(&g_local, self.task.merge.lambda)
         });
         self.s_i_bytes = self.s_i.to_bytes();
-        self.g_i = to_global(&g_local, self.task.offsets[self.task.id] as u32);
+        self.g_i = g_local.rebase(self.task.span(self.task.id).offset);
     }
 
     /// Line 8: send `S_i` to this round's target.
@@ -118,22 +125,14 @@ impl NodeWorker {
             .expect("corrupt support payload");
         let ds_j = self.task.subset(j);
         let (g_ij, g_ji) = ledger.time(Phase::Merge, || {
-            let mut support = self.s_i.clone();
-            let mut remote = s_j;
-            remote.offset_ids(self.ds_i.len() as u32);
-            support.lists.append(&mut remote.lists);
+            let support = SupportLists::concat_pair(self.s_i.clone(), s_j, self.ds_i.len());
             let cross = TwoWayMerge::new(self.task.merge).cross_graph(
                 &self.ds_i,
                 &ds_j,
                 &support,
                 self.task.metric,
             );
-            split_cross(
-                &cross,
-                self.ds_i.len(),
-                self.task.offsets[i] as u32,
-                self.task.offsets[j] as u32,
-            )
+            split_cross(&cross, self.task.span(i), self.task.span(j))
         });
         self.g_i = ledger.time(Phase::Merge, || self.g_i.merge_sorted(&g_ij));
         self.net.send(j, TAG_CROSS, serial::graph_to_bytes(&g_ji));
@@ -146,10 +145,12 @@ impl NodeWorker {
         let ledger = self.net.ledger.clone();
         let g_it = serial::graph_from_bytes(&self.net.recv_from(t, TAG_CROSS))
             .expect("corrupt cross payload");
+        // The wire format carries the span, so merge_sorted's span check
+        // rejects a payload expressed in the wrong space outright.
         self.g_i = ledger.time(Phase::Merge, || self.g_i.merge_sorted(&g_it));
     }
 
-    /// Finish: the node's rows of the full graph (global ids).
+    /// Finish: the node's rows of the full graph (global span).
     pub fn into_graph(self) -> KnnGraph {
         self.g_i
     }
@@ -167,67 +168,20 @@ pub fn run_node(task: NodeTask, net: NodeNet) -> KnnGraph {
     worker.into_graph()
 }
 
-/// Split the pairwise cross graph (concat space: `C_i` rows first) into
-/// `G_i^j` (rows of `C_i`, neighbor ids translated to global) and
-/// `G_j^i` (rows of `C_j`, ids translated to global).
+/// Split the pairwise cross graph (pair space: `C_i` rows first) into
+/// `G_i^j` (rows of `C_i`) and `G_j^i` (rows of `C_j`), both translated
+/// to their global spans through one checked pair remap.
 pub(crate) fn split_cross(
     cross: &KnnGraph,
-    n_i: usize,
-    off_i: u32,
-    off_j: u32,
+    span_i: IdSpan,
+    span_j: IdSpan,
 ) -> (KnnGraph, KnnGraph) {
-    let translate = |rows: std::ops::Range<usize>, other_off: u32, split_at: u32| {
-        let lists: Vec<NeighborList> = rows
-            .map(|r| {
-                let mut out = NeighborList::new(cross.k);
-                for nb in cross.lists[r].iter() {
-                    // Cross-graph invariant: rows of C_i only hold ids
-                    // >= n_i (C_j side) and vice versa.
-                    let global = if split_at > 0 {
-                        debug_assert!(nb.id >= split_at);
-                        nb.id - split_at + other_off
-                    } else {
-                        nb.id + other_off
-                    };
-                    out.push_unchecked(Neighbor {
-                        id: global,
-                        dist: nb.dist,
-                        new: nb.new,
-                    });
-                }
-                out
-            })
-            .collect();
-        KnnGraph { lists, k: cross.k }
-    };
-    // Rows of C_i: neighbor ids >= n_i, translate to off_j + (id - n_i).
-    let g_ij = translate(0..n_i, off_j, n_i as u32);
-    // Rows of C_j: neighbor ids < n_i, translate to off_i + id.
-    let g_ji = translate(n_i..cross.len(), off_i, 0);
+    let (n_i, n_j) = (span_i.len as usize, span_j.len as usize);
+    assert_eq!(cross.len(), n_i + n_j, "cross graph does not cover the pair");
+    let to_global = IdRemap::pair(n_i, n_j, span_i.offset, span_j.offset);
+    let g_ij = cross.slice_rows(0..n_i).remapped(&to_global, span_i);
+    let g_ji = cross.slice_rows(n_i..n_i + n_j).remapped(&to_global, span_j);
     (g_ij, g_ji)
-}
-
-/// Translate a subset-local graph into global ids (shift by `offset`).
-fn to_global(g: &KnnGraph, offset: u32) -> KnnGraph {
-    if offset == 0 {
-        return g.clone();
-    }
-    let lists = g
-        .lists
-        .iter()
-        .map(|l| {
-            let mut out = NeighborList::new(g.k);
-            for nb in l.iter() {
-                out.push_unchecked(Neighbor {
-                    id: nb.id + offset,
-                    dist: nb.dist,
-                    new: nb.new,
-                });
-            }
-            out
-        })
-        .collect();
-    KnnGraph { lists, k: g.k }
 }
 
 #[cfg(test)]
@@ -236,13 +190,15 @@ mod tests {
 
     #[test]
     fn split_cross_translates_ids() {
-        // concat space: C_i = {0,1} (global 10,11), C_j = {2,3} (global 20,21)
+        // pair space: C_i = {0,1} (global 10,11), C_j = {2,3} (global 20,21)
         let mut cross = KnnGraph::empty(4, 2);
         cross.lists[0].insert(2, 0.5, true); // row of C_i -> C_j local 0
         cross.lists[1].insert(3, 0.3, true);
         cross.lists[2].insert(0, 0.5, true); // row of C_j -> C_i local 0
         cross.lists[3].insert(1, 0.3, true);
-        let (g_ij, g_ji) = split_cross(&cross, 2, 10, 20);
+        let (g_ij, g_ji) = split_cross(&cross, IdSpan::new(10, 2), IdSpan::new(20, 2));
+        assert_eq!(g_ij.span(), IdSpan::new(10, 2));
+        assert_eq!(g_ji.span(), IdSpan::new(20, 2));
         assert_eq!(g_ij.ids(0), vec![20]);
         assert_eq!(g_ij.ids(1), vec![21]);
         assert_eq!(g_ji.ids(0), vec![10]);
@@ -250,13 +206,12 @@ mod tests {
     }
 
     #[test]
-    fn to_global_shifts_ids() {
-        let mut g = KnnGraph::empty(2, 2);
-        g.lists[0].insert(1, 0.5, true);
-        g.lists[1].insert(0, 0.5, false);
-        let shifted = to_global(&g, 100);
-        assert_eq!(shifted.ids(0), vec![101]);
-        assert_eq!(shifted.ids(1), vec![100]);
-        assert_eq!(to_global(&g, 0), g);
+    #[should_panic(expected = "outside the remap's source space")]
+    fn split_cross_rejects_out_of_pair_ids() {
+        let mut cross = KnnGraph::empty(2, 2);
+        cross.lists[0].insert(2, 0.5, true);
+        // Id 2 lies outside the 1+1 pair space -> the checked remap
+        // panics instead of fabricating a wrong global id.
+        let _ = split_cross(&cross, IdSpan::new(10, 1), IdSpan::new(20, 1));
     }
 }

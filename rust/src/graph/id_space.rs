@@ -1,0 +1,206 @@
+//! Typed id spaces: [`IdSpan`] and [`IdRemap`].
+//!
+//! Every graph in the crate is expressed in exactly one id coordinate
+//! system: subset-local (rows and ids count from 0), pair/concatenated
+//! (the Two-way Merge's `C_1` rows first), or global. Before this layer
+//! the translation between those systems lived in four independent
+//! reimplementations (`shift_ids`/`ensure_global` in the out-of-core
+//! coordinator — including a "does this look local?" guessing hack —
+//! `offset_ids` in `merge`, the pair-space juggling in
+//! `distributed::node`, and the segment→global table in `stream`).
+//! `IdSpan` makes the coordinate system part of the graph's type-level
+//! state, and `IdRemap` is the single, *checked* translation primitive:
+//! an id outside the remap's declared source space panics instead of
+//! silently shifting into a wrong neighbor.
+
+use std::sync::Arc;
+
+/// A contiguous id range `offset..offset + len` — the slice of the
+/// global id space a graph's rows occupy. Row `r` of a graph with span
+/// `s` is element `s.offset + r`; `offset == 0` is the subset-local (or
+/// whole-dataset) coordinate system.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IdSpan {
+    pub offset: u32,
+    pub len: u32,
+}
+
+impl IdSpan {
+    pub fn new(offset: u32, len: u32) -> IdSpan {
+        IdSpan { offset, len }
+    }
+
+    /// The local span of `len` rows (offset 0).
+    pub fn local(len: usize) -> IdSpan {
+        IdSpan {
+            offset: 0,
+            len: len as u32,
+        }
+    }
+
+    /// One past the last id of the span.
+    #[inline]
+    pub fn end(&self) -> u32 {
+        self.offset + self.len
+    }
+
+    #[inline]
+    pub fn contains(&self, id: u32) -> bool {
+        id >= self.offset && id < self.end()
+    }
+
+    /// Whether this is a local (offset-0) span.
+    #[inline]
+    pub fn is_local(&self) -> bool {
+        self.offset == 0
+    }
+}
+
+/// A checked translation between id spaces. [`IdRemap::map`] panics on
+/// any id outside the declared source space — the class of silent
+/// id-shift bugs the old ad-hoc offset arithmetic allowed becomes an
+/// immediate assertion failure.
+#[derive(Clone, Debug)]
+pub enum IdRemap {
+    /// Piecewise-contiguous: each source span maps onto a target
+    /// offset (`id -> target + (id - src.offset)`).
+    Segments(Vec<(IdSpan, u32)>),
+    /// Arbitrary per-id lookup: `id -> table[id]` (stream segments'
+    /// local-row → global-id mapping).
+    Table(Arc<Vec<u32>>),
+}
+
+impl IdRemap {
+    /// Shift ids `0..len` by `to_offset` (local → global placement).
+    pub fn shift(len: usize, to_offset: u32) -> IdRemap {
+        IdRemap::Segments(vec![(IdSpan::local(len), to_offset)])
+    }
+
+    /// The identity on `0..len`.
+    pub fn identity(len: usize) -> IdRemap {
+        IdRemap::shift(len, 0)
+    }
+
+    /// Pair/concatenated space → global: ids `0..n1` land at `off1`,
+    /// ids `n1..n1+n2` land at `off2` (the Two-way Merge cross-graph
+    /// translation used by Alg. 3 and the out-of-core coordinator).
+    pub fn pair(n1: usize, n2: usize, off1: u32, off2: u32) -> IdRemap {
+        IdRemap::Segments(vec![
+            (IdSpan::local(n1), off1),
+            (IdSpan::new(n1 as u32, n2 as u32), off2),
+        ])
+    }
+
+    /// Arbitrary lookup-table remap.
+    pub fn table(table: Arc<Vec<u32>>) -> IdRemap {
+        IdRemap::Table(table)
+    }
+
+    /// Translate one id; panics when the id lies outside the source
+    /// space (a silent-shift bug turned into an assert-time error).
+    #[inline]
+    pub fn map(&self, id: u32) -> u32 {
+        match self.try_map(id) {
+            Some(v) => v,
+            None => panic!("id {id} outside the remap's source space"),
+        }
+    }
+
+    /// Translate one id, `None` when outside the source space.
+    #[inline]
+    pub fn try_map(&self, id: u32) -> Option<u32> {
+        match self {
+            IdRemap::Segments(segs) => segs
+                .iter()
+                .find(|(src, _)| src.contains(id))
+                .map(|(src, tgt)| tgt + (id - src.offset)),
+            IdRemap::Table(t) => t.get(id as usize).copied(),
+        }
+    }
+
+    /// Checked composition: the remap applying `self` then `then`.
+    /// Defined for segment remaps whose images each land inside a single
+    /// source segment of `then`; panics otherwise (a composition that
+    /// would tear a contiguous block is always a layering bug here).
+    /// Part of the id-space algebra's public contract (property-tested
+    /// below); the production pipelines currently translate in a single
+    /// step, so this is the escape hatch for multi-hop translations
+    /// (e.g. local → pair → global without an intermediate graph).
+    pub fn compose(&self, then: &IdRemap) -> IdRemap {
+        let IdRemap::Segments(segs) = self else {
+            panic!("compose is only defined on segment remaps");
+        };
+        let composed = segs
+            .iter()
+            .map(|&(src, tgt)| {
+                let first = then.map(tgt);
+                let last = then.map(tgt + src.len.saturating_sub(1));
+                assert_eq!(
+                    last,
+                    first + src.len.saturating_sub(1),
+                    "compose would split the contiguous block {src:?}"
+                );
+                (src, first)
+            })
+            .collect();
+        IdRemap::Segments(composed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_basics() {
+        let s = IdSpan::new(100, 50);
+        assert_eq!(s.end(), 150);
+        assert!(s.contains(100) && s.contains(149));
+        assert!(!s.contains(99) && !s.contains(150));
+        assert!(!s.is_local());
+        assert!(IdSpan::local(5).is_local());
+    }
+
+    #[test]
+    fn shift_maps_and_checks() {
+        let r = IdRemap::shift(10, 100);
+        assert_eq!(r.map(0), 100);
+        assert_eq!(r.map(9), 109);
+        assert_eq!(r.try_map(10), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the remap's source space")]
+    fn map_panics_outside_source() {
+        IdRemap::shift(4, 10).map(4);
+    }
+
+    #[test]
+    fn pair_remap_translates_both_sides() {
+        // C_i = 3 rows at global 10, C_j = 2 rows at global 20.
+        let r = IdRemap::pair(3, 2, 10, 20);
+        assert_eq!(r.map(0), 10);
+        assert_eq!(r.map(2), 12);
+        assert_eq!(r.map(3), 20);
+        assert_eq!(r.map(4), 21);
+        assert_eq!(r.try_map(5), None);
+    }
+
+    #[test]
+    fn table_remap_looks_up() {
+        let r = IdRemap::table(Arc::new(vec![7, 3, 9]));
+        assert_eq!(r.map(0), 7);
+        assert_eq!(r.map(2), 9);
+        assert_eq!(r.try_map(3), None);
+    }
+
+    #[test]
+    fn compose_chains_shifts() {
+        // local -> pair (second block) -> global.
+        let to_pair = IdRemap::shift(2, 3);
+        let to_global = IdRemap::pair(3, 2, 10, 20);
+        let both = to_pair.compose(&to_global);
+        assert_eq!(both.map(0), 20);
+        assert_eq!(both.map(1), 21);
+    }
+}

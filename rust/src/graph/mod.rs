@@ -1,34 +1,64 @@
 //! k-NN graph data structures: flagged bounded neighbor lists, the graph
 //! itself, reverse-graph extraction, the `MergeSort` operation of the
-//! paper (per-entry merge of two neighbor lists), and compact
+//! paper (per-entry merge of two neighbor lists), typed id spaces
+//! ([`IdSpan`]/[`IdRemap`] — see [`id_space`]), and compact
 //! serialization used both for network payloads (Alg. 3) and for
 //! out-of-core spills.
 
+pub mod id_space;
 pub mod neighbor;
 pub mod serial;
 pub mod shared;
 
+pub use id_space::{IdRemap, IdSpan};
 pub use neighbor::{Neighbor, NeighborList};
 pub use shared::SharedGraph;
 
 /// An approximate k-NN graph: one bounded [`NeighborList`] per element.
 ///
 /// Entry `i` holds the (approximate) nearest neighbors of element `i`,
-/// sorted ascending by distance — the paper's `G[i]`.
+/// sorted ascending by distance — the paper's `G[i]`. The graph carries
+/// the [`IdSpan`] it is expressed in: row `r` is element
+/// `span().offset + r`, and neighbor ids live in the same coordinate
+/// system. Freshly built graphs are local (`offset == 0`); use
+/// [`KnnGraph::rebase`] / [`KnnGraph::to_global`] /
+/// [`KnnGraph::remapped`] to move between spaces — never raw offset
+/// arithmetic on the lists.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct KnnGraph {
     pub lists: Vec<NeighborList>,
     /// Neighborhood capacity `k`.
     pub k: usize,
+    /// The id space this graph is expressed in (rows *and* ids).
+    span: IdSpan,
 }
 
 impl KnnGraph {
-    /// Create an empty graph with `n` entries of capacity `k`.
+    /// Create an empty local graph with `n` entries of capacity `k`.
     pub fn empty(n: usize, k: usize) -> Self {
         KnnGraph {
             lists: (0..n).map(|_| NeighborList::new(k)).collect(),
             k,
+            span: IdSpan::local(n),
         }
+    }
+
+    /// Wrap already-built lists as a local graph.
+    pub fn from_lists(lists: Vec<NeighborList>, k: usize) -> Self {
+        let span = IdSpan::local(lists.len());
+        KnnGraph { lists, k, span }
+    }
+
+    /// Wrap lists with an explicit span (deserialization and remaps).
+    pub fn from_lists_spanned(lists: Vec<NeighborList>, k: usize, span: IdSpan) -> Self {
+        assert_eq!(span.len as usize, lists.len(), "span/list length mismatch");
+        KnnGraph { lists, k, span }
+    }
+
+    /// The id space this graph is expressed in.
+    #[inline]
+    pub fn span(&self) -> IdSpan {
+        self.span
     }
 
     /// Number of entries (vertices).
@@ -42,19 +72,27 @@ impl KnnGraph {
         self.lists.is_empty()
     }
 
-    /// The paper's `Ω(G_1, ..., G_m)`: direct concatenation of subgraphs,
-    /// shifting each subgraph's neighbor ids by its subset offset.
+    /// The paper's `Ω(G_1, ..., G_m)`: direct concatenation of *local*
+    /// subgraphs, placing subgraph `p`'s ids at `offsets[p]` in the
+    /// concatenated space. The result is the local graph on the
+    /// concatenation.
     pub fn concat(parts: &[&KnnGraph], offsets: &[usize]) -> KnnGraph {
         assert_eq!(parts.len(), offsets.len());
         assert!(!parts.is_empty());
         let k = parts.iter().map(|g| g.k).max().unwrap();
         let mut lists = Vec::with_capacity(parts.iter().map(|g| g.len()).sum());
         for (g, &off) in parts.iter().zip(offsets) {
+            assert!(
+                g.span.is_local(),
+                "concat expects subset-local subgraphs (got span {:?})",
+                g.span
+            );
+            let remap = IdRemap::shift(g.len(), off as u32);
             for list in &g.lists {
                 let mut shifted = NeighborList::new(k);
                 for nb in list.iter() {
                     shifted.push_unchecked(Neighbor {
-                        id: nb.id + off as u32,
+                        id: remap.map(nb.id),
                         dist: nb.dist,
                         new: nb.new,
                     });
@@ -62,24 +100,55 @@ impl KnnGraph {
                 lists.push(shifted);
             }
         }
-        KnnGraph { lists, k }
+        KnnGraph::from_lists(lists, k)
     }
 
-    /// The paper's `MergeSort(G, G0)`: entry-wise merge of two graphs over
-    /// the same vertex set, keeping the `k` nearest distinct neighbors.
+    /// Reassemble a full graph from global row-blocks: parts must carry
+    /// consecutive spans starting at 0 (the typed replacement for the
+    /// "extend lists and hope the offsets line up" assembly loops).
+    pub fn assemble(parts: Vec<KnnGraph>) -> KnnGraph {
+        assert!(!parts.is_empty());
+        let k = parts.iter().map(|g| g.k).max().unwrap();
+        let mut lists = Vec::with_capacity(parts.iter().map(|g| g.len()).sum());
+        let mut next = 0u32;
+        for g in parts {
+            assert_eq!(
+                g.span.offset, next,
+                "assemble expects consecutive spans (got {:?} at position {next})",
+                g.span
+            );
+            next = g.span.end();
+            lists.extend(g.lists);
+        }
+        KnnGraph::from_lists(lists, k)
+    }
+
+    /// The paper's `MergeSort(G, G0)`: entry-wise merge of two graphs
+    /// over the same vertex set (same span), keeping the `k` nearest
+    /// distinct neighbors.
     pub fn merge_sorted(&self, other: &KnnGraph) -> KnnGraph {
         assert_eq!(self.len(), other.len(), "MergeSort over different vertex sets");
+        assert_eq!(
+            self.span, other.span,
+            "MergeSort across id spaces ({:?} vs {:?})",
+            self.span, other.span
+        );
         let k = self.k.max(other.k);
         let lists = crate::util::parallel_map(self.len(), |i| {
             NeighborList::merged(&self.lists[i], &other.lists[i], k)
         });
-        KnnGraph { lists, k }
+        KnnGraph::from_lists_spanned(lists, k, self.span)
     }
 
-    /// Reverse graph `G̅`: for each element, the ids of elements that list
-    /// it as a neighbor. `cap` bounds each reverse list (the paper samples
-    /// at most lambda reverse neighbors; `usize::MAX` keeps all).
+    /// Reverse graph `G̅`: for each row, the *row indices* of entries
+    /// that list it as a neighbor. Only defined on local graphs (the
+    /// builders and support sampling operate in subset space). `cap`
+    /// bounds each reverse list.
     pub fn reverse(&self, cap: usize) -> Vec<Vec<u32>> {
+        assert!(
+            self.span.is_local(),
+            "reverse() operates on subset-local graphs"
+        );
         let mut rev: Vec<Vec<u32>> = vec![Vec::new(); self.len()];
         for (i, list) in self.lists.iter().enumerate() {
             for nb in list.iter() {
@@ -92,12 +161,83 @@ impl KnnGraph {
         rev
     }
 
-    /// Extract the subgraph rows `range` (ids are kept as-is).
+    /// Extract the subgraph rows `range` (neighbor ids are kept as-is;
+    /// the span narrows to the extracted rows).
     pub fn slice_rows(&self, range: std::ops::Range<usize>) -> KnnGraph {
+        let span = IdSpan::new(self.span.offset + range.start as u32, range.len() as u32);
         KnnGraph {
             lists: self.lists[range].to_vec(),
             k: self.k,
+            span,
         }
+    }
+
+    /// Translate every neighbor id through `remap` and re-express the
+    /// rows at `row_span` — the one sanctioned way to move a graph into
+    /// another id space. Ids outside the remap's source space panic.
+    pub fn remapped(&self, remap: &IdRemap, row_span: IdSpan) -> KnnGraph {
+        assert_eq!(
+            row_span.len as usize,
+            self.len(),
+            "row span does not cover the graph"
+        );
+        let lists = self
+            .lists
+            .iter()
+            .map(|l| {
+                let mut out = NeighborList::new(self.k);
+                for nb in l.iter() {
+                    out.push_unchecked(Neighbor {
+                        id: remap.map(nb.id),
+                        dist: nb.dist,
+                        new: nb.new,
+                    });
+                }
+                out
+            })
+            .collect();
+        KnnGraph {
+            lists,
+            k: self.k,
+            span: row_span,
+        }
+    }
+
+    /// Shift a *local* self-contained subgraph to global offset
+    /// `offset` (rows and ids move together). Calling this on a graph
+    /// that is already global panics — the double-shift hazard the old
+    /// `ensure_global` guessing allowed is now a type-state error.
+    pub fn rebase(&self, offset: u32) -> KnnGraph {
+        assert!(
+            self.span.is_local(),
+            "rebase on a graph already at offset {}",
+            self.span.offset
+        );
+        if offset == 0 {
+            return self.clone();
+        }
+        self.remapped(
+            &IdRemap::shift(self.len(), offset),
+            IdSpan::new(offset, self.span.len),
+        )
+    }
+
+    /// Checked "make this graph live at `target`": a graph already in
+    /// the target space passes through untouched (even if every id
+    /// numerically fits below the subset size — the exact case the old
+    /// `looks_local` heuristic got wrong); a local graph of the right
+    /// size is rebased; anything else is a layering bug and panics.
+    pub fn to_global(&self, target: IdSpan) -> KnnGraph {
+        if self.span == target {
+            return self.clone();
+        }
+        assert!(
+            self.span.is_local() && self.span.len == target.len,
+            "cannot express graph with span {:?} at {:?}",
+            self.span,
+            target
+        );
+        self.rebase(target.offset)
     }
 
     /// Neighbor ids of entry `i` (sorted by distance).
@@ -116,20 +256,31 @@ impl KnnGraph {
     }
 
     /// Validity invariants: sorted lists, no self-loops, no duplicates,
-    /// within capacity, ids in range. Used by tests and debug assertions.
+    /// within capacity, span consistency, ids in range (the range check
+    /// applies to local graphs, which are self-contained by contract;
+    /// globally-spanned row blocks may legally reference ids outside
+    /// their own rows). Used by tests and debug assertions.
     pub fn validate(&self, expect_no_self_loops: bool) -> Result<(), String> {
+        if self.span.len as usize != self.len() {
+            return Err(format!(
+                "span {:?} does not cover {} rows",
+                self.span,
+                self.len()
+            ));
+        }
         let n = self.len() as u32;
         for (i, list) in self.lists.iter().enumerate() {
             if list.len() > self.k {
                 return Err(format!("entry {i} exceeds capacity"));
             }
+            let row_id = self.span.offset + i as u32;
             let mut seen = std::collections::HashSet::new();
             let mut prev = f32::NEG_INFINITY;
             for nb in list.iter() {
-                if nb.id >= n {
+                if self.span.is_local() && nb.id >= n {
                     return Err(format!("entry {i} has out-of-range id {}", nb.id));
                 }
-                if expect_no_self_loops && nb.id as usize == i {
+                if expect_no_self_loops && nb.id == row_id {
                     return Err(format!("entry {i} has a self-loop"));
                 }
                 if !seen.insert(nb.id) {
@@ -165,6 +316,7 @@ mod tests {
         let g2 = graph_with(&[&[(1, 0.1)], &[(0, 0.1)]], 4);
         let joined = KnnGraph::concat(&[&g1, &g2], &[0, 2]);
         assert_eq!(joined.len(), 4);
+        assert_eq!(joined.span(), IdSpan::local(4));
         assert_eq!(joined.ids(0), vec![1]);
         assert_eq!(joined.ids(2), vec![3]);
         assert_eq!(joined.ids(3), vec![2]);
@@ -183,6 +335,14 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "MergeSort across id spaces")]
+    fn merge_sorted_rejects_mismatched_spans() {
+        let a = graph_with(&[&[(1, 0.3)], &[]], 2);
+        let b = graph_with(&[&[(1, 0.3)], &[]], 2).rebase(10);
+        let _ = a.merge_sorted(&b);
+    }
+
+    #[test]
     fn reverse_collects_in_edges() {
         let g = graph_with(&[&[(1, 0.5), (2, 0.6)], &[(2, 0.2)], &[(0, 0.9)]], 4);
         let rev = g.reverse(usize::MAX);
@@ -194,12 +354,83 @@ mod tests {
     }
 
     #[test]
+    fn rebase_moves_rows_and_ids_together() {
+        let g = graph_with(&[&[(1, 0.5)], &[(0, 0.5)]], 2);
+        let shifted = g.rebase(100);
+        assert_eq!(shifted.span(), IdSpan::new(100, 2));
+        assert_eq!(shifted.ids(0), vec![101]);
+        assert_eq!(shifted.ids(1), vec![100]);
+        assert_eq!(g.rebase(0), g);
+        shifted.validate(true).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "rebase on a graph already at offset")]
+    fn rebase_twice_panics() {
+        let g = graph_with(&[&[(1, 0.5)], &[]], 2);
+        let _ = g.rebase(10).rebase(10);
+    }
+
+    #[test]
+    fn to_global_is_idempotent_and_checked() {
+        let g = graph_with(&[&[(1, 0.5)], &[(0, 0.2)]], 2);
+        let target = IdSpan::new(50, 2);
+        let global = g.to_global(target);
+        assert_eq!(global.ids(0), vec![51]);
+        // Already global: passes through without a second shift, even
+        // though its ids (50, 51) are not obviously "global-looking".
+        assert_eq!(global.to_global(target), global);
+    }
+
+    #[test]
+    fn slice_rows_narrows_span() {
+        let g = graph_with(&[&[(1, 0.1)], &[(2, 0.1)], &[(0, 0.1)]], 2);
+        let tail = g.slice_rows(1..3);
+        assert_eq!(tail.span(), IdSpan::new(1, 2));
+        assert_eq!(tail.ids(0), vec![2]);
+    }
+
+    #[test]
+    fn remapped_translates_through_pair_space() {
+        // Pair space: 2 rows of C_i then 1 row of C_j.
+        let cross = graph_with(&[&[(2, 0.5)], &[(2, 0.4)], &[(0, 0.5)]], 2);
+        let remap = IdRemap::pair(2, 1, 10, 20);
+        let g_ij = cross
+            .slice_rows(0..2)
+            .remapped(&remap, IdSpan::new(10, 2));
+        assert_eq!(g_ij.ids(0), vec![20]);
+        let g_ji = cross
+            .slice_rows(2..3)
+            .remapped(&remap, IdSpan::new(20, 1));
+        assert_eq!(g_ji.ids(0), vec![10]);
+    }
+
+    #[test]
+    fn assemble_requires_consecutive_spans() {
+        let a = graph_with(&[&[(1, 0.1)], &[]], 2); // rows 0..2 local
+        let b = graph_with(&[&[(0, 0.1)], &[]], 2).rebase(2); // rows 2..4
+        let full = KnnGraph::assemble(vec![a.clone(), b]);
+        assert_eq!(full.len(), 4);
+        assert_eq!(full.span(), IdSpan::local(4));
+        assert_eq!(full.ids(2), vec![2]);
+        full.validate(false).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "assemble expects consecutive spans")]
+    fn assemble_rejects_gaps() {
+        let a = graph_with(&[&[(1, 0.1)], &[]], 2);
+        let b = graph_with(&[&[(0, 0.1)], &[]], 2).rebase(5);
+        let _ = KnnGraph::assemble(vec![a, b]);
+    }
+
+    #[test]
     fn validate_catches_violations() {
         let g = graph_with(&[&[(0, 0.5)]], 4);
         assert!(g.validate(true).is_err()); // self loop
         assert!(g.validate(false).is_ok());
         let g2 = graph_with(&[&[(3, 0.5)]], 4);
-        assert!(g2.validate(false).is_err()); // out of range
+        assert!(g2.validate(false).is_err()); // out of range (local graph)
     }
 
     #[test]

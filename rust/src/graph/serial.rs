@@ -3,23 +3,28 @@
 //!
 //! Wire format (little-endian):
 //! ```text
-//! graph   := magic:u32  k:u32  n:u64  entry*n
+//! graph   := magic:u32  k:u32  span_offset:u32  n:u64  entry*n
 //! entry   := len:u16  (id:u32 dist:f32 flags:u8)*len
 //! ```
-//! The same bytes are written to external storage by the out-of-core
-//! mode, so payload sizes measured by the network model match what a
-//! real deployment would ship over MPI.
+//! The [`super::IdSpan`] travels with the graph (`span_offset`; the
+//! span length is `n`), so a deserialized graph knows which id space it
+//! is expressed in — external storage and network peers never have to
+//! guess whether ids are subset-local or global. The same bytes are
+//! written to external storage by the out-of-core mode, so payload
+//! sizes measured by the network model match what a real deployment
+//! would ship over MPI.
 
-use super::{KnnGraph, Neighbor, NeighborList};
+use super::{IdSpan, KnnGraph, Neighbor, NeighborList};
 use anyhow::{bail, Result};
 
-const GRAPH_MAGIC: u32 = 0x4B_4E_47_31; // "KNG1"
+const GRAPH_MAGIC: u32 = 0x4B_4E_47_32; // "KNG2"
 
 /// Serialize a graph to bytes.
 pub fn graph_to_bytes(g: &KnnGraph) -> Vec<u8> {
-    let mut out = Vec::with_capacity(16 + g.edge_count() * 9);
+    let mut out = Vec::with_capacity(20 + g.edge_count() * 9);
     out.extend_from_slice(&GRAPH_MAGIC.to_le_bytes());
     out.extend_from_slice(&(g.k as u32).to_le_bytes());
+    out.extend_from_slice(&g.span().offset.to_le_bytes());
     out.extend_from_slice(&(g.len() as u64).to_le_bytes());
     for list in &g.lists {
         assert!(list.len() <= u16::MAX as usize);
@@ -35,7 +40,7 @@ pub fn graph_to_bytes(g: &KnnGraph) -> Vec<u8> {
 
 /// Exact byte size [`graph_to_bytes`] would produce, without building it.
 pub fn graph_payload_bytes(g: &KnnGraph) -> u64 {
-    16 + g.lists.len() as u64 * 2 + g.edge_count() as u64 * 9
+    20 + g.lists.len() as u64 * 2 + g.edge_count() as u64 * 9
 }
 
 /// Deserialize a graph from bytes.
@@ -54,6 +59,7 @@ pub fn graph_from_bytes(bytes: &[u8]) -> Result<KnnGraph> {
         bail!("bad graph magic {magic:#x}");
     }
     let k = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let span_offset = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
     let n = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
     let mut lists = Vec::with_capacity(n);
     for _ in 0..n {
@@ -74,7 +80,11 @@ pub fn graph_from_bytes(bytes: &[u8]) -> Result<KnnGraph> {
     if pos != bytes.len() {
         bail!("trailing bytes in graph payload");
     }
-    Ok(KnnGraph { lists, k })
+    Ok(KnnGraph::from_lists_spanned(
+        lists,
+        k,
+        IdSpan::new(span_offset, n as u32),
+    ))
 }
 
 /// Write a graph to a file.
@@ -118,6 +128,15 @@ mod tests {
             let back = graph_from_bytes(&bytes).unwrap();
             assert_eq!(back, g);
         });
+    }
+
+    #[test]
+    fn roundtrip_preserves_global_span() {
+        let mut rng = crate::util::Rng::seeded(2);
+        let g = random_graph(&mut rng).rebase(1000);
+        let back = graph_from_bytes(&graph_to_bytes(&g)).unwrap();
+        assert_eq!(back.span(), g.span());
+        assert_eq!(back, g);
     }
 
     #[test]

@@ -108,29 +108,28 @@ impl SharedGraph {
         self.updates.swap(0, Ordering::Relaxed)
     }
 
-    /// Unwrap back into a plain graph.
+    /// Unwrap back into a plain (subset-local) graph.
     pub fn into_graph(self) -> KnnGraph {
-        KnnGraph {
-            lists: self
-                .entries
+        let k = self.k;
+        KnnGraph::from_lists(
+            self.entries
                 .into_iter()
                 .map(|m| m.into_inner().unwrap())
                 .collect(),
-            k: self.k,
-        }
+            k,
+        )
     }
 
     /// Clone the current state into a plain graph (entries locked one at
     /// a time; callers should be quiescent for a consistent snapshot).
     pub fn snapshot(&self) -> KnnGraph {
-        KnnGraph {
-            lists: self
-                .entries
+        KnnGraph::from_lists(
+            self.entries
                 .iter()
                 .map(|m| m.lock().unwrap().clone())
                 .collect(),
-            k: self.k,
-        }
+            self.k,
+        )
     }
 }
 

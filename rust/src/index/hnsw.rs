@@ -190,7 +190,7 @@ impl Hnsw {
             }
             list
         });
-        KnnGraph { lists, k }
+        KnnGraph::from_lists(lists, k)
     }
 }
 

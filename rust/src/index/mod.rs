@@ -96,7 +96,7 @@ impl IndexGraph {
             }
             list
         });
-        KnnGraph { lists, k }
+        KnnGraph::from_lists(lists, k)
     }
 
     /// Structural validation: ids in range, no self loops, degree bound.

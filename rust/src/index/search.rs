@@ -176,13 +176,12 @@ mod tests {
     fn queries_like(ds: &Dataset, n: usize, seed: u64) -> Dataset {
         // Perturbed base vectors: same distribution, not identical.
         let mut rng = crate::util::Rng::seeded(seed);
-        let mut out = Dataset { data: Vec::new(), dim: ds.dim };
+        let mut data = Vec::with_capacity(n * ds.dim);
         for q in 0..n {
             let base = ds.vector((q * 7) % ds.len());
-            let v: Vec<f32> = base.iter().map(|x| x + rng.gen_normal() * 0.05).collect();
-            out.push(&v);
+            data.extend(base.iter().map(|x| x + rng.gen_normal() * 0.05));
         }
-        out
+        Dataset::from_raw(data, ds.dim)
     }
 
     #[test]

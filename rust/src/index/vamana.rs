@@ -162,7 +162,7 @@ impl Vamana {
             }
             list
         });
-        KnnGraph { lists, k }
+        KnnGraph::from_lists(lists, k)
     }
 }
 

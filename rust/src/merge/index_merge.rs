@@ -70,12 +70,13 @@ pub fn merge_many_index_graphs(
     assert_eq!(subsets.len(), subgraphs.len());
     let sizes: Vec<usize> = subsets.iter().map(|d| d.len()).collect();
     let map = super::SubsetMap::from_sizes(&sizes);
-    let mut support = SupportLists { lists: Vec::new() };
-    for (s, g) in subgraphs.iter().enumerate() {
-        let mut part = SupportLists::build(g, params.lambda);
-        part.offset_ids(map.range(s).start as u32);
-        support.lists.append(&mut part.lists);
-    }
+    let support = SupportLists::concat_blocks(
+        subgraphs
+            .iter()
+            .map(|g| SupportLists::build(g, params.lambda))
+            .collect(),
+        &sizes,
+    );
     let cross = MultiWayMerge::new(params).cross_graph_observed(
         subsets,
         &support,

@@ -22,7 +22,7 @@ pub use multi_way::MultiWayMerge;
 pub use s_merge::SMerge;
 pub use two_way::TwoWayMerge;
 
-use crate::graph::KnnGraph;
+use crate::graph::{IdRemap, KnnGraph};
 
 /// Parameters shared by the merge algorithms.
 #[derive(Clone, Copy, Debug)]
@@ -141,14 +141,43 @@ impl SupportLists {
         self.lists.is_empty()
     }
 
-    /// Shift every id by `offset` (receiver-side placement into the
-    /// concatenated id space).
-    pub fn offset_ids(&mut self, offset: u32) {
+    /// Translate every id through `remap` (checked — an id outside the
+    /// remap's source space panics instead of silently shifting).
+    pub fn remap(&mut self, remap: &IdRemap) {
         for list in &mut self.lists {
             for id in list.iter_mut() {
-                *id += offset;
+                *id = remap.map(*id);
             }
         }
+    }
+
+    /// Place two subset-local supports into the pair/concatenated space
+    /// of a Two-way Merge: `a`'s ids stay (`C_1` rows first), `b`'s ids
+    /// shift past `n1 = a`'s subset size — the receiver-side placement
+    /// of Alg. 3 and the shared front half of Alg. 1.
+    pub fn concat_pair(a: SupportLists, b: SupportLists, n1: usize) -> SupportLists {
+        let n2 = b.len();
+        SupportLists::concat_blocks(vec![a, b], &[n1, n2])
+    }
+
+    /// Place `m` subset-local supports into the concatenated space:
+    /// block `p` (over a subset of `sizes[p]` elements) shifts by the
+    /// running offset of the blocks before it.
+    pub fn concat_blocks(parts: Vec<SupportLists>, sizes: &[usize]) -> SupportLists {
+        assert_eq!(parts.len(), sizes.len());
+        let mut lists = Vec::with_capacity(parts.iter().map(|p| p.len()).sum());
+        let mut acc = 0usize;
+        for (mut part, &size) in parts.into_iter().zip(sizes) {
+            assert_eq!(
+                part.len(),
+                size,
+                "support block does not cover its subset"
+            );
+            part.remap(&IdRemap::shift(size, acc as u32));
+            lists.append(&mut part.lists);
+            acc += size;
+        }
+        SupportLists { lists }
     }
 
     /// Serialized payload size in bytes (network model).
@@ -270,11 +299,49 @@ mod tests {
     }
 
     #[test]
-    fn offset_ids_shifts_everything() {
+    fn remap_shifts_through_id_space() {
         let mut s = SupportLists {
             lists: vec![vec![0, 1], vec![5]],
         };
-        s.offset_ids(10);
+        s.remap(&crate::graph::IdRemap::shift(6, 10));
         assert_eq!(s.lists, vec![vec![10, 11], vec![15]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the remap's source space")]
+    fn remap_rejects_out_of_space_ids() {
+        let mut s = SupportLists {
+            lists: vec![vec![7]],
+        };
+        s.remap(&crate::graph::IdRemap::shift(6, 10));
+    }
+
+    #[test]
+    fn concat_pair_places_second_block_after_first() {
+        let a = SupportLists {
+            lists: vec![vec![1], vec![0]],
+        };
+        let b = SupportLists {
+            lists: vec![vec![2, 0], vec![1], vec![0]],
+        };
+        let s = SupportLists::concat_pair(a, b, 2);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.lists[0], vec![1]);
+        assert_eq!(s.lists[2], vec![4, 2]);
+        assert_eq!(s.lists[4], vec![2]);
+    }
+
+    #[test]
+    fn concat_blocks_uses_running_offsets() {
+        let parts = vec![
+            SupportLists {
+                lists: vec![vec![0]],
+            },
+            SupportLists {
+                lists: vec![vec![1], vec![0]],
+            },
+        ];
+        let s = SupportLists::concat_blocks(parts, &[1, 2]);
+        assert_eq!(s.lists, vec![vec![0], vec![2], vec![1]]);
     }
 }

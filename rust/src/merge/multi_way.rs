@@ -63,12 +63,13 @@ impl MultiWayMerge {
         let map = SubsetMap::from_sizes(&sizes);
 
         // Build S in concatenated space (one-shot, as in Alg. 1).
-        let mut support = SupportLists { lists: Vec::with_capacity(map.total()) };
-        for (s, g) in subgraphs.iter().enumerate() {
-            let mut part = SupportLists::build(g, self.params.lambda);
-            part.offset_ids(map.range(s).start as u32);
-            support.lists.append(&mut part.lists);
-        }
+        let support = SupportLists::concat_blocks(
+            subgraphs
+                .iter()
+                .map(|g| SupportLists::build(g, self.params.lambda))
+                .collect(),
+            &sizes,
+        );
 
         let cross = self.cross_graph_observed(subsets, &support, metric, engine, observer);
         let offsets: Vec<usize> = (0..subsets.len()).map(|s| map.range(s).start).collect();
@@ -253,12 +254,10 @@ mod tests {
         let (parts, graphs) = build_parts(&ds, 3, 6);
         let sizes: Vec<usize> = parts.iter().map(|d| d.len()).collect();
         let map = SubsetMap::from_sizes(&sizes);
-        let mut support = SupportLists { lists: Vec::new() };
-        for (s, g) in graphs.iter().enumerate() {
-            let mut part = SupportLists::build(g, 6);
-            part.offset_ids(map.range(s).start as u32);
-            support.lists.append(&mut part.lists);
-        }
+        let support = SupportLists::concat_blocks(
+            graphs.iter().map(|g| SupportLists::build(g, 6)).collect(),
+            &sizes,
+        );
         let cross = MultiWayMerge::new(MergeParams {
             k: 6,
             lambda: 6,

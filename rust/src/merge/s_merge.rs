@@ -13,7 +13,7 @@ use super::MergeParams;
 use crate::construction::nndescent;
 use crate::dataset::Dataset;
 use crate::distance::Metric;
-use crate::graph::{KnnGraph, SharedGraph};
+use crate::graph::{IdRemap, KnnGraph, SharedGraph};
 use crate::util::{parallel_for, Rng};
 use std::time::Instant;
 
@@ -66,15 +66,20 @@ impl SMerge {
             let mut rng = Rng::seeded(p.seed);
             (0..n).map(|_| rng.next_u64()).collect()
         };
+        // Checked placement of each subgraph into the concatenated
+        // space (C_1 rows first) — the receiver-side shift as a typed
+        // remap instead of raw offset arithmetic.
+        let place1 = IdRemap::shift(n1, 0);
+        let place2 = IdRemap::shift(n - n1, n1 as u32);
         parallel_for(n, |i| {
-            let (sub, local, offset, other_start, other_len) = if i < n1 {
-                (g1, i, 0usize, n1, n - n1)
+            let (sub, local, place, other_start, other_len) = if i < n1 {
+                (g1, i, &place1, n1, n - n1)
             } else {
-                (g2, i - n1, n1, 0usize, n1)
+                (g2, i - n1, &place2, 0usize, n1)
             };
             let keep = (sub.lists[local].len() / 2).max(1);
             for nb in sub.lists[local].iter().take(keep) {
-                graph.insert(i, nb.id + offset as u32, nb.dist, true);
+                graph.insert(i, place.map(nb.id), nb.dist, true);
             }
             let mut rng = Rng::seeded(seeds[i]);
             let want = p.k.saturating_sub(keep).min(other_len);

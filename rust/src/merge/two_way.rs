@@ -85,11 +85,9 @@ impl TwoWayMerge {
         engine: &dyn DistanceEngine,
         observer: MergeObserver,
     ) -> (KnnGraph, KnnGraph) {
-        let mut s1 = SupportLists::build(g1, self.params.lambda);
-        let mut s2 = SupportLists::build(g2, self.params.lambda);
-        s2.offset_ids(ds1.len() as u32);
-        s1.lists.append(&mut s2.lists);
-        let support = s1;
+        let s1 = SupportLists::build(g1, self.params.lambda);
+        let s2 = SupportLists::build(g2, self.params.lambda);
+        let support = SupportLists::concat_pair(s1, s2, ds1.len());
 
         let cross = self.cross_graph_observed(ds1, ds2, &support, metric, engine, observer);
         let g0 = KnnGraph::concat(&[g1, g2], &[0, ds1.len()]);
@@ -286,12 +284,11 @@ mod tests {
             max_iters: 4,
             ..Default::default()
         };
-        let mut s1 = SupportLists::build(&g1, 8);
-        let mut s2 = SupportLists::build(&g2, 8);
-        s2.offset_ids(d1.len() as u32);
-        s1.lists.append(&mut s2.lists);
+        let s1 = SupportLists::build(&g1, 8);
+        let s2 = SupportLists::build(&g2, 8);
+        let support = SupportLists::concat_pair(s1, s2, d1.len());
         let cross =
-            TwoWayMerge::new(params).cross_graph(&d1, &d2, &s1, Metric::L2);
+            TwoWayMerge::new(params).cross_graph(&d1, &d2, &support, Metric::L2);
         let n1 = d1.len();
         for i in 0..cross.len() {
             for id in cross.ids(i) {

@@ -71,13 +71,22 @@ impl Compactor {
         let mut params = self.cfg.merge;
         params.seed ^= out_id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let merger = TwoWayMerge::new(params);
-        let data = Dataset::concat(&[&a.data, &b.data]);
-        let mut global_ids = a.global_ids.clone();
+        // Materialize the fused rows once, up front: the output segment
+        // is long-lived, and a chained view would pin the input
+        // segments' stores and deepen by one dispatch level per
+        // compaction generation. The merge below runs on *slices of the
+        // materialized copy*, so its internal pair concat hits the
+        // adjacent-range fast path — flat contiguous access in the hot
+        // distance loops, and no second copy of the pair.
+        let data = Dataset::concat(&[&a.data, &b.data]).materialize();
+        let d1 = data.slice_rows(0..a.len());
+        let d2 = data.slice_rows(a.len()..data.len());
+        let mut global_ids = (*a.global_ids).clone();
         global_ids.extend_from_slice(&b.global_ids);
         let level = a.level.max(b.level) + 1;
         match self.cfg.mode {
             StreamGraphMode::Knn => {
-                let knn = merger.merge(&a.data, &b.data, &a.knn, &b.knn, self.metric);
+                let knn = merger.merge(&d1, &d2, &a.knn, &b.knn, self.metric);
                 Segment::from_knn(out_id, level, data, global_ids, knn, self.metric, &self.cfg)
             }
             StreamGraphMode::Index => {
@@ -86,7 +95,7 @@ impl Compactor {
                 // would drop exactly the long-range edges that keep the
                 // index navigable.
                 let (cross, g0) =
-                    merger.cross_and_concat(&a.data, &b.data, &a.knn, &b.knn, self.metric);
+                    merger.cross_and_concat(&d1, &d2, &a.knn, &b.knn, self.metric);
                 let index = union_and_diversify(
                     &data,
                     self.metric,
@@ -103,7 +112,7 @@ impl Compactor {
                     id: out_id,
                     level,
                     data,
-                    global_ids,
+                    global_ids: std::sync::Arc::new(global_ids),
                     knn,
                     index,
                     entries,

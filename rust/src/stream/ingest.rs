@@ -161,7 +161,7 @@ fn measure(
             elapsed_s: start.elapsed().as_secs_f64(),
         };
     }
-    let prefix = Dataset::from_raw(ds.data[..inserted * ds.dim].to_vec(), ds.dim);
+    let prefix = ds.slice_rows(0..inserted); // zero-copy view of the ingested rows
     let truth = GroundTruth::for_queries(&prefix, queries, opts.topk, index.metric());
     let t = Instant::now();
     let results: Vec<Vec<u32>> = (0..queries.len())

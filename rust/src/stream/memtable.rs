@@ -4,6 +4,11 @@
 //! Queries scan it brute-force — it is small by construction, and exact
 //! answers over the freshest vectors cost one pass of at most
 //! `segment_size` distances.
+//!
+//! The buffer is a raw `Vec<f32>`; [`MemTable::drain`] hands the
+//! allocation itself to the sealed segment's [`Dataset`] (one move, zero
+//! vector copies — the seal path's contribution to the storage layer's
+//! zero-copy discipline).
 
 use crate::dataset::Dataset;
 use crate::distance::Metric;
@@ -12,14 +17,17 @@ use crate::graph::NeighborList;
 /// A small mutable buffer of `(vector, global id)` pairs.
 #[derive(Clone, Debug)]
 pub struct MemTable {
-    data: Dataset,
+    buf: Vec<f32>,
+    dim: usize,
     global_ids: Vec<u32>,
 }
 
 impl MemTable {
     pub fn new(dim: usize) -> MemTable {
+        assert!(dim > 0, "dim must be positive");
         MemTable {
-            data: Dataset::from_raw(Vec::new(), dim),
+            buf: Vec::new(),
+            dim,
             global_ids: Vec::new(),
         }
     }
@@ -36,8 +44,14 @@ impl MemTable {
 
     /// Append one vector under the given global id.
     pub fn insert(&mut self, v: &[f32], global_id: u32) {
-        self.data.push(v);
+        assert_eq!(v.len(), self.dim);
+        self.buf.extend_from_slice(v);
         self.global_ids.push(global_id);
+    }
+
+    #[inline]
+    fn row(&self, r: usize) -> &[f32] {
+        &self.buf[r * self.dim..(r + 1) * self.dim]
     }
 
     /// Exact brute-force scan: up to `topk` `(distance, global id)` hits
@@ -45,7 +59,7 @@ impl MemTable {
     pub fn search(&self, metric: Metric, query: &[f32], topk: usize) -> Vec<(f32, u32)> {
         let mut list = NeighborList::new(topk.max(1));
         for (row, &gid) in self.global_ids.iter().enumerate() {
-            let d = metric.distance(query, self.data.vector(row));
+            let d = metric.distance(query, self.row(row));
             if d < list.threshold() {
                 list.insert(gid, d, false);
             }
@@ -54,12 +68,12 @@ impl MemTable {
     }
 
     /// Take the buffered contents (insertion order preserved), leaving
-    /// the memtable empty.
+    /// the memtable empty. The returned dataset owns the buffer
+    /// allocation — no per-vector copying happens here.
     pub fn drain(&mut self) -> (Dataset, Vec<u32>) {
-        let dim = self.data.dim;
-        let data = std::mem::replace(&mut self.data, Dataset::from_raw(Vec::new(), dim));
+        let data = std::mem::take(&mut self.buf);
         let gids = std::mem::take(&mut self.global_ids);
-        (data, gids)
+        (Dataset::from_raw(data, self.dim), gids)
     }
 }
 

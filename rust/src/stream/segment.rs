@@ -13,10 +13,11 @@ use crate::config::{StreamConfig, StreamGraphMode};
 use crate::construction::{bruteforce, NnDescent};
 use crate::dataset::Dataset;
 use crate::distance::Metric;
-use crate::graph::KnnGraph;
+use crate::graph::{IdRemap, KnnGraph};
 use crate::index::diversify::diversify_knn;
 use crate::index::search::beam_search_from;
 use crate::index::IndexGraph;
+use std::sync::Arc;
 
 /// An immutable sealed segment of the stream.
 #[derive(Clone, Debug)]
@@ -25,10 +26,12 @@ pub struct Segment {
     pub id: u64,
     /// Compaction level: seals start at 0, each fuse bumps the max + 1.
     pub level: usize,
-    /// The segment's vectors (local rows).
+    /// The segment's vectors (local rows; a zero-copy view — seals
+    /// take the memtable's allocation, compactions own their concat).
     pub data: Dataset,
-    /// Local row -> global stream id.
-    pub global_ids: Vec<u32>,
+    /// Local row -> global stream id (shared with the segment's
+    /// [`IdRemap`] table, see [`Segment::global_remap`]).
+    pub global_ids: Arc<Vec<u32>>,
     /// Distance-annotated k-NN graph over local ids (merge substrate).
     pub knn: KnnGraph,
     /// Search structure over local ids.
@@ -82,6 +85,7 @@ impl Segment {
         metric: Metric,
         cfg: &StreamConfig,
     ) -> Segment {
+        let global_ids = Arc::new(global_ids);
         let (index, entries) = match cfg.mode {
             StreamGraphMode::Knn => {
                 // Undirected adjacency: a raw directed k-NN graph
@@ -146,11 +150,19 @@ impl Segment {
         merge_topk(parts, topk)
     }
 
+    /// The segment's local-row → global-id translation as a checked
+    /// [`IdRemap`] (shares the `global_ids` table, no copy).
+    pub fn global_remap(&self) -> IdRemap {
+        IdRemap::table(Arc::clone(&self.global_ids))
+    }
+
     /// Re-key the segment's k-NN graph into the global id space: entry
     /// `global(i)` of the result holds `knn[i]` with neighbor ids mapped
-    /// through `global_ids`. Rows for global ids outside the segment are
-    /// empty; the result has `max(global_ids) + 1` entries.
+    /// through the segment's [`IdRemap`] table. Rows for global ids
+    /// outside the segment are empty; the result has
+    /// `max(global_ids) + 1` entries.
     pub fn knn_in_global_space(&self) -> KnnGraph {
+        let remap = self.global_remap();
         let n = self
             .global_ids
             .iter()
@@ -159,9 +171,9 @@ impl Segment {
             .unwrap_or(0);
         let mut out = KnnGraph::empty(n, self.knn.k);
         for local in 0..self.len() {
-            let gi = self.global_ids[local] as usize;
+            let gi = remap.map(local as u32) as usize;
             for nb in self.knn.lists[local].iter() {
-                out.lists[gi].insert(self.global_ids[nb.id as usize], nb.dist, false);
+                out.lists[gi].insert(remap.map(nb.id), nb.dist, false);
             }
         }
         out
@@ -180,7 +192,7 @@ impl Segment {
             return Err("index graph size mismatch".into());
         }
         let mut seen = std::collections::HashSet::with_capacity(self.global_ids.len());
-        for &g in &self.global_ids {
+        for &g in self.global_ids.iter() {
             if !seen.insert(g) {
                 return Err(format!("duplicate global id {g}"));
             }

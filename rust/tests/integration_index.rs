@@ -110,12 +110,11 @@ fn diversification_post_processing_reduces_cost_not_recall() {
         lambda: 16,
         ..Default::default()
     };
-    let mut s1 = SupportLists::build(&g1, params.lambda);
-    let mut s2 = SupportLists::build(&g2, params.lambda);
-    s2.offset_ids(parts[0].0.len() as u32);
-    s1.lists.append(&mut s2.lists);
+    let s1 = SupportLists::build(&g1, params.lambda);
+    let s2 = SupportLists::build(&g2, params.lambda);
+    let support = SupportLists::concat_pair(s1, s2, parts[0].0.len());
     let cross =
-        TwoWayMerge::new(params).cross_graph(&parts[0].0, &parts[1].0, &s1, Metric::L2);
+        TwoWayMerge::new(params).cross_graph(&parts[0].0, &parts[1].0, &support, Metric::L2);
     let g0 = KnnGraph::concat(&[&g1, &g2], &[0, parts[0].0.len()]);
 
     // Raw union (no diversification): capacity-unbounded adjacency.

@@ -71,17 +71,16 @@ fn property_two_way_cross_edges_only() {
         });
         let g1 = nnd.build(&d1, Metric::L2);
         let g2 = nnd.build(&d2, Metric::L2);
-        let mut s1 = SupportLists::build(&g1, k);
-        let mut s2 = SupportLists::build(&g2, k);
-        s2.offset_ids(n1 as u32);
-        s1.lists.append(&mut s2.lists);
+        let s1 = SupportLists::build(&g1, k);
+        let s2 = SupportLists::build(&g2, k);
+        let support = SupportLists::concat_pair(s1, s2, n1);
         let cross = TwoWayMerge::new(MergeParams {
             k,
             lambda: k,
             max_iters: 4,
             ..Default::default()
         })
-        .cross_graph(&d1, &d2, &s1, Metric::L2);
+        .cross_graph(&d1, &d2, &support, Metric::L2);
         // Invariant: G[i] holds only cross-subset neighbors (the routing
         // property Alg. 3 depends on to split G into G_i^j / G_j^i).
         for i in 0..cross.len() {
@@ -113,12 +112,10 @@ fn property_multiway_respects_sof_exclusion() {
             ..Default::default()
         });
         let graphs: Vec<_> = parts.iter().map(|(d, _)| nnd.build(d, Metric::L2)).collect();
-        let mut support = SupportLists { lists: Vec::new() };
-        for (s, g) in graphs.iter().enumerate() {
-            let mut part = SupportLists::build(g, k);
-            part.offset_ids(map.range(s).start as u32);
-            support.lists.append(&mut part.lists);
-        }
+        let support = SupportLists::concat_blocks(
+            graphs.iter().map(|g| SupportLists::build(g, k)).collect(),
+            &sizes,
+        );
         let subsets: Vec<&_> = parts.iter().map(|(d, _)| d).collect();
         let cross = MultiWayMerge::new(MergeParams {
             k,

@@ -1,0 +1,132 @@
+//! Property tests for the storage layer: the demand-paged file backing
+//! must be observationally identical to the in-memory backing — same
+//! rows, same distance results, same fvecs round-trips — while actually
+//! paging (partial residency on partial access).
+
+use knn_merge::dataset::{io, Dataset, DatasetFamily, GeneratorConfig, PagedFormat, VectorStore};
+use knn_merge::distance::{DistanceEngine, ScalarEngine};
+use knn_merge::util::proptest::check_property_cases;
+use std::sync::Arc;
+
+fn tmpdir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("knnmerge-equiv-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn property_paged_and_memory_backends_agree() {
+    check_property_cases("paged-vs-memory", 71, 8, |rng| {
+        let n = 50 + rng.gen_range(400);
+        let dim = 4 + rng.gen_range(60);
+        let ds = GeneratorConfig {
+            n,
+            dim,
+            clusters: 4,
+            intrinsic_dim: dim.min(8),
+            noise_sigma: 0.05,
+            normalize: false,
+            nonnegative: false,
+            center_scale: 0.6,
+        }
+        .generate(rng.next_u64());
+
+        // Round-trip through both file formats and both read paths.
+        let fpath = tmpdir().join(format!("eq-{n}-{dim}.fvecs"));
+        let kpath = tmpdir().join(format!("eq-{n}-{dim}.knnv"));
+        io::write_fvecs(&fpath, &ds).unwrap();
+        io::write_knnv(&kpath, &ds).unwrap();
+
+        let eager_f = io::read_fvecs(&fpath, None).unwrap();
+        let paged_f = Dataset::open_fvecs_paged(&fpath, None).unwrap();
+        let paged_k = Dataset::open_knnv_paged(&kpath).unwrap();
+        assert_eq!(eager_f, ds, "eager fvecs read must match the source");
+        assert_eq!(paged_f, ds, "paged fvecs read must match the source");
+        assert_eq!(paged_k, ds, "paged knnv read must match the source");
+
+        // Row-level equivalence on a random sample (checks both the
+        // chunk decoding and the per-record header handling).
+        for _ in 0..20 {
+            let i = rng.gen_range(n);
+            assert_eq!(paged_f.vector(i), ds.vector(i), "row {i}");
+            assert_eq!(paged_k.vector(i), ds.vector(i), "row {i}");
+        }
+
+        // cross_l2 over gathered blocks must be identical regardless of
+        // backing (the engines only ever see &[f32] rows).
+        let nx = 1 + rng.gen_range(6);
+        let ny = 1 + rng.gen_range(6);
+        let pick = |rng: &mut knn_merge::util::Rng, count: usize| -> Vec<usize> {
+            (0..count).map(|_| rng.gen_range(n)).collect()
+        };
+        let xs_idx = pick(rng, nx);
+        let ys_idx = pick(rng, ny);
+        let gather = |src: &Dataset, idx: &[usize]| -> Vec<f32> {
+            idx.iter().flat_map(|&i| src.vector(i).to_vec()).collect()
+        };
+        let a =
+            ScalarEngine.cross_l2_alloc(&gather(&ds, &xs_idx), &gather(&ds, &ys_idx), dim, nx, ny);
+        let b = ScalarEngine.cross_l2_alloc(
+            &gather(&paged_f, &xs_idx),
+            &gather(&paged_f, &ys_idx),
+            dim,
+            nx,
+            ny,
+        );
+        let c = ScalarEngine.cross_l2_alloc(
+            &gather(&paged_k, &xs_idx),
+            &gather(&paged_k, &ys_idx),
+            dim,
+            nx,
+            ny,
+        );
+        assert_eq!(a, b, "cross_l2 differs between memory and paged fvecs");
+        assert_eq!(a, c, "cross_l2 differs between memory and paged knnv");
+
+        // fvecs round-trip *through* the paged backend: write what the
+        // paged view exposes, read it back eagerly.
+        let rpath = tmpdir().join(format!("eq-{n}-{dim}-rt.fvecs"));
+        io::write_fvecs(&rpath, &paged_f).unwrap();
+        assert_eq!(io::read_fvecs(&rpath, None).unwrap(), ds);
+    });
+}
+
+#[test]
+fn paged_store_is_lazily_resident() {
+    // Big enough that the file spans many chunks (chunk target ~1 MiB).
+    let ds = DatasetFamily::Gist.generate(2_000, 3); // 960-dim: ~7.7 MB
+    let path = tmpdir().join("lazy.knnv");
+    io::write_knnv(&path, &ds).unwrap();
+    let store = Arc::new(VectorStore::open_paged(&path, PagedFormat::Knnv, None).unwrap());
+    assert_eq!(store.resident_bytes(), 0);
+    let view = Dataset::from_store(Arc::clone(&store));
+    // Touch only the first and last row: two chunks resident, not all.
+    let _ = view.vector(0);
+    let _ = view.vector(ds.len() - 1);
+    let resident = store.resident_bytes();
+    let full = view.payload_bytes();
+    assert!(resident > 0, "touched rows must be resident");
+    assert!(
+        resident <= full / 2,
+        "partial access must not load the file: resident={resident} full={full}"
+    );
+    // Full scan converges to full residency and matches the source.
+    assert_eq!(view, ds);
+    assert_eq!(store.resident_bytes(), full);
+}
+
+#[test]
+fn zero_copy_views_share_one_allocation() {
+    let ds = DatasetFamily::Deep.generate(1_000, 5);
+    let parts = ds.split_contiguous(4);
+    for (p, _) in &parts {
+        assert!(p.shares_store(&ds));
+    }
+    // Adjacent re-concat is the same store; a subset is too.
+    let refs: Vec<&Dataset> = parts.iter().map(|(p, _)| p).collect();
+    let joined = Dataset::concat(&refs);
+    assert!(joined.shares_store(&ds));
+    let sub = ds.subset(&[1, 3, 5]);
+    assert!(sub.shares_store(&ds));
+    assert_eq!(sub.vector(2), ds.vector(5));
+}
