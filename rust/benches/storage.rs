@@ -18,7 +18,7 @@
 
 use knn_merge::config::RunConfig;
 use knn_merge::construction::NnDescentParams;
-use knn_merge::coordinator::{build_single_node, MergeStrategy};
+use knn_merge::coordinator::{build_out_of_core, build_single_node, MergeStrategy};
 use knn_merge::dataset::DatasetFamily;
 use knn_merge::eval::bench::{scaled, BenchReport, Row};
 use knn_merge::merge::MergeParams;
@@ -113,7 +113,7 @@ fn main() {
         let rows = 2048.min(n);
         let mut mt = MemTable::new(dim_ds.dim);
         for i in 0..rows {
-            mt.insert(dim_ds.vector(i), i as u32);
+            mt.insert(&dim_ds.vector(i), i as u32);
         }
         let (drained, alloc_bytes, _) = measured(|| mt.drain());
         // The drain moves the buffer: only view bookkeeping is allocated.
@@ -167,6 +167,61 @@ fn main() {
                     pn as f64 / secs.max(1e-9),
                 ),
         );
+    }
+
+    // --- out-of-core paging under a residency budget ---
+    // The acceptance trajectory for bounded residency: peak
+    // budget-tracked bytes, chunk faults/evictions, and modelled
+    // storage seconds at unbounded vs 1/2 vs 1/4 of the payload
+    // (p = 4: 1/2 is the paper's 2/p bound). Peak must track the
+    // budget, not the payload, and recall must not move.
+    {
+        let on = scaled(4_000);
+        let ds = DatasetFamily::Deep.generate(on, 9);
+        let opayload = ds.payload_bytes();
+        for (label, budget) in [
+            ("unbounded", 0u64),
+            ("half", opayload / 2),
+            ("quarter", opayload / 4),
+        ] {
+            let cfg = RunConfig {
+                parts: 4,
+                memory_budget: budget,
+                merge: MergeParams {
+                    k: 10,
+                    lambda: 10,
+                    ..Default::default()
+                },
+                nnd: NnDescentParams {
+                    k: 10,
+                    lambda: 10,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let t0 = Instant::now();
+            let (graph, ledger) = build_out_of_core(&ds, &cfg).expect("out-of-core build");
+            let secs = t0.elapsed().as_secs_f64();
+            graph.validate(true).unwrap();
+            report.push(
+                Row::new(format!("ooc_budget_{label}"))
+                    .col("n", on as f64)
+                    .col("budget_bytes", budget as f64)
+                    .col("peak_resident_bytes", ledger.peak_resident_bytes() as f64)
+                    .col(
+                        "peak_over_payload",
+                        ledger.peak_resident_bytes() as f64 / opayload as f64,
+                    )
+                    .col("chunk_faults", ledger.chunk_faults() as f64)
+                    .col("chunk_evictions", ledger.chunk_evictions() as f64)
+                    .col("fault_mb", ledger.fault_bytes() as f64 / 1e6)
+                    .col(
+                        "storage_model_secs",
+                        ledger.secs(knn_merge::metrics::Phase::Storage),
+                    )
+                    .col("wall_secs", secs),
+            );
+        }
     }
 
     report.finish();

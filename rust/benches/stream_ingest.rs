@@ -46,7 +46,7 @@ fn main() {
         let index = StreamingIndex::new(ds.dim, Metric::L2, cfg);
         let t0 = Instant::now();
         for i in 0..ds.len() {
-            index.insert(ds.vector(i));
+            index.insert(&ds.vector(i));
             index.tick();
         }
         index.flush();
@@ -56,7 +56,7 @@ fn main() {
         let mut results: Vec<Vec<u32>> = Vec::with_capacity(queries.len());
         for q in 0..queries.len() {
             let t = Instant::now();
-            let ids = index.search(queries.vector(q), topk);
+            let ids = index.search(&queries.vector(q), topk);
             lat.push(t.elapsed().as_secs_f64());
             results.push(ids);
         }

@@ -53,7 +53,7 @@ pub fn build(
     // Multiple assignment -> overlapping member lists.
     let mut members: Vec<Vec<usize>> = vec![Vec::new(); km.k];
     for i in 0..n {
-        for c in km.nearest_n(ds.vector(i), params.assignments) {
+        for c in km.nearest_n(&ds.vector(i), params.assignments) {
             members[c as usize].push(i);
         }
     }

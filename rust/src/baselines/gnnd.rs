@@ -61,7 +61,7 @@ pub fn build(ds: &Dataset, metric: Metric, params: GnndParams, engine: &dyn Dist
         let mut picked = 0usize;
         while picked < p.k {
             let j = rng.gen_range(n);
-            if j != i && graph.insert(i, j as u32, metric.distance(ds.vector(i), ds.vector(j)), true) {
+            if j != i && graph.insert(i, j as u32, metric.distance(&ds.vector(i), &ds.vector(j)), true) {
                 picked += 1;
             }
         }
@@ -137,11 +137,11 @@ pub fn build(ds: &Dataset, metric: Metric, params: GnndParams, engine: &dyn Dist
         for (t, (new_tile, all_tile)) in tiles.iter().enumerate() {
             for (r, &u) in new_tile.iter().enumerate() {
                 xs[(t * tx + r) * dim..(t * tx + r + 1) * dim]
-                    .copy_from_slice(ds.vector(u as usize));
+                    .copy_from_slice(&ds.vector(u as usize));
             }
             for (r, &v) in all_tile.iter().enumerate() {
                 ys[(t * ty + r) * dim..(t * ty + r + 1) * dim]
-                    .copy_from_slice(ds.vector(v as usize));
+                    .copy_from_slice(&ds.vector(v as usize));
             }
         }
         let mut out = vec![0.0f32; b * tx * ty];

@@ -133,7 +133,7 @@ impl IvfPq {
         let d = ds.dim;
         let m = self.params.m.min(d).max(1);
         let ksub = 1usize << self.params.nbits;
-        let probes = self.coarse.nearest_n(ds.vector(i), self.params.nprobe);
+        let probes = self.coarse.nearest_n(&ds.vector(i), self.params.nprobe);
         let mut list = NeighborList::new(k);
         for &p in &probes {
             // Query residual w.r.t. this probe centroid.
@@ -168,7 +168,7 @@ impl IvfPq {
             let cands = self.knn_of(ds, i, k * 2);
             let mut list = NeighborList::new(k);
             for id in cands {
-                let dist = l2_sq(ds.vector(i), ds.vector(id as usize));
+                let dist = l2_sq(&ds.vector(i), &ds.vector(id as usize));
                 list.insert(id, dist, false);
             }
             list

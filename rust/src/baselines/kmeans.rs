@@ -57,9 +57,9 @@ pub fn kmeans(ds: &Dataset, k: usize, iters: usize, seed: u64) -> KMeans {
     // --- k-means++ seeding ---
     let mut centroids = vec![0.0f32; k * d];
     let first = rng.gen_range(n);
-    centroids[..d].copy_from_slice(ds.vector(first));
+    centroids[..d].copy_from_slice(&ds.vector(first));
     let mut min_d: Vec<f32> = (0..n)
-        .map(|i| l2_sq(ds.vector(i), &centroids[..d]))
+        .map(|i| l2_sq(&ds.vector(i), &centroids[..d]))
         .collect();
     for c in 1..k {
         let total: f64 = min_d.iter().map(|&v| v as f64).sum();
@@ -77,9 +77,9 @@ pub fn kmeans(ds: &Dataset, k: usize, iters: usize, seed: u64) -> KMeans {
             }
             chosen
         };
-        centroids[c * d..(c + 1) * d].copy_from_slice(ds.vector(pick));
+        centroids[c * d..(c + 1) * d].copy_from_slice(&ds.vector(pick));
         for i in 0..n {
-            let dist = l2_sq(ds.vector(i), &centroids[c * d..(c + 1) * d]);
+            let dist = l2_sq(&ds.vector(i), &centroids[c * d..(c + 1) * d]);
             if dist < min_d[i] {
                 min_d[i] = dist;
             }
@@ -95,7 +95,7 @@ pub fn kmeans(ds: &Dataset, k: usize, iters: usize, seed: u64) -> KMeans {
             dim: d,
             assignment: Vec::new(),
         };
-        assignment = parallel_map(n, |i| model.nearest(ds.vector(i)));
+        assignment = parallel_map(n, |i| model.nearest(&ds.vector(i)));
         // Recompute means.
         let mut sums = vec![0.0f64; k * d];
         let mut counts = vec![0usize; k];
@@ -110,7 +110,7 @@ pub fn kmeans(ds: &Dataset, k: usize, iters: usize, seed: u64) -> KMeans {
             if counts[c] == 0 {
                 // Re-seed empty cluster on a random point.
                 let p = rng.gen_range(n);
-                centroids[c * d..(c + 1) * d].copy_from_slice(ds.vector(p));
+                centroids[c * d..(c + 1) * d].copy_from_slice(&ds.vector(p));
             } else {
                 for j in 0..d {
                     centroids[c * d + j] = (sums[c * d + j] / counts[c] as f64) as f32;
@@ -155,11 +155,11 @@ mod tests {
     fn nearest_n_sorted_and_distinct() {
         let ds = two_blob_dataset();
         let km = kmeans(&ds, 4, 5, 3);
-        let near = km.nearest_n(ds.vector(0), 3);
+        let near = km.nearest_n(&ds.vector(0), 3);
         assert_eq!(near.len(), 3);
         let set: std::collections::HashSet<_> = near.iter().collect();
         assert_eq!(set.len(), 3);
-        assert_eq!(near[0], km.nearest(ds.vector(0)));
+        assert_eq!(near[0], km.nearest(&ds.vector(0)));
     }
 
     #[test]

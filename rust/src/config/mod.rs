@@ -210,6 +210,10 @@ pub struct RunConfig {
     pub storage_bps: f64,
     /// Scratch directory for out-of-core spills.
     pub scratch_dir: String,
+    /// Residency budget (bytes) for everything the out-of-core mode
+    /// pages back in — vector chunks and graph blocks alike. 0 means
+    /// unbounded. The paper's Sec. IV bound is ~2/p of the dataset.
+    pub memory_budget: u64,
     /// Dataset seed.
     pub seed: u64,
     /// Online streaming subsystem parameters.
@@ -232,6 +236,7 @@ impl Default for RunConfig {
                 .join("knn-merge-scratch")
                 .to_string_lossy()
                 .to_string(),
+            memory_budget: 0,
             seed: 42,
             stream: StreamConfig::default(),
         }
@@ -290,6 +295,9 @@ impl RunConfig {
         }
         if let Some(v) = map.get("storage.scratch_dir") {
             cfg.scratch_dir = v.to_string();
+        }
+        if let Some(v) = map.get_u64("storage.memory_budget_mib")? {
+            cfg.memory_budget = v << 20;
         }
         // The [merge] keys drive compaction too; [stream] keys override
         // the subsystem's own knobs.
@@ -410,5 +418,13 @@ ef = 96
         let cfg = RunConfig::default();
         assert!((cfg.bandwidth_bps - 1e9).abs() < 1.0, "1000 Mbps default");
         assert_eq!(cfg.parts, 3);
+        assert_eq!(cfg.memory_budget, 0, "unbounded residency by default");
+    }
+
+    #[test]
+    fn memory_budget_parses_in_mib() {
+        let map = ConfigMap::parse("[storage]\nmemory_budget_mib = 64").unwrap();
+        let cfg = RunConfig::from_map(&map).unwrap();
+        assert_eq!(cfg.memory_budget, 64 << 20);
     }
 }

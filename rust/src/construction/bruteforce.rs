@@ -9,7 +9,7 @@ use crate::graph::{KnnGraph, NeighborList};
 /// Exact k nearest neighbor ids of element `i` within `ds` (self
 /// excluded), ascending by distance.
 pub fn knn_of(ds: &Dataset, i: usize, k: usize, metric: Metric) -> Vec<u32> {
-    knn_of_inner(ds, ds.vector(i), Some(i), k, metric)
+    knn_of_inner(ds, &ds.vector(i), Some(i), k, metric)
 }
 
 /// Exact k nearest neighbors of an arbitrary query vector within `ds`.
@@ -23,7 +23,7 @@ fn knn_of_inner(ds: &Dataset, q: &[f32], skip: Option<usize>, k: usize, metric: 
         if skip == Some(j) {
             continue;
         }
-        let d = metric.distance(q, ds.vector(j));
+        let d = metric.distance(q, &ds.vector(j));
         if d < list.threshold() {
             list.insert(j as u32, d, false);
         }
@@ -41,7 +41,7 @@ pub fn build(ds: &Dataset, k: usize, metric: Metric) -> KnnGraph {
             if j == i {
                 continue;
             }
-            let d = metric.distance(q, ds.vector(j));
+            let d = metric.distance(&q, &ds.vector(j));
             if d < list.threshold() {
                 list.insert(j as u32, d, false);
             }

@@ -87,7 +87,7 @@ impl NnDescent {
             while picked < p.k {
                 let j = rng.gen_range(n);
                 if j != i {
-                    let d = metric.distance(ds.vector(i), ds.vector(j));
+                    let d = metric.distance(&ds.vector(i), &ds.vector(j));
                     if graph.insert(i, j as u32, d, true) {
                         picked += 1;
                     }
@@ -206,9 +206,9 @@ pub(crate) fn join_pair(
     }
     // Specialized L2 path (see merge::join — lets l2_sq inline, §Perf).
     let d = if metric == Metric::L2 {
-        crate::distance::l2_sq(ds.vector(u as usize), ds.vector(v as usize))
+        crate::distance::l2_sq(&ds.vector(u as usize), &ds.vector(v as usize))
     } else {
-        metric.distance(ds.vector(u as usize), ds.vector(v as usize))
+        metric.distance(&ds.vector(u as usize), &ds.vector(v as usize))
     };
     graph.insert(u as usize, v, d, true);
     graph.insert(v as usize, u, d, true);

@@ -14,33 +14,48 @@
 //!
 //! Residency: subsets are *views* — the initial split is zero-copy, and
 //! `get_subset` returns a demand-paged view over the spill file. The
-//! merge's pair space is a chained view (no materialized pair copy), so
-//! a round's joins fault rows in on demand and residency converges to
-//! at most the two subsets in play (~2/p of the dataset, Sec. IV's
-//! bound) rather than the old "deserialize both subsets, then copy
-//! them again into the concatenated buffer".
+//! merge's pair space is a chained view (no materialized pair copy),
+//! graphs are spilled in the row-blocked format and paged back block by
+//! block ([`crate::graph::paged::PagedKnnGraph`]), and **everything a
+//! round pages in charges one [`MemoryBudget`]**
+//! (`cfg.memory_budget`; 0 = unbounded). Under a budget the clock
+//! sweep evicts cold chunks mid-round, so `resident_bytes` stays
+//! bounded even though a full merge scan touches every row — the paper's
+//! ~2/p residency is a hard(ish) number, not the best case. Storage
+//! read time is billed per chunk fault at settle points (round
+//! boundaries), so the `CostLedger` reflects the bytes actually paged.
 
 use crate::config::RunConfig;
 use crate::construction::NnDescent;
+use crate::dataset::store::MemoryBudget;
 use crate::dataset::Dataset;
 use crate::distributed::storage::{ExternalStorage, StorageModel};
+use crate::graph::paged::PagedKnnGraph;
 use crate::graph::{IdRemap, IdSpan, KnnGraph, Neighbor, NeighborList};
 use crate::merge::{SupportLists, TwoWayMerge};
 use crate::metrics::{CostLedger, Phase};
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Build the k-NN graph of `ds` with only ~2/p of the vectors and
-/// graphs resident at any point. Returns the graph and the ledger
-/// (build/merge measured; storage modelled at `cfg.storage_bps`).
+/// graphs resident at any point — enforced by `cfg.memory_budget` when
+/// set. Returns the graph and the ledger (build/merge measured;
+/// storage modelled at `cfg.storage_bps`, billed per chunk fault).
 pub fn build_out_of_core(ds: &Dataset, cfg: &RunConfig) -> Result<(KnnGraph, CostLedger)> {
     let p = cfg.parts.max(2);
     let ledger = CostLedger::new();
-    let storage = ExternalStorage::create(
-        std::path::Path::new(&cfg.scratch_dir).join(format!("ooc-{}", std::process::id())),
+    let budget = match cfg.memory_budget {
+        0 => MemoryBudget::unbounded(),
+        bytes => MemoryBudget::bounded(bytes),
+    };
+    let storage = ExternalStorage::create_budgeted(
+        std::path::Path::new(&cfg.scratch_dir)
+            .join(format!("ooc-{}", crate::util::unique_scratch_suffix())),
         StorageModel {
             read_bps: cfg.storage_bps,
             write_bps: cfg.storage_bps * 0.93, // paper's 7450/6900 ratio
         },
+        Arc::clone(&budget),
     )?;
 
     // Phase 1: split (zero-copy views) + spill vectors (in a real
@@ -65,25 +80,27 @@ pub fn build_out_of_core(ds: &Dataset, cfg: &RunConfig) -> Result<(KnnGraph, Cos
     // the span in the file and never has to guess.
     let nnd = NnDescent::new(cfg.nnd);
     for s in 0..p {
-        let sub = storage.get_subset(s, &ledger)?;
+        let sub = storage.get_subset(s)?;
         let g = ledger.time(Phase::Build, || nnd.build(&sub, cfg.metric));
         let support = SupportLists::build(&g, cfg.merge.lambda);
         storage.put_graph(&format!("sub-{s}"), &g.rebase(spans[s].offset), &ledger)?;
         // Supports ride along as a graph-shaped file (ids only).
         storage.put_graph(&format!("sup-{s}"), &support_as_graph(&support), &ledger)?;
+        drop(sub);
+        storage.settle(&ledger); // bill this subset's build-time faults
     }
 
-    // Phase 3: pairwise merges, two subsets resident per round.
+    // Phase 3: pairwise merges, two subsets resident per round. Graphs
+    // are paged: supports stream block-wise into the sampler's working
+    // lists, and the stored subgraphs are MergeSorted *streaming*
+    // (block in -> merged block out), so no whole-graph deserialization
+    // happens in the round.
     for i in 0..p {
         for j in (i + 1)..p {
-            let ds_i = storage.get_subset(i, &ledger)?;
-            let ds_j = storage.get_subset(j, &ledger)?;
-            let g_i = storage.get_graph(&format!("sub-{i}"), &ledger)?;
-            let g_j = storage.get_graph(&format!("sub-{j}"), &ledger)?;
-            debug_assert_eq!(g_i.span(), spans[i]);
-            debug_assert_eq!(g_j.span(), spans[j]);
-            let s_i = graph_as_support(&storage.get_graph(&format!("sup-{i}"), &ledger)?);
-            let s_j = graph_as_support(&storage.get_graph(&format!("sup-{j}"), &ledger)?);
+            let ds_i = storage.get_subset(i)?;
+            let ds_j = storage.get_subset(j)?;
+            let s_i = paged_as_support(&storage.get_graph_paged(&format!("sup-{i}"))?);
+            let s_j = paged_as_support(&storage.get_graph_paged(&format!("sup-{j}"))?);
 
             let (n_i, n_j) = (ds_i.len(), ds_j.len());
             let (gi_new, gj_new) = ledger.time(Phase::Merge, || {
@@ -102,21 +119,37 @@ pub fn build_out_of_core(ds: &Dataset, cfg: &RunConfig) -> Result<(KnnGraph, Cos
             });
             // MergeSort into the stored subgraphs — all four graphs are
             // in global space, enforced by the span check inside
-            // merge_sorted.
-            let g_i = g_i.merge_sorted(&gi_new);
-            let g_j = g_j.merge_sorted(&gj_new);
-            storage.put_graph(&format!("sub-{i}"), &g_i, &ledger)?;
-            storage.put_graph(&format!("sub-{j}"), &g_j, &ledger)?;
+            // merge_graph.
+            storage.merge_graph(&format!("sub-{i}"), &gi_new, &ledger)?;
+            storage.merge_graph(&format!("sub-{j}"), &gj_new, &ledger)?;
+            drop((ds_i, ds_j));
+            storage.settle(&ledger); // bill the round's faults
         }
     }
 
     // Phase 4: assemble the global row blocks (spans checked to be
-    // consecutive).
-    let mut blocks = Vec::with_capacity(p);
+    // consecutive), streaming each spilled graph's blocks into the
+    // output so only the final graph plus the block in flight are
+    // resident.
+    let mut lists = Vec::with_capacity(ds.len());
+    let mut k = 0usize;
+    let mut next = 0u32;
     for s in 0..p {
-        blocks.push(storage.get_graph(&format!("sub-{s}"), &ledger)?);
+        let g = storage.get_graph_paged(&format!("sub-{s}"))?;
+        assert_eq!(
+            g.span().offset,
+            next,
+            "assemble expects consecutive spans (got {:?} at {next})",
+            g.span()
+        );
+        next = g.span().end();
+        k = k.max(g.k());
+        for b in 0..g.block_count() {
+            lists.extend_from_slice(&g.block(b).lists);
+        }
     }
-    let graph = KnnGraph::assemble(blocks);
+    let graph = KnnGraph::from_lists(lists, k);
+    storage.settle(&ledger);
     storage.cleanup()?;
     Ok((graph, ledger))
 }
@@ -142,10 +175,18 @@ fn support_as_graph(s: &SupportLists) -> KnnGraph {
     KnnGraph::from_lists(lists, k)
 }
 
-fn graph_as_support(g: &KnnGraph) -> SupportLists {
-    SupportLists {
-        lists: (0..g.len()).map(|i| g.ids(i)).collect(),
+/// Rebuild [`SupportLists`] from a paged support spill, block by block
+/// (the output lists are merge working state; the spill's blocks stay
+/// evictable).
+fn paged_as_support(g: &PagedKnnGraph) -> SupportLists {
+    let mut lists = Vec::with_capacity(g.len());
+    for b in 0..g.block_count() {
+        let block = g.block(b);
+        for list in &block.lists {
+            lists.push(list.iter().map(|nb| nb.id).collect());
+        }
     }
+    SupportLists { lists }
 }
 
 #[cfg(test)]
@@ -158,11 +199,9 @@ mod tests {
     use crate::graph::serial;
     use crate::merge::MergeParams;
 
-    #[test]
-    fn out_of_core_matches_in_memory_quality() {
-        let ds = DatasetFamily::Deep.generate(800, 1);
-        let cfg = RunConfig {
-            parts: 4,
+    fn small_cfg(parts: usize) -> RunConfig {
+        RunConfig {
+            parts,
             merge: MergeParams {
                 k: 10,
                 lambda: 10,
@@ -174,7 +213,13 @@ mod tests {
                 ..Default::default()
             },
             ..Default::default()
-        };
+        }
+    }
+
+    #[test]
+    fn out_of_core_matches_in_memory_quality() {
+        let ds = DatasetFamily::Deep.generate(800, 1);
+        let cfg = small_cfg(4);
         let (g, ledger) = build_out_of_core(&ds, &cfg).unwrap();
         assert_eq!(g.len(), 800);
         g.validate(true).unwrap();
@@ -185,6 +230,72 @@ mod tests {
         assert!(ledger.secs(Phase::Build) > 0.0);
         assert!(ledger.secs(Phase::Merge) > 0.0);
         assert!(ledger.bytes_stored() > 0);
+        assert!(ledger.chunk_faults() > 0, "reads are billed per fault");
+    }
+
+    /// The budget acceptance test: with ~2/p of the dataset bytes, the
+    /// full C(p,2) schedule completes, residency stays (near) bounded,
+    /// eviction actually happens, and recall matches the unbounded run.
+    #[test]
+    fn budgeted_build_bounds_residency_at_matching_recall() {
+        let ds = DatasetFamily::Deep.generate(800, 1);
+        let unbounded_cfg = small_cfg(4);
+        let (g0, _) = build_out_of_core(&ds, &unbounded_cfg).unwrap();
+
+        let mut cfg = small_cfg(4);
+        cfg.memory_budget = ds.payload_bytes() / 2; // 2/p for p = 4
+        let (g, ledger) = build_out_of_core(&ds, &cfg).unwrap();
+        assert_eq!(g.len(), 800);
+        g.validate(true).unwrap();
+
+        // Same quality as the unbounded run.
+        let truth = GroundTruth::sampled(&ds, 10, Metric::L2, 120, 2);
+        let r = graph_recall(&g, &truth, 10);
+        let r0 = graph_recall(&g0, &truth, 10);
+        assert!(r > 0.85, "budgeted recall@10 = {r}");
+        assert!((r - r0).abs() < 0.05, "budget changed recall: {r} vs {r0}");
+
+        // Residency respected the budget, modulo the transient slack of
+        // chunks concurrently mid-fault (parallel joins hold a pinned
+        // chunk per thread): allow 50% headroom, still strictly below
+        // both the full payload and what an unbounded round peaks at
+        // (2 subsets + graph blocks + supports). Eviction and
+        // re-faulting really happened.
+        let peak = ledger.peak_resident_bytes();
+        assert!(
+            peak <= cfg.memory_budget + cfg.memory_budget / 2,
+            "peak resident {peak} exceeded budget {} + slack",
+            cfg.memory_budget
+        );
+        assert!(
+            peak < ds.payload_bytes(),
+            "peak resident {peak} reached full payload {}",
+            ds.payload_bytes()
+        );
+        assert!(ledger.chunk_evictions() > 0, "budget must force evictions");
+        assert!(ledger.chunk_faults() > 0);
+    }
+
+    /// Regression: two out-of-core builds in the same process must not
+    /// clobber each other's spill directories (the old scheme keyed the
+    /// scratch dir on the pid alone).
+    #[test]
+    fn concurrent_builds_do_not_collide() {
+        let handles: Vec<_> = (0..2)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let n = 400 + t * 40;
+                    let ds = DatasetFamily::Sift.generate(n, 7 + t as u64);
+                    let cfg = small_cfg(3);
+                    let (g, _) = build_out_of_core(&ds, &cfg).unwrap();
+                    assert_eq!(g.len(), n);
+                    g.validate(true).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("concurrent out-of-core build panicked");
+        }
     }
 
     /// Regression for the old `ensure_global` double-shift hazard: a

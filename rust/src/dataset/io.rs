@@ -57,7 +57,7 @@ pub fn write_fvecs(path: &Path, ds: &Dataset) -> Result<()> {
     let mut w = BufWriter::new(f);
     for i in 0..ds.len() {
         w.write_all(&(ds.dim as i32).to_le_bytes())?;
-        for &v in ds.vector(i) {
+        for &v in ds.vector(i).iter() {
             w.write_all(&v.to_le_bytes())?;
         }
     }
@@ -166,7 +166,7 @@ pub fn write_knnv(path: &Path, ds: &Dataset) -> Result<()> {
     let mut row_bytes = Vec::with_capacity(ds.dim * 4);
     for i in 0..ds.len() {
         row_bytes.clear();
-        for &v in ds.vector(i) {
+        for &v in ds.vector(i).iter() {
             row_bytes.extend_from_slice(&v.to_le_bytes());
         }
         w.write_all(&row_bytes)?;

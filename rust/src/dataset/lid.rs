@@ -58,7 +58,7 @@ pub fn estimate_lid(ds: &Dataset, k: usize, samples: usize, seed: u64) -> f64 {
             if j == i {
                 continue;
             }
-            let d = l2_sq(q, ds.vector(j));
+            let d = l2_sq(&q, &ds.vector(j));
             if top.len() < k {
                 top.push(d);
                 if top.len() == k {

@@ -23,7 +23,7 @@ pub mod lid;
 pub mod store;
 
 pub use generator::{DatasetFamily, GeneratorConfig};
-pub use store::{PagedFormat, VectorStore};
+pub use store::{FaultDelta, MemoryBudget, PageOpts, PagedFormat, RowRef, VectorStore};
 
 use std::sync::Arc;
 
@@ -84,6 +84,21 @@ impl Dataset {
         )?)))
     }
 
+    /// Open a vector file as a demand-paged dataset under explicit
+    /// paging options (chunk granule + shared [`MemoryBudget`]) — the
+    /// entry point the out-of-core spill area uses so every reloaded
+    /// subset charges one budget.
+    pub fn open_paged_opts(
+        path: &std::path::Path,
+        format: PagedFormat,
+        limit: Option<usize>,
+        opts: PageOpts,
+    ) -> anyhow::Result<Dataset> {
+        Ok(Dataset::from_store(Arc::new(VectorStore::open_paged_opts(
+            path, format, limit, opts,
+        )?)))
+    }
+
     /// Open an `.fvecs` file as a demand-paged dataset.
     pub fn open_fvecs_paged(
         path: &std::path::Path,
@@ -139,9 +154,11 @@ impl Dataset {
         }
     }
 
-    /// Borrow vector `i`.
+    /// Borrow vector `i`. The returned guard dereferences to `&[f32]`;
+    /// for paged stores it pins the underlying chunk against eviction
+    /// while it lives (see [`store::RowRef`]).
     #[inline]
-    pub fn vector(&self, i: usize) -> &[f32] {
+    pub fn vector(&self, i: usize) -> RowRef<'_> {
         self.store.row(self.abs_row(i))
     }
 
@@ -230,7 +247,7 @@ impl Dataset {
         let mut data = Vec::with_capacity(total * dim);
         for p in parts {
             for i in 0..p.len() {
-                data.extend_from_slice(p.vector(i));
+                data.extend_from_slice(&p.vector(i));
             }
         }
         Dataset::from_store(Arc::new(VectorStore::from_vec(data, dim)))
@@ -281,7 +298,7 @@ impl Dataset {
     pub fn to_vec(&self) -> Vec<f32> {
         let mut out = Vec::with_capacity(self.len() * self.dim);
         for i in 0..self.len() {
-            out.extend_from_slice(self.vector(i));
+            out.extend_from_slice(&self.vector(i));
         }
         out
     }

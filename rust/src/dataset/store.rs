@@ -11,24 +11,48 @@
 //!   in chunk by chunk on first touch. This is the mmap role of the
 //!   paper's out-of-core mode (Sec. IV): the vendored dependency set has
 //!   no `libc`/`memmap`, so paging is implemented with positioned reads
-//!   (`read_at`) into per-chunk `OnceLock` slots — untouched rows are
-//!   never resident, touched chunks are read exactly once and then
-//!   shared lock-free, mirroring OS page-cache behaviour;
+//!   (`read_at`) into an **evictable chunk cache** — untouched rows are
+//!   never resident, and under a [`MemoryBudget`] a clock (second
+//!   chance) sweep evicts cold chunks so residency stays bounded even
+//!   when a full-scan merge touches every row;
 //! - **chained** — row-ranges of other stores exposed as one store
 //!   ([`VectorStore::chained`]), the zero-copy pair/concat space of the
-//!   merge pipelines.
+//!   merge pipelines. A chain owns no chunks itself: reads dispatch to
+//!   the constituent stores, so when those stores share one budget the
+//!   chain cannot pin more than the budget either.
 //!
-//! Residency is observable through [`VectorStore::resident_bytes`] (the
-//! storage bench and the out-of-core docs rely on it).
+//! # Residency budget
+//!
+//! A [`MemoryBudget`] is shared by any number of chunk caches (vector
+//! stores *and* paged graphs — see `graph::paged`). Every fault charges
+//! the budget; when the charge would exceed the limit, a clock hand
+//! rotates over the member caches evicting chunks that are neither
+//! *referenced* (touched since the last sweep — the second chance) nor
+//! *pinned* (an outstanding [`RowRef`] still borrows them). Evicted
+//! chunks reload transparently on the next touch, so eviction is
+//! invisible to correctness — only to the fault counters.
+//!
+//! What pins a chunk: a live [`RowRef`] (or `graph::paged::ListRef`)
+//! holds an `Arc` to its chunk, and the sweep skips any chunk whose
+//! `Arc` is shared. Callers therefore bound the unevictable set by the
+//! rows they hold across an iteration — a handful in every loop in this
+//! crate. The budget is best-effort by design: residency can
+//! transiently exceed the limit by the chunks concurrent faulting
+//! threads are in the middle of loading, plus whatever is pinned.
+//!
+//! Residency is observable through [`VectorStore::resident_bytes`] and
+//! [`MemoryBudget::resident_bytes`] (the storage bench and the
+//! out-of-core acceptance tests rely on both).
 
 use anyhow::{bail, Context, Result};
 use std::fs::File;
+use std::ops::Deref;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, OnceLock};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Weak};
 
-/// Target in-memory size of one paged chunk (bytes of decoded f32s).
-const CHUNK_BYTES: usize = 1 << 20;
+/// Default target in-memory size of one paged chunk (decoded f32 bytes).
+pub const DEFAULT_CHUNK_BYTES: usize = 1 << 20;
 
 /// On-disk layout of a paged vector file.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,6 +63,472 @@ pub enum PagedFormat {
     Bvecs,
     /// Internal `.knnv`: 16-byte header, then flat row-major f32 rows.
     Knnv,
+}
+
+/// Paging knobs for [`VectorStore::open_paged_opts`].
+#[derive(Clone, Debug)]
+pub struct PageOpts {
+    /// Target decoded bytes per chunk (the eviction granule).
+    pub chunk_bytes: usize,
+    /// Residency budget charged by this store's faults (shared).
+    pub budget: Arc<MemoryBudget>,
+}
+
+impl Default for PageOpts {
+    fn default() -> Self {
+        PageOpts {
+            chunk_bytes: DEFAULT_CHUNK_BYTES,
+            budget: MemoryBudget::unbounded(),
+        }
+    }
+}
+
+/// Fault/eviction counters accumulated since the last drain — the
+/// bridge from the paging layer to the modelled `CostLedger` charge
+/// (`distributed::storage::ExternalStorage::settle`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultDelta {
+    /// Chunk faults (first loads and re-faults after eviction).
+    pub faults: u64,
+    /// Chunks evicted by the clock sweep.
+    pub evictions: u64,
+    /// On-disk bytes read by those faults (what a storage model bills).
+    pub io_bytes: u64,
+}
+
+/// A shared residency budget over any number of evictable chunk caches.
+///
+/// `limit == u64::MAX` means unbounded (counters still accumulate, the
+/// clock never runs). See the module docs for the eviction discipline.
+#[derive(Debug)]
+pub struct MemoryBudget {
+    limit: AtomicU64,
+    resident: AtomicU64,
+    peak_resident: AtomicU64,
+    faults: AtomicU64,
+    evictions: AtomicU64,
+    /// Decoded bytes faulted in (cumulative; counts re-faults).
+    fault_bytes: AtomicU64,
+    /// On-disk bytes read by faults (cumulative; what gets billed).
+    fault_io_bytes: AtomicU64,
+    unbilled_faults: AtomicU64,
+    unbilled_evictions: AtomicU64,
+    unbilled_io_bytes: AtomicU64,
+    members: Mutex<Members>,
+}
+
+#[derive(Debug, Default)]
+struct Members {
+    caches: Vec<Weak<dyn Evictable>>,
+    /// Round-robin start position of the global clock over members.
+    hand: usize,
+}
+
+impl MemoryBudget {
+    /// A budget that never evicts (counters still accumulate).
+    pub fn unbounded() -> Arc<MemoryBudget> {
+        Self::with_limit(u64::MAX)
+    }
+
+    /// A budget bounded at `limit_bytes` of resident chunk payload.
+    pub fn bounded(limit_bytes: u64) -> Arc<MemoryBudget> {
+        Self::with_limit(limit_bytes)
+    }
+
+    fn with_limit(limit: u64) -> Arc<MemoryBudget> {
+        Arc::new(MemoryBudget {
+            limit: AtomicU64::new(limit),
+            resident: AtomicU64::new(0),
+            peak_resident: AtomicU64::new(0),
+            faults: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            fault_bytes: AtomicU64::new(0),
+            fault_io_bytes: AtomicU64::new(0),
+            unbilled_faults: AtomicU64::new(0),
+            unbilled_evictions: AtomicU64::new(0),
+            unbilled_io_bytes: AtomicU64::new(0),
+            members: Mutex::new(Members::default()),
+        })
+    }
+
+    /// The residency limit, or `None` when unbounded.
+    pub fn limit(&self) -> Option<u64> {
+        match self.limit.load(Ordering::Relaxed) {
+            u64::MAX => None,
+            v => Some(v),
+        }
+    }
+
+    /// Change the limit (`None` = unbounded). Takes effect on the next
+    /// fault; it does not synchronously evict.
+    pub fn set_limit(&self, limit: Option<u64>) {
+        self.limit
+            .store(limit.unwrap_or(u64::MAX), Ordering::Relaxed);
+    }
+
+    /// Decoded chunk bytes currently resident across all member caches.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`Self::resident_bytes`].
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.peak_resident.load(Ordering::Relaxed)
+    }
+
+    pub fn faults(&self) -> u64 {
+        self.faults.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative decoded bytes faulted in (counts re-faults).
+    pub fn fault_bytes(&self) -> u64 {
+        self.fault_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative on-disk bytes read by faults.
+    pub fn fault_io_bytes(&self) -> u64 {
+        self.fault_io_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Drain the not-yet-billed fault/eviction counters (the cost-model
+    /// bridge: callers convert `io_bytes` to modelled storage seconds).
+    pub fn take_unbilled(&self) -> FaultDelta {
+        FaultDelta {
+            faults: self.unbilled_faults.swap(0, Ordering::Relaxed),
+            evictions: self.unbilled_evictions.swap(0, Ordering::Relaxed),
+            io_bytes: self.unbilled_io_bytes.swap(0, Ordering::Relaxed),
+        }
+    }
+
+    fn register(&self, cache: Weak<dyn Evictable>) {
+        let mut m = self.members.lock().unwrap();
+        m.caches.retain(|w| w.strong_count() > 0);
+        m.caches.push(cache);
+    }
+
+    /// Best-effort: evict until `incoming` more bytes would fit.
+    fn make_room(&self, incoming: u64) {
+        let limit = self.limit.load(Ordering::Relaxed);
+        if limit == u64::MAX {
+            return;
+        }
+        self.reclaim(limit.saturating_sub(incoming.min(limit)));
+    }
+
+    /// Rotate the clock over member caches until residency drops to
+    /// `target` or two full rotations make no progress (everything
+    /// pinned or re-referenced — give up, the overflow is the pinned
+    /// working set).
+    fn reclaim(&self, target: u64) {
+        // Two rounds give every chunk its second chance: the first
+        // clears reference bits, the second evicts what stayed cold.
+        for _round in 0..2 {
+            if self.resident.load(Ordering::Relaxed) <= target {
+                return;
+            }
+            let members: Vec<Arc<dyn Evictable>> = {
+                let mut m = self.members.lock().unwrap();
+                m.caches.retain(|w| w.strong_count() > 0);
+                let len = m.caches.len();
+                if len == 0 {
+                    return;
+                }
+                let start = m.hand % len;
+                m.hand = m.hand.wrapping_add(1);
+                (0..len)
+                    .filter_map(|i| m.caches[(start + i) % len].upgrade())
+                    .collect()
+            };
+            for cache in members {
+                let over = self
+                    .resident
+                    .load(Ordering::Relaxed)
+                    .saturating_sub(target);
+                if over == 0 {
+                    return;
+                }
+                cache.sweep(over);
+            }
+        }
+    }
+
+    fn on_fault(&self, resident_bytes: u64, io_bytes: u64) {
+        let now = self.resident.fetch_add(resident_bytes, Ordering::Relaxed) + resident_bytes;
+        self.peak_resident.fetch_max(now, Ordering::Relaxed);
+        self.faults.fetch_add(1, Ordering::Relaxed);
+        self.fault_bytes.fetch_add(resident_bytes, Ordering::Relaxed);
+        self.fault_io_bytes.fetch_add(io_bytes, Ordering::Relaxed);
+        self.unbilled_faults.fetch_add(1, Ordering::Relaxed);
+        self.unbilled_io_bytes.fetch_add(io_bytes, Ordering::Relaxed);
+    }
+
+    fn on_evict(&self, resident_bytes: u64) {
+        self.resident.fetch_sub(resident_bytes, Ordering::Relaxed);
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+        self.unbilled_evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A cache is being dropped with `resident_bytes` still cached:
+    /// release the charge without counting evictions.
+    fn on_release(&self, resident_bytes: u64) {
+        self.resident.fetch_sub(resident_bytes, Ordering::Relaxed);
+    }
+}
+
+/// A cache the budget's clock can sweep.
+pub(crate) trait Evictable: Send + Sync {
+    /// Advance this cache's clock hand at most one full rotation,
+    /// evicting unpinned, unreferenced chunks until `need` bytes are
+    /// freed. Returns the bytes actually freed.
+    fn sweep(&self, need: u64) -> u64;
+}
+
+/// Fixed-slot clock (second chance) cache of decoded chunks, charged
+/// against a shared [`MemoryBudget`]. Generic over the chunk payload so
+/// vector stores (`[f32]`) and paged graphs (`graph::paged::GraphBlock`)
+/// share one eviction discipline. Slots are individually locked so
+/// concurrent readers of different chunks never contend; the clock hand
+/// is an atomic cursor and the sweep uses `try_lock` (a slot busy with
+/// a reader is treated as referenced).
+pub(crate) struct ClockCache<T: ?Sized + Send + Sync + 'static> {
+    budget: Arc<MemoryBudget>,
+    resident: AtomicU64,
+    slots: Vec<Mutex<Slot<T>>>,
+    hand: AtomicUsize,
+}
+
+struct Slot<T: ?Sized> {
+    block: Option<CachedBlock<T>>,
+    /// Second-chance bit: set on access, cleared (then evicted) by the
+    /// sweep.
+    referenced: bool,
+}
+
+struct CachedBlock<T: ?Sized> {
+    data: Arc<T>,
+    bytes: u64,
+}
+
+impl<T: ?Sized + Send + Sync + 'static> ClockCache<T> {
+    pub(crate) fn new(slot_count: usize, budget: Arc<MemoryBudget>) -> Arc<ClockCache<T>> {
+        let cache = Arc::new(ClockCache {
+            budget: Arc::clone(&budget),
+            resident: AtomicU64::new(0),
+            slots: (0..slot_count)
+                .map(|_| {
+                    Mutex::new(Slot {
+                        block: None,
+                        referenced: false,
+                    })
+                })
+                .collect(),
+            hand: AtomicUsize::new(0),
+        });
+        let weak: Weak<dyn Evictable> = Arc::downgrade(&cache);
+        budget.register(weak);
+        cache
+    }
+
+    /// Look a chunk up, marking it referenced (and thereby surviving
+    /// the next sweep round).
+    pub(crate) fn get(&self, idx: usize) -> Option<Arc<T>> {
+        let mut guard = self.slots[idx].lock().unwrap();
+        let slot = &mut *guard;
+        let block = slot.block.as_ref()?;
+        let data = Arc::clone(&block.data);
+        slot.referenced = true;
+        Some(data)
+    }
+
+    /// Install a freshly loaded chunk, evicting beforehand so the
+    /// budget holds post-insert (best effort; see module docs). On a
+    /// lost load race the already-installed chunk wins and the caller's
+    /// copy is dropped uncharged.
+    pub(crate) fn insert(
+        &self,
+        idx: usize,
+        data: Arc<T>,
+        resident_bytes: u64,
+        io_bytes: u64,
+    ) -> Arc<T> {
+        self.budget.make_room(resident_bytes);
+        let mut guard = self.slots[idx].lock().unwrap();
+        let slot = &mut *guard;
+        if let Some(existing) = &slot.block {
+            let data = Arc::clone(&existing.data);
+            slot.referenced = true;
+            return data;
+        }
+        slot.block = Some(CachedBlock {
+            data: Arc::clone(&data),
+            bytes: resident_bytes,
+        });
+        slot.referenced = true;
+        drop(guard);
+        self.resident.fetch_add(resident_bytes, Ordering::Relaxed);
+        self.budget.on_fault(resident_bytes, io_bytes);
+        data
+    }
+
+    pub(crate) fn resident_bytes(&self) -> u64 {
+        self.resident.load(Ordering::Relaxed)
+    }
+}
+
+impl<T: ?Sized + Send + Sync + 'static> Evictable for ClockCache<T> {
+    fn sweep(&self, need: u64) -> u64 {
+        let n = self.slots.len();
+        if n == 0 {
+            return 0;
+        }
+        let mut freed = 0u64;
+        for _ in 0..n {
+            if freed >= need {
+                break;
+            }
+            let h = self.hand.fetch_add(1, Ordering::Relaxed) % n;
+            // A slot a reader holds right now is hot by definition.
+            let Ok(mut guard) = self.slots[h].try_lock() else {
+                continue;
+            };
+            let slot = &mut *guard;
+            let Some(block) = &slot.block else { continue };
+            if slot.referenced {
+                slot.referenced = false;
+            } else if Arc::strong_count(&block.data) == 1 {
+                // Only the slot holds it: no RowRef pins this chunk.
+                let bytes = block.bytes;
+                slot.block = None;
+                freed += bytes;
+                self.resident.fetch_sub(bytes, Ordering::Relaxed);
+                self.budget.on_evict(bytes);
+            }
+        }
+        freed
+    }
+}
+
+impl<T: ?Sized + Send + Sync + 'static> Drop for ClockCache<T> {
+    fn drop(&mut self) {
+        let r = self.resident.load(Ordering::Relaxed);
+        if r > 0 {
+            self.budget.on_release(r);
+        }
+    }
+}
+
+impl<T: ?Sized + Send + Sync + 'static> std::fmt::Debug for ClockCache<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ClockCache")
+            .field("resident_bytes", &self.resident_bytes())
+            .finish()
+    }
+}
+
+/// A borrowed row. Dereferences to `&[f32]`.
+///
+/// For in-memory and chained-memory backings this is a plain borrow;
+/// for paged backings it additionally holds the faulted chunk's `Arc`,
+/// *pinning* the chunk against eviction for the guard's lifetime — the
+/// reason eviction can never invalidate a row a caller still reads.
+pub struct RowRef<'a> {
+    repr: Repr<'a>,
+}
+
+enum Repr<'a> {
+    Borrowed(&'a [f32]),
+    Cached {
+        chunk: Arc<[f32]>,
+        start: usize,
+        len: usize,
+    },
+}
+
+impl<'a> RowRef<'a> {
+    #[inline]
+    pub(crate) fn borrowed(slice: &'a [f32]) -> RowRef<'a> {
+        RowRef {
+            repr: Repr::Borrowed(slice),
+        }
+    }
+
+    #[inline]
+    fn cached(chunk: Arc<[f32]>, start: usize, len: usize) -> RowRef<'a> {
+        RowRef {
+            repr: Repr::Cached { chunk, start, len },
+        }
+    }
+
+    /// The row's elements. (Also available through `Deref`.)
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        match &self.repr {
+            Repr::Borrowed(s) => s,
+            Repr::Cached { chunk, start, len } => &chunk[*start..*start + *len],
+        }
+    }
+}
+
+impl Deref for RowRef<'_> {
+    type Target = [f32];
+
+    #[inline]
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[f32]> for RowRef<'_> {
+    #[inline]
+    fn as_ref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for RowRef<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(self.as_slice(), f)
+    }
+}
+
+impl<'a, 'b> PartialEq<RowRef<'b>> for RowRef<'a> {
+    fn eq(&self, other: &RowRef<'b>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<[f32]> for RowRef<'_> {
+    fn eq(&self, other: &[f32]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<&[f32]> for RowRef<'_> {
+    fn eq(&self, other: &&[f32]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl PartialEq<Vec<f32>> for RowRef<'_> {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<const N: usize> PartialEq<[f32; N]> for RowRef<'_> {
+    fn eq(&self, other: &[f32; N]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl<const N: usize> PartialEq<&[f32; N]> for RowRef<'_> {
+    fn eq(&self, other: &&[f32; N]) -> bool {
+        self.as_slice() == *other
+    }
 }
 
 /// Immutable, shareable vector storage: one allocation (or one file)
@@ -69,7 +559,7 @@ struct ChainedStores {
 
 impl ChainedStores {
     #[inline]
-    fn row(&self, r: usize) -> &[f32] {
+    fn row(&self, r: usize) -> RowRef<'_> {
         // First block whose end bound exceeds r (one or two compares
         // for the pairwise merges that dominate).
         let p = self.bounds.partition_point(|&b| b <= r);
@@ -93,15 +583,27 @@ impl VectorStore {
         }
     }
 
-    /// Open a vector file for demand paging; `limit` caps the row count.
-    /// The header/geometry is validated eagerly; payload chunks are read
-    /// lazily on first row access.
+    /// Open a vector file for demand paging with default options (1 MiB
+    /// chunks, a private unbounded budget); `limit` caps the row count.
     pub fn open_paged(
         path: &Path,
         format: PagedFormat,
         limit: Option<usize>,
     ) -> Result<VectorStore> {
-        let paged = PagedVectors::open(path, format, limit)?;
+        Self::open_paged_opts(path, format, limit, PageOpts::default())
+    }
+
+    /// Open a vector file for demand paging under explicit paging
+    /// options (chunk granule + shared residency budget). The
+    /// header/geometry is validated eagerly; payload chunks are read
+    /// lazily on first row access and evicted under budget pressure.
+    pub fn open_paged_opts(
+        path: &Path,
+        format: PagedFormat,
+        limit: Option<usize>,
+        opts: PageOpts,
+    ) -> Result<VectorStore> {
+        let paged = PagedVectors::open(path, format, limit, opts)?;
         Ok(VectorStore {
             dim: paged.dim,
             backing: Backing::Paged(paged),
@@ -111,7 +613,7 @@ impl VectorStore {
     /// Chain row-ranges `(store, start_row, len)` of existing stores
     /// into one logical store without copying (all dims must agree).
     /// Reads dispatch to the underlying blocks, so paged blocks keep
-    /// faulting in on demand.
+    /// faulting in on demand — and keep evicting under their budgets.
     pub fn chained(blocks: Vec<(Arc<VectorStore>, usize, usize)>) -> VectorStore {
         assert!(!blocks.is_empty(), "cannot chain zero blocks");
         let dim = blocks[0].0.dim();
@@ -159,13 +661,15 @@ impl VectorStore {
     }
 
     /// Borrow row `r`. Paged backing faults the containing chunk in on
-    /// first touch; a read error at fault time panics (the moral
-    /// equivalent of an mmap `SIGBUS` — geometry was validated at open).
+    /// first touch (and re-faults transparently after eviction); the
+    /// returned guard pins the chunk while it lives. A read error at
+    /// fault time panics (the moral equivalent of an mmap `SIGBUS` —
+    /// geometry was validated at open).
     #[inline]
-    pub fn row(&self, r: usize) -> &[f32] {
+    pub fn row(&self, r: usize) -> RowRef<'_> {
         let d = self.dim;
         match &self.backing {
-            Backing::Mem(data) => &data[r * d..(r + 1) * d],
+            Backing::Mem(data) => RowRef::borrowed(&data[r * d..(r + 1) * d]),
             Backing::Paged(p) => p.row(r),
             Backing::Chain(c) => c.row(r),
         }
@@ -183,13 +687,13 @@ impl VectorStore {
 
     /// Bytes of vector payload currently resident in memory. For the
     /// in-memory backing this is the whole allocation; for the paged
-    /// backing it grows chunk by chunk as rows are touched; a chain
-    /// sums its distinct underlying stores (no double counting when
-    /// two blocks share a store).
+    /// backing it tracks the chunk cache (rising on faults, falling on
+    /// evictions); a chain sums its distinct underlying stores (no
+    /// double counting when two blocks share a store).
     pub fn resident_bytes(&self) -> u64 {
         match &self.backing {
             Backing::Mem(data) => (data.len() * std::mem::size_of::<f32>()) as u64,
-            Backing::Paged(p) => p.resident.load(Ordering::Relaxed),
+            Backing::Paged(p) => p.cache.resident_bytes(),
             Backing::Chain(c) => {
                 let mut seen: Vec<*const VectorStore> = Vec::new();
                 let mut total = 0u64;
@@ -206,9 +710,9 @@ impl VectorStore {
     }
 }
 
-/// A demand-paged vector file: rows decode into fixed-size chunks, each
-/// loaded at most once behind a `OnceLock` (concurrent readers of an
-/// unloaded chunk race benignly; one result wins, extras are dropped).
+/// A demand-paged vector file: rows decode into fixed-size chunks kept
+/// in an evictable [`ClockCache`] (concurrent readers of an unloaded
+/// chunk race benignly; one result wins, extras are dropped).
 struct PagedVectors {
     file: File,
     path: PathBuf,
@@ -221,8 +725,7 @@ struct PagedVectors {
     record_bytes: u64,
     /// Rows per chunk (last chunk may be short).
     chunk_rows: usize,
-    chunks: Vec<OnceLock<Box<[f32]>>>,
-    resident: AtomicU64,
+    cache: Arc<ClockCache<[f32]>>,
     #[cfg(not(unix))]
     io_lock: std::sync::Mutex<()>,
 }
@@ -235,13 +738,18 @@ impl std::fmt::Debug for PagedVectors {
             .field("dim", &self.dim)
             .field("rows", &self.rows)
             .field("chunk_rows", &self.chunk_rows)
-            .field("resident_bytes", &self.resident.load(Ordering::Relaxed))
+            .field("resident_bytes", &self.cache.resident_bytes())
             .finish()
     }
 }
 
 impl PagedVectors {
-    fn open(path: &Path, format: PagedFormat, limit: Option<usize>) -> Result<PagedVectors> {
+    fn open(
+        path: &Path,
+        format: PagedFormat,
+        limit: Option<usize>,
+        opts: PageOpts,
+    ) -> Result<PagedVectors> {
         let file = File::open(path).with_context(|| format!("open {path:?}"))?;
         let file_len = file.metadata()?.len();
 
@@ -310,7 +818,7 @@ impl PagedVectors {
             Some(l) => rows.min(l),
             None => rows,
         };
-        let chunk_rows = (CHUNK_BYTES / (dim * 4)).max(1);
+        let chunk_rows = (opts.chunk_bytes / (dim * 4)).max(1);
         let chunk_count = rows.div_ceil(chunk_rows);
         Ok(PagedVectors {
             file,
@@ -321,26 +829,33 @@ impl PagedVectors {
             base,
             record_bytes,
             chunk_rows,
-            chunks: (0..chunk_count).map(|_| OnceLock::new()).collect(),
-            resident: AtomicU64::new(0),
+            cache: ClockCache::new(chunk_count, opts.budget),
             #[cfg(not(unix))]
             io_lock: std::sync::Mutex::new(()),
         })
     }
 
     #[inline]
-    fn row(&self, r: usize) -> &[f32] {
+    fn row(&self, r: usize) -> RowRef<'_> {
         debug_assert!(r < self.rows, "row {r} out of range (rows={})", self.rows);
         let c = r / self.chunk_rows;
-        let chunk = self.chunks[c].get_or_init(|| self.load_chunk(c));
+        let chunk = match self.cache.get(c) {
+            Some(chunk) => chunk,
+            None => {
+                let (decoded, io_bytes) = self.load_chunk(c);
+                let resident = (decoded.len() * std::mem::size_of::<f32>()) as u64;
+                self.cache.insert(c, Arc::from(decoded), resident, io_bytes)
+            }
+        };
         let local = r - c * self.chunk_rows;
-        &chunk[local * self.dim..(local + 1) * self.dim]
+        RowRef::cached(chunk, local * self.dim, self.dim)
     }
 
-    /// Decode chunk `c` from disk. Panics on IO/format errors: geometry
-    /// was validated at open, so a failure here means the file changed
-    /// underneath us (mmap would deliver a SIGBUS for the same fault).
-    fn load_chunk(&self, c: usize) -> Box<[f32]> {
+    /// Decode chunk `c` from disk, returning the rows and the on-disk
+    /// bytes read. Panics on IO/format errors: geometry was validated
+    /// at open, so a failure here means the file changed underneath us
+    /// (mmap would deliver a SIGBUS for the same fault).
+    fn load_chunk(&self, c: usize) -> (Vec<f32>, u64) {
         let r0 = c * self.chunk_rows;
         let r1 = (r0 + self.chunk_rows).min(self.rows);
         let nrows = r1 - r0;
@@ -388,9 +903,7 @@ impl PagedVectors {
                 }
             }
         }
-        let decoded_bytes = (out.len() * std::mem::size_of::<f32>()) as u64;
-        self.resident.fetch_add(decoded_bytes, Ordering::Relaxed);
-        out.into_boxed_slice()
+        (out, byte_len)
     }
 
     #[cfg(unix)]
@@ -554,4 +1067,103 @@ mod tests {
         let half = paged.slice_rows(50..150);
         assert_eq!(half.vector(0), ds.vector(50));
     }
+
+    #[test]
+    fn full_scan_respects_budget_and_refaults() {
+        let ds = DatasetFamily::Sift.generate(400, 21); // 128-dim, ~205 KB
+        let path = tmpdir().join("budget.knnv");
+        io::write_knnv(&path, &ds).unwrap();
+        let row_bytes = (ds.dim * 4) as u64;
+        let chunk_bytes = 8 * row_bytes as usize; // 8 rows per chunk
+        let budget = MemoryBudget::bounded(4 * chunk_bytes as u64);
+        let st = VectorStore::open_paged_opts(
+            &path,
+            PagedFormat::Knnv,
+            None,
+            PageOpts {
+                chunk_bytes,
+                budget: Arc::clone(&budget),
+            },
+        )
+        .unwrap();
+        // Two full scans: every row matches the source while residency
+        // stays within the budget at every step (single-threaded, so no
+        // concurrent-fault slack applies).
+        for _scan in 0..2 {
+            for i in 0..st.len() {
+                assert_eq!(st.row(i), ds.vector(i), "row {i}");
+                assert!(
+                    st.resident_bytes() <= budget.limit().unwrap(),
+                    "resident {} exceeds budget {} at row {i}",
+                    st.resident_bytes(),
+                    budget.limit().unwrap()
+                );
+            }
+        }
+        assert!(budget.evictions() > 0, "a full scan under budget must evict");
+        assert!(
+            budget.faults() > (st.len() / 8) as u64,
+            "second scan must re-fault evicted chunks"
+        );
+        assert!(budget.peak_resident_bytes() <= budget.limit().unwrap());
+    }
+
+    #[test]
+    fn pinned_rows_survive_eviction_pressure() {
+        let ds = DatasetFamily::Sift.generate(200, 22);
+        let path = tmpdir().join("pin.knnv");
+        io::write_knnv(&path, &ds).unwrap();
+        let row_bytes = (ds.dim * 4) as usize;
+        let budget = MemoryBudget::bounded((4 * row_bytes) as u64);
+        let st = VectorStore::open_paged_opts(
+            &path,
+            PagedFormat::Knnv,
+            None,
+            PageOpts {
+                chunk_bytes: row_bytes, // one row per chunk
+                budget,
+            },
+        )
+        .unwrap();
+        let pinned = st.row(0);
+        let expect: Vec<f32> = pinned.to_vec();
+        // Hammer the rest of the file: far more than the budget worth
+        // of chunks fault in and evict around the pinned row.
+        for _ in 0..3 {
+            for i in 1..st.len() {
+                assert_eq!(st.row(i), ds.vector(i));
+            }
+        }
+        // The pinned guard still reads the original bytes.
+        assert_eq!(pinned.as_slice(), expect.as_slice());
+    }
+
+    #[test]
+    fn dropping_a_store_releases_its_budget_charge() {
+        let ds = DatasetFamily::Sift.generate(100, 23);
+        let path = tmpdir().join("release.knnv");
+        io::write_knnv(&path, &ds).unwrap();
+        let budget = MemoryBudget::bounded(1 << 20);
+        let st = VectorStore::open_paged_opts(
+            &path,
+            PagedFormat::Knnv,
+            None,
+            PageOpts {
+                chunk_bytes: 4096,
+                budget: Arc::clone(&budget),
+            },
+        )
+        .unwrap();
+        for i in 0..st.len() {
+            let _ = st.row(i);
+        }
+        assert!(budget.resident_bytes() > 0);
+        drop(st);
+        assert_eq!(
+            budget.resident_bytes(),
+            0,
+            "dropping the store must release its residency charge"
+        );
+    }
+
 }

@@ -7,12 +7,25 @@
 //! the container's tmpfs throughput would not be representative — while
 //! the real bytes are still written and read back (so correctness is
 //! exercised end to end).
+//!
+//! Reads are billed **per chunk fault**, not per file: `get_subset` and
+//! `get_graph_paged` return demand-paged views charged against the spill
+//! area's shared [`MemoryBudget`], and [`ExternalStorage::settle`]
+//! drains the accumulated fault bytes into the ledger at the modelled
+//! read throughput (plus the fault/eviction counters). A workload that
+//! touches 3 rows of a spilled subset is billed 3 chunks, not the file
+//! — and a full-scan merge is billed its re-faults, so the model stays
+//! honest under eviction. Writes are whole files and stay billed per
+//! file.
 
-use crate::dataset::{io, Dataset};
-use crate::graph::{serial, KnnGraph};
+use crate::dataset::store::{MemoryBudget, PageOpts, DEFAULT_CHUNK_BYTES};
+use crate::dataset::{io, Dataset, PagedFormat};
+use crate::graph::paged::PagedKnnGraph;
+use crate::graph::{serial, KnnGraph, NeighborList};
 use crate::metrics::{CostLedger, Phase};
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Modelled storage throughputs.
 #[derive(Clone, Copy, Debug)]
@@ -30,22 +43,60 @@ impl Default for StorageModel {
     }
 }
 
-/// A spill directory with byte-accounted, time-modelled IO.
+/// A spill directory with byte-accounted, time-modelled IO and a shared
+/// residency budget over everything it pages back in.
 pub struct ExternalStorage {
     dir: PathBuf,
     model: StorageModel,
+    budget: Arc<MemoryBudget>,
+    /// Eviction granule for paged reloads (vectors: decoded bytes;
+    /// graphs: serialized bytes per row block).
+    chunk_bytes: usize,
 }
 
 impl ExternalStorage {
-    /// Create (and clear) a spill area under `dir`.
+    /// Create (and clear) a spill area under `dir` with an unbounded
+    /// residency budget.
     pub fn create(dir: impl Into<PathBuf>, model: StorageModel) -> Result<ExternalStorage> {
+        Self::create_budgeted(dir, model, MemoryBudget::unbounded())
+    }
+
+    /// Create a spill area whose paged reloads all charge `budget`.
+    /// The chunk granule shrinks with the budget so small budgets still
+    /// hold several evictable chunks.
+    pub fn create_budgeted(
+        dir: impl Into<PathBuf>,
+        model: StorageModel,
+        budget: Arc<MemoryBudget>,
+    ) -> Result<ExternalStorage> {
         let dir = dir.into();
         std::fs::create_dir_all(&dir).with_context(|| format!("create {dir:?}"))?;
-        Ok(ExternalStorage { dir, model })
+        let chunk_bytes = match budget.limit() {
+            None => DEFAULT_CHUNK_BYTES,
+            // ~1/16th of the budget per chunk, clamped to [4 KiB, 1 MiB].
+            Some(limit) => ((limit / 16) as usize).clamp(4 << 10, DEFAULT_CHUNK_BYTES),
+        };
+        Ok(ExternalStorage {
+            dir,
+            model,
+            budget,
+            chunk_bytes,
+        })
+    }
+
+    /// The residency budget shared by everything this spill area pages.
+    pub fn budget(&self) -> &Arc<MemoryBudget> {
+        &self.budget
     }
 
     fn path(&self, name: &str) -> PathBuf {
         self.dir.join(name)
+    }
+
+    /// Rows per graph block such that a block's serialized size tracks
+    /// the chunk granule (`2 + 9k` bytes per full row).
+    fn graph_block_rows(&self, k: usize) -> usize {
+        (self.chunk_bytes / (2 + 9 * k.max(1))).max(1)
     }
 
     /// Spill a subset's vectors.
@@ -60,35 +111,102 @@ impl ExternalStorage {
 
     /// Load a subset's vectors back as a **demand-paged view**: the
     /// spill file's rows fault in chunk by chunk as the merge touches
-    /// them, instead of deserializing the whole subset copy up front.
-    /// The modelled read time stays conservative (full-file bytes at
-    /// sequential throughput — the paper's protocol reads both subsets
-    /// per round); what paging buys is residency, not modelled time.
-    pub fn get_subset(&self, s: usize, ledger: &CostLedger) -> Result<Dataset> {
+    /// them (and evict again under the shared budget), instead of
+    /// deserializing the whole subset copy up front. Nothing is billed
+    /// here — faults are, at [`ExternalStorage::settle`] time.
+    pub fn get_subset(&self, s: usize) -> Result<Dataset> {
         let path = self.path(&format!("subset-{s}.knnv"));
-        let bytes = std::fs::metadata(&path)?.len();
-        let ds = Dataset::open_knnv_paged(&path)?;
-        ledger.add(Phase::Storage, bytes as f64 / self.model.read_bps);
-        Ok(ds)
+        Dataset::open_paged_opts(
+            &path,
+            PagedFormat::Knnv,
+            None,
+            PageOpts {
+                chunk_bytes: self.chunk_bytes,
+                budget: Arc::clone(&self.budget),
+            },
+        )
     }
 
-    /// Spill a (sub)graph.
+    /// Spill a (sub)graph in the row-blocked format (so it can be paged
+    /// back in block by block).
     pub fn put_graph(&self, name: &str, g: &KnnGraph, ledger: &CostLedger) -> Result<()> {
         let path = self.path(&format!("graph-{name}.bin"));
-        serial::write_graph(&path, g)?;
-        let bytes = std::fs::metadata(&path)?.len();
+        let bytes = serial::write_graph_blocked(&path, g, self.graph_block_rows(g.k))?;
         ledger.add_bytes_stored(bytes);
         ledger.add(Phase::Storage, bytes as f64 / self.model.write_bps);
         Ok(())
     }
 
-    /// Load a (sub)graph back.
+    /// Load a (sub)graph back whole (deserialized). This is a full
+    /// sequential read, so it is billed per file, like a write.
     pub fn get_graph(&self, name: &str, ledger: &CostLedger) -> Result<KnnGraph> {
         let path = self.path(&format!("graph-{name}.bin"));
         let bytes = std::fs::metadata(&path)?.len();
         let g = serial::read_graph(&path)?;
         ledger.add(Phase::Storage, bytes as f64 / self.model.read_bps);
         Ok(g)
+    }
+
+    /// Open a spilled graph for block paging under the shared budget.
+    /// Billing happens per block fault, at settle time.
+    pub fn get_graph_paged(&self, name: &str) -> Result<PagedKnnGraph> {
+        PagedKnnGraph::open(
+            &self.path(&format!("graph-{name}.bin")),
+            Arc::clone(&self.budget),
+        )
+    }
+
+    /// MergeSort a stored subgraph with `update` *streaming*: the old
+    /// graph's row blocks fault in one at a time, merge against the
+    /// matching rows of `update`, and stream out to a replacement spill
+    /// file — the stored graph is never whole in memory. Both graphs
+    /// must be in the same (global) id space.
+    pub fn merge_graph(&self, name: &str, update: &KnnGraph, ledger: &CostLedger) -> Result<()> {
+        let old = self.get_graph_paged(name)?;
+        ensure!(
+            old.span() == update.span(),
+            "merge_graph across id spaces ({:?} vs {:?})",
+            old.span(),
+            update.span()
+        );
+        let k = old.k().max(update.k);
+        let tmp = self.path(&format!("graph-{name}.bin.tmp"));
+        let mut w =
+            serial::BlockedGraphWriter::create(&tmp, k, old.span(), self.graph_block_rows(k))?;
+        for b in 0..old.block_count() {
+            let block = old.block(b);
+            let base = b * old.block_rows();
+            // Merge the block's rows in parallel (the same fan-out the
+            // old whole-graph merge_sorted had, at block granularity),
+            // then stream them out in order.
+            let merged = crate::util::parallel_map(block.lists.len(), |off| {
+                NeighborList::merged(&block.lists[off], &update.lists[base + off], k)
+            });
+            for list in &merged {
+                w.push_list(list)?;
+            }
+        }
+        let bytes = w.finish()?;
+        drop(old); // release the mapping (and its residency) before the swap
+        std::fs::rename(&tmp, self.path(&format!("graph-{name}.bin")))?;
+        ledger.add_bytes_stored(bytes);
+        ledger.add(Phase::Storage, bytes as f64 / self.model.write_bps);
+        Ok(())
+    }
+
+    /// Drain the budget's fault/eviction counters into the ledger: the
+    /// faulted on-disk bytes are billed at the modelled read throughput,
+    /// the counters and residency high-water mark are recorded. Call at
+    /// phase/round boundaries (faults accrue while compute runs).
+    pub fn settle(&self, ledger: &CostLedger) {
+        let delta = self.budget.take_unbilled();
+        if delta.io_bytes > 0 {
+            ledger.add(Phase::Storage, delta.io_bytes as f64 / self.model.read_bps);
+        }
+        if delta.faults > 0 || delta.evictions > 0 {
+            ledger.add_chunk_faults(delta.faults, delta.evictions, delta.io_bytes);
+        }
+        ledger.note_peak_resident(self.budget.peak_resident_bytes());
     }
 
     /// Remove all spill files.
@@ -104,32 +222,58 @@ impl ExternalStorage {
 mod tests {
     use super::*;
     use crate::dataset::DatasetFamily;
+    use crate::util::unique_scratch_suffix;
 
     fn fixture(name: &str) -> ExternalStorage {
         let dir = std::env::temp_dir().join(format!(
             "knnmerge-storage-{name}-{}",
-            std::process::id()
+            unique_scratch_suffix()
         ));
         let _ = std::fs::remove_dir_all(&dir);
         ExternalStorage::create(dir, StorageModel::default()).unwrap()
     }
 
     #[test]
-    fn subset_roundtrip_with_modelled_time() {
+    fn subset_roundtrip_with_fault_billed_time() {
         let st = fixture("subset");
         let ledger = CostLedger::new();
         let ds = DatasetFamily::Sift.generate(100, 1);
         st.put_subset(0, &ds, &ledger).unwrap();
-        let back = st.get_subset(0, &ledger).unwrap();
+        let back = st.get_subset(0).unwrap();
         assert!(back.store().is_paged(), "spill reload must page, not copy");
         assert_eq!(back, ds);
+        st.settle(&ledger);
         assert!(ledger.secs(Phase::Storage) > 0.0);
         assert!(ledger.bytes_stored() > (100 * 128 * 4) as u64);
+        assert!(ledger.chunk_faults() > 0, "full compare must fault chunks");
         st.cleanup().unwrap();
     }
 
     #[test]
-    fn graph_roundtrip() {
+    fn sparse_touch_bills_less_than_the_file() {
+        let st = fixture("sparse");
+        let ledger = CostLedger::new();
+        let ds = DatasetFamily::Gist.generate(2_000, 2); // ~7.7 MB
+        st.put_subset(0, &ds, &ledger).unwrap();
+        let file_bytes = std::fs::metadata(st.dir.join("subset-0.knnv")).unwrap().len();
+        let written_secs = ledger.secs(Phase::Storage);
+        let back = st.get_subset(0).unwrap();
+        let _ = back.vector(0); // touch exactly one row -> one chunk
+        st.settle(&ledger);
+        let read_secs = ledger.secs(Phase::Storage) - written_secs;
+        let full_file_secs = file_bytes as f64 / StorageModel::default().read_bps;
+        assert!(read_secs > 0.0, "a fault must be billed");
+        assert!(
+            read_secs < full_file_secs,
+            "fault billing ({read_secs}) must be strictly below the old \
+             per-file charge ({full_file_secs})"
+        );
+        assert_eq!(ledger.chunk_faults(), 1);
+        st.cleanup().unwrap();
+    }
+
+    #[test]
+    fn graph_roundtrip_blocked_and_paged() {
         let st = fixture("graph");
         let ledger = CostLedger::new();
         let mut g = KnnGraph::empty(10, 4);
@@ -137,6 +281,30 @@ mod tests {
         st.put_graph("g0", &g, &ledger).unwrap();
         let back = st.get_graph("g0", &ledger).unwrap();
         assert_eq!(back, g);
+        let paged = st.get_graph_paged("g0").unwrap();
+        assert_eq!(paged.materialize(), g);
+        st.cleanup().unwrap();
+    }
+
+    #[test]
+    fn merge_graph_streams_the_update_in() {
+        let st = fixture("mergegraph");
+        let ledger = CostLedger::new();
+        let n = 300usize;
+        let mut base = KnnGraph::empty(n, 4);
+        let mut update = KnnGraph::empty(n, 4);
+        for i in 0..n {
+            base.lists[i].insert(((i + 1) % n) as u32, 0.9, false);
+            update.lists[i].insert(((i + 2) % n) as u32, 0.1, true);
+        }
+        let expect = base.merge_sorted(&update);
+        st.put_graph("m", &base, &ledger).unwrap();
+        st.merge_graph("m", &update, &ledger).unwrap();
+        let back = st.get_graph("m", &ledger).unwrap();
+        assert_eq!(back, expect);
+        // Span mismatches are rejected.
+        let shifted = update.rebase(n as u32);
+        assert!(st.merge_graph("m", &shifted, &ledger).is_err());
         st.cleanup().unwrap();
     }
 
@@ -145,6 +313,7 @@ mod tests {
         let st = fixture("missing");
         let ledger = CostLedger::new();
         assert!(st.get_graph("nope", &ledger).is_err());
+        assert!(st.get_graph_paged("nope").is_err());
         st.cleanup().unwrap();
     }
 }

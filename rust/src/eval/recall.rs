@@ -48,7 +48,7 @@ impl GroundTruth {
     /// each query within `base`.
     pub fn for_queries(base: &Dataset, queries: &Dataset, k: usize, metric: Metric) -> GroundTruth {
         let neighbors = crate::util::parallel_map(queries.len(), |q| {
-            bruteforce::knn_of_vector(base, queries.vector(q), k, metric)
+            bruteforce::knn_of_vector(base, &queries.vector(q), k, metric)
         });
         GroundTruth {
             ids: (0..queries.len()).collect(),
@@ -116,7 +116,7 @@ pub fn degrade_graph(
             }
         }
         for id in kept {
-            let d = metric.distance(ds.vector(i), ds.vector(id as usize));
+            let d = metric.distance(&ds.vector(i), &ds.vector(id as usize));
             out.lists[i].insert(id, d, true);
         }
     }

@@ -7,11 +7,13 @@
 
 pub mod id_space;
 pub mod neighbor;
+pub mod paged;
 pub mod serial;
 pub mod shared;
 
 pub use id_space::{IdRemap, IdSpan};
 pub use neighbor::{Neighbor, NeighborList};
+pub use paged::PagedKnnGraph;
 pub use shared::SharedGraph;
 
 /// An approximate k-NN graph: one bounded [`NeighborList`] per element.

@@ -1,0 +1,328 @@
+//! Demand-paged spilled graphs: the row-blocked (`KNG3`) spill format
+//! read back block by block through the same evictable clock cache the
+//! vector stores use (`dataset::store::ClockCache`), charged against
+//! the same shared [`MemoryBudget`].
+//!
+//! This is the graph half of the out-of-core residency story (Sec. IV):
+//! a pair round used to deserialize both stored subgraphs (and both
+//! support files) whole; with [`PagedKnnGraph`] a round only keeps the
+//! blocks it is currently merging resident, and the budget's clock can
+//! evict cold blocks — vector chunks and graph blocks compete for the
+//! same bytes. Block residency is charged at the block's *serialized*
+//! size (the same bytes the storage model bills per fault), a
+//! deliberate simplification documented in `rust/DESIGN.md`.
+
+use super::serial::{parse_blocked_header, BLOCKED_HEADER_BYTES};
+use super::{serial, IdSpan, KnnGraph, NeighborList};
+use crate::dataset::store::{ClockCache, MemoryBudget};
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::ops::Deref;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// One decoded row block of a spilled graph.
+pub struct GraphBlock {
+    /// Neighbor lists of the block's rows (file order).
+    pub lists: Vec<NeighborList>,
+}
+
+/// A spilled graph whose row blocks fault in on demand and evict under
+/// budget pressure. Geometry (header + offset table) is validated
+/// eagerly; block payloads load lazily.
+pub struct PagedKnnGraph {
+    file: File,
+    path: PathBuf,
+    k: usize,
+    span: IdSpan,
+    rows: usize,
+    block_rows: usize,
+    /// `nblocks + 1` absolute file offsets (last = end of payload).
+    offsets: Vec<u64>,
+    cache: Arc<ClockCache<GraphBlock>>,
+    #[cfg(not(unix))]
+    io_lock: std::sync::Mutex<()>,
+}
+
+impl std::fmt::Debug for PagedKnnGraph {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagedKnnGraph")
+            .field("path", &self.path)
+            .field("rows", &self.rows)
+            .field("k", &self.k)
+            .field("span", &self.span)
+            .field("block_rows", &self.block_rows)
+            .field("resident_bytes", &self.resident_bytes())
+            .finish()
+    }
+}
+
+impl PagedKnnGraph {
+    /// Open a `KNG3` file for block paging under `budget`.
+    pub fn open(path: &Path, budget: Arc<MemoryBudget>) -> Result<PagedKnnGraph> {
+        let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let file_len = file.metadata()?.len();
+        // Read the fixed header first to size the offset table, then
+        // the table itself, and hand both to the shared parser.
+        let mut head = vec![0u8; BLOCKED_HEADER_BYTES as usize];
+        read_exact_at_file(&file, &mut head, 0)
+            .with_context(|| format!("read header of {path:?}"))?;
+        // Validate the magic and bound the table size by the file's
+        // real length *before* allocating for it — a corrupt or
+        // wrong-format file must produce a clean error, not a
+        // multi-gigabyte allocation.
+        let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+        if magic != super::serial::BLOCKED_MAGIC {
+            bail!("bad blocked graph magic {magic:#x} in {path:?}");
+        }
+        let nblocks = u32::from_le_bytes(head[24..28].try_into().unwrap()) as usize;
+        let table_bytes = (nblocks + 1) * 8;
+        if BLOCKED_HEADER_BYTES + table_bytes as u64 > file_len {
+            bail!("blocked graph {path:?} is too short for its offset table");
+        }
+        let mut full = head;
+        full.resize(BLOCKED_HEADER_BYTES as usize + table_bytes, 0);
+        read_exact_at_file(
+            &file,
+            &mut full[BLOCKED_HEADER_BYTES as usize..],
+            BLOCKED_HEADER_BYTES,
+        )
+        .with_context(|| format!("read offset table of {path:?}"))?;
+        let header = parse_blocked_header(&full)?;
+        if *header.offsets.last().unwrap() > file_len {
+            bail!("blocked graph {path:?} is truncated");
+        }
+        let block_count = header.offsets.len() - 1;
+        Ok(PagedKnnGraph {
+            file,
+            path: path.to_path_buf(),
+            k: header.k,
+            span: IdSpan::new(header.span_offset, header.rows as u32),
+            rows: header.rows,
+            block_rows: header.block_rows,
+            offsets: header.offsets,
+            cache: ClockCache::new(block_count, budget),
+            #[cfg(not(unix))]
+            io_lock: std::sync::Mutex::new(()),
+        })
+    }
+
+    /// Number of rows (vertices).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Neighborhood capacity `k`.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The id space the spilled graph is expressed in.
+    #[inline]
+    pub fn span(&self) -> IdSpan {
+        self.span
+    }
+
+    /// Rows per block (last block may be short).
+    #[inline]
+    pub fn block_rows(&self) -> usize {
+        self.block_rows
+    }
+
+    #[inline]
+    pub fn block_count(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Serialized bytes of the blocks currently resident.
+    pub fn resident_bytes(&self) -> u64 {
+        self.cache.resident_bytes()
+    }
+
+    /// Fault block `b` in (or hit the cache). The returned `Arc` pins
+    /// the block against eviction while it lives.
+    pub fn block(&self, b: usize) -> Arc<GraphBlock> {
+        if let Some(block) = self.cache.get(b) {
+            return block;
+        }
+        let start = self.offsets[b];
+        let end = self.offsets[b + 1];
+        let mut raw = vec![0u8; (end - start) as usize];
+        self.read_exact_at(&mut raw, start).unwrap_or_else(|e| {
+            panic!("paged read of {:?} block {b} failed: {e}", self.path);
+        });
+        let rows_here = (self.rows - b * self.block_rows).min(self.block_rows);
+        let mut lists = Vec::with_capacity(rows_here);
+        serial::decode_rows(&raw, rows_here, self.k, &mut lists).unwrap_or_else(|e| {
+            panic!("decode of {:?} block {b} failed: {e}", self.path);
+        });
+        let io_bytes = raw.len() as u64;
+        self.cache
+            .insert(b, Arc::new(GraphBlock { lists }), io_bytes, io_bytes)
+    }
+
+    /// The neighbor list of `row` (graph-local row index). The guard
+    /// pins the containing block while it lives.
+    pub fn list(&self, row: usize) -> ListRef {
+        assert!(row < self.rows, "row {row} out of range ({})", self.rows);
+        let b = row / self.block_rows;
+        ListRef {
+            block: self.block(b),
+            idx: row - b * self.block_rows,
+        }
+    }
+
+    /// Deserialize the whole graph (tests and small final assemblies).
+    pub fn materialize(&self) -> KnnGraph {
+        let mut lists = Vec::with_capacity(self.rows);
+        for b in 0..self.block_count() {
+            lists.extend_from_slice(&self.block(b).lists);
+        }
+        KnnGraph::from_lists_spanned(lists, self.k, self.span)
+    }
+
+    #[cfg(unix)]
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+        read_exact_at_file(&self.file, buf, offset)
+    }
+
+    #[cfg(not(unix))]
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+        let _guard = self.io_lock.lock().unwrap();
+        read_exact_at_file(&self.file, buf, offset)
+    }
+}
+
+/// A borrowed neighbor list of a paged graph; pins its block.
+pub struct ListRef {
+    block: Arc<GraphBlock>,
+    idx: usize,
+}
+
+impl Deref for ListRef {
+    type Target = NeighborList;
+
+    #[inline]
+    fn deref(&self) -> &NeighborList {
+        &self.block.lists[self.idx]
+    }
+}
+
+#[cfg(unix)]
+fn read_exact_at_file(file: &File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, offset)
+}
+
+#[cfg(not(unix))]
+fn read_exact_at_file(file: &File, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+    use std::io::{Read, Seek, SeekFrom};
+    let mut f = file;
+    f.seek(SeekFrom::Start(offset))?;
+    f.read_exact(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Neighbor;
+
+    fn tmpdir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("knnmerge-gpaged-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_graph(n: usize, k: usize, offset: u32) -> KnnGraph {
+        let mut g = KnnGraph::empty(n, k);
+        for i in 0..n {
+            for j in 1..=k.min(3) {
+                g.lists[i].insert(((i + j) % n) as u32, j as f32 * 0.25, j % 2 == 0);
+            }
+        }
+        if offset > 0 {
+            g.rebase(offset)
+        } else {
+            g
+        }
+    }
+
+    #[test]
+    fn paged_graph_matches_full_read() {
+        let g = sample_graph(137, 6, 40);
+        let path = tmpdir().join("paged.bin");
+        serial::write_graph_blocked(&path, &g, 10).unwrap();
+        let paged = PagedKnnGraph::open(&path, MemoryBudget::unbounded()).unwrap();
+        assert_eq!(paged.len(), g.len());
+        assert_eq!(paged.k(), g.k);
+        assert_eq!(paged.span(), g.span());
+        assert_eq!(paged.block_count(), 14);
+        assert_eq!(paged.resident_bytes(), 0, "no block resident before touch");
+        // Row-level equality via list guards.
+        for i in 0..g.len() {
+            assert_eq!(*paged.list(i), g.lists[i], "row {i}");
+        }
+        assert_eq!(paged.materialize(), g);
+    }
+
+    #[test]
+    fn paged_graph_blocks_evict_under_budget() {
+        let g = sample_graph(400, 8, 0);
+        let path = tmpdir().join("evict.bin");
+        let total = serial::write_graph_blocked(&path, &g, 16).unwrap();
+        // Budget: roughly three blocks' worth of serialized bytes.
+        let per_block = total / 25;
+        let budget = MemoryBudget::bounded(3 * per_block);
+        let paged = PagedKnnGraph::open(&path, Arc::clone(&budget)).unwrap();
+        for _scan in 0..2 {
+            for b in 0..paged.block_count() {
+                let block = paged.block(b);
+                assert_eq!(block.lists.len(), (400 - b * 16).min(16));
+                assert!(
+                    paged.resident_bytes() <= budget.limit().unwrap(),
+                    "graph residency exceeded budget"
+                );
+            }
+        }
+        assert!(budget.evictions() > 0, "scan under budget must evict blocks");
+        // Evicted blocks refault to identical content.
+        assert_eq!(paged.materialize(), g);
+    }
+
+    #[test]
+    fn list_guard_pins_its_block() {
+        let g = sample_graph(64, 4, 0);
+        let path = tmpdir().join("pin.bin");
+        serial::write_graph_blocked(&path, &g, 4).unwrap();
+        let budget = MemoryBudget::bounded(64); // absurdly small: evict everything evictable
+        let paged = PagedKnnGraph::open(&path, budget).unwrap();
+        let held = paged.list(0);
+        let expect: Vec<Neighbor> = held.iter().copied().collect();
+        for i in 0..g.len() {
+            let _ = paged.list(i);
+        }
+        assert_eq!(
+            held.iter().copied().collect::<Vec<Neighbor>>(),
+            expect,
+            "pinned list must survive eviction pressure"
+        );
+    }
+
+    #[test]
+    fn open_rejects_flat_format_and_garbage() {
+        let g = sample_graph(10, 4, 0);
+        let flat = tmpdir().join("flat.bin");
+        serial::write_graph(&flat, &g).unwrap();
+        assert!(PagedKnnGraph::open(&flat, MemoryBudget::unbounded()).is_err());
+        let junk = tmpdir().join("junk.bin");
+        std::fs::write(&junk, b"short").unwrap();
+        assert!(PagedKnnGraph::open(&junk, MemoryBudget::unbounded()).is_err());
+    }
+}

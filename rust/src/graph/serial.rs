@@ -1,23 +1,35 @@
 //! Compact binary (de)serialization for graphs and the supporting-graph
 //! payloads exchanged by the distributed procedure (Alg. 3).
 //!
-//! Wire format (little-endian):
+//! Two wire formats (little-endian):
 //! ```text
 //! graph   := magic:u32  k:u32  span_offset:u32  n:u64  entry*n
 //! entry   := len:u16  (id:u32 dist:f32 flags:u8)*len
+//!
+//! blocked := magicB:u32 k:u32 span_offset:u32 n:u64
+//!            block_rows:u32 nblocks:u32
+//!            offset:u64 * (nblocks + 1)      -- absolute file offsets
+//!            entry*n                          -- grouped in row blocks
 //! ```
-//! The [`super::IdSpan`] travels with the graph (`span_offset`; the
-//! span length is `n`), so a deserialized graph knows which id space it
-//! is expressed in — external storage and network peers never have to
-//! guess whether ids are subset-local or global. The same bytes are
-//! written to external storage by the out-of-core mode, so payload
-//! sizes measured by the network model match what a real deployment
-//! would ship over MPI.
+//! The flat format (`KNG2`) is what network peers exchange; the
+//! *blocked* format (`KNG3`) adds a row-block offset table so external
+//! storage can fault individual blocks back in (`graph::paged`) instead
+//! of deserializing whole spilled subgraphs. Entries are byte-identical
+//! between the two. The [`super::IdSpan`] travels with both
+//! (`span_offset`; the span length is `n`), so a deserialized graph
+//! knows which id space it is expressed in — external storage and
+//! network peers never have to guess whether ids are subset-local or
+//! global.
 
 use super::{IdSpan, KnnGraph, Neighbor, NeighborList};
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
+use std::io::{Seek, SeekFrom, Write};
 
 const GRAPH_MAGIC: u32 = 0x4B_4E_47_32; // "KNG2"
+/// Magic of the row-blocked spill format.
+pub(crate) const BLOCKED_MAGIC: u32 = 0x4B_4E_47_33; // "KNG3"
+/// Fixed byte size of the blocked header (before the offset table).
+pub(crate) const BLOCKED_HEADER_BYTES: u64 = 28;
 
 /// Serialize a graph to bytes.
 pub fn graph_to_bytes(g: &KnnGraph) -> Vec<u8> {
@@ -87,15 +99,256 @@ pub fn graph_from_bytes(bytes: &[u8]) -> Result<KnnGraph> {
     ))
 }
 
-/// Write a graph to a file.
+/// Write a graph to a file (flat `KNG2` format).
 pub fn write_graph(path: &std::path::Path, g: &KnnGraph) -> Result<()> {
     std::fs::write(path, graph_to_bytes(g))?;
     Ok(())
 }
 
-/// Read a graph from a file.
+/// Read a graph from a file — accepts both the flat (`KNG2`) and the
+/// row-blocked (`KNG3`) formats, deserializing fully either way. Use
+/// [`crate::graph::paged::PagedKnnGraph::open`] to fault a blocked
+/// file in block by block instead.
 pub fn read_graph(path: &std::path::Path) -> Result<KnnGraph> {
-    graph_from_bytes(&std::fs::read(path)?)
+    let bytes = std::fs::read(path)?;
+    if bytes.len() >= 4 {
+        let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+        if magic == BLOCKED_MAGIC {
+            return blocked_graph_from_bytes(&bytes);
+        }
+    }
+    graph_from_bytes(&bytes)
+}
+
+/// Streaming writer for the row-blocked (`KNG3`) spill format: rows are
+/// pushed one at a time (the out-of-core merge never holds the whole
+/// output graph), grouped into `block_rows` blocks whose offsets are
+/// patched into the header table at [`BlockedGraphWriter::finish`].
+pub struct BlockedGraphWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    k: usize,
+    rows: usize,
+    block_rows: usize,
+    nblocks: usize,
+    offsets: Vec<u64>,
+    written_rows: usize,
+    pos: u64,
+    /// Reused per-row serialization scratch (push_list is per-row hot).
+    buf: Vec<u8>,
+}
+
+impl BlockedGraphWriter {
+    /// Start a blocked graph file for `span.len` rows of capacity `k`.
+    pub fn create(
+        path: &std::path::Path,
+        k: usize,
+        span: IdSpan,
+        block_rows: usize,
+    ) -> Result<BlockedGraphWriter> {
+        assert!(block_rows > 0, "block_rows must be positive");
+        let rows = span.len as usize;
+        let nblocks = rows.div_ceil(block_rows);
+        let file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        let mut w = std::io::BufWriter::new(file);
+        w.write_all(&BLOCKED_MAGIC.to_le_bytes())?;
+        w.write_all(&(k as u32).to_le_bytes())?;
+        w.write_all(&span.offset.to_le_bytes())?;
+        w.write_all(&(rows as u64).to_le_bytes())?;
+        w.write_all(&(block_rows as u32).to_le_bytes())?;
+        w.write_all(&(nblocks as u32).to_le_bytes())?;
+        // Placeholder offset table, patched in finish().
+        w.write_all(&vec![0u8; (nblocks + 1) * 8])?;
+        let pos = BLOCKED_HEADER_BYTES + (nblocks as u64 + 1) * 8;
+        Ok(BlockedGraphWriter {
+            file: w,
+            k,
+            rows,
+            block_rows,
+            nblocks,
+            offsets: Vec::with_capacity(nblocks + 1),
+            written_rows: 0,
+            pos,
+            buf: Vec::with_capacity(2 + k * 9),
+        })
+    }
+
+    /// Append the next row's neighbor list (row order is the file
+    /// order). Lists longer than the declared `k` are a logic error.
+    pub fn push_list(&mut self, list: &NeighborList) -> Result<()> {
+        assert!(
+            self.written_rows < self.rows,
+            "blocked writer already holds all {} rows",
+            self.rows
+        );
+        assert!(list.len() <= self.k.max(1), "list exceeds declared k");
+        assert!(list.len() <= u16::MAX as usize);
+        if self.written_rows % self.block_rows == 0 {
+            self.offsets.push(self.pos);
+        }
+        self.buf.clear();
+        self.buf
+            .extend_from_slice(&(list.len() as u16).to_le_bytes());
+        for nb in list.iter() {
+            self.buf.extend_from_slice(&nb.id.to_le_bytes());
+            self.buf.extend_from_slice(&nb.dist.to_le_bytes());
+            self.buf.push(u8::from(nb.new));
+        }
+        self.file.write_all(&self.buf)?;
+        self.pos += self.buf.len() as u64;
+        self.written_rows += 1;
+        Ok(())
+    }
+
+    /// Patch the offset table and flush. Returns the final file size.
+    pub fn finish(mut self) -> Result<u64> {
+        assert_eq!(
+            self.written_rows, self.rows,
+            "blocked writer finished early ({} of {} rows)",
+            self.written_rows, self.rows
+        );
+        self.offsets.push(self.pos);
+        debug_assert_eq!(self.offsets.len(), self.nblocks + 1);
+        self.file.seek(SeekFrom::Start(BLOCKED_HEADER_BYTES))?;
+        for off in &self.offsets {
+            self.file.write_all(&off.to_le_bytes())?;
+        }
+        self.file.flush()?;
+        Ok(self.pos)
+    }
+}
+
+/// Write a graph in the row-blocked (`KNG3`) format.
+pub fn write_graph_blocked(
+    path: &std::path::Path,
+    g: &KnnGraph,
+    block_rows: usize,
+) -> Result<u64> {
+    let mut w = BlockedGraphWriter::create(path, g.k, g.span(), block_rows)?;
+    for list in &g.lists {
+        w.push_list(list)?;
+    }
+    w.finish()
+}
+
+/// Parse a whole row-blocked (`KNG3`) payload into a graph.
+pub(crate) fn blocked_graph_from_bytes(bytes: &[u8]) -> Result<KnnGraph> {
+    let head = parse_blocked_header(bytes)?;
+    let mut pos = head.offsets[0] as usize;
+    let mut lists = Vec::with_capacity(head.rows);
+    for b in 0..head.offsets.len() - 1 {
+        let end = head.offsets[b + 1] as usize;
+        if end > bytes.len() {
+            bail!("blocked graph offset table past end of file");
+        }
+        let rows_here = (head.rows - b * head.block_rows).min(head.block_rows);
+        decode_rows(&bytes[pos..end], rows_here, head.k, &mut lists)?;
+        pos = end;
+    }
+    if lists.len() != head.rows {
+        bail!(
+            "blocked graph holds {} rows, header says {}",
+            lists.len(),
+            head.rows
+        );
+    }
+    if pos != bytes.len() {
+        bail!("trailing bytes in blocked graph payload");
+    }
+    Ok(KnnGraph::from_lists_spanned(
+        lists,
+        head.k,
+        IdSpan::new(head.span_offset, head.rows as u32),
+    ))
+}
+
+/// Decode `rows` consecutive entries from `bytes` (one block's
+/// payload), appending to `out`. The block must be exactly consumed.
+pub(crate) fn decode_rows(
+    bytes: &[u8],
+    rows: usize,
+    k: usize,
+    out: &mut Vec<NeighborList>,
+) -> Result<()> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > bytes.len() {
+            bail!("truncated graph block at byte {}", *pos);
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    for _ in 0..rows {
+        let len = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+        let mut list = NeighborList::new(k);
+        for _ in 0..len {
+            let id = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+            let dist = f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+            let flags = take(&mut pos, 1)?[0];
+            list.push_unchecked(Neighbor {
+                id,
+                dist,
+                new: flags != 0,
+            });
+        }
+        out.push(list);
+    }
+    if pos != bytes.len() {
+        bail!("trailing bytes in graph block");
+    }
+    Ok(())
+}
+
+/// Parsed blocked-format header + offset table.
+pub(crate) struct BlockedHeader {
+    pub k: usize,
+    pub span_offset: u32,
+    pub rows: usize,
+    pub block_rows: usize,
+    /// `nblocks + 1` absolute file offsets (last = end of payload).
+    pub offsets: Vec<u64>,
+}
+
+/// Parse the blocked header from the file's leading bytes (callers
+/// must supply at least the header + offset table region).
+pub(crate) fn parse_blocked_header(bytes: &[u8]) -> Result<BlockedHeader> {
+    if bytes.len() < BLOCKED_HEADER_BYTES as usize {
+        bail!("blocked graph header truncated");
+    }
+    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    if magic != BLOCKED_MAGIC {
+        bail!("bad blocked graph magic {magic:#x}");
+    }
+    let k = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let span_offset = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    let rows = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+    let block_rows = u32::from_le_bytes(bytes[20..24].try_into().unwrap()) as usize;
+    let nblocks = u32::from_le_bytes(bytes[24..28].try_into().unwrap()) as usize;
+    if block_rows == 0 {
+        bail!("blocked graph has zero block_rows");
+    }
+    if nblocks != rows.div_ceil(block_rows) {
+        bail!("blocked graph block count mismatch");
+    }
+    let table_end = BLOCKED_HEADER_BYTES as usize + (nblocks + 1) * 8;
+    if bytes.len() < table_end {
+        bail!("blocked graph offset table truncated");
+    }
+    let mut offsets = Vec::with_capacity(nblocks + 1);
+    for i in 0..=nblocks {
+        let at = BLOCKED_HEADER_BYTES as usize + i * 8;
+        offsets.push(u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap()));
+    }
+    if offsets[0] != table_end as u64 || offsets.windows(2).any(|w| w[0] > w[1]) {
+        bail!("blocked graph offset table is not monotone from the header");
+    }
+    Ok(BlockedHeader {
+        k,
+        span_offset,
+        rows,
+        block_rows,
+        offsets,
+    })
 }
 
 #[cfg(test)]
@@ -149,6 +402,55 @@ mod tests {
         assert!(graph_from_bytes(&bytes).is_err());
         let g2 = graph_to_bytes(&g);
         assert!(graph_from_bytes(&g2[..g2.len() - 1]).is_err()); // truncated
+    }
+
+    #[test]
+    fn blocked_roundtrip_property() {
+        check_property("graph-blocked-roundtrip", 200, |rng| {
+            let g = random_graph(rng);
+            let block_rows = 1 + rng.gen_range(12);
+            let dir = std::env::temp_dir().join(format!(
+                "knnmerge-gser-blk-{}",
+                std::process::id()
+            ));
+            std::fs::create_dir_all(&dir).unwrap();
+            let path = dir.join(format!("blk-{}-{block_rows}.bin", g.len()));
+            let bytes = write_graph_blocked(&path, &g, block_rows).unwrap();
+            assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+            // read_graph sniffs the magic and reads the blocked format.
+            let back = read_graph(&path).unwrap();
+            assert_eq!(back, g);
+            assert_eq!(back.span(), g.span());
+        });
+    }
+
+    #[test]
+    fn blocked_preserves_global_span_and_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("knnmerge-gser-blk-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = crate::util::Rng::seeded(5);
+        let g = random_graph(&mut rng).rebase(500);
+        let path = dir.join("blk-span.bin");
+        write_graph_blocked(&path, &g, 7).unwrap();
+        let back = read_graph(&path).unwrap();
+        assert_eq!(back.span(), g.span());
+        assert_eq!(back, g);
+        // Truncation is detected.
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(blocked_graph_from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        assert!(blocked_graph_from_bytes(b"KNG3garbage").is_err());
+    }
+
+    #[test]
+    fn blocked_handles_empty_graph() {
+        let dir = std::env::temp_dir().join(format!("knnmerge-gser-blk-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blk-empty.bin");
+        let g = KnnGraph::empty(0, 4);
+        write_graph_blocked(&path, &g, 8).unwrap();
+        let back = read_graph(&path).unwrap();
+        assert_eq!(back.len(), 0);
+        assert_eq!(back.k, 4);
     }
 
     #[test]

@@ -52,7 +52,7 @@ pub fn robust_prune_opt(
         }
         // Occlusion check against every already-kept (closer) neighbor.
         let occluded = kept.iter().any(|&(a, _)| {
-            let d_ab = metric.distance(ds.vector(a as usize), ds.vector(b as usize));
+            let d_ab = metric.distance(&ds.vector(a as usize), &ds.vector(b as usize));
             alpha * d_ab < d_ib
         });
         if !occluded {
@@ -109,7 +109,7 @@ pub fn rediversify_opt(
     let adj = crate::util::parallel_map(g.len(), |i| {
         let mut cands: Vec<(u32, f32)> = g.adj[i]
             .iter()
-            .map(|&v| (v, metric.distance(ds.vector(i), ds.vector(v as usize))))
+            .map(|&v| (v, metric.distance(&ds.vector(i), &ds.vector(v as usize))))
             .collect();
         cands.sort_by(|a, b| (a.1, a.0).partial_cmp(&(b.1, b.0)).unwrap());
         cands.dedup_by_key(|c| c.0);
@@ -143,7 +143,7 @@ pub fn medoid(ds: &Dataset, metric: Metric) -> u32 {
     }
     let mut mean = vec![0.0f32; d];
     for i in 0..n {
-        for (m, &v) in mean.iter_mut().zip(ds.vector(i)) {
+        for (m, &v) in mean.iter_mut().zip(ds.vector(i).iter()) {
             *m += v;
         }
     }
@@ -152,7 +152,7 @@ pub fn medoid(ds: &Dataset, metric: Metric) -> u32 {
     }
     let mut best = (0u32, f32::INFINITY);
     for i in 0..n {
-        let dist = metric.distance(&mean, ds.vector(i));
+        let dist = metric.distance(&mean, &ds.vector(i));
         if dist < best.1 {
             best = (i as u32, dist);
         }

@@ -77,7 +77,7 @@ impl Hnsw {
             // Greedy descent through layers above l_i.
             let top = entry_level;
             for l in ((l_i + 1)..=top).rev() {
-                ep = greedy_step(ds, metric, &layers[l], ep, q);
+                ep = greedy_step(ds, metric, &layers[l], ep, &q);
             }
             // Insert at layers min(top, l_i)..0.
             for l in (0..=l_i.min(top)).rev() {
@@ -92,13 +92,13 @@ impl Hnsw {
                     metric,
                     &ig,
                     ep,
-                    q,
+                    &q,
                     params.ef_construction,
                     params.ef_construction,
                 );
                 let scored: Vec<(u32, f32)> = cands
                     .iter()
-                    .map(|&c| (c, metric.distance(q, ds.vector(c as usize))))
+                    .map(|&c| (c, metric.distance(&q, &ds.vector(c as usize))))
                     .collect();
                 let selected = robust_prune_opt(ds, metric, i, &scored, 1.0, cap, true);
                 if let Some(&best) = selected.first() {
@@ -116,8 +116,8 @@ impl Hnsw {
                                 (
                                     w,
                                     metric.distance(
-                                        ds.vector(v as usize),
-                                        ds.vector(w as usize),
+                                        &ds.vector(v as usize),
+                                        &ds.vector(w as usize),
                                     ),
                                 )
                             })
@@ -179,7 +179,7 @@ impl Hnsw {
                 .iter()
                 .map(|&v| Neighbor {
                     id: v,
-                    dist: metric.distance(ds.vector(i), ds.vector(v as usize)),
+                    dist: metric.distance(&ds.vector(i), &ds.vector(v as usize)),
                     new: true,
                 })
                 .collect();
@@ -202,11 +202,11 @@ fn greedy_step(
     mut cur: u32,
     q: &[f32],
 ) -> u32 {
-    let mut cur_d = metric.distance(q, ds.vector(cur as usize));
+    let mut cur_d = metric.distance(q, &ds.vector(cur as usize));
     loop {
         let mut improved = false;
         for &v in &layer[cur as usize] {
-            let d = metric.distance(q, ds.vector(v as usize));
+            let d = metric.distance(q, &ds.vector(v as usize));
             if d < cur_d {
                 cur = v;
                 cur_d = d;
@@ -232,7 +232,7 @@ mod tests {
         let queries = DatasetFamily::Deep.generate_queries(25, 1);
         let truth = GroundTruth::for_queries(&ds, &queries, 10, Metric::L2);
         let results: Vec<Vec<u32>> = (0..queries.len())
-            .map(|i| hnsw.search(&ds, Metric::L2, queries.vector(i), 10, 128))
+            .map(|i| hnsw.search(&ds, Metric::L2, &queries.vector(i), 10, 128))
             .collect();
         let r = search_recall(&results, &truth, 10);
         assert!(r > 0.9, "hnsw recall={r}");

@@ -91,7 +91,7 @@ impl IndexGraph {
         let lists = crate::util::parallel_map(self.len(), |i| {
             let mut list = crate::graph::NeighborList::new(k);
             for &v in &self.adj[i] {
-                let d = metric.distance(ds.vector(i), ds.vector(v as usize));
+                let d = metric.distance(&ds.vector(i), &ds.vector(v as usize));
                 list.insert(v, d, false);
             }
             list

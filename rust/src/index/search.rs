@@ -84,7 +84,7 @@ pub fn beam_search_from(
     let mut frontier = BinaryHeap::new(); // min-heap by distance
     let mut kept: BinaryHeap<Far> = BinaryHeap::new(); // max-heap, size <= ef
 
-    let d0 = metric.distance(query, ds.vector(entry as usize));
+    let d0 = metric.distance(query, &ds.vector(entry as usize));
     stats.dist_evals += 1;
     visited[entry as usize] = true;
     frontier.push(Near(d0, entry));
@@ -103,7 +103,7 @@ pub fn beam_search_from(
                 continue;
             }
             visited[vi] = true;
-            let dv = metric.distance(query, ds.vector(vi));
+            let dv = metric.distance(query, &ds.vector(vi));
             stats.dist_evals += 1;
             if kept.len() < ef {
                 kept.push(Far(dv, v));
@@ -135,7 +135,7 @@ pub fn run_queries(
     let mut results = Vec::with_capacity(queries.len());
     let mut total = SearchStats::default();
     for q in 0..queries.len() {
-        let (ids, stats) = beam_search(ds, metric, graph, queries.vector(q), topk, ef);
+        let (ids, stats) = beam_search(ds, metric, graph, &queries.vector(q), topk, ef);
         total.dist_evals += stats.dist_evals;
         total.hops += stats.hops;
         results.push(ids);
@@ -204,7 +204,7 @@ mod tests {
         let (ids, _) = beam_search(&ds, Metric::L2, &ig, &q, 8, 64);
         let dists: Vec<f32> = ids
             .iter()
-            .map(|&id| Metric::L2.distance(&q, ds.vector(id as usize)))
+            .map(|&id| Metric::L2.distance(&q, &ds.vector(id as usize)))
             .collect();
         for w in dists.windows(2) {
             assert!(w[0] <= w[1]);

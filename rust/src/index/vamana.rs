@@ -81,12 +81,12 @@ impl Vamana {
                     entry,
                 };
                 let (visited, _) =
-                    beam_search_from(ds, metric, &ig, entry, q, params.l, params.l);
+                    beam_search_from(ds, metric, &ig, entry, &q, params.l, params.l);
                 let mut pool: Vec<(u32, f32)> = visited
                     .into_iter()
                     .chain(adj[i].iter().copied())
                     .filter(|&v| v as usize != i)
-                    .map(|v| (v, metric.distance(q, ds.vector(v as usize))))
+                    .map(|v| (v, metric.distance(&q, &ds.vector(v as usize))))
                     .collect();
                 pool.sort_by(|a, b| (a.1, a.0).partial_cmp(&(b.1, b.0)).unwrap());
                 pool.dedup_by_key(|c| c.0);
@@ -104,8 +104,8 @@ impl Vamana {
                                     (
                                         w,
                                         metric.distance(
-                                            ds.vector(v as usize),
-                                            ds.vector(w as usize),
+                                            &ds.vector(v as usize),
+                                            &ds.vector(w as usize),
                                         ),
                                     )
                                 })
@@ -151,7 +151,7 @@ impl Vamana {
                 .iter()
                 .map(|&v| Neighbor {
                     id: v,
-                    dist: metric.distance(ds.vector(i), ds.vector(v as usize)),
+                    dist: metric.distance(&ds.vector(i), &ds.vector(v as usize)),
                     new: true,
                 })
                 .collect();
@@ -180,7 +180,7 @@ mod tests {
         let queries = DatasetFamily::Deep.generate_queries(25, 1);
         let truth = GroundTruth::for_queries(&ds, &queries, 10, Metric::L2);
         let results: Vec<Vec<u32>> = (0..queries.len())
-            .map(|i| vam.search(&ds, Metric::L2, queries.vector(i), 10, 128))
+            .map(|i| vam.search(&ds, Metric::L2, &queries.vector(i), 10, 128))
             .collect();
         let r = search_recall(&results, &truth, 10);
         assert!(r > 0.9, "vamana recall={r}");

@@ -46,6 +46,9 @@ COMMON OPTIONS:
   --strategy <two-way|multi-way>     merge strategy (build)
   --seed <seed>                      dataset seed
   --eval <samples>                   recall sample count (0 = skip)
+  --memory-budget <MiB>              out-of-core residency budget for
+                                     paged spills (0 = unbounded;
+                                     Sec. IV suggests ~2/p of the data)
 
 STREAM OPTIONS:
   --file <path.fvecs> [--limit <n>]  ingest real vectors instead of --family
@@ -84,6 +87,7 @@ fn build_config(args: &Args) -> Result<RunConfig> {
     cfg.merge.lambda = lambda;
     cfg.nnd.k = k;
     cfg.nnd.lambda = lambda;
+    cfg.memory_budget = args.get_u64("memory-budget", cfg.memory_budget >> 20)? << 20;
     Ok(cfg)
 }
 
@@ -173,8 +177,13 @@ fn run() -> Result<()> {
         }
         "out-of-core" => {
             let cfg = build_config(&args)?;
+            let budget_str = if cfg.memory_budget == 0 {
+                "unbounded".to_string()
+            } else {
+                format!("{:.0} MiB", cfg.memory_budget as f64 / (1u64 << 20) as f64)
+            };
             println!(
-                "out-of-core build: {} x {} in {} parts (scratch: {})",
+                "out-of-core build: {} x {} in {} parts (scratch: {}, budget: {budget_str})",
                 cfg.family.name(),
                 cfg.n,
                 cfg.parts,
@@ -188,6 +197,13 @@ fn run() -> Result<()> {
                 ledger.secs(Phase::Merge),
                 ledger.secs(Phase::Storage),
                 ledger.bytes_stored() as f64 / 1e6
+            );
+            println!(
+                "paging: {} faults ({:.1} MB), {} evictions, peak resident {:.1} MB",
+                ledger.chunk_faults(),
+                ledger.fault_bytes() as f64 / 1e6,
+                ledger.chunk_evictions(),
+                ledger.peak_resident_bytes() as f64 / 1e6
             );
             maybe_eval(&args, &ds, &graph, cfg.merge.k)?;
         }

@@ -46,7 +46,7 @@ impl<'a> JoinContext<'a> {
                     if u == v || !filter(u, v) {
                         continue;
                     }
-                    let d = crate::distance::l2_sq(xu, self.ds.vector(v as usize));
+                    let d = crate::distance::l2_sq(&xu, &self.ds.vector(v as usize));
                     self.graph.insert(u as usize, v, d, true);
                     self.graph.insert(v as usize, u, d, true);
                 }
@@ -59,7 +59,7 @@ impl<'a> JoinContext<'a> {
                 if u == v || !filter(u, v) {
                     continue;
                 }
-                let d = self.metric.distance(xu, self.ds.vector(v as usize));
+                let d = self.metric.distance(&xu, &self.ds.vector(v as usize));
                 self.graph.insert(u as usize, v, d, true);
                 self.graph.insert(v as usize, u, d, true);
             }
@@ -74,7 +74,7 @@ impl<'a> JoinContext<'a> {
                 if u == v || !filter(u, v) {
                     continue;
                 }
-                let d = self.metric.distance(xu, self.ds.vector(v as usize));
+                let d = self.metric.distance(&xu, &self.ds.vector(v as usize));
                 self.graph.insert(u as usize, v, d, true);
                 self.graph.insert(v as usize, u, d, true);
             }
@@ -145,11 +145,11 @@ impl<'a> BatchJoiner<'a> {
         for (t, blk) in self.blocks.iter().enumerate() {
             for (r, &u) in blk.us.iter().enumerate() {
                 xs[(t * tx + r) * dim..(t * tx + r + 1) * dim]
-                    .copy_from_slice(self.ctx.ds.vector(u as usize));
+                    .copy_from_slice(&self.ctx.ds.vector(u as usize));
             }
             for (r, &v) in blk.vs.iter().enumerate() {
                 ys[(t * ty + r) * dim..(t * ty + r + 1) * dim]
-                    .copy_from_slice(self.ctx.ds.vector(v as usize));
+                    .copy_from_slice(&self.ctx.ds.vector(v as usize));
             }
         }
         let mut out = vec![0.0f32; b * tx * ty];

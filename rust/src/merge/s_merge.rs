@@ -88,7 +88,7 @@ impl SMerge {
             while added < want && attempts < want * 20 {
                 attempts += 1;
                 let v = other_start + rng.gen_range(other_len);
-                let d = metric.distance(ds.vector(i), ds.vector(v));
+                let d = metric.distance(&ds.vector(i), &ds.vector(v));
                 if graph.insert(i, v as u32, d, true) {
                     added += 1;
                 }

@@ -58,6 +58,14 @@ struct Inner {
     secs: BTreeMap<Phase, f64>,
     bytes_sent: u64,
     bytes_stored: u64,
+    /// Paged-storage chunk faults (loads + re-faults after eviction).
+    chunk_faults: u64,
+    /// Chunks evicted by the residency budget's clock sweep.
+    chunk_evictions: u64,
+    /// On-disk bytes read by chunk faults (what Phase::Storage bills).
+    fault_bytes: u64,
+    /// High-water mark of budget-tracked residency (bytes).
+    peak_resident: u64,
 }
 
 impl CostLedger {
@@ -88,6 +96,40 @@ impl CostLedger {
     /// Record storage payload bytes.
     pub fn add_bytes_stored(&self, bytes: u64) {
         self.inner.lock().unwrap().bytes_stored += bytes;
+    }
+
+    /// Record paged-storage activity: chunk faults, evictions, and the
+    /// on-disk bytes those faults read (the modelled read time for them
+    /// is added separately via [`CostLedger::add`]).
+    pub fn add_chunk_faults(&self, faults: u64, evictions: u64, fault_bytes: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.chunk_faults += faults;
+        inner.chunk_evictions += evictions;
+        inner.fault_bytes += fault_bytes;
+    }
+
+    /// Record a residency high-water mark (keeps the maximum seen).
+    pub fn note_peak_resident(&self, bytes: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.peak_resident = inner.peak_resident.max(bytes);
+    }
+
+    pub fn chunk_faults(&self) -> u64 {
+        self.inner.lock().unwrap().chunk_faults
+    }
+
+    pub fn chunk_evictions(&self) -> u64 {
+        self.inner.lock().unwrap().chunk_evictions
+    }
+
+    /// On-disk bytes read by chunk faults.
+    pub fn fault_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().fault_bytes
+    }
+
+    /// High-water mark of budget-tracked residency.
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().peak_resident
     }
 
     pub fn secs(&self, phase: Phase) -> f64 {
@@ -124,6 +166,10 @@ impl CostLedger {
         }
         s.bytes_sent += o.bytes_sent;
         s.bytes_stored += o.bytes_stored;
+        s.chunk_faults += o.chunk_faults;
+        s.chunk_evictions += o.chunk_evictions;
+        s.fault_bytes += o.fault_bytes;
+        s.peak_resident = s.peak_resident.max(o.peak_resident);
     }
 }
 
@@ -170,5 +216,26 @@ mod tests {
         a.absorb(&b);
         assert_eq!(a.secs(Phase::Build), 3.0);
         assert_eq!(a.bytes_sent(), 100);
+    }
+
+    #[test]
+    fn fault_counters_accumulate_and_absorb() {
+        let a = CostLedger::new();
+        a.add_chunk_faults(3, 1, 4096);
+        a.add_chunk_faults(2, 0, 1024);
+        a.note_peak_resident(500);
+        a.note_peak_resident(300); // lower: must not regress the peak
+        assert_eq!(a.chunk_faults(), 5);
+        assert_eq!(a.chunk_evictions(), 1);
+        assert_eq!(a.fault_bytes(), 5120);
+        assert_eq!(a.peak_resident_bytes(), 500);
+        let b = CostLedger::new();
+        b.add_chunk_faults(1, 2, 100);
+        b.note_peak_resident(900);
+        a.absorb(&b);
+        assert_eq!(a.chunk_faults(), 6);
+        assert_eq!(a.chunk_evictions(), 3);
+        assert_eq!(a.fault_bytes(), 5220);
+        assert_eq!(a.peak_resident_bytes(), 900);
     }
 }

@@ -188,7 +188,7 @@ mod tests {
         // Search the fused index directly: exact-match queries must come
         // back first.
         for probe in [3usize, 211, 399] {
-            let hits = merged.search(Metric::L2, ds.vector(probe), 3, 64);
+            let hits = merged.search(Metric::L2, &ds.vector(probe), 3, 64);
             assert_eq!(hits[0].1, probe as u32, "probe {probe}");
         }
     }

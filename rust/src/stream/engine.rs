@@ -292,12 +292,12 @@ mod tests {
         let ds = DatasetFamily::Deep.generate(350, 21);
         let index = StreamingIndex::new(ds.dim, Metric::L2, small_cfg(8, 100));
         for i in 0..ds.len() {
-            index.insert(ds.vector(i));
+            index.insert(&ds.vector(i));
         }
         // 3 sealed segments + 50 in the memtable; exact-match queries
         // must surface from both regions.
         for probe in [0usize, 150, 320, 349] {
-            let hits = index.search_ef(ds.vector(probe), 1, 64);
+            let hits = index.search_ef(&ds.vector(probe), 1, 64);
             assert_eq!(hits[0].1 as usize, probe, "probe {probe}");
             assert!(hits[0].0 <= 1e-6);
         }
@@ -308,7 +308,7 @@ mod tests {
         let ds = DatasetFamily::Sift.generate(400, 22);
         let index = StreamingIndex::new(ds.dim, Metric::L2, small_cfg(6, 100));
         for i in 0..ds.len() {
-            index.insert(ds.vector(i));
+            index.insert(&ds.vector(i));
         }
         // 4 level-0 segments -> two L0 fuses, then one L1 fuse.
         let c1 = index.tick().unwrap();
@@ -339,7 +339,7 @@ mod tests {
         cfg.merge.delta = 2e-4; // run compaction merges to full convergence
         let index = StreamingIndex::new(ds.dim, Metric::L2, cfg);
         for i in 0..n {
-            index.insert(ds.vector(i));
+            index.insert(&ds.vector(i));
         }
         index.flush();
         index.compact_all();
@@ -372,7 +372,7 @@ mod tests {
             let index = StreamingIndex::new(ds.dim, Metric::L2, small_cfg(8, 40));
             let mut row_of_gid: Vec<usize> = Vec::with_capacity(n);
             for &row in &order {
-                let gid = index.insert(ds.vector(row));
+                let gid = index.insert(&ds.vector(row));
                 assert_eq!(gid as usize, row_of_gid.len());
                 row_of_gid.push(row);
             }
@@ -402,12 +402,12 @@ mod tests {
         cfg.max_degree = 12;
         let index = StreamingIndex::new(ds.dim, Metric::L2, cfg);
         for i in 0..ds.len() {
-            index.insert(ds.vector(i));
+            index.insert(&ds.vector(i));
         }
         index.flush();
         index.compact_all();
         for probe in [1usize, 250, 499] {
-            let ids = index.search(ds.vector(probe), 5);
+            let ids = index.search(&ds.vector(probe), 5);
             assert_eq!(ids[0] as usize, probe, "probe {probe}");
         }
     }
@@ -421,7 +421,7 @@ mod tests {
             let writer = Arc::clone(&index);
             let w = scope.spawn(move || {
                 for i in 0..ds.len() {
-                    writer.insert(ds.vector(i));
+                    writer.insert(&ds.vector(i));
                 }
             });
             let reader = Arc::clone(&index);

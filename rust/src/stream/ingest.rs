@@ -102,7 +102,7 @@ pub fn stream_ingest_into(
     let start = Instant::now();
     let mut rows = Vec::new();
     for i in 0..ds.len() {
-        index.insert(ds.vector(i));
+        index.insert(&ds.vector(i));
         if !opts.background_compaction {
             index.tick();
         }
@@ -167,7 +167,7 @@ fn measure(
     let results: Vec<Vec<u32>> = (0..queries.len())
         .map(|q| {
             index
-                .search_ef(queries.vector(q), opts.topk, opts.ef)
+                .search_ef(&queries.vector(q), opts.topk, opts.ef)
                 .into_iter()
                 .map(|(_, id)| id)
                 .collect()

@@ -88,11 +88,11 @@ mod tests {
         let ds = DatasetFamily::Sift.generate(120, 1);
         let mut mt = MemTable::new(ds.dim);
         for i in 0..ds.len() {
-            mt.insert(ds.vector(i), i as u32);
+            mt.insert(&ds.vector(i), i as u32);
         }
         let q = ds.vector(33);
-        let hits = mt.search(Metric::L2, q, 5);
-        let exact = bruteforce::knn_of_vector(&ds, q, 5, Metric::L2);
+        let hits = mt.search(Metric::L2, &q, 5);
+        let exact = bruteforce::knn_of_vector(&ds, &q, 5, Metric::L2);
         let got: Vec<u32> = hits.iter().map(|&(_, id)| id).collect();
         assert_eq!(got, exact);
         for w in hits.windows(2) {

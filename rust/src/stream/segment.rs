@@ -141,7 +141,7 @@ impl Segment {
                     beam_search_from(&self.data, metric, &self.index, entry, query, topk, ef);
                 ids.into_iter()
                     .map(|local| {
-                        let d = metric.distance(query, self.data.vector(local as usize));
+                        let d = metric.distance(query, &self.data.vector(local as usize));
                         (d, self.global_ids[local as usize])
                     })
                     .collect()
@@ -274,7 +274,7 @@ mod tests {
         let cfg = cfg_k(8);
         let gids: Vec<u32> = (0..250).map(|i| i * 2).collect(); // sparse ids
         let seg = Segment::seal(0, 0, ds.clone(), gids, Metric::L2, &cfg);
-        let hits = seg.search(Metric::L2, ds.vector(17), 5, 64);
+        let hits = seg.search(Metric::L2, &ds.vector(17), 5, 64);
         assert!(!hits.is_empty());
         // Exact match first, mapped through the sparse global ids.
         assert_eq!(hits[0].1, 34);

@@ -28,6 +28,20 @@ pub fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
 }
 
+/// A process-unique suffix for scratch/spill directories: pid plus a
+/// monotone in-process sequence number. Two concurrent out-of-core
+/// builds in one process (e.g. `cargo test` threads) must never share
+/// a spill directory — the pid alone does not separate them.
+pub fn unique_scratch_suffix() -> String {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static UNIQUE_SEQ: AtomicUsize = AtomicUsize::new(0);
+    format!(
+        "{}-{}",
+        std::process::id(),
+        UNIQUE_SEQ.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,9 +1,13 @@
 //! Property tests for the storage layer: the demand-paged file backing
 //! must be observationally identical to the in-memory backing — same
 //! rows, same distance results, same fvecs round-trips — while actually
-//! paging (partial residency on partial access).
+//! paging (partial residency on partial access), and *eviction must be
+//! invisible*: under a residency budget, evict-then-refault yields
+//! bit-identical vectors while `resident_bytes` stays bounded.
 
-use knn_merge::dataset::{io, Dataset, DatasetFamily, GeneratorConfig, PagedFormat, VectorStore};
+use knn_merge::dataset::{
+    io, Dataset, DatasetFamily, GeneratorConfig, MemoryBudget, PageOpts, PagedFormat, VectorStore,
+};
 use knn_merge::distance::{DistanceEngine, ScalarEngine};
 use knn_merge::util::proptest::check_property_cases;
 use std::sync::Arc;
@@ -113,6 +117,109 @@ fn paged_store_is_lazily_resident() {
     // Full scan converges to full residency and matches the source.
     assert_eq!(view, ds);
     assert_eq!(store.resident_bytes(), full);
+}
+
+#[test]
+fn property_evict_then_refault_is_bit_identical() {
+    // Random datasets, random tiny budgets and chunk granules, random
+    // access orders — every access under eviction pressure must return
+    // exactly the in-memory backing's bits, and residency must respect
+    // the budget at every step (single-threaded: no fault slack).
+    check_property_cases("evict-refault-identical", 72, 8, |rng| {
+        let n = 60 + rng.gen_range(300);
+        let dim = 4 + rng.gen_range(40);
+        let ds = GeneratorConfig {
+            n,
+            dim,
+            clusters: 3,
+            intrinsic_dim: dim.min(6),
+            noise_sigma: 0.05,
+            normalize: false,
+            nonnegative: false,
+            center_scale: 0.6,
+        }
+        .generate(rng.next_u64());
+        let path = tmpdir().join(format!("evict-{n}-{dim}.knnv"));
+        io::write_knnv(&path, &ds).unwrap();
+
+        let row_bytes = dim * 4;
+        let rows_per_chunk = 1 + rng.gen_range(7);
+        let chunk_bytes = rows_per_chunk * row_bytes;
+        let budget_chunks = 2 + rng.gen_range(4) as u64;
+        let budget = MemoryBudget::bounded(budget_chunks * chunk_bytes as u64);
+        let st = VectorStore::open_paged_opts(
+            &path,
+            PagedFormat::Knnv,
+            None,
+            PageOpts {
+                chunk_bytes,
+                budget: Arc::clone(&budget),
+            },
+        )
+        .unwrap();
+
+        // One full scan (forces evictions: budget << file), then random
+        // accesses, then a second full scan in reverse.
+        for i in 0..n {
+            assert_eq!(st.row(i), ds.vector(i), "scan row {i}");
+            assert!(st.resident_bytes() <= budget.limit().unwrap());
+        }
+        for _ in 0..60 {
+            let i = rng.gen_range(n);
+            assert_eq!(st.row(i), ds.vector(i), "random row {i}");
+            assert!(st.resident_bytes() <= budget.limit().unwrap());
+        }
+        for i in (0..n).rev() {
+            assert_eq!(st.row(i), ds.vector(i), "reverse row {i}");
+        }
+        assert!(
+            budget.evictions() > 0,
+            "budget {} over {} rows must evict",
+            budget.limit().unwrap(),
+            n
+        );
+    });
+}
+
+#[test]
+fn chained_view_under_one_budget_stays_bounded() {
+    // The merge pair space: two paged stores chained behind one view,
+    // both charging one budget — the chain cannot pin its constituents
+    // past the budget even when scanned end to end.
+    let ds = DatasetFamily::Sift.generate(600, 9);
+    let path = tmpdir().join("chain-budget.knnv");
+    io::write_knnv(&path, &ds).unwrap();
+    let row_bytes = (ds.dim * 4) as usize;
+    let chunk_bytes = 8 * row_bytes;
+    let budget = MemoryBudget::bounded(6 * chunk_bytes as u64);
+    let open = |b: &Arc<MemoryBudget>| {
+        Arc::new(
+            VectorStore::open_paged_opts(
+                &path,
+                PagedFormat::Knnv,
+                None,
+                PageOpts {
+                    chunk_bytes,
+                    budget: Arc::clone(b),
+                },
+            )
+            .unwrap(),
+        )
+    };
+    let a = open(&budget);
+    let b = open(&budget);
+    let chain = VectorStore::chained(vec![(a, 0, 600), (b, 0, 600)]);
+    for scan in 0..2 {
+        for i in 0..chain.len() {
+            assert_eq!(chain.row(i), ds.vector(i % 600), "scan {scan} row {i}");
+            assert!(
+                budget.resident_bytes() <= budget.limit().unwrap(),
+                "chain pinned past the budget at row {i}"
+            );
+        }
+    }
+    assert!(budget.evictions() > 0);
+    assert!(budget.peak_resident_bytes() <= budget.limit().unwrap());
 }
 
 #[test]
