@@ -1,0 +1,252 @@
+#!/usr/bin/env python3
+"""Static sanity sweep for containers without a Rust toolchain.
+
+Not a compiler — a tripwire for the error classes that have actually
+bitten written-but-not-compiled PRs in this repo:
+
+  1. delimiter balance per file (strings/chars/comments stripped),
+  2. `mod` declarations vs. files on disk (both directions),
+  3. `use crate::…` / `use knn_merge::…` path resolution against the
+     declared module tree and each module's `pub` item surface,
+  4. `pub use` re-export resolution,
+  5. Cargo.toml target paths exist.
+
+Exit code 0 = no findings. Anything found prints `FILE:LINE: message`
+and exits 1. Run from anywhere: paths resolve relative to the repo
+root (parent of scripts/).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+RUST = ROOT / "rust" / "src"
+
+findings: list[str] = []
+
+
+def report(path, line, msg):
+    findings.append(f"{path.relative_to(ROOT)}:{line}: {msg}")
+
+
+# ---------------------------------------------------------------- strip
+
+
+def strip_rust(text: str) -> str:
+    """Remove string/char literals and comments, preserving newlines."""
+    out = []
+    i, n = 0, len(text)
+    while i < n:
+        c = text[i]
+        two = text[i : i + 2]
+        if two == "//":
+            j = text.find("\n", i)
+            i = n if j < 0 else j
+        elif two == "/*":
+            depth, i = 1, i + 2
+            while i < n and depth:
+                if text[i : i + 2] == "/*":
+                    depth, i = depth + 1, i + 2
+                elif text[i : i + 2] == "*/":
+                    depth, i = depth - 1, i + 2
+                else:
+                    if text[i] == "\n":
+                        out.append("\n")
+                    i += 1
+        elif c == '"' or two == 'r"' or re.match(r'r#+"', text[i : i + 8] or ""):
+            if c == "r" or two == 'r"':
+                m = re.match(r'r(#*)"', text[i:])
+                hashes = m.group(1)
+                end = text.find('"' + hashes, i + len(m.group(0)))
+                seg = text[i : end + 1 + len(hashes)] if end >= 0 else text[i:]
+                out.append("\n" * seg.count("\n"))
+                i = n if end < 0 else end + 1 + len(hashes)
+            else:
+                j = i + 1
+                while j < n and text[j] != '"':
+                    j += 2 if text[j] == "\\" else 1
+                out.append("\n" * text[i:j].count("\n"))
+                i = j + 1
+        elif c == "'":
+            # char literal or lifetime; char is 'x' or '\x' (escape)
+            if i + 1 < n and text[i + 1] == "\\":
+                j = text.find("'", i + 2)
+                i = i + 2 if j < 0 else j + 1
+            elif i + 2 < n and text[i + 2] == "'":
+                i += 3
+            else:  # lifetime — keep the tick out, skip the ident
+                i += 1
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
+
+
+# ---------------------------------------------------------- 1. balance
+
+rust_files = sorted(RUST.rglob("*.rs")) + sorted(
+    (ROOT / "rust").glob("tests/*.rs")
+) + sorted((ROOT / "rust").glob("benches/*.rs")) + sorted(
+    ROOT.glob("examples/*.rs")
+)
+
+stripped_cache: dict[Path, str] = {}
+for f in rust_files:
+    text = stripped_cache[f] = strip_rust(f.read_text())
+    stack = []
+    pairs = {")": "(", "]": "[", "}": "{"}
+    line = 1
+    for ch in text:
+        if ch == "\n":
+            line += 1
+        elif ch in "([{":
+            stack.append((ch, line))
+        elif ch in ")]}":
+            if not stack or stack[-1][0] != pairs[ch]:
+                report(f, line, f"unbalanced '{ch}'")
+                stack = []
+                break
+            stack.pop()
+    if stack:
+        report(f, stack[-1][1], f"unclosed '{stack[-1][0]}'")
+
+# --------------------------------------------- 2. module tree coverage
+
+mod_tree: dict[str, Path] = {"": RUST / "lib.rs"}
+
+
+def walk(dir_path: Path, prefix: str, decl_file: Path):
+    text = stripped_cache.get(decl_file) or strip_rust(decl_file.read_text())
+    for m in re.finditer(r"^\s*(?:pub\s+)?mod\s+(\w+)\s*;", text, re.M):
+        name = m.group(1)
+        cand = [dir_path / f"{name}.rs", dir_path / name / "mod.rs"]
+        hit = next((c for c in cand if c.exists()), None)
+        if hit is None:
+            report(decl_file, text[: m.start()].count("\n") + 1,
+                   f"mod {name}: no file {cand[0].name} or {name}/mod.rs")
+            continue
+        key = f"{prefix}{name}"
+        mod_tree[key] = hit
+        walk(hit.parent if hit.name == "mod.rs" else dir_path / name,
+             key + "::", hit)
+
+
+walk(RUST, "", RUST / "lib.rs")
+
+declared_files = set(mod_tree.values())
+for f in sorted(RUST.rglob("*.rs")):
+    if f.name in ("lib.rs", "main.rs"):
+        continue
+    if f not in declared_files:
+        report(f, 1, "file exists but is not declared by any `mod`")
+
+# ----------------------------------- 3. public item surface per module
+
+ITEM_RE = re.compile(
+    r"^\s*pub(?:\s*\(.*?\))?\s+"
+    r"(?:unsafe\s+)?(?:async\s+)?"
+    r"(?:struct|enum|trait|fn|type|const|static|mod|union)\s+"
+    r"(\w+)",
+    re.M,
+)
+USE_DECL_RE = re.compile(r"^\s*(?:pub\s+)?use\s+([^;]+);", re.M)
+
+surface: dict[str, set[str]] = {}
+for key, path in mod_tree.items():
+    text = stripped_cache.get(path) or strip_rust(path.read_text())
+    items = set(ITEM_RE.findall(text))
+    # macro_rules! exports and re-exports land in the surface too
+    items |= set(re.findall(r"macro_rules!\s*(\w+)", text))
+    surface[key] = items
+
+
+def expand_use(clause: str) -> list[str]:
+    """`a::{b, c::d}` -> ['a::b', 'a::c::d'] (handles nesting, `as`)."""
+    clause = clause.strip()
+    m = re.match(r"^(.*?)\{(.*)\}$", clause, re.S)
+    if not m:
+        return [re.sub(r"\s+as\s+\w+$", "", clause).strip()]
+    head, body = m.group(1), m.group(2)
+    parts, depth, cur = [], 0, ""
+    for ch in body:
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append(cur)
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        parts.append(cur)
+    out = []
+    for p in parts:
+        out.extend(expand_use(head + p.strip()))
+    return out
+
+
+def resolve(path_str: str) -> bool:
+    """True when `crate::a::b::Item` resolves against the module tree.
+
+    A path resolves when its module prefix exists and the leaf is a
+    declared item, a re-export, a submodule, `self`, or `*`.
+    """
+    segs = [s.strip() for s in path_str.split("::")]
+    segs = [s for s in segs if s]
+    if not segs:
+        return True
+    leaf = segs[-1]
+    mods = segs[:-1]
+    mod_key = "::".join(mods)
+    if mod_key not in mod_tree:
+        return False
+    if leaf in ("self", "*"):
+        return True
+    if "::".join(segs) in mod_tree:  # leaf is itself a module
+        return True
+    if leaf in surface.get(mod_key, set()):
+        return True
+    # re-exports: `pub use x::y::Leaf;` inside the module
+    text = stripped_cache.get(mod_tree[mod_key]) or ""
+    for use in USE_DECL_RE.findall(text):
+        for full in expand_use(use):
+            if full.split("::")[-1] == leaf or full.endswith("::*"):
+                return True
+    return False
+
+
+for f in rust_files:
+    text = stripped_cache.get(f) or strip_rust(f.read_text())
+    for m in USE_DECL_RE.finditer(text):
+        for full in expand_use(m.group(1)):
+            full = full.strip()
+            if full.startswith("crate::"):
+                rel = full[len("crate::"):]
+            elif full.startswith("knn_merge::"):
+                rel = full[len("knn_merge::"):]
+            elif full.startswith("super::") or full.startswith("self::"):
+                continue  # needs position context; compiler territory
+            else:
+                continue  # std / external crates
+            if not resolve(rel):
+                report(f, text[: m.start()].count("\n") + 1,
+                       f"unresolved import `{full}`")
+
+# -------------------------------------------- 4. Cargo target paths
+
+cargo = (ROOT / "Cargo.toml").read_text()
+for m in re.finditer(r'path\s*=\s*"([^"]+)"', cargo):
+    if not (ROOT / m.group(1)).exists():
+        report(ROOT / "Cargo.toml", cargo[: m.start()].count("\n") + 1,
+               f"target path {m.group(1)} does not exist")
+
+# ------------------------------------------------------------- result
+
+if findings:
+    print("\n".join(findings))
+    print(f"\n{len(findings)} finding(s)")
+    sys.exit(1)
+print(f"static sweep clean: {len(rust_files)} files, "
+      f"{len(mod_tree)} modules, no findings")
