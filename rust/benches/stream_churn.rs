@@ -1,0 +1,171 @@
+//! Churn bench: QPS and recall while the index absorbs interleaved
+//! inserts *and deletes*, plus the seal-boundary ingest-stall metric
+//! (p99 single-insert latency) — inline seal vs. off-thread seal vs. a
+//! batch-rebuild baseline that reindexes from scratch at every
+//! segment's worth of arrivals.
+//!
+//! The off-thread row is the ISSUE acceptance: its insert p99 must not
+//! carry the seal's graph-build time, while recall and QPS match the
+//! inline row. The batch-rebuild row shows what the segment log buys:
+//! the same freshness forces the baseline to pay a full O(n) rebuild
+//! per segment of arrivals, so its stall grows with n while the
+//! stream's stays flat. Emits `results/stream_churn.json`.
+
+use knn_merge::config::StreamConfig;
+use knn_merge::construction::{NnDescent, NnDescentParams};
+use knn_merge::dataset::{Dataset, DatasetFamily};
+use knn_merge::distance::Metric;
+use knn_merge::eval::bench::{scaled, BenchReport, Row};
+use knn_merge::eval::recall::{search_recall, GroundTruth};
+use knn_merge::merge::MergeParams;
+use knn_merge::stream::{stream_ingest_into, IngestOptions, StreamingIndex};
+use std::sync::Arc;
+use std::time::Instant;
+
+const K: usize = 10;
+const TOPK: usize = 10;
+const EF: usize = 64;
+const DELETE_RATE: f64 = 0.2;
+
+fn main() {
+    let n = scaled(10_000);
+    let segment_size = (n / 10).max(256);
+    let ds = DatasetFamily::Sift.generate(n, 42);
+    let queries = DatasetFamily::Sift.generate_queries(100, 7);
+
+    let mut report = BenchReport::new("stream_churn");
+    report.note(format!(
+        "QPS under ingest+delete churn, sift-like n={n} dim={} k={K} lambda={K} \
+         segment_size={segment_size} delete_rate={DELETE_RATE}",
+        ds.dim
+    ));
+    report.note(
+        "insert_p99_ms is the seal-boundary ingest stall; offthread_seal must not pay \
+         the graph build there. batch_rebuild reindexes everything per segment of \
+         arrivals (same freshness, no segment log).",
+    );
+
+    for (label, seal_threads) in [("inline_seal", 0usize), ("offthread_seal", 2)] {
+        let cfg = StreamConfig {
+            segment_size,
+            seal_threads,
+            merge: MergeParams {
+                k: K,
+                lambda: K,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let index = Arc::new(StreamingIndex::new(ds.dim, Metric::L2, cfg));
+        let summary = stream_ingest_into(
+            &index,
+            &ds,
+            &queries,
+            &IngestOptions {
+                delete_rate: DELETE_RATE,
+                report_every: segment_size, // one measured batch per seal
+                topk: TOPK,
+                ef: EF,
+                ..Default::default()
+            },
+            &mut |_| {},
+        );
+        // QPS under churn: the mid-ingest batches, not the final
+        // (fully compacted) state.
+        let mid = &summary.rows[..summary.rows.len() - 1];
+        let mid_qps = mid.iter().map(|r| r.qps).sum::<f64>() / mid.len().max(1) as f64;
+        let mid_recall = mid.iter().map(|r| r.recall).sum::<f64>() / mid.len().max(1) as f64;
+        let st = index.stats();
+        report.push(
+            Row::new(label)
+                .col("inserts_per_s", summary.insert_rate)
+                .col("insert_p99_ms", summary.insert_p99_s * 1e3)
+                .col("qps_under_churn", mid_qps)
+                .col("recall_under_churn", mid_recall)
+                .col("final_recall", summary.final_recall)
+                .col("deleted", summary.deleted as f64)
+                .col("reclaimed", st.reclaimed as f64)
+                .col("compactions", summary.compactions as f64),
+        );
+    }
+
+    report.push(batch_rebuild_row(&ds, &queries, segment_size));
+    report.finish();
+}
+
+/// The no-segment-log baseline: vectors accumulate in a flat buffer;
+/// every `segment_size` arrivals (and once at the end) the whole live
+/// set is reindexed with batch NN-Descent. Deletes follow the same
+/// schedule as the streaming rows (rebuilds simply drop dead rows).
+/// Queries between rebuilds run on the latest finished graph.
+fn batch_rebuild_row(ds: &Dataset, queries: &Dataset, segment_size: usize) -> Row {
+    use knn_merge::util::Rng;
+    let n = ds.len();
+    let mut rng = Rng::seeded(IngestOptions::default().delete_seed);
+    let mut live: Vec<u32> = Vec::with_capacity(n);
+    let mut deleted = 0usize;
+    let mut insert_lat: Vec<f64> = Vec::with_capacity(n);
+    let mut rebuild_secs = 0.0f64;
+    let mut qps_rows: Vec<(f64, f64)> = Vec::new(); // (qps, recall)
+    let nnd = NnDescent::new(NnDescentParams {
+        k: K,
+        lambda: K,
+        ..Default::default()
+    });
+    let start = Instant::now();
+    for i in 0..n {
+        // "Insert" = append + (on the boundary) full rebuild: the
+        // arrival that lands on the boundary pays the whole rebuild —
+        // the stall the segment log exists to avoid.
+        let t = Instant::now();
+        live.push(i as u32);
+        let boundary = live.len() % segment_size == 0;
+        if boundary {
+            let rows: Vec<usize> = live.iter().map(|&g| g as usize).collect();
+            let sub = ds.subset(&rows);
+            let (graph, secs) = knn_merge::eval::bench::time(|| nnd.build(&sub, Metric::L2));
+            rebuild_secs += secs;
+            // Measure a query batch against the freshly rebuilt graph,
+            // searched the same way a stream segment is (undirected
+            // adjacency + beam search).
+            let index = knn_merge::index::IndexGraph::from_knn_undirected(&graph);
+            let truth = GroundTruth::for_queries(&sub, queries, TOPK, Metric::L2);
+            let tq = Instant::now();
+            let results: Vec<Vec<u32>> = (0..queries.len())
+                .map(|q| {
+                    let (ids, _) = knn_merge::index::search::beam_search(
+                        &sub,
+                        Metric::L2,
+                        &index,
+                        &queries.vector(q),
+                        TOPK,
+                        EF,
+                    );
+                    ids
+                })
+                .collect();
+            let qsecs = tq.elapsed().as_secs_f64();
+            qps_rows.push((
+                queries.len() as f64 / qsecs.max(1e-9),
+                search_recall(&results, &truth, TOPK),
+            ));
+        }
+        insert_lat.push(t.elapsed().as_secs_f64());
+        if live.len() > 1 && (rng.gen_range(1_000_000) as f64) < DELETE_RATE * 1e6 {
+            live.swap_remove(rng.gen_range(live.len()));
+            deleted += 1;
+        }
+    }
+    let total = start.elapsed().as_secs_f64();
+    insert_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = insert_lat[(insert_lat.len() * 99) / 100];
+    let qps = qps_rows.iter().map(|r| r.0).sum::<f64>() / qps_rows.len().max(1) as f64;
+    let recall = qps_rows.iter().map(|r| r.1).sum::<f64>() / qps_rows.len().max(1) as f64;
+    Row::new("batch_rebuild")
+        .col("inserts_per_s", n as f64 / total.max(1e-9))
+        .col("insert_p99_ms", p99 * 1e3)
+        .col("qps_under_churn", qps)
+        .col("recall_under_churn", recall)
+        .col("rebuild_secs_total", rebuild_secs)
+        .col("deleted", deleted as f64)
+}

@@ -134,6 +134,11 @@ pub struct StreamConfig {
     pub max_degree: usize,
     /// Default beam width for `StreamingIndex::search`.
     pub ef: usize,
+    /// Seal worker threads: memtable freezes are handed to this many
+    /// background builders so `insert` never pays for graph
+    /// construction. `0` builds inline on the inserting thread
+    /// (deterministic; the pre-off-thread-seal behaviour).
+    pub seal_threads: usize,
     /// Compaction / graph parameters (k, lambda, delta, iters, seed).
     pub merge: MergeParams,
     /// Segment-build parameters (NN-Descent above `brute_threshold`).
@@ -150,6 +155,7 @@ impl Default for StreamConfig {
             alpha: 1.2,
             max_degree: merge.k,
             ef: 64,
+            seal_threads: 1,
             merge,
             nnd: NnDescentParams::default(),
         }
@@ -182,6 +188,9 @@ impl StreamConfig {
         }
         if let Some(v) = map.get_usize("stream.ef")? {
             self.ef = v;
+        }
+        if let Some(v) = map.get_usize("stream.seal_threads")? {
+            self.seal_threads = v;
         }
         Ok(())
     }
@@ -392,6 +401,7 @@ segment_size = 2048
 mode = "index"
 alpha = 1.3
 ef = 96
+seal_threads = 3
 "#;
         let map = ConfigMap::parse(text).unwrap();
         let cfg = RunConfig::from_map(&map).unwrap();
@@ -399,6 +409,7 @@ ef = 96
         assert_eq!(cfg.stream.mode, StreamGraphMode::Index);
         assert!((cfg.stream.alpha - 1.3).abs() < 1e-6);
         assert_eq!(cfg.stream.ef, 96);
+        assert_eq!(cfg.stream.seal_threads, 3);
         // merge keys propagate into the compaction parameters
         assert_eq!(cfg.stream.merge.k, 24);
         assert_eq!(cfg.stream.merge.lambda, 12);

@@ -218,6 +218,20 @@ impl ExternalStorage {
     }
 }
 
+/// Drop-guard cleanup: a spill area whose owner unwinds (a failed or
+/// panicking build) must not leave a stray scratch directory behind.
+/// Safe even with paged views still alive mid-unwind — they hold their
+/// own open file handles and already-faulted chunks, and the explicit
+/// [`ExternalStorage::cleanup`] (which propagates errors) has the same
+/// effect on the happy path; this pass is best-effort by design.
+impl Drop for ExternalStorage {
+    fn drop(&mut self) {
+        if self.dir.exists() {
+            let _ = std::fs::remove_dir_all(&self.dir);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -315,5 +329,49 @@ mod tests {
         assert!(st.get_graph("nope", &ledger).is_err());
         assert!(st.get_graph_paged("nope").is_err());
         st.cleanup().unwrap();
+    }
+
+    /// Regression: a build that panics (or errors out) mid-way must not
+    /// leave its scratch directory behind — the drop guard cleans up
+    /// during unwinding, where the explicit `cleanup()` never runs.
+    #[test]
+    fn panicking_owner_leaves_no_scratch_dir() {
+        let dir = std::env::temp_dir().join(format!(
+            "knnmerge-storage-panic-{}",
+            unique_scratch_suffix()
+        ));
+        let dir_clone = dir.clone();
+        let result = std::thread::spawn(move || {
+            let st = ExternalStorage::create(dir_clone, StorageModel::default()).unwrap();
+            let ledger = CostLedger::new();
+            let ds = DatasetFamily::Sift.generate(50, 9);
+            st.put_subset(0, &ds, &ledger).unwrap();
+            panic!("simulated build failure");
+        })
+        .join();
+        assert!(result.is_err(), "the owner thread must have panicked");
+        assert!(
+            !dir.exists(),
+            "scratch dir {dir:?} survived a panicking build"
+        );
+    }
+
+    /// Dropping without an explicit cleanup() (the early-`?`-return
+    /// path of a failed build) removes the spill area too.
+    #[test]
+    fn early_return_leaves_no_scratch_dir() {
+        let dir = std::env::temp_dir().join(format!(
+            "knnmerge-storage-early-{}",
+            unique_scratch_suffix()
+        ));
+        {
+            let st = ExternalStorage::create(dir.clone(), StorageModel::default()).unwrap();
+            let ledger = CostLedger::new();
+            let ds = DatasetFamily::Sift.generate(30, 10);
+            st.put_subset(0, &ds, &ledger).unwrap();
+            assert!(dir.exists());
+            // No cleanup(): simulate `build_out_of_core` bailing with `?`.
+        }
+        assert!(!dir.exists(), "drop guard must remove the spill area");
     }
 }

@@ -68,6 +68,12 @@ pub enum IdRemap {
     /// Arbitrary per-id lookup: `id -> table[id]` (stream segments'
     /// local-row → global-id mapping).
     Table(Arc<Vec<u32>>),
+    /// Dense compaction over dropped ids: live ids map onto
+    /// `0..live_count` in order, dropped ids (sentinel
+    /// [`IdRemap::DROPPED`] in the table) map to `None` — the
+    /// translation a tombstone-reclaiming merge applies to the
+    /// surviving nodes of a purged graph.
+    Filtered(Arc<Vec<u32>>),
 }
 
 impl IdRemap {
@@ -96,6 +102,29 @@ impl IdRemap {
         IdRemap::Table(table)
     }
 
+    /// Sentinel marking a dropped id inside a [`IdRemap::Filtered`]
+    /// table. Never a valid target id (the crate's id spaces are
+    /// `u32` row counts well below `u32::MAX`).
+    pub const DROPPED: u32 = u32::MAX;
+
+    /// The compaction remap over a keep mask: `keep[i] == true` ids map
+    /// densely onto `0..live_count` preserving order, dropped ids map
+    /// to `None` (checked — [`IdRemap::map`] panics on them). Returns
+    /// the remap and the live count.
+    pub fn filtered(keep: &[bool]) -> (IdRemap, usize) {
+        let mut table = Vec::with_capacity(keep.len());
+        let mut next = 0u32;
+        for &live in keep {
+            if live {
+                table.push(next);
+                next += 1;
+            } else {
+                table.push(Self::DROPPED);
+            }
+        }
+        (IdRemap::Filtered(Arc::new(table)), next as usize)
+    }
+
     /// Translate one id; panics when the id lies outside the source
     /// space (a silent-shift bug turned into an assert-time error).
     #[inline]
@@ -115,6 +144,10 @@ impl IdRemap {
                 .find(|(src, _)| src.contains(id))
                 .map(|(src, tgt)| tgt + (id - src.offset)),
             IdRemap::Table(t) => t.get(id as usize).copied(),
+            IdRemap::Filtered(t) => t
+                .get(id as usize)
+                .copied()
+                .filter(|&v| v != Self::DROPPED),
         }
     }
 
@@ -192,6 +225,26 @@ mod tests {
         assert_eq!(r.map(0), 7);
         assert_eq!(r.map(2), 9);
         assert_eq!(r.try_map(3), None);
+    }
+
+    #[test]
+    fn filtered_remap_compacts_and_drops() {
+        let keep = [true, false, true, true, false];
+        let (r, live) = IdRemap::filtered(&keep);
+        assert_eq!(live, 3);
+        assert_eq!(r.map(0), 0);
+        assert_eq!(r.try_map(1), None);
+        assert_eq!(r.map(2), 1);
+        assert_eq!(r.map(3), 2);
+        assert_eq!(r.try_map(4), None);
+        assert_eq!(r.try_map(5), None); // outside the source space
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the remap's source space")]
+    fn filtered_map_panics_on_dropped_ids() {
+        let (r, _) = IdRemap::filtered(&[true, false]);
+        r.map(1);
     }
 
     #[test]

@@ -54,6 +54,11 @@ STREAM OPTIONS:
   --file <path.fvecs> [--limit <n>]  ingest real vectors instead of --family
   --segment-size <s> --mode <knn|index>
   --rate <inserts/s>                 throttle ingest (0 = unthrottled)
+  --delete-rate <p>                  delete a random live id with
+                                     probability p after each insert
+                                     (tombstoned, reclaimed at compaction)
+  --seal-threads <t>                 off-thread seal workers (0 = build
+                                     segments inline on the insert path)
   --report-every <n> --queries <q> --topk <k> --ef <ef>
   --background                       compact from a background thread
 ";

@@ -20,7 +20,7 @@ pub mod two_way;
 
 pub use multi_way::MultiWayMerge;
 pub use s_merge::SMerge;
-pub use two_way::TwoWayMerge;
+pub use two_way::{purge_and_repair, TwoWayMerge};
 
 use crate::graph::{IdRemap, KnnGraph};
 

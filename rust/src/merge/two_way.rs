@@ -20,10 +20,81 @@ use super::join::{BatchJoiner, JoinContext};
 use super::{MergeParams, SubsetMap, SupportLists};
 use crate::dataset::Dataset;
 use crate::distance::{DistanceEngine, Metric, ScalarEngine};
-use crate::graph::{KnnGraph, SharedGraph};
+use crate::graph::{IdRemap, KnnGraph, SharedGraph};
 use crate::util::{parallel_for, Rng};
 use std::sync::Mutex;
 use std::time::Instant;
+
+/// Drop the nodes marked dead in `keep` from a subset-local graph and
+/// *repair* the holes their removal tears: every surviving reverse
+/// neighbor of a dead node is re-joined against the dead node's
+/// support list (its `lambda` nearest forward + reverse neighbors —
+/// exactly the candidate pool Alg. 1 samples), so edges that used to
+/// route *through* the dead node are replaced by direct edges between
+/// its live endpoints instead of silently vanishing. Surviving rows
+/// compact densely onto `0..live_count` via a checked
+/// [`IdRemap::filtered`] translation.
+///
+/// This is the tombstone-reclaim half of a streaming compaction: the
+/// pair space a Two-way Merge then runs on contains no dead nodes at
+/// all, so the fused segment's size shrinks by the reclaimed count —
+/// deletion as *space reclamation*, not just result masking.
+pub fn purge_and_repair(
+    g: &KnnGraph,
+    data: &Dataset,
+    keep: &[bool],
+    metric: Metric,
+    lambda: usize,
+) -> KnnGraph {
+    assert!(
+        g.span().is_local(),
+        "purge_and_repair operates on subset-local graphs"
+    );
+    assert_eq!(keep.len(), g.len(), "keep mask must cover the graph");
+    assert_eq!(data.len(), g.len(), "data must cover the graph");
+    let (remap, live) = IdRemap::filtered(keep);
+    let mut out = KnnGraph::empty(live, g.k);
+    // Surviving edges: copy each live row, dropping dead neighbors and
+    // translating the rest into the compacted space.
+    for i in 0..g.len() {
+        if !keep[i] {
+            continue;
+        }
+        let ni = remap.map(i as u32) as usize;
+        for nb in g.lists[i].iter() {
+            if keep[nb.id as usize] {
+                out.lists[ni].insert(remap.map(nb.id), nb.dist, nb.new);
+            }
+        }
+    }
+    // Repair: route around each dead node. Its support list (forward +
+    // reverse, lambda each — the same structure the merge samples) is
+    // the candidate pool; each surviving reverse neighbor joins
+    // against the live part of that pool.
+    let support = SupportLists::build(g, lambda.max(1));
+    let rev = g.reverse(lambda.max(1));
+    for d in 0..g.len() {
+        if keep[d] {
+            continue;
+        }
+        let pool: Vec<u32> = support.lists[d]
+            .iter()
+            .copied()
+            .filter(|&c| keep[c as usize])
+            .collect();
+        for &r in rev[d].iter().filter(|&&r| keep[r as usize]) {
+            let nr = remap.map(r) as usize;
+            let rv = data.vector(r as usize);
+            for &c in pool.iter().filter(|&&c| c != r) {
+                let dist = metric.distance(&rv, &data.vector(c as usize));
+                if dist < out.lists[nr].threshold() {
+                    out.lists[nr].insert(remap.map(c), dist, true);
+                }
+            }
+        }
+    }
+    out
+}
 
 /// Observer invoked after each merge round: `(iter, secs, cross_graph)`.
 pub type MergeObserver<'a> = &'a mut dyn FnMut(usize, f64, &SharedGraph);
@@ -333,6 +404,37 @@ mod tests {
         let a = TwoWayMerge::new(params).merge(&d1, &d2, &g1, &g2, Metric::L2);
         let b = TwoWayMerge::new(params).merge(&d1, &d2, &g1, &g2, Metric::L2);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn purge_drops_dead_nodes_and_repairs_reverse_neighbors() {
+        let ds = DatasetFamily::Deep.generate(300, 11);
+        let g = crate::construction::bruteforce::build(&ds, 8, Metric::L2);
+        // Kill every third node.
+        let keep: Vec<bool> = (0..300).map(|i| i % 3 != 0).collect();
+        let live: Vec<usize> = (0..300).filter(|i| i % 3 != 0).collect();
+        let purged = purge_and_repair(&g, &ds, &keep, Metric::L2, 8);
+        assert_eq!(purged.len(), live.len());
+        purged.validate(true).unwrap();
+        // Quality: the purged graph must stay close to the exact graph
+        // over the surviving rows — repair replaces the routed-through
+        // edges instead of leaving starved neighborhoods.
+        let sub = ds.subset(&live);
+        let exact = crate::construction::bruteforce::build(&sub, 8, Metric::L2);
+        let truth = GroundTruth::sampled(&sub, 8, Metric::L2, 100, 3);
+        let rp = graph_recall(&purged, &truth, 8);
+        let re = graph_recall(&exact, &truth, 8);
+        assert!(re > 0.99, "sanity: exact graph must score {re}");
+        assert!(rp > 0.80, "purged+repaired recall@8 = {rp}");
+    }
+
+    #[test]
+    fn purge_with_no_dead_nodes_is_identity_shaped() {
+        let ds = DatasetFamily::Sift.generate(80, 12);
+        let g = crate::construction::bruteforce::build(&ds, 6, Metric::L2);
+        let keep = vec![true; 80];
+        let purged = purge_and_repair(&g, &ds, &keep, Metric::L2, 6);
+        assert_eq!(purged, g);
     }
 
     #[test]

@@ -14,11 +14,13 @@
 
 use super::segment::Segment;
 use super::snapshot::SegmentSet;
+use super::tombstones::TombstoneSet;
 use crate::config::{StreamConfig, StreamGraphMode};
 use crate::dataset::Dataset;
 use crate::distance::Metric;
+use crate::graph::KnnGraph;
 use crate::merge::index_merge::{union_and_diversify, IndexKind};
-use crate::merge::TwoWayMerge;
+use crate::merge::{purge_and_repair, TwoWayMerge};
 use std::sync::Arc;
 
 /// Record of one executed compaction.
@@ -30,6 +32,8 @@ pub struct Compaction {
     pub output: u64,
     /// Level of the output segment.
     pub level: usize,
+    /// Tombstoned nodes physically dropped by this fuse.
+    pub reclaimed: usize,
     /// Wall-clock seconds spent fusing.
     pub secs: f64,
 }
@@ -66,8 +70,94 @@ impl Compactor {
 
     /// Fuse two segments into one at `max(level) + 1` via Two-way Merge.
     /// Global-id mappings concatenate in `(a, b)` order, mirroring the
-    /// merge's concatenated id space.
+    /// merge's concatenated id space. (The no-tombstone path; the
+    /// engine drives [`Compactor::fuse_reclaim`].)
     pub fn fuse(&self, a: &Segment, b: &Segment, out_id: u64) -> Segment {
+        let level = a.level.max(b.level) + 1;
+        self.fuse_parts(&Purged::Intact(a), &Purged::Intact(b), out_id, level)
+    }
+
+    /// Tombstone-aware fuse: dead nodes of both inputs are dropped from
+    /// the pair space *before* the merge (their surviving reverse
+    /// neighbors repaired from the support lists —
+    /// [`crate::merge::purge_and_repair`]), so the output segment
+    /// physically shrinks by the reclaimed count. Returns the fused
+    /// segment (`None` when every node of both inputs was dead) and
+    /// the global ids reclaimed — the engine purges exactly those from
+    /// the tombstone set once the swap is published.
+    pub fn fuse_reclaim(
+        &self,
+        a: &Segment,
+        b: &Segment,
+        out_id: u64,
+        tombs: &TombstoneSet,
+    ) -> (Option<Segment>, Vec<u32>) {
+        let (pa, mut dropped) = self.purge(a, tombs);
+        let (pb, dropped_b) = self.purge(b, tombs);
+        dropped.extend(dropped_b);
+        let level = a.level.max(b.level) + 1;
+        let merged = match (pa, pb) {
+            (Some(pa), Some(pb)) => Some(self.fuse_parts(&pa, &pb, out_id, level)),
+            (Some(p), None) | (None, Some(p)) => {
+                // One side fully reclaimed: no pair left to merge; the
+                // survivor's purged graph is already repaired, so wrap
+                // it as the output segment directly.
+                Some(Segment::from_knn(
+                    out_id,
+                    level,
+                    p.data().materialize(),
+                    p.gids().to_vec(),
+                    p.knn().clone(),
+                    self.metric,
+                    &self.cfg,
+                ))
+            }
+            (None, None) => None,
+        };
+        (merged, dropped)
+    }
+
+    /// Drop a segment's tombstoned rows and repair the graph around
+    /// them. `(None, dropped)` when nothing survives; the fast path
+    /// (no dead rows) borrows the segment's own views and graph.
+    fn purge<'a>(
+        &self,
+        seg: &'a Segment,
+        tombs: &TombstoneSet,
+    ) -> (Option<Purged<'a>>, Vec<u32>) {
+        if tombs.is_empty() {
+            return (Some(Purged::Intact(seg)), Vec::new());
+        }
+        let dropped: Vec<u32> = seg
+            .global_ids
+            .iter()
+            .copied()
+            .filter(|&g| tombs.contains(g))
+            .collect();
+        if dropped.is_empty() {
+            return (Some(Purged::Intact(seg)), Vec::new());
+        }
+        if dropped.len() == seg.len() {
+            return (None, dropped);
+        }
+        let keep: Vec<bool> = seg.global_ids.iter().map(|&g| !tombs.contains(g)).collect();
+        let live_idx: Vec<usize> = (0..seg.len()).filter(|&i| keep[i]).collect();
+        let data = seg.data.subset(&live_idx);
+        let gids: Vec<u32> = live_idx.iter().map(|&i| seg.global_ids[i]).collect();
+        let knn = purge_and_repair(
+            &seg.knn,
+            &seg.data,
+            &keep,
+            self.metric,
+            self.cfg.merge.lambda,
+        );
+        (Some(Purged::Shrunk { data, gids, knn }), dropped)
+    }
+
+    /// The shared fuse core over (possibly purged) parts.
+    fn fuse_parts(&self, a: &Purged<'_>, b: &Purged<'_>, out_id: u64, level: usize) -> Segment {
+        let (a_data, a_gids, a_knn) = (a.data(), a.gids(), a.knn());
+        let (b_data, b_gids, b_knn) = (b.data(), b.gids(), b.knn());
         let mut params = self.cfg.merge;
         params.seed ^= out_id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let merger = TwoWayMerge::new(params);
@@ -78,15 +168,15 @@ impl Compactor {
         // materialized copy*, so its internal pair concat hits the
         // adjacent-range fast path — flat contiguous access in the hot
         // distance loops, and no second copy of the pair.
-        let data = Dataset::concat(&[&a.data, &b.data]).materialize();
-        let d1 = data.slice_rows(0..a.len());
-        let d2 = data.slice_rows(a.len()..data.len());
-        let mut global_ids = (*a.global_ids).clone();
-        global_ids.extend_from_slice(&b.global_ids);
-        let level = a.level.max(b.level) + 1;
+        let data = Dataset::concat(&[a_data, b_data]).materialize();
+        let n1 = a_data.len();
+        let d1 = data.slice_rows(0..n1);
+        let d2 = data.slice_rows(n1..data.len());
+        let mut global_ids = a_gids.to_vec();
+        global_ids.extend_from_slice(b_gids);
         match self.cfg.mode {
             StreamGraphMode::Knn => {
-                let knn = merger.merge(&d1, &d2, &a.knn, &b.knn, self.metric);
+                let knn = merger.merge(&d1, &d2, a_knn, b_knn, self.metric);
                 Segment::from_knn(out_id, level, data, global_ids, knn, self.metric, &self.cfg)
             }
             StreamGraphMode::Index => {
@@ -94,8 +184,7 @@ impl Compactor {
                 // then re-apply the source diversification — eviction
                 // would drop exactly the long-range edges that keep the
                 // index navigable.
-                let (cross, g0) =
-                    merger.cross_and_concat(&d1, &d2, &a.knn, &b.knn, self.metric);
+                let (cross, g0) = merger.cross_and_concat(&d1, &d2, a_knn, b_knn, self.metric);
                 let index = union_and_diversify(
                     &data,
                     self.metric,
@@ -118,6 +207,41 @@ impl Compactor {
                     entries,
                 }
             }
+        }
+    }
+}
+
+/// A compaction input with its tombstoned rows dropped: either the
+/// segment untouched (borrowed — the common, no-deletes case) or the
+/// shrunk-and-repaired copy.
+enum Purged<'a> {
+    Intact(&'a Segment),
+    Shrunk {
+        data: Dataset,
+        gids: Vec<u32>,
+        knn: KnnGraph,
+    },
+}
+
+impl Purged<'_> {
+    fn data(&self) -> &Dataset {
+        match self {
+            Purged::Intact(s) => &s.data,
+            Purged::Shrunk { data, .. } => data,
+        }
+    }
+
+    fn gids(&self) -> &[u32] {
+        match self {
+            Purged::Intact(s) => s.global_ids.as_slice(),
+            Purged::Shrunk { gids, .. } => gids,
+        }
+    }
+
+    fn knn(&self) -> &KnnGraph {
+        match self {
+            Purged::Intact(s) => &s.knn,
+            Purged::Shrunk { knn, .. } => knn,
         }
     }
 }
@@ -188,9 +312,71 @@ mod tests {
         // Search the fused index directly: exact-match queries must come
         // back first.
         for probe in [3usize, 211, 399] {
-            let hits = merged.search(Metric::L2, &ds.vector(probe), 3, 64);
+            let hits = merged.search(Metric::L2, &ds.vector(probe), 3, 64, &TombstoneSet::empty());
             assert_eq!(hits[0].1, probe as u32, "probe {probe}");
         }
+    }
+
+    #[test]
+    fn fuse_reclaim_drops_dead_nodes_for_real() {
+        let cfg = cfg_k(8);
+        let (ds, a, b) = two_segments(400, 13, &cfg);
+        // Kill every fourth global id across both segments.
+        let dead: Vec<u32> = (0..400u32).filter(|g| g % 4 == 0).collect();
+        let tombs = TombstoneSet::empty().with_all(&dead);
+        let (merged, dropped) =
+            Compactor::new(cfg, Metric::L2).fuse_reclaim(&a, &b, 2, &tombs);
+        let merged = merged.unwrap();
+        merged.validate().unwrap();
+        // Physical reclaim, not masking: the fused segment shrank.
+        assert_eq!(merged.len(), 300);
+        let mut got = dropped.clone();
+        got.sort_unstable();
+        assert_eq!(got, dead);
+        assert!(merged.global_ids.iter().all(|g| g % 4 != 0));
+        // Quality over the survivors holds up after purge + merge: the
+        // merged graph is in global-id space and global ids here equal
+        // ds rows, so re-key it onto the live subset's local ids and
+        // score against exact truth over that subset.
+        let live: Vec<usize> = (0..400).filter(|i| i % 4 != 0).collect();
+        let sub = ds.subset(&live);
+        let truth = GroundTruth::sampled(&sub, 8, Metric::L2, 100, 3);
+        let g = merged.knn_in_global_space();
+        let mut relabeled = crate::graph::KnnGraph::empty(live.len(), g.k);
+        for (local, &row) in live.iter().enumerate() {
+            for nb in g.lists[row].iter() {
+                let pos = live.binary_search(&(nb.id as usize)).unwrap();
+                relabeled.lists[local].insert(pos as u32, nb.dist, false);
+            }
+        }
+        let r = graph_recall(&relabeled, &truth, 8);
+        assert!(r > 0.8, "post-reclaim recall@8 = {r}");
+    }
+
+    #[test]
+    fn fuse_reclaim_handles_fully_dead_sides() {
+        let cfg = cfg_k(6);
+        let (_, a, b) = two_segments(200, 14, &cfg);
+        // Every id of segment a is dead.
+        let tombs = TombstoneSet::empty().with_all(a.global_ids.as_slice());
+        let (merged, dropped) =
+            Compactor::new(cfg.clone(), Metric::L2).fuse_reclaim(&a, &b, 2, &tombs);
+        let merged = merged.unwrap();
+        merged.validate().unwrap();
+        assert_eq!(merged.len(), b.len());
+        assert_eq!(dropped.len(), a.len());
+        // Both sides dead -> no output at all.
+        let all: Vec<u32> = a
+            .global_ids
+            .iter()
+            .chain(b.global_ids.iter())
+            .copied()
+            .collect();
+        let tombs = TombstoneSet::empty().with_all(&all);
+        let (none, dropped) =
+            Compactor::new(cfg, Metric::L2).fuse_reclaim(&a, &b, 3, &tombs);
+        assert!(none.is_none());
+        assert_eq!(dropped.len(), 200);
     }
 
     #[test]

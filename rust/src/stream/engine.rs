@@ -1,27 +1,43 @@
-//! The user-facing [`StreamingIndex`]: concurrent `insert` / `search`
-//! over the memtable + segment log, with compaction either driven
-//! explicitly (`tick`, deterministic for tests) or by a background
-//! thread ([`StreamingIndex::spawn_compactor`]).
+//! The user-facing [`StreamingIndex`]: concurrent `insert` / `delete` /
+//! `search` over the memtable + segment log, with compaction either
+//! driven explicitly (`tick`, deterministic for tests) or by a
+//! background thread ([`StreamingIndex::spawn_compactor`]).
 //!
 //! Concurrency model:
 //!
 //! - the live segment set is published as an `Arc<SegmentSet>` behind a
 //!   mutex; readers clone the `Arc` (O(1)) and search lock-free on the
 //!   snapshot, so a compaction swap can never tear a query's view;
-//! - the memtable sits behind its own mutex; sealing happens while it
-//!   is held, so every inserted vector is visible to the next search
-//!   (either still in the memtable or already in a sealed segment);
+//! - deletes publish an epoch-stamped `Arc<TombstoneSet>` the same way
+//!   (copy-on-write); a query snapshots it **first**, so any id deleted
+//!   before the query began is filtered no matter which segment / seal
+//!   generation it surfaces from;
+//! - the memtable sits behind its own mutex, but queries only hold it
+//!   long enough to take a [`MemSnapshot`] (slab `Arc` clones + a
+//!   sub-slab tail copy) and scan *outside* the lock;
+//! - sealing never builds a graph under the memtable mutex: `insert`
+//!   only *freezes* the full memtable — swap the rows into a
+//!   [`SealingBatch`] on the in-flight list — and hands the graph build
+//!   to the seal worker pool (`cfg.seal_threads`; 0 = build inline on
+//!   the inserting thread, deterministic). Frozen-but-unsealed rows
+//!   stay searchable via the in-flight list, so the reader invariant
+//!   (memtable → sealing → segments, in that order) never drops a row;
 //! - compactions are serialized by `compact_lock`, fuse **outside** the
 //!   segment-set mutex, and re-resolve the current set when swapping —
-//!   seals that landed mid-fuse are preserved.
+//!   seals that landed mid-fuse are preserved. A fuse drops tombstoned
+//!   nodes from its inputs (reclaim) and then purges exactly those ids
+//!   from the tombstone set.
 
 use super::compactor::{Compaction, Compactor};
 use super::memtable::MemTable;
 use super::snapshot::{merge_topk, SegmentSet};
+use super::tombstones::TombstoneSet;
 use crate::config::StreamConfig;
+use crate::dataset::Dataset;
 use crate::distance::Metric;
+use crate::graph::NeighborList;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
 /// Counters exposed by [`StreamingIndex::stats`].
@@ -29,47 +45,214 @@ use std::time::Instant;
 pub struct StreamStats {
     /// Vectors inserted since creation.
     pub inserted: usize,
+    /// Vectors deleted since creation.
+    pub deleted: usize,
     /// Segments sealed from the memtable.
     pub sealed: usize,
     /// Compactions executed.
     pub compactions: usize,
+    /// Tombstoned nodes physically reclaimed by compactions.
+    pub reclaimed: usize,
     /// Currently live segments.
     pub live_segments: usize,
     /// Vectors currently buffered in the memtable.
     pub memtable_len: usize,
+    /// Frozen batches currently being sealed off-thread.
+    pub sealing: usize,
+    /// Dead ids not yet reclaimed by a compaction.
+    pub tombstones: usize,
 }
 
-/// An online k-NN index over an LSM-style log of subgraph segments.
-pub struct StreamingIndex {
+/// A frozen memtable: rows drained under the mutex, graph built (and
+/// the segment published) afterwards, off the insert path. Searchable
+/// from the in-flight list while the build runs.
+struct SealingBatch {
+    id: u64,
+    data: Dataset,
+    gids: Vec<u32>,
+}
+
+impl SealingBatch {
+    /// Exact brute-force scan (the batch is one memtable's worth of
+    /// rows), skipping tombstoned gids.
+    fn search(
+        &self,
+        metric: Metric,
+        query: &[f32],
+        topk: usize,
+        tombs: &TombstoneSet,
+    ) -> Vec<(f32, u32)> {
+        let mut list = NeighborList::new(topk.max(1));
+        for (row, &gid) in self.gids.iter().enumerate() {
+            if tombs.contains(gid) {
+                continue;
+            }
+            let d = metric.distance(query, &self.data.vector(row));
+            if d < list.threshold() {
+                list.insert(gid, d, false);
+            }
+        }
+        list.iter().map(|nb| (nb.dist, nb.id)).collect()
+    }
+}
+
+/// State shared between the index facade and its seal workers.
+struct Shared {
     cfg: StreamConfig,
     metric: Metric,
+    segments: Mutex<Arc<SegmentSet>>,
+    tombstones: Mutex<Arc<TombstoneSet>>,
+    sealing: Mutex<Vec<Arc<SealingBatch>>>,
+    sealing_done: Condvar,
+    sealed: AtomicUsize,
+}
+
+impl Shared {
+    /// Build a frozen batch's segment and publish it: filter rows that
+    /// died since the freeze, seal, swap into the segment set, then
+    /// retire the batch from the in-flight list (readers pick the row
+    /// up from the new set before it leaves the list — publication
+    /// precedes retirement).
+    fn build_and_publish(&self, batch: &SealingBatch) {
+        let tombs = self.tombstones.lock().unwrap().clone();
+        let dropped: Vec<u32> = if tombs.is_empty() {
+            Vec::new()
+        } else {
+            batch
+                .gids
+                .iter()
+                .copied()
+                .filter(|&g| tombs.contains(g))
+                .collect()
+        };
+        let (data, gids) = if dropped.is_empty() {
+            (batch.data.clone(), batch.gids.clone())
+        } else {
+            let live: Vec<usize> = (0..batch.gids.len())
+                .filter(|&i| !tombs.contains(batch.gids[i]))
+                .collect();
+            (
+                batch.data.subset(&live),
+                live.iter().map(|&i| batch.gids[i]).collect(),
+            )
+        };
+        if !gids.is_empty() {
+            // Materialize off the insert path: the frozen batch is a
+            // chained (or, post-filter, gather) view; the segment is
+            // long-lived and its data sits in every beam-search
+            // distance loop, so pay one contiguous copy here, where it
+            // costs ingest nothing.
+            let data = data.materialize();
+            let seg = Arc::new(super::Segment::seal(
+                batch.id,
+                0,
+                data,
+                gids,
+                self.metric,
+                &self.cfg,
+            ));
+            let mut cur = self.segments.lock().unwrap();
+            let mut v = cur.segments.clone();
+            v.push(seg);
+            v.sort_by_key(|s| s.id);
+            *cur = Arc::new(SegmentSet { segments: v });
+            drop(cur);
+            self.sealed.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut sealing = self.sealing.lock().unwrap();
+        sealing.retain(|b| b.id != batch.id);
+        drop(sealing);
+        self.sealing_done.notify_all();
+        // Rows dropped at seal time never made it into any segment;
+        // their tombstones have nothing left to mask, so purge them
+        // (ids are never reused, making this safe). Purge strictly
+        // AFTER retiring the batch: a search orders tombstones-then-
+        // sealing, so it either still sees the tombstone (snapshot
+        // taken before this purge) or no longer sees the batch —
+        // purging first would open a window where a dead row
+        // resurfaces from the in-flight list.
+        self.purge_tombstones(&dropped);
+    }
+
+    /// Swap in a tombstone set without `gids` (no-op on empty input).
+    /// Callers must ensure the ids no longer exist in any source a
+    /// search visits *after* its tombstone snapshot.
+    fn purge_tombstones(&self, gids: &[u32]) {
+        if gids.is_empty() {
+            return;
+        }
+        let mut t = self.tombstones.lock().unwrap();
+        let next = Arc::new(t.without(gids));
+        *t = next;
+    }
+}
+
+/// An online k-NN index over an LSM-style log of subgraph segments,
+/// with streaming deletes (tombstones, reclaimed at compaction).
+pub struct StreamingIndex {
+    shared: Arc<Shared>,
     dim: usize,
     memtable: Mutex<MemTable>,
-    segments: Mutex<Arc<SegmentSet>>,
     compact_lock: Mutex<()>,
     next_gid: AtomicU32,
     next_segment_id: AtomicU64,
     inserted: AtomicUsize,
-    sealed: AtomicUsize,
+    deleted: AtomicUsize,
     compactions: AtomicUsize,
+    reclaimed: AtomicUsize,
+    seal_tx: Mutex<Option<mpsc::Sender<Arc<SealingBatch>>>>,
+    seal_workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl StreamingIndex {
     pub fn new(dim: usize, metric: Metric, cfg: StreamConfig) -> StreamingIndex {
         assert!(dim > 0, "dim must be positive");
         assert!(cfg.segment_size > 0, "segment_size must be positive");
-        StreamingIndex {
-            memtable: Mutex::new(MemTable::new(dim)),
+        let seal_threads = cfg.seal_threads;
+        let shared = Arc::new(Shared {
+            cfg,
+            metric,
             segments: Mutex::new(Arc::new(SegmentSet::empty())),
+            tombstones: Mutex::new(TombstoneSet::shared_empty()),
+            sealing: Mutex::new(Vec::new()),
+            sealing_done: Condvar::new(),
+            sealed: AtomicUsize::new(0),
+        });
+        let (seal_tx, seal_workers) = if seal_threads > 0 {
+            let (tx, rx) = mpsc::channel::<Arc<SealingBatch>>();
+            let rx = Arc::new(Mutex::new(rx));
+            let workers = (0..seal_threads)
+                .map(|_| {
+                    let shared = Arc::clone(&shared);
+                    let rx = Arc::clone(&rx);
+                    std::thread::spawn(move || loop {
+                        // Hold the receiver lock only for the recv:
+                        // workers building in parallel do not contend.
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            Ok(batch) => shared.build_and_publish(&batch),
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                })
+                .collect();
+            (Some(tx), workers)
+        } else {
+            (None, Vec::new())
+        };
+        StreamingIndex {
+            shared,
+            dim,
+            memtable: Mutex::new(MemTable::new(dim)),
             compact_lock: Mutex::new(()),
             next_gid: AtomicU32::new(0),
             next_segment_id: AtomicU64::new(0),
             inserted: AtomicUsize::new(0),
-            sealed: AtomicUsize::new(0),
+            deleted: AtomicUsize::new(0),
             compactions: AtomicUsize::new(0),
-            cfg,
-            metric,
-            dim,
+            reclaimed: AtomicUsize::new(0),
+            seal_tx: Mutex::new(seal_tx),
+            seal_workers: Mutex::new(seal_workers),
         }
     }
 
@@ -80,7 +263,7 @@ impl StreamingIndex {
 
     #[inline]
     pub fn metric(&self) -> Metric {
-        self.metric
+        self.shared.metric
     }
 
     /// Total vectors inserted so far (== the next global id).
@@ -88,75 +271,216 @@ impl StreamingIndex {
         self.inserted.load(Ordering::Relaxed)
     }
 
+    /// Vectors inserted and not (yet) deleted. Saturating: the two
+    /// counters are read independently, so a racing insert+delete can
+    /// momentarily observe more deletes than inserts.
+    pub fn live_len(&self) -> usize {
+        self.inserted
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.deleted.load(Ordering::Relaxed))
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Insert one vector; returns its global id. Global ids are assigned
-    /// in arrival order. When the memtable reaches `segment_size` the
-    /// call also seals it into a level-0 segment (the ingest-latency
-    /// spike `segment_size` trades against search fan-out).
+    /// Insert one vector; returns its global id. Global ids are
+    /// assigned in arrival order. When the memtable reaches
+    /// `segment_size` the call *freezes* it (an O(1) swap onto the
+    /// in-flight list) and hands the graph build to the seal workers —
+    /// the insert path never builds a graph, so its latency does not
+    /// spike at seal boundaries (`seal_threads = 0` restores the
+    /// inline, deterministic build).
     pub fn insert(&self, v: &[f32]) -> u32 {
         assert_eq!(v.len(), self.dim, "vector dimension mismatch");
-        let mut mt = self.memtable.lock().unwrap();
-        let gid = self.next_gid.fetch_add(1, Ordering::Relaxed);
-        mt.insert(v, gid);
-        self.inserted.fetch_add(1, Ordering::Relaxed);
-        if mt.len() >= self.cfg.segment_size {
-            self.seal_locked(&mut mt);
+        let frozen;
+        let gid;
+        {
+            let mut mt = self.memtable.lock().unwrap();
+            gid = self.next_gid.fetch_add(1, Ordering::Relaxed);
+            mt.insert(v, gid);
+            self.inserted.fetch_add(1, Ordering::Relaxed);
+            frozen = if mt.len() >= self.shared.cfg.segment_size {
+                self.freeze_locked(&mut mt)
+            } else {
+                None
+            };
+        }
+        if let Some(batch) = frozen {
+            self.dispatch_seal(batch);
         }
         gid
     }
 
-    /// Seal whatever the memtable holds (used before a final compaction
-    /// or a shutdown). No-op when the memtable is empty.
-    pub fn flush(&self) {
-        let mut mt = self.memtable.lock().unwrap();
-        self.seal_locked(&mut mt);
+    /// Delete a previously inserted vector by global id. Returns `true`
+    /// when the id existed and was not already deleted. Visibility is
+    /// immediate: a search that begins after `delete` returns will
+    /// never surface the id. Space is reclaimed when compaction next
+    /// touches the segment holding it.
+    ///
+    /// The copy-on-write step (O(pending tombstones)) runs *outside*
+    /// the mutex, with an epoch check on the swap — searches snapshot
+    /// the set with an O(1) critical section even under delete bursts.
+    pub fn delete(&self, gid: u32) -> bool {
+        if gid >= self.next_gid.load(Ordering::Relaxed) {
+            return false;
+        }
+        loop {
+            let cur = self.tombstones();
+            if cur.contains(gid) {
+                return false;
+            }
+            let next = Arc::new(cur.with(gid)); // clone off-lock
+            let mut tombs = self.shared.tombstones.lock().unwrap();
+            if tombs.epoch() == cur.epoch() {
+                *tombs = next;
+                drop(tombs);
+                self.deleted.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+            // Lost a race with another delete/purge: retry on the
+            // fresh set.
+        }
     }
 
-    fn seal_locked(&self, mt: &mut MemTable) {
+    /// Delete a batch of global ids with a single copy-on-write step
+    /// (one clone per call instead of per id). Returns how many ids
+    /// were newly deleted; unknown and already-dead ids are skipped.
+    pub fn delete_batch(&self, gids: &[u32]) -> usize {
+        let limit = self.next_gid.load(Ordering::Relaxed);
+        loop {
+            let cur = self.tombstones();
+            let fresh: Vec<u32> = gids
+                .iter()
+                .copied()
+                .filter(|&g| g < limit && !cur.contains(g))
+                .collect();
+            if fresh.is_empty() {
+                return 0;
+            }
+            let next = Arc::new(cur.with_all(&fresh));
+            let mut tombs = self.shared.tombstones.lock().unwrap();
+            if tombs.epoch() == cur.epoch() {
+                *tombs = next;
+                drop(tombs);
+                self.deleted.fetch_add(fresh.len(), Ordering::Relaxed);
+                return fresh.len();
+            }
+        }
+    }
+
+    /// Freeze the memtable's rows into a [`SealingBatch`]. Must run
+    /// under the memtable mutex: the batch joins the in-flight list
+    /// before the lock drops, so no search can observe the rows in
+    /// neither place.
+    fn freeze_locked(&self, mt: &mut MemTable) -> Option<Arc<SealingBatch>> {
         if mt.is_empty() {
-            return;
+            return None;
         }
         let (data, gids) = mt.drain();
         let id = self.next_segment_id.fetch_add(1, Ordering::Relaxed);
-        let seg = Arc::new(super::Segment::seal(id, 0, data, gids, self.metric, &self.cfg));
-        let mut cur = self.segments.lock().unwrap();
-        let mut v = cur.segments.clone();
-        v.push(seg);
-        *cur = Arc::new(SegmentSet { segments: v });
-        self.sealed.fetch_add(1, Ordering::Relaxed);
+        let batch = Arc::new(SealingBatch { id, data, gids });
+        self.shared.sealing.lock().unwrap().push(Arc::clone(&batch));
+        Some(batch)
+    }
+
+    /// Hand a frozen batch to the seal workers (or build inline when
+    /// `seal_threads = 0` / the pool is gone).
+    ///
+    /// Backpressure: the channel is unbounded, so when builds are
+    /// slower than ingest the in-flight list would grow without limit
+    /// (and every search scans every backlogged batch). Past a small
+    /// backlog the inserting thread builds its own batch inline — the
+    /// old pay-at-insert behaviour, now only as the overload valve.
+    fn dispatch_seal(&self, batch: Arc<SealingBatch>) {
+        let max_backlog = 2 * self.shared.cfg.seal_threads + 2;
+        if self.shared.sealing.lock().unwrap().len() > max_backlog {
+            self.shared.build_and_publish(&batch);
+            return;
+        }
+        let tx = self.seal_tx.lock().unwrap().clone();
+        match tx {
+            Some(tx) => {
+                if tx.send(Arc::clone(&batch)).is_err() {
+                    self.shared.build_and_publish(&batch);
+                }
+            }
+            None => self.shared.build_and_publish(&batch),
+        }
+    }
+
+    /// Seal whatever the memtable holds and wait until no seal is in
+    /// flight (used before a final compaction or a shutdown). The
+    /// final partial batch is built on the calling thread.
+    pub fn flush(&self) {
+        let frozen = {
+            let mut mt = self.memtable.lock().unwrap();
+            self.freeze_locked(&mut mt)
+        };
+        if let Some(batch) = frozen {
+            self.shared.build_and_publish(&batch);
+        }
+        self.quiesce();
+    }
+
+    /// Block until every in-flight seal build has published. Inserts
+    /// may keep arriving; this waits for the list to be momentarily
+    /// empty (tests use it to make `stats` deterministic).
+    pub fn quiesce(&self) {
+        let mut sealing = self.shared.sealing.lock().unwrap();
+        while !sealing.is_empty() {
+            sealing = self.shared.sealing_done.wait(sealing).unwrap();
+        }
     }
 
     /// The current segment set (O(1) `Arc` clone; never torn).
     pub fn snapshot(&self) -> Arc<SegmentSet> {
-        self.segments.lock().unwrap().clone()
+        self.shared.segments.lock().unwrap().clone()
+    }
+
+    /// The current tombstone set (O(1) `Arc` clone, epoch-stamped).
+    pub fn tombstones(&self) -> Arc<TombstoneSet> {
+        self.shared.tombstones.lock().unwrap().clone()
     }
 
     /// Search with the configured default beam width; returns global ids
     /// ascending by distance.
     pub fn search(&self, query: &[f32], topk: usize) -> Vec<u32> {
-        self.search_ef(query, topk, self.cfg.ef)
+        self.search_ef(query, topk, self.shared.cfg.ef)
             .into_iter()
             .map(|(_, id)| id)
             .collect()
     }
 
     /// Search with an explicit beam width; returns `(distance, global
-    /// id)` ascending. Fans out over all live segments plus the
-    /// memtable and merge-sorts the per-source top-k lists.
+    /// id)` ascending. Fans out over the memtable snapshot, the
+    /// in-flight seal batches, and all live segments, merge-sorting the
+    /// per-source top-k lists.
     pub fn search_ef(&self, query: &[f32], topk: usize, ef: usize) -> Vec<(f32, u32)> {
         assert_eq!(query.len(), self.dim, "query dimension mismatch");
-        // Memtable first, snapshot second: a seal between the two steps
-        // moves vectors memtable -> segment, and this order sees them
-        // in at least one source (possibly both; merge_topk dedups by
-        // global id). Snapshot-first would let a concurrent seal hide
-        // up to segment_size freshly inserted vectors.
-        let mem_hits = self.memtable.lock().unwrap().search(self.metric, query, topk);
+        // Tombstones first: anything deleted before this point is in
+        // the snapshot and gets filtered from every source below —
+        // the linearization point of delete-vs-search.
+        let tombs = self.tombstones();
+        // Memtable, then sealing, then segments: a row moves strictly
+        // forward along that pipeline, and each hop happens atomically
+        // under a lock this sequence visits *later* (freeze publishes
+        // to `sealing` under the memtable lock; seal publishes to
+        // `segments` before retiring from `sealing`), so every row is
+        // seen in at least one source (possibly two; merge_topk dedups
+        // by global id). The memtable scan itself runs on a snapshot,
+        // outside the mutex.
+        let mem_snap = self.memtable.lock().unwrap().snapshot();
+        let sealing: Vec<Arc<SealingBatch>> = self.shared.sealing.lock().unwrap().clone();
         let snap = self.snapshot();
-        let seg_hits = snap.search(self.metric, query, topk, ef);
-        merge_topk(vec![seg_hits, mem_hits], topk)
+        let metric = self.shared.metric;
+        let mut parts = Vec::with_capacity(2 + sealing.len());
+        parts.push(mem_snap.search(metric, query, topk, &tombs));
+        for batch in &sealing {
+            parts.push(batch.search(metric, query, topk, &tombs));
+        }
+        parts.push(snap.search(metric, query, topk, ef, &tombs));
+        merge_topk(parts, topk)
     }
 
     /// Run one strict (same-level) compaction if a pair is available.
@@ -175,30 +499,72 @@ impl StreamingIndex {
     fn compact_once(&self, strict: bool) -> Option<Compaction> {
         let _serialize = self.compact_lock.lock().unwrap();
         let snap = self.snapshot();
-        let pair = Compactor::pick(&snap, strict)?;
+        // A published segment whose batch is still on the sealing list
+        // is not yet compactable: fusing it could reclaim-and-purge a
+        // tombstone while the stale batch still exposes the dead row
+        // to searches (tombstones are snapshotted before the sealing
+        // list). Snapshot first, sealing second — a batch retired
+        // before this read can never reappear, so the filter is safe.
+        let sealing_ids: std::collections::HashSet<u64> = self
+            .shared
+            .sealing
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|b| b.id)
+            .collect();
+        let eligible = if sealing_ids.is_empty() {
+            snap
+        } else {
+            Arc::new(SegmentSet {
+                segments: snap
+                    .segments
+                    .iter()
+                    .filter(|s| !sealing_ids.contains(&s.id))
+                    .cloned()
+                    .collect(),
+            })
+        };
+        let pair = Compactor::pick(&eligible, strict)?;
+        let tombs = self.tombstones();
         let out_id = self.next_segment_id.fetch_add(1, Ordering::Relaxed);
         let start = Instant::now();
-        let compactor = Compactor::new(self.cfg.clone(), self.metric);
-        let merged = Arc::new(compactor.fuse(&pair[0], &pair[1], out_id));
-        let level = merged.level;
+        let compactor = Compactor::new(self.shared.cfg.clone(), self.shared.metric);
+        let (merged, dropped) = compactor.fuse_reclaim(&pair[0], &pair[1], out_id, &tombs);
+        let level = merged
+            .as_ref()
+            .map(|m| m.level)
+            .unwrap_or_else(|| pair[0].level.max(pair[1].level) + 1);
         // Swap against the *current* set: seals that happened while we
         // were fusing stay live.
-        let mut cur = self.segments.lock().unwrap();
+        let mut cur = self.shared.segments.lock().unwrap();
         let mut v: Vec<Arc<super::Segment>> = cur
             .segments
             .iter()
             .filter(|s| s.id != pair[0].id && s.id != pair[1].id)
             .cloned()
             .collect();
-        v.push(merged);
+        if let Some(m) = merged {
+            v.push(Arc::new(m));
+        }
         v.sort_by_key(|s| s.id);
         *cur = Arc::new(SegmentSet { segments: v });
         drop(cur);
+        // The reclaimed ids no longer exist anywhere (the swap above
+        // already published the purged set); purge their tombstones so
+        // the set stays bounded by *pending* deletes. Ids deleted
+        // after the `tombs` snapshot above are not in `dropped`, so
+        // their tombstones survive until the next fuse.
+        if !dropped.is_empty() {
+            self.shared.purge_tombstones(&dropped);
+            self.reclaimed.fetch_add(dropped.len(), Ordering::Relaxed);
+        }
         self.compactions.fetch_add(1, Ordering::Relaxed);
         Some(Compaction {
             inputs: [pair[0].id, pair[1].id],
             output: out_id,
             level,
+            reclaimed: dropped.len(),
             secs: start.elapsed().as_secs_f64(),
         })
     }
@@ -206,10 +572,14 @@ impl StreamingIndex {
     pub fn stats(&self) -> StreamStats {
         StreamStats {
             inserted: self.inserted.load(Ordering::Relaxed),
-            sealed: self.sealed.load(Ordering::Relaxed),
+            deleted: self.deleted.load(Ordering::Relaxed),
+            sealed: self.shared.sealed.load(Ordering::Relaxed),
             compactions: self.compactions.load(Ordering::Relaxed),
+            reclaimed: self.reclaimed.load(Ordering::Relaxed),
             live_segments: self.snapshot().count(),
             memtable_len: self.memtable.lock().unwrap().len(),
+            sealing: self.shared.sealing.lock().unwrap().len(),
+            tombstones: self.tombstones().len(),
         }
     }
 
@@ -229,6 +599,18 @@ impl StreamingIndex {
             }
         });
         CompactorHandle { stop, join }
+    }
+}
+
+impl Drop for StreamingIndex {
+    fn drop(&mut self) {
+        // Close the channel, then join the workers: in-flight builds
+        // complete and publish (harmless — the index is going away),
+        // queued batches drain, and no thread outlives the index.
+        self.seal_tx.lock().unwrap().take();
+        for handle in self.seal_workers.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
     }
 }
 
@@ -277,25 +659,43 @@ mod tests {
             let gid = index.insert(&[i as f32, 0.0, 0.0, 0.0]);
             assert_eq!(gid, i);
         }
+        index.quiesce(); // seals run off-thread; settle before asserting
         let st = index.stats();
         assert_eq!(st.inserted, 25);
         assert_eq!(st.sealed, 2);
         assert_eq!(st.live_segments, 2);
         assert_eq!(st.memtable_len, 5);
+        assert_eq!(st.sealing, 0);
         index.flush();
         assert_eq!(index.stats().live_segments, 3);
         assert_eq!(index.stats().memtable_len, 0);
     }
 
     #[test]
-    fn search_sees_memtable_and_segments() {
+    fn inline_seal_mode_is_deterministic() {
+        let mut cfg = small_cfg(4, 10);
+        cfg.seal_threads = 0;
+        let index = StreamingIndex::new(4, Metric::L2, cfg);
+        for i in 0..25u32 {
+            index.insert(&[i as f32, 1.0, 0.0, 0.0]);
+        }
+        // No quiesce needed: inline seals complete inside insert().
+        let st = index.stats();
+        assert_eq!(st.sealed, 2);
+        assert_eq!(st.live_segments, 2);
+        assert_eq!(st.sealing, 0);
+    }
+
+    #[test]
+    fn search_sees_memtable_sealing_and_segments() {
         let ds = DatasetFamily::Deep.generate(350, 21);
         let index = StreamingIndex::new(ds.dim, Metric::L2, small_cfg(8, 100));
         for i in 0..ds.len() {
             index.insert(&ds.vector(i));
         }
-        // 3 sealed segments + 50 in the memtable; exact-match queries
-        // must surface from both regions.
+        // 3 segments (possibly still sealing off-thread) + 50 in the
+        // memtable; exact-match queries must surface from every region
+        // *without* waiting for the seals to land.
         for probe in [0usize, 150, 320, 349] {
             let hits = index.search_ef(&ds.vector(probe), 1, 64);
             assert_eq!(hits[0].1 as usize, probe, "probe {probe}");
@@ -310,6 +710,7 @@ mod tests {
         for i in 0..ds.len() {
             index.insert(&ds.vector(i));
         }
+        index.quiesce();
         // 4 level-0 segments -> two L0 fuses, then one L1 fuse.
         let c1 = index.tick().unwrap();
         assert_eq!(c1.level, 1);
@@ -413,10 +814,108 @@ mod tests {
     }
 
     #[test]
-    fn concurrent_insert_search_compact() {
+    fn delete_hides_immediately_and_compaction_reclaims() {
+        let n = 200usize;
+        let ds = DatasetFamily::Deep.generate(n, 27);
+        let index = StreamingIndex::new(ds.dim, Metric::L2, small_cfg(8, 50));
+        for i in 0..n {
+            index.insert(&ds.vector(i));
+        }
+        index.flush();
+        // Delete every other id (the ISSUE's 50% scenario).
+        for gid in (0..n as u32).step_by(2) {
+            assert!(index.delete(gid));
+        }
+        assert_eq!(index.stats().deleted, n / 2);
+        assert_eq!(index.live_len(), n / 2);
+        // Deleted ids are invisible immediately, surviving ids remain.
+        for probe in [0usize, 57, 102, 199] {
+            let hits = index.search_ef(&ds.vector(probe), 5, 64);
+            assert!(
+                hits.iter().all(|&(_, id)| id % 2 == 1),
+                "probe {probe} surfaced a deleted id: {hits:?}"
+            );
+            if probe % 2 == 1 {
+                assert_eq!(hits[0].1 as usize, probe, "live probe {probe} lost");
+            }
+        }
+        // Compaction *reclaims*: node count halves, tombstones drain.
+        index.compact_all();
+        let snap = index.snapshot();
+        assert_eq!(snap.count(), 1);
+        assert_eq!(snap.total_vectors(), n / 2, "reclaim must shrink segments");
+        let st = index.stats();
+        assert_eq!(st.tombstones, 0, "reclaimed tombstones must be purged");
+        assert_eq!(st.reclaimed, n / 2);
+        snap.segments[0].validate().unwrap();
+        // Post-reclaim searches still answer exactly over the survivors.
+        for probe in [1usize, 57, 199] {
+            let hits = index.search_ef(&ds.vector(probe), 1, 64);
+            assert_eq!(hits[0].1 as usize, probe);
+            assert!(hits[0].0 <= 1e-6);
+        }
+    }
+
+    #[test]
+    fn delete_rejects_unknown_and_double_deletes() {
+        let index = StreamingIndex::new(4, Metric::L2, small_cfg(4, 10));
+        assert!(!index.delete(0), "nothing inserted yet");
+        let gid = index.insert(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(index.delete(gid));
+        assert!(!index.delete(gid), "double delete");
+        assert!(!index.delete(gid + 1), "never-assigned id");
+        assert_eq!(index.stats().deleted, 1);
+    }
+
+    #[test]
+    fn delete_batch_skips_dead_and_unknown_ids() {
+        let index = StreamingIndex::new(4, Metric::L2, small_cfg(4, 100));
+        for i in 0..10u32 {
+            index.insert(&[i as f32, 0.0, 0.0, 0.0]);
+        }
+        assert!(index.delete(3));
+        // 3 already dead, 99 never assigned: only 1, 5, 7 are fresh.
+        assert_eq!(index.delete_batch(&[1, 3, 5, 7, 99]), 3);
+        assert_eq!(index.stats().deleted, 4);
+        assert_eq!(index.live_len(), 6);
+        assert_eq!(index.delete_batch(&[1, 3]), 0, "all already dead");
+        let hits = index.search_ef(&[1.0, 0.0, 0.0, 0.0], 10, 32);
+        assert!(hits
+            .iter()
+            .all(|&(_, id)| ![1u32, 3, 5, 7].contains(&id)));
+    }
+
+    #[test]
+    fn rows_deleted_before_seal_never_enter_a_segment() {
+        let ds = DatasetFamily::Sift.generate(60, 28);
+        let index = StreamingIndex::new(ds.dim, Metric::L2, small_cfg(6, 100));
+        for i in 0..60 {
+            index.insert(&ds.vector(i));
+        }
+        // Still all in the memtable; delete a third of them there.
+        for gid in (0..60u32).step_by(3) {
+            assert!(index.delete(gid));
+        }
+        let hits = index.search_ef(&ds.vector(0), 10, 64);
+        assert!(hits.iter().all(|&(_, id)| id % 3 != 0));
+        index.flush();
+        let snap = index.snapshot();
+        assert_eq!(snap.total_vectors(), 40, "dead rows dropped at seal");
+        // Their tombstones have nothing left to mask and are purged.
+        assert_eq!(index.stats().tombstones, 0);
+        assert_eq!(index.live_len(), 40);
+    }
+
+    #[test]
+    fn concurrent_insert_delete_search_tick() {
+        // The torn-snapshot test, extended with deletes: interleaved
+        // insert / delete / search / tick threads; no search may ever
+        // return a gid whose delete completed before the search began,
+        // nor duplicate gids, nor unsorted distances.
         let ds = DatasetFamily::Sift.generate(600, 26);
         let index = Arc::new(StreamingIndex::new(ds.dim, Metric::L2, small_cfg(6, 64)));
         let handle = Arc::clone(&index).spawn_compactor(std::time::Duration::from_millis(1));
+        let confirmed_dead = Arc::new(Mutex::new(std::collections::HashSet::<u32>::new()));
         std::thread::scope(|scope| {
             let writer = Arc::clone(&index);
             let w = scope.spawn(move || {
@@ -424,18 +923,41 @@ mod tests {
                     writer.insert(&ds.vector(i));
                 }
             });
+            let deleter = Arc::clone(&index);
+            let dead = Arc::clone(&confirmed_dead);
+            let w2 = scope.spawn(move || {
+                let mut next = 0u32;
+                while next < 300 {
+                    if deleter.delete(next) {
+                        // Record only *after* delete returned: every id
+                        // in the set is deleted-before-now.
+                        dead.lock().unwrap().insert(next);
+                        next += 5; // kill every fifth id, in order
+                    } else {
+                        std::thread::yield_now(); // not inserted yet
+                    }
+                }
+            });
             let reader = Arc::clone(&index);
+            let dead = Arc::clone(&confirmed_dead);
             scope.spawn(move || {
                 let q = vec![0.0f32; reader.dim()];
-                while !w.is_finished() {
+                while !w.is_finished() || !w2.is_finished() {
+                    // Ids recorded before the search starts must never
+                    // appear; later deletes may legitimately race in.
+                    let dead_before: std::collections::HashSet<u32> =
+                        dead.lock().unwrap().clone();
                     let hits = reader.search_ef(&q, 10, 32);
-                    // Snapshots are never torn: no duplicate ids, sorted.
                     let mut seen = std::collections::HashSet::new();
-                    for w2 in hits.windows(2) {
-                        assert!(w2[0].0 <= w2[1].0);
+                    for pair in hits.windows(2) {
+                        assert!(pair[0].0 <= pair[1].0, "unsorted results");
                     }
                     for &(_, id) in &hits {
                         assert!(seen.insert(id), "duplicate id {id} in results");
+                        assert!(
+                            !dead_before.contains(&id),
+                            "deleted id {id} surfaced after its delete completed"
+                        );
                     }
                 }
             });
@@ -444,8 +966,14 @@ mod tests {
         index.flush();
         index.compact_all();
         let snap = index.snapshot();
-        assert_eq!(snap.total_vectors(), 600);
-        assert_eq!(snap.count(), 1);
         assert_eq!(index.len(), 600);
+        assert_eq!(index.stats().deleted, 60);
+        assert_eq!(index.live_len(), 540);
+        assert_eq!(snap.count(), 1);
+        // Reclaim happened: only live vectors remain, tombstones drained.
+        assert_eq!(snap.total_vectors(), 540);
+        assert_eq!(index.stats().tombstones, 0);
+        let final_hits = index.search_ef(&ds.vector(1), 20, 64);
+        assert!(final_hits.iter().all(|&(_, id)| !(id < 300 && id % 5 == 0)));
     }
 }

@@ -1,7 +1,9 @@
-//! Rate-controlled ingest driver: stream a dataset into a
-//! [`StreamingIndex`], answer query batches *during* ingest, and report
+//! Rate-controlled ingest/churn driver: stream a dataset into a
+//! [`StreamingIndex`] (optionally deleting a fraction of the live set
+//! as it goes), answer query batches *during* the churn, and report
 //! QPS / recall over time. Shared by the CLI `stream` subcommand, the
-//! smoke test, and `examples/streaming_ingest.rs`.
+//! smoke test, the `stream_churn` bench, and
+//! `examples/streaming_ingest.rs`.
 
 use super::engine::StreamingIndex;
 use crate::cli::Args;
@@ -9,6 +11,7 @@ use crate::config::{ConfigMap, RunConfig, StreamConfig};
 use crate::dataset::{io, Dataset};
 use crate::distance::Metric;
 use crate::eval::recall::{search_recall, GroundTruth};
+use crate::util::Rng;
 use anyhow::{Context, Result};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -18,6 +21,12 @@ use std::time::{Duration, Instant};
 pub struct IngestOptions {
     /// Target insert rate per second; 0 = unthrottled.
     pub rate: f64,
+    /// Deletes issued per insert (0..1): after each insert, a random
+    /// still-live id is deleted with this probability — the
+    /// update-churn workload the tombstone path exists for.
+    pub delete_rate: f64,
+    /// Seed of the (deterministic) delete schedule.
+    pub delete_seed: u64,
     /// Run a query batch every this many inserts (0 = final batch only).
     pub report_every: usize,
     /// Queries answered per batch.
@@ -35,6 +44,8 @@ impl Default for IngestOptions {
     fn default() -> Self {
         IngestOptions {
             rate: 0.0,
+            delete_rate: 0.0,
+            delete_seed: 0xDE1E7E,
             report_every: 2000,
             topk: 10,
             ef: 64,
@@ -50,6 +61,7 @@ impl Default for IngestOptions {
 #[derive(Clone, Copy, Debug)]
 pub struct IngestReportRow {
     pub inserted: usize,
+    pub deleted: usize,
     pub segments: usize,
     pub qps: f64,
     pub recall: f64,
@@ -60,12 +72,17 @@ pub struct IngestReportRow {
 #[derive(Clone, Debug)]
 pub struct IngestSummary {
     pub rows: Vec<IngestReportRow>,
-    /// Recall@topk of the final index over the full dataset.
+    /// Recall@topk of the final index over the live rows.
     pub final_recall: f64,
     /// Final-state query throughput (the last measured batch).
     pub final_qps: f64,
-    /// Sustained inserts/sec over the whole run (seals included).
+    /// Sustained inserts/sec over the whole run (freezes included).
     pub insert_rate: f64,
+    /// p99 single-insert latency in seconds (the seal-boundary stall
+    /// metric: off-thread sealing keeps this flat).
+    pub insert_p99_s: f64,
+    /// Deletes issued over the run.
+    pub deleted: usize,
     pub total_secs: f64,
     pub compactions: usize,
     pub segments: usize,
@@ -96,13 +113,34 @@ pub fn stream_ingest_into(
     observer: &mut dyn FnMut(&IngestReportRow),
 ) -> IngestSummary {
     assert!(!ds.is_empty(), "nothing to ingest");
+    assert!(
+        (0.0..1.0).contains(&opts.delete_rate),
+        "delete_rate must be in [0, 1)"
+    );
     let background = opts
         .background_compaction
         .then(|| Arc::clone(index).spawn_compactor(Duration::from_millis(1)));
+    let mut rng = Rng::seeded(opts.delete_seed);
+    // Still-live gids (swap-remove for O(1) random eviction) and the
+    // full delete log (sorted later for the recall measurement).
+    let mut live: Vec<u32> = Vec::with_capacity(ds.len());
+    let mut deleted: Vec<u32> = Vec::new();
     let start = Instant::now();
-    let mut rows = Vec::new();
+    let mut insert_lat: Vec<f64> = Vec::with_capacity(ds.len());
+    let mut rows: Vec<IngestReportRow> = Vec::new();
     for i in 0..ds.len() {
-        index.insert(&ds.vector(i));
+        let t = Instant::now();
+        let gid = index.insert(&ds.vector(i));
+        insert_lat.push(t.elapsed().as_secs_f64());
+        live.push(gid);
+        if opts.delete_rate > 0.0
+            && live.len() > 1
+            && (rng.gen_range(1_000_000) as f64) < opts.delete_rate * 1e6
+        {
+            let victim = live.swap_remove(rng.gen_range(live.len()));
+            assert!(index.delete(victim), "victim {victim} was live");
+            deleted.push(victim);
+        }
         if !opts.background_compaction {
             index.tick();
         }
@@ -114,7 +152,7 @@ pub fn stream_ingest_into(
             }
         }
         if opts.report_every > 0 && (i + 1) % opts.report_every == 0 && (i + 1) < ds.len() {
-            let row = measure(index, ds, queries, i + 1, opts, &start);
+            let row = measure(index, ds, queries, i + 1, &deleted, opts, &start);
             observer(&row);
             rows.push(row);
         }
@@ -127,14 +165,18 @@ pub fn stream_ingest_into(
         index.compact_all();
     }
     let total_secs = start.elapsed().as_secs_f64();
-    let final_row = measure(index, ds, queries, ds.len(), opts, &start);
+    let final_row = measure(index, ds, queries, ds.len(), &deleted, opts, &start);
     observer(&final_row);
     rows.push(final_row);
+    insert_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = insert_lat[(insert_lat.len() * 99) / 100];
     let stats = index.stats();
     IngestSummary {
         final_recall: final_row.recall,
         final_qps: final_row.qps,
         insert_rate: ds.len() as f64 / total_secs.max(1e-9),
+        insert_p99_s: p99,
+        deleted: deleted.len(),
         total_secs,
         compactions: stats.compactions,
         segments: stats.live_segments,
@@ -143,40 +185,59 @@ pub fn stream_ingest_into(
 }
 
 /// Answer the query batch against the live index and score it against
-/// exact truth over the inserted prefix (rows `0..inserted` of `ds`).
+/// exact truth over the *live* inserted prefix (rows `0..inserted` of
+/// `ds` minus the deleted gids — under churn, truth must not credit
+/// dead neighbors). Panics if a search surfaces a deleted id.
 fn measure(
     index: &StreamingIndex,
     ds: &Dataset,
     queries: &Dataset,
     inserted: usize,
+    deleted: &[u32],
     opts: &IngestOptions,
     start: &Instant,
 ) -> IngestReportRow {
+    let stats = index.stats();
     if queries.is_empty() {
         return IngestReportRow {
             inserted,
-            segments: index.stats().live_segments,
+            deleted: deleted.len(),
+            segments: stats.live_segments,
             qps: 0.0,
             recall: 0.0,
             elapsed_s: start.elapsed().as_secs_f64(),
         };
     }
-    let prefix = ds.slice_rows(0..inserted); // zero-copy view of the ingested rows
-    let truth = GroundTruth::for_queries(&prefix, queries, opts.topk, index.metric());
+    let mut dead: Vec<u32> = deleted.to_vec();
+    dead.sort_unstable();
+    // Live prefix rows (gid == row index by construction).
+    let live_idx: Vec<usize> = (0..inserted)
+        .filter(|&g| dead.binary_search(&(g as u32)).is_err())
+        .collect();
+    let live_view = ds.subset(&live_idx); // zero-copy gather view
+    let truth = GroundTruth::for_queries(&live_view, queries, opts.topk, index.metric());
     let t = Instant::now();
     let results: Vec<Vec<u32>> = (0..queries.len())
         .map(|q| {
             index
                 .search_ef(&queries.vector(q), opts.topk, opts.ef)
                 .into_iter()
-                .map(|(_, id)| id)
+                .map(|(_, gid)| {
+                    // Truth ids are live-subset positions; translate
+                    // (and hard-fail if a tombstoned id leaked out).
+                    live_idx
+                        .binary_search(&(gid as usize))
+                        .unwrap_or_else(|_| panic!("search returned deleted id {gid}"))
+                        as u32
+                })
                 .collect()
         })
         .collect();
     let secs = t.elapsed().as_secs_f64();
     IngestReportRow {
         inserted,
-        segments: index.stats().live_segments,
+        deleted: deleted.len(),
+        segments: stats.live_segments,
         qps: queries.len() as f64 / secs.max(1e-9),
         recall: search_recall(&results, &truth, opts.topk),
         elapsed_s: start.elapsed().as_secs_f64(),
@@ -210,6 +271,7 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
     cfg.stream.max_degree = args.get_usize("max-degree", cfg.stream.max_degree)?;
     cfg.stream.segment_size = args.get_usize("segment-size", cfg.stream.segment_size)?;
     cfg.stream.ef = args.get_usize("ef", cfg.stream.ef)?;
+    cfg.stream.seal_threads = args.get_usize("seal-threads", cfg.stream.seal_threads)?;
     if let Some(mode) = args.get("mode") {
         cfg.stream.mode = crate::config::StreamGraphMode::from_name(mode)
             .with_context(|| format!("unknown stream mode '{mode}'"))?;
@@ -236,29 +298,40 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
         None => cfg.family.generate_queries(n_queries, cfg.seed ^ 0x51EA),
     };
 
-    let rate = match args.get("rate") {
-        Some(v) => v
-            .parse::<f64>()
-            .map_err(|_| anyhow::anyhow!("--rate expects a number, got '{v}'"))?,
-        None => 0.0,
+    let parse_f64 = |key: &str| -> Result<f64> {
+        match args.get(key) {
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+            None => Ok(0.0),
+        }
     };
+    let rate = parse_f64("rate")?;
+    let delete_rate = parse_f64("delete-rate")?;
+    if !(0.0..1.0).contains(&delete_rate) {
+        anyhow::bail!("--delete-rate must be in [0, 1), got {delete_rate}");
+    }
     let opts = IngestOptions {
         rate,
+        delete_rate,
         report_every: args.get_usize("report-every", 2000)?,
         topk: args.get_usize("topk", 10)?,
         ef: cfg.stream.ef,
         background_compaction: args.get_flag("background"),
         final_compact: !args.get_flag("no-final-compact"),
+        ..Default::default()
     };
 
     println!(
-        "streaming ingest: {} vectors dim {} (segment_size={}, mode={}, k={}, lambda={}, rate={})",
+        "streaming ingest: {} vectors dim {} (segment_size={}, mode={}, k={}, lambda={}, \
+         seal_threads={}, rate={}, delete_rate={delete_rate})",
         ds.len(),
         ds.dim,
         cfg.stream.segment_size,
         cfg.stream.mode.name(),
         k,
         lambda,
+        cfg.stream.seal_threads,
         if rate > 0.0 {
             format!("{rate}/s")
         } else {
@@ -267,15 +340,19 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
     );
     let summary = stream_ingest(&ds, &queries, &cfg.stream, cfg.metric, &opts, &mut |row| {
         println!(
-            "  t={:6.2}s  inserted {:>8}  segments {:>3}  qps {:>8.0}  recall@{} {:.4}",
-            row.elapsed_s, row.inserted, row.segments, row.qps, opts.topk, row.recall
+            "  t={:6.2}s  inserted {:>8}  deleted {:>7}  segments {:>3}  qps {:>8.0}  \
+             recall@{} {:.4}",
+            row.elapsed_s, row.inserted, row.deleted, row.segments, row.qps, opts.topk, row.recall
         );
     });
     println!(
-        "final: recall@{} {:.4}  inserts/s {:.0}  compactions {}  live segments {}  total {:.2}s",
+        "final: recall@{} {:.4}  inserts/s {:.0}  insert p99 {:.2}ms  deleted {}  \
+         compactions {}  live segments {}  total {:.2}s",
         opts.topk,
         summary.final_recall,
         summary.insert_rate,
+        summary.insert_p99_s * 1e3,
+        summary.deleted,
         summary.compactions,
         summary.segments,
         summary.total_secs
@@ -353,5 +430,45 @@ mod tests {
         // 50 inserts at 1000/s >= 50ms of wall clock.
         assert!(summary.total_secs >= 0.045, "took {}", summary.total_secs);
         assert!(summary.insert_rate <= 1200.0);
+    }
+
+    #[test]
+    fn churn_deletes_are_filtered_and_reclaimed() {
+        let ds = DatasetFamily::Deep.generate(800, 34);
+        let queries = DatasetFamily::Deep.generate_queries(12, 35);
+        let cfg = StreamConfig {
+            segment_size: 160,
+            merge: MergeParams {
+                k: 10,
+                lambda: 10,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let index = Arc::new(StreamingIndex::new(ds.dim, Metric::L2, cfg.clone()));
+        let summary = stream_ingest_into(
+            &index,
+            &ds,
+            &queries,
+            &IngestOptions {
+                delete_rate: 0.25,
+                report_every: 250,
+                ..Default::default()
+            },
+            // measure() panics if a search ever surfaces a deleted id,
+            // so the observer doubles as the safety assertion.
+            &mut |_| {},
+        );
+        assert!(summary.deleted > 100, "deletes ran: {}", summary.deleted);
+        assert_eq!(summary.segments, 1);
+        // Reclaim, not masking: the compacted index holds live rows only.
+        let snap = index.snapshot();
+        assert_eq!(snap.total_vectors(), 800 - summary.deleted);
+        assert_eq!(index.stats().tombstones, 0);
+        assert!(
+            summary.final_recall > 0.8,
+            "recall under churn = {}",
+            summary.final_recall
+        );
     }
 }

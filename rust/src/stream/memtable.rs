@@ -1,79 +1,170 @@
 //! The mutable ingest buffer: absorbs `insert` calls until it reaches
-//! `segment_size`, then drains into a sealed [`super::Segment`].
+//! `segment_size`, then drains into a frozen batch the seal pipeline
+//! turns into a [`super::Segment`].
 //!
-//! Queries scan it brute-force — it is small by construction, and exact
-//! answers over the freshest vectors cost one pass of at most
-//! `segment_size` distances.
+//! Layout: rows accumulate in a small mutable `tail`; every
+//! [`BLOCK_ROWS`] rows the tail is frozen into an immutable,
+//! `Arc`-backed [`Dataset`] slab. That split is what makes
+//! [`MemTable::snapshot`] cheap — a snapshot clones the slab views
+//! (zero-copy, the PR 2 `VectorStore` discipline) and copies only the
+//! sub-slab tail, so queries scan the memtable **outside** its mutex
+//! instead of serializing against inserts for the whole brute-force
+//! pass.
 //!
-//! The buffer is a raw `Vec<f32>`; [`MemTable::drain`] hands the
-//! allocation itself to the sealed segment's [`Dataset`] (one move, zero
-//! vector copies — the seal path's contribution to the storage layer's
-//! zero-copy discipline).
+//! [`MemTable::drain`] concatenates the slabs and the tail into one
+//! (chained, zero-copy) `Dataset` view; no per-vector copying happens
+//! on the insert path at seal time.
 
+use super::tombstones::TombstoneSet;
 use crate::dataset::Dataset;
 use crate::distance::Metric;
 use crate::graph::NeighborList;
+use std::sync::Arc;
+
+/// Rows per frozen slab. Small enough that the tail copy a snapshot
+/// pays is negligible, large enough that a sealed segment chains a
+/// handful of blocks, not hundreds.
+pub const BLOCK_ROWS: usize = 64;
 
 /// A small mutable buffer of `(vector, global id)` pairs.
 #[derive(Clone, Debug)]
 pub struct MemTable {
-    buf: Vec<f32>,
     dim: usize,
-    global_ids: Vec<u32>,
+    /// Immutable filled slabs (zero-copy `Arc` views) + their gids.
+    blocks: Vec<(Dataset, Arc<Vec<u32>>)>,
+    /// The mutable tail, fewer than [`BLOCK_ROWS`] rows.
+    tail: Vec<f32>,
+    tail_gids: Vec<u32>,
+}
+
+/// An immutable view of the memtable at one instant: slab views are
+/// shared, the tail is copied. Searchable without any lock held.
+#[derive(Clone, Debug)]
+pub struct MemSnapshot {
+    dim: usize,
+    blocks: Vec<(Dataset, Arc<Vec<u32>>)>,
+    tail: Vec<f32>,
+    tail_gids: Vec<u32>,
 }
 
 impl MemTable {
     pub fn new(dim: usize) -> MemTable {
         assert!(dim > 0, "dim must be positive");
         MemTable {
-            buf: Vec::new(),
             dim,
-            global_ids: Vec::new(),
+            blocks: Vec::new(),
+            tail: Vec::new(),
+            tail_gids: Vec::new(),
         }
     }
 
     #[inline]
     pub fn len(&self) -> usize {
-        self.global_ids.len()
+        self.blocks.len() * BLOCK_ROWS + self.tail_gids.len()
     }
 
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.global_ids.is_empty()
+        self.blocks.is_empty() && self.tail_gids.is_empty()
     }
 
     /// Append one vector under the given global id.
     pub fn insert(&mut self, v: &[f32], global_id: u32) {
         assert_eq!(v.len(), self.dim);
-        self.buf.extend_from_slice(v);
-        self.global_ids.push(global_id);
+        self.tail.extend_from_slice(v);
+        self.tail_gids.push(global_id);
+        if self.tail_gids.len() == BLOCK_ROWS {
+            let data = Dataset::from_raw(std::mem::take(&mut self.tail), self.dim);
+            let gids = Arc::new(std::mem::take(&mut self.tail_gids));
+            self.blocks.push((data, gids));
+        }
     }
 
-    #[inline]
-    fn row(&self, r: usize) -> &[f32] {
-        &self.buf[r * self.dim..(r + 1) * self.dim]
+    /// A searchable view of the current contents: slab `Arc` clones
+    /// plus a copy of the (sub-slab) tail. O(blocks + BLOCK_ROWS), so
+    /// the memtable mutex is held for a bound independent of
+    /// `segment_size`.
+    pub fn snapshot(&self) -> MemSnapshot {
+        MemSnapshot {
+            dim: self.dim,
+            blocks: self.blocks.clone(),
+            tail: self.tail.clone(),
+            tail_gids: self.tail_gids.clone(),
+        }
     }
 
     /// Exact brute-force scan: up to `topk` `(distance, global id)` hits
-    /// ascending by distance.
+    /// ascending by distance. (Convenience over `snapshot()` — the
+    /// engine snapshots instead and searches outside the lock.)
     pub fn search(&self, metric: Metric, query: &[f32], topk: usize) -> Vec<(f32, u32)> {
+        self.snapshot()
+            .search(metric, query, topk, &TombstoneSet::empty())
+    }
+
+    /// Take the buffered contents (insertion order preserved), leaving
+    /// the memtable empty. The returned dataset chains the frozen slabs
+    /// and the tail allocation — no per-vector copying happens here.
+    pub fn drain(&mut self) -> (Dataset, Vec<u32>) {
+        let mut gids = Vec::with_capacity(self.len());
+        let mut parts: Vec<Dataset> = Vec::with_capacity(self.blocks.len() + 1);
+        for (data, block_gids) in self.blocks.drain(..) {
+            gids.extend_from_slice(&block_gids);
+            parts.push(data);
+        }
+        if !self.tail_gids.is_empty() {
+            gids.append(&mut self.tail_gids);
+            parts.push(Dataset::from_raw(std::mem::take(&mut self.tail), self.dim));
+        }
+        let data = match parts.len() {
+            0 => Dataset::from_raw(Vec::new(), self.dim),
+            1 => parts.pop().unwrap(),
+            _ => Dataset::concat(&parts.iter().collect::<Vec<_>>()),
+        };
+        (data, gids)
+    }
+}
+
+impl MemSnapshot {
+    pub fn len(&self) -> usize {
+        self.blocks.len() * BLOCK_ROWS + self.tail_gids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty() && self.tail_gids.is_empty()
+    }
+
+    /// Exact brute-force scan of the snapshot, skipping tombstoned
+    /// gids: up to `topk` `(distance, global id)` hits ascending.
+    pub fn search(
+        &self,
+        metric: Metric,
+        query: &[f32],
+        topk: usize,
+        tombs: &TombstoneSet,
+    ) -> Vec<(f32, u32)> {
         let mut list = NeighborList::new(topk.max(1));
-        for (row, &gid) in self.global_ids.iter().enumerate() {
-            let d = metric.distance(query, self.row(row));
+        for (data, gids) in &self.blocks {
+            for (row, &gid) in gids.iter().enumerate() {
+                if tombs.contains(gid) {
+                    continue;
+                }
+                let d = metric.distance(query, &data.vector(row));
+                if d < list.threshold() {
+                    list.insert(gid, d, false);
+                }
+            }
+        }
+        for (row, &gid) in self.tail_gids.iter().enumerate() {
+            if tombs.contains(gid) {
+                continue;
+            }
+            let v = &self.tail[row * self.dim..(row + 1) * self.dim];
+            let d = metric.distance(query, v);
             if d < list.threshold() {
                 list.insert(gid, d, false);
             }
         }
         list.iter().map(|nb| (nb.dist, nb.id)).collect()
-    }
-
-    /// Take the buffered contents (insertion order preserved), leaving
-    /// the memtable empty. The returned dataset owns the buffer
-    /// allocation — no per-vector copying happens here.
-    pub fn drain(&mut self) -> (Dataset, Vec<u32>) {
-        let data = std::mem::take(&mut self.buf);
-        let gids = std::mem::take(&mut self.global_ids);
-        (Dataset::from_raw(data, self.dim), gids)
     }
 }
 
@@ -115,5 +206,59 @@ mod tests {
         // The memtable stays usable after a drain.
         mt.insert(&[4.0, 5.0], 10);
         assert_eq!(mt.len(), 1);
+    }
+
+    #[test]
+    fn drain_spans_slab_boundaries() {
+        // More than one frozen slab plus a partial tail.
+        let n = BLOCK_ROWS * 2 + 13;
+        let ds = DatasetFamily::Deep.generate(n, 3);
+        let mut mt = MemTable::new(ds.dim);
+        for i in 0..n {
+            mt.insert(&ds.vector(i), i as u32);
+        }
+        assert_eq!(mt.len(), n);
+        let (data, gids) = mt.drain();
+        assert_eq!(data.len(), n);
+        assert_eq!(gids.len(), n);
+        for i in 0..n {
+            assert_eq!(gids[i], i as u32);
+            assert_eq!(data.vector(i), ds.vector(i), "row {i}");
+        }
+        assert!(mt.is_empty());
+    }
+
+    #[test]
+    fn snapshot_is_stable_under_later_inserts() {
+        let ds = DatasetFamily::Sift.generate(BLOCK_ROWS + 10, 4);
+        let mut mt = MemTable::new(ds.dim);
+        for i in 0..BLOCK_ROWS + 5 {
+            mt.insert(&ds.vector(i), i as u32);
+        }
+        let snap = mt.snapshot();
+        assert_eq!(snap.len(), BLOCK_ROWS + 5);
+        // Later inserts are invisible to the snapshot.
+        for i in BLOCK_ROWS + 5..BLOCK_ROWS + 10 {
+            mt.insert(&ds.vector(i), i as u32);
+        }
+        assert_eq!(snap.len(), BLOCK_ROWS + 5);
+        let probe = BLOCK_ROWS + 2; // lives in the snapshot's tail copy
+        let hits = snap.search(Metric::L2, &ds.vector(probe), 1, &TombstoneSet::empty());
+        assert_eq!(hits[0].1 as usize, probe);
+    }
+
+    #[test]
+    fn snapshot_search_filters_tombstones() {
+        let ds = DatasetFamily::Deep.generate(40, 5);
+        let mut mt = MemTable::new(ds.dim);
+        for i in 0..40 {
+            mt.insert(&ds.vector(i), i as u32);
+        }
+        let tombs = TombstoneSet::empty().with_all(&[17]);
+        let hits = mt
+            .snapshot()
+            .search(Metric::L2, &ds.vector(17), 40, &tombs);
+        assert!(hits.iter().all(|&(_, id)| id != 17));
+        assert!(!hits.is_empty());
     }
 }

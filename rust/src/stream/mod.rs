@@ -16,15 +16,23 @@
 //!   — the same hierarchy as the batch Fig. 3a build, unrolled in time.
 //! - [`snapshot`] — the immutable segment-set view queries run against.
 //! - [`engine`] — the user-facing [`StreamingIndex`]: concurrent
-//!   `insert`/`search`/`tick`, with atomic `Arc` snapshot swaps so
-//!   queries never observe a torn segment set.
-//! - [`ingest`] — the rate-controlled ingest driver behind the CLI
-//!   `stream` subcommand, the smoke test, and the example.
+//!   `insert`/`delete`/`search`/`tick`, with atomic `Arc` snapshot
+//!   swaps so queries never observe a torn segment set. Memtable
+//!   freezes are built into segments **off-thread** (a `sealing`
+//!   in-flight list keeps frozen rows searchable), so inserts never
+//!   block on graph construction.
+//! - [`tombstones`] — the delete ledger: an epoch-stamped, atomically
+//!   swapped [`TombstoneSet`]; deletes mask immediately, compaction
+//!   *reclaims* (dead nodes are dropped from the pair space and their
+//!   reverse neighbors repaired before the merge).
+//! - [`ingest`] — the rate-controlled ingest/churn driver behind the
+//!   CLI `stream` subcommand, the smoke test, and the example.
 //!
-//! Tuning: `segment_size` trades ingest latency (seal and compaction
-//! pauses grow with it) against search fan-out (smaller segments mean
-//! more per-query probes); `lambda` plays its usual merge cost/quality
-//! role, paid once per compaction.
+//! Tuning: `segment_size` trades seal-batch granularity against search
+//! fan-out (smaller segments mean more per-query probes);
+//! `seal_threads` sizes the off-thread seal pool (0 = inline builds);
+//! `lambda` plays its usual merge cost/quality role, paid once per
+//! compaction.
 
 pub mod compactor;
 pub mod engine;
@@ -32,10 +40,12 @@ pub mod ingest;
 pub mod memtable;
 pub mod segment;
 pub mod snapshot;
+pub mod tombstones;
 
 pub use compactor::{Compaction, Compactor};
 pub use engine::{CompactorHandle, StreamStats, StreamingIndex};
 pub use ingest::{stream_ingest, stream_ingest_into, IngestOptions, IngestSummary};
-pub use memtable::MemTable;
+pub use memtable::{MemSnapshot, MemTable};
 pub use segment::Segment;
 pub use snapshot::{merge_topk, SegmentSet};
+pub use tombstones::TombstoneSet;

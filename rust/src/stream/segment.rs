@@ -9,6 +9,7 @@
 //! [`StreamGraphMode`]).
 
 use super::snapshot::merge_topk;
+use super::tombstones::TombstoneSet;
 use crate::config::{StreamConfig, StreamGraphMode};
 use crate::construction::{bruteforce, NnDescent};
 use crate::dataset::Dataset;
@@ -130,19 +131,43 @@ impl Segment {
         self.global_ids[local]
     }
 
-    /// Best-first search within the segment (from every entry vertex);
-    /// results are `(distance, global id)` ascending by distance.
-    pub fn search(&self, metric: Metric, query: &[f32], topk: usize, ef: usize) -> Vec<(f32, u32)> {
+    /// Best-first search within the segment (from every entry vertex),
+    /// skipping tombstoned global ids; results are `(distance, global
+    /// id)` ascending by distance. Dead nodes still *route* — the beam
+    /// traverses them like any other vertex, preserving navigability —
+    /// they just never appear in the results. When tombstones are live
+    /// the beam is asked for extra candidates so a run of dead hits
+    /// cannot starve the top-k.
+    pub fn search(
+        &self,
+        metric: Metric,
+        query: &[f32],
+        topk: usize,
+        ef: usize,
+        tombs: &TombstoneSet,
+    ) -> Vec<(f32, u32)> {
+        // With tombstones live, take the beam's whole ef-wide pool: it
+        // is already visited and ranked, so a dead-dense neighborhood
+        // (up to ef - topk dead hits) cannot starve the live top-k.
+        let fetch = if tombs.is_empty() {
+            topk
+        } else {
+            ef.max(topk).min(self.len())
+        };
         let parts: Vec<Vec<(f32, u32)>> = self
             .entries
             .iter()
             .map(|&entry| {
                 let (ids, _) =
-                    beam_search_from(&self.data, metric, &self.index, entry, query, topk, ef);
+                    beam_search_from(&self.data, metric, &self.index, entry, query, fetch, ef);
                 ids.into_iter()
-                    .map(|local| {
+                    .filter_map(|local| {
+                        let gid = self.global_ids[local as usize];
+                        if tombs.contains(gid) {
+                            return None;
+                        }
                         let d = metric.distance(query, &self.data.vector(local as usize));
-                        (d, self.global_ids[local as usize])
+                        Some((d, gid))
                     })
                     .collect()
             })
@@ -274,7 +299,7 @@ mod tests {
         let cfg = cfg_k(8);
         let gids: Vec<u32> = (0..250).map(|i| i * 2).collect(); // sparse ids
         let seg = Segment::seal(0, 0, ds.clone(), gids, Metric::L2, &cfg);
-        let hits = seg.search(Metric::L2, &ds.vector(17), 5, 64);
+        let hits = seg.search(Metric::L2, &ds.vector(17), 5, 64, &TombstoneSet::empty());
         assert!(!hits.is_empty());
         // Exact match first, mapped through the sparse global ids.
         assert_eq!(hits[0].1, 34);
@@ -282,6 +307,11 @@ mod tests {
         for w in hits.windows(2) {
             assert!(w[0].0 <= w[1].0);
         }
+        // Tombstoning the exact match hides it but keeps the rest.
+        let tombs = TombstoneSet::empty().with(34);
+        let filtered = seg.search(Metric::L2, &ds.vector(17), 5, 64, &tombs);
+        assert!(!filtered.is_empty());
+        assert!(filtered.iter().all(|&(_, id)| id != 34));
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! compaction swap can never tear the set mid-query.
 
 use super::segment::Segment;
+use super::tombstones::TombstoneSet;
 use std::sync::Arc;
 
 /// An immutable snapshot of the live segments, ordered by segment id.
@@ -38,18 +39,20 @@ impl SegmentSet {
     }
 
     /// Fan a query out across every segment and merge-sort the
-    /// per-segment top-k into a global `(distance, global id)` top-k.
+    /// per-segment top-k into a global `(distance, global id)` top-k,
+    /// with tombstoned ids filtered inside each per-segment search.
     pub fn search(
         &self,
         metric: crate::distance::Metric,
         query: &[f32],
         topk: usize,
         ef: usize,
+        tombs: &TombstoneSet,
     ) -> Vec<(f32, u32)> {
         let parts: Vec<Vec<(f32, u32)>> = self
             .segments
             .iter()
-            .map(|s| s.search(metric, query, topk, ef))
+            .map(|s| s.search(metric, query, topk, ef, tombs))
             .collect();
         merge_topk(parts, topk)
     }
@@ -94,7 +97,13 @@ mod tests {
         assert_eq!(s.total_vectors(), 0);
         assert!(s.level_histogram().is_empty());
         assert!(s
-            .search(crate::distance::Metric::L2, &[0.0; 4], 5, 10)
+            .search(
+                crate::distance::Metric::L2,
+                &[0.0; 4],
+                5,
+                10,
+                &TombstoneSet::empty()
+            )
             .is_empty());
     }
 }

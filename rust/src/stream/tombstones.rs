@@ -1,0 +1,117 @@
+//! Tombstones: the stream's delete ledger.
+//!
+//! A delete never mutates a sealed segment — segments are immutable by
+//! design. Instead the engine keeps an epoch-stamped [`TombstoneSet`]
+//! behind an atomically swapped `Arc` (copy-on-write, like the segment
+//! set itself): `delete(gid)` publishes a new set containing `gid`,
+//! readers snapshot the `Arc` once per query and filter results against
+//! it. Dead vectors are physically *reclaimed* when compaction next
+//! touches their segment (see `compactor::fuse_reclaim`), at which
+//! point their tombstones are purged from the set too — so the set's
+//! size is bounded by the deletes still awaiting compaction, not by
+//! the lifetime delete count.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+/// An immutable snapshot of the dead global ids, plus the epoch at
+/// which it was published (monotone; every delete or purge bumps it).
+#[derive(Clone, Debug, Default)]
+pub struct TombstoneSet {
+    epoch: u64,
+    dead: HashSet<u32>,
+}
+
+impl TombstoneSet {
+    /// The empty set at epoch 0 (a fresh stream's delete ledger).
+    pub fn empty() -> TombstoneSet {
+        TombstoneSet::default()
+    }
+
+    /// An empty set behind an `Arc`, ready for atomic swapping.
+    pub fn shared_empty() -> Arc<TombstoneSet> {
+        Arc::new(TombstoneSet::default())
+    }
+
+    /// Whether `gid` is deleted.
+    #[inline]
+    pub fn contains(&self, gid: u32) -> bool {
+        !self.dead.is_empty() && self.dead.contains(&gid)
+    }
+
+    /// Number of dead ids not yet reclaimed by compaction.
+    pub fn len(&self) -> usize {
+        self.dead.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dead.is_empty()
+    }
+
+    /// The snapshot's publication epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The set plus `gid`, one epoch later (copy-on-write step of
+    /// `StreamingIndex::delete`). Each step clones the pending set, so
+    /// a burst of D singleton deletes between compactions costs
+    /// O(D^2) hash copies — bulk callers should use
+    /// `StreamingIndex::delete_batch` / [`TombstoneSet::with_all`]
+    /// (one clone per batch); the set itself stays small because
+    /// compaction and seal-time drops keep purging it.
+    pub fn with(&self, gid: u32) -> TombstoneSet {
+        let mut dead = self.dead.clone();
+        dead.insert(gid);
+        TombstoneSet {
+            epoch: self.epoch + 1,
+            dead,
+        }
+    }
+
+    /// The set plus every id in `gids`, one epoch later (batch form —
+    /// one copy for the whole batch).
+    pub fn with_all(&self, gids: &[u32]) -> TombstoneSet {
+        let mut dead = self.dead.clone();
+        dead.extend(gids.iter().copied());
+        TombstoneSet {
+            epoch: self.epoch + 1,
+            dead,
+        }
+    }
+
+    /// The set minus every id in `gids`, one epoch later (compaction
+    /// purging the tombstones of the nodes it just reclaimed).
+    pub fn without(&self, gids: &[u32]) -> TombstoneSet {
+        let mut dead = self.dead.clone();
+        for g in gids {
+            dead.remove(g);
+        }
+        TombstoneSet {
+            epoch: self.epoch + 1,
+            dead,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cow_steps_bump_the_epoch() {
+        let t0 = TombstoneSet::empty();
+        assert!(t0.is_empty());
+        assert_eq!(t0.epoch(), 0);
+        let t1 = t0.with(7);
+        assert!(t1.contains(7) && !t0.contains(7));
+        assert_eq!(t1.epoch(), 1);
+        let t2 = t1.with_all(&[8, 9]);
+        assert_eq!(t2.len(), 3);
+        let t3 = t2.without(&[7, 9]);
+        assert_eq!(t3.epoch(), 3);
+        assert!(!t3.contains(7) && t3.contains(8) && !t3.contains(9));
+        // Earlier snapshots are untouched (readers keep a stable view).
+        assert_eq!(t2.len(), 3);
+    }
+}

@@ -6,6 +6,8 @@
 #   SKIP_CLIPPY=1 bash scripts/verify.sh   # skip the clippy step
 #   SKIP_FMT=1 bash scripts/verify.sh      # skip the rustfmt step
 #   FMT_FIX=0 bash scripts/verify.sh       # check-only formatting
+#   SKIP_CHURN_SMOKE=1 bash scripts/verify.sh   # skip the ~5s bench smoke
+#   CHURN_SMOKE_SCALE=0.5 bash scripts/verify.sh # bigger smoke workload
 #
 # `cargo fmt` / `cargo clippy` are skipped automatically when the
 # component is not installed (minimal CI containers); the build + test
@@ -20,20 +22,32 @@ cargo build --release
 cargo build --benches
 cargo test -q
 
+# Churn smoke (~5s at this scale): the stream_churn bench must run end
+# to end — inserts, deletes, off-thread seals, reclaim, and the
+# batch-rebuild baseline — so the QPS-under-churn numbers can't bit-rot
+# between full bench runs. Scale up via CHURN_SMOKE_SCALE.
+if [ "${SKIP_CHURN_SMOKE:-0}" != "1" ]; then
+  KNN_BENCH_SCALE="${CHURN_SMOKE_SCALE:-0.05}" cargo bench --bench stream_churn
+fi
+
 # Formatting is a hard gate (STRICT_FMT defaults to on). FMT_FIX=1 (the
 # default) applies `cargo fmt` first, so the one-time initial reflow —
 # and any later drift — is absorbed in the same run that checks it;
 # set FMT_FIX=0 for check-only CI behaviour.
 if [ "${SKIP_FMT:-0}" != "1" ] && cargo fmt --version >/dev/null 2>&1; then
   if [ "${FMT_FIX:-1}" = "1" ]; then
-    # Apply first, then gate: the one-time reflow (and any later drift)
-    # is absorbed in the same run that checks it — but never silently.
+    # Apply first, then gate: the reflow is written into the tree so
+    # the session can commit it immediately — but drift is still a
+    # *failure* (exit 1 below), never an always-pass path.
     before=$(git -C . status --porcelain 2>/dev/null || true)
     cargo fmt
     after=$(git -C . status --porcelain 2>/dev/null || true)
     if [ "$before" != "$after" ]; then
-      echo "NOTE: cargo fmt rewrote files — review and commit the reflow:"
+      echo "cargo fmt rewrote files — the reflow is applied, commit it and re-run:"
       git -C . diff --stat 2>/dev/null || true
+      if [ "${STRICT_FMT:-1}" = "1" ]; then
+        exit 1
+      fi
     fi
   fi
   if ! cargo fmt --check; then
