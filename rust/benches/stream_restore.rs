@@ -1,0 +1,161 @@
+//! Durability bench: checkpoint → kill → restore over a churned segment
+//! log. Measures checkpoint cost (cold spill vs. warm reuse), restore
+//! cost (eager vs. demand-paged under a `MemoryBudget`), on-disk
+//! footprint, and verifies the restored index answers a probe set
+//! bit-identically before reporting. Emits `results/stream_restore.json`.
+//!
+//! verify.sh runs this at a small scale (`KNN_BENCH_SCALE`) as the
+//! checkpoint→kill→restore smoke, so a broken durability path fails
+//! tier-1 CI even between full bench runs.
+
+use knn_merge::config::StreamConfig;
+use knn_merge::dataset::{DatasetFamily, MemoryBudget};
+use knn_merge::distance::Metric;
+use knn_merge::eval::bench::{scaled, time, BenchReport, Row};
+use knn_merge::merge::MergeParams;
+use knn_merge::stream::{RestoreOptions, StreamingIndex};
+use std::sync::Arc;
+
+const K: usize = 10;
+const DELETE_EVERY: usize = 7;
+const UPSERT_EVERY: usize = 11;
+
+fn dir_bytes(dir: &std::path::Path) -> u64 {
+    std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter_map(|e| e.metadata().ok())
+                .map(|m| m.len())
+                .sum()
+        })
+        .unwrap_or(0)
+}
+
+fn main() {
+    let n = scaled(20_000);
+    let ds = DatasetFamily::Sift.generate(2 * n, 42);
+    let queries = DatasetFamily::Sift.generate_queries(50, 7);
+    let segment_size = (n / 8).max(128);
+    let cfg = StreamConfig {
+        segment_size,
+        seal_threads: 0, // deterministic: the checkpoint is an exact cut
+        merge: MergeParams {
+            k: K,
+            lambda: K,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let dir = std::env::temp_dir().join(format!(
+        "knnmerge-bench-restore-{}",
+        knn_merge::util::unique_scratch_suffix()
+    ));
+
+    let mut report = BenchReport::new("stream_restore");
+    report.note(format!(
+        "checkpoint -> kill -> restore, sift-like n={n} dim={} k={K} \
+         segment_size={segment_size}, delete every {DELETE_EVERY}th, \
+         upsert every {UPSERT_EVERY}th insert",
+        ds.dim
+    ));
+    report.note(
+        "restore_paged loads vectors demand-paged and streams graphs through \
+         block faults under a 16 MiB budget; probes must match the pre-kill \
+         index bit-for-bit in every mode.",
+    );
+
+    // Build a churned log: inserts with interleaved deletes + upserts.
+    let index = StreamingIndex::new(ds.dim, Metric::L2, cfg.clone());
+    for i in 0..n {
+        let gid = index.insert(&ds.vector(i));
+        if i % DELETE_EVERY == DELETE_EVERY - 1 {
+            index.delete(gid - 2);
+        }
+        if i % UPSERT_EVERY == UPSERT_EVERY - 1 {
+            index.upsert(gid - 1, &ds.vector(n + i));
+        }
+        index.tick();
+    }
+    index.flush();
+    let pre_stats = index.stats();
+    let probes: Vec<Vec<(f32, u32)>> = (0..queries.len())
+        .map(|q| index.search_ef(&queries.vector(q), 10, 64))
+        .collect();
+
+    let (ckpt_cold, cold_secs) = time(|| index.checkpoint(&dir).unwrap());
+    report.push(
+        Row::new("checkpoint_cold")
+            .col("secs", cold_secs)
+            .col("segments", ckpt_cold.segments as f64)
+            .col("files_written", ckpt_cold.segment_files_written as f64)
+            .col("manifest_kib", ckpt_cold.manifest_bytes as f64 / 1024.0)
+            .col("dir_mib", dir_bytes(&dir) as f64 / (1 << 20) as f64),
+    );
+    // Warm checkpoint: unchanged log, every spill reused.
+    let (ckpt_warm, warm_secs) = time(|| index.checkpoint(&dir).unwrap());
+    report.push(
+        Row::new("checkpoint_warm")
+            .col("secs", warm_secs)
+            .col("files_written", ckpt_warm.segment_files_written as f64)
+            .col("files_reused", ckpt_warm.segment_files_reused as f64),
+    );
+    drop(index); // the kill
+
+    for (label, opts, budget) in [
+        ("restore_eager", RestoreOptions::default(), None),
+        {
+            let budget = MemoryBudget::bounded(16 << 20);
+            (
+                "restore_paged",
+                RestoreOptions::paged(Arc::clone(&budget)),
+                Some(budget),
+            )
+        },
+    ] {
+        let (restored, secs) = time(|| {
+            StreamingIndex::restore(&dir, cfg.clone(), &opts).unwrap()
+        });
+        let st = restored.stats();
+        assert_eq!(st.live_segments, pre_stats.live_segments);
+        assert_eq!(restored.live_len(), pre_stats.inserted - pre_stats.deleted);
+        // Bit-identical probes or the restore is broken — fail loudly.
+        let (qps, qsecs) = {
+            let t = std::time::Instant::now();
+            for (q, expect) in probes.iter().enumerate() {
+                let got = restored.search_ef(&queries.vector(q), 10, 64);
+                assert_eq!(&got, expect, "restored probe {q} diverged");
+            }
+            let s = t.elapsed().as_secs_f64();
+            (probes.len() as f64 / s.max(1e-9), s)
+        };
+        let mut row = Row::new(label)
+            .col("secs", secs)
+            .col("segments", st.live_segments as f64)
+            .col("probe_qps", qps)
+            .col("probe_secs", qsecs);
+        if let Some(b) = &budget {
+            row = row
+                .col("faults", b.faults() as f64)
+                .col("peak_resident_mib", b.peak_resident_bytes() as f64 / (1 << 20) as f64);
+        }
+        report.push(row);
+    }
+
+    // Torn-write drill: a half-written MANIFEST.tmp and a stray spill
+    // must not stop the previous checkpoint from loading.
+    let manifest = std::fs::read(dir.join("MANIFEST")).unwrap();
+    std::fs::write(dir.join("MANIFEST.tmp"), &manifest[..manifest.len() / 2]).unwrap();
+    std::fs::write(dir.join("seg-424242.vec"), b"torn").unwrap();
+    let (survivor, secs) = time(|| {
+        StreamingIndex::restore(&dir, cfg.clone(), &RestoreOptions::default()).unwrap()
+    });
+    assert_eq!(
+        survivor.stats().live_segments,
+        pre_stats.live_segments,
+        "torn tmp write must not affect the published checkpoint"
+    );
+    report.push(Row::new("restore_after_torn_write").col("secs", secs));
+
+    report.finish();
+    std::fs::remove_dir_all(&dir).ok();
+}

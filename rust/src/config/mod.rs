@@ -139,6 +139,12 @@ pub struct StreamConfig {
     /// construction. `0` builds inline on the inserting thread
     /// (deterministic; the pre-off-thread-seal behaviour).
     pub seal_threads: usize,
+    /// Dead-fraction compaction trigger: when a segment's tombstoned
+    /// share reaches this fraction, `tick()` rewrites that segment in
+    /// place (purge + repair, level preserved) *before* consulting the
+    /// geometric schedule — deletes and upserts reclaim space without
+    /// waiting for a same-level partner. `0.0` disables the trigger.
+    pub compact_dead_fraction: f64,
     /// Compaction / graph parameters (k, lambda, delta, iters, seed).
     pub merge: MergeParams,
     /// Segment-build parameters (NN-Descent above `brute_threshold`).
@@ -156,6 +162,7 @@ impl Default for StreamConfig {
             max_degree: merge.k,
             ef: 64,
             seal_threads: 1,
+            compact_dead_fraction: 0.25,
             merge,
             nnd: NnDescentParams::default(),
         }
@@ -192,7 +199,63 @@ impl StreamConfig {
         if let Some(v) = map.get_usize("stream.seal_threads")? {
             self.seal_threads = v;
         }
+        if let Some(v) = map.get_f64("stream.compact_dead_fraction")? {
+            if !(0.0..=1.0).contains(&v) {
+                bail!("stream.compact_dead_fraction must be in [0, 1], got {v}");
+            }
+            self.compact_dead_fraction = v;
+        }
         Ok(())
+    }
+
+    /// Fingerprint of the parameters that shape persisted graph state
+    /// (`stream::persist` stores it in the checkpoint manifest; restore
+    /// refuses a mismatch, since segments built under different k /
+    /// lambda / seeds would silently mix incompatible graphs). Runtime
+    /// knobs that do not affect stored structure — `ef`,
+    /// `seal_threads`, `compact_dead_fraction` — are deliberately
+    /// excluded, so a restored log may retune them freely.
+    pub fn fingerprint(&self) -> u64 {
+        // FNV-1a 64 over the field values in a fixed order.
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        };
+        mix(1); // fingerprint schema version
+        mix(self.segment_size as u64);
+        mix(self.brute_threshold as u64);
+        mix(match self.mode {
+            StreamGraphMode::Knn => 0,
+            StreamGraphMode::Index => 1,
+        });
+        mix(self.alpha.to_bits() as u64);
+        mix(self.max_degree as u64);
+        for p in [
+            (
+                self.merge.k,
+                self.merge.lambda,
+                self.merge.delta,
+                self.merge.max_iters,
+                self.merge.seed,
+            ),
+            (
+                self.nnd.k,
+                self.nnd.lambda,
+                self.nnd.delta,
+                self.nnd.max_iters,
+                self.nnd.seed,
+            ),
+        ] {
+            mix(p.0 as u64);
+            mix(p.1 as u64);
+            mix(p.2.to_bits());
+            mix(p.3 as u64);
+            mix(p.4);
+        }
+        h
     }
 }
 
@@ -422,6 +485,39 @@ seal_threads = 3
         assert!(RunConfig::from_map(&map).is_err());
         let map = ConfigMap::parse("[stream]\nmode = bogus").unwrap();
         assert!(RunConfig::from_map(&map).is_err());
+        let map = ConfigMap::parse("[stream]\ncompact_dead_fraction = 1.5").unwrap();
+        assert!(RunConfig::from_map(&map).is_err());
+    }
+
+    #[test]
+    fn compact_dead_fraction_parses_and_disables() {
+        let cfg = RunConfig::default();
+        assert!((cfg.stream.compact_dead_fraction - 0.25).abs() < 1e-9);
+        let map = ConfigMap::parse("[stream]\ncompact_dead_fraction = 0").unwrap();
+        let cfg = RunConfig::from_map(&map).unwrap();
+        assert_eq!(cfg.stream.compact_dead_fraction, 0.0, "0 disables");
+    }
+
+    #[test]
+    fn fingerprint_tracks_graph_shaping_knobs_only() {
+        let base = StreamConfig::default();
+        assert_eq!(base.fingerprint(), StreamConfig::default().fingerprint());
+        // Structure-shaping changes move the fingerprint...
+        let mut k = base.clone();
+        k.merge.k += 1;
+        assert_ne!(k.fingerprint(), base.fingerprint());
+        let mut seg = base.clone();
+        seg.segment_size += 1;
+        assert_ne!(seg.fingerprint(), base.fingerprint());
+        let mut mode = base.clone();
+        mode.mode = StreamGraphMode::Index;
+        assert_ne!(mode.fingerprint(), base.fingerprint());
+        // ...runtime-only knobs do not.
+        let mut tunable = base.clone();
+        tunable.ef = 999;
+        tunable.seal_threads = 7;
+        tunable.compact_dead_fraction = 0.9;
+        assert_eq!(tunable.fingerprint(), base.fingerprint());
     }
 
     #[test]

@@ -59,6 +59,13 @@ STREAM OPTIONS:
                                      (tombstoned, reclaimed at compaction)
   --seal-threads <t>                 off-thread seal workers (0 = build
                                      segments inline on the insert path)
+  --compact-dead-fraction <f>        rewrite a segment in place when its
+                                     tombstoned share reaches f (0 = off)
+  --checkpoint-dir <dir>             checkpoint the segment log there at
+                                     the end of the run (atomic manifest,
+                                     KNG3 segment spills)
+  --restore                          resume from --checkpoint-dir before
+                                     ingesting (recall reporting skipped)
   --report-every <n> --queries <q> --topk <k> --ef <ef>
   --background                       compact from a background thread
 ";

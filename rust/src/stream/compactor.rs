@@ -26,7 +26,8 @@ use std::sync::Arc;
 /// Record of one executed compaction.
 #[derive(Clone, Copy, Debug)]
 pub struct Compaction {
-    /// Ids of the two fused input segments.
+    /// Ids of the two fused input segments. A dead-fraction rewrite
+    /// ([`Compactor::rewrite_reclaim`]) has one input, recorded twice.
     pub inputs: [u64; 2],
     /// Id of the output segment.
     pub output: u64,
@@ -115,6 +116,33 @@ impl Compactor {
             (None, None) => None,
         };
         (merged, dropped)
+    }
+
+    /// Single-segment reclaim — the dead-fraction trigger's work unit:
+    /// drop the segment's tombstoned rows, repair the graph around
+    /// them, and re-wrap the survivor at the *same* level (no merge
+    /// partner, so the geometric schedule is undisturbed). Returns
+    /// `(None, dropped)` when every row was dead. Index mode re-derives
+    /// its diversified search structure from the repaired k-NN graph.
+    pub fn rewrite_reclaim(
+        &self,
+        seg: &Segment,
+        out_id: u64,
+        tombs: &TombstoneSet,
+    ) -> (Option<Segment>, Vec<u32>) {
+        let (purged, dropped) = self.purge(seg, tombs);
+        let rewritten = purged.map(|p| {
+            Segment::from_knn(
+                out_id,
+                seg.level,
+                p.data().materialize(),
+                p.gids().to_vec(),
+                p.knn().clone(),
+                self.metric,
+                &self.cfg,
+            )
+        });
+        (rewritten, dropped)
     }
 
     /// Drop a segment's tombstoned rows and repair the graph around
@@ -351,6 +379,33 @@ mod tests {
         }
         let r = graph_recall(&relabeled, &truth, 8);
         assert!(r > 0.8, "post-reclaim recall@8 = {r}");
+    }
+
+    #[test]
+    fn rewrite_reclaim_shrinks_in_place_and_keeps_level() {
+        let cfg = cfg_k(8);
+        let ds = DatasetFamily::Deep.generate(200, 15);
+        let seg = Segment::seal(3, 2, ds.clone(), (0..200).collect(), Metric::L2, &cfg);
+        let dead: Vec<u32> = (0..200u32).filter(|g| g % 5 == 0).collect();
+        let tombs = TombstoneSet::empty().with_all(&dead);
+        let (out, dropped) = Compactor::new(cfg.clone(), Metric::L2).rewrite_reclaim(&seg, 9, &tombs);
+        let out = out.unwrap();
+        out.validate().unwrap();
+        assert_eq!(out.id, 9);
+        assert_eq!(out.level, 2, "rewrite must not grow the level");
+        assert_eq!(out.len(), 160);
+        assert_eq!(dropped.len(), 40);
+        assert!(out.global_ids.iter().all(|g| g % 5 != 0));
+        // Survivors still answer exactly.
+        for probe in [1usize, 77, 199] {
+            let hits = out.search(Metric::L2, &ds.vector(probe), 1, 64, &TombstoneSet::empty());
+            assert_eq!(hits[0].1 as usize, probe);
+        }
+        // Fully dead segment: no output, everything dropped.
+        let all = TombstoneSet::empty().with_all(&(0..200).collect::<Vec<u32>>());
+        let (none, dropped) = Compactor::new(cfg, Metric::L2).rewrite_reclaim(&seg, 10, &all);
+        assert!(none.is_none());
+        assert_eq!(dropped.len(), 200);
     }
 
     #[test]

@@ -30,12 +30,16 @@
 
 use super::compactor::{Compaction, Compactor};
 use super::memtable::MemTable;
+use super::persist::{self, CheckpointStats, Manifest, RestoreOptions, SegmentRecord};
 use super::snapshot::{merge_topk, SegmentSet};
 use super::tombstones::TombstoneSet;
 use crate::config::StreamConfig;
 use crate::dataset::Dataset;
 use crate::distance::Metric;
 use crate::graph::NeighborList;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
@@ -43,10 +47,12 @@ use std::time::Instant;
 /// Counters exposed by [`StreamingIndex::stats`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StreamStats {
-    /// Vectors inserted since creation.
+    /// Vectors inserted since creation (upsert replacements included).
     pub inserted: usize,
-    /// Vectors deleted since creation.
+    /// Vectors deleted since creation (upsert-replaced rows included).
     pub deleted: usize,
+    /// In-place updates (`upsert`) since creation.
+    pub upserts: usize,
     /// Segments sealed from the memtable.
     pub sealed: usize,
     /// Compactions executed.
@@ -102,6 +108,14 @@ struct Shared {
     metric: Metric,
     segments: Mutex<Arc<SegmentSet>>,
     tombstones: Mutex<Arc<TombstoneSet>>,
+    /// Upsert gid bindings (see [`GidBindings`]), published
+    /// copy-on-write like the tombstone set: readers clone the `Arc`
+    /// (O(1), no lock held during result translation); writers swap a
+    /// rebuilt map under the mutex. Lives here because tombstone
+    /// purging — reachable from seal workers — prunes it. Lock order:
+    /// `bindings` may be taken before `tombstones` (delete/upsert
+    /// do), NEVER the other way around while held.
+    bindings: Mutex<Arc<GidBindings>>,
     sealing: Mutex<Vec<Arc<SealingBatch>>>,
     sealing_done: Condvar,
     sealed: AtomicUsize,
@@ -181,25 +195,96 @@ impl Shared {
         if gids.is_empty() {
             return;
         }
-        let mut t = self.tombstones.lock().unwrap();
-        let next = Arc::new(t.without(gids));
-        *t = next;
+        {
+            let mut t = self.tombstones.lock().unwrap();
+            let next = Arc::new(t.without(gids));
+            *t = next;
+        }
+        // A purged row is physically gone from every source, so any
+        // upsert binding it carried is dead weight: prune it, keeping
+        // the maps bounded by *live* upserted rows + pending
+        // tombstones instead of growing with lifetime upserts. Taken
+        // after the tombstone lock dropped (bindings→tombstones is
+        // the sanctioned nesting order; we hold neither here).
+        let mut b = self.bindings.lock().unwrap();
+        if b.by_internal.is_empty() || !gids.iter().any(|g| b.by_internal.contains_key(g)) {
+            return;
+        }
+        let mut next = (**b).clone();
+        for g in gids {
+            if let Some(user) = next.by_internal.remove(g) {
+                if next.current.get(&user) == Some(g) {
+                    // The gid's *current* row was deleted and is now
+                    // reclaimed: the gid is permanently gone.
+                    next.current.remove(&user);
+                }
+            }
+        }
+        *b = Arc::new(next);
+    }
+}
+
+/// User-gid ↔ internal-row-id bindings maintained by `upsert`.
+///
+/// The whole stream — memtable, segments, tombstones — operates on
+/// *internal* row ids, which are unique and never reused (the invariant
+/// tombstone purging relies on). A plain `insert` binds the two
+/// identically, so the maps stay empty until the first `upsert`; an
+/// upsert writes the replacement row under a **fresh** internal id and
+/// records `internal → gid` here, so searches can translate results
+/// back and the tombstone machinery never needs versioned entries.
+#[derive(Clone, Debug, Default)]
+struct GidBindings {
+    /// Internal id → user gid, for rows created by `upsert` only.
+    by_internal: HashMap<u32, u32>,
+    /// User gid → its current internal id (absent = identity binding).
+    current: HashMap<u32, u32>,
+}
+
+impl GidBindings {
+    #[inline]
+    fn gid_of(&self, internal: u32) -> u32 {
+        self.by_internal.get(&internal).copied().unwrap_or(internal)
+    }
+
+    #[inline]
+    fn internal_of(&self, gid: u32) -> u32 {
+        self.current.get(&gid).copied().unwrap_or(gid)
+    }
+
+    /// Whether `gid` is a *user-visible* id. Internal ids minted for
+    /// upsert replacements are not addressable from the outside — a
+    /// `delete`/`upsert` against one must be refused, or it would
+    /// corrupt the row of the gid it secretly belongs to.
+    #[inline]
+    fn is_user_gid(&self, gid: u32) -> bool {
+        !self.by_internal.contains_key(&gid)
     }
 }
 
 /// An online k-NN index over an LSM-style log of subgraph segments,
-/// with streaming deletes (tombstones, reclaimed at compaction).
+/// with streaming deletes (tombstones, reclaimed at compaction),
+/// in-place updates (`upsert`), and checkpoint/restore durability
+/// (`stream::persist`).
 pub struct StreamingIndex {
     shared: Arc<Shared>,
     dim: usize,
+    /// Identity of this segment log, stamped into every checkpoint
+    /// manifest (fresh per `new`, inherited by `restore`) so two logs
+    /// can never share one checkpoint directory's spill files.
+    log_id: u64,
     memtable: Mutex<MemTable>,
     compact_lock: Mutex<()>,
     next_gid: AtomicU32,
     next_segment_id: AtomicU64,
     inserted: AtomicUsize,
     deleted: AtomicUsize,
+    upserted: AtomicUsize,
     compactions: AtomicUsize,
     reclaimed: AtomicUsize,
+    /// Last tombstone epoch the dead-fraction scan ran at (gates the
+    /// O(rows) scan to once per tombstone-set change).
+    dead_scan_epoch: AtomicU64,
     seal_tx: Mutex<Option<mpsc::Sender<Arc<SealingBatch>>>>,
     seal_workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
@@ -214,6 +299,7 @@ impl StreamingIndex {
             metric,
             segments: Mutex::new(Arc::new(SegmentSet::empty())),
             tombstones: Mutex::new(TombstoneSet::shared_empty()),
+            bindings: Mutex::new(Arc::new(GidBindings::default())),
             sealing: Mutex::new(Vec::new()),
             sealing_done: Condvar::new(),
             sealed: AtomicUsize::new(0),
@@ -243,14 +329,17 @@ impl StreamingIndex {
         StreamingIndex {
             shared,
             dim,
+            log_id: persist::fresh_log_id(),
             memtable: Mutex::new(MemTable::new(dim)),
             compact_lock: Mutex::new(()),
             next_gid: AtomicU32::new(0),
             next_segment_id: AtomicU64::new(0),
             inserted: AtomicUsize::new(0),
             deleted: AtomicUsize::new(0),
+            upserted: AtomicUsize::new(0),
             compactions: AtomicUsize::new(0),
             reclaimed: AtomicUsize::new(0),
+            dead_scan_epoch: AtomicU64::new(u64::MAX),
             seal_tx: Mutex::new(seal_tx),
             seal_workers: Mutex::new(seal_workers),
         }
@@ -316,21 +405,40 @@ impl StreamingIndex {
     /// when the id existed and was not already deleted. Visibility is
     /// immediate: a search that begins after `delete` returns will
     /// never surface the id. Space is reclaimed when compaction next
-    /// touches the segment holding it.
-    ///
-    /// The copy-on-write step (O(pending tombstones)) runs *outside*
-    /// the mutex, with an epoch check on the swap — searches snapshot
-    /// the set with an O(1) critical section even under delete bursts.
+    /// touches the segment holding it (or when the dead-fraction
+    /// trigger rewrites it).
     pub fn delete(&self, gid: u32) -> bool {
         if gid >= self.next_gid.load(Ordering::Relaxed) {
             return false;
         }
+        // Resolve AND tombstone under the bindings lock: a concurrent
+        // `upsert` of the same gid serializes against it, so either
+        // the upsert sees our tombstone (and refuses to resurrect) or
+        // we resolve to the upsert's fresh row and kill that — both
+        // serial orders leave the gid dead, never alive-with-new-
+        // payload after a successful delete.
+        let b = self.shared.bindings.lock().unwrap();
+        if !b.is_user_gid(gid) {
+            return false;
+        }
+        let internal = b.internal_of(gid);
+        let deleted = self.delete_internal(internal);
+        drop(b);
+        deleted
+    }
+
+    /// Tombstone one internal row id — the shared core of `delete` and
+    /// `upsert`. The copy-on-write step (O(pending tombstones)) runs
+    /// *outside* the mutex, with an epoch check on the swap — searches
+    /// snapshot the set with an O(1) critical section even under
+    /// delete bursts.
+    fn delete_internal(&self, internal: u32) -> bool {
         loop {
             let cur = self.tombstones();
-            if cur.contains(gid) {
+            if cur.contains(internal) {
                 return false;
             }
-            let next = Arc::new(cur.with(gid)); // clone off-lock
+            let next = Arc::new(cur.with(internal)); // clone off-lock
             let mut tombs = self.shared.tombstones.lock().unwrap();
             if tombs.epoch() == cur.epoch() {
                 *tombs = next;
@@ -348,12 +456,20 @@ impl StreamingIndex {
     /// were newly deleted; unknown and already-dead ids are skipped.
     pub fn delete_batch(&self, gids: &[u32]) -> usize {
         let limit = self.next_gid.load(Ordering::Relaxed);
+        // Held across the swap, like `delete` (see there for why).
+        let b = self.shared.bindings.lock().unwrap();
+        let internals: Vec<u32> = gids
+            .iter()
+            .copied()
+            .filter(|&g| g < limit && b.is_user_gid(g))
+            .map(|g| b.internal_of(g))
+            .collect();
         loop {
             let cur = self.tombstones();
-            let fresh: Vec<u32> = gids
+            let fresh: Vec<u32> = internals
                 .iter()
                 .copied()
-                .filter(|&g| g < limit && !cur.contains(g))
+                .filter(|&g| !cur.contains(g))
                 .collect();
             if fresh.is_empty() {
                 return 0;
@@ -367,6 +483,74 @@ impl StreamingIndex {
                 return fresh.len();
             }
         }
+    }
+
+    /// Replace the vector stored under `gid` in place: the old row is
+    /// tombstoned and the replacement is inserted under the **same
+    /// user-visible gid** (a fresh internal row id behind the scenes,
+    /// so tombstone purging keeps its ids-never-reused invariant).
+    /// Returns `false` for never-assigned or deleted gids — an upsert
+    /// does not resurrect the dead. (Like `delete`, the dead-gid check
+    /// rides on the tombstone set, so it covers deletes still awaiting
+    /// reclaim; once compaction has physically reclaimed a deleted
+    /// gid's row and purged its tombstone, the id is indistinguishable
+    /// from never-touched storage — callers must not reuse ids they
+    /// deleted long ago.)
+    ///
+    /// Visibility: after `upsert` returns, a new search's tombstone
+    /// snapshot already masks the old row and the memtable already
+    /// holds the new one — read-your-write. The replacement is
+    /// published *before* the old row is tombstoned, so a racing
+    /// reader can transiently observe both versions inside the engine;
+    /// `search_ef` deduplicates by user gid keeping the newest, so no
+    /// caller ever receives the pair (and none ever sees the gid
+    /// vanish mid-update).
+    pub fn upsert(&self, gid: u32, v: &[f32]) -> bool {
+        assert_eq!(v.len(), self.dim, "vector dimension mismatch");
+        // Hold the bindings lock across resolve + rebind so concurrent
+        // upserts of one gid serialize (each replaces the previous
+        // binding, never a stale read of it).
+        let mut b = self.shared.bindings.lock().unwrap();
+        if gid >= self.next_gid.load(Ordering::Relaxed) || !b.is_user_gid(gid) {
+            return false;
+        }
+        let old = b.internal_of(gid);
+        if self.tombstones().contains(old) {
+            return false; // deleted; upsert is not an insert
+        }
+        let frozen;
+        {
+            let mut mt = self.memtable.lock().unwrap();
+            let internal = self.next_gid.fetch_add(1, Ordering::Relaxed);
+            // Publish the binding before the row becomes searchable:
+            // any reader that can surface `internal` can already
+            // translate it. (Copy-on-write: O(live bindings), the
+            // same coin the tombstone set pays per delete.)
+            let mut next = (**b).clone();
+            next.by_internal.insert(internal, gid);
+            next.current.insert(gid, internal);
+            *b = Arc::new(next);
+            mt.insert(v, internal);
+            self.inserted.fetch_add(1, Ordering::Relaxed);
+            frozen = if mt.len() >= self.shared.cfg.segment_size {
+                self.freeze_locked(&mut mt)
+            } else {
+                None
+            };
+        }
+        // Tombstone the old row while STILL holding the bindings lock:
+        // the binding swap and the tombstone become one atomic step
+        // from the point of view of anything that snapshots both under
+        // that lock (`checkpoint` does), so a cut can never capture
+        // half an upsert. The seal dispatch stays outside — an inline
+        // build reaches `purge_tombstones`, which takes this lock.
+        self.delete_internal(old);
+        self.upserted.fetch_add(1, Ordering::Relaxed);
+        drop(b);
+        if let Some(batch) = frozen {
+            self.dispatch_seal(batch);
+        }
+        true
     }
 
     /// Freeze the memtable's rows into a [`SealingBatch`]. Must run
@@ -458,7 +642,22 @@ impl StreamingIndex {
     /// per-source top-k lists.
     pub fn search_ef(&self, query: &[f32], topk: usize, ef: usize) -> Vec<(f32, u32)> {
         assert_eq!(query.len(), self.dim, "query dimension mismatch");
-        // Tombstones first: anything deleted before this point is in
+        // Id frontier FIRST, bindings snapshot second: rows minted
+        // after `gid_limit` were inserted after this query began and
+        // are dropped from the results (linearizes the query at its
+        // start). The order matters: an id below the frontier was
+        // allocated inside its writer's bindings critical section
+        // *before* our frontier read, so our `lock().clone()` below
+        // cannot run until that writer released the lock — every
+        // surviving internal id is translatable by this snapshot, and
+        // a mid-query upsert can never leak a raw internal id. When
+        // upserts exist, every source is asked for extra candidates so
+        // the both-versions dedup below cannot shrink the result under
+        // `topk` while live rows sat just outside the per-source cut.
+        let gid_limit = self.next_gid.load(Ordering::Relaxed);
+        let b: Arc<GidBindings> = self.shared.bindings.lock().unwrap().clone();
+        let fetch = topk + b.by_internal.len().min(topk);
+        // Tombstones next: anything deleted before this point is in
         // the snapshot and gets filtered from every source below —
         // the linearization point of delete-vs-search.
         let tombs = self.tombstones();
@@ -475,12 +674,40 @@ impl StreamingIndex {
         let snap = self.snapshot();
         let metric = self.shared.metric;
         let mut parts = Vec::with_capacity(2 + sealing.len());
-        parts.push(mem_snap.search(metric, query, topk, &tombs));
+        parts.push(mem_snap.search(metric, query, fetch, &tombs));
         for batch in &sealing {
-            parts.push(batch.search(metric, query, topk, &tombs));
+            parts.push(batch.search(metric, query, fetch, &tombs));
         }
-        parts.push(snap.search(metric, query, topk, ef, &tombs));
-        merge_topk(parts, topk)
+        parts.push(snap.search(metric, query, fetch, ef, &tombs));
+        let merged = merge_topk(parts, fetch);
+        // Translate internal row ids to user gids: rows written by
+        // `upsert` live under fresh internal ids bound to the original
+        // gid. When a racing upsert momentarily exposes both versions
+        // of one gid, keep the newest (highest internal id) — a reader
+        // must never receive two rows for one gid.
+        if b.by_internal.is_empty() {
+            // No upserts at query start: internal ids ARE the gids;
+            // only the frontier filter applies.
+            let mut out = merged;
+            out.retain(|&(_, id)| id < gid_limit);
+            out.truncate(topk);
+            return out;
+        }
+        let mut best: HashMap<u32, (f32, u32)> = HashMap::with_capacity(merged.len());
+        for (d, internal) in merged {
+            if internal >= gid_limit {
+                continue; // born after this query began
+            }
+            let entry = best.entry(b.gid_of(internal)).or_insert((d, internal));
+            if internal > entry.1 {
+                *entry = (d, internal);
+            }
+        }
+        drop(b);
+        let mut out: Vec<(f32, u32)> = best.into_iter().map(|(gid, (d, _))| (d, gid)).collect();
+        out.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+        out.truncate(topk);
+        out
     }
 
     /// Run one strict (same-level) compaction if a pair is available.
@@ -525,41 +752,36 @@ impl StreamingIndex {
                     .collect(),
             })
         };
-        let pair = Compactor::pick(&eligible, strict)?;
         let tombs = self.tombstones();
+        let compactor = Compactor::new(self.shared.cfg.clone(), self.shared.metric);
+        // Dead-fraction self-heal first: a segment whose tombstoned
+        // share crossed `compact_dead_fraction` is rewritten in place
+        // (purge + repair, level preserved) before the geometric
+        // schedule is consulted — deletes, upserts, and freshly
+        // restored logs reclaim space without waiting for a same-level
+        // merge partner.
+        if let Some(seg) = self.pick_dead(&eligible, &tombs, sealing_ids.is_empty()) {
+            let out_id = self.next_segment_id.fetch_add(1, Ordering::Relaxed);
+            let start = Instant::now();
+            let (rewritten, dropped) = compactor.rewrite_reclaim(&seg, out_id, &tombs);
+            self.publish_compaction([seg.id, seg.id], rewritten, &dropped);
+            return Some(Compaction {
+                inputs: [seg.id, seg.id],
+                output: out_id,
+                level: seg.level,
+                reclaimed: dropped.len(),
+                secs: start.elapsed().as_secs_f64(),
+            });
+        }
+        let pair = Compactor::pick(&eligible, strict)?;
         let out_id = self.next_segment_id.fetch_add(1, Ordering::Relaxed);
         let start = Instant::now();
-        let compactor = Compactor::new(self.shared.cfg.clone(), self.shared.metric);
         let (merged, dropped) = compactor.fuse_reclaim(&pair[0], &pair[1], out_id, &tombs);
         let level = merged
             .as_ref()
             .map(|m| m.level)
             .unwrap_or_else(|| pair[0].level.max(pair[1].level) + 1);
-        // Swap against the *current* set: seals that happened while we
-        // were fusing stay live.
-        let mut cur = self.shared.segments.lock().unwrap();
-        let mut v: Vec<Arc<super::Segment>> = cur
-            .segments
-            .iter()
-            .filter(|s| s.id != pair[0].id && s.id != pair[1].id)
-            .cloned()
-            .collect();
-        if let Some(m) = merged {
-            v.push(Arc::new(m));
-        }
-        v.sort_by_key(|s| s.id);
-        *cur = Arc::new(SegmentSet { segments: v });
-        drop(cur);
-        // The reclaimed ids no longer exist anywhere (the swap above
-        // already published the purged set); purge their tombstones so
-        // the set stays bounded by *pending* deletes. Ids deleted
-        // after the `tombs` snapshot above are not in `dropped`, so
-        // their tombstones survive until the next fuse.
-        if !dropped.is_empty() {
-            self.shared.purge_tombstones(&dropped);
-            self.reclaimed.fetch_add(dropped.len(), Ordering::Relaxed);
-        }
-        self.compactions.fetch_add(1, Ordering::Relaxed);
+        self.publish_compaction([pair[0].id, pair[1].id], merged, &dropped);
         Some(Compaction {
             inputs: [pair[0].id, pair[1].id],
             output: out_id,
@@ -569,10 +791,82 @@ impl StreamingIndex {
         })
     }
 
+    /// Publish a compaction result — the shared tail of the pair fuse
+    /// and the dead-fraction rewrite. Swaps against the *current*
+    /// segment set (seals that landed mid-fuse stay live), then purges
+    /// the reclaimed ids' tombstones: they no longer exist anywhere
+    /// (the swap already published the purged set), so the tombstone
+    /// set stays bounded by *pending* deletes. Ids deleted after the
+    /// caller's tombstone snapshot are not in `dropped`, so their
+    /// tombstones survive until the next compaction.
+    fn publish_compaction(
+        &self,
+        remove: [u64; 2],
+        replacement: Option<super::Segment>,
+        dropped: &[u32],
+    ) {
+        let mut cur = self.shared.segments.lock().unwrap();
+        let mut v: Vec<Arc<super::Segment>> = cur
+            .segments
+            .iter()
+            .filter(|s| s.id != remove[0] && s.id != remove[1])
+            .cloned()
+            .collect();
+        if let Some(m) = replacement {
+            v.push(Arc::new(m));
+        }
+        v.sort_by_key(|s| s.id);
+        *cur = Arc::new(SegmentSet { segments: v });
+        drop(cur);
+        if !dropped.is_empty() {
+            self.shared.purge_tombstones(dropped);
+            self.reclaimed.fetch_add(dropped.len(), Ordering::Relaxed);
+        }
+        self.compactions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The dead-fraction trigger's candidate scan: the first eligible
+    /// segment whose tombstoned share reaches
+    /// `cfg.compact_dead_fraction`. The O(total rows) membership scan
+    /// is gated on the tombstone epoch, so repeated `tick()`s between
+    /// deletes cost nothing.
+    fn pick_dead(
+        &self,
+        set: &SegmentSet,
+        tombs: &TombstoneSet,
+        full_set: bool,
+    ) -> Option<Arc<super::Segment>> {
+        let threshold = self.shared.cfg.compact_dead_fraction;
+        if threshold <= 0.0 || tombs.is_empty() {
+            return None;
+        }
+        // Consume the epoch gate only when the scan covers the FULL
+        // segment set: while the sealing filter hides segments, a
+        // clean scan must not mark this epoch as done — the hidden
+        // segment may be the over-threshold one, and no later delete
+        // may ever bump the epoch again.
+        let epoch = tombs.epoch();
+        if full_set && self.dead_scan_epoch.swap(epoch, Ordering::Relaxed) == epoch {
+            return None; // set unchanged since the last full scan
+        }
+        for seg in &set.segments {
+            let dead = seg
+                .global_ids
+                .iter()
+                .filter(|&&g| tombs.contains(g))
+                .count();
+            if dead > 0 && dead as f64 >= threshold * seg.len() as f64 {
+                return Some(Arc::clone(seg));
+            }
+        }
+        None
+    }
+
     pub fn stats(&self) -> StreamStats {
         StreamStats {
             inserted: self.inserted.load(Ordering::Relaxed),
             deleted: self.deleted.load(Ordering::Relaxed),
+            upserts: self.upserted.load(Ordering::Relaxed),
             sealed: self.shared.sealed.load(Ordering::Relaxed),
             compactions: self.compactions.load(Ordering::Relaxed),
             reclaimed: self.reclaimed.load(Ordering::Relaxed),
@@ -581,6 +875,208 @@ impl StreamingIndex {
             sealing: self.shared.sealing.lock().unwrap().len(),
             tombstones: self.tombstones().len(),
         }
+    }
+
+    /// Checkpoint the full index state into `dir`: every live segment
+    /// spilled through the row-blocked `KNG3` writer (immutable files,
+    /// reused across checkpoints), plus a versioned, CRC-checked
+    /// manifest — segment list, tombstone set, upsert bindings,
+    /// buffered memtable rows, counters, config fingerprint — written
+    /// atomically (temp file + rename). A crash mid-checkpoint leaves
+    /// the previous checkpoint loadable.
+    ///
+    /// The checkpoint is a point-in-time cut: concurrent inserts may
+    /// land on either side of it. Call from a paused writer (or after
+    /// `flush()`) when an exact cut is required.
+    pub fn checkpoint(&self, dir: &Path) -> Result<CheckpointStats> {
+        self.quiesce();
+        // Take the whole cut under bindings → memtable (the same
+        // nesting `upsert` uses): ids are allocated and rows enter the
+        // pipeline inside the memtable critical section, and an upsert
+        // publishes its binding + tombstone while holding the bindings
+        // lock — so the frontier below is consistent on every axis:
+        // every id under `next_gid` has its row in exactly one
+        // captured source, and no upsert is ever captured half-way
+        // (binding without tombstone, or row without binding). Only
+        // O(1) snapshots are taken under the locks; the row payload
+        // copies happen after release.
+        let (next_gid, inserted, mem_snap, sealing, snap, tombs, b) = {
+            let bindings_guard = self.shared.bindings.lock().unwrap();
+            let mt = self.memtable.lock().unwrap();
+            let next_gid = self.next_gid.load(Ordering::Relaxed);
+            let inserted = self.inserted.load(Ordering::Relaxed);
+            let mem_snap = mt.snapshot();
+            let sealing: Vec<Arc<SealingBatch>> =
+                self.shared.sealing.lock().unwrap().clone();
+            let snap = self.snapshot();
+            let tombs = self.tombstones();
+            let b = Arc::clone(&bindings_guard);
+            (next_gid, inserted, mem_snap, sealing, snap, tombs, b)
+        };
+        let mut rows = mem_snap.rows();
+        let seg_ids: std::collections::HashSet<u64> =
+            snap.segments.iter().map(|s| s.id).collect();
+        for batch in &sealing {
+            if seg_ids.contains(&batch.id) {
+                continue;
+            }
+            for (row, &gid) in batch.gids.iter().enumerate() {
+                rows.push((gid, batch.data.vector(row).to_vec()));
+            }
+        }
+        // Belt and braces: the locked cut above plus the seg_ids
+        // filter should already make every row unique, but a manifest
+        // with a duplicated or segment-shadowed row is *unrestorable*
+        // (and has replaced the previous good one by then) — so drop
+        // any gathered row that also lives in a published segment, and
+        // any second copy, unconditionally.
+        let published: std::collections::HashSet<u32> = snap
+            .segments
+            .iter()
+            .flat_map(|s| s.global_ids.iter().copied())
+            .collect();
+        let mut first = std::collections::HashSet::with_capacity(rows.len());
+        rows.retain(|(gid, _)| !published.contains(gid) && first.insert(*gid));
+        let mut bindings: Vec<(u32, u32)> =
+            b.by_internal.iter().map(|(&i, &g)| (i, g)).collect();
+        let mut current: Vec<(u32, u32)> = b.current.iter().map(|(&g, &i)| (g, i)).collect();
+        drop(b);
+        bindings.sort_unstable();
+        current.sort_unstable();
+        let manifest = Manifest {
+            dim: self.dim as u32,
+            metric: self.shared.metric,
+            config_fingerprint: self.shared.cfg.fingerprint(),
+            log_id: self.log_id,
+            next_gid,
+            next_segment_id: self.next_segment_id.load(Ordering::Relaxed),
+            inserted: inserted as u64,
+            deleted: self.deleted.load(Ordering::Relaxed) as u64,
+            sealed: self.shared.sealed.load(Ordering::Relaxed) as u64,
+            compactions: self.compactions.load(Ordering::Relaxed) as u64,
+            reclaimed: self.reclaimed.load(Ordering::Relaxed) as u64,
+            upserted: self.upserted.load(Ordering::Relaxed) as u64,
+            tombstone_epoch: tombs.epoch(),
+            tombstones: tombs.sorted_ids(),
+            bindings,
+            current,
+            segments: snap
+                .segments
+                .iter()
+                .map(|s| SegmentRecord {
+                    id: s.id,
+                    level: s.level as u32,
+                    global_ids: s.global_ids.as_ref().clone(),
+                })
+                .collect(),
+            memtable: rows,
+        };
+        persist::write_checkpoint(dir, &manifest, &snap)
+    }
+
+    /// Rebuild a [`StreamingIndex`] from a checkpoint directory:
+    /// segments load from their spill files (nothing is re-derived, so
+    /// searches answer bit-identically to the checkpointed index),
+    /// buffered memtable rows replay into a fresh memtable, and the
+    /// tombstone set resumes at its exact epoch. `cfg` must carry the
+    /// same graph-shaping parameters the writer used
+    /// ([`StreamConfig::fingerprint`] is verified); runtime knobs (ef,
+    /// seal threads, compaction policy) may differ. With
+    /// [`RestoreOptions::paged`], segment payloads demand-page under
+    /// the given `MemoryBudget` instead of loading eagerly.
+    pub fn restore(
+        dir: &Path,
+        cfg: StreamConfig,
+        opts: &RestoreOptions,
+    ) -> Result<StreamingIndex> {
+        let m = persist::read_manifest(dir)?;
+        if m.config_fingerprint != cfg.fingerprint() {
+            bail!(
+                "checkpoint in {dir:?} was written under a different stream config \
+                 (fingerprint {:#018x}, ours {:#018x}); segments built under other \
+                 graph parameters cannot be mixed in",
+                m.config_fingerprint,
+                cfg.fingerprint()
+            );
+        }
+        let mut index = StreamingIndex::new(m.dim as usize, m.metric, cfg);
+        index.log_id = m.log_id;
+        let mut segments = Vec::with_capacity(m.segments.len());
+        for rec in &m.segments {
+            segments.push(Arc::new(persist::load_segment(dir, rec, opts)?));
+        }
+        segments.sort_by_key(|s| s.id);
+        // Torn-state defense: every internal id must be unique across
+        // segments and memtable, and below the recorded high-water
+        // mark — a manifest paired with the wrong files fails here
+        // instead of corrupting searches later.
+        let mut seen = std::collections::HashSet::new();
+        for id in segments
+            .iter()
+            .flat_map(|s| s.global_ids.iter().copied())
+            .chain(m.memtable.iter().map(|(gid, _)| *gid))
+        {
+            if id >= m.next_gid {
+                bail!("restored row id {id} exceeds the manifest's next_gid {}", m.next_gid);
+            }
+            if !seen.insert(id) {
+                bail!("restored row id {id} appears twice across segments/memtable");
+            }
+        }
+        // Bindings must reference captured rows (pruning removes them
+        // the moment their row is reclaimed, so a dangling entry means
+        // a torn manifest / wrong files) and every current binding
+        // must be backed by the binding table.
+        let by_internal: HashMap<u32, u32> = m.bindings.iter().copied().collect();
+        for (&internal, &gid) in &by_internal {
+            if internal >= m.next_gid || gid >= m.next_gid || !seen.contains(&internal) {
+                bail!("restored binding {internal}->{gid} references a missing row");
+            }
+        }
+        for &(gid, internal) in &m.current {
+            if by_internal.get(&internal) != Some(&gid) {
+                bail!("restored current binding {gid}->{internal} not in the binding table");
+            }
+        }
+        // Tombstones beyond the id frontier are corruption; tombstones
+        // for rows captured in no source (possible when a checkpoint
+        // raced a seal that dropped deleted rows) mask nothing in the
+        // restored index and would never be purged — drop them.
+        for &t in &m.tombstones {
+            if t >= m.next_gid {
+                bail!("restored tombstone {t} exceeds the manifest's next_gid {}", m.next_gid);
+            }
+        }
+        let tombstones: Vec<u32> = m
+            .tombstones
+            .iter()
+            .copied()
+            .filter(|t| seen.contains(t))
+            .collect();
+        *index.shared.segments.lock().unwrap() = Arc::new(SegmentSet { segments });
+        *index.shared.tombstones.lock().unwrap() = Arc::new(TombstoneSet::from_parts(
+            m.tombstone_epoch,
+            tombstones,
+        ));
+        index.shared.sealed.store(m.sealed as usize, Ordering::Relaxed);
+        {
+            let mut mt = index.memtable.lock().unwrap();
+            for (gid, row) in &m.memtable {
+                mt.insert(row, *gid);
+            }
+        }
+        *index.shared.bindings.lock().unwrap() = Arc::new(GidBindings {
+            by_internal: m.bindings.iter().copied().collect(),
+            current: m.current.iter().copied().collect(),
+        });
+        index.next_gid.store(m.next_gid, Ordering::Relaxed);
+        index.next_segment_id.store(m.next_segment_id, Ordering::Relaxed);
+        index.inserted.store(m.inserted as usize, Ordering::Relaxed);
+        index.deleted.store(m.deleted as usize, Ordering::Relaxed);
+        index.upserted.store(m.upserted as usize, Ordering::Relaxed);
+        index.compactions.store(m.compactions as usize, Ordering::Relaxed);
+        index.reclaimed.store(m.reclaimed as usize, Ordering::Relaxed);
+        Ok(index)
     }
 
     /// Spawn a background compaction thread polling `tick()`; idle
@@ -904,6 +1400,188 @@ mod tests {
         // Their tombstones have nothing left to mask and are purged.
         assert_eq!(index.stats().tombstones, 0);
         assert_eq!(index.live_len(), 40);
+    }
+
+    #[test]
+    fn upsert_replaces_vector_under_same_gid() {
+        let n = 120usize;
+        let ds = DatasetFamily::Deep.generate(n + 1, 40);
+        let index = StreamingIndex::new(ds.dim, Metric::L2, small_cfg(8, 40));
+        for i in 0..n {
+            index.insert(&ds.vector(i));
+        }
+        index.flush(); // gid 7's original row now lives in a segment
+        let live_before = index.live_len();
+        // Replace gid 7's payload with row n's vector.
+        assert!(index.upsert(7, &ds.vector(n)));
+        assert_eq!(index.stats().upserts, 1);
+        assert_eq!(index.live_len(), live_before, "upsert must not change live_len");
+        // Read-your-write: the new payload answers under the OLD gid.
+        let hits = index.search_ef(&ds.vector(n), 1, 64);
+        assert_eq!(hits[0].1, 7, "updated row must surface under its gid");
+        assert!(hits[0].0 <= 1e-6);
+        // The old payload no longer maps to gid 7.
+        let old = index.search_ef(&ds.vector(7), 5, 64);
+        assert!(old.iter().all(|&(d, id)| id != 7 || d > 1e-6));
+        // No result list ever contains an internal-only id or a dup.
+        let wide = index.search_ef(&ds.vector(n), 20, 64);
+        let mut seen = std::collections::HashSet::new();
+        for &(_, id) in &wide {
+            assert!((id as usize) < n, "internal id {id} leaked to a caller");
+            assert!(seen.insert(id), "duplicate gid {id}");
+        }
+        // Upsert survives compaction (the replacement row is sealed
+        // and merged like any insert).
+        index.flush();
+        index.compact_all();
+        let hits = index.search_ef(&ds.vector(n), 1, 64);
+        assert_eq!(hits[0].1, 7);
+        assert!(hits[0].0 <= 1e-6);
+        // Upserting again replaces the replacement.
+        assert!(index.upsert(7, &ds.vector(0)));
+        let again = index.search_ef(&ds.vector(n), 1, 64);
+        assert!(again.is_empty() || again[0].1 != 7 || again[0].0 > 1e-6);
+    }
+
+    #[test]
+    fn upsert_rejects_unknown_dead_and_internal_ids() {
+        let index = StreamingIndex::new(4, Metric::L2, small_cfg(4, 100));
+        assert!(!index.upsert(0, &[1.0; 4]), "nothing inserted yet");
+        let gid = index.insert(&[1.0, 0.0, 0.0, 0.0]);
+        assert!(index.upsert(gid, &[2.0, 0.0, 0.0, 0.0]));
+        // The replacement's fresh internal id is not user-addressable.
+        let internal = index.len() as u32 - 1;
+        assert_ne!(internal, gid);
+        assert!(!index.upsert(internal, &[3.0; 4]), "internal ids are private");
+        assert!(!index.delete(internal), "internal ids are private");
+        // Deleting the gid kills the *current* row; upsert then refuses.
+        assert!(index.delete(gid));
+        assert_eq!(index.live_len(), 0);
+        assert!(!index.upsert(gid, &[4.0; 4]), "no resurrection");
+        let hits = index.search_ef(&[2.0, 0.0, 0.0, 0.0], 4, 16);
+        assert!(hits.is_empty(), "deleted upserted row still visible: {hits:?}");
+    }
+
+    #[test]
+    fn dead_fraction_trigger_rewrites_without_a_partner() {
+        let n = 100usize;
+        let ds = DatasetFamily::Deep.generate(2 * n, 41);
+        let mut cfg = small_cfg(8, 50);
+        cfg.compact_dead_fraction = 0.25;
+        let index = StreamingIndex::new(ds.dim, Metric::L2, cfg);
+        for i in 0..n {
+            index.insert(&ds.vector(i));
+        }
+        index.flush(); // two level-0 segments of 50
+        // Sustained upsert churn against rows of the first segment:
+        // every upsert tombstones one sealed row.
+        let mut compactions_seen = index.stats().compactions;
+        let mut fired = false;
+        for round in 0..30 {
+            assert!(index.upsert(round as u32, &ds.vector(n + round)));
+            index.tick();
+            let st = index.stats();
+            if st.compactions > compactions_seen {
+                fired = true;
+                compactions_seen = st.compactions;
+            }
+        }
+        assert!(fired, "dead-fraction trigger never fired under upsert churn");
+        let st = index.stats();
+        assert!(st.reclaimed > 0, "rewrites must physically reclaim");
+        // The rewrite kept the level-0 population compactable: the
+        // geometric schedule still drains to one segment.
+        index.flush();
+        index.compact_all();
+        assert_eq!(index.snapshot().count(), 1);
+        assert_eq!(index.stats().tombstones, 0);
+        // Every upserted gid still answers with its newest payload.
+        for round in [0usize, 13, 29] {
+            let hits = index.search_ef(&ds.vector(n + round), 1, 64);
+            assert_eq!(hits[0].1 as usize, round, "round {round}");
+            assert!(hits[0].0 <= 1e-6);
+        }
+    }
+
+    #[test]
+    fn disabled_dead_fraction_waits_for_the_schedule() {
+        let ds = DatasetFamily::Deep.generate(100, 43);
+        let mut cfg = small_cfg(8, 50);
+        cfg.compact_dead_fraction = 0.0; // off
+        let index = StreamingIndex::new(ds.dim, Metric::L2, cfg);
+        for i in 0..50 {
+            index.insert(&ds.vector(i));
+        }
+        index.flush(); // ONE level-0 segment: no pair exists
+        for gid in 0..40u32 {
+            index.delete(gid); // 80% dead, far past any threshold
+        }
+        assert!(index.tick().is_none(), "no partner, no trigger -> no work");
+        assert_eq!(index.stats().reclaimed, 0);
+    }
+
+    #[test]
+    fn concurrent_upsert_search_never_shows_both_versions() {
+        // The upsert-visibility stress of the ISSUE: one thread
+        // continuously upserts a window of gids while readers search;
+        // a reader must never see two rows for one gid, nor an
+        // internal id, and dead-fraction compaction must keep firing.
+        let n = 300usize;
+        let ds = DatasetFamily::Sift.generate(2 * n, 44);
+        let mut cfg = small_cfg(6, 64);
+        cfg.compact_dead_fraction = 0.2;
+        let index = Arc::new(StreamingIndex::new(ds.dim, Metric::L2, cfg));
+        for i in 0..n {
+            index.insert(&ds.vector(i));
+        }
+        index.flush();
+        let handle = Arc::clone(&index).spawn_compactor(std::time::Duration::from_millis(1));
+        let done = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let writer = Arc::clone(&index);
+            let done_flag = &done;
+            scope.spawn(move || {
+                for round in 0..n {
+                    let gid = (round * 7 % n) as u32;
+                    assert!(writer.upsert(gid, &ds.vector(n + round)));
+                }
+                done_flag.store(true, Ordering::Relaxed);
+            });
+            for _ in 0..2 {
+                let reader = Arc::clone(&index);
+                let done_flag = &done;
+                scope.spawn(move || {
+                    let q = vec![0.25f32; reader.dim()];
+                    while !done_flag.load(Ordering::Relaxed) {
+                        let hits = reader.search_ef(&q, 10, 32);
+                        let mut seen = std::collections::HashSet::new();
+                        for pair in hits.windows(2) {
+                            assert!(pair[0].0 <= pair[1].0, "unsorted results");
+                        }
+                        for &(_, id) in &hits {
+                            assert!(
+                                (id as usize) < n,
+                                "internal id {id} leaked mid-upsert"
+                            );
+                            assert!(
+                                seen.insert(id),
+                                "both versions of gid {id} surfaced in one result"
+                            );
+                        }
+                    }
+                });
+            }
+        });
+        handle.stop();
+        index.quiesce();
+        let st = index.stats();
+        assert_eq!(st.upserts, n);
+        assert_eq!(index.live_len(), n, "upserts must not change the live count");
+        assert!(
+            st.compactions > 0,
+            "sustained upsert churn must keep compaction firing"
+        );
+        assert!(st.reclaimed > 0, "upsert churn must reclaim dead rows");
     }
 
     #[test]

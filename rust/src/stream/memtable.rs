@@ -129,6 +129,22 @@ impl MemSnapshot {
         self.blocks.len() * BLOCK_ROWS + self.tail_gids.len()
     }
 
+    /// The snapshot's rows as owned `(global id, vector)` pairs, in
+    /// insertion order — what a checkpoint writes into the manifest so
+    /// a restore can replay the buffered tail of the stream.
+    pub fn rows(&self) -> Vec<(u32, Vec<f32>)> {
+        let mut out = Vec::with_capacity(self.len());
+        for (data, gids) in &self.blocks {
+            for (row, &gid) in gids.iter().enumerate() {
+                out.push((gid, data.vector(row).to_vec()));
+            }
+        }
+        for (row, &gid) in self.tail_gids.iter().enumerate() {
+            out.push((gid, self.tail[row * self.dim..(row + 1) * self.dim].to_vec()));
+        }
+        out
+    }
+
     pub fn is_empty(&self) -> bool {
         self.blocks.is_empty() && self.tail_gids.is_empty()
     }
@@ -245,6 +261,22 @@ mod tests {
         let probe = BLOCK_ROWS + 2; // lives in the snapshot's tail copy
         let hits = snap.search(Metric::L2, &ds.vector(probe), 1, &TombstoneSet::empty());
         assert_eq!(hits[0].1 as usize, probe);
+    }
+
+    #[test]
+    fn snapshot_rows_preserve_order_across_slabs() {
+        let n = BLOCK_ROWS + 9;
+        let ds = DatasetFamily::Deep.generate(n, 6);
+        let mut mt = MemTable::new(ds.dim);
+        for i in 0..n {
+            mt.insert(&ds.vector(i), 100 + i as u32);
+        }
+        let rows = mt.snapshot().rows();
+        assert_eq!(rows.len(), n);
+        for (i, (gid, v)) in rows.iter().enumerate() {
+            assert_eq!(*gid, 100 + i as u32);
+            assert_eq!(v.as_slice(), &*ds.vector(i), "row {i}");
+        }
     }
 
     #[test]

@@ -25,6 +25,12 @@
 //!   swapped [`TombstoneSet`]; deletes mask immediately, compaction
 //!   *reclaims* (dead nodes are dropped from the pair space and their
 //!   reverse neighbors repaired before the merge).
+//! - [`persist`] — durability: [`StreamingIndex::checkpoint`] spills
+//!   every segment through the row-blocked `KNG3` writer plus a
+//!   versioned, CRC-checked manifest (atomic temp-file + rename), and
+//!   [`StreamingIndex::restore`] rebuilds the exact
+//!   memtable→segments→tombstones state — optionally demand-paged
+//!   under a `MemoryBudget`.
 //! - [`ingest`] — the rate-controlled ingest/churn driver behind the
 //!   CLI `stream` subcommand, the smoke test, and the example.
 //!
@@ -38,6 +44,7 @@ pub mod compactor;
 pub mod engine;
 pub mod ingest;
 pub mod memtable;
+pub mod persist;
 pub mod segment;
 pub mod snapshot;
 pub mod tombstones;
@@ -46,6 +53,7 @@ pub use compactor::{Compaction, Compactor};
 pub use engine::{CompactorHandle, StreamStats, StreamingIndex};
 pub use ingest::{stream_ingest, stream_ingest_into, IngestOptions, IngestSummary};
 pub use memtable::{MemSnapshot, MemTable};
+pub use persist::{CheckpointStats, Manifest, RestoreOptions, SegmentRecord};
 pub use segment::Segment;
 pub use snapshot::{merge_topk, SegmentSet};
 pub use tombstones::TombstoneSet;

@@ -1,0 +1,853 @@
+//! Durable checkpoints of the segment log: snapshot/restore through the
+//! `KNG3` spill format plus a versioned, CRC-checked manifest.
+//!
+//! # On-disk layout
+//!
+//! A checkpoint directory holds immutable per-segment spill files plus
+//! one manifest:
+//!
+//! ```text
+//! seg-<id>.vec   vectors        (.knnv — dataset::io::write_knnv)
+//! seg-<id>.knn   k-NN graph     (KNG3 — graph::serial, row-blocked)
+//! seg-<id>.idx   search graph   (KIDX — adjacency + entry vertices)
+//! MANIFEST       everything else (see below), written atomically
+//! ```
+//!
+//! Segments are immutable once sealed, so their three files are written
+//! once per segment id and *reused* by later checkpoints; files whose
+//! id no longer appears in the manifest are garbage-collected after a
+//! successful manifest swap.
+//!
+//! # Manifest format (version 1, little-endian)
+//!
+//! ```text
+//! file    := magic:u32 ("KNM1")  version:u32  payload_len:u64
+//!            payload  crc32(payload):u32
+//! payload := dim:u32  metric:u8  config_fingerprint:u64  log_id:u64
+//!            next_gid:u32  next_segment_id:u64
+//!            inserted:u64 deleted:u64 sealed:u64
+//!            compactions:u64 reclaimed:u64 upserted:u64
+//!            tombstone_epoch:u64
+//!            n_tombstones:u32  gid:u32 * n            (sorted)
+//!            n_bindings:u32   (internal:u32 gid:u32)* (sorted by internal)
+//!            n_current:u32    (gid:u32 internal:u32)* (sorted by gid)
+//!            n_segments:u32   (id:u64 level:u32 len:u32 gid:u32*len)*
+//!            n_memtable:u32   (gid:u32 f32*dim)*      (insertion order)
+//! ```
+//!
+//! # Atomicity & crash safety
+//!
+//! Segment files are written and fsynced **before** the manifest; the
+//! manifest itself is written to `MANIFEST.tmp`, fsynced, and renamed
+//! over `MANIFEST` (rename is atomic on POSIX), then the directory is
+//! fsynced. A crash at any point therefore leaves either the previous
+//! manifest (pointing at previous-generation files, which GC has not
+//! touched yet) or the new one — never a torn mix. On load the magic,
+//! version, declared payload length, and CRC are all checked before a
+//! single payload byte is interpreted, so truncated or bit-flipped
+//! manifests fail with a clean error instead of a panic or torn state.
+//!
+//! Restore rebuilds each [`Segment`] from its three files without
+//! re-deriving anything: the search graph is loaded, not recomputed, so
+//! a restored index answers queries **bit-identically** to the index
+//! that was checkpointed. With [`RestoreOptions::paged`], segment
+//! *vectors* — the dominant share of a log's bytes — stay demand-paged
+//! under the PR-3 [`MemoryBudget`] for the index's whole lifetime,
+//! and the k-NN graphs stream in block-by-block through
+//! [`PagedKnnGraph`] during the load (faults billed to the budget).
+//! The graphs do end up fully resident afterwards — segments carry
+//! their merge substrate by value — so the budget bounds vector
+//! residency, not total footprint; a log whose *graphs* alone exceed
+//! memory still cannot restore.
+
+use super::segment::Segment;
+use super::snapshot::SegmentSet;
+use crate::dataset::store::DEFAULT_CHUNK_BYTES;
+use crate::dataset::{io as vec_io, Dataset, MemoryBudget, PageOpts, PagedFormat};
+use crate::distance::Metric;
+use crate::graph::{serial, PagedKnnGraph};
+use crate::index::IndexGraph;
+use crate::util::crc32;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Manifest magic ("KNM1") and the one format version this build reads.
+pub const MANIFEST_MAGIC: u32 = 0x4B_4E_4D_31;
+pub const MANIFEST_VERSION: u32 = 1;
+/// Magic of the per-segment search-graph file ("KIDX").
+pub const INDEX_MAGIC: u32 = 0x4B_49_44_58;
+/// File name of the (atomically swapped) manifest; written via a
+/// `MANIFEST.tmp` sibling (see [`write_checkpoint`]).
+pub const MANIFEST_NAME: &str = "MANIFEST";
+/// Row-block granule of checkpointed `KNG3` graphs.
+const SPILL_BLOCK_ROWS: usize = 256;
+
+/// One checkpointed segment: identity plus the local-row → global-id
+/// table (the three payload files are keyed by `id`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SegmentRecord {
+    pub id: u64,
+    pub level: u32,
+    pub global_ids: Vec<u32>,
+}
+
+/// Everything a [`super::StreamingIndex`] needs beyond the segment
+/// payload files to resume exactly where the checkpoint was taken.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub dim: u32,
+    pub metric: Metric,
+    /// [`StreamConfig::fingerprint`] of the writing index; restore
+    /// refuses a config whose graph-shaping parameters differ.
+    pub config_fingerprint: u64,
+    /// Identity of the segment log that wrote this checkpoint (fresh
+    /// per `StreamingIndex::new`, inherited across restore). Spill
+    /// files are reused on file existence alone, so a checkpoint
+    /// directory must never be shared between logs — `write_checkpoint`
+    /// refuses a directory whose manifest carries another log's id.
+    pub log_id: u64,
+    pub next_gid: u32,
+    pub next_segment_id: u64,
+    pub inserted: u64,
+    pub deleted: u64,
+    pub sealed: u64,
+    pub compactions: u64,
+    pub reclaimed: u64,
+    pub upserted: u64,
+    pub tombstone_epoch: u64,
+    /// Dead internal ids awaiting compaction (sorted ascending).
+    pub tombstones: Vec<u32>,
+    /// Upsert-created rows: `(internal id, user gid)`, sorted by
+    /// internal id. Internal ids in this table are not user-visible.
+    pub bindings: Vec<(u32, u32)>,
+    /// Current binding per upserted gid: `(gid, internal)`, sorted by
+    /// gid. Always a subset of the gids appearing in `bindings`.
+    pub current: Vec<(u32, u32)>,
+    pub segments: Vec<SegmentRecord>,
+    /// Buffered rows not yet sealed: `(internal id, vector)`.
+    pub memtable: Vec<(u32, Vec<f32>)>,
+}
+
+/// How [`super::StreamingIndex::restore`] loads segment payloads.
+#[derive(Clone, Debug, Default)]
+pub struct RestoreOptions {
+    /// When set, segment vectors open demand-paged against this budget
+    /// (rows fault in on first touch, evict under pressure) and graphs
+    /// stream through [`PagedKnnGraph`] block faults instead of one
+    /// whole-file read — though the decoded graphs end up resident
+    /// regardless (see the module docs). `None` loads everything
+    /// eagerly.
+    pub budget: Option<Arc<MemoryBudget>>,
+}
+
+impl RestoreOptions {
+    /// Demand-page restored segments under `budget`.
+    pub fn paged(budget: Arc<MemoryBudget>) -> RestoreOptions {
+        RestoreOptions {
+            budget: Some(budget),
+        }
+    }
+}
+
+/// What a checkpoint did (sizes are post-write, GC included).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CheckpointStats {
+    /// Segments referenced by the manifest.
+    pub segments: usize,
+    /// Segments whose spill files this checkpoint wrote.
+    pub segment_files_written: usize,
+    /// Segments whose spill files already existed (immutable reuse).
+    pub segment_files_reused: usize,
+    /// Stale spill files removed after the manifest swap.
+    pub gc_removed: usize,
+    /// Memtable (and in-flight seal) rows captured in the manifest.
+    pub memtable_rows: usize,
+    /// Size of the manifest file in bytes.
+    pub manifest_bytes: u64,
+}
+
+// ------------------------------------------------------------ manifest
+
+/// Serialize a manifest (header + payload + CRC), byte-stable for a
+/// given value — the golden-file tests depend on that.
+pub fn manifest_to_bytes(m: &Manifest) -> Vec<u8> {
+    let mut p: Vec<u8> = Vec::with_capacity(256 + m.memtable.len() * (4 + m.dim as usize * 4));
+    p.extend_from_slice(&m.dim.to_le_bytes());
+    p.push(metric_tag(m.metric));
+    p.extend_from_slice(&m.config_fingerprint.to_le_bytes());
+    p.extend_from_slice(&m.log_id.to_le_bytes());
+    p.extend_from_slice(&m.next_gid.to_le_bytes());
+    p.extend_from_slice(&m.next_segment_id.to_le_bytes());
+    for v in [
+        m.inserted,
+        m.deleted,
+        m.sealed,
+        m.compactions,
+        m.reclaimed,
+        m.upserted,
+        m.tombstone_epoch,
+    ] {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    p.extend_from_slice(&(m.tombstones.len() as u32).to_le_bytes());
+    for g in &m.tombstones {
+        p.extend_from_slice(&g.to_le_bytes());
+    }
+    p.extend_from_slice(&(m.bindings.len() as u32).to_le_bytes());
+    for (internal, gid) in &m.bindings {
+        p.extend_from_slice(&internal.to_le_bytes());
+        p.extend_from_slice(&gid.to_le_bytes());
+    }
+    p.extend_from_slice(&(m.current.len() as u32).to_le_bytes());
+    for (gid, internal) in &m.current {
+        p.extend_from_slice(&gid.to_le_bytes());
+        p.extend_from_slice(&internal.to_le_bytes());
+    }
+    p.extend_from_slice(&(m.segments.len() as u32).to_le_bytes());
+    for rec in &m.segments {
+        p.extend_from_slice(&rec.id.to_le_bytes());
+        p.extend_from_slice(&rec.level.to_le_bytes());
+        p.extend_from_slice(&(rec.global_ids.len() as u32).to_le_bytes());
+        for g in &rec.global_ids {
+            p.extend_from_slice(&g.to_le_bytes());
+        }
+    }
+    p.extend_from_slice(&(m.memtable.len() as u32).to_le_bytes());
+    for (gid, row) in &m.memtable {
+        debug_assert_eq!(row.len(), m.dim as usize);
+        p.extend_from_slice(&gid.to_le_bytes());
+        for v in row {
+            p.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let mut out = Vec::with_capacity(20 + p.len());
+    out.extend_from_slice(&MANIFEST_MAGIC.to_le_bytes());
+    out.extend_from_slice(&MANIFEST_VERSION.to_le_bytes());
+    out.extend_from_slice(&(p.len() as u64).to_le_bytes());
+    let crc = crc32(&p);
+    out.extend_from_slice(&p);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Parse a manifest, validating magic, version, declared length, and
+/// CRC **before** interpreting the payload. Every failure is a clean
+/// `Err` — a torn or bit-flipped manifest must never panic or yield a
+/// half-parsed value.
+pub fn manifest_from_bytes(bytes: &[u8]) -> Result<Manifest> {
+    if bytes.len() < 20 {
+        bail!("manifest too short ({} bytes)", bytes.len());
+    }
+    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    if magic != MANIFEST_MAGIC {
+        bail!("bad manifest magic {magic:#x}");
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != MANIFEST_VERSION {
+        bail!("unsupported manifest version {version}");
+    }
+    // The length field is untrusted: compare via checked subtraction
+    // so a bit-flipped huge value cannot overflow (and panic in debug
+    // builds) before the mismatch is reported.
+    let payload_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    if bytes.len().checked_sub(20) != Some(payload_len) {
+        bail!(
+            "manifest length mismatch: file holds {} bytes, header declares a \
+             {payload_len}-byte payload",
+            bytes.len()
+        );
+    }
+    let payload = &bytes[16..16 + payload_len];
+    let stored_crc = u32::from_le_bytes(bytes[16 + payload_len..].try_into().unwrap());
+    let actual = crc32(payload);
+    if stored_crc != actual {
+        bail!("manifest CRC mismatch (stored {stored_crc:#010x}, computed {actual:#010x})");
+    }
+    parse_payload(payload)
+}
+
+fn parse_payload(p: &[u8]) -> Result<Manifest> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > p.len() {
+            bail!("truncated manifest payload at byte {}", *pos);
+        }
+        let s = &p[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let u32_at = |pos: &mut usize| -> Result<u32> {
+        Ok(u32::from_le_bytes(take(pos, 4)?.try_into().unwrap()))
+    };
+    let dim = u32_at(&mut pos)?;
+    if dim == 0 {
+        bail!("manifest declares dimension 0");
+    }
+    let metric = metric_from_tag(take(&mut pos, 1)?[0])?;
+    let u64_at = |pos: &mut usize| -> Result<u64> {
+        Ok(u64::from_le_bytes(take(pos, 8)?.try_into().unwrap()))
+    };
+    let config_fingerprint = u64_at(&mut pos)?;
+    let log_id = u64_at(&mut pos)?;
+    let next_gid = u32_at(&mut pos)?;
+    let next_segment_id = u64_at(&mut pos)?;
+    let inserted = u64_at(&mut pos)?;
+    let deleted = u64_at(&mut pos)?;
+    let sealed = u64_at(&mut pos)?;
+    let compactions = u64_at(&mut pos)?;
+    let reclaimed = u64_at(&mut pos)?;
+    let upserted = u64_at(&mut pos)?;
+    let tombstone_epoch = u64_at(&mut pos)?;
+    let n = u32_at(&mut pos)? as usize;
+    let mut tombstones = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        tombstones.push(u32_at(&mut pos)?);
+    }
+    let n = u32_at(&mut pos)? as usize;
+    let mut bindings = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        let internal = u32_at(&mut pos)?;
+        let gid = u32_at(&mut pos)?;
+        bindings.push((internal, gid));
+    }
+    let n = u32_at(&mut pos)? as usize;
+    let mut current = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        let gid = u32_at(&mut pos)?;
+        let internal = u32_at(&mut pos)?;
+        current.push((gid, internal));
+    }
+    let n = u32_at(&mut pos)? as usize;
+    let mut segments = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let id = u64_at(&mut pos)?;
+        let level = u32_at(&mut pos)?;
+        let len = u32_at(&mut pos)? as usize;
+        let mut global_ids = Vec::with_capacity(len.min(1 << 24));
+        for _ in 0..len {
+            global_ids.push(u32_at(&mut pos)?);
+        }
+        segments.push(SegmentRecord {
+            id,
+            level,
+            global_ids,
+        });
+    }
+    let n = u32_at(&mut pos)? as usize;
+    let mut memtable = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        let gid = u32_at(&mut pos)?;
+        let raw = take(&mut pos, dim as usize * 4)?;
+        let row: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        memtable.push((gid, row));
+    }
+    if pos != p.len() {
+        bail!("trailing bytes in manifest payload");
+    }
+    Ok(Manifest {
+        dim,
+        metric,
+        config_fingerprint,
+        log_id,
+        next_gid,
+        next_segment_id,
+        inserted,
+        deleted,
+        sealed,
+        compactions,
+        reclaimed,
+        upserted,
+        tombstone_epoch,
+        tombstones,
+        bindings,
+        current,
+        segments,
+        memtable,
+    })
+}
+
+fn metric_tag(m: Metric) -> u8 {
+    match m {
+        Metric::L2 => 0,
+        Metric::InnerProduct => 1,
+        Metric::Cosine => 2,
+    }
+}
+
+fn metric_from_tag(t: u8) -> Result<Metric> {
+    match t {
+        0 => Ok(Metric::L2),
+        1 => Ok(Metric::InnerProduct),
+        2 => Ok(Metric::Cosine),
+        other => bail!("unknown metric tag {other}"),
+    }
+}
+
+/// Read and validate the checkpoint directory's manifest.
+pub fn read_manifest(dir: &Path) -> Result<Manifest> {
+    let path = dir.join(MANIFEST_NAME);
+    let bytes = std::fs::read(&path).with_context(|| format!("read {path:?}"))?;
+    manifest_from_bytes(&bytes).with_context(|| format!("parse {path:?}"))
+}
+
+// ----------------------------------------------------- search graph IO
+
+/// Serialize a segment's search structure: the [`IndexGraph`] adjacency
+/// plus the segment's entry vertices (byte-stable).
+pub fn index_to_bytes(index: &IndexGraph, entries: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(24 + index.edge_count() * 4);
+    out.extend_from_slice(&INDEX_MAGIC.to_le_bytes());
+    out.extend_from_slice(&(index.max_degree as u32).to_le_bytes());
+    out.extend_from_slice(&index.entry.to_le_bytes());
+    out.extend_from_slice(&(index.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for &e in entries {
+        out.extend_from_slice(&e.to_le_bytes());
+    }
+    for adj in &index.adj {
+        assert!(adj.len() <= u16::MAX as usize);
+        out.extend_from_slice(&(adj.len() as u16).to_le_bytes());
+        for &v in adj {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Parse a `KIDX` payload back into the search structure.
+pub fn index_from_bytes(bytes: &[u8]) -> Result<(IndexGraph, Vec<u32>)> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > bytes.len() {
+            bail!("truncated index graph at byte {}", *pos);
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let magic = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    if magic != INDEX_MAGIC {
+        bail!("bad index graph magic {magic:#x}");
+    }
+    let max_degree = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let entry = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    let n = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+    let n_entries = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let mut entries = Vec::with_capacity(n_entries.min(64));
+    for _ in 0..n_entries {
+        entries.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()));
+    }
+    let mut adj = Vec::with_capacity(n.min(1 << 24));
+    for _ in 0..n {
+        let len = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+        let mut row = Vec::with_capacity(len);
+        for _ in 0..len {
+            row.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()));
+        }
+        adj.push(row);
+    }
+    if pos != bytes.len() {
+        bail!("trailing bytes in index graph payload");
+    }
+    Ok((
+        IndexGraph {
+            adj,
+            max_degree,
+            entry,
+        },
+        entries,
+    ))
+}
+
+// ----------------------------------------------------- segment spills
+
+fn seg_paths(dir: &Path, id: u64) -> (PathBuf, PathBuf, PathBuf) {
+    (
+        dir.join(format!("seg-{id}.vec")),
+        dir.join(format!("seg-{id}.knn")),
+        dir.join(format!("seg-{id}.idx")),
+    )
+}
+
+fn fsync(path: &Path) -> Result<()> {
+    std::fs::File::open(path)
+        .and_then(|f| f.sync_all())
+        .with_context(|| format!("fsync {path:?}"))
+}
+
+/// Write a file through a `.tmp` sibling + fsync + atomic rename, so
+/// the final name only ever holds complete, durable content. Spill
+/// reuse keys on `path.exists()`: without this, a file torn by a crash
+/// mid-write would be silently referenced by the next checkpoint's
+/// manifest — and once GC drops the previous generation, unrecoverable.
+fn write_atomic(path: &Path, write: impl FnOnce(&Path) -> Result<()>) -> Result<()> {
+    let mut tmp_name = path.as_os_str().to_owned();
+    tmp_name.push(".tmp");
+    let tmp = PathBuf::from(tmp_name);
+    write(&tmp)?;
+    fsync(&tmp)?;
+    std::fs::rename(&tmp, path).with_context(|| format!("publish {path:?}"))?;
+    Ok(())
+}
+
+/// Spill one segment's three payload files (vectors, k-NN graph,
+/// search graph), each via tmp + fsync + rename. Files already present
+/// are reused untouched — a segment id names immutable content, and
+/// the atomic rename guarantees an existing file is complete. Returns
+/// whether anything was written.
+pub fn write_segment_files(dir: &Path, seg: &Segment) -> Result<bool> {
+    let (vec_path, knn_path, idx_path) = seg_paths(dir, seg.id);
+    if vec_path.exists() && knn_path.exists() && idx_path.exists() {
+        return Ok(false);
+    }
+    write_atomic(&vec_path, |p| vec_io::write_knnv(p, &seg.data))?;
+    write_atomic(&knn_path, |p| {
+        serial::write_graph_blocked(p, &seg.knn, SPILL_BLOCK_ROWS).map(|_| ())
+    })?;
+    write_atomic(&idx_path, |p| {
+        std::fs::write(p, index_to_bytes(&seg.index, &seg.entries))
+            .with_context(|| format!("write {p:?}"))
+    })?;
+    Ok(true)
+}
+
+/// Rebuild a [`Segment`] from its checkpointed files. Nothing is
+/// re-derived: the search graph and entry vertices load exactly as
+/// written, so the restored segment answers searches bit-identically.
+pub fn load_segment(
+    dir: &Path,
+    rec: &SegmentRecord,
+    opts: &RestoreOptions,
+) -> Result<Segment> {
+    let (vec_path, knn_path, idx_path) = seg_paths(dir, rec.id);
+    let (data, knn) = match &opts.budget {
+        Some(budget) => {
+            let data = Dataset::open_paged_opts(
+                &vec_path,
+                PagedFormat::Knnv,
+                None,
+                PageOpts {
+                    chunk_bytes: DEFAULT_CHUNK_BYTES,
+                    budget: Arc::clone(budget),
+                },
+            )?;
+            // The merge substrate must be materialized (compactions
+            // mutate against it), but streaming it block-by-block
+            // through the paged reader bounds transient residency and
+            // bills the faults to the budget like any other spill.
+            let paged = PagedKnnGraph::open(&knn_path, Arc::clone(budget))?;
+            (data, paged.materialize())
+        }
+        None => (vec_io::read_knnv(&vec_path)?, serial::read_graph(&knn_path)?),
+    };
+    let idx_bytes =
+        std::fs::read(&idx_path).with_context(|| format!("read {idx_path:?}"))?;
+    let (index, entries) =
+        index_from_bytes(&idx_bytes).with_context(|| format!("parse {idx_path:?}"))?;
+    if data.len() != rec.global_ids.len()
+        || knn.len() != rec.global_ids.len()
+        || index.len() != rec.global_ids.len()
+    {
+        bail!(
+            "segment {} size mismatch: manifest {} rows, vec {}, knn {}, idx {}",
+            rec.id,
+            rec.global_ids.len(),
+            data.len(),
+            knn.len(),
+            index.len()
+        );
+    }
+    Ok(Segment {
+        id: rec.id,
+        level: rec.level as usize,
+        data,
+        global_ids: Arc::new(rec.global_ids.clone()),
+        knn,
+        index,
+        entries,
+    })
+}
+
+// --------------------------------------------------------- checkpoint
+
+/// A practically unique identity for a fresh segment log (stamped into
+/// every manifest it writes): wall-clock nanos mixed with the pid and
+/// an in-process sequence number through a splitmix64 finalizer.
+pub fn fresh_log_id() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let mut x = nanos
+        ^ ((std::process::id() as u64) << 32)
+        ^ SEQ.fetch_add(1, Ordering::Relaxed).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Write a full checkpoint: segment spill files (new ones only), then
+/// the manifest via temp-file + atomic rename + directory fsync, then
+/// GC of spill files the new manifest no longer references.
+pub fn write_checkpoint(
+    dir: &Path,
+    manifest: &Manifest,
+    segments: &SegmentSet,
+) -> Result<CheckpointStats> {
+    std::fs::create_dir_all(dir).with_context(|| format!("create {dir:?}"))?;
+    // Lineage guard: spill reuse keys on bare file existence, so a
+    // directory must never be shared between logs — a fresh run
+    // checkpointing into another run's directory would silently pair
+    // its manifest with the other run's seg files (same ids, wrong
+    // vectors). A manifest from another log is refused outright; a
+    // directory with spills but NO manifest is a crashed first
+    // checkpoint of some log — nothing is restorable there, so its
+    // stray spills are cleared before we write ours.
+    if dir.join(MANIFEST_NAME).exists() {
+        let existing = read_manifest(dir)
+            .with_context(|| format!("{dir:?} holds an unreadable manifest"))?;
+        if existing.log_id != manifest.log_id {
+            bail!(
+                "{dir:?} already belongs to segment log {:#018x} (ours is {:#018x}); \
+                 restore from it or choose another directory",
+                existing.log_id,
+                manifest.log_id
+            );
+        }
+    } else {
+        for entry in std::fs::read_dir(dir).with_context(|| format!("list {dir:?}"))? {
+            let entry = entry?;
+            if entry
+                .file_name()
+                .to_str()
+                .is_some_and(|n| n.starts_with("seg-"))
+            {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+    let mut stats = CheckpointStats {
+        segments: manifest.segments.len(),
+        memtable_rows: manifest.memtable.len(),
+        ..Default::default()
+    };
+    for seg in &segments.segments {
+        if write_segment_files(dir, seg)? {
+            stats.segment_files_written += 1;
+        } else {
+            stats.segment_files_reused += 1;
+        }
+    }
+    let bytes = manifest_to_bytes(manifest);
+    stats.manifest_bytes = bytes.len() as u64;
+    // Make the spilled segment files' directory entries durable
+    // BEFORE the manifest that references them can become durable: a
+    // crash between the manifest rename and a later dir fsync must
+    // not be able to persist a manifest pointing at segment files
+    // whose renames were lost.
+    fsync_dir(dir);
+    write_atomic(&dir.join(MANIFEST_NAME), |p| {
+        std::fs::write(p, &bytes).with_context(|| format!("write {p:?}"))
+    })?;
+    // ...and make the manifest rename itself durable.
+    fsync_dir(dir);
+    stats.gc_removed = gc_stale_segments(dir, manifest)?;
+    Ok(stats)
+}
+
+/// Best-effort directory fsync (some platforms cannot open a
+/// directory for syncing; the rename ordering above still holds on
+/// any POSIX filesystem with ordered metadata).
+fn fsync_dir(dir: &Path) {
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// Remove `seg-*` files whose id is not referenced by `manifest`
+/// (compacted-away generations from earlier checkpoints). Only safe
+/// after the manifest swap has been published.
+fn gc_stale_segments(dir: &Path, manifest: &Manifest) -> Result<usize> {
+    let live: std::collections::HashSet<u64> =
+        manifest.segments.iter().map(|r| r.id).collect();
+    let mut removed = 0usize;
+    for entry in std::fs::read_dir(dir).with_context(|| format!("list {dir:?}"))? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(rest) = name.strip_prefix("seg-") else {
+            continue;
+        };
+        // Orphaned .tmp siblings (a crash between write and rename)
+        // are garbage regardless of their segment id.
+        if name.ends_with(".tmp") {
+            if std::fs::remove_file(entry.path()).is_ok() {
+                removed += 1;
+            }
+            continue;
+        }
+        let Some(id_str) = rest.split('.').next() else {
+            continue;
+        };
+        let Ok(id) = id_str.parse::<u64>() else {
+            continue;
+        };
+        if !live.contains(&id) && std::fs::remove_file(entry.path()).is_ok() {
+            removed += 1;
+        }
+    }
+    Ok(removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StreamConfig;
+    use crate::dataset::DatasetFamily;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "knnmerge-persist-{tag}-{}",
+            crate::util::unique_scratch_suffix()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_manifest() -> Manifest {
+        Manifest {
+            dim: 3,
+            metric: Metric::L2,
+            config_fingerprint: 0xDEAD_BEEF_0123,
+            log_id: 0x1065_4321,
+            next_gid: 42,
+            next_segment_id: 7,
+            inserted: 42,
+            deleted: 5,
+            sealed: 3,
+            compactions: 2,
+            reclaimed: 1,
+            upserted: 4,
+            tombstone_epoch: 11,
+            tombstones: vec![3, 9, 17],
+            bindings: vec![(40, 2), (41, 9)],
+            current: vec![(2, 40), (9, 41)],
+            segments: vec![
+                SegmentRecord {
+                    id: 5,
+                    level: 1,
+                    global_ids: vec![0, 1, 2, 4],
+                },
+                SegmentRecord {
+                    id: 6,
+                    level: 0,
+                    global_ids: vec![30, 31],
+                },
+            ],
+            memtable: vec![(38, vec![0.5, -1.0, 2.25]), (39, vec![1.0, 0.0, 0.125])],
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_byte_stable() {
+        let m = sample_manifest();
+        let bytes = manifest_to_bytes(&m);
+        let back = manifest_from_bytes(&bytes).unwrap();
+        assert_eq!(back, m);
+        // Serializing the parsed value reproduces the exact bytes.
+        assert_eq!(manifest_to_bytes(&back), bytes);
+    }
+
+    #[test]
+    fn manifest_rejects_torn_and_corrupt_payloads() {
+        let bytes = manifest_to_bytes(&sample_manifest());
+        assert!(manifest_from_bytes(&[]).is_err());
+        assert!(manifest_from_bytes(b"garbage").is_err());
+        // Truncation at every prefix fails cleanly (no panic).
+        for cut in [4usize, 16, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(manifest_from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        // A flipped payload byte fails the CRC.
+        let mut flipped = bytes.clone();
+        let mid = 16 + (flipped.len() - 20) / 2;
+        flipped[mid] ^= 0x40;
+        let err = manifest_from_bytes(&flipped).unwrap_err();
+        assert!(format!("{err:#}").contains("CRC"), "got: {err:#}");
+        // A wrong version is refused before the payload is touched.
+        let mut wrong = bytes.clone();
+        wrong[4] = 9;
+        assert!(manifest_from_bytes(&wrong).is_err());
+    }
+
+    #[test]
+    fn index_graph_roundtrips() {
+        let index = IndexGraph {
+            adj: vec![vec![1, 2], vec![0], vec![]],
+            max_degree: 4,
+            entry: 1,
+        };
+        let entries = vec![1, 2];
+        let bytes = index_to_bytes(&index, &entries);
+        let (back, back_entries) = index_from_bytes(&bytes).unwrap();
+        assert_eq!(back, index);
+        assert_eq!(back_entries, entries);
+        assert_eq!(index_to_bytes(&back, &back_entries), bytes);
+        assert!(index_from_bytes(&bytes[..bytes.len() - 2]).is_err());
+        assert!(index_from_bytes(b"nope").is_err());
+    }
+
+    #[test]
+    fn segment_files_roundtrip_and_reuse() {
+        let dir = tmpdir("segio");
+        let ds = DatasetFamily::Deep.generate(120, 3);
+        let cfg = StreamConfig::default();
+        let gids: Vec<u32> = (0..120).map(|i| i * 3).collect();
+        let seg = Segment::seal(9, 1, ds, gids.clone(), Metric::L2, &cfg);
+        assert!(write_segment_files(&dir, &seg).unwrap());
+        // Immutable content: a second spill of the same id is a no-op.
+        assert!(!write_segment_files(&dir, &seg).unwrap());
+        let rec = SegmentRecord {
+            id: 9,
+            level: 1,
+            global_ids: gids,
+        };
+        let back = load_segment(&dir, &rec, &RestoreOptions::default()).unwrap();
+        back.validate().unwrap();
+        assert_eq!(back.level, 1);
+        assert_eq!(back.data, seg.data);
+        assert_eq!(back.knn, seg.knn);
+        assert_eq!(back.index, seg.index);
+        assert_eq!(back.entries, seg.entries);
+        assert_eq!(back.global_ids, seg.global_ids);
+        // Paged restore yields the same segment, with faults billed.
+        let budget = MemoryBudget::bounded(1 << 20);
+        let paged = load_segment(&dir, &rec, &RestoreOptions::paged(Arc::clone(&budget)))
+            .unwrap();
+        assert_eq!(paged.knn, seg.knn);
+        assert_eq!(paged.data, seg.data);
+        assert!(budget.faults() > 0, "paged restore must bill faults");
+    }
+
+    #[test]
+    fn load_segment_rejects_size_mismatch() {
+        let dir = tmpdir("segbad");
+        let ds = DatasetFamily::Sift.generate(40, 4);
+        let cfg = StreamConfig::default();
+        let seg = Segment::seal(2, 0, ds, (0..40).collect(), Metric::L2, &cfg);
+        write_segment_files(&dir, &seg).unwrap();
+        let rec = SegmentRecord {
+            id: 2,
+            level: 0,
+            global_ids: (0..39).collect(), // one row short of the files
+        };
+        assert!(load_segment(&dir, &rec, &RestoreOptions::default()).is_err());
+    }
+}

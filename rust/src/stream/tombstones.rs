@@ -33,6 +33,24 @@ impl TombstoneSet {
         Arc::new(TombstoneSet::default())
     }
 
+    /// Rebuild a set from checkpointed state (`stream::persist`): the
+    /// restored stream continues at the exact epoch the checkpoint
+    /// captured, so epoch-gated consumers (delete's compare-and-swap,
+    /// the dead-fraction scan) behave as if the process never died.
+    pub fn from_parts(epoch: u64, dead: impl IntoIterator<Item = u32>) -> TombstoneSet {
+        TombstoneSet {
+            epoch,
+            dead: dead.into_iter().collect(),
+        }
+    }
+
+    /// The dead ids, sorted ascending (deterministic serialization).
+    pub fn sorted_ids(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self.dead.iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
     /// Whether `gid` is deleted.
     #[inline]
     pub fn contains(&self, gid: u32) -> bool {
@@ -113,5 +131,17 @@ mod tests {
         assert!(!t3.contains(7) && t3.contains(8) && !t3.contains(9));
         // Earlier snapshots are untouched (readers keep a stable view).
         assert_eq!(t2.len(), 3);
+    }
+
+    #[test]
+    fn from_parts_roundtrips_sorted_ids() {
+        let t = TombstoneSet::from_parts(17, [9u32, 3, 12]);
+        assert_eq!(t.epoch(), 17);
+        assert_eq!(t.len(), 3);
+        assert!(t.contains(3) && t.contains(9) && t.contains(12));
+        assert_eq!(t.sorted_ids(), vec![3, 9, 12]);
+        let back = TombstoneSet::from_parts(t.epoch(), t.sorted_ids());
+        assert_eq!(back.sorted_ids(), t.sorted_ids());
+        assert_eq!(back.epoch(), 17);
     }
 }

@@ -1,0 +1,54 @@
+//! CRC-32 (IEEE 802.3, the zlib/PNG polynomial) — integrity check for
+//! the stream checkpoint manifest. The vendored dependency set has no
+//! `crc32fast`; a 256-entry table built on first use is plenty for the
+//! few-KB manifests this guards.
+
+use std::sync::OnceLock;
+
+const POLY: u32 = 0xEDB8_8320;
+
+fn table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, entry) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { POLY ^ (c >> 1) } else { c >> 1 };
+            }
+            *entry = c;
+        }
+        t
+    })
+}
+
+/// CRC-32 of `bytes` (init `!0`, final xor `!0` — the standard check
+/// that yields `0xCBF43926` for `b"123456789"`).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let t = table();
+    let mut c = !0u32;
+    for &b in bytes {
+        c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_vectors() {
+        // The canonical CRC-32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn detects_single_byte_flips() {
+        let base = crc32(b"the manifest payload");
+        assert_ne!(base, crc32(b"the manifest payloae"));
+        assert_ne!(base, crc32(b"The manifest payload"));
+    }
+}

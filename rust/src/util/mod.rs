@@ -1,12 +1,15 @@
 //! Shared substrates built from scratch for this reproduction: a fast
 //! deterministic PRNG, a parallel-for helper (OpenMP stand-in), a JSON
-//! writer for result files, and a tiny property-testing driver.
+//! writer for result files, a tiny property-testing driver, and a
+//! CRC-32 for checkpoint-manifest integrity.
 
+pub mod crc;
 pub mod json;
 pub mod parallel;
 pub mod proptest;
 pub mod rng;
 
+pub use crc::crc32;
 pub use parallel::{num_threads, parallel_for, parallel_map};
 pub use rng::Rng;
 

@@ -1,0 +1,460 @@
+//! Durability acceptance tests for the stream checkpoint/restore layer
+//! (`stream::persist`):
+//!
+//! - checkpoint → restore round-trips are *exact*: identical segment
+//!   count, `live_len`, tombstone epoch, counters, and bit-identical
+//!   `search_ef` results for a fixed query set;
+//! - a crash mid-checkpoint (torn `MANIFEST.tmp`, stray partial spill
+//!   files) restores the previous checkpoint; corrupt or truncated
+//!   manifests fail with a clean error, never a panic or torn state;
+//! - a crash-recovery property test interleaves
+//!   insert/delete/upsert/seal/compact to a random depth, checkpoints,
+//!   drops the index, restores, and checks the restored index is
+//!   indistinguishable — including "no resurrected gids".
+
+use knn_merge::config::StreamConfig;
+use knn_merge::dataset::{DatasetFamily, MemoryBudget};
+use knn_merge::distance::Metric;
+use knn_merge::merge::MergeParams;
+use knn_merge::stream::{RestoreOptions, StreamingIndex};
+use knn_merge::util::proptest::check_property_cases;
+use knn_merge::util::Rng;
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "knnmerge-restore-{tag}-{}",
+        knn_merge::util::unique_scratch_suffix()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Deterministic config: inline seals so a checkpoint is an exact cut.
+fn cfg(k: usize, segment_size: usize) -> StreamConfig {
+    StreamConfig {
+        segment_size,
+        brute_threshold: 512,
+        seal_threads: 0,
+        merge: MergeParams {
+            k,
+            lambda: k,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn topk_all(index: &StreamingIndex, queries: &knn_merge::Dataset) -> Vec<Vec<(f32, u32)>> {
+    (0..queries.len())
+        .map(|q| index.search_ef(&queries.vector(q), 10, 64))
+        .collect()
+}
+
+#[test]
+fn checkpoint_restore_roundtrip_is_exact() {
+    let dir = ckpt_dir("exact");
+    let n = 500usize;
+    let ds = DatasetFamily::Deep.generate(n + 50, 61);
+    let queries = DatasetFamily::Deep.generate_queries(12, 62);
+    let config = cfg(8, 120);
+    let index = StreamingIndex::new(ds.dim, Metric::L2, config.clone());
+    for i in 0..n {
+        index.insert(&ds.vector(i));
+    }
+    // Leave the log mid-life: segments at mixed levels, pending
+    // tombstones, upserted rows, and a partially full memtable.
+    index.tick();
+    for gid in (0..200u32).step_by(4) {
+        assert!(index.delete(gid));
+    }
+    for (j, gid) in (300..330u32).step_by(3).enumerate() {
+        assert!(index.upsert(gid, &ds.vector(n + j)));
+    }
+    let pre_stats = index.stats();
+    let pre_live = index.live_len();
+    let pre_epoch = index.tombstones().epoch();
+    let pre_results = topk_all(&index, &queries);
+    assert!(pre_stats.tombstones > 0, "test wants pending tombstones");
+    assert!(pre_stats.memtable_len > 0, "test wants buffered rows");
+
+    let ckpt = index.checkpoint(&dir).unwrap();
+    assert_eq!(ckpt.segments, pre_stats.live_segments);
+    assert!(ckpt.manifest_bytes > 0);
+    drop(index); // the "crash"
+
+    let restored = StreamingIndex::restore(&dir, config.clone(), &RestoreOptions::default())
+        .unwrap();
+    let post = restored.stats();
+    assert_eq!(post.live_segments, pre_stats.live_segments, "segment count");
+    assert_eq!(restored.live_len(), pre_live, "live_len");
+    assert_eq!(restored.tombstones().epoch(), pre_epoch, "tombstone epoch");
+    assert_eq!(post.tombstones, pre_stats.tombstones);
+    assert_eq!(post.inserted, pre_stats.inserted);
+    assert_eq!(post.deleted, pre_stats.deleted);
+    assert_eq!(post.upserts, pre_stats.upserts);
+    assert_eq!(post.sealed, pre_stats.sealed);
+    assert_eq!(post.compactions, pre_stats.compactions);
+    assert_eq!(post.reclaimed, pre_stats.reclaimed);
+    assert_eq!(post.memtable_len, pre_stats.memtable_len);
+    // Bit-identical top-k: same ids, same f32 distances, same order.
+    assert_eq!(topk_all(&restored, &queries), pre_results);
+
+    // The restored log keeps working: inserts continue the id space,
+    // compaction drains, upserted rows stay current.
+    let next = restored.insert(&ds.vector(n + 40));
+    assert_eq!(next as usize, pre_stats.inserted);
+    restored.flush();
+    restored.compact_all();
+    assert_eq!(restored.snapshot().count(), 1);
+    assert_eq!(restored.stats().tombstones, 0);
+    let hit = restored.search_ef(&ds.vector(n), 1, 64);
+    assert_eq!(hit[0].1, 300, "upserted payload must survive restore+compact");
+    assert!(hit[0].0 <= 1e-6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn paged_restore_matches_eager_and_bills_faults() {
+    let dir = ckpt_dir("paged");
+    let ds = DatasetFamily::Sift.generate(400, 63);
+    let queries = DatasetFamily::Sift.generate_queries(8, 64);
+    let config = cfg(8, 100);
+    let index = StreamingIndex::new(ds.dim, Metric::L2, config.clone());
+    for i in 0..400 {
+        index.insert(&ds.vector(i));
+    }
+    for gid in (0..100u32).step_by(5) {
+        index.delete(gid);
+    }
+    let pre = topk_all(&index, &queries);
+    index.checkpoint(&dir).unwrap();
+    drop(index);
+
+    let eager = StreamingIndex::restore(&dir, config.clone(), &RestoreOptions::default())
+        .unwrap();
+    let budget = MemoryBudget::bounded(1 << 20);
+    let paged = StreamingIndex::restore(
+        &dir,
+        config.clone(),
+        &RestoreOptions::paged(std::sync::Arc::clone(&budget)),
+    )
+    .unwrap();
+    assert!(budget.faults() > 0, "paged restore must fault through the budget");
+    assert_eq!(topk_all(&eager, &queries), pre);
+    assert_eq!(topk_all(&paged, &queries), pre, "paged == eager == pre-crash");
+    assert_eq!(paged.live_len(), eager.live_len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn torn_checkpoint_write_restores_the_previous_generation() {
+    let dir = ckpt_dir("torn");
+    let ds = DatasetFamily::Deep.generate(300, 65);
+    let queries = DatasetFamily::Deep.generate_queries(6, 66);
+    let config = cfg(6, 80);
+    let index = StreamingIndex::new(ds.dim, Metric::L2, config.clone());
+    for i in 0..250 {
+        index.insert(&ds.vector(i));
+    }
+    index.checkpoint(&dir).unwrap();
+    let v1_results = topk_all(&index, &queries);
+    let v1_live = index.live_len();
+
+    // The process keeps mutating, then "crashes" partway through its
+    // next checkpoint: a half-written manifest still at its temp name,
+    // plus a torn spill file of a segment the old manifest never
+    // referenced. Neither may affect a restore.
+    for i in 250..300 {
+        index.insert(&ds.vector(i));
+    }
+    let manifest_bytes = std::fs::read(dir.join("MANIFEST")).unwrap();
+    std::fs::write(dir.join("MANIFEST.tmp"), &manifest_bytes[..manifest_bytes.len() / 3])
+        .unwrap();
+    std::fs::write(dir.join("seg-999.vec"), b"torn spill write").unwrap();
+    drop(index);
+
+    let restored = StreamingIndex::restore(&dir, config.clone(), &RestoreOptions::default())
+        .unwrap();
+    assert_eq!(restored.live_len(), v1_live, "previous checkpoint, exactly");
+    assert_eq!(topk_all(&restored, &queries), v1_results);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_or_truncated_manifests_fail_cleanly() {
+    let dir = ckpt_dir("corrupt");
+    let ds = DatasetFamily::Sift.generate(120, 67);
+    let config = cfg(6, 60);
+    let index = StreamingIndex::new(ds.dim, Metric::L2, config.clone());
+    for i in 0..120 {
+        index.insert(&ds.vector(i));
+    }
+    index.checkpoint(&dir).unwrap();
+    drop(index);
+    let manifest = dir.join("MANIFEST");
+    let good = std::fs::read(&manifest).unwrap();
+
+    // Truncation: every loss of a tail is a clean error.
+    for cut in [0usize, 10, good.len() / 2, good.len() - 1] {
+        std::fs::write(&manifest, &good[..cut]).unwrap();
+        let err = StreamingIndex::restore(&dir, config.clone(), &RestoreOptions::default());
+        assert!(err.is_err(), "truncation at {cut} must fail cleanly");
+    }
+    // A flipped payload byte fails the CRC check, by name.
+    let mut flipped = good.clone();
+    let mid = 16 + (flipped.len() - 20) / 2;
+    flipped[mid] ^= 0x08;
+    std::fs::write(&manifest, &flipped).unwrap();
+    let err = StreamingIndex::restore(&dir, config.clone(), &RestoreOptions::default())
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("CRC"), "got: {err:#}");
+
+    // A config whose graph-shaping knobs differ is refused.
+    std::fs::write(&manifest, &good).unwrap();
+    let mut other = config.clone();
+    other.merge.k += 2;
+    assert!(StreamingIndex::restore(&dir, other, &RestoreOptions::default()).is_err());
+    // ...while retuning runtime knobs is fine.
+    let mut tuned = config.clone();
+    tuned.ef = 128;
+    tuned.seal_threads = 3;
+    let ok = StreamingIndex::restore(&dir, tuned, &RestoreOptions::default());
+    assert!(ok.is_ok(), "runtime knobs must not invalidate a checkpoint");
+
+    // A missing segment spill is a clean error too.
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let p = entry.unwrap().path();
+        if p.extension().is_some_and(|e| e == "knn") {
+            std::fs::remove_file(p).unwrap();
+        }
+    }
+    assert!(StreamingIndex::restore(&dir, config, &RestoreOptions::default()).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sequential_checkpoints_reuse_spills_and_gc_stale_ones() {
+    let dir = ckpt_dir("gc");
+    let ds = DatasetFamily::Deep.generate(400, 68);
+    let config = cfg(6, 100);
+    let index = StreamingIndex::new(ds.dim, Metric::L2, config.clone());
+    for i in 0..400 {
+        index.insert(&ds.vector(i));
+    }
+    let first = index.checkpoint(&dir).unwrap();
+    assert_eq!(first.segment_files_written, first.segments);
+    assert_eq!(first.gc_removed, 0);
+    // Unchanged log: the second checkpoint rewrites nothing.
+    let second = index.checkpoint(&dir).unwrap();
+    assert_eq!(second.segment_files_written, 0);
+    assert_eq!(second.segment_files_reused, first.segments);
+    // Compaction replaces every segment; the third checkpoint spills
+    // the new generation and GCs all of the old one's files.
+    index.compact_all();
+    let third = index.checkpoint(&dir).unwrap();
+    assert_eq!(third.segments, 1);
+    assert_eq!(third.segment_files_written, 1);
+    assert_eq!(third.gc_removed, first.segments * 3, "vec+knn+idx per stale segment");
+    let remaining: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+        .filter(|n| n.starts_with("seg-"))
+        .collect();
+    assert_eq!(remaining.len(), 3, "one segment's three files remain: {remaining:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_dir_is_bound_to_one_log() {
+    // Spill reuse keys on file existence, so a directory must never be
+    // shared between logs: a second, unrelated index (same config!)
+    // checkpointing into the same directory is refused, while the
+    // restored continuation of the original log is welcome.
+    let dir = ckpt_dir("lineage");
+    let ds = DatasetFamily::Deep.generate(200, 70);
+    let config = cfg(6, 60);
+    let a = StreamingIndex::new(ds.dim, Metric::L2, config.clone());
+    for i in 0..120 {
+        a.insert(&ds.vector(i));
+    }
+    a.checkpoint(&dir).unwrap();
+    let b = StreamingIndex::new(ds.dim, Metric::L2, config.clone());
+    for i in 0..60 {
+        b.insert(&ds.vector(i));
+    }
+    let err = b.checkpoint(&dir).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("belongs to segment log"),
+        "foreign log must be refused: {err:#}"
+    );
+    // The original checkpoint is untouched; its restored continuation
+    // carries the log id and may keep checkpointing here.
+    let restored =
+        StreamingIndex::restore(&dir, config.clone(), &RestoreOptions::default()).unwrap();
+    assert_eq!(restored.live_len(), 120);
+    restored.insert(&ds.vector(120));
+    restored.checkpoint(&dir).unwrap();
+
+    // A manifest-less directory holding stray spills (a crashed first
+    // checkpoint of some other log) is cleared, not inherited: seg-0
+    // garbage must not be reused for the new log's segment 0.
+    let dir2 = ckpt_dir("lineage2");
+    for ext in ["vec", "knn", "idx"] {
+        std::fs::write(dir2.join(format!("seg-0.{ext}")), b"stale garbage").unwrap();
+    }
+    let c = StreamingIndex::new(ds.dim, Metric::L2, config.clone());
+    for i in 0..120 {
+        c.insert(&ds.vector(i));
+    }
+    c.checkpoint(&dir2).unwrap();
+    let r2 = StreamingIndex::restore(&dir2, config, &RestoreOptions::default()).unwrap();
+    assert_eq!(r2.live_len(), 120, "stray spills must not shadow the new log");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+#[test]
+fn upsert_bindings_prune_to_live_state() {
+    // Superseded and deleted upsert bindings are pruned when their
+    // rows are reclaimed, so the checkpoint manifest's binding table
+    // is bounded by *live* upserted rows — not lifetime upserts.
+    let dir = ckpt_dir("bindings");
+    let ds = DatasetFamily::Deep.generate(400, 69);
+    let config = cfg(6, 50);
+    let index = StreamingIndex::new(ds.dim, Metric::L2, config.clone());
+    for i in 0..100 {
+        index.insert(&ds.vector(i));
+    }
+    index.flush();
+    // gid 3: upserted three times (two superseded bindings); gid 9:
+    // upserted then deleted.
+    for round in 0..3 {
+        assert!(index.upsert(3, &ds.vector(200 + round)));
+    }
+    assert!(index.upsert(9, &ds.vector(300)));
+    assert!(index.delete(9));
+    index.flush();
+    index.compact_all(); // reclaims every superseded/deleted row
+    assert_eq!(index.stats().tombstones, 0);
+    index.checkpoint(&dir).unwrap();
+    let m = knn_merge::stream::persist::read_manifest(&dir).unwrap();
+    assert_eq!(
+        m.bindings.len(),
+        1,
+        "only gid 3's live binding may remain: {:?}",
+        m.bindings
+    );
+    assert_eq!(m.current.len(), 1);
+    assert_eq!(m.bindings[0].1, 3, "the surviving binding belongs to gid 3");
+    // The pruned state restores and still answers with the newest
+    // payload under gid 3, while gid 9 stays dead.
+    let restored =
+        StreamingIndex::restore(&dir, config, &RestoreOptions::default()).unwrap();
+    let hit = restored.search_ef(&ds.vector(202), 1, 96);
+    assert_eq!(hit[0].1, 3);
+    assert!(hit[0].0 <= 1e-6);
+    let gone = restored.search_ef(&ds.vector(300), 5, 96);
+    assert!(gone.iter().all(|&(_, id)| id != 9), "gid 9 resurrected");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The crash-recovery property test of the ISSUE: a random interleaving
+/// of insert / delete / upsert / seal (flush) / compact (tick) runs to
+/// a random depth, checkpoints, "crashes" (drops the index), restores,
+/// and must be indistinguishable: identical `search_ef` results on a
+/// fixed query set, identical `live_len`, and no resurrected gids —
+/// a deleted gid's payload must never answer under that gid again.
+#[test]
+fn crash_recovery_property() {
+    check_property_cases("stream-crash-recovery", 202, 6, |rng: &mut Rng| {
+        let n_rows = 260 + rng.gen_range(120);
+        let ds = DatasetFamily::Deep.generate(n_rows + 400, rng.next_u64());
+        let queries = DatasetFamily::Deep.generate_queries(6, rng.next_u64());
+        let mut config = cfg(6, 48);
+        config.compact_dead_fraction = 0.3;
+        let dir = ckpt_dir("prop");
+        let index = StreamingIndex::new(ds.dim, Metric::L2, config.clone());
+
+        let mut live: Vec<u32> = Vec::new(); // user gids currently live
+        let mut dead: HashSet<u32> = HashSet::new();
+        let mut payload: HashMap<u32, usize> = HashMap::new(); // gid -> current ds row
+        let mut born: HashMap<u32, usize> = HashMap::new(); // gid -> insert-time ds row
+        let mut next_insert = 0usize;
+        let mut next_fresh = n_rows; // upsert replacement payloads
+        let ops = 120 + rng.gen_range(n_rows);
+        for _ in 0..ops {
+            match rng.gen_range(10) {
+                0..=4 => {
+                    if next_insert < n_rows {
+                        let gid = index.insert(&ds.vector(next_insert));
+                        payload.insert(gid, next_insert);
+                        born.insert(gid, next_insert);
+                        live.push(gid);
+                        next_insert += 1;
+                    }
+                }
+                5 | 6 => {
+                    if live.len() > 1 {
+                        let victim = live.swap_remove(rng.gen_range(live.len()));
+                        assert!(index.delete(victim));
+                        dead.insert(victim);
+                        payload.remove(&victim);
+                    }
+                }
+                7 => {
+                    if !live.is_empty() {
+                        let gid = live[rng.gen_range(live.len())];
+                        assert!(index.upsert(gid, &ds.vector(next_fresh)));
+                        payload.insert(gid, next_fresh);
+                        next_fresh += 1;
+                    }
+                }
+                8 => index.flush(),
+                _ => {
+                    index.tick();
+                }
+            }
+        }
+
+        let pre_results = topk_all(&index, &queries);
+        let pre_live = index.live_len();
+        let pre_stats = index.stats();
+        let pre_epoch = index.tombstones().epoch();
+        index.checkpoint(&dir).unwrap();
+        drop(index); // crash
+
+        let restored =
+            StreamingIndex::restore(&dir, config.clone(), &RestoreOptions::default()).unwrap();
+        assert_eq!(restored.live_len(), pre_live, "live_len after restore");
+        assert_eq!(restored.tombstones().epoch(), pre_epoch);
+        let post_stats = restored.stats();
+        assert_eq!(post_stats.live_segments, pre_stats.live_segments);
+        assert_eq!(post_stats.tombstones, pre_stats.tombstones);
+        assert_eq!(post_stats.memtable_len, pre_stats.memtable_len);
+        assert_eq!(
+            topk_all(&restored, &queries),
+            pre_results,
+            "restored search results must be bit-identical"
+        );
+        // No resurrected gids: a deleted gid must not answer for its
+        // insert-time payload (true whether or not it was upserted in
+        // between — every row it ever owned is dead). Sampled to keep
+        // the property cheap.
+        for g in dead.iter().copied().take(12) {
+            let hits = restored.search_ef(&ds.vector(born[&g]), 5, 64);
+            assert!(
+                hits.iter().all(|&(_, id)| id != g),
+                "deleted gid {g} resurrected after restore"
+            );
+        }
+        // Every live gid's current payload still answers exactly.
+        for (&gid, &row) in payload.iter().take(10) {
+            let hits = restored.search_ef(&ds.vector(row), 1, 96);
+            assert_eq!(hits[0].1, gid, "live gid {gid} lost its payload");
+            assert!(hits[0].0 <= 1e-6);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}

@@ -1,0 +1,134 @@
+#!/usr/bin/env python3
+"""Regenerate the golden wire-format fixtures under rust/tests/data/.
+
+The fixtures pin the on-disk byte layout of:
+
+  - the flat graph format        (KNG2, graph::serial::graph_to_bytes)
+  - the row-blocked spill format (KNG3, graph::serial::write_graph_blocked)
+  - the search-graph spill       (KIDX, stream::persist::index_to_bytes)
+  - the checkpoint manifest      (KNM1, stream::persist::manifest_to_bytes)
+
+plus deliberately damaged variants (truncation, flipped CRC byte) that
+readers must reject with a clean error. `rust/tests/wire_golden.rs`
+asserts byte-identical round-trips against these files, so any format
+edit breaks loudly there — rerun this script ONLY when a format change
+is intentional, and bump the relevant version/magic when you do.
+
+This script is the independent second implementation of each format:
+it shares no code with the Rust writers, so agreement is evidence the
+spec comments in serial.rs / persist.rs match reality.
+"""
+
+import struct
+import zlib
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "rust" / "tests" / "data"
+OUT.mkdir(parents=True, exist_ok=True)
+
+u8 = lambda v: struct.pack("<B", v)
+u16 = lambda v: struct.pack("<H", v)
+u32 = lambda v: struct.pack("<I", v)
+u64 = lambda v: struct.pack("<Q", v)
+f32 = lambda v: struct.pack("<f", v)
+
+# The one shared graph: k=4, span offset 7, 3 rows.
+#   row0: (8, 0.25, new) (9, 0.5, old)   row1: empty   row2: (7, 1.5, new)
+ROWS = [[(8, 0.25, 1), (9, 0.5, 0)], [], [(7, 1.5, 1)]]
+K, SPAN_OFFSET = 4, 7
+
+
+def encode_row(row):
+    out = u16(len(row))
+    for nid, dist, new in row:
+        out += u32(nid) + f32(dist) + u8(new)
+    return out
+
+
+# ------------------------------------------------------------- KNG2
+kng2 = u32(0x4B4E4732) + u32(K) + u32(SPAN_OFFSET) + u64(len(ROWS))
+for row in ROWS:
+    kng2 += encode_row(row)
+(OUT / "golden.kng2").write_bytes(kng2)
+
+# ------------------------------------------------------------- KNG3
+BLOCK_ROWS = 2
+nblocks = (len(ROWS) + BLOCK_ROWS - 1) // BLOCK_ROWS
+blocks = [
+    b"".join(encode_row(r) for r in ROWS[i : i + BLOCK_ROWS])
+    for i in range(0, len(ROWS), BLOCK_ROWS)
+]
+header = (
+    u32(0x4B4E4733)
+    + u32(K)
+    + u32(SPAN_OFFSET)
+    + u64(len(ROWS))
+    + u32(BLOCK_ROWS)
+    + u32(nblocks)
+)
+offsets, pos = [], len(header) + (nblocks + 1) * 8
+for b in blocks:
+    offsets.append(pos)
+    pos += len(b)
+offsets.append(pos)
+kng3 = header + b"".join(u64(o) for o in offsets) + b"".join(blocks)
+(OUT / "golden.kng3").write_bytes(kng3)
+(OUT / "golden_truncated.kng3").write_bytes(kng3[:-1])
+
+# ------------------------------------------------------------- KIDX
+kidx = (
+    u32(0x4B494458)
+    + u32(3)  # max_degree
+    + u32(1)  # entry
+    + u64(3)  # n
+    + u32(2)  # n_entries
+    + u32(1)
+    + u32(0)
+    # adjacency rows: [1], [0, 2], []
+    + u16(1)
+    + u32(1)
+    + u16(2)
+    + u32(0)
+    + u32(2)
+    + u16(0)
+)
+(OUT / "golden.kidx").write_bytes(kidx)
+
+# ---------------------------------------------------------- manifest
+payload = (
+    u32(2)  # dim
+    + u8(0)  # metric: L2
+    + u64(0x0123456789ABCDEF)  # config fingerprint
+    + u64(0xB10C1D0000000001)  # log id
+    + u32(9)  # next_gid
+    + u64(4)  # next_segment_id
+    + u64(9)  # inserted
+    + u64(2)  # deleted
+    + u64(2)  # sealed
+    + u64(1)  # compactions
+    + u64(1)  # reclaimed
+    + u64(1)  # upserted
+    + u64(5)  # tombstone_epoch
+    + u32(2) + u32(3) + u32(6)            # tombstones [3, 6]
+    + u32(1) + u32(8) + u32(2)            # bindings [(8 -> gid 2)]
+    + u32(1) + u32(2) + u32(8)            # current [(gid 2 -> 8)]
+    + u32(2)                               # two segments
+    + u64(0) + u32(0) + u32(3) + u32(0) + u32(1) + u32(4)
+    + u64(3) + u32(1) + u32(2) + u32(5) + u32(7)
+    + u32(1) + u32(8) + f32(1.5) + f32(-2.0)  # memtable [(8, [1.5, -2.0])]
+)
+manifest = (
+    u32(0x4B4E4D31)  # "KNM1"
+    + u32(1)  # version
+    + u64(len(payload))
+    + payload
+    + u32(zlib.crc32(payload) & 0xFFFFFFFF)
+)
+(OUT / "golden.manifest").write_bytes(manifest)
+(OUT / "golden_truncated.manifest").write_bytes(manifest[: len(manifest) // 2])
+bad = bytearray(manifest)
+bad[16 + len(payload) // 2] ^= 0x20  # flip one payload bit -> CRC must catch it
+(OUT / "golden_badcrc.manifest").write_bytes(bytes(bad))
+
+for f in sorted(OUT.iterdir()):
+    print(f"{f.relative_to(OUT.parent.parent.parent)}  {f.stat().st_size} bytes")

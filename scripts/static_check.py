@@ -9,7 +9,10 @@ bitten written-but-not-compiled PRs in this repo:
   3. `use crate::…` / `use knn_merge::…` path resolution against the
      declared module tree and each module's `pub` item surface,
   4. `pub use` re-export resolution,
-  5. Cargo.toml target paths exist.
+  5. Cargo.toml target paths exist,
+  6. every committed fixture under rust/tests/data/ is referenced by
+     name in at least one rust/tests/*.rs file (orphaned golden files
+     mean a test stopped guarding a wire format).
 
 Exit code 0 = no findings. Anything found prints `FILE:LINE: message`
 and exits 1. Run from anywhere: paths resolve relative to the repo
@@ -241,6 +244,17 @@ for m in re.finditer(r'path\s*=\s*"([^"]+)"', cargo):
     if not (ROOT / m.group(1)).exists():
         report(ROOT / "Cargo.toml", cargo[: m.start()].count("\n") + 1,
                f"target path {m.group(1)} does not exist")
+
+# ----------------------------------- 5. test fixtures are referenced
+
+FIXTURE_DIR = ROOT / "rust" / "tests" / "data"
+if FIXTURE_DIR.is_dir():
+    # Raw test sources (NOT stripped: fixture names live in string
+    # literals, which strip_rust removes).
+    test_texts = [p.read_text() for p in sorted((ROOT / "rust" / "tests").glob("*.rs"))]
+    for fx in sorted(FIXTURE_DIR.iterdir()):
+        if fx.is_file() and not any(fx.name in t for t in test_texts):
+            report(fx, 1, "fixture is not referenced by any rust/tests/*.rs test")
 
 # ------------------------------------------------------------- result
 

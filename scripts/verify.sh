@@ -8,6 +8,8 @@
 #   FMT_FIX=0 bash scripts/verify.sh       # check-only formatting
 #   SKIP_CHURN_SMOKE=1 bash scripts/verify.sh   # skip the ~5s bench smoke
 #   CHURN_SMOKE_SCALE=0.5 bash scripts/verify.sh # bigger smoke workload
+#   SKIP_RESTORE_SMOKE=1 bash scripts/verify.sh # skip the ~5s durability smoke
+#   RESTORE_SMOKE_SCALE=0.5 bash scripts/verify.sh # bigger restore workload
 #
 # `cargo fmt` / `cargo clippy` are skipped automatically when the
 # component is not installed (minimal CI containers); the build + test
@@ -28,6 +30,15 @@ cargo test -q
 # between full bench runs. Scale up via CHURN_SMOKE_SCALE.
 if [ "${SKIP_CHURN_SMOKE:-0}" != "1" ]; then
   KNN_BENCH_SCALE="${CHURN_SMOKE_SCALE:-0.05}" cargo bench --bench stream_churn
+fi
+
+# Durability smoke (~5s at this scale): checkpoint -> kill -> restore
+# over a churned log (deletes + upserts), with an eager and a
+# budget-paged restore both verified bit-identical against the pre-kill
+# index, plus a torn-manifest-write drill. The durability path cannot
+# bit-rot between full bench runs. Scale up via RESTORE_SMOKE_SCALE.
+if [ "${SKIP_RESTORE_SMOKE:-0}" != "1" ]; then
+  KNN_BENCH_SCALE="${RESTORE_SMOKE_SCALE:-0.05}" cargo bench --bench stream_restore
 fi
 
 # Formatting is a hard gate (STRICT_FMT defaults to on). FMT_FIX=1 (the
