@@ -18,6 +18,7 @@ use knn_merge::distance::Metric;
 use knn_merge::eval::bench::{scaled, BenchReport, Row};
 use knn_merge::eval::recall::{search_recall, GroundTruth};
 use knn_merge::merge::MergeParams;
+use knn_merge::metrics::Histogram;
 use knn_merge::stream::{stream_ingest_into, IngestOptions, StreamingIndex};
 use std::sync::Arc;
 use std::time::Instant;
@@ -79,7 +80,10 @@ fn main() {
         report.push(
             Row::new(label)
                 .col("inserts_per_s", summary.insert_rate)
+                .col("insert_p50_ms", summary.insert_p50_s * 1e3)
                 .col("insert_p99_ms", summary.insert_p99_s * 1e3)
+                .col("search_p50_ms", summary.search_p50_s * 1e3)
+                .col("search_p99_ms", summary.search_p99_s * 1e3)
                 .col("qps_under_churn", mid_qps)
                 .col("recall_under_churn", mid_recall)
                 .col("final_recall", summary.final_recall)
@@ -104,7 +108,7 @@ fn batch_rebuild_row(ds: &Dataset, queries: &Dataset, segment_size: usize) -> Ro
     let mut rng = Rng::seeded(IngestOptions::default().delete_seed);
     let mut live: Vec<u32> = Vec::with_capacity(n);
     let mut deleted = 0usize;
-    let mut insert_lat: Vec<f64> = Vec::with_capacity(n);
+    let insert_lat = Histogram::new();
     let mut rebuild_secs = 0.0f64;
     let mut qps_rows: Vec<(f64, f64)> = Vec::new(); // (qps, recall)
     let nnd = NnDescent::new(NnDescentParams {
@@ -150,20 +154,20 @@ fn batch_rebuild_row(ds: &Dataset, queries: &Dataset, segment_size: usize) -> Ro
                 search_recall(&results, &truth, TOPK),
             ));
         }
-        insert_lat.push(t.elapsed().as_secs_f64());
+        insert_lat.record_duration(t.elapsed());
         if live.len() > 1 && (rng.gen_range(1_000_000) as f64) < DELETE_RATE * 1e6 {
             live.swap_remove(rng.gen_range(live.len()));
             deleted += 1;
         }
     }
     let total = start.elapsed().as_secs_f64();
-    insert_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p99 = insert_lat[(insert_lat.len() * 99) / 100];
+    let lat = insert_lat.snapshot();
     let qps = qps_rows.iter().map(|r| r.0).sum::<f64>() / qps_rows.len().max(1) as f64;
     let recall = qps_rows.iter().map(|r| r.1).sum::<f64>() / qps_rows.len().max(1) as f64;
     Row::new("batch_rebuild")
         .col("inserts_per_s", n as f64 / total.max(1e-9))
-        .col("insert_p99_ms", p99 * 1e3)
+        .col("insert_p50_ms", lat.quantile_secs(0.50) * 1e3)
+        .col("insert_p99_ms", lat.quantile_secs(0.99) * 1e3)
         .col("qps_under_churn", qps)
         .col("recall_under_churn", recall)
         .col("rebuild_secs_total", rebuild_secs)

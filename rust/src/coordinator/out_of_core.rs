@@ -33,7 +33,7 @@ use crate::distributed::storage::{ExternalStorage, StorageModel};
 use crate::graph::paged::PagedKnnGraph;
 use crate::graph::{IdRemap, IdSpan, KnnGraph, Neighbor, NeighborList};
 use crate::merge::{SupportLists, TwoWayMerge};
-use crate::metrics::{CostLedger, Phase};
+use crate::metrics::{CostLedger, Phase, Registry, Span};
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -44,6 +44,8 @@ use std::sync::Arc;
 pub fn build_out_of_core(ds: &Dataset, cfg: &RunConfig) -> Result<(KnnGraph, CostLedger)> {
     let p = cfg.parts.max(2);
     let ledger = CostLedger::new();
+    let obs = Registry::global();
+    let mut last_evictions = 0u64;
     let budget = match cfg.memory_budget {
         0 => MemoryBudget::unbounded(),
         bytes => MemoryBudget::bounded(bytes),
@@ -81,13 +83,17 @@ pub fn build_out_of_core(ds: &Dataset, cfg: &RunConfig) -> Result<(KnnGraph, Cos
     let nnd = NnDescent::new(cfg.nnd);
     for s in 0..p {
         let sub = storage.get_subset(s)?;
-        let g = ledger.time(Phase::Build, || nnd.build(&sub, cfg.metric));
+        let g = {
+            let _span = Span::enter_billed(&obs, "ooc_subgraph_build", Phase::Build, &ledger);
+            nnd.build(&sub, cfg.metric)
+        };
         let support = SupportLists::build(&g, cfg.merge.lambda);
         storage.put_graph(&format!("sub-{s}"), &g.rebase(spans[s].offset), &ledger)?;
         // Supports ride along as a graph-shaped file (ids only).
         storage.put_graph(&format!("sup-{s}"), &support_as_graph(&support), &ledger)?;
         drop(sub);
         storage.settle(&ledger); // bill this subset's build-time faults
+        note_budget_pressure(&obs, &budget, &mut last_evictions);
     }
 
     // Phase 3: pairwise merges, two subsets resident per round. Graphs
@@ -103,7 +109,8 @@ pub fn build_out_of_core(ds: &Dataset, cfg: &RunConfig) -> Result<(KnnGraph, Cos
             let s_j = paged_as_support(&storage.get_graph_paged(&format!("sup-{j}"))?);
 
             let (n_i, n_j) = (ds_i.len(), ds_j.len());
-            let (gi_new, gj_new) = ledger.time(Phase::Merge, || {
+            let (gi_new, gj_new) = {
+                let _span = Span::enter_billed(&obs, "ooc_merge_round", Phase::Merge, &ledger);
                 let support = SupportLists::concat_pair(s_i, s_j, n_i);
                 let cross = TwoWayMerge::new(cfg.merge).cross_graph(
                     &ds_i, &ds_j, &support, cfg.metric,
@@ -116,7 +123,7 @@ pub fn build_out_of_core(ds: &Dataset, cfg: &RunConfig) -> Result<(KnnGraph, Cos
                     .slice_rows(n_i..n_i + n_j)
                     .remapped(&to_global, spans[j]);
                 (g_ij, g_ji)
-            });
+            };
             // MergeSort into the stored subgraphs — all four graphs are
             // in global space, enforced by the span check inside
             // merge_graph.
@@ -124,6 +131,7 @@ pub fn build_out_of_core(ds: &Dataset, cfg: &RunConfig) -> Result<(KnnGraph, Cos
             storage.merge_graph(&format!("sub-{j}"), &gj_new, &ledger)?;
             drop((ds_i, ds_j));
             storage.settle(&ledger); // bill the round's faults
+            note_budget_pressure(&obs, &budget, &mut last_evictions);
         }
     }
 
@@ -150,8 +158,29 @@ pub fn build_out_of_core(ds: &Dataset, cfg: &RunConfig) -> Result<(KnnGraph, Cos
     }
     let graph = KnnGraph::from_lists(lists, k);
     storage.settle(&ledger);
+    note_budget_pressure(&obs, &budget, &mut last_evictions);
     storage.cleanup()?;
     Ok((graph, ledger))
+}
+
+/// Settle-point observability: refresh the budget gauges and journal a
+/// `budget_pressure` event whenever the clock sweep had to evict since
+/// the last settle — the signal that the run is thrashing its budget.
+fn note_budget_pressure(obs: &Registry, budget: &MemoryBudget, last_evictions: &mut u64) {
+    budget.publish(obs);
+    let evictions = budget.evictions();
+    if evictions > *last_evictions {
+        obs.event(
+            "budget_pressure",
+            &[
+                ("new_evictions", (evictions - *last_evictions) as f64),
+                ("evictions", evictions as f64),
+                ("resident_bytes", budget.resident_bytes() as f64),
+                ("fault_bytes", budget.fault_bytes() as f64),
+            ],
+        );
+        *last_evictions = evictions;
+    }
 }
 
 /// Store supports in the graph wire format (ids only, dist = position).

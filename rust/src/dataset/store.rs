@@ -194,6 +194,26 @@ impl MemoryBudget {
         self.fault_io_bytes.load(Ordering::Relaxed)
     }
 
+    /// Publish the budget's pressure counters as `budget.*` gauges on a
+    /// metrics registry (−1 limit = unbounded). Call before a snapshot;
+    /// gauges are point-in-time, not deltas.
+    pub fn publish(&self, obs: &crate::metrics::Registry) {
+        let limit = match self.limit() {
+            Some(v) => v as i64,
+            None => -1,
+        };
+        obs.gauge("budget.limit_bytes").set(limit);
+        obs.gauge("budget.resident_bytes")
+            .set(self.resident_bytes() as i64);
+        obs.gauge("budget.peak_resident_bytes")
+            .set(self.peak_resident_bytes() as i64);
+        obs.gauge("budget.faults").set(self.faults() as i64);
+        obs.gauge("budget.evictions").set(self.evictions() as i64);
+        obs.gauge("budget.fault_bytes").set(self.fault_bytes() as i64);
+        obs.gauge("budget.fault_io_bytes")
+            .set(self.fault_io_bytes() as i64);
+    }
+
     /// Drain the not-yet-billed fault/eviction counters (the cost-model
     /// bridge: callers convert `io_bytes` to modelled storage seconds).
     pub fn take_unbilled(&self) -> FaultDelta {

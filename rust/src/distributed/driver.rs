@@ -7,7 +7,7 @@ use super::node::{run_node, NodeTask, NodeWorker};
 use crate::config::RunConfig;
 use crate::dataset::Dataset;
 use crate::graph::KnnGraph;
-use crate::metrics::CostLedger;
+use crate::metrics::{CostLedger, Phase, Registry, Span};
 use crate::util::parallel::split_ranges;
 use std::sync::Arc;
 
@@ -106,20 +106,43 @@ pub fn run_cluster(ds: &Dataset, cfg: &RunConfig) -> ClusterResult {
     // Lockstep schedule: every phase of round r completes on all nodes
     // before the next phase starts. The channels are buffered, so the
     // send-all / merge-all / reclaim-all ordering never blocks.
-    for w in workers.iter_mut() {
-        w.phase_build();
+    let obs = Registry::global();
+    {
+        let _span = Span::enter(&obs, "cluster_build", Phase::Build);
+        for w in workers.iter_mut() {
+            w.phase_build();
+        }
     }
     let rounds = workers.first().map(|w| w.rounds()).unwrap_or(0);
     for iter in 1..=rounds {
-        for w in workers.iter_mut() {
-            w.phase_send_support(iter);
+        let sent_before: u64 = ledgers.iter().map(|l| l.bytes_sent()).sum();
+        {
+            let _span = Span::enter(&obs, "cluster_exchange", Phase::Exchange);
+            for w in workers.iter_mut() {
+                w.phase_send_support(iter);
+            }
         }
-        for w in workers.iter_mut() {
-            w.phase_merge(iter);
+        {
+            let _span = Span::enter(&obs, "cluster_merge", Phase::Merge);
+            for w in workers.iter_mut() {
+                w.phase_merge(iter);
+            }
         }
-        for w in workers.iter_mut() {
-            w.phase_reclaim(iter);
+        {
+            let _span = Span::enter(&obs, "cluster_reclaim", Phase::Merge);
+            for w in workers.iter_mut() {
+                w.phase_reclaim(iter);
+            }
         }
+        let sent_after: u64 = ledgers.iter().map(|l| l.bytes_sent()).sum();
+        obs.event(
+            "cluster_round",
+            &[
+                ("round", iter as f64),
+                ("nodes", m as f64),
+                ("bytes_sent", sent_after.saturating_sub(sent_before) as f64),
+            ],
+        );
     }
     let parts: Vec<KnnGraph> = workers.into_iter().map(|w| w.into_graph()).collect();
     ClusterResult {
@@ -141,6 +164,8 @@ pub fn run_cluster_threaded(ds: &Dataset, cfg: &RunConfig) -> ClusterResult {
     let start = std::time::Instant::now();
     let nets = Cluster::connect(m, link);
     let ledgers: Vec<Arc<CostLedger>> = nets.iter().map(|n| n.ledger.clone()).collect();
+    let obs = Registry::global();
+    let _span = Span::enter(&obs, "cluster_threaded", Phase::Other);
     let handles: Vec<std::thread::JoinHandle<KnnGraph>> = make_tasks(ds, cfg, m)
         .into_iter()
         .zip(nets)

@@ -68,6 +68,12 @@ STREAM OPTIONS:
                                      ingesting (recall reporting skipped)
   --report-every <n> --queries <q> --topk <k> --ef <ef>
   --background                       compact from a background thread
+  --metrics-out <path>               write the metrics registry snapshot
+                                     (latency histograms, span totals,
+                                     budget gauges, event journal) as
+                                     versioned JSON at the end of the run
+  --metrics-interval <secs>          also rewrite --metrics-out every
+                                     <secs> seconds while ingesting
 ";
 
 fn main() {

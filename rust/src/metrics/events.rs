@@ -1,0 +1,128 @@
+//! Bounded ring-buffer event journal for postmortems.
+//!
+//! Counters tell you *how much*; the journal tells you *what happened
+//! last*: seal publications, compaction in→out sizes, checkpoint
+//! generations, budget eviction pressure. Pushing is a short mutex
+//! section on a fixed-capacity `VecDeque` — events fire at background
+//! cadence (seals, compactions), never per-operation, so this is off
+//! the hot path by construction. When full, the oldest event is
+//! dropped: a snapshot always holds the *last* `cap` events.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default journal capacity (events retained).
+pub const DEFAULT_JOURNAL_CAP: usize = 256;
+
+/// One journal entry: seconds since the journal was created, an event
+/// kind, and a small set of numeric fields.
+#[derive(Clone, Debug)]
+pub struct EventRecord {
+    pub t_s: f64,
+    pub kind: String,
+    pub fields: Vec<(String, f64)>,
+}
+
+impl EventRecord {
+    /// `{t_s, kind, fields: {name: value, ...}}`.
+    pub fn to_json(&self) -> Json {
+        let mut fields = Json::obj();
+        for (k, v) in &self.fields {
+            fields.set(k, *v);
+        }
+        let mut o = Json::obj();
+        o.set("t_s", self.t_s);
+        o.set("kind", self.kind.as_str());
+        o.set("fields", fields);
+        o
+    }
+}
+
+/// Fixed-capacity, oldest-out event ring.
+#[derive(Debug)]
+pub struct EventJournal {
+    start: Instant,
+    cap: usize,
+    ring: Mutex<VecDeque<EventRecord>>,
+}
+
+impl Default for EventJournal {
+    fn default() -> EventJournal {
+        EventJournal::new(DEFAULT_JOURNAL_CAP)
+    }
+}
+
+impl EventJournal {
+    pub fn new(cap: usize) -> EventJournal {
+        EventJournal {
+            start: Instant::now(),
+            cap: cap.max(1),
+            ring: Mutex::new(VecDeque::with_capacity(cap.max(1))),
+        }
+    }
+
+    /// Append an event, evicting the oldest when at capacity.
+    pub fn push(&self, kind: &str, fields: &[(&str, f64)]) {
+        let rec = EventRecord {
+            t_s: self.start.elapsed().as_secs_f64(),
+            kind: kind.to_string(),
+            fields: fields.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        };
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(rec);
+    }
+
+    /// The retained events, oldest first.
+    pub fn snapshot(&self) -> Vec<EventRecord> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_only_the_last_cap_events() {
+        let j = EventJournal::new(3);
+        for i in 0..5u64 {
+            j.push("tick", &[("i", i as f64)]);
+        }
+        let evs = j.snapshot();
+        assert_eq!(evs.len(), 3);
+        let seen: Vec<f64> = evs.iter().map(|e| e.fields[0].1).collect();
+        assert_eq!(seen, vec![2.0, 3.0, 4.0], "oldest dropped first");
+        // Timestamps are monotone non-decreasing.
+        assert!(evs.windows(2).all(|w| w[0].t_s <= w[1].t_s));
+    }
+
+    #[test]
+    fn event_json_shape() {
+        let j = EventJournal::new(8);
+        j.push("seal_published", &[("segment", 3.0), ("rows", 100.0)]);
+        let ev = &j.snapshot()[0];
+        let json = ev.to_json();
+        assert_eq!(json.get("kind").unwrap().as_str(), Some("seal_published"));
+        let fields = json.get("fields").unwrap();
+        assert_eq!(fields.get("rows").unwrap().as_f64(), Some(100.0));
+        assert!(json.get("t_s").unwrap().as_f64().unwrap() >= 0.0);
+    }
+}

@@ -1,0 +1,335 @@
+//! Log-bucketed latency histogram (HDR-lite).
+//!
+//! Values are `u64` nanoseconds bucketed into 16 linear sub-buckets per
+//! power-of-two octave, which bounds the relative quantile error at one
+//! sub-bucket width (≤ 1/16 ≈ 6.25%) while covering the full `u64`
+//! range in a fixed 976-slot table (~8 KB of atomics). Recording is one
+//! relaxed `fetch_add` on the bucket plus a relaxed `fetch_max` for the
+//! exact maximum — no locks, no allocation — so the stream engine can
+//! afford to time *every* `insert`/`search_ef`/`delete`/`upsert` call.
+//!
+//! Quantiles are answered from a [`HistogramSnapshot`]: one pass copies
+//! the bucket counts, and every quantile is then derived from that one
+//! frozen copy, so p50/p95/p99 reported together always describe the
+//! same set of samples (snapshot-consistent) even while recorders keep
+//! running. Snapshots (and live histograms) merge by bucket-wise
+//! addition, which is exactly equivalent to having recorded both sample
+//! streams into one histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Linear sub-bucket resolution: 2^4 = 16 sub-buckets per octave.
+pub const SUB_BITS: u32 = 4;
+const SUB: usize = 1 << SUB_BITS;
+/// Octaves above the linear range: exponents `SUB_BITS..=63`.
+const OCTAVES: usize = 64 - SUB_BITS as usize;
+/// Total buckets: the linear `[0, 16)` range plus 16 per octave.
+const BUCKETS: usize = OCTAVES * SUB + SUB;
+
+/// Bucket index for a value. Values below `SUB` map to themselves
+/// (exact); above, the top `SUB_BITS` bits after the leading one select
+/// the sub-bucket within the value's octave. The mapping is monotone
+/// and contiguous across the linear/log boundary (15 → 15, 16 → 16).
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        v as usize
+    } else {
+        let e = 63 - v.leading_zeros() as usize;
+        let sub = ((v >> (e - SUB_BITS as usize)) & (SUB as u64 - 1)) as usize;
+        (e - SUB_BITS as usize) * SUB + SUB + sub
+    }
+}
+
+/// Lowest value mapping to `idx` (inverse of [`bucket_index`]).
+#[inline]
+fn bucket_low(idx: usize) -> u64 {
+    if idx < SUB {
+        idx as u64
+    } else {
+        let t = idx - SUB;
+        let e = t / SUB + SUB_BITS as usize;
+        let sub = (t % SUB) as u64;
+        (SUB as u64 + sub) << (e - SUB_BITS as usize)
+    }
+}
+
+/// Width of bucket `idx` (1 in the linear range, 2^(e-SUB_BITS) above).
+#[inline]
+fn bucket_width(idx: usize) -> u64 {
+    if idx < SUB {
+        1
+    } else {
+        1u64 << ((idx - SUB) / SUB)
+    }
+}
+
+/// Lock-free log-bucketed histogram of `u64` values (nanoseconds by
+/// convention; [`Histogram::record_secs`] converts).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        let buckets: Vec<AtomicU64> = (0..BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            buckets: buckets.into_boxed_slice(),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value. Hot path: one relaxed add + one relaxed max.
+    #[inline]
+    pub fn record_ns(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds.
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    /// Record seconds (converted to nanoseconds; negatives clamp to 0).
+    #[inline]
+    pub fn record_secs(&self, secs: f64) {
+        self.record_ns((secs * 1e9) as u64);
+    }
+
+    /// Total samples recorded so far (one pass over the buckets).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Add every sample of `other` into `self` (bucket-wise; identical
+    /// to having recorded `other`'s stream here).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Freeze the current contents. All quantiles derived from the
+    /// returned snapshot describe the same frozen sample set.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count = counts.iter().sum();
+        HistogramSnapshot {
+            counts,
+            count,
+            max_ns: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Frozen histogram contents; quantiles, mean, merge, and JSON export.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    counts: Vec<u64>,
+    /// Total samples in this snapshot.
+    pub count: u64,
+    /// Exact maximum recorded value.
+    pub max_ns: u64,
+}
+
+impl HistogramSnapshot {
+    /// An empty snapshot (zero samples).
+    pub fn empty() -> HistogramSnapshot {
+        HistogramSnapshot {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            max_ns: 0,
+        }
+    }
+
+    /// The q-quantile (q in [0, 1]) as nanoseconds: the upper edge of
+    /// the bucket holding the sample of rank `ceil(q · count)`, clamped
+    /// to the exact max. Guaranteed `exact ≤ result ≤ exact · 17/16`.
+    /// Returns 0 when empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                let upper = bucket_low(idx) + (bucket_width(idx) - 1);
+                return upper.min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    /// The q-quantile in seconds.
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        self.quantile_ns(q) as f64 / 1e9
+    }
+
+    /// Approximate mean (bucket midpoints), in nanoseconds.
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(idx, &c)| {
+                let mid = bucket_low(idx) as f64 + (bucket_width(idx) - 1) as f64 / 2.0;
+                mid * c as f64
+            })
+            .sum();
+        sum / self.count as f64
+    }
+
+    /// Combine two snapshots (bucket-wise sum; max of maxes).
+    pub fn merge(&self, other: &HistogramSnapshot) -> HistogramSnapshot {
+        let counts: Vec<u64> = self
+            .counts
+            .iter()
+            .zip(other.counts.iter())
+            .map(|(a, b)| a + b)
+            .collect();
+        let count = self.count + other.count;
+        HistogramSnapshot {
+            counts,
+            count,
+            max_ns: self.max_ns.max(other.max_ns),
+        }
+    }
+
+    /// JSON form used inside [`crate::metrics::MetricsSnapshot`]:
+    /// `{count, max_ns, mean_ns, p50_ns, p95_ns, p99_ns, p999_ns}`.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("count", self.count);
+        o.set("max_ns", self.max_ns);
+        o.set("mean_ns", self.mean_ns());
+        o.set("p50_ns", self.quantile_ns(0.50));
+        o.set("p95_ns", self.quantile_ns(0.95));
+        o.set("p99_ns", self.quantile_ns(0.99));
+        o.set("p999_ns", self.quantile_ns(0.999));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_contiguous() {
+        // Exact in the linear range, continuous across the boundary.
+        for v in 0..16u64 {
+            assert_eq!(bucket_index(v), v as usize);
+        }
+        assert_eq!(bucket_index(16), 16);
+        let mut probes: Vec<u64> = Vec::new();
+        for shift in 0..60 {
+            probes.extend([1u64 << shift, (1u64 << shift) + 1, (2u64 << shift) - 1]);
+        }
+        probes.sort_unstable();
+        let mut prev = 0;
+        for v in probes {
+            let idx = bucket_index(v);
+            assert!(idx >= prev, "monotone broke at v={v}");
+            assert!(idx < BUCKETS);
+            // The inverse brackets the value.
+            let low = bucket_low(idx);
+            let width = bucket_width(idx);
+            assert!(low <= v && v - low < width, "v={v} idx={idx} low={low} w={width}");
+            prev = idx;
+        }
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = Histogram::new();
+        for v in 1..=10u64 {
+            h.record_ns(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 10);
+        assert_eq!(s.max_ns, 10);
+        assert_eq!(s.quantile_ns(0.5), 5);
+        assert_eq!(s.quantile_ns(1.0), 10);
+        assert_eq!(s.quantile_ns(0.0), 1); // rank clamps to 1
+    }
+
+    #[test]
+    fn quantile_error_is_bounded_by_sub_bucket_width() {
+        let h = Histogram::new();
+        let vals: Vec<u64> = (0..1000u64).map(|i| i * i * 37 + 5).collect();
+        for &v in &vals {
+            h.record_ns(v);
+        }
+        let mut sorted = vals.clone();
+        sorted.sort_unstable();
+        let s = h.snapshot();
+        for q in [0.5, 0.9, 0.95, 0.99, 0.999] {
+            let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+            let exact = sorted[rank - 1];
+            let est = s.quantile_ns(q);
+            assert!(est >= exact, "q={q}: est {est} < exact {exact}");
+            assert!(est - exact <= exact / 16 + 1, "q={q}: est {est} exact {exact}");
+        }
+    }
+
+    #[test]
+    fn merge_equals_recording_into_one() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let all = Histogram::new();
+        for i in 0..500u64 {
+            let v = i * 977 + 3;
+            if i % 2 == 0 { a.record_ns(v) } else { b.record_ns(v) }
+            all.record_ns(v);
+        }
+        a.merge_from(&b);
+        let (sa, sall) = (a.snapshot(), all.snapshot());
+        assert_eq!(sa.count, sall.count);
+        assert_eq!(sa.max_ns, sall.max_ns);
+        for q in [0.1, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(sa.quantile_ns(q), sall.quantile_ns(q), "q={q}");
+        }
+        // Snapshot-level merge agrees too.
+        let (s1, s2) = (Histogram::new(), Histogram::new());
+        s1.record_ns(10);
+        s2.record_ns(1_000_000);
+        let merged = s1.snapshot().merge(&s2.snapshot());
+        assert_eq!(merged.count, 2);
+        assert_eq!(merged.max_ns, 1_000_000);
+    }
+
+    #[test]
+    fn json_has_all_quantile_fields() {
+        let h = Histogram::new();
+        h.record_secs(0.001);
+        let j = h.snapshot().to_json();
+        for key in ["count", "max_ns", "mean_ns", "p50_ns", "p95_ns", "p99_ns", "p999_ns"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.get("count").unwrap().as_f64(), Some(1.0));
+    }
+}

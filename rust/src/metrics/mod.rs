@@ -1,13 +1,35 @@
-//! Phase-labelled cost accounting.
+//! Observability: phase-labelled cost accounting plus the always-on
+//! metrics substrate (registry, histograms, spans, event journal).
 //!
 //! The distributed procedure reports *where* time goes (paper Fig. 14:
 //! subgraph construction vs merge compute vs data exchange vs storage
 //! access). [`CostLedger`] accumulates seconds per [`Phase`], mixing
 //! measured wall-clock (compute) and modelled time (network/storage,
-//! derived from byte counts and the configured bandwidths).
+//! derived from byte counts and the configured bandwidths). It is
+//! backed by the same relaxed atomics as [`registry::Counter`] — per
+//! phase nanosecond counters, no lock on the accumulation path — while
+//! keeping the original API so callers compile unchanged.
+//!
+//! The submodules form the `obs` subsystem:
+//! - [`registry`]: named counters/gauges/histograms behind one
+//!   [`Registry`] with a versioned [`MetricsSnapshot::to_json`] export;
+//! - [`histogram`]: lock-free log-bucketed latency histograms
+//!   (p50/p95/p99/p999 + exact max, mergeable, snapshot-consistent);
+//! - [`span`]: RAII guards timing background work, with nested child
+//!   time attributed to the child phase only;
+//! - [`events`]: a bounded ring-buffer journal of noteworthy moments
+//!   (seals, compactions, checkpoints, budget pressure).
 
-use std::collections::BTreeMap;
-use std::sync::Mutex;
+pub mod events;
+pub mod histogram;
+pub mod registry;
+pub mod span;
+
+pub use events::{EventJournal, EventRecord, DEFAULT_JOURNAL_CAP};
+pub use histogram::{Histogram, HistogramSnapshot};
+pub use registry::{Counter, Gauge, MetricsSnapshot, Registry, SpanSnapshot, SNAPSHOT_VERSION};
+pub use span::{Span, SpanGuard, SpanStats};
+
 use std::time::Instant;
 
 /// Cost categories (Fig. 14's breakdown).
@@ -45,27 +67,49 @@ impl Phase {
             Phase::Other,
         ]
     }
+
+    /// Dense index for fixed-size per-phase arrays.
+    #[inline]
+    pub fn idx(self) -> usize {
+        match self {
+            Phase::Build => 0,
+            Phase::Merge => 1,
+            Phase::Exchange => 2,
+            Phase::Storage => 3,
+            Phase::Other => 4,
+        }
+    }
+}
+
+/// Seconds → nanoseconds for the per-phase counters. `round()` keeps
+/// short decimal inputs (0.5s → exactly 5e8 ns) exact through the
+/// round-trip back to seconds; negatives clamp to 0 via the saturating
+/// float→int cast.
+#[inline]
+fn secs_to_ns(secs: f64) -> u64 {
+    (secs * 1e9).round() as u64
 }
 
 /// Thread-safe accumulator of per-phase seconds and byte counters.
+///
+/// Every field is a relaxed atomic: `add`/`add_bytes_*` on the hot
+/// path are single `fetch_add`s (the former `Mutex<BTreeMap>` is
+/// gone). Seconds are stored as nanosecond counters; at the magnitudes
+/// a build ledger sees (minutes to hours), the f64 round-trip is exact
+/// to well below a microsecond.
 #[derive(Debug, Default)]
 pub struct CostLedger {
-    inner: Mutex<Inner>,
-}
-
-#[derive(Debug, Default)]
-struct Inner {
-    secs: BTreeMap<Phase, f64>,
-    bytes_sent: u64,
-    bytes_stored: u64,
+    phase_ns: [Counter; 5],
+    bytes_sent: Counter,
+    bytes_stored: Counter,
     /// Paged-storage chunk faults (loads + re-faults after eviction).
-    chunk_faults: u64,
+    chunk_faults: Counter,
     /// Chunks evicted by the residency budget's clock sweep.
-    chunk_evictions: u64,
+    chunk_evictions: Counter,
     /// On-disk bytes read by chunk faults (what Phase::Storage bills).
-    fault_bytes: u64,
+    fault_bytes: Counter,
     /// High-water mark of budget-tracked residency (bytes).
-    peak_resident: u64,
+    peak_resident: Counter,
 }
 
 impl CostLedger {
@@ -75,8 +119,7 @@ impl CostLedger {
 
     /// Add `secs` to a phase.
     pub fn add(&self, phase: Phase, secs: f64) {
-        let mut inner = self.inner.lock().unwrap();
-        *inner.secs.entry(phase).or_insert(0.0) += secs;
+        self.phase_ns[phase.idx()].add(secs_to_ns(secs));
     }
 
     /// Time a closure into a phase.
@@ -90,62 +133,60 @@ impl CostLedger {
     /// Record network payload bytes (the modelled exchange time is added
     /// separately by the link model).
     pub fn add_bytes_sent(&self, bytes: u64) {
-        self.inner.lock().unwrap().bytes_sent += bytes;
+        self.bytes_sent.add(bytes);
     }
 
     /// Record storage payload bytes.
     pub fn add_bytes_stored(&self, bytes: u64) {
-        self.inner.lock().unwrap().bytes_stored += bytes;
+        self.bytes_stored.add(bytes);
     }
 
     /// Record paged-storage activity: chunk faults, evictions, and the
     /// on-disk bytes those faults read (the modelled read time for them
     /// is added separately via [`CostLedger::add`]).
     pub fn add_chunk_faults(&self, faults: u64, evictions: u64, fault_bytes: u64) {
-        let mut inner = self.inner.lock().unwrap();
-        inner.chunk_faults += faults;
-        inner.chunk_evictions += evictions;
-        inner.fault_bytes += fault_bytes;
+        self.chunk_faults.add(faults);
+        self.chunk_evictions.add(evictions);
+        self.fault_bytes.add(fault_bytes);
     }
 
     /// Record a residency high-water mark (keeps the maximum seen).
     pub fn note_peak_resident(&self, bytes: u64) {
-        let mut inner = self.inner.lock().unwrap();
-        inner.peak_resident = inner.peak_resident.max(bytes);
+        self.peak_resident.fetch_max(bytes);
     }
 
     pub fn chunk_faults(&self) -> u64 {
-        self.inner.lock().unwrap().chunk_faults
+        self.chunk_faults.get()
     }
 
     pub fn chunk_evictions(&self) -> u64 {
-        self.inner.lock().unwrap().chunk_evictions
+        self.chunk_evictions.get()
     }
 
     /// On-disk bytes read by chunk faults.
     pub fn fault_bytes(&self) -> u64 {
-        self.inner.lock().unwrap().fault_bytes
+        self.fault_bytes.get()
     }
 
     /// High-water mark of budget-tracked residency.
     pub fn peak_resident_bytes(&self) -> u64 {
-        self.inner.lock().unwrap().peak_resident
+        self.peak_resident.get()
     }
 
     pub fn secs(&self, phase: Phase) -> f64 {
-        *self.inner.lock().unwrap().secs.get(&phase).unwrap_or(&0.0)
+        self.phase_ns[phase.idx()].get() as f64 / 1e9
     }
 
     pub fn total_secs(&self) -> f64 {
-        self.inner.lock().unwrap().secs.values().sum()
+        Phase::all().into_iter().map(|p| self.secs(p)).sum()
     }
 
     pub fn bytes_sent(&self) -> u64 {
-        self.inner.lock().unwrap().bytes_sent
+        self.bytes_sent.get()
     }
 
     pub fn bytes_stored(&self) -> u64 {
-        self.inner.lock().unwrap().bytes_stored
+        self.bytes_stored.get()
     }
 
     /// Percentage breakdown (phase -> share of total), Fig. 14's series.
@@ -159,17 +200,15 @@ impl CostLedger {
 
     /// Merge another ledger into this one (per-node -> cluster totals).
     pub fn absorb(&self, other: &CostLedger) {
-        let o = other.inner.lock().unwrap();
-        let mut s = self.inner.lock().unwrap();
-        for (p, v) in &o.secs {
-            *s.secs.entry(*p).or_insert(0.0) += v;
+        for p in Phase::all() {
+            self.phase_ns[p.idx()].add(other.phase_ns[p.idx()].get());
         }
-        s.bytes_sent += o.bytes_sent;
-        s.bytes_stored += o.bytes_stored;
-        s.chunk_faults += o.chunk_faults;
-        s.chunk_evictions += o.chunk_evictions;
-        s.fault_bytes += o.fault_bytes;
-        s.peak_resident = s.peak_resident.max(o.peak_resident);
+        self.bytes_sent.add(other.bytes_sent.get());
+        self.bytes_stored.add(other.bytes_stored.get());
+        self.chunk_faults.add(other.chunk_faults.get());
+        self.chunk_evictions.add(other.chunk_evictions.get());
+        self.fault_bytes.add(other.fault_bytes.get());
+        self.peak_resident.fetch_max(other.peak_resident.get());
     }
 }
 
@@ -237,5 +276,12 @@ mod tests {
         assert_eq!(a.chunk_evictions(), 3);
         assert_eq!(a.fault_bytes(), 5220);
         assert_eq!(a.peak_resident_bytes(), 900);
+    }
+
+    #[test]
+    fn negative_seconds_clamp_to_zero() {
+        let l = CostLedger::new();
+        l.add(Phase::Other, -1.0);
+        assert_eq!(l.secs(Phase::Other), 0.0);
     }
 }

@@ -1,0 +1,343 @@
+//! Named metrics registry: counters, gauges, histograms, span stats,
+//! and the event journal behind one `snapshot()` with a versioned JSON
+//! form.
+//!
+//! Registration (`counter("stream.inserted")`) is a mutex + BTreeMap
+//! lookup returning a shared [`Counter`] handle; callers register once
+//! and cache the `Arc`, so the hot path is a single relaxed atomic op
+//! with no lock and no allocation. A [`Registry`] is cheap enough to
+//! make per-component (each `StreamingIndex` owns one, keeping
+//! concurrent tests independent); [`Registry::global`] serves code
+//! without a natural owner (out-of-core builds, the cluster driver).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::events::{EventJournal, EventRecord, DEFAULT_JOURNAL_CAP};
+use super::histogram::{Histogram, HistogramSnapshot};
+use super::span::SpanStats;
+use super::Phase;
+use crate::util::json::Json;
+
+/// Monotone event counter (relaxed atomics).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Overwrite the value. Restore paths only (resuming counts from a
+    /// checkpoint manifest); live accounting must use `inc`/`add`.
+    pub fn set(&self, n: u64) {
+        self.0.store(n, Ordering::Relaxed);
+    }
+
+    /// Raise to at least `n` (high-water marks).
+    #[inline]
+    pub fn fetch_max(&self, n: u64) {
+        self.0.fetch_max(n, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time signed value (resident bytes, queue depths, ...).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicI64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// The named-instrument registry. See the module docs for the
+/// register-once / record-lock-free contract.
+#[derive(Debug)]
+pub struct Registry {
+    start: Instant,
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    spans: Mutex<BTreeMap<String, Arc<SpanStats>>>,
+    journal: EventJournal,
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            start: Instant::now(),
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            histograms: Mutex::new(BTreeMap::new()),
+            spans: Mutex::new(BTreeMap::new()),
+            journal: EventJournal::new(DEFAULT_JOURNAL_CAP),
+        }
+    }
+
+    /// The process-global registry, for call sites without a natural
+    /// owning component (out-of-core coordinator, cluster driver).
+    pub fn global() -> Arc<Registry> {
+        static GLOBAL: Mutex<Option<Arc<Registry>>> = Mutex::new(None);
+        GLOBAL
+            .lock()
+            .unwrap()
+            .get_or_insert_with(|| Arc::new(Registry::new()))
+            .clone()
+    }
+
+    /// Register-or-get a counter by name.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.counters.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// Register-or-get a gauge by name.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// Register-or-get a histogram by name.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// Register-or-get span stats by name. The phase label of the first
+    /// registration wins; spans of one name must share a phase.
+    pub fn span_stats(&self, name: &str, phase: Phase) -> Arc<SpanStats> {
+        let mut map = self.spans.lock().unwrap();
+        Arc::clone(
+            map.entry(name.to_string())
+                .or_insert_with(|| Arc::new(SpanStats::new(phase))),
+        )
+    }
+
+    /// Append an event to the journal.
+    pub fn event(&self, kind: &str, fields: &[(&str, f64)]) {
+        self.journal.push(kind, fields);
+    }
+
+    pub fn journal(&self) -> &EventJournal {
+        &self.journal
+    }
+
+    /// Freeze everything into one coherent report.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, c)| (k.clone(), c.get()))
+            .collect();
+        let gauges = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, g)| (k.clone(), g.get()))
+            .collect();
+        let histograms = self
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| (k.clone(), h.snapshot()))
+            .collect();
+        let spans = self
+            .spans
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| {
+                (
+                    k.clone(),
+                    SpanSnapshot {
+                        phase: s.phase.name(),
+                        count: s.count.get(),
+                        self_ns: s.self_ns.get(),
+                    },
+                )
+            })
+            .collect();
+        MetricsSnapshot {
+            version: SNAPSHOT_VERSION,
+            uptime_s: self.start.elapsed().as_secs_f64(),
+            counters,
+            gauges,
+            histograms,
+            spans,
+            events: self.journal.snapshot(),
+        }
+    }
+}
+
+/// Schema version of [`MetricsSnapshot::to_json`]. Bump on any
+/// breaking change to key names or nesting.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// Frozen totals of one registry's span stats.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanSnapshot {
+    pub phase: &'static str,
+    pub count: u64,
+    /// Nanoseconds billed to this span itself (child spans excluded).
+    pub self_ns: u64,
+}
+
+/// One coherent metrics report: every instrument of a registry, frozen
+/// together, with a versioned JSON form for `--metrics-out` dumps.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub version: u32,
+    pub uptime_s: f64,
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+    pub spans: BTreeMap<String, SpanSnapshot>,
+    pub events: Vec<EventRecord>,
+}
+
+impl MetricsSnapshot {
+    /// Versioned JSON export (validated by
+    /// `scripts/check_metrics_snapshot.py` in the verify.sh smoke):
+    ///
+    /// ```json
+    /// {
+    ///   "version": 1,
+    ///   "uptime_s": 12.3,
+    ///   "counters": {"stream.inserted": 10000},
+    ///   "gauges": {"budget.resident_bytes": 0},
+    ///   "histograms": {"stream.insert_ns": {"count": 10000, "p50_ns": 900, ...}},
+    ///   "spans": {"seal_build": {"phase": "build", "count": 4, "self_ns": 1}},
+    ///   "events": [{"t_s": 0.5, "kind": "seal_published", "fields": {...}}]
+    /// }
+    /// ```
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters.set(k, *v);
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &self.gauges {
+            gauges.set(k, *v);
+        }
+        let mut histograms = Json::obj();
+        for (k, h) in &self.histograms {
+            histograms.set(k, h.to_json());
+        }
+        let mut spans = Json::obj();
+        for (k, s) in &self.spans {
+            let mut span = Json::obj();
+            span.set("phase", s.phase);
+            span.set("count", s.count);
+            span.set("self_ns", s.self_ns);
+            spans.set(k, span);
+        }
+        let events: Vec<Json> = self.events.iter().map(|e| e.to_json()).collect();
+        let mut o = Json::obj();
+        o.set("version", self.version as u64);
+        o.set("uptime_s", self.uptime_s);
+        o.set("counters", counters);
+        o.set("gauges", gauges);
+        o.set("histograms", histograms);
+        o.set("spans", spans);
+        o.set("events", Json::Arr(events));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_shared_by_name() {
+        let reg = Registry::new();
+        let a = reg.counter("x");
+        let b = reg.counter("x");
+        a.inc();
+        b.add(2);
+        assert_eq!(reg.counter("x").get(), 3);
+        let g = reg.gauge("depth");
+        g.set(5);
+        g.add(-2);
+        assert_eq!(reg.gauge("depth").get(), 3);
+        let h = reg.histogram("lat");
+        h.record_ns(100);
+        assert_eq!(reg.histogram("lat").count(), 1);
+    }
+
+    #[test]
+    fn snapshot_to_json_roundtrips_through_parser() {
+        let reg = Registry::new();
+        reg.counter("c.one").add(7);
+        reg.gauge("g.depth").set(-3);
+        reg.histogram("h.lat").record_ns(1500);
+        reg.event("tick", &[("n", 1.0)]);
+        let json = reg.snapshot().to_json();
+        let back = Json::parse(&json.to_pretty()).unwrap();
+        assert_eq!(back.get("version").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            back.get("counters").unwrap().get("c.one").unwrap().as_f64(),
+            Some(7.0)
+        );
+        assert_eq!(
+            back.get("gauges").unwrap().get("g.depth").unwrap().as_f64(),
+            Some(-3.0)
+        );
+        let hist = back.get("histograms").unwrap().get("h.lat").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_f64(), Some(1.0));
+        assert!(hist.get("p99_ns").unwrap().as_f64().unwrap() >= 1000.0);
+        let events = back.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("kind").unwrap().as_str(), Some("tick"));
+    }
+
+    #[test]
+    fn global_registry_is_one_instance() {
+        let a = Registry::global();
+        let b = Registry::global();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

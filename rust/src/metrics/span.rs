@@ -1,0 +1,174 @@
+//! RAII span guards: time a scope, label it with a [`Phase`], and
+//! attribute nested time correctly.
+//!
+//! `let _span = Span::enter(&reg, "seal_build", Phase::Build);` times
+//! the enclosing scope; the guard's `Drop` records the elapsed time
+//! into the registry's per-name [`SpanStats`]. Nesting is handled with
+//! a thread-local stack of child-time accumulators: a child span's
+//! full elapsed time is subtracted from its parent, so each phase is
+//! billed *self time only* and per-phase totals add up instead of
+//! double-counting. [`Span::enter_billed`] additionally feeds the self
+//! time into a [`CostLedger`] phase, bridging span timing into the
+//! paper's Fig. 14 cost breakdown.
+//!
+//! Guards are `!Send`: the child-time stack is thread-local, so a guard
+//! must drop on the thread that created it (ordinary scoped RAII usage
+//! guarantees this; `scripts/static_check.py` rejects call sites that
+//! discard the guard).
+
+use std::cell::RefCell;
+use std::marker::PhantomData;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::registry::{Counter, Registry};
+use super::{CostLedger, Phase};
+
+/// Accumulated totals for one span name: how many times it ran and the
+/// self-time (nanoseconds, child spans excluded) it consumed.
+#[derive(Debug)]
+pub struct SpanStats {
+    pub phase: Phase,
+    pub count: Counter,
+    pub self_ns: Counter,
+}
+
+impl SpanStats {
+    pub fn new(phase: Phase) -> SpanStats {
+        SpanStats {
+            phase,
+            count: Counter::new(),
+            self_ns: Counter::new(),
+        }
+    }
+}
+
+thread_local! {
+    /// One child-nanoseconds accumulator per live span on this thread.
+    static CHILD_NS: RefCell<Vec<u64>> = RefCell::new(Vec::new());
+}
+
+/// Entry points for span timing; see the module docs.
+pub struct Span;
+
+impl Span {
+    /// Start a span. Bind the guard (`let _span = ...`); its `Drop`
+    /// records the scope's time.
+    pub fn enter(registry: &Registry, name: &str, phase: Phase) -> SpanGuard<'static> {
+        Span::enter_impl(registry, name, phase, None)
+    }
+
+    /// Start a span that also bills its *self* time (children excluded)
+    /// to `ledger`'s matching phase on drop.
+    pub fn enter_billed<'l>(
+        registry: &Registry,
+        name: &str,
+        phase: Phase,
+        ledger: &'l CostLedger,
+    ) -> SpanGuard<'l> {
+        Span::enter_impl(registry, name, phase, Some(ledger))
+    }
+
+    fn enter_impl<'l>(
+        registry: &Registry,
+        name: &str,
+        phase: Phase,
+        ledger: Option<&'l CostLedger>,
+    ) -> SpanGuard<'l> {
+        let stats = registry.span_stats(name, phase);
+        CHILD_NS.with(|stack| stack.borrow_mut().push(0));
+        SpanGuard {
+            stats,
+            ledger,
+            start: Instant::now(),
+            _not_send: PhantomData,
+        }
+    }
+}
+
+/// Live span; records on drop. Must drop on its creating thread.
+pub struct SpanGuard<'l> {
+    stats: Arc<SpanStats>,
+    ledger: Option<&'l CostLedger>,
+    start: Instant,
+    /// `*const ()` makes the guard `!Send`: the child-time stack is
+    /// thread-local.
+    _not_send: PhantomData<*const ()>,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let total_ns = self.start.elapsed().as_nanos() as u64;
+        let child_ns = CHILD_NS.with(|stack| {
+            let mut stack = stack.borrow_mut();
+            let child = stack.pop().unwrap_or(0);
+            // Our full elapsed time is the parent's child time.
+            if let Some(parent) = stack.last_mut() {
+                *parent += total_ns;
+            }
+            child
+        });
+        let self_ns = total_ns.saturating_sub(child_ns);
+        self.stats.count.inc();
+        self.stats.self_ns.add(self_ns);
+        if let Some(ledger) = self.ledger {
+            ledger.add(self.stats.phase, self_ns as f64 / 1e9);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn span_records_count_and_time() {
+        let reg = Registry::new();
+        {
+            let _span = Span::enter(&reg, "work", Phase::Other);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let stats = reg.span_stats("work", Phase::Other);
+        assert_eq!(stats.count.get(), 1);
+        assert!(stats.self_ns.get() >= 4_000_000, "{}", stats.self_ns.get());
+    }
+
+    #[test]
+    fn nested_span_time_bills_child_only_once() {
+        let reg = Registry::new();
+        let ledger = CostLedger::new();
+        {
+            let _parent = Span::enter_billed(&reg, "parent", Phase::Merge, &ledger);
+            std::thread::sleep(Duration::from_millis(10));
+            {
+                let _child = Span::enter_billed(&reg, "child", Phase::Build, &ledger);
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+        // Child gets its full sleep; parent keeps only its own work.
+        assert!(ledger.secs(Phase::Build) >= 0.020, "{}", ledger.secs(Phase::Build));
+        assert!(ledger.secs(Phase::Merge) >= 0.008, "{}", ledger.secs(Phase::Merge));
+        assert!(
+            ledger.secs(Phase::Merge) < ledger.secs(Phase::Build),
+            "parent self time must exclude the child's 25ms: merge={} build={}",
+            ledger.secs(Phase::Merge),
+            ledger.secs(Phase::Build)
+        );
+        let parent = reg.span_stats("parent", Phase::Merge);
+        let child = reg.span_stats("child", Phase::Build);
+        assert!(parent.self_ns.get() < child.self_ns.get());
+    }
+
+    #[test]
+    fn sibling_spans_do_not_inherit_each_other() {
+        let reg = Registry::new();
+        for _ in 0..2 {
+            let _a = Span::enter(&reg, "a", Phase::Other);
+        }
+        let stats = reg.span_stats("a", Phase::Other);
+        assert_eq!(stats.count.get(), 2);
+        // Both were root spans: no stack frame left behind.
+        CHILD_NS.with(|s| assert!(s.borrow().is_empty()));
+    }
+}

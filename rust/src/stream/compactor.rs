@@ -21,6 +21,7 @@ use crate::distance::Metric;
 use crate::graph::KnnGraph;
 use crate::merge::index_merge::{union_and_diversify, IndexKind};
 use crate::merge::{purge_and_repair, TwoWayMerge};
+use crate::metrics::{Phase, Registry, Span};
 use std::sync::Arc;
 
 /// Record of one executed compaction.
@@ -44,11 +45,25 @@ pub struct Compaction {
 pub struct Compactor {
     pub cfg: StreamConfig,
     pub metric: Metric,
+    /// When set, the purge and merge stages time themselves as
+    /// `compact_purge` / `compact_merge` spans (children of the
+    /// engine's `compaction` span, so the parent keeps self time only).
+    obs: Option<Arc<Registry>>,
 }
 
 impl Compactor {
     pub fn new(cfg: StreamConfig, metric: Metric) -> Compactor {
-        Compactor { cfg, metric }
+        Compactor {
+            cfg,
+            metric,
+            obs: None,
+        }
+    }
+
+    /// Time this compactor's purge/merge stages into `obs`.
+    pub fn with_obs(mut self, obs: Arc<Registry>) -> Compactor {
+        self.obs = Some(obs);
+        self
     }
 
     /// Pick the next pair to fuse: the two oldest segments at the lowest
@@ -168,6 +183,7 @@ impl Compactor {
         if dropped.len() == seg.len() {
             return (None, dropped);
         }
+        let _span = self.obs.as_ref().map(|o| Span::enter(o, "compact_purge", Phase::Merge));
         let keep: Vec<bool> = seg.global_ids.iter().map(|&g| !tombs.contains(g)).collect();
         let live_idx: Vec<usize> = (0..seg.len()).filter(|&i| keep[i]).collect();
         let data = seg.data.subset(&live_idx);
@@ -184,6 +200,7 @@ impl Compactor {
 
     /// The shared fuse core over (possibly purged) parts.
     fn fuse_parts(&self, a: &Purged<'_>, b: &Purged<'_>, out_id: u64, level: usize) -> Segment {
+        let _span = self.obs.as_ref().map(|o| Span::enter(o, "compact_merge", Phase::Merge));
         let (a_data, a_gids, a_knn) = (a.data(), a.gids(), a.knn());
         let (b_data, b_gids, b_knn) = (b.data(), b.gids(), b.knn());
         let mut params = self.cfg.merge;

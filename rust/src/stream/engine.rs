@@ -34,17 +34,30 @@ use super::persist::{self, CheckpointStats, Manifest, RestoreOptions, SegmentRec
 use super::snapshot::{merge_topk, SegmentSet};
 use super::tombstones::TombstoneSet;
 use crate::config::StreamConfig;
+use crate::dataset::store::MemoryBudget;
 use crate::dataset::Dataset;
 use crate::distance::Metric;
 use crate::graph::NeighborList;
+use crate::metrics::{Counter, Histogram, MetricsSnapshot, Phase, Registry, Span};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
 /// Counters exposed by [`StreamingIndex::stats`].
+///
+/// The snapshot is *torn-free*: every multi-counter transition (a
+/// delete's tombstone + `deleted` tick, a seal's publish + `sealed`
+/// tick, a compaction's purge + `reclaimed` credit) commits under one
+/// stats lock that `stats()` also holds while reading, so the
+/// invariant `tombstones == deleted - reclaimed - seal_dropped` holds
+/// at every observation of a fresh index. (`restore` re-seeds counters
+/// from the manifest while dropping tombstones for rows no source
+/// captured, so the arithmetic does not span a restore; `seal_dropped`
+/// itself is not persisted and restarts at 0.) `memtable_len` is read
+/// outside the lock and may lag by an in-flight insert.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StreamStats {
     /// Vectors inserted since creation (upsert replacements included).
@@ -59,6 +72,9 @@ pub struct StreamStats {
     pub compactions: usize,
     /// Tombstoned nodes physically reclaimed by compactions.
     pub reclaimed: usize,
+    /// Tombstoned rows dropped at seal time (died in the memtable or
+    /// on the in-flight list; never entered a segment).
+    pub seal_dropped: usize,
     /// Currently live segments.
     pub live_segments: usize,
     /// Vectors currently buffered in the memtable.
@@ -102,6 +118,52 @@ impl SealingBatch {
     }
 }
 
+/// Registry-backed lifetime counters, plus the lock that makes
+/// multi-counter transitions (and [`StreamingIndex::stats`] reads)
+/// atomic. The counters themselves are shared [`Registry`] handles —
+/// a `metrics_snapshot()` sees the same numbers as `stats()` — and
+/// single-counter hot paths (insert) bump them without this lock.
+///
+/// Lock order: `stats.lock` nests *inside* `bindings` and *outside*
+/// `tombstones` / `segments` / `sealing` (i.e. bindings → stats →
+/// tombstones). Never take `bindings` or `memtable` while holding it.
+struct StatCounters {
+    lock: Mutex<()>,
+    inserted: Arc<Counter>,
+    deleted: Arc<Counter>,
+    upserts: Arc<Counter>,
+    sealed: Arc<Counter>,
+    seal_dropped: Arc<Counter>,
+    compactions: Arc<Counter>,
+    reclaimed: Arc<Counter>,
+}
+
+impl StatCounters {
+    fn new(obs: &Registry) -> StatCounters {
+        StatCounters {
+            lock: Mutex::new(()),
+            inserted: obs.counter("stream.inserted"),
+            deleted: obs.counter("stream.deleted"),
+            upserts: obs.counter("stream.upserts"),
+            sealed: obs.counter("stream.sealed"),
+            seal_dropped: obs.counter("stream.seal_dropped"),
+            compactions: obs.counter("stream.compactions"),
+            reclaimed: obs.counter("stream.reclaimed"),
+        }
+    }
+}
+
+/// Why a batch of tombstones is being purged — selects which counter
+/// absorbs them so `deleted == tombstones + reclaimed + seal_dropped`
+/// stays exact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PurgeKind {
+    /// Rows that died before their batch sealed; never hit a segment.
+    SealDrop,
+    /// Rows physically rewritten away by a compaction.
+    Reclaim,
+}
+
 /// State shared between the index facade and its seal workers.
 struct Shared {
     cfg: StreamConfig,
@@ -118,7 +180,14 @@ struct Shared {
     bindings: Mutex<Arc<GidBindings>>,
     sealing: Mutex<Vec<Arc<SealingBatch>>>,
     sealing_done: Condvar,
-    sealed: AtomicUsize,
+    /// Observability registry: counters/histograms/spans/events for
+    /// this index. Seal workers hold `shared`, so it lives here.
+    obs: Arc<Registry>,
+    stats: StatCounters,
+    insert_ns: Arc<Histogram>,
+    search_ns: Arc<Histogram>,
+    delete_ns: Arc<Histogram>,
+    upsert_ns: Arc<Histogram>,
 }
 
 impl Shared {
@@ -150,6 +219,7 @@ impl Shared {
                 live.iter().map(|&i| batch.gids[i]).collect(),
             )
         };
+        let rows = gids.len();
         if !gids.is_empty() {
             // Materialize off the insert path: the frozen batch is a
             // chained (or, post-filter, gather) view; the segment is
@@ -157,6 +227,7 @@ impl Shared {
             // distance loop, so pay one contiguous copy here, where it
             // costs ingest nothing.
             let data = data.materialize();
+            let _span = Span::enter(&self.obs, "seal_build", Phase::Build);
             let seg = Arc::new(super::Segment::seal(
                 batch.id,
                 0,
@@ -165,17 +236,28 @@ impl Shared {
                 self.metric,
                 &self.cfg,
             ));
+            drop(_span);
+            // Publish + `sealed` tick commit together under the stats
+            // lock so `stats()` never sees the new segment without its
+            // count (or vice versa). Batch retirement joins the same
+            // critical section; publication still precedes retirement.
+            let _st = self.stats.lock.lock().unwrap();
             let mut cur = self.segments.lock().unwrap();
             let mut v = cur.segments.clone();
             v.push(seg);
             v.sort_by_key(|s| s.id);
             *cur = Arc::new(SegmentSet { segments: v });
             drop(cur);
-            self.sealed.fetch_add(1, Ordering::Relaxed);
+            self.stats.sealed.inc();
+            let mut sealing = self.sealing.lock().unwrap();
+            sealing.retain(|b| b.id != batch.id);
+            drop(sealing);
+        } else {
+            let _st = self.stats.lock.lock().unwrap();
+            let mut sealing = self.sealing.lock().unwrap();
+            sealing.retain(|b| b.id != batch.id);
+            drop(sealing);
         }
-        let mut sealing = self.sealing.lock().unwrap();
-        sealing.retain(|b| b.id != batch.id);
-        drop(sealing);
         self.sealing_done.notify_all();
         // Rows dropped at seal time never made it into any segment;
         // their tombstones have nothing left to mask, so purge them
@@ -185,20 +267,36 @@ impl Shared {
         // taken before this purge) or no longer sees the batch —
         // purging first would open a window where a dead row
         // resurfaces from the in-flight list.
-        self.purge_tombstones(&dropped);
+        self.purge_tombstones(&dropped, PurgeKind::SealDrop);
+        self.obs.event(
+            "seal_published",
+            &[
+                ("segment", batch.id as f64),
+                ("rows", rows as f64),
+                ("dropped_at_seal", dropped.len() as f64),
+            ],
+        );
     }
 
     /// Swap in a tombstone set without `gids` (no-op on empty input).
     /// Callers must ensure the ids no longer exist in any source a
-    /// search visits *after* its tombstone snapshot.
-    fn purge_tombstones(&self, gids: &[u32]) {
+    /// search visits *after* its tombstone snapshot. The swap and the
+    /// matching counter credit (`seal_dropped` or `reclaimed`) commit
+    /// as one step under the stats lock, keeping `stats()` coherent.
+    fn purge_tombstones(&self, gids: &[u32], kind: PurgeKind) {
         if gids.is_empty() {
             return;
         }
         {
+            let _st = self.stats.lock.lock().unwrap();
             let mut t = self.tombstones.lock().unwrap();
             let next = Arc::new(t.without(gids));
             *t = next;
+            drop(t);
+            match kind {
+                PurgeKind::SealDrop => self.stats.seal_dropped.add(gids.len() as u64),
+                PurgeKind::Reclaim => self.stats.reclaimed.add(gids.len() as u64),
+            }
         }
         // A purged row is physically gone from every source, so any
         // upsert binding it carried is dead weight: prune it, keeping
@@ -277,23 +375,39 @@ pub struct StreamingIndex {
     compact_lock: Mutex<()>,
     next_gid: AtomicU32,
     next_segment_id: AtomicU64,
-    inserted: AtomicUsize,
-    deleted: AtomicUsize,
-    upserted: AtomicUsize,
-    compactions: AtomicUsize,
-    reclaimed: AtomicUsize,
     /// Last tombstone epoch the dead-fraction scan ran at (gates the
     /// O(rows) scan to once per tombstone-set change).
     dead_scan_epoch: AtomicU64,
     seal_tx: Mutex<Option<mpsc::Sender<Arc<SealingBatch>>>>,
     seal_workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Paged-storage budget whose fault/eviction counters feed the
+    /// `budget.*` gauges. Unbounded for in-memory logs; `restore` swaps
+    /// in the caller's budget when checkpoint segments are paged.
+    budget: Arc<MemoryBudget>,
 }
 
 impl StreamingIndex {
     pub fn new(dim: usize, metric: Metric, cfg: StreamConfig) -> StreamingIndex {
+        StreamingIndex::with_registry(dim, metric, cfg, Arc::new(Registry::new()))
+    }
+
+    /// Like [`StreamingIndex::new`], but recording into a
+    /// caller-supplied [`Registry`] (share one across components, or
+    /// keep tests isolated).
+    pub fn with_registry(
+        dim: usize,
+        metric: Metric,
+        cfg: StreamConfig,
+        obs: Arc<Registry>,
+    ) -> StreamingIndex {
         assert!(dim > 0, "dim must be positive");
         assert!(cfg.segment_size > 0, "segment_size must be positive");
         let seal_threads = cfg.seal_threads;
+        let stats = StatCounters::new(&obs);
+        let insert_ns = obs.histogram("stream.insert_ns");
+        let search_ns = obs.histogram("stream.search_ns");
+        let delete_ns = obs.histogram("stream.delete_ns");
+        let upsert_ns = obs.histogram("stream.upsert_ns");
         let shared = Arc::new(Shared {
             cfg,
             metric,
@@ -302,7 +416,12 @@ impl StreamingIndex {
             bindings: Mutex::new(Arc::new(GidBindings::default())),
             sealing: Mutex::new(Vec::new()),
             sealing_done: Condvar::new(),
-            sealed: AtomicUsize::new(0),
+            obs,
+            stats,
+            insert_ns,
+            search_ns,
+            delete_ns,
+            upsert_ns,
         });
         let (seal_tx, seal_workers) = if seal_threads > 0 {
             let (tx, rx) = mpsc::channel::<Arc<SealingBatch>>();
@@ -334,15 +453,32 @@ impl StreamingIndex {
             compact_lock: Mutex::new(()),
             next_gid: AtomicU32::new(0),
             next_segment_id: AtomicU64::new(0),
-            inserted: AtomicUsize::new(0),
-            deleted: AtomicUsize::new(0),
-            upserted: AtomicUsize::new(0),
-            compactions: AtomicUsize::new(0),
-            reclaimed: AtomicUsize::new(0),
             dead_scan_epoch: AtomicU64::new(u64::MAX),
             seal_tx: Mutex::new(seal_tx),
             seal_workers: Mutex::new(seal_workers),
+            budget: MemoryBudget::unbounded(),
         }
+    }
+
+    /// The metrics registry this index records into. Register extra
+    /// instruments on it, or pass it to sibling components so one
+    /// snapshot covers the whole stack.
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.shared.obs
+    }
+
+    /// One coherent observability report: refreshes the point-in-time
+    /// gauges (`stream.*` occupancy, `budget.*` pressure) and freezes
+    /// every instrument of the registry.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        let st = self.stats();
+        let obs = &self.shared.obs;
+        obs.gauge("stream.live_segments").set(st.live_segments as i64);
+        obs.gauge("stream.memtable_len").set(st.memtable_len as i64);
+        obs.gauge("stream.sealing").set(st.sealing as i64);
+        obs.gauge("stream.tombstones").set(st.tombstones as i64);
+        self.budget.publish(obs);
+        obs.snapshot()
     }
 
     #[inline]
@@ -357,16 +493,15 @@ impl StreamingIndex {
 
     /// Total vectors inserted so far (== the next global id).
     pub fn len(&self) -> usize {
-        self.inserted.load(Ordering::Relaxed)
+        self.shared.stats.inserted.get() as usize
     }
 
     /// Vectors inserted and not (yet) deleted. Saturating: the two
     /// counters are read independently, so a racing insert+delete can
     /// momentarily observe more deletes than inserts.
     pub fn live_len(&self) -> usize {
-        self.inserted
-            .load(Ordering::Relaxed)
-            .saturating_sub(self.deleted.load(Ordering::Relaxed))
+        (self.shared.stats.inserted.get() as usize)
+            .saturating_sub(self.shared.stats.deleted.get() as usize)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -382,13 +517,14 @@ impl StreamingIndex {
     /// inline, deterministic build).
     pub fn insert(&self, v: &[f32]) -> u32 {
         assert_eq!(v.len(), self.dim, "vector dimension mismatch");
+        let t = Instant::now();
         let frozen;
         let gid;
         {
             let mut mt = self.memtable.lock().unwrap();
             gid = self.next_gid.fetch_add(1, Ordering::Relaxed);
             mt.insert(v, gid);
-            self.inserted.fetch_add(1, Ordering::Relaxed);
+            self.shared.stats.inserted.inc();
             frozen = if mt.len() >= self.shared.cfg.segment_size {
                 self.freeze_locked(&mut mt)
             } else {
@@ -398,6 +534,10 @@ impl StreamingIndex {
         if let Some(batch) = frozen {
             self.dispatch_seal(batch);
         }
+        // Timed through the seal dispatch: in inline mode (or under the
+        // overload valve) the insert really does pay the build, and the
+        // histogram should show that spike.
+        self.shared.insert_ns.record_duration(t.elapsed());
         gid
     }
 
@@ -408,6 +548,13 @@ impl StreamingIndex {
     /// touches the segment holding it (or when the dead-fraction
     /// trigger rewrites it).
     pub fn delete(&self, gid: u32) -> bool {
+        let t = Instant::now();
+        let deleted = self.delete_gid(gid);
+        self.shared.delete_ns.record_duration(t.elapsed());
+        deleted
+    }
+
+    fn delete_gid(&self, gid: u32) -> bool {
         if gid >= self.next_gid.load(Ordering::Relaxed) {
             return false;
         }
@@ -439,11 +586,15 @@ impl StreamingIndex {
                 return false;
             }
             let next = Arc::new(cur.with(internal)); // clone off-lock
+            // Stats lock outside the tombstone lock (stats → tombstones
+            // order): the swap and the `deleted` tick commit together,
+            // so `stats()` can never catch one without the other.
+            let _st = self.shared.stats.lock.lock().unwrap();
             let mut tombs = self.shared.tombstones.lock().unwrap();
             if tombs.epoch() == cur.epoch() {
                 *tombs = next;
                 drop(tombs);
-                self.deleted.fetch_add(1, Ordering::Relaxed);
+                self.shared.stats.deleted.inc();
                 return true;
             }
             // Lost a race with another delete/purge: retry on the
@@ -475,11 +626,12 @@ impl StreamingIndex {
                 return 0;
             }
             let next = Arc::new(cur.with_all(&fresh));
+            let _st = self.shared.stats.lock.lock().unwrap();
             let mut tombs = self.shared.tombstones.lock().unwrap();
             if tombs.epoch() == cur.epoch() {
                 *tombs = next;
                 drop(tombs);
-                self.deleted.fetch_add(fresh.len(), Ordering::Relaxed);
+                self.shared.stats.deleted.add(fresh.len() as u64);
                 return fresh.len();
             }
         }
@@ -506,6 +658,13 @@ impl StreamingIndex {
     /// caller ever receives the pair (and none ever sees the gid
     /// vanish mid-update).
     pub fn upsert(&self, gid: u32, v: &[f32]) -> bool {
+        let t = Instant::now();
+        let ok = self.upsert_inner(gid, v);
+        self.shared.upsert_ns.record_duration(t.elapsed());
+        ok
+    }
+
+    fn upsert_inner(&self, gid: u32, v: &[f32]) -> bool {
         assert_eq!(v.len(), self.dim, "vector dimension mismatch");
         // Hold the bindings lock across resolve + rebind so concurrent
         // upserts of one gid serialize (each replaces the previous
@@ -531,7 +690,7 @@ impl StreamingIndex {
             next.current.insert(gid, internal);
             *b = Arc::new(next);
             mt.insert(v, internal);
-            self.inserted.fetch_add(1, Ordering::Relaxed);
+            self.shared.stats.inserted.inc();
             frozen = if mt.len() >= self.shared.cfg.segment_size {
                 self.freeze_locked(&mut mt)
             } else {
@@ -545,7 +704,7 @@ impl StreamingIndex {
         // half an upsert. The seal dispatch stays outside — an inline
         // build reaches `purge_tombstones`, which takes this lock.
         self.delete_internal(old);
-        self.upserted.fetch_add(1, Ordering::Relaxed);
+        self.shared.stats.upserts.inc();
         drop(b);
         if let Some(batch) = frozen {
             self.dispatch_seal(batch);
@@ -641,6 +800,13 @@ impl StreamingIndex {
     /// in-flight seal batches, and all live segments, merge-sorting the
     /// per-source top-k lists.
     pub fn search_ef(&self, query: &[f32], topk: usize, ef: usize) -> Vec<(f32, u32)> {
+        let t = Instant::now();
+        let out = self.search_ef_inner(query, topk, ef);
+        self.shared.search_ns.record_duration(t.elapsed());
+        out
+    }
+
+    fn search_ef_inner(&self, query: &[f32], topk: usize, ef: usize) -> Vec<(f32, u32)> {
         assert_eq!(query.len(), self.dim, "query dimension mismatch");
         // Id frontier FIRST, bindings snapshot second: rows minted
         // after `gid_limit` were inserted after this query began and
@@ -753,7 +919,8 @@ impl StreamingIndex {
             })
         };
         let tombs = self.tombstones();
-        let compactor = Compactor::new(self.shared.cfg.clone(), self.shared.metric);
+        let compactor = Compactor::new(self.shared.cfg.clone(), self.shared.metric)
+            .with_obs(Arc::clone(&self.shared.obs));
         // Dead-fraction self-heal first: a segment whose tombstoned
         // share crossed `compact_dead_fraction` is rewritten in place
         // (purge + repair, level preserved) before the geometric
@@ -763,8 +930,20 @@ impl StreamingIndex {
         if let Some(seg) = self.pick_dead(&eligible, &tombs, sealing_ids.is_empty()) {
             let out_id = self.next_segment_id.fetch_add(1, Ordering::Relaxed);
             let start = Instant::now();
+            let _span = Span::enter(&self.shared.obs, "compaction", Phase::Merge);
+            let in_rows = seg.len();
             let (rewritten, dropped) = compactor.rewrite_reclaim(&seg, out_id, &tombs);
+            let out_rows = rewritten.as_ref().map(|s| s.len()).unwrap_or(0);
             self.publish_compaction([seg.id, seg.id], rewritten, &dropped);
+            self.shared.obs.event(
+                "compaction",
+                &[
+                    ("level", seg.level as f64),
+                    ("in_rows", in_rows as f64),
+                    ("out_rows", out_rows as f64),
+                    ("reclaimed", dropped.len() as f64),
+                ],
+            );
             return Some(Compaction {
                 inputs: [seg.id, seg.id],
                 output: out_id,
@@ -776,12 +955,24 @@ impl StreamingIndex {
         let pair = Compactor::pick(&eligible, strict)?;
         let out_id = self.next_segment_id.fetch_add(1, Ordering::Relaxed);
         let start = Instant::now();
+        let _span = Span::enter(&self.shared.obs, "compaction", Phase::Merge);
+        let in_rows = pair[0].len() + pair[1].len();
         let (merged, dropped) = compactor.fuse_reclaim(&pair[0], &pair[1], out_id, &tombs);
         let level = merged
             .as_ref()
             .map(|m| m.level)
             .unwrap_or_else(|| pair[0].level.max(pair[1].level) + 1);
+        let out_rows = merged.as_ref().map(|s| s.len()).unwrap_or(0);
         self.publish_compaction([pair[0].id, pair[1].id], merged, &dropped);
+        self.shared.obs.event(
+            "compaction",
+            &[
+                ("level", level as f64),
+                ("in_rows", in_rows as f64),
+                ("out_rows", out_rows as f64),
+                ("reclaimed", dropped.len() as f64),
+            ],
+        );
         Some(Compaction {
             inputs: [pair[0].id, pair[1].id],
             output: out_id,
@@ -818,11 +1009,9 @@ impl StreamingIndex {
         v.sort_by_key(|s| s.id);
         *cur = Arc::new(SegmentSet { segments: v });
         drop(cur);
-        if !dropped.is_empty() {
-            self.shared.purge_tombstones(dropped);
-            self.reclaimed.fetch_add(dropped.len(), Ordering::Relaxed);
-        }
-        self.compactions.fetch_add(1, Ordering::Relaxed);
+        // The purge credits `reclaimed` under the stats lock.
+        self.shared.purge_tombstones(dropped, PurgeKind::Reclaim);
+        self.shared.stats.compactions.inc();
     }
 
     /// The dead-fraction trigger's candidate scan: the first eligible
@@ -863,15 +1052,22 @@ impl StreamingIndex {
     }
 
     pub fn stats(&self) -> StreamStats {
+        // Memtable length BEFORE the stats lock: `stats` never holds
+        // stats→memtable, so it can never deadlock against writers
+        // (which nest memtable inside bindings, not inside stats).
+        let memtable_len = self.memtable.lock().unwrap().len();
+        let s = &self.shared.stats;
+        let _st = s.lock.lock().unwrap();
         StreamStats {
-            inserted: self.inserted.load(Ordering::Relaxed),
-            deleted: self.deleted.load(Ordering::Relaxed),
-            upserts: self.upserted.load(Ordering::Relaxed),
-            sealed: self.shared.sealed.load(Ordering::Relaxed),
-            compactions: self.compactions.load(Ordering::Relaxed),
-            reclaimed: self.reclaimed.load(Ordering::Relaxed),
+            inserted: s.inserted.get() as usize,
+            deleted: s.deleted.get() as usize,
+            upserts: s.upserts.get() as usize,
+            sealed: s.sealed.get() as usize,
+            compactions: s.compactions.get() as usize,
+            reclaimed: s.reclaimed.get() as usize,
+            seal_dropped: s.seal_dropped.get() as usize,
             live_segments: self.snapshot().count(),
-            memtable_len: self.memtable.lock().unwrap().len(),
+            memtable_len,
             sealing: self.shared.sealing.lock().unwrap().len(),
             tombstones: self.tombstones().len(),
         }
@@ -889,6 +1085,7 @@ impl StreamingIndex {
     /// land on either side of it. Call from a paused writer (or after
     /// `flush()`) when an exact cut is required.
     pub fn checkpoint(&self, dir: &Path) -> Result<CheckpointStats> {
+        let _span = Span::enter(&self.shared.obs, "checkpoint", Phase::Storage);
         self.quiesce();
         // Take the whole cut under bindings → memtable (the same
         // nesting `upsert` uses): ids are allocated and rows enter the
@@ -900,18 +1097,30 @@ impl StreamingIndex {
         // (binding without tombstone, or row without binding). Only
         // O(1) snapshots are taken under the locks; the row payload
         // copies happen after release.
-        let (next_gid, inserted, mem_snap, sealing, snap, tombs, b) = {
+        let (next_gid, counts, mem_snap, sealing, snap, tombs, b) = {
             let bindings_guard = self.shared.bindings.lock().unwrap();
             let mt = self.memtable.lock().unwrap();
+            // Stats lock inside the cut (bindings → memtable → stats;
+            // nothing ever takes memtable or bindings under stats), so
+            // the manifest's counters agree with the captured sources.
+            let _st = self.shared.stats.lock.lock().unwrap();
+            let s = &self.shared.stats;
+            let counts = [
+                s.inserted.get(),
+                s.deleted.get(),
+                s.sealed.get(),
+                s.compactions.get(),
+                s.reclaimed.get(),
+                s.upserts.get(),
+            ];
             let next_gid = self.next_gid.load(Ordering::Relaxed);
-            let inserted = self.inserted.load(Ordering::Relaxed);
             let mem_snap = mt.snapshot();
             let sealing: Vec<Arc<SealingBatch>> =
                 self.shared.sealing.lock().unwrap().clone();
             let snap = self.snapshot();
             let tombs = self.tombstones();
             let b = Arc::clone(&bindings_guard);
-            (next_gid, inserted, mem_snap, sealing, snap, tombs, b)
+            (next_gid, counts, mem_snap, sealing, snap, tombs, b)
         };
         let mut rows = mem_snap.rows();
         let seg_ids: std::collections::HashSet<u64> =
@@ -950,12 +1159,12 @@ impl StreamingIndex {
             log_id: self.log_id,
             next_gid,
             next_segment_id: self.next_segment_id.load(Ordering::Relaxed),
-            inserted: inserted as u64,
-            deleted: self.deleted.load(Ordering::Relaxed) as u64,
-            sealed: self.shared.sealed.load(Ordering::Relaxed) as u64,
-            compactions: self.compactions.load(Ordering::Relaxed) as u64,
-            reclaimed: self.reclaimed.load(Ordering::Relaxed) as u64,
-            upserted: self.upserted.load(Ordering::Relaxed) as u64,
+            inserted: counts[0],
+            deleted: counts[1],
+            sealed: counts[2],
+            compactions: counts[3],
+            reclaimed: counts[4],
+            upserted: counts[5],
             tombstone_epoch: tombs.epoch(),
             tombstones: tombs.sorted_ids(),
             bindings,
@@ -971,7 +1180,18 @@ impl StreamingIndex {
                 .collect(),
             memtable: rows,
         };
-        persist::write_checkpoint(dir, &manifest, &snap)
+        let stats = persist::write_checkpoint(dir, &manifest, &snap)?;
+        self.shared.obs.event(
+            "checkpoint",
+            &[
+                ("segments", stats.segments as f64),
+                ("memtable_rows", stats.memtable_rows as f64),
+                ("files_written", stats.segment_files_written as f64),
+                ("files_reused", stats.segment_files_reused as f64),
+                ("manifest_bytes", stats.manifest_bytes as f64),
+            ],
+        );
+        Ok(stats)
     }
 
     /// Rebuild a [`StreamingIndex`] from a checkpoint directory:
@@ -999,8 +1219,17 @@ impl StreamingIndex {
                 cfg.fingerprint()
             );
         }
-        let mut index = StreamingIndex::new(m.dim as usize, m.metric, cfg);
+        let obs = opts
+            .obs
+            .clone()
+            .unwrap_or_else(|| Arc::new(Registry::new()));
+        let _span = Span::enter(&obs, "restore", Phase::Storage);
+        let mut index =
+            StreamingIndex::with_registry(m.dim as usize, m.metric, cfg, Arc::clone(&obs));
         index.log_id = m.log_id;
+        if let Some(budget) = &opts.budget {
+            index.budget = Arc::clone(budget);
+        }
         let mut segments = Vec::with_capacity(m.segments.len());
         for rec in &m.segments {
             segments.push(Arc::new(persist::load_segment(dir, rec, opts)?));
@@ -1058,7 +1287,6 @@ impl StreamingIndex {
             m.tombstone_epoch,
             tombstones,
         ));
-        index.shared.sealed.store(m.sealed as usize, Ordering::Relaxed);
         {
             let mut mt = index.memtable.lock().unwrap();
             for (gid, row) in &m.memtable {
@@ -1071,11 +1299,25 @@ impl StreamingIndex {
         });
         index.next_gid.store(m.next_gid, Ordering::Relaxed);
         index.next_segment_id.store(m.next_segment_id, Ordering::Relaxed);
-        index.inserted.store(m.inserted as usize, Ordering::Relaxed);
-        index.deleted.store(m.deleted as usize, Ordering::Relaxed);
-        index.upserted.store(m.upserted as usize, Ordering::Relaxed);
-        index.compactions.store(m.compactions as usize, Ordering::Relaxed);
-        index.reclaimed.store(m.reclaimed as usize, Ordering::Relaxed);
+        // Resume lifetime counters from the manifest (`Counter::set` is
+        // restore-only). `seal_dropped` is not persisted and restarts
+        // at 0, which is why the stats-coherence arithmetic is scoped
+        // to fresh logs (see [`StreamStats`]).
+        let s = &index.shared.stats;
+        s.inserted.set(m.inserted);
+        s.deleted.set(m.deleted);
+        s.sealed.set(m.sealed);
+        s.compactions.set(m.compactions);
+        s.reclaimed.set(m.reclaimed);
+        s.upserts.set(m.upserted);
+        obs.event(
+            "restore",
+            &[
+                ("segments", m.segments.len() as f64),
+                ("memtable_rows", m.memtable.len() as f64),
+                ("tombstones", m.tombstones.len() as f64),
+            ],
+        );
         Ok(index)
     }
 
@@ -1653,5 +1895,71 @@ mod tests {
         assert_eq!(index.stats().tombstones, 0);
         let final_hits = index.search_ef(&ds.vector(1), 20, 64);
         assert!(final_hits.iter().all(|&(_, id)| !(id < 300 && id % 5 == 0)));
+    }
+
+    #[test]
+    fn stats_snapshot_is_never_torn_under_churn() {
+        // A reader hammers `stats()` while inserts, deletes, off-thread
+        // seals, and a background compactor churn, asserting the counter
+        // algebra every snapshot of a fresh log must satisfy *exactly*:
+        // tombstones == deleted - reclaimed - seal_dropped. Before the
+        // stats lock, each side of a seal purge / compaction credit /
+        // delete tick could be observed alone and the equation tore.
+        let ds = DatasetFamily::Sift.generate(600, 29);
+        let index = Arc::new(StreamingIndex::new(ds.dim, Metric::L2, small_cfg(6, 64)));
+        let handle = Arc::clone(&index).spawn_compactor(std::time::Duration::from_millis(1));
+        std::thread::scope(|scope| {
+            let writer = Arc::clone(&index);
+            let w = scope.spawn(move || {
+                for i in 0..ds.len() {
+                    writer.insert(&ds.vector(i));
+                }
+            });
+            let deleter = Arc::clone(&index);
+            let w2 = scope.spawn(move || {
+                let mut next = 0u32;
+                while next < 300 {
+                    if deleter.delete(next) {
+                        next += 3;
+                    } else {
+                        std::thread::yield_now(); // not inserted yet
+                    }
+                }
+            });
+            let reader = Arc::clone(&index);
+            scope.spawn(move || {
+                while !w.is_finished() || !w2.is_finished() {
+                    let st = reader.stats();
+                    // Signed arithmetic: a torn read must fail the
+                    // equality assert, not panic on usize underflow.
+                    assert_eq!(
+                        st.tombstones as i64,
+                        st.deleted as i64 - st.reclaimed as i64 - st.seal_dropped as i64,
+                        "torn stats: {st:?}"
+                    );
+                }
+            });
+        });
+        handle.stop();
+        index.flush();
+        index.compact_all();
+        let st = index.stats();
+        assert_eq!(st.inserted, 600);
+        assert_eq!(st.deleted, 100);
+        assert_eq!(st.reclaimed + st.seal_dropped, 100);
+        assert_eq!(st.tombstones, 0);
+        // The unified registry reports the same numbers and carries
+        // per-operation latency histograms alongside them.
+        let snap = index.metrics_snapshot();
+        assert_eq!(snap.counters["stream.inserted"], 600);
+        assert_eq!(snap.counters["stream.deleted"], 100);
+        assert_eq!(snap.histograms["stream.insert_ns"].count, 600);
+        // Failed attempts (target row not inserted yet) time too.
+        assert!(snap.histograms["stream.delete_ns"].count >= 100);
+        assert!(snap.spans.contains_key("seal_build"));
+        assert!(snap
+            .events
+            .iter()
+            .any(|e| e.kind == "seal_published"));
     }
 }

@@ -79,8 +79,15 @@ pub struct IngestSummary {
     /// Sustained inserts/sec over the whole run (freezes included).
     pub insert_rate: f64,
     /// p99 single-insert latency in seconds (the seal-boundary stall
-    /// metric: off-thread sealing keeps this flat).
+    /// metric: off-thread sealing keeps this flat). From the engine's
+    /// `stream.insert_ns` histogram (≤ 1/16 relative bucket error).
     pub insert_p99_s: f64,
+    /// Median single-insert latency in seconds (same histogram).
+    pub insert_p50_s: f64,
+    /// Median / p99 single-search latency in seconds, over every
+    /// measured query of the run (`stream.search_ns` histogram).
+    pub search_p50_s: f64,
+    pub search_p99_s: f64,
     /// Deletes issued over the run.
     pub deleted: usize,
     pub total_secs: f64,
@@ -126,12 +133,9 @@ pub fn stream_ingest_into(
     let mut live: Vec<u32> = Vec::with_capacity(ds.len());
     let mut deleted: Vec<u32> = Vec::new();
     let start = Instant::now();
-    let mut insert_lat: Vec<f64> = Vec::with_capacity(ds.len());
     let mut rows: Vec<IngestReportRow> = Vec::new();
     for i in 0..ds.len() {
-        let t = Instant::now();
         let gid = index.insert(&ds.vector(i));
-        insert_lat.push(t.elapsed().as_secs_f64());
         live.push(gid);
         if opts.delete_rate > 0.0
             && live.len() > 1
@@ -168,14 +172,20 @@ pub fn stream_ingest_into(
     let final_row = measure(index, ds, queries, ds.len(), &deleted, opts, &start);
     observer(&final_row);
     rows.push(final_row);
-    insert_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p99 = insert_lat[(insert_lat.len() * 99) / 100];
+    // Per-operation latency percentiles come from the engine's always-on
+    // histograms — every insert/search this run issued is in there, no
+    // per-call Vec and no O(n log n) sort on the driver side.
+    let insert_lat = index.metrics().histogram("stream.insert_ns").snapshot();
+    let search_lat = index.metrics().histogram("stream.search_ns").snapshot();
     let stats = index.stats();
     IngestSummary {
         final_recall: final_row.recall,
         final_qps: final_row.qps,
         insert_rate: ds.len() as f64 / total_secs.max(1e-9),
-        insert_p99_s: p99,
+        insert_p99_s: insert_lat.quantile_secs(0.99),
+        insert_p50_s: insert_lat.quantile_secs(0.50),
+        search_p50_s: search_lat.quantile_secs(0.50),
+        search_p99_s: search_lat.quantile_secs(0.99),
         deleted: deleted.len(),
         total_secs,
         compactions: stats.compactions,
@@ -320,6 +330,11 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
     if !(0.0..1.0).contains(&delete_rate) {
         anyhow::bail!("--delete-rate must be in [0, 1), got {delete_rate}");
     }
+    let metrics_out = args.get("metrics-out").map(std::path::PathBuf::from);
+    let metrics_interval = parse_f64("metrics-interval")?;
+    if metrics_interval > 0.0 && metrics_out.is_none() {
+        anyhow::bail!("--metrics-interval requires --metrics-out");
+    }
     let opts = IngestOptions {
         rate,
         delete_rate,
@@ -384,6 +399,29 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
     } else {
         queries
     };
+    // Periodic `--metrics-interval` dumper: snapshots are cheap (a few
+    // lock-free loads per instrument), so a mid-run dump never perturbs
+    // the ingest it is observing.
+    let dumper = match (&metrics_out, metrics_interval > 0.0) {
+        (Some(path), true) => {
+            let idx = Arc::clone(&index);
+            let path = path.clone();
+            let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let flag = Arc::clone(&stop);
+            let interval = Duration::from_secs_f64(metrics_interval);
+            let join = std::thread::spawn(move || loop {
+                std::thread::park_timeout(interval);
+                if flag.load(std::sync::atomic::Ordering::Relaxed) {
+                    break;
+                }
+                if let Err(e) = write_metrics(&idx, &path) {
+                    eprintln!("metrics dump failed: {e:#}");
+                }
+            });
+            Some((stop, join))
+        }
+        _ => None,
+    };
     let summary = stream_ingest_into(&index, &ds, &queries, &opts, &mut |row| {
         println!(
             "  t={:6.2}s  inserted {:>8}  deleted {:>7}  segments {:>3}  qps {:>8.0}  \
@@ -392,12 +430,16 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
         );
     });
     println!(
-        "final: recall@{} {:.4}  inserts/s {:.0}  insert p99 {:.2}ms  deleted {}  \
-         compactions {}  live segments {}  total {:.2}s",
+        "final: recall@{} {:.4}  inserts/s {:.0}  insert p50/p99 {:.2}/{:.2}ms  \
+         search p50/p99 {:.2}/{:.2}ms  deleted {}  compactions {}  live segments {}  \
+         total {:.2}s",
         opts.topk,
         summary.final_recall,
         summary.insert_rate,
+        summary.insert_p50_s * 1e3,
         summary.insert_p99_s * 1e3,
+        summary.search_p50_s * 1e3,
+        summary.search_p99_s * 1e3,
         summary.deleted,
         summary.compactions,
         summary.segments,
@@ -416,7 +458,34 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
             st.gc_removed
         );
     }
+    if let Some((stop, join)) = dumper {
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        join.thread().unpark();
+        let _ = join.join();
+    }
+    // Final dump AFTER the checkpoint so its span and journal event are
+    // part of the snapshot the run leaves behind.
+    if let Some(path) = &metrics_out {
+        write_metrics(&index, path)?;
+        println!("metrics -> {path:?}");
+    }
     Ok(summary)
+}
+
+/// Atomically write `index`'s metrics snapshot as pretty JSON (temp
+/// file + rename, so a reader never sees a half-written dump).
+fn write_metrics(index: &StreamingIndex, path: &std::path::Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create metrics dir {parent:?}"))?;
+        }
+    }
+    let json = index.metrics_snapshot().to_json();
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, json.to_pretty()).with_context(|| format!("write {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -520,6 +589,46 @@ mod tests {
         // still loadable and reflects both runs' rows.
         let m = crate::stream::persist::read_manifest(&dir).unwrap();
         assert_eq!(m.inserted, 800, "both runs' inserts persisted");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cli_metrics_out_writes_versioned_snapshot() {
+        let dir = std::env::temp_dir().join(format!(
+            "knnmerge-cli-metrics-{}",
+            crate::util::unique_scratch_suffix()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("metrics.json");
+        let args = crate::cli::Args::parse(
+            format!(
+                "stream --family sift --n 300 --seed 11 --k 6 --lambda 6 \
+                 --segment-size 100 --report-every 0 --queries 5 --delete-rate 0.1 \
+                 --metrics-out {}",
+                out.to_string_lossy()
+            )
+            .split_whitespace()
+            .map(String::from),
+        )
+        .unwrap();
+        let summary = cli_stream(&args).unwrap();
+        assert!(summary.insert_p99_s >= summary.insert_p50_s);
+        let json = crate::util::json::Json::parse(&std::fs::read_to_string(&out).unwrap())
+            .unwrap();
+        assert_eq!(json.get("version").unwrap().as_f64(), Some(1.0));
+        let counters = json.get("counters").unwrap();
+        assert_eq!(
+            counters.get("stream.inserted").unwrap().as_f64(),
+            Some(300.0)
+        );
+        let hist = json.get("histograms").unwrap().get("stream.insert_ns").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_f64(), Some(300.0));
+        assert!(hist.get("p99_ns").unwrap().as_f64().unwrap() > 0.0);
+        let spans = json.get("spans").unwrap();
+        assert!(spans.get("seal_build").is_some(), "seal span missing");
+        assert!(!json.get("events").unwrap().as_arr().unwrap().is_empty());
+        // Budget gauges exist even for a purely in-memory run.
+        assert!(json.get("gauges").unwrap().get("budget.faults").is_some());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -67,6 +67,7 @@ use crate::dataset::{io as vec_io, Dataset, MemoryBudget, PageOpts, PagedFormat}
 use crate::distance::Metric;
 use crate::graph::{serial, PagedKnnGraph};
 use crate::index::IndexGraph;
+use crate::metrics::{Phase, Registry, Span};
 use crate::util::crc32;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -139,6 +140,10 @@ pub struct RestoreOptions {
     /// regardless (see the module docs). `None` loads everything
     /// eagerly.
     pub budget: Option<Arc<MemoryBudget>>,
+    /// Metrics registry the restored index records into (and segment
+    /// loads time their `restore_segment` spans against). `None` gives
+    /// the index a fresh private registry.
+    pub obs: Option<Arc<Registry>>,
 }
 
 impl RestoreOptions {
@@ -146,7 +151,15 @@ impl RestoreOptions {
     pub fn paged(budget: Arc<MemoryBudget>) -> RestoreOptions {
         RestoreOptions {
             budget: Some(budget),
+            ..RestoreOptions::default()
         }
+    }
+
+    /// Record restore activity (and the restored index's metrics) into
+    /// an existing registry.
+    pub fn with_obs(mut self, obs: Arc<Registry>) -> RestoreOptions {
+        self.obs = Some(obs);
+        self
     }
 }
 
@@ -523,6 +536,7 @@ pub fn load_segment(
     rec: &SegmentRecord,
     opts: &RestoreOptions,
 ) -> Result<Segment> {
+    let _span = opts.obs.as_ref().map(|o| Span::enter(o, "restore_segment", Phase::Storage));
     let (vec_path, knn_path, idx_path) = seg_paths(dir, rec.id);
     let (data, knn) = match &opts.budget {
         Some(budget) => {

@@ -1,0 +1,203 @@
+//! Observability-layer acceptance: histogram quantile accuracy against
+//! an exact sorted reference (property-based), merge == record-all
+//! equivalence, concurrent-recorder stress, and nested-span billing
+//! into the [`CostLedger`].
+
+use knn_merge::metrics::{CostLedger, Histogram, Phase, Registry, Span};
+use knn_merge::util::json::Json;
+use knn_merge::util::proptest::check_property_cases;
+use knn_merge::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+const QS: [f64; 5] = [0.50, 0.90, 0.95, 0.99, 0.999];
+
+/// The exact reference the histogram approximates: rank = ceil(q*n)
+/// clamped to [1, n], 1-indexed into the sorted values.
+fn exact_quantile(sorted: &[u64], q: f64) -> u64 {
+    let n = sorted.len();
+    let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
+/// A latency-shaped sample: mixed magnitudes from sub-tick to seconds,
+/// with occasional zeros and outliers, so every bucket regime
+/// (sub-linear, each octave's sub-buckets) gets exercised.
+fn gen_values(rng: &mut Rng, n: usize) -> Vec<u64> {
+    const SCALES: [u64; 6] = [1, 50, 10_000, 1_000_000, 300_000_000, 40_000_000_000];
+    (0..n)
+        .map(|_| {
+            let scale = SCALES[rng.gen_range(SCALES.len())];
+            rng.next_u64() % (scale.saturating_mul(16).max(1))
+        })
+        .collect()
+}
+
+#[test]
+fn quantiles_track_exact_reference_within_bucket_error() {
+    check_property_cases("hist-quantile-bound", 0xC0FFEE, 40, |rng| {
+        let n = 1 + rng.gen_range(500);
+        let values = gen_values(rng, n);
+        let hist = Histogram::new();
+        for &v in &values {
+            hist.record_ns(v);
+        }
+        let mut sorted = values.clone();
+        sorted.sort_unstable();
+        let snap = hist.snapshot();
+        assert_eq!(snap.count, n as u64);
+        assert_eq!(snap.max_ns, *sorted.last().unwrap());
+        for q in QS {
+            let exact = exact_quantile(&sorted, q);
+            let est = snap.quantile_ns(q);
+            // Log-bucketed guarantee: never below the exact value,
+            // never more than one sub-bucket (1/16th) above it.
+            assert!(
+                est >= exact,
+                "q={q}: est {est} < exact {exact} (n={n})"
+            );
+            assert!(
+                est <= exact + exact / 16 + 1,
+                "q={q}: est {est} > exact {exact} + 1/16 bound (n={n})"
+            );
+        }
+    });
+}
+
+#[test]
+fn merged_snapshot_equals_recording_everything_into_one() {
+    check_property_cases("hist-merge-equiv", 0xBEEF, 25, |rng| {
+        let xs = gen_values(rng, 1 + rng.gen_range(300));
+        let ys = gen_values(rng, 1 + rng.gen_range(300));
+        let (ha, hb, hall) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for &v in &xs {
+            ha.record_ns(v);
+            hall.record_ns(v);
+        }
+        for &v in &ys {
+            hb.record_ns(v);
+            hall.record_ns(v);
+        }
+        // Snapshot-level merge and histogram-level merge_from must both
+        // agree exactly with the record-everything histogram.
+        let merged = ha.snapshot().merge(&hb.snapshot());
+        let all = hall.snapshot();
+        assert_eq!(merged.count, all.count);
+        assert_eq!(merged.max_ns, all.max_ns);
+        for q in QS {
+            assert_eq!(merged.quantile_ns(q), all.quantile_ns(q), "q={q}");
+        }
+        ha.merge_from(&hb);
+        let absorbed = ha.snapshot();
+        assert_eq!(absorbed.count, all.count);
+        assert_eq!(absorbed.max_ns, all.max_ns);
+        for q in QS {
+            assert_eq!(absorbed.quantile_ns(q), all.quantile_ns(q), "q={q}");
+        }
+    });
+}
+
+#[test]
+fn concurrent_recorders_lose_nothing() {
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 10_000;
+    let obs = Arc::new(Registry::new());
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let obs = Arc::clone(&obs);
+            std::thread::spawn(move || {
+                // Resolve through the registry on every thread: the
+                // register-or-get path must hand all of them the same
+                // instrument.
+                let h = obs.histogram("stress.lat_ns");
+                for i in 0..PER_THREAD {
+                    h.record_ns(t * PER_THREAD + i);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = obs.histogram("stress.lat_ns").snapshot();
+    assert_eq!(snap.count, THREADS * PER_THREAD, "dropped records");
+    assert_eq!(snap.max_ns, THREADS * PER_THREAD - 1);
+    // p50 of 0..80000 is ~40000; one sub-bucket of slack.
+    let p50 = snap.quantile_ns(0.5);
+    let exact = THREADS * PER_THREAD / 2;
+    assert!(
+        p50 >= exact && p50 <= exact + exact / 16 + 1,
+        "concurrent p50 {p50} vs exact {exact}"
+    );
+}
+
+#[test]
+fn nested_spans_bill_child_time_to_child_phase_only() {
+    let obs = Registry::new();
+    let ledger = CostLedger::new();
+    let t0 = std::time::Instant::now();
+    {
+        let _outer = Span::enter_billed(&obs, "obs_outer", Phase::Build, &ledger);
+        std::thread::sleep(Duration::from_millis(40));
+        {
+            let _inner = Span::enter_billed(&obs, "obs_inner", Phase::Merge, &ledger);
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    // The inner 10ms lands on Merge; the outer's Build bill is its
+    // *self* time (>= 40ms of sleep), not the 50ms total.
+    assert!(ledger.secs(Phase::Merge) >= 0.009, "merge under-billed");
+    assert!(ledger.secs(Phase::Build) >= 0.039, "build under-billed");
+    assert!(
+        ledger.secs(Phase::Merge) < ledger.secs(Phase::Build),
+        "child time double-billed to parent: merge {} build {}",
+        ledger.secs(Phase::Merge),
+        ledger.secs(Phase::Build)
+    );
+    let snap = obs.snapshot();
+    let outer = &snap.spans["obs_outer"];
+    let inner = &snap.spans["obs_inner"];
+    assert_eq!(outer.count, 1);
+    assert_eq!(inner.count, 1);
+    assert!(inner.self_ns >= 9_000_000);
+    assert!(outer.self_ns >= 39_000_000);
+    // self times partition the wall clock: if the child's 10ms were
+    // double-billed into the parent, the sum would exceed the wall.
+    assert!(
+        outer.self_ns + inner.self_ns <= wall_ns,
+        "outer self {} + inner self {} exceeds wall {wall_ns}",
+        outer.self_ns,
+        inner.self_ns
+    );
+}
+
+#[test]
+fn snapshot_json_roundtrips_histogram_quantiles() {
+    let obs = Registry::new();
+    let h = obs.histogram("rt.lat_ns");
+    for v in [10u64, 100, 1_000, 10_000, 100_000] {
+        h.record_ns(v);
+    }
+    obs.counter("rt.ops").add(5);
+    let text = obs.snapshot().to_json().to_pretty();
+    let parsed = Json::parse(&text).expect("snapshot JSON must parse");
+    let hist = parsed
+        .get("histograms")
+        .and_then(|h| h.get("rt.lat_ns"))
+        .expect("histogram present");
+    assert_eq!(hist.get("count").and_then(Json::as_f64), Some(5.0));
+    for key in ["p50_ns", "p95_ns", "p99_ns", "p999_ns", "max_ns", "mean_ns"] {
+        assert!(
+            hist.get(key).and_then(Json::as_f64).is_some(),
+            "missing {key}"
+        );
+    }
+    assert_eq!(
+        parsed
+            .get("counters")
+            .and_then(|c| c.get("rt.ops"))
+            .and_then(Json::as_f64),
+        Some(5.0)
+    );
+}

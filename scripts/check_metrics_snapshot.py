@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Validate a MetricsSnapshot JSON dump (schema v1) from a stream run.
+
+Used by scripts/verify.sh as the metrics smoke: after a short churn run
+with --metrics-out, the snapshot must carry the full observability
+surface — latency histograms with quantiles, per-phase span totals
+covering seal/compaction/checkpoint, budget gauges, registry counters,
+and a non-empty event journal.
+
+Usage: check_metrics_snapshot.py <metrics.json>
+"""
+
+import json
+import sys
+
+ERRORS = []
+
+
+def err(msg):
+    ERRORS.append(msg)
+
+
+def require(obj, key, kind=None, where="snapshot"):
+    if key not in obj:
+        err(f"{where}: missing key {key!r}")
+        return None
+    v = obj[key]
+    if kind is not None and not isinstance(v, kind):
+        err(f"{where}.{key}: expected {kind}, got {type(v).__name__}")
+        return None
+    return v
+
+
+HIST_KEYS = ["count", "max_ns", "mean_ns", "p50_ns", "p95_ns", "p99_ns", "p999_ns"]
+
+
+def check_histogram(hists, name):
+    h = require(hists, name, dict, "histograms")
+    if h is None:
+        return
+    for key in HIST_KEYS:
+        require(h, key, (int, float), f"histograms.{name}")
+    if h.get("count", 0) <= 0:
+        err(f"histograms.{name}: count must be > 0, got {h.get('count')}")
+    p50, p99 = h.get("p50_ns", 0), h.get("p99_ns", 0)
+    if p50 > p99:
+        err(f"histograms.{name}: p50 {p50} > p99 {p99}")
+    if h.get("max_ns", 0) < p99:
+        err(f"histograms.{name}: max_ns below p99")
+
+
+def check_span(spans, name):
+    s = require(spans, name, dict, "spans")
+    if s is None:
+        return
+    require(s, "phase", str, f"spans.{name}")
+    if s.get("count", 0) <= 0:
+        err(f"spans.{name}: count must be > 0")
+    if s.get("self_ns", -1) < 0:
+        err(f"spans.{name}: self_ns missing or negative")
+
+
+def main():
+    if len(sys.argv) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    path = sys.argv[1]
+    try:
+        with open(path) as f:
+            snap = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"FAIL {path}: unreadable or invalid JSON: {e}", file=sys.stderr)
+        return 1
+
+    if snap.get("version") != 1:
+        err(f"version must be 1, got {snap.get('version')!r}")
+    require(snap, "uptime_s", (int, float))
+
+    counters = require(snap, "counters", dict) or {}
+    if counters.get("stream.inserted", 0) <= 0:
+        err("counters.stream.inserted must be > 0")
+    for key in ["stream.deleted", "stream.sealed", "stream.compactions"]:
+        if key not in counters:
+            err(f"counters: missing {key!r}")
+
+    gauges = require(snap, "gauges", dict) or {}
+    for key in ["budget.faults", "budget.evictions", "budget.resident_bytes"]:
+        if key not in gauges:
+            err(f"gauges: missing {key!r}")
+
+    hists = require(snap, "histograms", dict) or {}
+    for name in ["stream.insert_ns", "stream.search_ns"]:
+        check_histogram(hists, name)
+
+    spans = require(snap, "spans", dict) or {}
+    for name in ["seal_build", "compaction", "checkpoint"]:
+        check_span(spans, name)
+
+    events = require(snap, "events", list) or []
+    if not events:
+        err("events: journal is empty")
+    kinds = {e.get("kind") for e in events if isinstance(e, dict)}
+    for kind in ["seal_published", "compaction", "checkpoint"]:
+        if kind not in kinds:
+            err(f"events: no {kind!r} event (got kinds {sorted(k for k in kinds if k)})")
+
+    if ERRORS:
+        print(f"FAIL {path}: {len(ERRORS)} problem(s)", file=sys.stderr)
+        for e in ERRORS:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    print(f"OK {path}: metrics snapshot v1 complete "
+          f"({len(hists)} histograms, {len(spans)} spans, {len(events)} events)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -256,6 +256,32 @@ if FIXTURE_DIR.is_dir():
         if fx.is_file() and not any(fx.name in t for t in test_texts):
             report(fx, 1, "fixture is not referenced by any rust/tests/*.rs test")
 
+# ------------------------------ 6. Span guards are RAII, never manual
+
+# A `Span::enter` whose guard is not bound to a variable is dropped at
+# the end of the statement — it times nothing. `let _ =` is the same
+# bug spelled differently (`_` drops immediately; `_span` does not),
+# and a manual `Span::exit` API must never grow back: unwinds would
+# skip it and corrupt the nesting stack.
+SPAN_ENTER_RE = re.compile(r"Span\s*::\s*enter(?:_billed)?\b")
+SPAN_BARE_RE = re.compile(r"^\s*(?:crate::metrics::|metrics::)?Span\s*::\s*enter")
+SPAN_WILD_RE = re.compile(r"let\s+_\s*=")
+for f in rust_files:
+    text = stripped_cache.get(f) or strip_rust(f.read_text())
+    for lineno, line in enumerate(text.split("\n"), 1):
+        if re.search(r"Span\s*::\s*exit\b", line):
+            report(f, lineno, "Span::exit: spans are RAII-only, use the guard")
+        if not SPAN_ENTER_RE.search(line):
+            continue
+        if SPAN_BARE_RE.match(line):
+            report(f, lineno,
+                   "Span::enter guard dropped immediately — bind it: "
+                   "`let _span = Span::enter(...)`")
+        elif SPAN_WILD_RE.search(line.split("Span")[0]):
+            report(f, lineno,
+                   "`let _ = Span::enter(...)` drops the guard at once — "
+                   "name it `_span`")
+
 # ------------------------------------------------------------- result
 
 if findings:

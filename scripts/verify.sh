@@ -10,6 +10,7 @@
 #   CHURN_SMOKE_SCALE=0.5 bash scripts/verify.sh # bigger smoke workload
 #   SKIP_RESTORE_SMOKE=1 bash scripts/verify.sh # skip the ~5s durability smoke
 #   RESTORE_SMOKE_SCALE=0.5 bash scripts/verify.sh # bigger restore workload
+#   SKIP_METRICS_SMOKE=1 bash scripts/verify.sh # skip the ~5s metrics smoke
 #
 # `cargo fmt` / `cargo clippy` are skipped automatically when the
 # component is not installed (minimal CI containers); the build + test
@@ -39,6 +40,20 @@ fi
 # bit-rot between full bench runs. Scale up via RESTORE_SMOKE_SCALE.
 if [ "${SKIP_RESTORE_SMOKE:-0}" != "1" ]; then
   KNN_BENCH_SCALE="${RESTORE_SMOKE_SCALE:-0.05}" cargo bench --bench stream_restore
+fi
+
+# Metrics smoke (~5s): a short churn run with --metrics-out must emit a
+# schema-v1 snapshot carrying the whole observability surface — latency
+# histograms with quantiles, seal/compaction/checkpoint span totals,
+# budget gauges, and the event journal. Guards the snapshot schema the
+# way wire_golden guards the checkpoint format.
+if [ "${SKIP_METRICS_SMOKE:-0}" != "1" ]; then
+  mdir=$(mktemp -d)
+  trap 'rm -rf "$mdir"' EXIT
+  target/release/knn-merge stream --family sift --n 3000 --k 8 --lambda 8 \
+    --segment-size 500 --report-every 0 --queries 8 --delete-rate 0.2 \
+    --checkpoint-dir "$mdir/ckpt" --metrics-out "$mdir/metrics.json" >/dev/null
+  python3 scripts/check_metrics_snapshot.py "$mdir/metrics.json"
 fi
 
 # Formatting is a hard gate (STRICT_FMT defaults to on). FMT_FIX=1 (the
