@@ -1,0 +1,108 @@
+//! Distance-kernel + quantized-tier microbench (ISSUE 7 acceptance).
+//!
+//! Rows:
+//! - `kernel_{scalar,simd}_{d32,d128}` — one-to-many L2 throughput of the
+//!   scalar reference vs the runtime-dispatched kernel. The `simd` column
+//!   is 1 when dispatch actually selected AVX2 (0 on machines without it,
+//!   or under `KNN_KERNEL=scalar`); the checker only enforces the >=2x
+//!   speedup when it is 1.
+//! - `sq8_probe` — segment search recall at equal ef with and without the
+//!   SQ8 resident tier, plus the resident-bytes ratio and how many rows
+//!   the exact rerank faulted.
+//!
+//! Writes `results/kernels.json`; validated by `scripts/check_kernels.py`.
+
+use knn_merge::dataset::DatasetFamily;
+use knn_merge::distance::kernels::{kind, one_to_many_l2, one_to_many_l2_scalar, KernelKind};
+use knn_merge::distance::{l2_sq, Metric};
+use knn_merge::eval::bench::{median_secs, scaled, BenchReport, Row};
+use knn_merge::stream::segment::Segment;
+use knn_merge::stream::tombstones::TombstoneSet;
+use knn_merge::util::Rng;
+
+fn kernel_rows(report: &mut BenchReport) {
+    let simd = if kind() == KernelKind::Scalar { 0.0 } else { 1.0 };
+    let rows_n = scaled(4096);
+    let reps = 9;
+    for &dim in &[32usize, 128] {
+        let mut rng = Rng::seeded(11 + dim as u64);
+        let query: Vec<f32> = (0..dim).map(|_| rng.gen_normal()).collect();
+        let block: Vec<f32> = (0..rows_n * dim).map(|_| rng.gen_normal()).collect();
+        let mut out = vec![0.0f32; rows_n];
+        let pairs = rows_n as f64;
+
+        let t = median_secs(reps, || one_to_many_l2_scalar(&query, &block, dim, &mut out));
+        report.push(
+            Row::new(format!("kernel_scalar_d{dim}"))
+                .col("Mpairs/s", pairs / t / 1e6)
+                .col("simd", 0.0),
+        );
+        let t = median_secs(reps, || one_to_many_l2(&query, &block, dim, &mut out));
+        report.push(
+            Row::new(format!("kernel_simd_d{dim}"))
+                .col("Mpairs/s", pairs / t / 1e6)
+                .col("simd", simd),
+        );
+    }
+}
+
+/// Exact top-k of `query` over the dataset by linear scan.
+fn exact_topk(ds: &knn_merge::Dataset, query: &[f32], k: usize) -> Vec<u32> {
+    let mut all: Vec<(f32, u32)> = (0..ds.len())
+        .map(|i| (l2_sq(query, &ds.vector(i)), i as u32))
+        .collect();
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    all.truncate(k);
+    all.into_iter().map(|(_, id)| id).collect()
+}
+
+fn sq8_probe(report: &mut BenchReport) {
+    let n = scaled(1500);
+    let ds = DatasetFamily::Sift.generate(n, 21);
+    let gids: Vec<u32> = (0..n as u32).collect();
+    let mut cfg = knn_merge::config::StreamConfig {
+        merge: knn_merge::merge::MergeParams {
+            k: 10,
+            lambda: 10,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let full = Segment::seal(0, 0, ds.clone(), gids.clone(), Metric::L2, &cfg);
+    cfg.quantized_tier = true;
+    let quant = Segment::seal(0, 0, ds.clone(), gids, Metric::L2, &cfg);
+    let store = quant.quant.as_ref().expect("seal trains the SQ8 tier");
+
+    let (topk, ef) = (10usize, 64usize);
+    let tombs = TombstoneSet::empty();
+    let queries: Vec<usize> = (0..n).step_by((n / 40).max(1)).collect();
+    let (mut hit_full, mut hit_sq8, mut rerank_rows) = (0usize, 0usize, 0usize);
+    let mut total = 0usize;
+    for &q in &queries {
+        let query = ds.vector(q).to_vec();
+        let truth = exact_topk(&ds, &query, topk);
+        let f = full.search(Metric::L2, &query, topk, ef, &tombs);
+        let (s, cost) = quant.search_cost(Metric::L2, &query, topk, ef, &tombs, 32);
+        hit_full += f.iter().filter(|(_, id)| truth.contains(id)).count();
+        hit_sq8 += s.iter().filter(|(_, id)| truth.contains(id)).count();
+        rerank_rows += cost.rerank_rows;
+        total += topk;
+    }
+    // Resident full-precision bytes vs the SQ8 payload that replaces them.
+    let full_bytes = (n * ds.dim * std::mem::size_of::<f32>()) as f64;
+    report.push(
+        Row::new("sq8_probe")
+            .col("recall_full", hit_full as f64 / total as f64)
+            .col("recall_sq8", hit_sq8 as f64 / total as f64)
+            .col("resident_ratio", full_bytes / store.payload_bytes() as f64)
+            .col("rerank_rows_per_query", rerank_rows as f64 / queries.len() as f64),
+    );
+}
+
+fn main() {
+    let mut report = BenchReport::new("kernels");
+    report.note(format!("dispatch: {}", knn_merge::distance::kernel_name()));
+    kernel_rows(&mut report);
+    sq8_probe(&mut report);
+    report.finish();
+}

@@ -145,6 +145,17 @@ pub struct StreamConfig {
     /// geometric schedule — deletes and upserts reclaim space without
     /// waiting for a same-level partner. `0.0` disables the trigger.
     pub compact_dead_fraction: f64,
+    /// Keep an SQ8 resident tier per segment (L2 only): beam search
+    /// runs over the codes, and only the final `topk + rerank_slack`
+    /// candidates fault full-precision rows for exact rerank. A
+    /// runtime knob — derived from segment data at seal/restore, never
+    /// part of persisted graph structure.
+    pub quantized_tier: bool,
+    /// Extra candidates the SQ8 beam fetches beyond `topk` for exact
+    /// rerank (the SQ8 error/rerank-slack contract: quantization can
+    /// misrank within the reconstruction error, so the true top-k is
+    /// recovered from a slightly widened pool).
+    pub rerank_slack: usize,
     /// Compaction / graph parameters (k, lambda, delta, iters, seed).
     pub merge: MergeParams,
     /// Segment-build parameters (NN-Descent above `brute_threshold`).
@@ -163,6 +174,8 @@ impl Default for StreamConfig {
             ef: 64,
             seal_threads: 1,
             compact_dead_fraction: 0.25,
+            quantized_tier: false,
+            rerank_slack: 32,
             merge,
             nnd: NnDescentParams::default(),
         }
@@ -205,6 +218,16 @@ impl StreamConfig {
             }
             self.compact_dead_fraction = v;
         }
+        if let Some(v) = map.get("stream.quantized_tier") {
+            self.quantized_tier = match v.to_ascii_lowercase().as_str() {
+                "true" | "1" | "on" | "yes" => true,
+                "false" | "0" | "off" | "no" => false,
+                _ => bail!("stream.quantized_tier must be a boolean, got '{v}'"),
+            };
+        }
+        if let Some(v) = map.get_usize("stream.rerank_slack")? {
+            self.rerank_slack = v;
+        }
         Ok(())
     }
 
@@ -213,7 +236,9 @@ impl StreamConfig {
     /// refuses a mismatch, since segments built under different k /
     /// lambda / seeds would silently mix incompatible graphs). Runtime
     /// knobs that do not affect stored structure — `ef`,
-    /// `seal_threads`, `compact_dead_fraction` — are deliberately
+    /// `seal_threads`, `compact_dead_fraction`, `quantized_tier`,
+    /// `rerank_slack` (the SQ8 tier is *derived* from segment data, so
+    /// a restored log may toggle it freely) — are deliberately
     /// excluded, so a restored log may retune them freely.
     pub fn fingerprint(&self) -> u64 {
         // FNV-1a 64 over the field values in a fixed order.
@@ -517,6 +542,8 @@ seal_threads = 3
         tunable.ef = 999;
         tunable.seal_threads = 7;
         tunable.compact_dead_fraction = 0.9;
+        tunable.quantized_tier = true;
+        tunable.rerank_slack = 128;
         assert_eq!(tunable.fingerprint(), base.fingerprint());
     }
 

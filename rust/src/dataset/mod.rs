@@ -20,9 +20,11 @@
 pub mod generator;
 pub mod io;
 pub mod lid;
+pub mod quant;
 pub mod store;
 
 pub use generator::{DatasetFamily, GeneratorConfig};
+pub use quant::SQ8Store;
 pub use store::{FaultDelta, MemoryBudget, PageOpts, PagedFormat, RowRef, VectorStore};
 
 use std::sync::Arc;

@@ -1,0 +1,293 @@
+//! SQ8 scalar quantization — the compressed resident tier.
+//!
+//! [`SQ8Store`] holds one u8 code per dimension per row under a
+//! per-dimension affine: dimension `d` of row `r` decodes to
+//! `mins[d] + code * scales[d]`, with `scales[d] = (max_d - min_d) /
+//! 255` trained over the segment's rows at seal time. That is a 4×
+//! byte reduction against f32 with a hard per-dimension reconstruction
+//! error bound of `scales[d] / 2` (nearest-code rounding), which is
+//! what makes "search SQ8, exact-rerank the survivors" sound: the beam
+//! over codes ranks candidates slightly wrong, and the rerank over
+//! `topk + slack` full-precision rows repairs exactly that.
+//!
+//! Searches never decode a row to memory — the asymmetric kernel
+//! ([`crate::distance::kernels::one_to_many_l2_sq8`]) widens codes
+//! in-register. When a store is attached to a [`MemoryBudget`] (paged
+//! restores), its bytes are charged as *pinned* residency: the budget
+//! sweeps evictable full-precision chunks to make room, and the charge
+//! is released when the store drops.
+
+use crate::dataset::{Dataset, MemoryBudget};
+use crate::util::crc32;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// Serialized header magic for `.sq8` spills.
+const MAGIC: &[u8; 4] = b"KSQ8";
+const VERSION: u32 = 1;
+
+/// Per-dimension min/max scalar-quantized codes for one segment's rows.
+#[derive(Debug)]
+pub struct SQ8Store {
+    dim: usize,
+    len: usize,
+    mins: Vec<f32>,
+    scales: Vec<f32>,
+    codes: Vec<u8>,
+    budget: Option<Arc<MemoryBudget>>,
+}
+
+impl SQ8Store {
+    /// Train the per-dimension affine over `ds` and encode every row.
+    pub fn train(ds: &Dataset) -> SQ8Store {
+        let dim = ds.dim;
+        let len = ds.len();
+        let mut mins = vec![f32::INFINITY; dim];
+        let mut maxs = vec![f32::NEG_INFINITY; dim];
+        for i in 0..len {
+            let row = ds.vector(i);
+            for d in 0..dim {
+                mins[d] = mins[d].min(row[d]);
+                maxs[d] = maxs[d].max(row[d]);
+            }
+        }
+        if len == 0 {
+            mins.fill(0.0);
+            maxs.fill(0.0);
+        }
+        let scales: Vec<f32> = (0..dim).map(|d| (maxs[d] - mins[d]) / 255.0).collect();
+        let mut codes = Vec::with_capacity(len * dim);
+        for i in 0..len {
+            let row = ds.vector(i);
+            for d in 0..dim {
+                codes.push(encode_one(row[d], mins[d], scales[d]));
+            }
+        }
+        SQ8Store {
+            dim,
+            len,
+            mins,
+            scales,
+            codes,
+            budget: None,
+        }
+    }
+
+    /// Attach a residency budget: the store's bytes are charged as
+    /// pinned residency (sweeping evictable members first) and released
+    /// on drop.
+    pub fn with_budget(mut self, budget: Arc<MemoryBudget>) -> SQ8Store {
+        budget.charge_resident(self.payload_bytes());
+        self.budget = Some(budget);
+        self
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Per-dimension decode offsets.
+    pub fn mins(&self) -> &[f32] {
+        &self.mins
+    }
+
+    /// Per-dimension decode scales (also the reconstruction error
+    /// bound: `|decode(encode(x)) - x| <= scales[d] / 2` for in-range
+    /// `x`).
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// The u8 code row for vector `i`.
+    pub fn codes_row(&self, i: usize) -> &[u8] {
+        &self.codes[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// All code rows, contiguous `len * dim` (kernel-shaped).
+    pub fn codes(&self) -> &[u8] {
+        &self.codes
+    }
+
+    /// Bytes this store keeps resident (codes + affine parameters).
+    pub fn payload_bytes(&self) -> u64 {
+        (self.codes.len() + 8 * self.dim) as u64
+    }
+
+    /// Decode row `i` to f32 (tests and diagnostics; searches use the
+    /// asymmetric kernel and never materialize this).
+    pub fn decode_row(&self, i: usize) -> Vec<f32> {
+        self.codes_row(i)
+            .iter()
+            .enumerate()
+            .map(|(d, &c)| (c as f32).mul_add(self.scales[d], self.mins[d]))
+            .collect()
+    }
+
+    /// Serialize for the `.sq8` checkpoint spill (self-validating:
+    /// magic + version + CRC over the payload).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(24 + 8 * self.dim + self.codes.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.dim as u32).to_le_bytes());
+        out.extend_from_slice(&(self.len as u64).to_le_bytes());
+        for v in &self.mins {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &self.scales {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&self.codes);
+        let crc = crc32(&out[4..]);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Inverse of [`Self::to_bytes`]; rejects bad magic, version, size,
+    /// or CRC.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SQ8Store> {
+        if bytes.len() < 24 || &bytes[..4] != MAGIC {
+            bail!("sq8: bad magic or truncated header");
+        }
+        let crc_stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        let crc_actual = crc32(&bytes[4..bytes.len() - 4]);
+        if crc_stored != crc_actual {
+            bail!("sq8: crc mismatch (stored {crc_stored:#x}, actual {crc_actual:#x})");
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != VERSION {
+            bail!("sq8: unsupported version {version}");
+        }
+        let dim = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let len = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        let expect = 24 + 8 * dim + len * dim;
+        if bytes.len() != expect {
+            bail!("sq8: size mismatch (expect {expect} bytes, got {})", bytes.len());
+        }
+        let mut off = 20;
+        let mut read_f32s = |n: usize, off: &mut usize| -> Vec<f32> {
+            let v = bytes[*off..*off + 4 * n]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            *off += 4 * n;
+            v
+        };
+        let mins = read_f32s(dim, &mut off);
+        let scales = read_f32s(dim, &mut off);
+        let codes = bytes[off..off + len * dim].to_vec();
+        Ok(SQ8Store {
+            dim,
+            len,
+            mins,
+            scales,
+            codes,
+            budget: None,
+        })
+    }
+}
+
+impl Drop for SQ8Store {
+    fn drop(&mut self) {
+        if let Some(b) = &self.budget {
+            b.release_resident(self.payload_bytes());
+        }
+    }
+}
+
+#[inline]
+fn encode_one(x: f32, min: f32, scale: f32) -> u8 {
+    if scale > 0.0 {
+        ((x - min) / scale).round().clamp(0.0, 255.0) as u8
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_property;
+
+    fn rand_ds(rng: &mut crate::util::Rng, n: usize, d: usize) -> Dataset {
+        let data = (0..n * d).map(|_| rng.gen_normal() * 3.0).collect();
+        Dataset::from_raw(data, d)
+    }
+
+    #[test]
+    fn round_trip_error_within_half_scale() {
+        check_property("sq8-round-trip", 220, |rng| {
+            let d = 1 + rng.gen_range(48);
+            let n = 1 + rng.gen_range(64);
+            let ds = rand_ds(rng, n, d);
+            let q = SQ8Store::train(&ds);
+            for i in 0..n {
+                let dec = q.decode_row(i);
+                let orig = ds.vector(i);
+                for dd in 0..d {
+                    let bound = q.scales()[dd] * 0.5 + 1e-5;
+                    assert!(
+                        (dec[dd] - orig[dd]).abs() <= bound,
+                        "row {i} dim {dd}: |{} - {}| > {bound}",
+                        dec[dd],
+                        orig[dd]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn constant_dimension_is_exact() {
+        // max == min => scale 0 => every code decodes to the constant.
+        let ds = Dataset::from_raw(vec![2.5, 7.0, 2.5, 7.0, 2.5, 7.0], 2);
+        let q = SQ8Store::train(&ds);
+        assert_eq!(q.scales(), &[0.0, 0.0]);
+        for i in 0..3 {
+            assert_eq!(q.decode_row(i), vec![2.5, 7.0]);
+        }
+    }
+
+    #[test]
+    fn bytes_round_trip_and_reject_corruption() {
+        let mut rng = crate::util::Rng::seeded(77);
+        let ds = rand_ds(&mut rng, 20, 9);
+        let q = SQ8Store::train(&ds);
+        let bytes = q.to_bytes();
+        let back = SQ8Store::from_bytes(&bytes).unwrap();
+        assert_eq!(back.dim(), q.dim());
+        assert_eq!(back.len(), q.len());
+        assert_eq!(back.mins(), q.mins());
+        assert_eq!(back.scales(), q.scales());
+        for i in 0..q.len() {
+            assert_eq!(back.codes_row(i), q.codes_row(i));
+        }
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0xFF;
+        assert!(SQ8Store::from_bytes(&bad).is_err(), "flipped byte must fail crc");
+        assert!(SQ8Store::from_bytes(&bytes[..10]).is_err(), "truncation must fail");
+    }
+
+    #[test]
+    fn budget_charge_and_release() {
+        let mut rng = crate::util::Rng::seeded(78);
+        let ds = rand_ds(&mut rng, 32, 16);
+        let budget = MemoryBudget::unbounded();
+        let q = SQ8Store::train(&ds).with_budget(budget.clone());
+        let expect = q.payload_bytes();
+        assert_eq!(budget.resident_bytes(), expect);
+        // A quarter of the f32 payload, plus the small affine tables.
+        assert!(expect < ds.payload_bytes() / 4 + (8 * 16) as u64 + 1);
+        drop(q);
+        assert_eq!(budget.resident_bytes(), 0);
+    }
+}

@@ -224,6 +224,22 @@ impl MemoryBudget {
         }
     }
 
+    /// Charge `bytes` of always-resident payload (e.g. a segment's SQ8
+    /// code block) against the budget. Evictable members are swept
+    /// first to make room, so pinned tiers displace cold full-precision
+    /// chunks; the charge itself is unconditional — a pinned tier is
+    /// part of the working set the budget must carry.
+    pub fn charge_resident(&self, bytes: u64) {
+        self.make_room(bytes);
+        let now = self.resident.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak_resident.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Release a prior [`Self::charge_resident`] (tier dropped).
+    pub fn release_resident(&self, bytes: u64) {
+        self.resident.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
     fn register(&self, cache: Weak<dyn Evictable>) {
         let mut m = self.members.lock().unwrap();
         m.caches.retain(|w| w.strong_count() > 0);

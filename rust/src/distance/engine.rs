@@ -82,7 +82,9 @@ pub trait DistanceEngine: Send + Sync {
     }
 }
 
-/// Pure-Rust engine: per-pair unrolled loops. For the small, ragged
+/// Pure-Rust engine, routed through the runtime-dispatched tiled
+/// kernel ([`super::kernels::cross_l2`]): AVX2/FMA where the CPU has
+/// it, the unrolled scalar loop elsewhere. For the small, ragged
 /// blocks Local-Join mostly produces this beats any dispatch-based path.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ScalarEngine;
@@ -104,15 +106,22 @@ impl DistanceEngine for ScalarEngine {
         debug_assert_eq!(xs.len(), nx * dim);
         debug_assert_eq!(ys.len(), ny * dim);
         debug_assert_eq!(out.len(), nx * ny);
-        for i in 0..nx {
-            let x = &xs[i * dim..(i + 1) * dim];
-            let row = &mut out[i * ny..(i + 1) * ny];
-            for (j, o) in row.iter_mut().enumerate() {
-                *o = l2_sq(x, &ys[j * dim..(j + 1) * dim]);
-            }
-        }
+        super::kernels::cross_l2(xs, ys, dim, nx, ny, out);
     }
 }
+
+/// Reusable norm buffers for [`NormExpandEngine`]. Local-Join calls
+/// `cross_l2` once per candidate block; without caller-provided
+/// scratch every call re-allocated both norm vectors.
+#[derive(Clone, Debug, Default)]
+pub struct NormScratch {
+    xn: Vec<f32>,
+    yn: Vec<f32>,
+}
+
+/// Y-tile width of the norm-expansion inner loop: one tile of `ys`
+/// (and its norms) stays hot while every `xs` row streams over it.
+const NORM_TILE_Y: usize = 32;
 
 /// Norm-expansion engine: computes `||x||^2 + ||y||^2 - 2 x.y` with a
 /// blocked matmul-style inner loop — the same formulation the Pallas
@@ -120,6 +129,51 @@ impl DistanceEngine for ScalarEngine {
 /// (b) the faster choice for large dense blocks.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NormExpandEngine;
+
+impl NormExpandEngine {
+    /// [`DistanceEngine::cross_l2`] with caller-provided scratch: the
+    /// norm vectors live in `scratch` (cleared, not re-allocated, per
+    /// call) and the inner loop is tiled over `ys` so each y-tile and
+    /// its norms are reused across every `xs` row.
+    pub fn cross_l2_with(
+        &self,
+        xs: &[f32],
+        ys: &[f32],
+        dim: usize,
+        nx: usize,
+        ny: usize,
+        out: &mut [f32],
+        scratch: &mut NormScratch,
+    ) {
+        debug_assert_eq!(xs.len(), nx * dim);
+        debug_assert_eq!(ys.len(), ny * dim);
+        debug_assert_eq!(out.len(), nx * ny);
+        scratch.xn.clear();
+        scratch.yn.clear();
+        scratch
+            .xn
+            .extend((0..nx).map(|i| super::dot(&xs[i * dim..(i + 1) * dim], &xs[i * dim..(i + 1) * dim])));
+        scratch
+            .yn
+            .extend((0..ny).map(|j| super::dot(&ys[j * dim..(j + 1) * dim], &ys[j * dim..(j + 1) * dim])));
+        let mut j0 = 0;
+        while j0 < ny {
+            let t = NORM_TILE_Y.min(ny - j0);
+            for i in 0..nx {
+                let x = &xs[i * dim..(i + 1) * dim];
+                let row = &mut out[i * ny + j0..i * ny + j0 + t];
+                for (jt, o) in row.iter_mut().enumerate() {
+                    let j = j0 + jt;
+                    let d = scratch.xn[i] + scratch.yn[j]
+                        - 2.0 * super::dot(x, &ys[j * dim..(j + 1) * dim]);
+                    // Clamp tiny negatives from cancellation.
+                    *o = d.max(0.0);
+                }
+            }
+            j0 += t;
+        }
+    }
+}
 
 impl DistanceEngine for NormExpandEngine {
     fn name(&self) -> &'static str {
@@ -135,19 +189,36 @@ impl DistanceEngine for NormExpandEngine {
         ny: usize,
         out: &mut [f32],
     ) {
-        debug_assert_eq!(xs.len(), nx * dim);
-        debug_assert_eq!(ys.len(), ny * dim);
-        debug_assert_eq!(out.len(), nx * ny);
-        let xn: Vec<f32> = (0..nx).map(|i| super::dot(&xs[i * dim..(i + 1) * dim], &xs[i * dim..(i + 1) * dim])).collect();
-        let yn: Vec<f32> = (0..ny).map(|j| super::dot(&ys[j * dim..(j + 1) * dim], &ys[j * dim..(j + 1) * dim])).collect();
-        for i in 0..nx {
-            let x = &xs[i * dim..(i + 1) * dim];
-            let row = &mut out[i * ny..(i + 1) * ny];
-            for (j, o) in row.iter_mut().enumerate() {
-                let d = xn[i] + yn[j] - 2.0 * super::dot(x, &ys[j * dim..(j + 1) * dim]);
-                // Clamp tiny negatives from cancellation.
-                *o = d.max(0.0);
-            }
+        let mut scratch = NormScratch::default();
+        self.cross_l2_with(xs, ys, dim, nx, ny, out, &mut scratch);
+    }
+
+    fn batch_cross_l2(
+        &self,
+        xs: &[f32],
+        ys: &[f32],
+        dim: usize,
+        b: usize,
+        nx: usize,
+        ny: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(xs.len(), b * nx * dim);
+        debug_assert_eq!(ys.len(), b * ny * dim);
+        debug_assert_eq!(out.len(), b * nx * ny);
+        // One scratch for the whole batch — the per-call allocation the
+        // default per-block loop would pay b times.
+        let mut scratch = NormScratch::default();
+        for t in 0..b {
+            self.cross_l2_with(
+                &xs[t * nx * dim..(t + 1) * nx * dim],
+                &ys[t * ny * dim..(t + 1) * ny * dim],
+                dim,
+                nx,
+                ny,
+                &mut out[t * nx * ny..(t + 1) * nx * ny],
+                &mut scratch,
+            );
         }
     }
 }
@@ -173,8 +244,36 @@ mod tests {
             for i in 0..nx {
                 for j in 0..ny {
                     let expect = l2_sq(&xs[i * d..(i + 1) * d], &ys[j * d..(j + 1) * d]);
-                    assert_eq!(out[i * ny + j], expect);
+                    let got = out[i * ny + j];
+                    // The engine dispatches to the SIMD kernel when the
+                    // CPU has AVX2; summation order differs from l2_sq,
+                    // so equality is relative, not bitwise.
+                    assert!(
+                        (got - expect).abs() <= 1e-5 * expect.abs().max(1.0),
+                        "({i},{j}): engine={got} l2_sq={expect}"
+                    );
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn norm_scratch_reuse_matches_fresh() {
+        check_property("norm-scratch", 203, |rng| {
+            let d = 1 + rng.gen_range(48);
+            let mut scratch = NormScratch::default();
+            // Two blocks of different shapes through the same scratch:
+            // stale norms from the first call must not leak into the
+            // second.
+            for _ in 0..2 {
+                let nx = 1 + rng.gen_range(40);
+                let ny = 1 + rng.gen_range(40);
+                let xs = rand_block(rng, nx, d);
+                let ys = rand_block(rng, ny, d);
+                let mut reused = vec![0.0; nx * ny];
+                NormExpandEngine.cross_l2_with(&xs, &ys, d, nx, ny, &mut reused, &mut scratch);
+                let fresh = NormExpandEngine.cross_l2_alloc(&xs, &ys, d, nx, ny);
+                assert_eq!(reused, fresh);
             }
         });
     }

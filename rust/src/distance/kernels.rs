@@ -1,0 +1,427 @@
+//! Runtime-dispatched SIMD distance kernels.
+//!
+//! The crate's hot paths evaluate *one query against a contiguous block
+//! of rows* (beam-search neighbor expansion, Local-Join candidate
+//! blocks, SQ8 rerank candidates). [`one_to_many_l2`] is that
+//! primitive; [`cross_l2`] tiles it into a full `nx x ny` block, and
+//! [`one_to_many_l2_sq8`] is the asymmetric u8-code variant the
+//! quantized resident tier searches over.
+//!
+//! # Dispatch
+//!
+//! The implementation is picked **once per process** (first call) via
+//! `is_x86_feature_detected!`: AVX2+FMA when the CPU has both, the
+//! portable scalar path otherwise — so a binary compiled for the
+//! x86-64 baseline still uses 256-bit kernels on capable machines, and
+//! non-x86 targets compile the scalar path only. `KNN_KERNEL=scalar`
+//! in the environment forces the fallback (used by the equivalence
+//! tests and the microbench's scalar reference rows).
+//!
+//! The scalar and SIMD paths accumulate in different orders, so they
+//! agree to ~1e-6 relative, not bitwise; every consumer of these
+//! kernels treats distances as approximate ranks (ties broken by id),
+//! and the proptests in `rust/tests/kernel_quant.rs` pin the paths
+//! together within 1e-5 relative tolerance.
+
+use super::l2_sq;
+use std::sync::OnceLock;
+
+/// Which kernel implementation this process dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable Rust (8-wide unrolled `l2_sq` loops). Always available.
+    Scalar,
+    /// 256-bit AVX2 + FMA intrinsics (x86-64 with runtime detection).
+    Avx2,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+        }
+    }
+}
+
+static KIND: OnceLock<KernelKind> = OnceLock::new();
+
+/// The kernel implementation selected for this process (detected once,
+/// then cached). `KNN_KERNEL=scalar` forces the fallback.
+pub fn kind() -> KernelKind {
+    *KIND.get_or_init(detect)
+}
+
+/// Name of the dispatched kernel path (`"scalar"` or `"avx2"`), for
+/// logs and bench rows.
+pub fn kernel_name() -> &'static str {
+    kind().name()
+}
+
+fn detect() -> KernelKind {
+    if std::env::var("KNN_KERNEL").as_deref() == Ok("scalar") {
+        return KernelKind::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return KernelKind::Avx2;
+        }
+    }
+    KernelKind::Scalar
+}
+
+/// Y-tile rows of [`cross_l2`]: one tile of `ys` stays hot in L1/L2
+/// while every `xs` row streams over it (32 rows x 128 dims x 4 B =
+/// 16 KiB, half a typical L1d).
+const CROSS_TILE_Y: usize = 32;
+
+/// Squared L2 of `query` against each of the `out.len()` contiguous
+/// `dim`-wide rows in `rows`, written to `out` in row order.
+#[inline]
+pub fn one_to_many_l2(query: &[f32], rows: &[f32], dim: usize, out: &mut [f32]) {
+    debug_assert_eq!(query.len(), dim);
+    debug_assert_eq!(rows.len(), out.len() * dim);
+    if out.is_empty() {
+        return;
+    }
+    match kind() {
+        KernelKind::Scalar => one_to_many_l2_scalar(query, rows, dim, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `kind()` returned Avx2 only after
+        // `is_x86_feature_detected!` confirmed AVX2 and FMA on this CPU.
+        KernelKind::Avx2 => unsafe { avx2::one_to_many_l2(query, rows, dim, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelKind::Avx2 => unreachable!("avx2 kernels are x86_64-only"),
+    }
+}
+
+/// Portable reference implementation of [`one_to_many_l2`] (also the
+/// dispatch target on machines without AVX2). Public so benches and
+/// equivalence tests can pin the SIMD path against it explicitly.
+#[inline]
+pub fn one_to_many_l2_scalar(query: &[f32], rows: &[f32], dim: usize, out: &mut [f32]) {
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = l2_sq(query, &rows[r * dim..(r + 1) * dim]);
+    }
+}
+
+/// Full `nx x ny` squared-L2 cross block between row-major `xs` and
+/// `ys`, written row-major into `out`. Tiled over `ys` so each y-tile
+/// is reused across every x row ([`CROSS_TILE_Y`]); each (row, tile)
+/// pair runs through [`one_to_many_l2`].
+pub fn cross_l2(xs: &[f32], ys: &[f32], dim: usize, nx: usize, ny: usize, out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), nx * dim);
+    debug_assert_eq!(ys.len(), ny * dim);
+    debug_assert_eq!(out.len(), nx * ny);
+    let mut j0 = 0;
+    while j0 < ny {
+        let t = CROSS_TILE_Y.min(ny - j0);
+        let tile = &ys[j0 * dim..(j0 + t) * dim];
+        for i in 0..nx {
+            let x = &xs[i * dim..(i + 1) * dim];
+            one_to_many_l2(x, tile, dim, &mut out[i * ny + j0..i * ny + j0 + t]);
+        }
+        j0 += t;
+    }
+}
+
+/// Asymmetric squared L2 of an f32 `query` against `out.len()`
+/// contiguous SQ8 rows: code `c` of dimension `d` decodes to
+/// `mins[d] + c * scales[d]` (see `dataset::quant::SQ8Store`), and the
+/// distance is computed against the decoded value without ever
+/// materializing the f32 row.
+#[inline]
+pub fn one_to_many_l2_sq8(
+    query: &[f32],
+    codes: &[u8],
+    mins: &[f32],
+    scales: &[f32],
+    dim: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(query.len(), dim);
+    debug_assert_eq!(mins.len(), dim);
+    debug_assert_eq!(scales.len(), dim);
+    debug_assert_eq!(codes.len(), out.len() * dim);
+    if out.is_empty() {
+        return;
+    }
+    match kind() {
+        KernelKind::Scalar => one_to_many_l2_sq8_scalar(query, codes, mins, scales, dim, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `kind()` returned Avx2 only after
+        // `is_x86_feature_detected!` confirmed AVX2 and FMA on this CPU.
+        KernelKind::Avx2 => unsafe {
+            avx2::one_to_many_l2_sq8(query, codes, mins, scales, dim, out)
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelKind::Avx2 => unreachable!("avx2 kernels are x86_64-only"),
+    }
+}
+
+/// Portable reference implementation of [`one_to_many_l2_sq8`].
+#[inline]
+pub fn one_to_many_l2_sq8_scalar(
+    query: &[f32],
+    codes: &[u8],
+    mins: &[f32],
+    scales: &[f32],
+    dim: usize,
+    out: &mut [f32],
+) {
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &codes[r * dim..(r + 1) * dim];
+        let mut acc = [0.0f32; 4];
+        let mut d = 0;
+        while d + 4 <= dim {
+            for j in 0..4 {
+                let dec = (row[d + j] as f32).mul_add(scales[d + j], mins[d + j]);
+                let diff = query[d + j] - dec;
+                acc[j] = diff.mul_add(diff, acc[j]);
+            }
+            d += 4;
+        }
+        let mut sum = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+        while d < dim {
+            let dec = (row[d] as f32).mul_add(scales[d], mins[d]);
+            let diff = query[d] - dec;
+            sum = diff.mul_add(diff, sum);
+            d += 1;
+        }
+        *o = sum;
+    }
+}
+
+/// AVX2 + FMA kernel bodies. Compiled on x86-64 only; every function
+/// is `#[target_feature]`-gated and must only be reached through the
+/// feature-detected dispatch in this module's public entry points.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::{
+        __m128i, __m256, _mm256_add_ps, _mm256_castps256_ps128, _mm256_cvtepi32_ps,
+        _mm256_cvtepu8_epi32, _mm256_extractf128_ps, _mm256_fmadd_ps, _mm256_loadu_ps,
+        _mm256_setzero_ps, _mm256_sub_ps, _mm_add_ps, _mm_add_ss, _mm_cvtss_f32,
+        _mm_loadl_epi64, _mm_movehdup_ps, _mm_movehl_ps,
+    };
+
+    /// Horizontal sum of the 8 lanes of `v`.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available (enforced by the
+    /// feature-detected dispatch in the parent module).
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        // SAFETY: pure register arithmetic, no memory access; AVX2 is
+        // guaranteed by this function's target_feature contract.
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let shuf = _mm_movehdup_ps(s);
+        let sums = _mm_add_ps(s, shuf);
+        let hi2 = _mm_movehl_ps(shuf, sums);
+        _mm_cvtss_f32(_mm_add_ss(sums, hi2))
+    }
+
+    /// AVX2 body of [`super::one_to_many_l2`].
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 and FMA are available; slice lengths
+    /// must satisfy `query.len() == dim` and
+    /// `rows.len() == out.len() * dim` (debug-asserted by the caller).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn one_to_many_l2(query: &[f32], rows: &[f32], dim: usize, out: &mut [f32]) {
+        let q = query.as_ptr();
+        for (r, o) in out.iter_mut().enumerate() {
+            // SAFETY: r < out.len() and rows holds out.len() * dim
+            // floats, so the row pointer and every in-row offset below
+            // stay inside `rows`; the `d + 16 <= dim` / `d + 8 <= dim`
+            // guards keep each 8-lane load of q and row in bounds.
+            let row = rows.as_ptr().add(r * dim);
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut d = 0usize;
+            while d + 16 <= dim {
+                let da = _mm256_sub_ps(_mm256_loadu_ps(q.add(d)), _mm256_loadu_ps(row.add(d)));
+                acc0 = _mm256_fmadd_ps(da, da, acc0);
+                let db = _mm256_sub_ps(
+                    _mm256_loadu_ps(q.add(d + 8)),
+                    _mm256_loadu_ps(row.add(d + 8)),
+                );
+                acc1 = _mm256_fmadd_ps(db, db, acc1);
+                d += 16;
+            }
+            while d + 8 <= dim {
+                let da = _mm256_sub_ps(_mm256_loadu_ps(q.add(d)), _mm256_loadu_ps(row.add(d)));
+                acc0 = _mm256_fmadd_ps(da, da, acc0);
+                d += 8;
+            }
+            let mut sum = hsum256(_mm256_add_ps(acc0, acc1));
+            while d < dim {
+                // SAFETY: d < dim, inside both the query and the row.
+                let diff = *q.add(d) - *row.add(d);
+                sum = diff.mul_add(diff, sum);
+                d += 1;
+            }
+            *o = sum;
+        }
+    }
+
+    /// AVX2 body of [`super::one_to_many_l2_sq8`]: u8 codes widen to
+    /// f32 in-register (`cvtepu8_epi32` + `cvtepi32_ps`), decode via
+    /// one FMA against the per-dimension affine, then the usual
+    /// sub/FMA accumulation — no decoded row is ever written to
+    /// memory.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 and FMA are available; slice lengths
+    /// must satisfy `query.len() == mins.len() == scales.len() == dim`
+    /// and `codes.len() == out.len() * dim`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn one_to_many_l2_sq8(
+        query: &[f32],
+        codes: &[u8],
+        mins: &[f32],
+        scales: &[f32],
+        dim: usize,
+        out: &mut [f32],
+    ) {
+        let q = query.as_ptr();
+        let mn = mins.as_ptr();
+        let sc = scales.as_ptr();
+        for (r, o) in out.iter_mut().enumerate() {
+            // SAFETY: r < out.len() and codes holds out.len() * dim
+            // bytes; the `d + 8 <= dim` guard keeps the 8-byte code
+            // load and every 8-lane f32 load below in bounds.
+            let row = codes.as_ptr().add(r * dim);
+            let mut acc = _mm256_setzero_ps();
+            let mut d = 0usize;
+            while d + 8 <= dim {
+                let c8 = _mm_loadl_epi64(row.add(d) as *const __m128i);
+                let cf = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(c8));
+                let dec = _mm256_fmadd_ps(cf, _mm256_loadu_ps(sc.add(d)), _mm256_loadu_ps(mn.add(d)));
+                let diff = _mm256_sub_ps(_mm256_loadu_ps(q.add(d)), dec);
+                acc = _mm256_fmadd_ps(diff, diff, acc);
+                d += 8;
+            }
+            let mut sum = hsum256(acc);
+            while d < dim {
+                // SAFETY: d < dim, inside the codes row and the f32
+                // parameter slices.
+                let dec = (*row.add(d) as f32).mul_add(*sc.add(d), *mn.add(d));
+                let diff = *q.add(d) - dec;
+                sum = diff.mul_add(diff, sum);
+                d += 1;
+            }
+            *o = sum;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_property;
+
+    fn rand_block(rng: &mut crate::util::Rng, n: usize, d: usize) -> Vec<f32> {
+        (0..n * d).map(|_| rng.gen_normal()).collect()
+    }
+
+    #[test]
+    fn dispatch_is_stable_and_named() {
+        let k = kind();
+        assert_eq!(k, kind(), "kind() must cache its first answer");
+        assert!(matches!(kernel_name(), "scalar" | "avx2"));
+    }
+
+    #[test]
+    fn one_to_many_matches_per_pair_l2() {
+        check_property("one-to-many-l2", 210, |rng| {
+            // Odd dims on purpose: 1, 3, 7 and non-multiples of the
+            // 8/16 lane widths exercise every tail path.
+            let dims = [1usize, 3, 7, 8, 15, 16, 17, 31, 64, 100, 128];
+            let d = dims[rng.gen_range(dims.len())];
+            let n = rng.gen_range(9); // includes 0 (empty block)
+            let q = rand_block(rng, 1, d);
+            let rows = rand_block(rng, n, d);
+            let mut out = vec![f32::NAN; n];
+            one_to_many_l2(&q, &rows, d, &mut out);
+            for r in 0..n {
+                let expect = l2_sq(&q, &rows[r * d..(r + 1) * d]);
+                assert!(
+                    (out[r] - expect).abs() <= 1e-5 * expect.abs().max(1.0),
+                    "d={d} r={r}: kernel={} l2_sq={expect}",
+                    out[r]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn scalar_path_is_exactly_per_pair_l2() {
+        check_property("one-to-many-scalar", 211, |rng| {
+            let d = 1 + rng.gen_range(96);
+            let n = 1 + rng.gen_range(6);
+            let q = rand_block(rng, 1, d);
+            let rows = rand_block(rng, n, d);
+            let mut out = vec![0.0; n];
+            one_to_many_l2_scalar(&q, &rows, d, &mut out);
+            for r in 0..n {
+                assert_eq!(out[r], l2_sq(&q, &rows[r * d..(r + 1) * d]));
+            }
+        });
+    }
+
+    #[test]
+    fn cross_matches_one_to_many_rows() {
+        check_property("cross-l2-tiled", 212, |rng| {
+            let d = 1 + rng.gen_range(80);
+            let nx = 1 + rng.gen_range(7);
+            // Straddle the y tile boundary so the tiling itself is hit.
+            let ny = 1 + rng.gen_range(2 * CROSS_TILE_Y);
+            let xs = rand_block(rng, nx, d);
+            let ys = rand_block(rng, ny, d);
+            let mut out = vec![f32::NAN; nx * ny];
+            cross_l2(&xs, &ys, d, nx, ny, &mut out);
+            for i in 0..nx {
+                let mut row = vec![0.0; ny];
+                one_to_many_l2(&xs[i * d..(i + 1) * d], &ys, d, &mut row);
+                for j in 0..ny {
+                    let got = out[i * ny + j];
+                    assert!(
+                        (got - row[j]).abs() <= 1e-5 * row[j].abs().max(1.0),
+                        "({i},{j}): tiled={got} flat={}",
+                        row[j]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn sq8_kernel_matches_scalar_reference() {
+        check_property("sq8-kernel", 213, |rng| {
+            let dims = [1usize, 3, 7, 8, 13, 16, 33, 64, 128];
+            let d = dims[rng.gen_range(dims.len())];
+            let n = rng.gen_range(7);
+            let q = rand_block(rng, 1, d);
+            let codes: Vec<u8> = (0..n * d).map(|_| rng.gen_range(256) as u8).collect();
+            let mins: Vec<f32> = (0..d).map(|_| rng.gen_normal()).collect();
+            let scales: Vec<f32> = (0..d).map(|_| rng.gen_f32() * 0.02).collect();
+            let mut a = vec![f32::NAN; n];
+            let mut b = vec![f32::NAN; n];
+            one_to_many_l2_sq8(&q, &codes, &mins, &scales, d, &mut a);
+            one_to_many_l2_sq8_scalar(&q, &codes, &mins, &scales, d, &mut b);
+            for r in 0..n {
+                assert!(
+                    (a[r] - b[r]).abs() <= 1e-5 * b[r].abs().max(1.0),
+                    "d={d} r={r}: dispatched={} scalar={}",
+                    a[r],
+                    b[r]
+                );
+            }
+        });
+    }
+}

@@ -4,11 +4,15 @@
 //! [`Metric`]; the Local-Join hot path additionally uses a
 //! [`DistanceEngine`] so batched candidate blocks can be routed either to
 //! tight scalar loops ([`ScalarEngine`]) or to the AOT-compiled
-//! XLA/Pallas kernel (`runtime::XlaEngine`).
+//! XLA/Pallas kernel (`runtime::XlaEngine`). Block-shaped evaluations
+//! (one query vs. many rows, full cross blocks, SQ8 codes) go through
+//! the runtime-dispatched SIMD kernels in [`kernels`].
 
 pub mod engine;
+pub mod kernels;
 
-pub use engine::{DistanceEngine, ScalarEngine};
+pub use engine::{DistanceEngine, NormExpandEngine, ScalarEngine};
+pub use kernels::{kernel_name, one_to_many_l2, one_to_many_l2_sq8, KernelKind};
 
 /// Distance metric over f32 vectors. Smaller = closer everywhere in the
 /// crate (the paper's convention).

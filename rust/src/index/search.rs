@@ -2,12 +2,22 @@
 //! procedure shared by HNSW (per layer), Vamana (construction and
 //! query), and the QPS/recall evaluation harness (paper Figs. 10/11,
 //! 15/16).
+//!
+//! The hot loop is *batched*: when a vertex is expanded, its whole
+//! unvisited neighbor list is evaluated through one [`BatchDist`]
+//! call — for L2 that gathers the rows into a contiguous scratch block
+//! and runs the runtime-dispatched SIMD kernel
+//! ([`crate::distance::kernels::one_to_many_l2`]) instead of a per
+//! -neighbor `l2_sq`. The same core drives the SQ8 quantized tier
+//! (`stream::segment`) via an evaluator over u8 codes.
 
 use super::IndexGraph;
 use crate::dataset::Dataset;
-use crate::distance::Metric;
+use crate::dataset::quant::SQ8Store;
+use crate::distance::{kernels, Metric};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::time::Instant;
 
 /// Max-heap entry (peek = worst kept candidate).
 #[derive(PartialEq)]
@@ -44,11 +54,153 @@ impl Ord for Near {
 }
 
 /// Search effort/result statistics (distance computations ≙ the
-/// machine-independent cost measure; hops = expanded vertices).
+/// machine-independent cost measure; hops = expanded vertices;
+/// `kernel_ns` = wall time inside distance-kernel evaluations, feeding
+/// the `distance.kernel_ns` histogram).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SearchStats {
     pub dist_evals: usize,
     pub hops: usize,
+    pub kernel_ns: u64,
+}
+
+impl SearchStats {
+    pub fn absorb(&mut self, other: &SearchStats) {
+        self.dist_evals += other.dist_evals;
+        self.hops += other.hops;
+        self.kernel_ns += other.kernel_ns;
+    }
+}
+
+/// Reusable beam-search working set: epoch-stamped visited marks (no
+/// O(n) clear between searches), the unvisited-neighbor gather list,
+/// and its distance output block. One scratch serves any number of
+/// sequential searches over graphs of any size.
+#[derive(Debug, Default)]
+pub struct SearchScratch {
+    marks: Vec<u32>,
+    epoch: u32,
+    ids: Vec<u32>,
+    dists: Vec<f32>,
+}
+
+impl SearchScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a fresh search over a graph with `n` vertices.
+    fn begin(&mut self, n: usize) {
+        if self.marks.len() < n {
+            self.marks.resize(n, 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // Epoch counter wrapped: old stamps could alias. Reset.
+            self.marks.fill(0);
+            self.epoch = 1;
+        }
+    }
+
+    #[inline]
+    fn visit(&mut self, v: usize) -> bool {
+        let seen = self.marks[v] == self.epoch;
+        self.marks[v] = self.epoch;
+        !seen
+    }
+}
+
+/// One query against a batch of vertex ids — the pluggable distance
+/// half of the beam search. Implementations own whatever gather
+/// scratch they need so one evaluator can serve many expansions (and
+/// many entry points) without re-allocating.
+pub trait BatchDist {
+    /// Write the distance from the query to each of `ids` into `out`
+    /// (`out.len() == ids.len()`).
+    fn eval(&mut self, ids: &[u32], out: &mut [f32]);
+}
+
+/// [`BatchDist`] over full-precision dataset rows. For L2 the ids'
+/// rows are gathered into a reused contiguous block and evaluated by
+/// the dispatched SIMD kernel; other metrics fall back to per-row
+/// [`Metric::distance`].
+pub struct DatasetDist<'a> {
+    ds: &'a Dataset,
+    metric: Metric,
+    query: &'a [f32],
+    block: Vec<f32>,
+}
+
+impl<'a> DatasetDist<'a> {
+    pub fn new(ds: &'a Dataset, metric: Metric, query: &'a [f32]) -> Self {
+        Self {
+            ds,
+            metric,
+            query,
+            block: Vec::new(),
+        }
+    }
+}
+
+impl BatchDist for DatasetDist<'_> {
+    fn eval(&mut self, ids: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(ids.len(), out.len());
+        match self.metric {
+            Metric::L2 => {
+                self.block.clear();
+                self.block.reserve(ids.len() * self.ds.dim);
+                for &id in ids {
+                    self.block.extend_from_slice(&self.ds.vector(id as usize));
+                }
+                kernels::one_to_many_l2(self.query, &self.block, self.ds.dim, out);
+            }
+            _ => {
+                for (o, &id) in out.iter_mut().zip(ids) {
+                    *o = self.metric.distance(self.query, &self.ds.vector(id as usize));
+                }
+            }
+        }
+    }
+}
+
+/// [`BatchDist`] over an [`SQ8Store`]: gathers the ids' u8 code rows
+/// and evaluates the asymmetric SQ8 kernel — the full-precision rows
+/// are never touched, which is what lets the quantized tier search
+/// without faulting spilled vectors.
+pub struct Sq8Dist<'a> {
+    store: &'a SQ8Store,
+    query: &'a [f32],
+    codes: Vec<u8>,
+}
+
+impl<'a> Sq8Dist<'a> {
+    pub fn new(store: &'a SQ8Store, query: &'a [f32]) -> Self {
+        Self {
+            store,
+            query,
+            codes: Vec::new(),
+        }
+    }
+}
+
+impl BatchDist for Sq8Dist<'_> {
+    fn eval(&mut self, ids: &[u32], out: &mut [f32]) {
+        debug_assert_eq!(ids.len(), out.len());
+        let dim = self.store.dim();
+        self.codes.clear();
+        self.codes.reserve(ids.len() * dim);
+        for &id in ids {
+            self.codes.extend_from_slice(self.store.codes_row(id as usize));
+        }
+        kernels::one_to_many_l2_sq8(
+            self.query,
+            &self.codes,
+            self.store.mins(),
+            self.store.scales(),
+            dim,
+            out,
+        );
+    }
 }
 
 /// Best-first beam search: returns up to `topk` ids (ascending
@@ -74,21 +226,60 @@ pub fn beam_search_from(
     topk: usize,
     ef: usize,
 ) -> (Vec<u32>, SearchStats) {
+    let mut scratch = SearchScratch::new();
+    let (ranked, stats) = beam_search_ranked(ds, metric, graph, entry, query, topk, ef, &mut scratch);
+    (ranked.into_iter().map(|(_, id)| id).collect(), stats)
+}
+
+/// [`beam_search_from`] returning `(distance, id)` pairs (ascending),
+/// with caller-provided scratch so multi-entry / multi-query callers
+/// reuse the visited marks and gather buffers.
+#[allow(clippy::too_many_arguments)]
+pub fn beam_search_ranked(
+    ds: &Dataset,
+    metric: Metric,
+    graph: &IndexGraph,
+    entry: u32,
+    query: &[f32],
+    topk: usize,
+    ef: usize,
+    scratch: &mut SearchScratch,
+) -> (Vec<(f32, u32)>, SearchStats) {
+    let mut eval = DatasetDist::new(ds, metric, query);
+    beam_search_with(graph, entry, topk, ef, scratch, &mut eval)
+}
+
+/// The beam-search core over any [`BatchDist`] evaluator. Expands a
+/// vertex's entire unvisited neighbor list through one `eval` call;
+/// distance storage, visited marks, and gather buffers all live in
+/// `scratch` / the evaluator, so steady-state searches allocate only
+/// the two heaps.
+pub fn beam_search_with(
+    graph: &IndexGraph,
+    entry: u32,
+    topk: usize,
+    ef: usize,
+    scratch: &mut SearchScratch,
+    eval: &mut dyn BatchDist,
+) -> (Vec<(f32, u32)>, SearchStats) {
     let n = graph.len();
     let mut stats = SearchStats::default();
     if n == 0 {
         return (Vec::new(), stats);
     }
     let ef = ef.max(topk).max(1);
-    let mut visited = vec![false; n];
+    scratch.begin(n);
     let mut frontier = BinaryHeap::new(); // min-heap by distance
     let mut kept: BinaryHeap<Far> = BinaryHeap::new(); // max-heap, size <= ef
 
-    let d0 = metric.distance(query, &ds.vector(entry as usize));
+    let mut d0 = [0.0f32];
+    let t0 = Instant::now();
+    eval.eval(&[entry], &mut d0);
+    stats.kernel_ns += t0.elapsed().as_nanos() as u64;
     stats.dist_evals += 1;
-    visited[entry as usize] = true;
-    frontier.push(Near(d0, entry));
-    kept.push(Far(d0, entry));
+    scratch.visit(entry as usize);
+    frontier.push(Near(d0[0], entry));
+    kept.push(Far(d0[0], entry));
 
     while let Some(Near(d, u)) = frontier.pop() {
         // Stop when the closest frontier node is worse than the worst
@@ -97,14 +288,21 @@ pub fn beam_search_from(
             break;
         }
         stats.hops += 1;
+        scratch.ids.clear();
         for &v in &graph.adj[u as usize] {
-            let vi = v as usize;
-            if visited[vi] {
-                continue;
+            if scratch.visit(v as usize) {
+                scratch.ids.push(v);
             }
-            visited[vi] = true;
-            let dv = metric.distance(query, &ds.vector(vi));
-            stats.dist_evals += 1;
+        }
+        if scratch.ids.is_empty() {
+            continue;
+        }
+        scratch.dists.resize(scratch.ids.len(), 0.0);
+        let t = Instant::now();
+        eval.eval(&scratch.ids, &mut scratch.dists);
+        stats.kernel_ns += t.elapsed().as_nanos() as u64;
+        stats.dist_evals += scratch.ids.len();
+        for (&v, &dv) in scratch.ids.iter().zip(scratch.dists.iter()) {
             if kept.len() < ef {
                 kept.push(Far(dv, v));
                 frontier.push(Near(dv, v));
@@ -118,7 +316,7 @@ pub fn beam_search_from(
     let mut results: Vec<(f32, u32)> = kept.into_iter().map(|Far(d, id)| (d, id)).collect();
     results.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
     results.truncate(topk);
-    (results.into_iter().map(|(_, id)| id).collect(), stats)
+    (results, stats)
 }
 
 /// Run a query batch, returning result lists and the measured QPS
@@ -134,11 +332,20 @@ pub fn run_queries(
     let start = std::time::Instant::now();
     let mut results = Vec::with_capacity(queries.len());
     let mut total = SearchStats::default();
+    let mut scratch = SearchScratch::new();
     for q in 0..queries.len() {
-        let (ids, stats) = beam_search(ds, metric, graph, &queries.vector(q), topk, ef);
-        total.dist_evals += stats.dist_evals;
-        total.hops += stats.hops;
-        results.push(ids);
+        let (ranked, stats) = beam_search_ranked(
+            ds,
+            metric,
+            graph,
+            graph.entry,
+            &queries.vector(q),
+            topk,
+            ef,
+            &mut scratch,
+        );
+        total.absorb(&stats);
+        results.push(ranked.into_iter().map(|(_, id)| id).collect());
     }
     let secs = start.elapsed().as_secs_f64();
     let qps = queries.len() as f64 / secs.max(1e-9);
@@ -210,6 +417,43 @@ mod tests {
             assert!(w[0] <= w[1]);
         }
         assert_eq!(ids[0], 3, "identical point should be first");
+    }
+
+    #[test]
+    fn ranked_distances_match_recompute() {
+        let (ds, ig) = index_fixture(250);
+        let queries = queries_like(&ds, 8, 5);
+        let mut scratch = SearchScratch::new();
+        for q in 0..queries.len() {
+            let query = queries.vector(q).to_vec();
+            let (ranked, _) = beam_search_ranked(
+                &ds, Metric::L2, &ig, ig.entry, &query, 10, 64, &mut scratch,
+            );
+            assert!(!ranked.is_empty());
+            for &(d, id) in &ranked {
+                let exact = crate::distance::l2_sq(&query, &ds.vector(id as usize));
+                assert!(
+                    (d - exact).abs() <= 1e-5 * exact.abs().max(1.0),
+                    "ranked d={d} recompute={exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_search() {
+        let (ds, ig) = index_fixture(300);
+        let queries = queries_like(&ds, 10, 3);
+        let mut scratch = SearchScratch::new();
+        for q in 0..queries.len() {
+            let query = queries.vector(q).to_vec();
+            let (reused, _) = beam_search_ranked(
+                &ds, Metric::L2, &ig, ig.entry, &query, 10, 48, &mut scratch,
+            );
+            let (fresh, _) = beam_search_from(&ds, Metric::L2, &ig, ig.entry, &query, 10, 48);
+            let reused_ids: Vec<u32> = reused.iter().map(|&(_, id)| id).collect();
+            assert_eq!(reused_ids, fresh, "query {q}: scratch reuse changed results");
+        }
     }
 
     #[test]

@@ -61,6 +61,12 @@ STREAM OPTIONS:
                                      segments inline on the insert path)
   --compact-dead-fraction <f>        rewrite a segment in place when its
                                      tombstoned share reaches f (0 = off)
+  --quantized-tier                   keep an SQ8 resident tier per segment:
+                                     beam search runs over the codes, only
+                                     the final topk + slack candidates
+                                     fault full-precision rows for rerank
+  --rerank-slack <s>                 extra candidates the SQ8 beam fetches
+                                     beyond topk for exact rerank (default 32)
   --checkpoint-dir <dir>             checkpoint the segment log there at
                                      the end of the run (atomic manifest,
                                      KNG3 segment spills)

@@ -37,16 +37,23 @@ impl<'a> JoinContext<'a> {
     /// new. Pairs with `u == v` are skipped. `filter` can veto pairs
     /// (e.g. Multi-way Merge's same-subset exclusion).
     pub fn join(&self, us: &[u32], vs: &[u32], filter: &(dyn Fn(u32, u32) -> bool + Sync)) {
-        // L2 dominates the experiments; specializing hoists the metric
-        // dispatch out of the pair loop and lets l2_sq inline (§Perf).
-        if self.metric == Metric::L2 {
+        // L2 dominates the experiments; gather the vs rows once and push
+        // every `u` through the blocked kernel, filtering at insert time.
+        // The pair loop then touches only the small distance row (§Perf).
+        if self.metric == Metric::L2 && !vs.is_empty() {
+            let dim = self.ds.dim;
+            let mut block = Vec::with_capacity(vs.len() * dim);
+            for &v in vs {
+                block.extend_from_slice(&self.ds.vector(v as usize));
+            }
+            let mut dists = vec![0.0f32; vs.len()];
             for &u in us {
                 let xu = self.ds.vector(u as usize);
-                for &v in vs {
+                crate::distance::one_to_many_l2(&xu, &block, dim, &mut dists);
+                for (&v, &d) in vs.iter().zip(&dists) {
                     if u == v || !filter(u, v) {
                         continue;
                     }
-                    let d = crate::distance::l2_sq(&xu, &self.ds.vector(v as usize));
                     self.graph.insert(u as usize, v, d, true);
                     self.graph.insert(v as usize, u, d, true);
                 }
@@ -68,6 +75,33 @@ impl<'a> JoinContext<'a> {
 
     /// Join the upper triangle of `xs x xs` (every unordered pair once).
     pub fn join_triangle(&self, xs: &[u32], filter: &(dyn Fn(u32, u32) -> bool + Sync)) {
+        // Same blocked specialization as `join`: the xs rows are gathered
+        // once and each row `u` scores the contiguous suffix in one call.
+        if self.metric == Metric::L2 && xs.len() > 1 {
+            let dim = self.ds.dim;
+            let mut block = Vec::with_capacity(xs.len() * dim);
+            for &x in xs {
+                block.extend_from_slice(&self.ds.vector(x as usize));
+            }
+            let mut dists = vec![0.0f32; xs.len()];
+            for (idx, &u) in xs.iter().enumerate() {
+                let rest = &xs[idx + 1..];
+                if rest.is_empty() {
+                    break;
+                }
+                let xu = self.ds.vector(u as usize);
+                let out = &mut dists[..rest.len()];
+                crate::distance::one_to_many_l2(&xu, &block[(idx + 1) * dim..], dim, out);
+                for (&v, &d) in rest.iter().zip(out.iter()) {
+                    if u == v || !filter(u, v) {
+                        continue;
+                    }
+                    self.graph.insert(u as usize, v, d, true);
+                    self.graph.insert(v as usize, u, d, true);
+                }
+            }
+            return;
+        }
         for (idx, &u) in xs.iter().enumerate() {
             let xu = self.ds.vector(u as usize);
             for &v in &xs[idx + 1..] {

@@ -242,6 +242,13 @@ impl Compactor {
                 );
                 let knn = cross.merge_sorted(&g0);
                 let entries = vec![index.entry];
+                // Same policy as Segment::from_knn: compaction outputs
+                // re-train their SQ8 tier over the fused rows.
+                let quant = if self.cfg.quantized_tier && self.metric == Metric::L2 {
+                    Some(std::sync::Arc::new(crate::dataset::SQ8Store::train(&data)))
+                } else {
+                    None
+                };
                 Segment {
                     id: out_id,
                     level,
@@ -250,6 +257,7 @@ impl Compactor {
                     knn,
                     index,
                     entries,
+                    quant,
                 }
             }
         }

@@ -35,7 +35,7 @@ use super::snapshot::{merge_topk, SegmentSet};
 use super::tombstones::TombstoneSet;
 use crate::config::StreamConfig;
 use crate::dataset::store::MemoryBudget;
-use crate::dataset::Dataset;
+use crate::dataset::{Dataset, SQ8Store};
 use crate::distance::Metric;
 use crate::graph::NeighborList;
 use crate::metrics::{Counter, Histogram, MetricsSnapshot, Phase, Registry, Span};
@@ -188,6 +188,10 @@ struct Shared {
     search_ns: Arc<Histogram>,
     delete_ns: Arc<Histogram>,
     upsert_ns: Arc<Histogram>,
+    /// Per-search wall time inside distance kernels (beam + rerank).
+    kernel_ns: Arc<Histogram>,
+    /// Full-precision rows faulted for SQ8 exact rerank (cumulative).
+    rerank_faults: Arc<Counter>,
 }
 
 impl Shared {
@@ -408,6 +412,8 @@ impl StreamingIndex {
         let search_ns = obs.histogram("stream.search_ns");
         let delete_ns = obs.histogram("stream.delete_ns");
         let upsert_ns = obs.histogram("stream.upsert_ns");
+        let kernel_ns = obs.histogram("distance.kernel_ns");
+        let rerank_faults = obs.counter("search.rerank_faults");
         let shared = Arc::new(Shared {
             cfg,
             metric,
@@ -422,6 +428,8 @@ impl StreamingIndex {
             search_ns,
             delete_ns,
             upsert_ns,
+            kernel_ns,
+            rerank_faults,
         });
         let (seal_tx, seal_workers) = if seal_threads > 0 {
             let (tx, rx) = mpsc::channel::<Arc<SealingBatch>>();
@@ -477,6 +485,8 @@ impl StreamingIndex {
         obs.gauge("stream.memtable_len").set(st.memtable_len as i64);
         obs.gauge("stream.sealing").set(st.sealing as i64);
         obs.gauge("stream.tombstones").set(st.tombstones as i64);
+        obs.gauge("quant.resident_bytes")
+            .set(self.snapshot().quant_resident_bytes() as i64);
         self.budget.publish(obs);
         obs.snapshot()
     }
@@ -844,7 +854,21 @@ impl StreamingIndex {
         for batch in &sealing {
             parts.push(batch.search(metric, query, fetch, &tombs));
         }
-        parts.push(snap.search(metric, query, fetch, ef, &tombs));
+        let (seg_hits, cost) = snap.search_cost(
+            metric,
+            query,
+            fetch,
+            ef,
+            &tombs,
+            self.shared.cfg.rerank_slack,
+        );
+        parts.push(seg_hits);
+        if cost.kernel_ns > 0 {
+            self.shared.kernel_ns.record_ns(cost.kernel_ns);
+        }
+        if cost.rerank_rows > 0 {
+            self.shared.rerank_faults.add(cost.rerank_rows as u64);
+        }
         let merged = merge_topk(parts, fetch);
         // Translate internal row ids to user gids: rows written by
         // `upsert` live under fresh internal ids bound to the original
@@ -1232,7 +1256,25 @@ impl StreamingIndex {
         }
         let mut segments = Vec::with_capacity(m.segments.len());
         for rec in &m.segments {
-            segments.push(Arc::new(persist::load_segment(dir, rec, opts)?));
+            let mut seg = persist::load_segment(dir, rec, opts)?;
+            if !index.shared.cfg.quantized_tier {
+                // The quantized tier is a runtime knob (excluded from
+                // the fingerprint): restoring with it off drops any
+                // checkpointed SQ8 blocks.
+                seg.quant = None;
+            } else if seg.quant.is_none() && m.metric == Metric::L2 {
+                // Checkpoint written without the tier, restored with it
+                // on: train from the loaded rows (one pass; under a
+                // paged restore the faulted chunks are evictable, the
+                // trained codes are the pinned tier).
+                let q = SQ8Store::train(&seg.data);
+                let q = match &opts.budget {
+                    Some(b) => q.with_budget(Arc::clone(b)),
+                    None => q,
+                };
+                seg.quant = Some(Arc::new(q));
+            }
+            segments.push(Arc::new(seg));
         }
         segments.sort_by_key(|s| s.id);
         // Torn-state defense: every internal id must be unique across

@@ -295,6 +295,10 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
         }
         cfg.stream.compact_dead_fraction = f;
     }
+    if args.get_flag("quantized-tier") {
+        cfg.stream.quantized_tier = true;
+    }
+    cfg.stream.rerank_slack = args.get_usize("rerank-slack", cfg.stream.rerank_slack)?;
 
     let ds = match args.get("file") {
         Some(path) => {
@@ -348,7 +352,7 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
 
     println!(
         "streaming ingest: {} vectors dim {} (segment_size={}, mode={}, k={}, lambda={}, \
-         seal_threads={}, rate={}, delete_rate={delete_rate})",
+         seal_threads={}, quantized_tier={}, kernel={}, rate={}, delete_rate={delete_rate})",
         ds.len(),
         ds.dim,
         cfg.stream.segment_size,
@@ -356,6 +360,8 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
         k,
         lambda,
         cfg.stream.seal_threads,
+        cfg.stream.quantized_tier,
+        crate::distance::kernel_name(),
         if rate > 0.0 {
             format!("{rate}/s")
         } else {

@@ -63,7 +63,7 @@
 use super::segment::Segment;
 use super::snapshot::SegmentSet;
 use crate::dataset::store::DEFAULT_CHUNK_BYTES;
-use crate::dataset::{io as vec_io, Dataset, MemoryBudget, PageOpts, PagedFormat};
+use crate::dataset::{io as vec_io, Dataset, MemoryBudget, PageOpts, PagedFormat, SQ8Store};
 use crate::distance::Metric;
 use crate::graph::{serial, PagedKnnGraph};
 use crate::index::IndexGraph;
@@ -486,6 +486,13 @@ fn seg_paths(dir: &Path, id: u64) -> (PathBuf, PathBuf, PathBuf) {
     )
 }
 
+/// SQ8 code-block spill (present only for segments sealed with the
+/// quantized tier on; `gc_stale_segments` reaps it with the rest of
+/// the `seg-<id>.*` family).
+fn sq8_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("seg-{id}.sq8"))
+}
+
 fn fsync(path: &Path) -> Result<()> {
     std::fs::File::open(path)
         .and_then(|f| f.sync_all())
@@ -514,7 +521,12 @@ fn write_atomic(path: &Path, write: impl FnOnce(&Path) -> Result<()>) -> Result<
 /// whether anything was written.
 pub fn write_segment_files(dir: &Path, seg: &Segment) -> Result<bool> {
     let (vec_path, knn_path, idx_path) = seg_paths(dir, seg.id);
-    if vec_path.exists() && knn_path.exists() && idx_path.exists() {
+    let sq8 = sq8_path(dir, seg.id);
+    if vec_path.exists()
+        && knn_path.exists()
+        && idx_path.exists()
+        && (seg.quant.is_none() || sq8.exists())
+    {
         return Ok(false);
     }
     write_atomic(&vec_path, |p| vec_io::write_knnv(p, &seg.data))?;
@@ -525,6 +537,11 @@ pub fn write_segment_files(dir: &Path, seg: &Segment) -> Result<bool> {
         std::fs::write(p, index_to_bytes(&seg.index, &seg.entries))
             .with_context(|| format!("write {p:?}"))
     })?;
+    if let Some(quant) = &seg.quant {
+        write_atomic(&sq8, |p| {
+            std::fs::write(p, quant.to_bytes()).with_context(|| format!("write {p:?}"))
+        })?;
+    }
     Ok(true)
 }
 
@@ -575,6 +592,31 @@ pub fn load_segment(
             index.len()
         );
     }
+    // SQ8 tier (optional file: only segments sealed with the quantized
+    // tier spill codes). Restored stores charge the restore budget as
+    // pinned residency, exactly like a freshly sealed tier would.
+    let sq8 = sq8_path(dir, rec.id);
+    let quant = if sq8.exists() {
+        let bytes = std::fs::read(&sq8).with_context(|| format!("read {sq8:?}"))?;
+        let q = SQ8Store::from_bytes(&bytes).with_context(|| format!("parse {sq8:?}"))?;
+        if q.len() != rec.global_ids.len() || q.dim() != data.dim {
+            bail!(
+                "segment {} sq8 shape mismatch: {} rows x {} dims (manifest {} rows, vec dim {})",
+                rec.id,
+                q.len(),
+                q.dim(),
+                rec.global_ids.len(),
+                data.dim
+            );
+        }
+        let q = match &opts.budget {
+            Some(b) => q.with_budget(Arc::clone(b)),
+            None => q,
+        };
+        Some(Arc::new(q))
+    } else {
+        None
+    };
     Ok(Segment {
         id: rec.id,
         level: rec.level as usize,
@@ -583,6 +625,7 @@ pub fn load_segment(
         knn,
         index,
         entries,
+        quant,
     })
 }
 

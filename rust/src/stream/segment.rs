@@ -12,13 +12,39 @@ use super::snapshot::merge_topk;
 use super::tombstones::TombstoneSet;
 use crate::config::{StreamConfig, StreamGraphMode};
 use crate::construction::{bruteforce, NnDescent};
-use crate::dataset::Dataset;
-use crate::distance::Metric;
+use crate::dataset::{Dataset, SQ8Store};
+use crate::distance::{kernels, Metric};
 use crate::graph::{IdRemap, KnnGraph};
 use crate::index::diversify::diversify_knn;
-use crate::index::search::beam_search_from;
+use crate::index::search::{beam_search_ranked, beam_search_with, SearchScratch, Sq8Dist};
 use crate::index::IndexGraph;
 use std::sync::Arc;
+use std::time::Instant;
+
+/// Rerank pool width used by the slack-less [`Segment::search`] /
+/// [`super::snapshot::SegmentSet::search`] convenience wrappers; the
+/// engine passes `StreamConfig::rerank_slack` explicitly.
+pub const DEFAULT_RERANK_SLACK: usize = 32;
+
+/// Per-search cost accounting surfaced to the engine's instruments.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SearchCost {
+    /// Wall time inside distance-kernel evaluations (beam + rerank).
+    pub kernel_ns: u64,
+    /// Distance evaluations (SQ8 + full-precision).
+    pub dist_evals: usize,
+    /// Full-precision rows faulted for exact rerank (0 when the
+    /// segment has no quantized tier — the beam itself reads rows).
+    pub rerank_rows: usize,
+}
+
+impl SearchCost {
+    pub fn absorb(&mut self, other: &SearchCost) {
+        self.kernel_ns += other.kernel_ns;
+        self.dist_evals += other.dist_evals;
+        self.rerank_rows += other.rerank_rows;
+    }
+}
 
 /// An immutable sealed segment of the stream.
 #[derive(Clone, Debug)]
@@ -43,6 +69,12 @@ pub struct Segment {
     /// entries — clusters the primary entry cannot reach stay
     /// searchable.
     pub entries: Vec<u32>,
+    /// SQ8 resident tier (trained at seal when
+    /// `StreamConfig::quantized_tier` is on and the metric is L2):
+    /// beam search runs over these codes and exact-reranks the final
+    /// candidates from `data`, so full-precision rows are only
+    /// faulted for rerank survivors.
+    pub quant: Option<Arc<SQ8Store>>,
 }
 
 impl Segment {
@@ -103,6 +135,13 @@ impl Segment {
                 (index, entries)
             }
         };
+        // SQ8 only approximates L2 (the asymmetric kernel expands the
+        // L2 form); other metrics keep the full-precision path.
+        let quant = if cfg.quantized_tier && metric == Metric::L2 {
+            Some(Arc::new(SQ8Store::train(&data)))
+        } else {
+            None
+        };
         Segment {
             id,
             level,
@@ -111,6 +150,7 @@ impl Segment {
             knn,
             index,
             entries,
+            quant,
         }
     }
 
@@ -146,6 +186,25 @@ impl Segment {
         ef: usize,
         tombs: &TombstoneSet,
     ) -> Vec<(f32, u32)> {
+        self.search_cost(metric, query, topk, ef, tombs, DEFAULT_RERANK_SLACK)
+            .0
+    }
+
+    /// [`Segment::search`] with explicit rerank slack and cost
+    /// accounting. On segments with a quantized tier (L2 only) the
+    /// beam runs over SQ8 codes and only the final `fetch +
+    /// rerank_slack` candidates fault full-precision rows for exact
+    /// rerank; otherwise the beam reads full-precision rows directly
+    /// (one blocked kernel call per expanded vertex either way).
+    pub fn search_cost(
+        &self,
+        metric: Metric,
+        query: &[f32],
+        topk: usize,
+        ef: usize,
+        tombs: &TombstoneSet,
+        rerank_slack: usize,
+    ) -> (Vec<(f32, u32)>, SearchCost) {
         // With tombstones live, take the beam's whole ef-wide pool: it
         // is already visited and ranked, so a dead-dense neighborhood
         // (up to ef - topk dead hits) cannot starve the live top-k.
@@ -154,25 +213,81 @@ impl Segment {
         } else {
             ef.max(topk).min(self.len())
         };
-        let parts: Vec<Vec<(f32, u32)>> = self
-            .entries
-            .iter()
-            .map(|&entry| {
-                let (ids, _) =
-                    beam_search_from(&self.data, metric, &self.index, entry, query, fetch, ef);
-                ids.into_iter()
-                    .filter_map(|local| {
-                        let gid = self.global_ids[local as usize];
-                        if tombs.contains(gid) {
-                            return None;
-                        }
-                        let d = metric.distance(query, &self.data.vector(local as usize));
-                        Some((d, gid))
-                    })
-                    .collect()
-            })
-            .collect();
-        merge_topk(parts, topk)
+        let mut cost = SearchCost::default();
+        let mut scratch = SearchScratch::new();
+        if let (Some(quant), Metric::L2) = (&self.quant, metric) {
+            // Beam over SQ8 codes, asking for slack extra candidates
+            // per entry: the quantized ranking is off by at most the
+            // per-dimension reconstruction error, so the true top-k
+            // sits inside a slightly widened pool.
+            let pool = (fetch + rerank_slack).min(self.len());
+            let mut candidates: Vec<u32> = Vec::new();
+            for &entry in &self.entries {
+                let mut eval = Sq8Dist::new(quant, query);
+                let (ranked, stats) =
+                    beam_search_with(&self.index, entry, pool, ef, &mut scratch, &mut eval);
+                cost.kernel_ns += stats.kernel_ns;
+                cost.dist_evals += stats.dist_evals;
+                candidates.extend(ranked.into_iter().map(|(_, local)| local));
+            }
+            candidates.sort_unstable();
+            candidates.dedup();
+            // Tombstone-filter *before* faulting: dead candidates must
+            // not pull full-precision rows in.
+            candidates.retain(|&local| !tombs.contains(self.global_ids[local as usize]));
+            // Exact rerank: gather the survivors' full-precision rows
+            // (the only rows this search faults) and run one blocked
+            // kernel call over them.
+            let t = Instant::now();
+            let dim = self.data.dim;
+            let mut block = Vec::with_capacity(candidates.len() * dim);
+            for &local in &candidates {
+                block.extend_from_slice(&self.data.vector(local as usize));
+            }
+            let mut dists = vec![0.0f32; candidates.len()];
+            kernels::one_to_many_l2(query, &block, dim, &mut dists);
+            cost.kernel_ns += t.elapsed().as_nanos() as u64;
+            cost.dist_evals += candidates.len();
+            cost.rerank_rows += candidates.len();
+            let mut hits: Vec<(f32, u32)> = candidates
+                .into_iter()
+                .zip(dists)
+                .map(|(local, d)| (d, self.global_ids[local as usize]))
+                .collect();
+            hits.sort_by(|a, b| (a.0, a.1).partial_cmp(&(b.0, b.1)).unwrap());
+            hits.truncate(topk);
+            (hits, cost)
+        } else {
+            let parts: Vec<Vec<(f32, u32)>> = self
+                .entries
+                .iter()
+                .map(|&entry| {
+                    let (ranked, stats) = beam_search_ranked(
+                        &self.data,
+                        metric,
+                        &self.index,
+                        entry,
+                        query,
+                        fetch,
+                        ef,
+                        &mut scratch,
+                    );
+                    cost.kernel_ns += stats.kernel_ns;
+                    cost.dist_evals += stats.dist_evals;
+                    ranked
+                        .into_iter()
+                        .filter_map(|(d, local)| {
+                            let gid = self.global_ids[local as usize];
+                            if tombs.contains(gid) {
+                                return None;
+                            }
+                            Some((d, gid))
+                        })
+                        .collect()
+                })
+                .collect();
+            (merge_topk(parts, topk), cost)
+        }
     }
 
     /// The segment's local-row → global-id translation as a checked
@@ -312,6 +427,42 @@ mod tests {
         let filtered = seg.search(Metric::L2, &ds.vector(17), 5, 64, &tombs);
         assert!(!filtered.is_empty());
         assert!(filtered.iter().all(|&(_, id)| id != 34));
+    }
+
+    #[test]
+    fn quantized_tier_search_matches_full_precision() {
+        let ds = DatasetFamily::Sift.generate(300, 9);
+        let mut cfg = cfg_k(8);
+        cfg.quantized_tier = true;
+        let gids: Vec<u32> = (0..300).collect();
+        let seg = Segment::seal(0, 0, ds.clone(), gids.clone(), Metric::L2, &cfg);
+        assert!(seg.quant.is_some(), "seal must train the SQ8 tier");
+        let full = Segment::seal(0, 0, ds.clone(), gids, Metric::L2, &cfg_k(8));
+        assert!(full.quant.is_none());
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for q in (0..300).step_by(23) {
+            let query = ds.vector(q).to_vec();
+            let (hits, cost) =
+                seg.search_cost(Metric::L2, &query, 10, 64, &TombstoneSet::empty(), 32);
+            // Rerank distances are exact, so the identical point wins.
+            assert_eq!(hits[0].1, q as u32);
+            assert!(hits[0].0 <= 1e-6);
+            // Rerank pool is bounded by (topk + slack) per entry.
+            assert!(cost.rerank_rows > 0 && cost.rerank_rows <= seg.entries.len() * (10 + 32));
+            assert!(cost.dist_evals > cost.rerank_rows);
+            let fh = full.search(Metric::L2, &query, 10, 64, &TombstoneSet::empty());
+            let fids: std::collections::HashSet<u32> = fh.iter().map(|&(_, id)| id).collect();
+            agree += hits.iter().filter(|&&(_, id)| fids.contains(&id)).count();
+            total += fh.len();
+        }
+        // SQ8 beam + exact rerank tracks the full-precision results.
+        assert!(agree as f64 >= 0.9 * total as f64, "{agree}/{total}");
+        // Tombstoned ids never surface and never fault for rerank.
+        let query = ds.vector(5).to_vec();
+        let tombs = TombstoneSet::empty().with(5);
+        let (hits, _) = seg.search_cost(Metric::L2, &query, 10, 64, &tombs, 32);
+        assert!(hits.iter().all(|&(_, id)| id != 5));
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! clone the `Arc` and search without any further synchronization, so a
 //! compaction swap can never tear the set mid-query.
 
-use super::segment::Segment;
+use super::segment::{SearchCost, Segment, DEFAULT_RERANK_SLACK};
 use super::tombstones::TombstoneSet;
 use std::sync::Arc;
 
@@ -49,12 +49,42 @@ impl SegmentSet {
         ef: usize,
         tombs: &TombstoneSet,
     ) -> Vec<(f32, u32)> {
+        self.search_cost(metric, query, topk, ef, tombs, DEFAULT_RERANK_SLACK)
+            .0
+    }
+
+    /// [`SegmentSet::search`] with explicit rerank slack, aggregating
+    /// per-segment kernel time / rerank-fault accounting for the
+    /// engine's instruments.
+    pub fn search_cost(
+        &self,
+        metric: crate::distance::Metric,
+        query: &[f32],
+        topk: usize,
+        ef: usize,
+        tombs: &TombstoneSet,
+        rerank_slack: usize,
+    ) -> (Vec<(f32, u32)>, SearchCost) {
+        let mut cost = SearchCost::default();
         let parts: Vec<Vec<(f32, u32)>> = self
             .segments
             .iter()
-            .map(|s| s.search(metric, query, topk, ef, tombs))
+            .map(|s| {
+                let (hits, c) = s.search_cost(metric, query, topk, ef, tombs, rerank_slack);
+                cost.absorb(&c);
+                hits
+            })
             .collect();
-        merge_topk(parts, topk)
+        (merge_topk(parts, topk), cost)
+    }
+
+    /// Bytes held resident by the segments' SQ8 tiers (0 when the
+    /// quantized tier is off) — the `quant.resident_bytes` gauge.
+    pub fn quant_resident_bytes(&self) -> u64 {
+        self.segments
+            .iter()
+            .filter_map(|s| s.quant.as_ref().map(|q| q.payload_bytes()))
+            .sum()
     }
 }
 

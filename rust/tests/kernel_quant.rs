@@ -1,0 +1,336 @@
+//! Kernel + quantized-tier acceptance (ISSUE 7):
+//!
+//! - the runtime-dispatched one-to-many / cross kernels are equivalent
+//!   to the scalar reference within 1e-5 relative tolerance across odd
+//!   dims (1, 3, 7, non-lane-multiples) and empty/singleton blocks;
+//! - SQ8 round-trips every value within half a quantization step;
+//! - beam search over the SQ8 tier with exact rerank loses at most 1%
+//!   recall against the full-precision segment at equal `ef`;
+//! - a budget-paged restore with the quantized tier on keeps beam
+//!   traffic off the full-precision spills: fault bytes during the
+//!   query phase drop >= 4x vs the unquantized paged restore, and the
+//!   rerank-fault counter proves only final candidates were touched.
+
+use knn_merge::config::StreamConfig;
+use knn_merge::dataset::{Dataset, DatasetFamily, MemoryBudget, SQ8Store};
+use knn_merge::distance::kernels::{
+    cross_l2, one_to_many_l2, one_to_many_l2_scalar, one_to_many_l2_sq8, one_to_many_l2_sq8_scalar,
+};
+use knn_merge::distance::{l2_sq, Metric};
+use knn_merge::merge::MergeParams;
+use knn_merge::stream::{RestoreOptions, StreamingIndex};
+use knn_merge::util::proptest::check_property_cases;
+use knn_merge::util::Rng;
+use std::path::PathBuf;
+
+/// Odd, prime, and non-lane-multiple dims: every tail-handling regime
+/// of the 16/8/scalar loop structure.
+const DIMS: [usize; 11] = [1, 3, 7, 8, 15, 16, 17, 31, 33, 100, 128];
+
+fn rel_close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+}
+
+fn gen_block(rng: &mut Rng, n: usize, dim: usize) -> Vec<f32> {
+    (0..n * dim).map(|_| rng.gen_normal() * 3.0).collect()
+}
+
+#[test]
+fn dispatched_one_to_many_matches_scalar_reference() {
+    check_property_cases("kernel-one-to-many-equiv", 901, 24, |rng: &mut Rng| {
+        let dim = DIMS[rng.gen_range(DIMS.len())];
+        let n = rng.gen_range(40); // includes empty and singleton blocks
+        let query = gen_block(rng, 1, dim);
+        let rows = gen_block(rng, n, dim);
+        let mut got = vec![0.0f32; n];
+        let mut want = vec![0.0f32; n];
+        one_to_many_l2(&query, &rows, dim, &mut got);
+        one_to_many_l2_scalar(&query, &rows, dim, &mut want);
+        for r in 0..n {
+            assert!(
+                rel_close(got[r], want[r], 1e-5),
+                "dim={dim} row {r}: dispatched {} vs scalar {}",
+                got[r],
+                want[r]
+            );
+            // The scalar reference itself must agree with l2_sq exactly
+            // apart from summation order.
+            let direct = l2_sq(&query, &rows[r * dim..(r + 1) * dim]);
+            assert!(rel_close(want[r], direct, 1e-5));
+        }
+    });
+}
+
+#[test]
+fn dispatched_cross_matches_scalar_reference() {
+    check_property_cases("kernel-cross-equiv", 902, 16, |rng: &mut Rng| {
+        let dim = DIMS[rng.gen_range(DIMS.len())];
+        let nx = rng.gen_range(6);
+        let ny = rng.gen_range(70); // straddles the 32-row y-tile
+        let xs = gen_block(rng, nx, dim);
+        let ys = gen_block(rng, ny, dim);
+        let mut got = vec![0.0f32; nx * ny];
+        cross_l2(&xs, &ys, dim, nx, ny, &mut got);
+        for x in 0..nx {
+            for y in 0..ny {
+                let want = l2_sq(&xs[x * dim..(x + 1) * dim], &ys[y * dim..(y + 1) * dim]);
+                assert!(
+                    rel_close(got[x * ny + y], want, 1e-5),
+                    "dim={dim} ({x},{y}): {} vs {}",
+                    got[x * ny + y],
+                    want
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn sq8_kernel_matches_scalar_reference_and_decode() {
+    check_property_cases("kernel-sq8-equiv", 903, 16, |rng: &mut Rng| {
+        let dim = DIMS[rng.gen_range(DIMS.len())];
+        let n = 1 + rng.gen_range(30);
+        let ds = Dataset::from_raw(gen_block(rng, n, dim), dim);
+        let store = SQ8Store::train(&ds);
+        let query = gen_block(rng, 1, dim);
+        let mut got = vec![0.0f32; n];
+        let mut want = vec![0.0f32; n];
+        one_to_many_l2_sq8(&query, store.codes(), store.mins(), store.scales(), dim, &mut got);
+        one_to_many_l2_sq8_scalar(
+            &query,
+            store.codes(),
+            store.mins(),
+            store.scales(),
+            dim,
+            &mut want,
+        );
+        for r in 0..n {
+            assert!(
+                rel_close(got[r], want[r], 1e-5),
+                "dim={dim} row {r}: sq8 dispatched {} vs scalar {}",
+                got[r],
+                want[r]
+            );
+            // Both must equal exact L2 against the decoded row.
+            let direct = l2_sq(&query, &store.decode_row(r));
+            assert!(rel_close(want[r], direct, 1e-4));
+        }
+    });
+}
+
+#[test]
+fn sq8_round_trip_error_is_within_half_a_step() {
+    check_property_cases("sq8-round-trip", 904, 16, |rng: &mut Rng| {
+        let dim = 1 + rng.gen_range(64);
+        let n = 2 + rng.gen_range(100);
+        let ds = Dataset::from_raw(gen_block(rng, n, dim), dim);
+        let store = SQ8Store::train(&ds);
+        for i in 0..n {
+            let dec = store.decode_row(i);
+            let orig = ds.vector(i);
+            for d in 0..dim {
+                let bound = store.scales()[d] * 0.5 + 1e-5;
+                assert!(
+                    (dec[d] - orig[d]).abs() <= bound,
+                    "row {i} dim {d}: |{} - {}| > {bound}",
+                    dec[d],
+                    orig[d]
+                );
+            }
+        }
+    });
+}
+
+fn stream_cfg(quantized: bool) -> StreamConfig {
+    StreamConfig {
+        segment_size: 200,
+        brute_threshold: 512,
+        seal_threads: 0,
+        quantized_tier: quantized,
+        merge: MergeParams {
+            k: 8,
+            lambda: 8,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Exact top-k over the first `n` rows by linear scan.
+fn exact_topk(ds: &Dataset, n: usize, query: &[f32], k: usize) -> Vec<u32> {
+    let mut all: Vec<(f32, u32)> = (0..n)
+        .map(|i| (l2_sq(query, &ds.vector(i)), i as u32))
+        .collect();
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    all.truncate(k);
+    all.into_iter().map(|(_, id)| id).collect()
+}
+
+#[test]
+fn quantized_recall_within_one_percent_of_full_precision() {
+    let n = 1200usize;
+    let ds = DatasetFamily::Sift.generate(n, 81);
+    let queries = DatasetFamily::Sift.generate_queries(40, 82);
+    let full = StreamingIndex::new(ds.dim, Metric::L2, stream_cfg(false));
+    let quant = StreamingIndex::new(ds.dim, Metric::L2, stream_cfg(true));
+    for i in 0..n {
+        full.insert(&ds.vector(i));
+        quant.insert(&ds.vector(i));
+    }
+    full.flush();
+    quant.flush();
+    assert!(
+        quant.snapshot().quant_resident_bytes() > 0,
+        "quantized index must hold an SQ8 tier after flush"
+    );
+
+    let (topk, ef) = (10usize, 64usize);
+    let (mut hit_full, mut hit_quant, mut total) = (0usize, 0usize, 0usize);
+    for q in 0..queries.len() {
+        let query = queries.vector(q).to_vec();
+        let truth = exact_topk(&ds, n, &query, topk);
+        let f = full.search_ef(&query, topk, ef);
+        let s = quant.search_ef(&query, topk, ef);
+        hit_full += f.iter().filter(|(_, id)| truth.contains(id)).count();
+        hit_quant += s.iter().filter(|(_, id)| truth.contains(id)).count();
+        total += topk;
+    }
+    let (rf, rq) = (
+        hit_full as f64 / total as f64,
+        hit_quant as f64 / total as f64,
+    );
+    assert!(rf > 0.8, "full-precision baseline suspiciously low: {rf}");
+    assert!(
+        rq >= rf - 0.01,
+        "quantized recall {rq:.4} fell more than 1% below full {rf:.4}"
+    );
+    let faults = quant.metrics().counter("search.rerank_faults").get();
+    assert!(faults > 0, "quantized searches must bill rerank faults");
+}
+
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "knnmerge-kquant-{tag}-{}",
+        knn_merge::util::unique_scratch_suffix()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn paged_quantized_restore_cuts_full_precision_fault_traffic() {
+    let dir = ckpt_dir("paged");
+    let n = 800usize;
+    let ds = DatasetFamily::Sift.generate(n, 83);
+    let queries = DatasetFamily::Sift.generate_queries(24, 84);
+    let index = StreamingIndex::new(ds.dim, Metric::L2, stream_cfg(false));
+    for i in 0..n {
+        index.insert(&ds.vector(i));
+    }
+    index.flush();
+    index.checkpoint(&dir).unwrap();
+    let pre_segments = index.stats().live_segments;
+    drop(index);
+
+    // Budget far below the ~400 KiB of full-precision rows: the beam
+    // cannot keep the whole dataset resident, so sustained search
+    // traffic shows up as recurring faults.
+    let budget_bytes = 160 << 10;
+    let run = |quantized: bool| -> (u64, u64, f64) {
+        let budget = MemoryBudget::bounded(budget_bytes);
+        let restored = StreamingIndex::restore(
+            &dir,
+            stream_cfg(quantized),
+            &RestoreOptions::paged(std::sync::Arc::clone(&budget)),
+        )
+        .unwrap();
+        // Settle restore-time traffic (SQ8 training reads every row
+        // once when the tier is trained on the fly), then measure the
+        // query phase alone.
+        let fault_bytes0 = budget.fault_bytes();
+        let reranks0 = restored.metrics().counter("search.rerank_faults").get();
+        let mut hits = 0usize;
+        for q in 0..queries.len() {
+            let query = queries.vector(q).to_vec();
+            let truth = exact_topk(&ds, n, &query, 10);
+            let r = restored.search_ef(&query, 10, 64);
+            hits += r.iter().filter(|(_, id)| truth.contains(id)).count();
+        }
+        let _ = restored.metrics_snapshot(); // publishes quant.resident_bytes
+        let quant_gauge = restored.metrics().gauge("quant.resident_bytes").get();
+        if quantized {
+            assert!(quant_gauge > 0, "gauge must report the resident SQ8 tier");
+        } else {
+            assert_eq!(quant_gauge, 0);
+        }
+        (
+            budget.fault_bytes() - fault_bytes0,
+            restored.metrics().counter("search.rerank_faults").get() - reranks0,
+            hits as f64 / (queries.len() * 10) as f64,
+        )
+    };
+
+    let (full_traffic, full_reranks, full_recall) = run(false);
+    let (quant_traffic, quant_reranks, quant_recall) = run(true);
+    assert_eq!(full_reranks, 0, "full-precision path never reranks");
+    assert!(full_traffic > 0, "paged full-precision search must fault");
+    assert!(
+        quant_traffic * 4 <= full_traffic,
+        "quantized query-phase fault bytes {quant_traffic} not >=4x below {full_traffic}"
+    );
+    // Rerank touches only final candidates: per query and segment, at
+    // most `entries * (topk + rerank_slack)` rows ever reach the exact
+    // pass (4 entries/segment is the spread_entries cap).
+    let bound = (queries.len() * pre_segments * 4 * (10 + 32)) as u64;
+    assert!(quant_reranks > 0, "quantized path must bill rerank faults");
+    assert!(
+        quant_reranks <= bound,
+        "rerank faults {quant_reranks} exceed candidate bound {bound}"
+    );
+    assert!(
+        quant_recall >= full_recall - 0.01,
+        "paged quantized recall {quant_recall:.4} vs full {full_recall:.4}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_spills_and_restores_the_sq8_tier() {
+    let dir = ckpt_dir("spill");
+    let n = 400usize;
+    let ds = DatasetFamily::Deep.generate(n, 85);
+    let index = StreamingIndex::new(ds.dim, Metric::L2, stream_cfg(true));
+    for i in 0..n {
+        index.insert(&ds.vector(i));
+    }
+    index.flush();
+    let pre_bytes = index.snapshot().quant_resident_bytes();
+    assert!(pre_bytes > 0);
+    index.checkpoint(&dir).unwrap();
+    let sq8_files = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref()
+                .unwrap()
+                .path()
+                .extension()
+                .is_some_and(|x| x == "sq8")
+        })
+        .count();
+    assert_eq!(
+        sq8_files,
+        index.stats().live_segments,
+        "one .sq8 spill per segment"
+    );
+    drop(index);
+
+    // Restoring with the tier on reloads the trained stores verbatim.
+    let on = StreamingIndex::restore(&dir, stream_cfg(true), &RestoreOptions::default()).unwrap();
+    assert_eq!(on.snapshot().quant_resident_bytes(), pre_bytes);
+    // Restoring with the tier off strips it: the knob is a runtime
+    // choice, not part of the checkpoint contract.
+    let off =
+        StreamingIndex::restore(&dir, stream_cfg(false), &RestoreOptions::default()).unwrap();
+    assert_eq!(off.snapshot().quant_resident_bytes(), 0);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Validate results/kernels.json from the `kernels` bench (ISSUE 7).
+
+Checks:
+- the four kernel rows exist (`kernel_{scalar,simd}_{d32,d128}`) with
+  positive throughput;
+- when dispatch selected a SIMD path (`simd == 1` on the simd rows),
+  the dispatched kernel is >= 2x the scalar reference at d128;
+  on scalar-only machines the speedup gate is skipped with a note
+  (equivalence is covered by the proptests instead);
+- the `sq8_probe` row exists, its quantized recall is within 0.01 of
+  full precision, and the resident-bytes ratio is >= 3.5 (the SQ8 tier
+  replaces 4-byte floats with 1-byte codes plus per-dim params).
+
+Usage: check_kernels.py <kernels.json>
+"""
+
+import json
+import sys
+
+SPEEDUP_FLOOR = 2.0
+RECALL_SLACK = 0.01
+RATIO_FLOOR = 3.5
+
+ERRORS = []
+
+
+def err(msg):
+    ERRORS.append(msg)
+
+
+def main():
+    if len(sys.argv) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    path = sys.argv[1]
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"FAIL {path}: unreadable or invalid JSON: {e}", file=sys.stderr)
+        return 1
+
+    rows = {r.get("label"): r for r in report.get("rows", [])}
+    notes = []
+
+    for dim in (32, 128):
+        for variant in ("scalar", "simd"):
+            label = f"kernel_{variant}_d{dim}"
+            row = rows.get(label)
+            if row is None:
+                err(f"missing row {label!r}")
+                continue
+            if row.get("Mpairs/s", 0) <= 0:
+                err(f"{label}: Mpairs/s must be > 0")
+
+    simd_row = rows.get("kernel_simd_d128")
+    scalar_row = rows.get("kernel_scalar_d128")
+    if simd_row and scalar_row:
+        if simd_row.get("simd") == 1:
+            speedup = simd_row.get("Mpairs/s", 0) / max(scalar_row.get("Mpairs/s", 1e-9), 1e-9)
+            if speedup < SPEEDUP_FLOOR:
+                err(f"kernel_simd_d128: {speedup:.2f}x over scalar, need >= {SPEEDUP_FLOOR}x")
+            else:
+                notes.append(f"simd d128 speedup {speedup:.2f}x")
+        else:
+            notes.append("scalar-only dispatch (no AVX2 or KNN_KERNEL=scalar); speedup gate skipped")
+
+    probe = rows.get("sq8_probe")
+    if probe is None:
+        err("missing row 'sq8_probe'")
+    else:
+        full, sq8 = probe.get("recall_full"), probe.get("recall_sq8")
+        if full is None or sq8 is None:
+            err("sq8_probe: missing recall_full/recall_sq8")
+        elif sq8 < full - RECALL_SLACK:
+            err(f"sq8_probe: quantized recall {sq8:.4f} below full {full:.4f} - {RECALL_SLACK}")
+        else:
+            notes.append(f"recall full={full:.4f} sq8={sq8:.4f}")
+        ratio = probe.get("resident_ratio", 0)
+        if ratio < RATIO_FLOOR:
+            err(f"sq8_probe: resident_ratio {ratio:.2f} below {RATIO_FLOOR}")
+        if probe.get("rerank_rows_per_query", 0) <= 0:
+            err("sq8_probe: rerank_rows_per_query must be > 0 (rerank never ran)")
+
+    if ERRORS:
+        print(f"FAIL {path}: {len(ERRORS)} problem(s)", file=sys.stderr)
+        for e in ERRORS:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    print(f"OK {path}: kernels report valid ({'; '.join(notes)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,10 @@ bitten written-but-not-compiled PRs in this repo:
   5. Cargo.toml target paths exist,
   6. every committed fixture under rust/tests/data/ is referenced by
      name in at least one rust/tests/*.rs file (orphaned golden files
-     mean a test stopped guarding a wire format).
+     mean a test stopped guarding a wire format),
+  7. SIMD hygiene: in files using std::arch/core::arch, every `unsafe`
+     must carry a nearby `// SAFETY:` comment, and `#[target_feature]`
+     functions must sit behind a `cfg(target_arch = ...)` gate.
 
 Exit code 0 = no findings. Anything found prints `FILE:LINE: message`
 and exits 1. Run from anywhere: paths resolve relative to the repo
@@ -281,6 +284,53 @@ for f in rust_files:
             report(f, lineno,
                    "`let _ = Span::enter(...)` drops the guard at once — "
                    "name it `_span`")
+
+# ----------------------------- 7. SIMD unsafe is gated and documented
+
+# Intrinsics are the one place this repo allows `unsafe`. Two rules for
+# any file that touches std::arch / core::arch (checked on RAW text —
+# the SAFETY comments rule 7 wants are exactly what strip_rust drops):
+#  - every `unsafe` fn/block carries a `// SAFETY:` comment (or, for
+#    `unsafe fn` declarations, a `/// # Safety` doc section) on the
+#    same line or in the contiguous comment/attribute block above it,
+#    so the contract (feature detection, slice bounds) is written down;
+#  - every `#[target_feature(...)]` fn lives behind a
+#    `cfg(target_arch = ...)` gate earlier in the file, so the crate
+#    still compiles (scalar-only) on other architectures.
+SAFETY_WINDOW = 4
+for f in rust_files:
+    raw = f.read_text()
+    if "std::arch" not in raw and "core::arch" not in raw:
+        continue
+    lines = raw.split("\n")
+    has_arch_gate = False
+    for lineno, line in enumerate(lines, 1):
+        if re.search(r"cfg\s*\(\s*target_arch", line):
+            has_arch_gate = True
+        if re.search(r"#\[target_feature", line) and not has_arch_gate:
+            report(f, lineno,
+                   "#[target_feature] with no cfg(target_arch=...) gate "
+                   "earlier in the file — non-x86 builds would break")
+        code = line.split("//")[0]  # `unsafe` in a comment is not a use
+        if not re.search(r"\bunsafe\b", code) or "// SAFETY:" in line:
+            continue
+        # Scan upward: a fixed window of plain lines, extended through
+        # the contiguous doc-comment/attribute block (where an
+        # `unsafe fn`'s `# Safety` section lives).
+        documented, plain = False, 0
+        for w in reversed(lines[:lineno - 1]):
+            ws = w.strip()
+            if "// SAFETY:" in w or "# Safety" in ws:
+                documented = True
+                break
+            if not (ws.startswith("//") or ws.startswith("#[")):
+                plain += 1
+                if plain >= SAFETY_WINDOW:
+                    break
+        if not documented:
+            report(f, lineno,
+                   "`unsafe` without a `// SAFETY:` comment (or `# Safety`"
+                   " doc section) above it")
 
 # ------------------------------------------------------------- result
 

@@ -11,6 +11,8 @@
 #   SKIP_RESTORE_SMOKE=1 bash scripts/verify.sh # skip the ~5s durability smoke
 #   RESTORE_SMOKE_SCALE=0.5 bash scripts/verify.sh # bigger restore workload
 #   SKIP_METRICS_SMOKE=1 bash scripts/verify.sh # skip the ~5s metrics smoke
+#   SKIP_KERNEL_SMOKE=1 bash scripts/verify.sh  # skip the ~5s kernel smoke
+#   KERNEL_SMOKE_SCALE=1 bash scripts/verify.sh # bigger kernel workload
 #
 # `cargo fmt` / `cargo clippy` are skipped automatically when the
 # component is not installed (minimal CI containers); the build + test
@@ -54,6 +56,15 @@ if [ "${SKIP_METRICS_SMOKE:-0}" != "1" ]; then
     --segment-size 500 --report-every 0 --queries 8 --delete-rate 0.2 \
     --checkpoint-dir "$mdir/ckpt" --metrics-out "$mdir/metrics.json" >/dev/null
   python3 scripts/check_metrics_snapshot.py "$mdir/metrics.json"
+fi
+
+# Kernel smoke (~5s): the kernels bench must run end to end — scalar vs
+# dispatched one-to-many L2 throughput at d32/d128 plus the SQ8 recall
+# probe — and the checker gates the >=2x SIMD speedup (when AVX2 was
+# detected) and the <=1% quantized recall gap against full precision.
+if [ "${SKIP_KERNEL_SMOKE:-0}" != "1" ]; then
+  KNN_BENCH_SCALE="${KERNEL_SMOKE_SCALE:-0.5}" cargo bench --bench kernels
+  python3 scripts/check_kernels.py results/kernels.json
 fi
 
 # Formatting is a hard gate (STRICT_FMT defaults to on). FMT_FIX=1 (the
