@@ -1,6 +1,10 @@
-"""Pytest shim: make `pytest python/tests/` work from the repo root by
-putting the build-time python package (python/compile) on the path."""
+"""Pytest shim: make `pytest python/tests/` and `pytest scripts/tests/`
+work from the repo root by putting the build-time python package
+(python/compile) and the static-analysis package (scripts/knnlint) on
+the path."""
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))
+_here = os.path.dirname(__file__)
+sys.path.insert(0, os.path.join(_here, "python"))
+sys.path.insert(0, os.path.join(_here, "scripts"))

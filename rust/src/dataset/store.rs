@@ -114,6 +114,9 @@ pub struct MemoryBudget {
     unbilled_faults: AtomicU64,
     unbilled_evictions: AtomicU64,
     unbilled_io_bytes: AtomicU64,
+    // Terminal: reclaim snapshots the member list under this lock and
+    // sweeps *outside* it; sweeps themselves only `try_lock` slots.
+    // LOCK-ORDER: storage.budget.members terminal
     members: Mutex<Members>,
 }
 
@@ -333,6 +336,9 @@ pub(crate) trait Evictable: Send + Sync {
 pub(crate) struct ClockCache<T: ?Sized + Send + Sync + 'static> {
     budget: Arc<MemoryBudget>,
     resident: AtomicU64,
+    // Terminal: get/insert lock exactly one slot and release before
+    // touching the budget; the sweep only ever `try_lock`s.
+    // LOCK-ORDER: storage.cache.slot terminal
     slots: Vec<Mutex<Slot<T>>>,
     hand: AtomicUsize,
 }
@@ -762,6 +768,9 @@ struct PagedVectors {
     /// Rows per chunk (last chunk may be short).
     chunk_rows: usize,
     cache: Arc<ClockCache<[f32]>>,
+    // Serializes seek+read on the shared handle where pread is
+    // unavailable; holding it across the read is the entire point.
+    // LOCK-ORDER: storage.paged.io terminal allow-io
     #[cfg(not(unix))]
     io_lock: std::sync::Mutex<()>,
 }

@@ -41,6 +41,9 @@ pub struct PagedKnnGraph {
     offsets: Vec<u64>,
     cache: Arc<ClockCache<GraphBlock>>,
     #[cfg(not(unix))]
+    // Serializes seek+read on the shared handle where pread is
+    // unavailable; holding it across the read is the entire point.
+    // LOCK-ORDER: graph.paged.io terminal allow-io
     io_lock: std::sync::Mutex<()>,
 }
 

@@ -22,6 +22,7 @@
 //! global.
 
 use super::{IdSpan, KnnGraph, Neighbor, NeighborList};
+use crate::util::le::{self, PutLe};
 use anyhow::{bail, Context, Result};
 use std::io::{Seek, SeekFrom, Write};
 
@@ -34,17 +35,17 @@ pub(crate) const BLOCKED_HEADER_BYTES: u64 = 28;
 /// Serialize a graph to bytes.
 pub fn graph_to_bytes(g: &KnnGraph) -> Vec<u8> {
     let mut out = Vec::with_capacity(20 + g.edge_count() * 9);
-    out.extend_from_slice(&GRAPH_MAGIC.to_le_bytes());
-    out.extend_from_slice(&(g.k as u32).to_le_bytes());
-    out.extend_from_slice(&g.span().offset.to_le_bytes());
-    out.extend_from_slice(&(g.len() as u64).to_le_bytes());
+    out.put_u32(GRAPH_MAGIC);
+    out.put_u32(g.k as u32);
+    out.put_u32(g.span().offset);
+    out.put_u64(g.len() as u64);
     for list in &g.lists {
         assert!(list.len() <= u16::MAX as usize);
-        out.extend_from_slice(&(list.len() as u16).to_le_bytes());
+        out.put_u16(list.len() as u16);
         for nb in list.iter() {
-            out.extend_from_slice(&nb.id.to_le_bytes());
-            out.extend_from_slice(&nb.dist.to_le_bytes());
-            out.push(u8::from(nb.new));
+            out.put_u32(nb.id);
+            out.put_f32(nb.dist);
+            out.put_u8(u8::from(nb.new));
         }
     }
     out
@@ -57,30 +58,22 @@ pub fn graph_payload_bytes(g: &KnnGraph) -> u64 {
 
 /// Deserialize a graph from bytes.
 pub fn graph_from_bytes(bytes: &[u8]) -> Result<KnnGraph> {
-    let mut pos = 0usize;
-    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
-        if *pos + n > bytes.len() {
-            bail!("truncated graph payload at byte {}", *pos);
-        }
-        let s = &bytes[*pos..*pos + n];
-        *pos += n;
-        Ok(s)
-    };
-    let magic = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    let mut cur = le::Cursor::new(bytes, "graph payload");
+    let magic = cur.u32()?;
     if magic != GRAPH_MAGIC {
         bail!("bad graph magic {magic:#x}");
     }
-    let k = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
-    let span_offset = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
-    let n = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+    let k = cur.u32()? as usize;
+    let span_offset = cur.u32()?;
+    let n = cur.u64()? as usize;
     let mut lists = Vec::with_capacity(n);
     for _ in 0..n {
-        let len = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+        let len = cur.u16()? as usize;
         let mut list = NeighborList::new(k);
         for _ in 0..len {
-            let id = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
-            let dist = f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
-            let flags = take(&mut pos, 1)?[0];
+            let id = cur.u32()?;
+            let dist = cur.f32()?;
+            let flags = cur.u8()?;
             list.push_unchecked(Neighbor {
                 id,
                 dist,
@@ -89,9 +82,7 @@ pub fn graph_from_bytes(bytes: &[u8]) -> Result<KnnGraph> {
         }
         lists.push(list);
     }
-    if pos != bytes.len() {
-        bail!("trailing bytes in graph payload");
-    }
+    cur.finish()?;
     Ok(KnnGraph::from_lists_spanned(
         lists,
         k,
@@ -111,11 +102,9 @@ pub fn write_graph(path: &std::path::Path, g: &KnnGraph) -> Result<()> {
 /// file in block by block instead.
 pub fn read_graph(path: &std::path::Path) -> Result<KnnGraph> {
     let bytes = std::fs::read(path)?;
-    if bytes.len() >= 4 {
-        let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
-        if magic == BLOCKED_MAGIC {
-            return blocked_graph_from_bytes(&bytes);
-        }
+    let mut head = le::Cursor::new(&bytes, "graph file");
+    if head.u32().is_ok_and(|magic| magic == BLOCKED_MAGIC) {
+        return blocked_graph_from_bytes(&bytes);
     }
     graph_from_bytes(&bytes)
 }
@@ -186,12 +175,11 @@ impl BlockedGraphWriter {
             self.offsets.push(self.pos);
         }
         self.buf.clear();
-        self.buf
-            .extend_from_slice(&(list.len() as u16).to_le_bytes());
+        self.buf.put_u16(list.len() as u16);
         for nb in list.iter() {
-            self.buf.extend_from_slice(&nb.id.to_le_bytes());
-            self.buf.extend_from_slice(&nb.dist.to_le_bytes());
-            self.buf.push(u8::from(nb.new));
+            self.buf.put_u32(nb.id);
+            self.buf.put_f32(nb.dist);
+            self.buf.put_u8(u8::from(nb.new));
         }
         self.file.write_all(&self.buf)?;
         self.pos += self.buf.len() as u64;
@@ -269,22 +257,14 @@ pub(crate) fn decode_rows(
     k: usize,
     out: &mut Vec<NeighborList>,
 ) -> Result<()> {
-    let mut pos = 0usize;
-    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
-        if *pos + n > bytes.len() {
-            bail!("truncated graph block at byte {}", *pos);
-        }
-        let s = &bytes[*pos..*pos + n];
-        *pos += n;
-        Ok(s)
-    };
+    let mut cur = le::Cursor::new(bytes, "graph block");
     for _ in 0..rows {
-        let len = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+        let len = cur.u16()? as usize;
         let mut list = NeighborList::new(k);
         for _ in 0..len {
-            let id = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
-            let dist = f32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
-            let flags = take(&mut pos, 1)?[0];
+            let id = cur.u32()?;
+            let dist = cur.f32()?;
+            let flags = cur.u8()?;
             list.push_unchecked(Neighbor {
                 id,
                 dist,
@@ -293,9 +273,7 @@ pub(crate) fn decode_rows(
         }
         out.push(list);
     }
-    if pos != bytes.len() {
-        bail!("trailing bytes in graph block");
-    }
+    cur.finish()?;
     Ok(())
 }
 
@@ -312,18 +290,20 @@ pub(crate) struct BlockedHeader {
 /// Parse the blocked header from the file's leading bytes (callers
 /// must supply at least the header + offset table region).
 pub(crate) fn parse_blocked_header(bytes: &[u8]) -> Result<BlockedHeader> {
-    if bytes.len() < BLOCKED_HEADER_BYTES as usize {
-        bail!("blocked graph header truncated");
-    }
-    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    // The cursor reads the fixed header then the offset table, which
+    // sit back-to-back; callers may pass a longer prefix of the file,
+    // so this parse deliberately never calls `finish()`.
+    let mut cur = le::Cursor::new(bytes, "blocked graph header");
+    let magic = cur.u32()?;
     if magic != BLOCKED_MAGIC {
         bail!("bad blocked graph magic {magic:#x}");
     }
-    let k = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
-    let span_offset = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
-    let rows = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
-    let block_rows = u32::from_le_bytes(bytes[20..24].try_into().unwrap()) as usize;
-    let nblocks = u32::from_le_bytes(bytes[24..28].try_into().unwrap()) as usize;
+    let k = cur.u32()? as usize;
+    let span_offset = cur.u32()?;
+    let rows = cur.u64()? as usize;
+    let block_rows = cur.u32()? as usize;
+    let nblocks = cur.u32()? as usize;
+    debug_assert_eq!(cur.pos() as u64, BLOCKED_HEADER_BYTES);
     if block_rows == 0 {
         bail!("blocked graph has zero block_rows");
     }
@@ -335,9 +315,8 @@ pub(crate) fn parse_blocked_header(bytes: &[u8]) -> Result<BlockedHeader> {
         bail!("blocked graph offset table truncated");
     }
     let mut offsets = Vec::with_capacity(nblocks + 1);
-    for i in 0..=nblocks {
-        let at = BLOCKED_HEADER_BYTES as usize + i * 8;
-        offsets.push(u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap()));
+    for _ in 0..=nblocks {
+        offsets.push(cur.u64()?);
     }
     if offsets[0] != table_end as u64 || offsets.windows(2).any(|w| w[0] > w[1]) {
         bail!("blocked graph offset table is not monotone from the header");

@@ -16,6 +16,9 @@ use std::sync::Mutex;
 /// A [`KnnGraph`] with per-entry locks, published thresholds, and a
 /// global accepted-insert counter (drives the convergence test).
 pub struct SharedGraph {
+    // Terminal: Local-Join holds at most one entry lock at a time
+    // (the kgraph pattern) — never two, never anything else under it.
+    // LOCK-ORDER: graph.shared.entry terminal
     entries: Vec<Mutex<NeighborList>>,
     /// `f32::to_bits` of each entry's current rejection threshold.
     /// Monotonically non-increasing; updated under the entry lock, so a

@@ -46,6 +46,7 @@ impl EventRecord {
 pub struct EventJournal {
     start: Instant,
     cap: usize,
+    // LOCK-ORDER: metrics.events.ring terminal
     ring: Mutex<VecDeque<EventRecord>>,
 }
 

@@ -88,9 +88,17 @@ impl Gauge {
 #[derive(Debug)]
 pub struct Registry {
     start: Instant,
+    // The four map locks are terminal: registration/snapshot takes
+    // them one at a time (never nested) and hot paths go through the
+    // returned `Arc`s, so they may be taken while holding any engine
+    // lock but must never wrap another acquisition.
+    // LOCK-ORDER: metrics.registry.counters terminal
     counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    // LOCK-ORDER: metrics.registry.gauges terminal
     gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    // LOCK-ORDER: metrics.registry.histograms terminal
     histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    // LOCK-ORDER: metrics.registry.spans terminal
     spans: Mutex<BTreeMap<String, Arc<SpanStats>>>,
     journal: EventJournal,
 }
@@ -116,6 +124,7 @@ impl Registry {
     /// The process-global registry, for call sites without a natural
     /// owning component (out-of-core coordinator, cluster driver).
     pub fn global() -> Arc<Registry> {
+        // LOCK-ORDER: metrics.global terminal
         static GLOBAL: Mutex<Option<Arc<Registry>>> = Mutex::new(None);
         GLOBAL
             .lock()

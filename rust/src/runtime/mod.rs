@@ -63,6 +63,10 @@ unsafe impl Send for ExeCell {}
 
 /// PJRT-backed distance engine executing the AOT Pallas kernel.
 pub struct XlaEngine {
+    // Terminal + allow-io: the whole contract (see SAFETY above) is
+    // that PJRT dispatch happens *under* this lock — one thread in the
+    // executable at a time — and nothing else is acquired beneath it.
+    // LOCK-ORDER: runtime.exe terminal allow-io
     exe: Mutex<ExeCell>,
     shape: TileShape,
     /// Dispatch counter (perf accounting).

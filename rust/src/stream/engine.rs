@@ -128,6 +128,7 @@ impl SealingBatch {
 /// `tombstones` / `segments` / `sealing` (i.e. bindings → stats →
 /// tombstones). Never take `bindings` or `memtable` while holding it.
 struct StatCounters {
+    // LOCK-ORDER: stream.stats
     lock: Mutex<()>,
     inserted: Arc<Counter>,
     deleted: Arc<Counter>,
@@ -165,10 +166,23 @@ enum PurgeKind {
 }
 
 /// State shared between the index facade and its seal workers.
+///
+/// The full declared lock partial order for the streaming engine,
+/// verified against every acquisition scope by `scripts/knnlint`
+/// (edges read left to right: a lock may be acquired while holding
+/// anything earlier in its chain, never the reverse):
+// LOCK-ORDER: stream.compact -> stream.bindings -> stream.memtable -> stream.stats
+// LOCK-ORDER: stream.stats -> stream.segments
+// LOCK-ORDER: stream.stats -> stream.sealing
+// LOCK-ORDER: stream.stats -> stream.tombstones
+// LOCK-ORDER: stream.memtable -> stream.seal_tx
+// LOCK-ORDER: stream.seal_tx -> stream.seal_workers
 struct Shared {
     cfg: StreamConfig,
     metric: Metric,
+    // LOCK-ORDER: stream.segments
     segments: Mutex<Arc<SegmentSet>>,
+    // LOCK-ORDER: stream.tombstones
     tombstones: Mutex<Arc<TombstoneSet>>,
     /// Upsert gid bindings (see [`GidBindings`]), published
     /// copy-on-write like the tombstone set: readers clone the `Arc`
@@ -177,7 +191,9 @@ struct Shared {
     /// purging — reachable from seal workers — prunes it. Lock order:
     /// `bindings` may be taken before `tombstones` (delete/upsert
     /// do), NEVER the other way around while held.
+    // LOCK-ORDER: stream.bindings
     bindings: Mutex<Arc<GidBindings>>,
+    // LOCK-ORDER: stream.sealing
     sealing: Mutex<Vec<Arc<SealingBatch>>>,
     sealing_done: Condvar,
     /// Observability registry: counters/histograms/spans/events for
@@ -375,14 +391,18 @@ pub struct StreamingIndex {
     /// manifest (fresh per `new`, inherited by `restore`) so two logs
     /// can never share one checkpoint directory's spill files.
     log_id: u64,
+    // LOCK-ORDER: stream.memtable
     memtable: Mutex<MemTable>,
+    // LOCK-ORDER: stream.compact
     compact_lock: Mutex<()>,
     next_gid: AtomicU32,
     next_segment_id: AtomicU64,
     /// Last tombstone epoch the dead-fraction scan ran at (gates the
     /// O(rows) scan to once per tombstone-set change).
     dead_scan_epoch: AtomicU64,
+    // LOCK-ORDER: stream.seal_tx
     seal_tx: Mutex<Option<mpsc::Sender<Arc<SealingBatch>>>>,
+    // LOCK-ORDER: stream.seal_workers
     seal_workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     /// Paged-storage budget whose fault/eviction counters feed the
     /// `budget.*` gauges. Unbounded for in-memory logs; `restore` swaps

@@ -69,6 +69,7 @@ use crate::graph::{serial, PagedKnnGraph};
 use crate::index::IndexGraph;
 use crate::metrics::{Phase, Registry, Span};
 use crate::util::crc32;
+use crate::util::le::{self, PutLe};
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -186,12 +187,12 @@ pub struct CheckpointStats {
 /// given value — the golden-file tests depend on that.
 pub fn manifest_to_bytes(m: &Manifest) -> Vec<u8> {
     let mut p: Vec<u8> = Vec::with_capacity(256 + m.memtable.len() * (4 + m.dim as usize * 4));
-    p.extend_from_slice(&m.dim.to_le_bytes());
-    p.push(metric_tag(m.metric));
-    p.extend_from_slice(&m.config_fingerprint.to_le_bytes());
-    p.extend_from_slice(&m.log_id.to_le_bytes());
-    p.extend_from_slice(&m.next_gid.to_le_bytes());
-    p.extend_from_slice(&m.next_segment_id.to_le_bytes());
+    p.put_u32(m.dim);
+    p.put_u8(metric_tag(m.metric));
+    p.put_u64(m.config_fingerprint);
+    p.put_u64(m.log_id);
+    p.put_u32(m.next_gid);
+    p.put_u64(m.next_segment_id);
     for v in [
         m.inserted,
         m.deleted,
@@ -201,46 +202,46 @@ pub fn manifest_to_bytes(m: &Manifest) -> Vec<u8> {
         m.upserted,
         m.tombstone_epoch,
     ] {
-        p.extend_from_slice(&v.to_le_bytes());
+        p.put_u64(v);
     }
-    p.extend_from_slice(&(m.tombstones.len() as u32).to_le_bytes());
+    p.put_u32(m.tombstones.len() as u32);
     for g in &m.tombstones {
-        p.extend_from_slice(&g.to_le_bytes());
+        p.put_u32(*g);
     }
-    p.extend_from_slice(&(m.bindings.len() as u32).to_le_bytes());
+    p.put_u32(m.bindings.len() as u32);
     for (internal, gid) in &m.bindings {
-        p.extend_from_slice(&internal.to_le_bytes());
-        p.extend_from_slice(&gid.to_le_bytes());
+        p.put_u32(*internal);
+        p.put_u32(*gid);
     }
-    p.extend_from_slice(&(m.current.len() as u32).to_le_bytes());
+    p.put_u32(m.current.len() as u32);
     for (gid, internal) in &m.current {
-        p.extend_from_slice(&gid.to_le_bytes());
-        p.extend_from_slice(&internal.to_le_bytes());
+        p.put_u32(*gid);
+        p.put_u32(*internal);
     }
-    p.extend_from_slice(&(m.segments.len() as u32).to_le_bytes());
+    p.put_u32(m.segments.len() as u32);
     for rec in &m.segments {
-        p.extend_from_slice(&rec.id.to_le_bytes());
-        p.extend_from_slice(&rec.level.to_le_bytes());
-        p.extend_from_slice(&(rec.global_ids.len() as u32).to_le_bytes());
+        p.put_u64(rec.id);
+        p.put_u32(rec.level);
+        p.put_u32(rec.global_ids.len() as u32);
         for g in &rec.global_ids {
-            p.extend_from_slice(&g.to_le_bytes());
+            p.put_u32(*g);
         }
     }
-    p.extend_from_slice(&(m.memtable.len() as u32).to_le_bytes());
+    p.put_u32(m.memtable.len() as u32);
     for (gid, row) in &m.memtable {
         debug_assert_eq!(row.len(), m.dim as usize);
-        p.extend_from_slice(&gid.to_le_bytes());
+        p.put_u32(*gid);
         for v in row {
-            p.extend_from_slice(&v.to_le_bytes());
+            p.put_f32(*v);
         }
     }
     let mut out = Vec::with_capacity(20 + p.len());
-    out.extend_from_slice(&MANIFEST_MAGIC.to_le_bytes());
-    out.extend_from_slice(&MANIFEST_VERSION.to_le_bytes());
-    out.extend_from_slice(&(p.len() as u64).to_le_bytes());
+    out.put_u32(MANIFEST_MAGIC);
+    out.put_u32(MANIFEST_VERSION);
+    out.put_u64(p.len() as u64);
     let crc = crc32(&p);
     out.extend_from_slice(&p);
-    out.extend_from_slice(&crc.to_le_bytes());
+    out.put_u32(crc);
     out
 }
 
@@ -252,27 +253,29 @@ pub fn manifest_from_bytes(bytes: &[u8]) -> Result<Manifest> {
     if bytes.len() < 20 {
         bail!("manifest too short ({} bytes)", bytes.len());
     }
-    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    let mut cur = le::Cursor::new(bytes, "manifest header");
+    let magic = cur.u32()?;
     if magic != MANIFEST_MAGIC {
         bail!("bad manifest magic {magic:#x}");
     }
-    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    let version = cur.u32()?;
     if version != MANIFEST_VERSION {
         bail!("unsupported manifest version {version}");
     }
     // The length field is untrusted: compare via checked subtraction
     // so a bit-flipped huge value cannot overflow (and panic in debug
     // builds) before the mismatch is reported.
-    let payload_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
-    if bytes.len().checked_sub(20) != Some(payload_len) {
+    let payload_len = cur.u64()? as usize;
+    if cur.remaining().checked_sub(4) != Some(payload_len) {
         bail!(
             "manifest length mismatch: file holds {} bytes, header declares a \
              {payload_len}-byte payload",
             bytes.len()
         );
     }
-    let payload = &bytes[16..16 + payload_len];
-    let stored_crc = u32::from_le_bytes(bytes[16 + payload_len..].try_into().unwrap());
+    let payload = cur.take(payload_len)?;
+    let stored_crc = cur.u32()?;
+    cur.finish()?;
     let actual = crc32(payload);
     if stored_crc != actual {
         bail!("manifest CRC mismatch (stored {stored_crc:#010x}, computed {actual:#010x})");
@@ -281,65 +284,51 @@ pub fn manifest_from_bytes(bytes: &[u8]) -> Result<Manifest> {
 }
 
 fn parse_payload(p: &[u8]) -> Result<Manifest> {
-    let mut pos = 0usize;
-    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
-        if *pos + n > p.len() {
-            bail!("truncated manifest payload at byte {}", *pos);
-        }
-        let s = &p[*pos..*pos + n];
-        *pos += n;
-        Ok(s)
-    };
-    let u32_at = |pos: &mut usize| -> Result<u32> {
-        Ok(u32::from_le_bytes(take(pos, 4)?.try_into().unwrap()))
-    };
-    let dim = u32_at(&mut pos)?;
+    let mut cur = le::Cursor::new(p, "manifest payload");
+    let dim = cur.u32()?;
     if dim == 0 {
         bail!("manifest declares dimension 0");
     }
-    let metric = metric_from_tag(take(&mut pos, 1)?[0])?;
-    let u64_at = |pos: &mut usize| -> Result<u64> {
-        Ok(u64::from_le_bytes(take(pos, 8)?.try_into().unwrap()))
-    };
-    let config_fingerprint = u64_at(&mut pos)?;
-    let log_id = u64_at(&mut pos)?;
-    let next_gid = u32_at(&mut pos)?;
-    let next_segment_id = u64_at(&mut pos)?;
-    let inserted = u64_at(&mut pos)?;
-    let deleted = u64_at(&mut pos)?;
-    let sealed = u64_at(&mut pos)?;
-    let compactions = u64_at(&mut pos)?;
-    let reclaimed = u64_at(&mut pos)?;
-    let upserted = u64_at(&mut pos)?;
-    let tombstone_epoch = u64_at(&mut pos)?;
-    let n = u32_at(&mut pos)? as usize;
+    let metric = metric_from_tag(cur.u8()?)?;
+    let config_fingerprint = cur.u64()?;
+    let log_id = cur.u64()?;
+    let next_gid = cur.u32()?;
+    let next_segment_id = cur.u64()?;
+    let inserted = cur.u64()?;
+    let deleted = cur.u64()?;
+    let sealed = cur.u64()?;
+    let compactions = cur.u64()?;
+    let reclaimed = cur.u64()?;
+    let upserted = cur.u64()?;
+    let tombstone_epoch = cur.u64()?;
+    let n = cur.u32()? as usize;
     let mut tombstones = Vec::with_capacity(n.min(1 << 20));
     for _ in 0..n {
-        tombstones.push(u32_at(&mut pos)?);
+        tombstones.push(cur.u32()?);
     }
-    let n = u32_at(&mut pos)? as usize;
+    let n = cur.u32()? as usize;
     let mut bindings = Vec::with_capacity(n.min(1 << 20));
     for _ in 0..n {
-        let internal = u32_at(&mut pos)?;
-        let gid = u32_at(&mut pos)?;
+        let internal = cur.u32()?;
+        let gid = cur.u32()?;
         bindings.push((internal, gid));
     }
-    let n = u32_at(&mut pos)? as usize;
+    let n = cur.u32()? as usize;
     let mut current = Vec::with_capacity(n.min(1 << 20));
     for _ in 0..n {
-        let gid = u32_at(&mut pos)?;
-        let internal = u32_at(&mut pos)?;
+        let gid = cur.u32()?;
+        let internal = cur.u32()?;
         current.push((gid, internal));
     }
-    let n = u32_at(&mut pos)? as usize;
+    let n = cur.u32()? as usize;
     let mut segments = Vec::with_capacity(n.min(1 << 16));
     for _ in 0..n {
-        let id = u64_at(&mut pos)?;
-        let level = u32_at(&mut pos)?;
-        let len = u32_at(&mut pos)? as usize;
+        let id = cur.u64()?;
+        let level = cur.u32()?;
+        let len = cur.u32()? as usize;
         let mut global_ids = Vec::with_capacity(len.min(1 << 24));
         for _ in 0..len {
-            global_ids.push(u32_at(&mut pos)?);
+            global_ids.push(cur.u32()?);
         }
         segments.push(SegmentRecord {
             id,
@@ -347,20 +336,18 @@ fn parse_payload(p: &[u8]) -> Result<Manifest> {
             global_ids,
         });
     }
-    let n = u32_at(&mut pos)? as usize;
+    let n = cur.u32()? as usize;
     let mut memtable = Vec::with_capacity(n.min(1 << 20));
     for _ in 0..n {
-        let gid = u32_at(&mut pos)?;
-        let raw = take(&mut pos, dim as usize * 4)?;
+        let gid = cur.u32()?;
+        let raw = cur.take(dim as usize * 4)?;
         let row: Vec<f32> = raw
             .chunks_exact(4)
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
             .collect();
         memtable.push((gid, row));
     }
-    if pos != p.len() {
-        bail!("trailing bytes in manifest payload");
-    }
+    cur.finish()?;
     Ok(Manifest {
         dim,
         metric,
@@ -413,19 +400,19 @@ pub fn read_manifest(dir: &Path) -> Result<Manifest> {
 /// plus the segment's entry vertices (byte-stable).
 pub fn index_to_bytes(index: &IndexGraph, entries: &[u32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(24 + index.edge_count() * 4);
-    out.extend_from_slice(&INDEX_MAGIC.to_le_bytes());
-    out.extend_from_slice(&(index.max_degree as u32).to_le_bytes());
-    out.extend_from_slice(&index.entry.to_le_bytes());
-    out.extend_from_slice(&(index.len() as u64).to_le_bytes());
-    out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    out.put_u32(INDEX_MAGIC);
+    out.put_u32(index.max_degree as u32);
+    out.put_u32(index.entry);
+    out.put_u64(index.len() as u64);
+    out.put_u32(entries.len() as u32);
     for &e in entries {
-        out.extend_from_slice(&e.to_le_bytes());
+        out.put_u32(e);
     }
     for adj in &index.adj {
         assert!(adj.len() <= u16::MAX as usize);
-        out.extend_from_slice(&(adj.len() as u16).to_le_bytes());
+        out.put_u16(adj.len() as u16);
         for &v in adj {
-            out.extend_from_slice(&v.to_le_bytes());
+            out.put_u32(v);
         }
     }
     out
@@ -433,39 +420,29 @@ pub fn index_to_bytes(index: &IndexGraph, entries: &[u32]) -> Vec<u8> {
 
 /// Parse a `KIDX` payload back into the search structure.
 pub fn index_from_bytes(bytes: &[u8]) -> Result<(IndexGraph, Vec<u32>)> {
-    let mut pos = 0usize;
-    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
-        if *pos + n > bytes.len() {
-            bail!("truncated index graph at byte {}", *pos);
-        }
-        let s = &bytes[*pos..*pos + n];
-        *pos += n;
-        Ok(s)
-    };
-    let magic = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
+    let mut cur = le::Cursor::new(bytes, "index graph payload");
+    let magic = cur.u32()?;
     if magic != INDEX_MAGIC {
         bail!("bad index graph magic {magic:#x}");
     }
-    let max_degree = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
-    let entry = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap());
-    let n = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
-    let n_entries = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let max_degree = cur.u32()? as usize;
+    let entry = cur.u32()?;
+    let n = cur.u64()? as usize;
+    let n_entries = cur.u32()? as usize;
     let mut entries = Vec::with_capacity(n_entries.min(64));
     for _ in 0..n_entries {
-        entries.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()));
+        entries.push(cur.u32()?);
     }
     let mut adj = Vec::with_capacity(n.min(1 << 24));
     for _ in 0..n {
-        let len = u16::from_le_bytes(take(&mut pos, 2)?.try_into().unwrap()) as usize;
+        let len = cur.u16()? as usize;
         let mut row = Vec::with_capacity(len);
         for _ in 0..len {
-            row.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()));
+            row.push(cur.u32()?);
         }
         adj.push(row);
     }
-    if pos != bytes.len() {
-        bail!("trailing bytes in index graph payload");
-    }
+    cur.finish()?;
     Ok((
         IndexGraph {
             adj,

@@ -10,6 +10,12 @@
 //! point their tombstones are purged from the set too — so the set's
 //! size is bounded by the deletes still awaiting compaction, not by
 //! the lifetime delete count.
+//!
+//! This type holds no lock of its own — the `Mutex<Arc<TombstoneSet>>`
+//! that publishes it lives in `stream::engine::Shared` as
+//! `stream.tombstones`, a leaf of the engine's declared order (the
+//! writer path is bindings → stats → tombstones):
+// LOCK-ORDER: stream.stats -> stream.tombstones
 
 use std::collections::HashSet;
 use std::sync::Arc;

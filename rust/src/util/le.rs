@@ -1,0 +1,182 @@
+//! Little-endian wire helpers shared by the binary (de)serializers
+//! (`graph::serial`, `stream::persist`).
+//!
+//! Every wire format in this crate is little-endian and parsed by the
+//! same cursor discipline: take exactly-`n` bytes or fail with a
+//! *clean* error naming the payload and offset — truncated or corrupt
+//! input must never panic. Before this module, each parser carried its
+//! own `take` closure plus a `try_into().unwrap()` per field; [`Cursor`]
+//! centralizes both so the per-format code reads as pure structure.
+
+use anyhow::{bail, Result};
+
+/// A checked little-endian read cursor over a byte slice.
+///
+/// `what` names the payload in error messages ("graph payload",
+/// "manifest payload", ...), keeping diagnostics as specific as the
+/// hand-rolled closures this type replaced.
+pub struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    what: &'static str,
+}
+
+impl<'a> Cursor<'a> {
+    /// Start a cursor at the beginning of `bytes`.
+    pub fn new(bytes: &'a [u8], what: &'static str) -> Cursor<'a> {
+        Cursor {
+            bytes,
+            pos: 0,
+            what,
+        }
+    }
+
+    /// Current offset from the start of the slice.
+    #[inline]
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes not yet consumed.
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    /// Take exactly `n` bytes, failing cleanly on truncation.
+    #[inline]
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!("truncated {} at byte {}", self.what, self.pos);
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    #[inline]
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    #[inline]
+    pub fn u16(&mut self) -> Result<u16> {
+        // take() returned exactly 2 bytes, so the conversion to
+        // [u8; 2] is infallible (same for the widths below).
+        // PANIC-OK: exact-length slice from take().
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn u32(&mut self) -> Result<u32> {
+        // PANIC-OK: exact-length slice from take().
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn u64(&mut self) -> Result<u64> {
+        // PANIC-OK: exact-length slice from take().
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    #[inline]
+    pub fn f32(&mut self) -> Result<f32> {
+        // PANIC-OK: exact-length slice from take().
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Assert the payload is exactly consumed (wire formats here carry
+    /// no padding, so leftover bytes mean corruption).
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.bytes.len() {
+            bail!("trailing bytes in {}", self.what);
+        }
+        Ok(())
+    }
+}
+
+/// Little-endian append helpers for `Vec<u8>` serializers — the write
+/// mirror of [`Cursor`].
+pub trait PutLe {
+    fn put_u8(&mut self, v: u8);
+    fn put_u16(&mut self, v: u16);
+    fn put_u32(&mut self, v: u32);
+    fn put_u64(&mut self, v: u64);
+    fn put_f32(&mut self, v: f32);
+}
+
+impl PutLe for Vec<u8> {
+    #[inline]
+    fn put_u8(&mut self, v: u8) {
+        self.push(v);
+    }
+
+    #[inline]
+    fn put_u16(&mut self, v: u16) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    fn put_u32(&mut self, v: u32) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    fn put_u64(&mut self, v: u64) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    fn put_f32(&mut self, v: f32) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cursor_roundtrips_every_width() {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.put_u8(7);
+        buf.put_u16(513);
+        buf.put_u32(0xDEAD_BEEF);
+        buf.put_u64(1 << 40);
+        buf.put_f32(-1.5);
+        let mut cur = Cursor::new(&buf, "test payload");
+        assert_eq!(cur.u8().unwrap(), 7);
+        assert_eq!(cur.u16().unwrap(), 513);
+        assert_eq!(cur.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(cur.u64().unwrap(), 1 << 40);
+        assert_eq!(cur.f32().unwrap(), -1.5);
+        assert_eq!(cur.remaining(), 0);
+        cur.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_fails_cleanly_with_payload_name() {
+        let mut cur = Cursor::new(&[1, 2, 3], "tiny payload");
+        assert_eq!(cur.u16().unwrap(), 0x0201);
+        let err = cur.u32().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("tiny payload"), "got: {msg}");
+        assert!(msg.contains("byte 2"), "got: {msg}");
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected_by_finish() {
+        let mut cur = Cursor::new(&[0u8; 6], "padded payload");
+        cur.u32().unwrap();
+        let err = cur.finish().unwrap_err();
+        assert!(format!("{err:#}").contains("trailing bytes in padded payload"));
+    }
+
+    #[test]
+    fn take_never_panics_on_huge_requests() {
+        let mut cur = Cursor::new(&[0u8; 4], "small payload");
+        assert!(cur.take(usize::MAX).is_err());
+        assert_eq!(cur.pos(), 0); // failed take consumes nothing
+        assert!(cur.u32().is_ok());
+    }
+}

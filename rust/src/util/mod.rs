@@ -1,10 +1,12 @@
 //! Shared substrates built from scratch for this reproduction: a fast
 //! deterministic PRNG, a parallel-for helper (OpenMP stand-in), a JSON
-//! writer for result files, a tiny property-testing driver, and a
-//! CRC-32 for checkpoint-manifest integrity.
+//! writer for result files, a tiny property-testing driver, a CRC-32
+//! for checkpoint-manifest integrity, and the little-endian wire
+//! cursor shared by the binary serializers.
 
 pub mod crc;
 pub mod json;
+pub mod le;
 pub mod parallel;
 pub mod proptest;
 pub mod rng;

@@ -67,6 +67,9 @@ where
 {
     let mut out = vec![T::default(); n];
     {
+        // Terminal: each worker locks exactly one slot to publish its
+        // result; nothing else is ever acquired under it.
+        // LOCK-ORDER: util.parallel.slot terminal
         let slots: Vec<std::sync::Mutex<&mut T>> =
             out.iter_mut().map(std::sync::Mutex::new).collect();
         parallel_for(n, |i| {

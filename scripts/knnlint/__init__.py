@@ -1,0 +1,18 @@
+"""knnlint — static analysis gate for the knn-merge repo.
+
+A modular rule engine over the Rust tree that runs without a Rust
+toolchain: structural tripwires (delimiter balance, module tree,
+import resolution, Cargo targets, fixture references), observability
+hygiene (RAII spans, SIMD safety comments), concurrency invariants
+(declared `// LOCK-ORDER:` partial order, locks held across I/O), a
+panic-path audit, and cross-layer coupling checks (wire-format magics
+vs. fixtures vs. gen_fixtures.py, metric names vs. the metrics smoke,
+RowRef/ListRef pin-guard discipline).
+
+Run `python3 scripts/knnlint --help`. Findings not covered by the
+committed baseline (scripts/knnlint/baseline.json) fail the gate.
+"""
+
+from .engine import Context, run  # noqa: F401
+from .findings import Finding  # noqa: F401
+from .lexer import strip_rust  # noqa: F401

@@ -1,0 +1,13 @@
+"""Entry point for both `python3 scripts/knnlint` (directory execution,
+where sys.path[0] is the package dir itself) and `python3 -m knnlint`."""
+
+import os
+import sys
+
+if __package__ in (None, ""):
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    __package__ = "knnlint"  # noqa: A001
+
+from knnlint.cli import main
+
+sys.exit(main())

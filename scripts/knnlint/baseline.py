@@ -1,0 +1,100 @@
+"""Committed-baseline handling: new findings fail, grandfathered pass.
+
+The baseline file is JSON:
+
+    {"version": 1,
+     "entries": [{"rule": ..., "path": ..., "message": ...,
+                  "count": 1, "justification": "..."}]}
+
+Matching is by `(rule, path, message)` with a per-key count budget —
+line numbers are ignored so the baseline survives unrelated edits.
+Every entry must carry a one-line justification; `--update-baseline`
+seeds one from per-rule defaults and preserves hand-edited text on
+refresh.
+"""
+
+import json
+from collections import Counter
+
+BASELINE_VERSION = 1
+
+# Seed justifications for `--update-baseline`. Hand-edit the baseline
+# afterwards where a site deserves a more specific rationale.
+DEFAULT_JUSTIFICATIONS = {
+    "panic-path": (
+        "grandfathered at the PR-8 panic-audit seed; new sites need a "
+        "`// PANIC-OK:` rationale or a Result-returning fix"
+    ),
+    "lock-io": (
+        "reviewed: the hold is intentional (see the adjacent code "
+        "comment) and the lock is not an annotatable named field"
+    ),
+    "lock-order": "reviewed at baseline seed; scheduled for untangling",
+    "metrics-coupling": (
+        "recorded in Rust but not asserted by the metrics smoke — the "
+        "smoke checks a representative subset of the surface"
+    ),
+}
+FALLBACK_JUSTIFICATION = "grandfathered pre-existing finding (PR-8 baseline seed)"
+
+
+def load(path):
+    if not path.exists():
+        return {"version": BASELINE_VERSION, "entries": []}
+    data = json.loads(path.read_text())
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(f"{path}: unsupported baseline version {data.get('version')!r}")
+    return data
+
+
+def apply(findings, data):
+    """Mark findings covered by the baseline; return stale entries.
+
+    Mutates `findings` in place (sets `.baselined` / `.justification`).
+    Returns a list of `(key, unused_count)` for baseline entries that no
+    longer match anything — candidates for pruning.
+    """
+    budget = Counter()
+    just = {}
+    for e in data.get("entries", []):
+        k = (e["rule"], e["path"], e["message"])
+        budget[k] += int(e.get("count", 1))
+        just[k] = e.get("justification", "")
+    for f in findings:
+        k = f.key()
+        if budget[k] > 0:
+            budget[k] -= 1
+            f.baselined = True
+            f.justification = just.get(k, "")
+    return [(k, n) for k, n in sorted(budget.items()) if n > 0]
+
+
+def build(findings, previous=None):
+    """Construct baseline data from the current findings.
+
+    Justifications carry over from `previous` where the key matches;
+    new keys get the per-rule default.
+    """
+    prev_just = {}
+    for e in (previous or {}).get("entries", []):
+        prev_just[(e["rule"], e["path"], e["message"])] = e.get("justification", "")
+    counts = Counter(f.key() for f in findings)
+    entries = []
+    for (rule, path, message), count in sorted(counts.items()):
+        justification = prev_just.get((rule, path, message)) or DEFAULT_JUSTIFICATIONS.get(
+            rule, FALLBACK_JUSTIFICATION
+        )
+        entries.append(
+            {
+                "rule": rule,
+                "path": path,
+                "message": message,
+                "count": count,
+                "justification": justification,
+            }
+        )
+    return {"version": BASELINE_VERSION, "entries": entries}
+
+
+def save(path, data):
+    path.write_text(json.dumps(data, indent=2, sort_keys=False) + "\n")

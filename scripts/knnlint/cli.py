@@ -1,0 +1,115 @@
+"""knnlint command line.
+
+    python3 scripts/knnlint                    # text findings, exit 1 on new
+    python3 scripts/knnlint --json results/lint.json
+    python3 scripts/knnlint --update-baseline  # re-seed the baseline
+    python3 scripts/knnlint --rules locks,panics
+
+Exit code 0 = every finding is covered by the committed baseline
+(scripts/knnlint/baseline.json). Any non-baselined finding exits 1,
+regardless of severity — severities shape triage, not the gate.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import baseline as baseline_mod
+from .engine import MODULE_RULES, all_rules, run
+
+PACKAGE_DIR = Path(__file__).resolve().parent
+DEFAULT_ROOT = PACKAGE_DIR.parent.parent
+DEFAULT_BASELINE = PACKAGE_DIR / "baseline.json"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="knnlint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("--root", type=Path, default=DEFAULT_ROOT,
+                    help="repo root to scan (default: the repo containing this package)")
+    ap.add_argument("--json", type=Path, metavar="PATH", dest="json_out",
+                    help="also write machine-readable findings to PATH")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="baseline file (default: scripts/knnlint/baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: every finding fails")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the current findings "
+                         "(preserves existing justifications) and exit 0")
+    ap.add_argument("--rules", metavar="LIST",
+                    help="comma-separated rule modules to run "
+                         f"(default: all of {','.join(n for n, _ in all_rules())})")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress baselined findings in the text output")
+    args = ap.parse_args(argv)
+
+    only = set(args.rules.split(",")) if args.rules else None
+    if only:
+        known = {n for n, _ in all_rules()}
+        unknown = only - known
+        if unknown:
+            ap.error(f"unknown rule module(s): {', '.join(sorted(unknown))}")
+
+    ctx = run(args.root, only=only)
+    findings = ctx.findings
+
+    if args.update_baseline:
+        previous = baseline_mod.load(args.baseline) if args.baseline.exists() else None
+        data = baseline_mod.build(findings, previous)
+        baseline_mod.save(args.baseline, data)
+        print(f"baseline updated: {len(data['entries'])} entr(y/ies) covering "
+              f"{len(findings)} finding(s) -> {args.baseline}")
+        return 0
+
+    stale = []
+    if not args.no_baseline:
+        try:
+            data = baseline_mod.load(args.baseline)
+        except ValueError as e:
+            print(f"knnlint: {e}", file=sys.stderr)
+            return 2
+        stale = baseline_mod.apply(findings, data)
+        if only:
+            # A subset run can't judge entries owned by modules that
+            # didn't execute — only report staleness for rules that ran.
+            ran = set().union(*(MODULE_RULES[m] for m in only))
+            stale = [(k, n) for k, n in stale if k[0] in ran]
+
+    new = [f for f in findings if not f.baselined]
+    old = [f for f in findings if f.baselined]
+
+    if args.json_out:
+        args.json_out.parent.mkdir(parents=True, exist_ok=True)
+        counts = {"error": 0, "warning": 0, "info": 0}
+        for f in findings:
+            counts[f.severity] += 1
+        payload = {
+            "version": 1,
+            "tool": "knnlint",
+            "root": str(ctx.root),
+            "files_scanned": len(ctx.rust_files),
+            "rules": sorted({f.rule for f in findings} | (only or set())),
+            "counts": {**counts, "baselined": len(old), "new": len(new)},
+            "findings": [f.to_json() for f in findings],
+            "stale_baseline_entries": [
+                {"rule": k[0], "path": k[1], "message": k[2], "count": n}
+                for k, n in stale
+            ],
+        }
+        args.json_out.write_text(json.dumps(payload, indent=2) + "\n")
+
+    shown = new if args.quiet else findings
+    for f in shown:
+        print(f.text())
+    if stale:
+        print(f"note: {sum(n for _, n in stale)} stale baseline entr(y/ies) no "
+              f"longer match — prune with --update-baseline")
+    if new:
+        print(f"\n{len(new)} new finding(s) ({len(old)} baselined)")
+        return 1
+    print(f"knnlint clean: {len(ctx.rust_files)} files, "
+          f"{len(old)} baselined finding(s), 0 new")
+    return 0

@@ -1,0 +1,100 @@
+"""Rule engine: file discovery, caching, and rule dispatch.
+
+Rules are functions `run(ctx)` that call `ctx.report(...)`. The
+Context owns the raw/stripped text caches so each file is read and
+lexed once no matter how many rules look at it.
+"""
+
+from pathlib import Path
+
+from .findings import Finding, SEVERITIES
+from .lexer import strip_rust
+
+
+class Context:
+    def __init__(self, root):
+        self.root = Path(root).resolve()
+        self.rust_src = self.root / "rust" / "src"
+        self.findings: list[Finding] = []
+        self._raw: dict[Path, str] = {}
+        self._stripped: dict[Path, str] = {}
+
+    # ------------------------------------------------------- discovery
+
+    @property
+    def src_files(self) -> list[Path]:
+        return sorted(self.rust_src.rglob("*.rs")) if self.rust_src.is_dir() else []
+
+    @property
+    def rust_files(self) -> list[Path]:
+        """Everything the sweep covers: src, tests, benches, examples."""
+        return (
+            self.src_files
+            + sorted((self.root / "rust").glob("tests/*.rs"))
+            + sorted((self.root / "rust").glob("benches/*.rs"))
+            + sorted(self.root.glob("examples/*.rs"))
+        )
+
+    # --------------------------------------------------------- caching
+
+    def raw(self, path: Path) -> str:
+        if path not in self._raw:
+            self._raw[path] = path.read_text()
+        return self._raw[path]
+
+    def stripped(self, path: Path) -> str:
+        if path not in self._stripped:
+            self._stripped[path] = strip_rust(self.raw(path))
+        return self._stripped[path]
+
+    # ------------------------------------------------------- reporting
+
+    def rel(self, path: Path) -> str:
+        try:
+            return path.resolve().relative_to(self.root).as_posix()
+        except ValueError:
+            return path.as_posix()
+
+    def report(self, rule, path, line, message, severity="error"):
+        assert severity in SEVERITIES, severity
+        self.findings.append(
+            Finding(rule=rule, path=self.rel(Path(path)), line=line,
+                    message=message, severity=severity)
+        )
+
+
+# Finding-rule ids each module can emit — used to scope baseline
+# staleness checks to the modules that actually ran.
+MODULE_RULES = {
+    "structure": {"balance", "modtree", "imports", "cargo-paths", "fixtures"},
+    "spans": {"span-raii"},
+    "simd": {"simd"},
+    "locks": {"lock-order", "lock-io"},
+    "panics": {"panic-path"},
+    "coupling": {"magic-coupling", "metrics-coupling", "ref-guards"},
+}
+
+
+def all_rules():
+    """Ordered (name, run) pairs. Import here to avoid cycles."""
+    from .rules import coupling, locks, panics, simd, spans, structure
+
+    return [
+        ("structure", structure.run),
+        ("spans", spans.run),
+        ("simd", simd.run),
+        ("locks", locks.run),
+        ("panics", panics.run),
+        ("coupling", coupling.run),
+    ]
+
+
+def run(root, only=None) -> Context:
+    """Run rule modules over `root`; returns the populated Context."""
+    ctx = Context(root)
+    for name, fn in all_rules():
+        if only and name not in only:
+            continue
+        fn(ctx)
+    ctx.findings.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    return ctx

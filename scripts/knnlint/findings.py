@@ -1,0 +1,40 @@
+"""Finding model: what a rule reports and how the baseline matches it.
+
+A finding's identity is `(rule, path, message)` — deliberately *not*
+the line number, so committed baselines survive unrelated edits that
+shift code up or down. Identical findings in one file (e.g. several
+grandfathered `unwrap()`s with the same snippet) are matched by count.
+"""
+
+from dataclasses import dataclass, field
+
+SEVERITIES = ("error", "warning", "info")
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str  # repo-relative, forward slashes
+    line: int
+    message: str
+    severity: str = "error"
+    baselined: bool = False
+    justification: str = ""
+
+    def key(self):
+        return (self.rule, self.path, self.message)
+
+    def text(self) -> str:
+        tag = " (baselined)" if self.baselined else ""
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}{tag}"
+
+    def to_json(self) -> dict:
+        return {
+            "rule": self.rule,
+            "severity": self.severity,
+            "path": self.path,
+            "line": self.line,
+            "message": self.message,
+            "baselined": self.baselined,
+            "justification": self.justification or None,
+        }

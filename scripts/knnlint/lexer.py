@@ -1,0 +1,154 @@
+"""Shared Rust lexer/stripper for all knnlint rules.
+
+`strip_rust` removes comments and string/char literals while preserving
+newlines, so downstream rules can regex over *code* without tripping on
+text. It understands:
+
+  - line comments `//...` and nested block comments `/* /* */ */`,
+  - cooked strings `"..."` (with escapes),
+  - raw strings `r"..."`, `r#"..."#`, ... (any number of hashes),
+  - byte strings `b"..."` and raw byte strings `br"..."`, `br#"..."#`
+    (previously lexed as identifier + plain string — the `b`/`r`
+    prefix leaked into the stripped text and long hash runs broke the
+    raw-string detection window),
+  - char and byte-char literals `'x'`, `'\n'`, `b'x'`, `b'\xff'`,
+  - lifetimes `'a` (the tick is dropped, the identifier is kept).
+
+Multi-line literals keep their newline count so line numbers computed
+on the stripped text match the raw file.
+"""
+
+import re
+
+_RAW_PREFIX = re.compile(r'b?r(#*)"')
+
+
+def strip_rust(text: str) -> str:
+    """Remove string/char literals and comments, preserving newlines."""
+    out = []
+    i, n = 0, len(text)
+    prev = ""  # last raw character consumed (guards prefix detection)
+    while i < n:
+        c = text[i]
+        two = text[i : i + 2]
+        # `b"`/`r"`/`br#"` are literal prefixes only when they start a
+        # token — `crc32b` followed by something is an identifier.
+        ident_cont = prev.isalnum() or prev == "_"
+        if two == "//":
+            j = text.find("\n", i)
+            i = n if j < 0 else j
+            prev = ""
+        elif two == "/*":
+            depth, i = 1, i + 2
+            while i < n and depth:
+                if text[i : i + 2] == "/*":
+                    depth, i = depth + 1, i + 2
+                elif text[i : i + 2] == "*/":
+                    depth, i = depth - 1, i + 2
+                else:
+                    if text[i] == "\n":
+                        out.append("\n")
+                    i += 1
+            prev = ""
+        elif not ident_cont and _RAW_PREFIX.match(text, i):
+            m = _RAW_PREFIX.match(text, i)
+            hashes = m.group(1)
+            end = text.find('"' + hashes, m.end())
+            seg = text[i : end + 1 + len(hashes)] if end >= 0 else text[i:]
+            out.append("\n" * seg.count("\n"))
+            i = n if end < 0 else end + 1 + len(hashes)
+            prev = '"'
+        elif c == '"' or (not ident_cont and two == 'b"'):
+            j = i + (2 if c == "b" else 1)
+            while j < n and text[j] != '"':
+                j += 2 if text[j] == "\\" else 1
+            out.append("\n" * text[i:j].count("\n"))
+            i = j + 1
+            prev = '"'
+        elif c == "'" or (not ident_cont and two == "b'"):
+            t = i if c == "'" else i + 1  # index of the opening tick
+            if t + 1 < n and text[t + 1] == "\\":
+                j = text.find("'", t + 2)
+                i = t + 2 if j < 0 else j + 1
+                prev = "'"
+            elif t + 2 < n and text[t + 2] == "'":
+                i = t + 3
+                prev = "'"
+            elif c != "'":  # malformed `b'…`; consume the prefix only
+                out.append(c)
+                i += 1
+                prev = c
+            else:  # lifetime — keep the tick out, keep the ident
+                i += 1
+                prev = "'"
+        else:
+            out.append(c)
+            i += 1
+            prev = c
+    return "".join(out)
+
+
+def line_of(text: str, offset: int) -> int:
+    """1-based line number of `offset` in `text`."""
+    return text.count("\n", 0, offset) + 1
+
+
+def brace_blocks(text: str):
+    """All `{...}` intervals as (open_offset, close_offset) pairs.
+
+    `text` must be stripped (no braces inside literals/comments).
+    Unclosed blocks extend to the end of the text.
+    """
+    stack, blocks = [], []
+    for i, ch in enumerate(text):
+        if ch == "{":
+            stack.append(i)
+        elif ch == "}" and stack:
+            blocks.append((stack.pop(), i))
+    for open_ in stack:
+        blocks.append((open_, len(text)))
+    return blocks
+
+
+CFG_TEST_RE = re.compile(r"#\[cfg\(test\)\]\s*(?:pub\s+)?mod\s+\w+\s*\{")
+
+
+def cfg_test_ranges(text):
+    """Offset ranges of `#[cfg(test)] mod … { … }` blocks in stripped text."""
+    blocks = brace_blocks(text)
+    ranges = []
+    for m in CFG_TEST_RE.finditer(text):
+        open_off = text.find("{", m.start())
+        block = next((b for b in blocks if b[0] == open_off), None)
+        if block:
+            ranges.append(block)
+    return ranges
+
+
+def drop_cfg_test_lines(stripped: str, raw: str) -> str:
+    """`raw` with the lines of `#[cfg(test)]` modules blanked out.
+
+    Stripped and raw text agree on line numbers (strip_rust preserves
+    newlines), so test blocks found in the stripped form map straight
+    onto raw lines.
+    """
+    spans = [
+        (line_of(stripped, s), line_of(stripped, e))
+        for s, e in cfg_test_ranges(stripped)
+    ]
+    if not spans:
+        return raw
+    out = []
+    for idx, ln in enumerate(raw.split("\n"), 1):
+        out.append("" if any(a <= idx <= b for a, b in spans) else ln)
+    return "\n".join(out)
+
+
+def innermost_block(blocks, offset):
+    """The tightest (open, close) interval containing `offset`."""
+    best = None
+    for open_, close in blocks:
+        if open_ < offset < close:
+            if best is None or open_ > best[0]:
+                best = (open_, close)
+    return best

@@ -1,0 +1,1 @@
+"""knnlint rule modules. Each exposes `run(ctx)`."""

@@ -1,0 +1,449 @@
+"""Lock-order checking against declared `// LOCK-ORDER:` annotations.
+
+Two findings families:
+
+  lock-order  an acquired-while-held edge between two annotated locks
+              that the declared partial order does not allow (an
+              inversion or an undeclared edge), a re-entrant
+              acquisition, a terminal lock held across another
+              acquisition, or an inconsistency in the declarations
+              themselves (cycles, unbound annotations).
+  lock-io     a lock held across file I/O, a channel `recv()`, or a
+              kernel-dispatch call, unless the lock is annotated
+              `allow-io`.
+
+Annotation grammar (written in normal `//` comments):
+
+  binding form — on or directly above a lock field/static/local:
+
+      // LOCK-ORDER: <dotted.name> [terminal] [allow-io]
+      segments: Mutex<Arc<SegmentSet>>,
+
+    binds the field identifier to the dotted lock name. `terminal`
+    locks may be acquired while holding anything but must not be held
+    while acquiring another annotated lock. `allow-io` suppresses the
+    held-across-I/O findings for this lock.
+
+  edge form — anywhere (typically module docs):
+
+      // LOCK-ORDER: a.name -> b.name -> c.name
+
+    declares consecutive pairs as allowed acquisition order. The
+    checker verifies observed edges against the transitive closure.
+
+Analysis model (no compiler, stripped text):
+
+  - `.lock()` / `.read()` / `.write()` with empty parens are
+    acquisitions; `try_lock` is deliberately exempt (non-blocking
+    acquisition cannot deadlock in an ordering sense).
+  - `let g = x.lock().unwrap();` holds until `drop(g)` or the end of
+    the enclosing block; any other acquisition form is a statement
+    temporary (held to the next `;`).
+  - Per-file interprocedural closure: calls through `self.method(...)`,
+    `Self::f(...)` and bare `f(...)` to functions defined in the same
+    file propagate the callee's acquisition set to the caller's held
+    scopes. Cross-file calls are out of scope (metrics locks are
+    terminal, which covers the common cross-module pattern).
+  - Lock identifiers resolve per-file first, then through the global
+    annotation map when unambiguous; unannotated locks are ignored by
+    the ordering check but still subject to lock-io.
+"""
+
+import re
+from collections import defaultdict
+
+from ..lexer import brace_blocks, innermost_block, line_of
+
+ANN_RE = re.compile(r"//\s*LOCK-ORDER:\s*(.+?)\s*$", re.M)
+FIELD_RE = re.compile(
+    r"(?:pub(?:\s*\([^)]*\))?\s+)?(\w+)\s*:\s*[^=;{]*?\b(?:Mutex|RwLock)\s*<"
+)
+STATIC_RE = re.compile(r"\bstatic\s+(\w+)\s*:")
+LET_RE = re.compile(r"\blet\s+(?:mut\s+)?(\w+)\b")
+FLAGS = {"terminal", "allow-io"}
+
+ACQ_RE = re.compile(
+    r"([A-Za-z_][A-Za-z0-9_]*(?:\s*\.\s*[A-Za-z_][A-Za-z0-9_]*|\s*\[[^\[\]]*\])*)"
+    r"\s*\.\s*(lock|read|write)\s*\(\s*\)"
+)
+FN_RE = re.compile(r"\bfn\s+(\w+)")
+CALL_RE = re.compile(r"(self\s*\.\s*|Self\s*::\s*)?\b([A-Za-z_]\w*)\s*\(")
+IO_RE = re.compile(
+    r"File\s*::|OpenOptions|\bfs\s*::\s*\w|\.sync_all\s*\(|\.sync_data\s*\(|"
+    r"\.recv\s*\(|\.recv_timeout\s*\(|\.execute\s*::\s*<|\.seek\s*\(|"
+    r"\.read_exact\s*\(|\.read_to_end\s*\(|\.write_all\s*\("
+)
+# What a guard binding may chain through and still be "just the guard".
+GUARD_TAIL_RE = re.compile(r"^(\s*\.\s*(unwrap|expect)\s*\([^()]*\))?\s*;")
+
+
+def _lock_ident(expr):
+    expr = re.sub(r"\[[^\[\]]*\]", "", expr)
+    return expr.split(".")[-1].strip()
+
+
+class FileLocks:
+    """Per-file annotation + acquisition scan."""
+
+    def __init__(self, ctx, path):
+        self.ctx = ctx
+        self.path = path
+        self.raw = ctx.raw(path)
+        self.text = ctx.stripped(path)
+        self.bindings = {}  # ident -> lock name (this file's declarations)
+        self.edges = []  # (a, b, line) declared here
+        self.flags = defaultdict(set)  # lock name -> flags
+        self._parse_annotations()
+        self.blocks = brace_blocks(self.text)
+        self.acqs = self._acquisitions()
+        self.fns = self._functions()
+        self.calls = self._call_sites()
+
+    # ---------------------------------------------------- annotations
+
+    def _parse_annotations(self):
+        raw_lines = self.raw.split("\n")
+        for m in ANN_RE.finditer(self.raw):
+            body = m.group(1).strip()
+            lineno = line_of(self.raw, m.start())
+            if "->" in body:
+                names = [p.strip() for p in body.split("->")]
+                if any(not re.fullmatch(r"[\w.]+", n) for n in names):
+                    self.ctx.report("lock-order", self.path, lineno,
+                                    f"malformed LOCK-ORDER edge annotation: {body!r}")
+                    continue
+                for a, b in zip(names, names[1:]):
+                    self.edges.append((a, b, lineno))
+                continue
+            tokens = body.split()
+            name, flags = tokens[0], set(tokens[1:])
+            if not re.fullmatch(r"[\w.]+", name) or not flags <= FLAGS:
+                self.ctx.report("lock-order", self.path, lineno,
+                                f"malformed LOCK-ORDER annotation: {body!r} "
+                                f"(want `name [terminal] [allow-io]`)")
+                continue
+            ident = self._bind_target(raw_lines, lineno)
+            if ident is None:
+                self.ctx.report("lock-order", self.path, lineno,
+                                f"LOCK-ORDER annotation {name!r} does not bind to a "
+                                f"lock declaration on this or the next lines")
+                continue
+            self.bindings[ident] = name
+            self.flags[name] |= flags
+
+    def _bind_target(self, raw_lines, lineno):
+        # Same line (code before the comment), then up to 4 lines below.
+        same = raw_lines[lineno - 1].split("//")[0]
+        for probe in [same] + raw_lines[lineno : lineno + 4]:
+            code = probe.split("//")[0]
+            for pat in (FIELD_RE, STATIC_RE, LET_RE):
+                m = pat.search(code)
+                if m:
+                    return m.group(1)
+            if code.strip().startswith("#["):  # attributes pass through
+                continue
+            if code.strip():  # a non-lock code line breaks the binding
+                return None
+        return None
+
+    # --------------------------------------------------- acquisitions
+
+    def _acquisitions(self):
+        """[(offset, end, ident, guard_var|None, hold_end)] sorted."""
+        acqs = []
+        for m in ACQ_RE.finditer(self.text):
+            p, end = m.start(), m.end()
+            ident = _lock_ident(m.group(1))
+            indexed = "[" in m.group(1)
+            guard_var, hold_end = None, None
+            stmt_start = max(self.text.rfind(sep, 0, p) for sep in ";{}") + 1
+            seg = self.text[stmt_start:p]
+            letm = re.search(r"\blet\s+(?:mut\s+)?(\w+)\s*(?::[^=]*)?=\s*\S*$", seg)
+            iflet = re.search(r"\bif\s+let\s+Ok\(\s*(?:mut\s+)?(\w+)\s*\)\s*=\s*\S*$", seg)
+            if letm and GUARD_TAIL_RE.match(self.text[end:]):
+                guard_var = letm.group(1)
+                hold_end = self._hold_end(p, guard_var)
+            elif iflet:
+                guard_var = iflet.group(1)
+                hold_end = self._hold_end(p, guard_var)
+            else:
+                semi = self.text.find(";", end)
+                hold_end = len(self.text) if semi < 0 else semi
+            acqs.append({
+                "off": p, "end": end, "ident": ident, "indexed": indexed,
+                "guard": guard_var, "hold_end": hold_end,
+                "line": line_of(self.text, p),
+            })
+        return acqs
+
+    def _hold_end(self, p, var):
+        block = innermost_block(self.blocks, p)
+        scope_end = block[1] if block else len(self.text)
+        dropm = re.compile(r"\bdrop\s*\(\s*%s\s*\)" % re.escape(var)).search(
+            self.text, p, scope_end
+        )
+        return dropm.start() if dropm else scope_end
+
+    # ------------------------------------------------------ functions
+
+    def _functions(self):
+        """name -> list of (body_start, body_end)."""
+        fns = defaultdict(list)
+        for m in FN_RE.finditer(self.text):
+            i, depth = m.end(), 0
+            n = len(self.text)
+            while i < n:
+                c = self.text[i]
+                if c == "(":
+                    depth += 1
+                elif c == ")":
+                    depth -= 1
+                elif c == "{" and depth == 0:
+                    break
+                elif c == ";" and depth == 0:  # trait method, no body
+                    i = -1
+                    break
+                i += 1
+            if i < 0 or i >= n:
+                continue
+            block = next((b for b in self.blocks if b[0] == i), None)
+            if block:
+                fns[m.group(1)].append(block)
+        return fns
+
+    def _call_sites(self):
+        """[(offset, callee_name)] for same-file callables."""
+        calls = []
+        for m in CALL_RE.finditer(self.text):
+            name = m.group(2)
+            if name not in self.fns:
+                continue
+            # `drop(x)` is std's prelude fn; a same-file `Drop::drop`
+            # impl is never what a bare `drop(...)` call dispatches to.
+            if name == "drop":
+                continue
+            recv = m.group(1)
+            before = self.text[: m.start(2)].rstrip()
+            if recv is None:
+                # Bare call: reject method calls on other receivers,
+                # `::`-qualified paths, and the definition site itself.
+                if before.endswith(".") or before.endswith("::"):
+                    continue
+                if re.search(r"\bfn\s*$", before):
+                    continue
+            calls.append((m.start(), name))
+        return calls
+
+    def containing_fn(self, offset):
+        best = None
+        for name, spans in self.fns.items():
+            for s, e in spans:
+                if s < offset <= e and (best is None or s > best[1]):
+                    best = (name, s, e)
+        return best[0] if best else None
+
+
+def _resolve(ident, local, global_map):
+    if ident in local:
+        return local[ident]
+    names = global_map.get(ident, set())
+    return next(iter(names)) if len(names) == 1 else None
+
+
+def _transitive(edges):
+    adj = defaultdict(set)
+    for a, b in edges:
+        adj[a].add(b)
+    closure = set()
+    for start in list(adj):
+        seen, stack = set(), [start]
+        while stack:
+            node = stack.pop()
+            for nxt in adj.get(node, ()):
+                if nxt not in seen:
+                    seen.add(nxt)
+                    stack.append(nxt)
+        closure |= {(start, t) for t in seen}
+    return closure
+
+
+def _declared_cycles(edges):
+    adj = defaultdict(set)
+    for a, b in edges:
+        adj[a].add(b)
+    color, order = {}, []
+    cycle = []
+
+    def dfs(u, path):
+        color[u] = 1
+        for v in adj.get(u, ()):
+            if color.get(v) == 1:
+                cycle.append(path + [v])
+                return
+            if v not in color:
+                dfs(v, path + [v])
+        color[u] = 2
+        order.append(u)
+
+    for u in list(adj):
+        if u not in color:
+            dfs(u, [u])
+    return cycle
+
+
+def run(ctx):
+    files = [FileLocks(ctx, p) for p in ctx.src_files]
+
+    # Global annotation state.
+    global_map = defaultdict(set)  # ident -> {lock names}
+    flags = defaultdict(set)
+    declared = set()
+    edge_decl_site = {}
+    for fl in files:
+        for ident, name in fl.bindings.items():
+            global_map[ident].add(name)
+        for name, fset in fl.flags.items():
+            flags[name] |= fset
+        for a, b, lineno in fl.edges:
+            declared.add((a, b))
+            edge_decl_site.setdefault((a, b), (fl.path, lineno))
+
+    for path_cycle in _declared_cycles(declared):
+        first = tuple(path_cycle[-2:])
+        path, lineno = edge_decl_site.get(first, (files[0].path if files else "?", 1))
+        ctx.report("lock-order", path, lineno,
+                   "declared LOCK-ORDER edges form a cycle: "
+                   + " -> ".join(path_cycle))
+
+    allowed = _transitive(declared)
+
+    for fl in files:
+        acq_sets, io_flags = _interprocedural(fl)
+        _check_file(ctx, fl, global_map, flags, allowed, acq_sets, io_flags)
+
+
+def _interprocedural(fl):
+    """Fixpoint: per-function acquired-lock idents and direct-I/O flag."""
+    direct_acq = defaultdict(set)
+    direct_io = defaultdict(bool)
+    fn_calls = defaultdict(set)
+    for a in fl.acqs:
+        fn = fl.containing_fn(a["off"])
+        if fn:
+            direct_acq[fn].add(a["ident"])
+    for name, spans in fl.fns.items():
+        for s, e in spans:
+            if IO_RE.search(fl.text, s, e):
+                direct_io[name] = True
+    for off, callee in fl.calls:
+        fn = fl.containing_fn(off)
+        if fn and fn != callee:
+            fn_calls[fn].add(callee)
+
+    acq = {f: set(s) for f, s in direct_acq.items()}
+    io = dict(direct_io)
+    changed = True
+    while changed:
+        changed = False
+        for f, callees in fn_calls.items():
+            for c in callees:
+                add = acq.get(c, set()) - acq.setdefault(f, set())
+                if add:
+                    acq[f] |= add
+                    changed = True
+                if io.get(c) and not io.get(f):
+                    io[f] = True
+                    changed = True
+    return acq, io
+
+
+def _check_file(ctx, fl, global_map, flags, allowed, acq_sets, io_flags):
+    edges_seen = set()
+
+    def note_edge(held, ident_b, line, indexed_pair):
+        a = held["name"]
+        b = _resolve(ident_b, fl.bindings, global_map)
+        if a is None or b is None:
+            return
+        if a == b:
+            if not indexed_pair:
+                ctx.report("lock-order", fl.path, line,
+                           f"re-entrant acquisition: lock `{a}` acquired while "
+                           f"already held — self-deadlock")
+            return
+        if (a, b) in edges_seen:
+            return
+        edges_seen.add((a, b))
+        if "terminal" in flags.get(a, ()):
+            ctx.report("lock-order", fl.path, line,
+                       f"terminal lock `{a}` held while acquiring `{b}` — "
+                       f"terminal locks must be leaves of every hold chain")
+            return
+        if "terminal" in flags.get(b, ()):
+            return
+        if (a, b) in allowed:
+            return
+        if (b, a) in allowed:
+            ctx.report("lock-order", fl.path, line,
+                       f"lock-order inversion: `{a}` held while acquiring `{b}`, "
+                       f"but the declared order is `{b}` -> `{a}`")
+        else:
+            ctx.report("lock-order", fl.path, line,
+                       f"undeclared lock-order edge: `{a}` held while acquiring "
+                       f"`{b}` — declare `// LOCK-ORDER: {a} -> {b}` or fix")
+
+    held_intervals = []
+    for a in fl.acqs:
+        if a["guard"] is not None:
+            held_intervals.append({
+                "name": _resolve(a["ident"], fl.bindings, global_map),
+                "ident": a["ident"], "indexed": a["indexed"],
+                "start": a["end"], "end": a["hold_end"], "line": a["line"],
+            })
+
+    # Order edges: held guard -> later acquisition / callee closure.
+    for h in held_intervals:
+        if h["name"] is None:
+            continue
+        for a in fl.acqs:
+            if h["start"] < a["off"] < h["end"]:
+                note_edge(h, a["ident"], a["line"],
+                          h["indexed"] and a["indexed"] and h["ident"] == a["ident"])
+        for off, callee in fl.calls:
+            if h["start"] < off < h["end"]:
+                for ident_b in sorted(acq_sets.get(callee, ())):
+                    note_edge(h, ident_b, line_of(fl.text, off), False)
+
+    # lock-io: holds across I/O / recv / kernel dispatch.
+    io_reported = set()
+
+    def note_io(name, ident, line, why):
+        if name and "allow-io" in flags.get(name, ()):
+            return
+        key = (ident, line)
+        if key in io_reported:
+            return
+        io_reported.add(key)
+        label = name or ident
+        ctx.report("lock-io", fl.path, line,
+                   f"lock `{label}` held across {why} — annotate the lock "
+                   f"`allow-io` with a rationale, or move the call out of the "
+                   f"critical section", severity="warning")
+
+    for h in held_intervals:
+        m = IO_RE.search(fl.text, h["start"], h["end"])
+        if m:
+            note_io(h["name"], h["ident"], line_of(fl.text, m.start()),
+                    f"`{m.group(0).strip()}`")
+        else:
+            for off, callee in fl.calls:
+                if h["start"] < off < h["end"] and io_flags.get(callee):
+                    note_io(h["name"], h["ident"], line_of(fl.text, off),
+                            f"call to I/O-performing `{callee}()`")
+                    break
+    for a in fl.acqs:
+        if a["guard"] is None:
+            m = IO_RE.search(fl.text, a["end"], a["hold_end"])
+            if m:
+                name = _resolve(a["ident"], fl.bindings, global_map)
+                note_io(name, a["ident"], a["line"], f"`{m.group(0).strip()}`")

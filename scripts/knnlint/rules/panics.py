@@ -1,0 +1,58 @@
+"""Panic-path audit: classify `unwrap()` / `expect()` sites.
+
+Allowed (no finding):
+  - the poisoned-mutex idiom: `.lock().unwrap()`, `.read().unwrap()`,
+    `.write().unwrap()`, `.into_inner().unwrap()`, condvar
+    `.wait(..).unwrap()` / `.wait_timeout(..).unwrap()` — a poisoned
+    lock means another thread already panicked; propagating is the
+    only sane policy in this codebase;
+  - anything inside `#[cfg(test)]` modules, rust/tests/, rust/benches/,
+    examples/ — panics are the test failure mechanism;
+  - lines (or the line above) carrying a `// PANIC-OK: <reason>`
+    comment — the written-down contract for a deliberate panic.
+
+Everything else is a finding: severity `error` in the durability /
+dataset-I/O error paths (`stream/persist.rs`, `dataset/io.rs`) where a
+panic loses data that a `Result` would have surfaced, `warning`
+elsewhere. Pre-existing sites are grandfathered by the baseline; new
+ones fail the gate.
+"""
+
+import re
+
+from ..lexer import cfg_test_ranges, line_of
+
+PANIC_RE = re.compile(r"\.\s*(unwrap|expect)\s*\(")
+# The receiver chain directly before `.unwrap()` that marks the
+# poisoned-lock idiom. `[^()]*` keeps `.wait(guard)` / `.expect("…")`
+# arguments from defeating the match.
+ALLOWED_TAIL = re.compile(
+    r"\.\s*(?:lock|read|write|try_lock|into_inner|wait|wait_timeout)"
+    r"\s*\([^()]*\)\s*$"
+)
+FORBIDDEN_FILES = {"rust/src/stream/persist.rs", "rust/src/dataset/io.rs"}
+
+
+def run(ctx):
+    for f in ctx.src_files:
+        text = ctx.stripped(f)
+        raw_lines = ctx.raw(f).split("\n")
+        skip = cfg_test_ranges(text)
+        rel = ctx.rel(f)
+        severity = "error" if rel in FORBIDDEN_FILES else "warning"
+        for m in PANIC_RE.finditer(text):
+            if any(s <= m.start() < e for s, e in skip):
+                continue
+            before = text[: m.start()]
+            if ALLOWED_TAIL.search(before[-120:]):
+                continue
+            lineno = line_of(text, m.start())
+            nearby = raw_lines[max(0, lineno - 2) : lineno]
+            if any("PANIC-OK" in ln for ln in nearby):
+                continue
+            snippet = raw_lines[lineno - 1].strip()
+            if len(snippet) > 90:
+                snippet = snippet[:87] + "..."
+            ctx.report("panic-path", f, lineno,
+                       f"`{m.group(1)}()` outside the allowed idioms: `{snippet}`",
+                       severity=severity)

@@ -1,0 +1,55 @@
+"""Rule 7 (migrated): SIMD unsafe is gated and documented.
+
+Intrinsics are the one place this repo allows `unsafe`. Two rules for
+any file that touches std::arch / core::arch (checked on RAW text —
+the SAFETY comments this rule wants are exactly what strip_rust
+drops):
+
+  - every `unsafe` fn/block carries a `// SAFETY:` comment (or, for
+    `unsafe fn` declarations, a `/// # Safety` doc section) on the
+    same line or in the contiguous comment/attribute block above it,
+    so the contract (feature detection, slice bounds) is written down;
+  - every `#[target_feature(...)]` fn lives behind a
+    `cfg(target_arch = ...)` gate earlier in the file, so the crate
+    still compiles (scalar-only) on other architectures.
+"""
+
+import re
+
+SAFETY_WINDOW = 4
+
+
+def run(ctx):
+    for f in ctx.rust_files:
+        raw = ctx.raw(f)
+        if "std::arch" not in raw and "core::arch" not in raw:
+            continue
+        lines = raw.split("\n")
+        has_arch_gate = False
+        for lineno, line in enumerate(lines, 1):
+            if re.search(r"cfg\s*\(\s*target_arch", line):
+                has_arch_gate = True
+            if re.search(r"#\[target_feature", line) and not has_arch_gate:
+                ctx.report("simd", f, lineno,
+                           "#[target_feature] with no cfg(target_arch=...) gate "
+                           "earlier in the file — non-x86 builds would break")
+            code = line.split("//")[0]  # `unsafe` in a comment is not a use
+            if not re.search(r"\bunsafe\b", code) or "// SAFETY:" in line:
+                continue
+            # Scan upward: a fixed window of plain lines, extended
+            # through the contiguous doc-comment/attribute block (where
+            # an `unsafe fn`'s `# Safety` section lives).
+            documented, plain = False, 0
+            for w in reversed(lines[: lineno - 1]):
+                ws = w.strip()
+                if "// SAFETY:" in w or "# Safety" in ws:
+                    documented = True
+                    break
+                if not (ws.startswith("//") or ws.startswith("#[")):
+                    plain += 1
+                    if plain >= SAFETY_WINDOW:
+                        break
+            if not documented:
+                ctx.report("simd", f, lineno,
+                           "`unsafe` without a `// SAFETY:` comment (or `# Safety`"
+                           " doc section) above it")

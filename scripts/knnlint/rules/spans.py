@@ -1,0 +1,33 @@
+"""Rule 6 (migrated): Span guards are RAII, never manual.
+
+A `Span::enter` whose guard is not bound to a variable is dropped at
+the end of the statement — it times nothing. `let _ =` is the same bug
+spelled differently (`_` drops immediately; `_span` does not), and a
+manual `Span::exit` API must never grow back: unwinds would skip it
+and corrupt the nesting stack.
+"""
+
+import re
+
+SPAN_ENTER_RE = re.compile(r"Span\s*::\s*enter(?:_billed)?\b")
+SPAN_BARE_RE = re.compile(r"^\s*(?:crate::metrics::|metrics::)?Span\s*::\s*enter")
+SPAN_WILD_RE = re.compile(r"let\s+_\s*=")
+
+
+def run(ctx):
+    for f in ctx.rust_files:
+        text = ctx.stripped(f)
+        for lineno, line in enumerate(text.split("\n"), 1):
+            if re.search(r"Span\s*::\s*exit\b", line):
+                ctx.report("span-raii", f, lineno,
+                           "Span::exit: spans are RAII-only, use the guard")
+            if not SPAN_ENTER_RE.search(line):
+                continue
+            if SPAN_BARE_RE.match(line):
+                ctx.report("span-raii", f, lineno,
+                           "Span::enter guard dropped immediately — bind it: "
+                           "`let _span = Span::enter(...)`")
+            elif SPAN_WILD_RE.search(line.split("Span")[0]):
+                ctx.report("span-raii", f, lineno,
+                           "`let _ = Span::enter(...)` drops the guard at once — "
+                           "name it `_span`")

@@ -1,0 +1,199 @@
+"""Structural rules 1-5, migrated from the original static_check.py:
+
+  balance      delimiter balance per file (literals/comments stripped)
+  modtree      `mod` declarations vs. files on disk (both directions)
+  imports      `use crate::…` / `use knn_merge::…` resolution against
+               the module tree and each module's `pub` item surface
+  cargo-paths  Cargo.toml target paths exist
+  fixtures     every committed fixture under rust/tests/data/ is
+               referenced by name in at least one rust/tests/*.rs file
+"""
+
+import re
+
+
+def run(ctx):
+    _balance(ctx)
+    mod_tree = _modtree(ctx)
+    _imports(ctx, mod_tree)
+    _cargo_paths(ctx)
+    _fixtures(ctx)
+
+
+# ---------------------------------------------------------- 1. balance
+
+
+def _balance(ctx):
+    pairs = {")": "(", "]": "[", "}": "{"}
+    for f in ctx.rust_files:
+        text = ctx.stripped(f)
+        stack = []
+        line = 1
+        for ch in text:
+            if ch == "\n":
+                line += 1
+            elif ch in "([{":
+                stack.append((ch, line))
+            elif ch in ")]}":
+                if not stack or stack[-1][0] != pairs[ch]:
+                    ctx.report("balance", f, line, f"unbalanced '{ch}'")
+                    stack = []
+                    break
+                stack.pop()
+        if stack:
+            ctx.report("balance", f, stack[-1][1], f"unclosed '{stack[-1][0]}'")
+
+
+# --------------------------------------------- 2. module tree coverage
+
+
+def _modtree(ctx):
+    lib = ctx.rust_src / "lib.rs"
+    if not lib.exists():
+        return {}
+    mod_tree = {"": lib}
+
+    def walk(dir_path, prefix, decl_file):
+        text = ctx.stripped(decl_file)
+        for m in re.finditer(r"^\s*(?:pub\s+)?mod\s+(\w+)\s*;", text, re.M):
+            name = m.group(1)
+            cand = [dir_path / f"{name}.rs", dir_path / name / "mod.rs"]
+            hit = next((c for c in cand if c.exists()), None)
+            if hit is None:
+                ctx.report("modtree", decl_file, text[: m.start()].count("\n") + 1,
+                           f"mod {name}: no file {cand[0].name} or {name}/mod.rs")
+                continue
+            key = f"{prefix}{name}"
+            mod_tree[key] = hit
+            walk(hit.parent if hit.name == "mod.rs" else dir_path / name,
+                 key + "::", hit)
+
+    walk(ctx.rust_src, "", lib)
+
+    declared = set(mod_tree.values())
+    for f in ctx.src_files:
+        if f.name in ("lib.rs", "main.rs"):
+            continue
+        if f not in declared:
+            ctx.report("modtree", f, 1, "file exists but is not declared by any `mod`")
+    return mod_tree
+
+
+# ----------------------------------- 3. public item surface per module
+
+ITEM_RE = re.compile(
+    r"^\s*pub(?:\s*\(.*?\))?\s+"
+    r"(?:unsafe\s+)?(?:async\s+)?"
+    r"(?:struct|enum|trait|fn|type|const|static|mod|union)\s+"
+    r"(\w+)",
+    re.M,
+)
+USE_DECL_RE = re.compile(r"^\s*(?:pub\s+)?use\s+([^;]+);", re.M)
+
+
+def expand_use(clause):
+    """`a::{b, c::d}` -> ['a::b', 'a::c::d'] (handles nesting, `as`)."""
+    clause = clause.strip()
+    m = re.match(r"^(.*?)\{(.*)\}$", clause, re.S)
+    if not m:
+        return [re.sub(r"\s+as\s+\w+$", "", clause).strip()]
+    head, body = m.group(1), m.group(2)
+    parts, depth, cur = [], 0, ""
+    for ch in body:
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append(cur)
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        parts.append(cur)
+    out = []
+    for p in parts:
+        out.extend(expand_use(head + p.strip()))
+    return out
+
+
+def _imports(ctx, mod_tree):
+    if not mod_tree:
+        return
+    surface = {}
+    for key, path in mod_tree.items():
+        text = ctx.stripped(path)
+        items = set(ITEM_RE.findall(text))
+        items |= set(re.findall(r"macro_rules!\s*(\w+)", text))
+        surface[key] = items
+
+    def resolve(path_str):
+        segs = [s.strip() for s in path_str.split("::")]
+        segs = [s for s in segs if s]
+        if not segs:
+            return True
+        leaf = segs[-1]
+        mod_key = "::".join(segs[:-1])
+        if mod_key not in mod_tree:
+            return False
+        if leaf in ("self", "*"):
+            return True
+        if "::".join(segs) in mod_tree:  # leaf is itself a module
+            return True
+        if leaf in surface.get(mod_key, set()):
+            return True
+        # re-exports: `pub use x::y::Leaf;` inside the module
+        text = ctx.stripped(mod_tree[mod_key])
+        for use in USE_DECL_RE.findall(text):
+            for full in expand_use(use):
+                if full.split("::")[-1] == leaf or full.endswith("::*"):
+                    return True
+        return False
+
+    for f in ctx.rust_files:
+        text = ctx.stripped(f)
+        for m in USE_DECL_RE.finditer(text):
+            for full in expand_use(m.group(1)):
+                full = full.strip()
+                if full.startswith("crate::"):
+                    rel = full[len("crate::"):]
+                elif full.startswith("knn_merge::"):
+                    rel = full[len("knn_merge::"):]
+                elif full.startswith(("super::", "self::")):
+                    continue  # needs position context; compiler territory
+                else:
+                    continue  # std / external crates
+                if not resolve(rel):
+                    ctx.report("imports", f, text[: m.start()].count("\n") + 1,
+                               f"unresolved import `{full}`")
+
+
+# ---------------------------------------------- 4. Cargo target paths
+
+
+def _cargo_paths(ctx):
+    cargo_path = ctx.root / "Cargo.toml"
+    if not cargo_path.exists():
+        return
+    cargo = cargo_path.read_text()
+    for m in re.finditer(r'path\s*=\s*"([^"]+)"', cargo):
+        if not (ctx.root / m.group(1)).exists():
+            ctx.report("cargo-paths", cargo_path,
+                       cargo[: m.start()].count("\n") + 1,
+                       f"target path {m.group(1)} does not exist")
+
+
+# ------------------------------------ 5. test fixtures are referenced
+
+
+def _fixtures(ctx):
+    fixture_dir = ctx.root / "rust" / "tests" / "data"
+    if not fixture_dir.is_dir():
+        return
+    # Raw test sources (NOT stripped: fixture names live in string
+    # literals, which strip_rust removes).
+    test_texts = [ctx.raw(p) for p in sorted((ctx.root / "rust" / "tests").glob("*.rs"))]
+    for fx in sorted(fixture_dir.iterdir()):
+        if fx.is_file() and not any(fx.name in t for t in test_texts):
+            ctx.report("fixtures", fx, 1,
+                       "fixture is not referenced by any rust/tests/*.rs test")

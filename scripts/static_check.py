@@ -1,342 +1,25 @@
 #!/usr/bin/env python3
-"""Static sanity sweep for containers without a Rust toolchain.
+"""Compatibility shim: the static sweep now lives in scripts/knnlint/.
 
-Not a compiler — a tripwire for the error classes that have actually
-bitten written-but-not-compiled PRs in this repo:
+Everything this script used to do (delimiter balance, mod-tree checks,
+import resolution, Cargo target paths, fixture references, SIMD
+hygiene) migrated into the `structure`, `spans`, and `simd` rule
+modules of the knnlint package, which adds lock-order checking,
+panic-path auditing, invariant coupling, a findings baseline, and
+`--json` output on top.
 
-  1. delimiter balance per file (strings/chars/comments stripped),
-  2. `mod` declarations vs. files on disk (both directions),
-  3. `use crate::…` / `use knn_merge::…` path resolution against the
-     declared module tree and each module's `pub` item surface,
-  4. `pub use` re-export resolution,
-  5. Cargo.toml target paths exist,
-  6. every committed fixture under rust/tests/data/ is referenced by
-     name in at least one rust/tests/*.rs file (orphaned golden files
-     mean a test stopped guarding a wire format),
-  7. SIMD hygiene: in files using std::arch/core::arch, every `unsafe`
-     must carry a nearby `// SAFETY:` comment, and `#[target_feature]`
-     functions must sit behind a `cfg(target_arch = ...)` gate.
+    python3 scripts/knnlint --help
 
-Exit code 0 = no findings. Anything found prints `FILE:LINE: message`
-and exits 1. Run from anywhere: paths resolve relative to the repo
-root (parent of scripts/).
+This entry point stays so existing muscle memory and docs keep
+working; it just execs the package CLI with the same arguments.
 """
 
-import re
 import sys
 from pathlib import Path
 
-ROOT = Path(__file__).resolve().parent.parent
-RUST = ROOT / "rust" / "src"
+sys.path.insert(0, str(Path(__file__).resolve().parent))
 
-findings: list[str] = []
+from knnlint.cli import main  # noqa: E402
 
-
-def report(path, line, msg):
-    findings.append(f"{path.relative_to(ROOT)}:{line}: {msg}")
-
-
-# ---------------------------------------------------------------- strip
-
-
-def strip_rust(text: str) -> str:
-    """Remove string/char literals and comments, preserving newlines."""
-    out = []
-    i, n = 0, len(text)
-    while i < n:
-        c = text[i]
-        two = text[i : i + 2]
-        if two == "//":
-            j = text.find("\n", i)
-            i = n if j < 0 else j
-        elif two == "/*":
-            depth, i = 1, i + 2
-            while i < n and depth:
-                if text[i : i + 2] == "/*":
-                    depth, i = depth + 1, i + 2
-                elif text[i : i + 2] == "*/":
-                    depth, i = depth - 1, i + 2
-                else:
-                    if text[i] == "\n":
-                        out.append("\n")
-                    i += 1
-        elif c == '"' or two == 'r"' or re.match(r'r#+"', text[i : i + 8] or ""):
-            if c == "r" or two == 'r"':
-                m = re.match(r'r(#*)"', text[i:])
-                hashes = m.group(1)
-                end = text.find('"' + hashes, i + len(m.group(0)))
-                seg = text[i : end + 1 + len(hashes)] if end >= 0 else text[i:]
-                out.append("\n" * seg.count("\n"))
-                i = n if end < 0 else end + 1 + len(hashes)
-            else:
-                j = i + 1
-                while j < n and text[j] != '"':
-                    j += 2 if text[j] == "\\" else 1
-                out.append("\n" * text[i:j].count("\n"))
-                i = j + 1
-        elif c == "'":
-            # char literal or lifetime; char is 'x' or '\x' (escape)
-            if i + 1 < n and text[i + 1] == "\\":
-                j = text.find("'", i + 2)
-                i = i + 2 if j < 0 else j + 1
-            elif i + 2 < n and text[i + 2] == "'":
-                i += 3
-            else:  # lifetime — keep the tick out, skip the ident
-                i += 1
-        else:
-            out.append(c)
-            i += 1
-    return "".join(out)
-
-
-# ---------------------------------------------------------- 1. balance
-
-rust_files = sorted(RUST.rglob("*.rs")) + sorted(
-    (ROOT / "rust").glob("tests/*.rs")
-) + sorted((ROOT / "rust").glob("benches/*.rs")) + sorted(
-    ROOT.glob("examples/*.rs")
-)
-
-stripped_cache: dict[Path, str] = {}
-for f in rust_files:
-    text = stripped_cache[f] = strip_rust(f.read_text())
-    stack = []
-    pairs = {")": "(", "]": "[", "}": "{"}
-    line = 1
-    for ch in text:
-        if ch == "\n":
-            line += 1
-        elif ch in "([{":
-            stack.append((ch, line))
-        elif ch in ")]}":
-            if not stack or stack[-1][0] != pairs[ch]:
-                report(f, line, f"unbalanced '{ch}'")
-                stack = []
-                break
-            stack.pop()
-    if stack:
-        report(f, stack[-1][1], f"unclosed '{stack[-1][0]}'")
-
-# --------------------------------------------- 2. module tree coverage
-
-mod_tree: dict[str, Path] = {"": RUST / "lib.rs"}
-
-
-def walk(dir_path: Path, prefix: str, decl_file: Path):
-    text = stripped_cache.get(decl_file) or strip_rust(decl_file.read_text())
-    for m in re.finditer(r"^\s*(?:pub\s+)?mod\s+(\w+)\s*;", text, re.M):
-        name = m.group(1)
-        cand = [dir_path / f"{name}.rs", dir_path / name / "mod.rs"]
-        hit = next((c for c in cand if c.exists()), None)
-        if hit is None:
-            report(decl_file, text[: m.start()].count("\n") + 1,
-                   f"mod {name}: no file {cand[0].name} or {name}/mod.rs")
-            continue
-        key = f"{prefix}{name}"
-        mod_tree[key] = hit
-        walk(hit.parent if hit.name == "mod.rs" else dir_path / name,
-             key + "::", hit)
-
-
-walk(RUST, "", RUST / "lib.rs")
-
-declared_files = set(mod_tree.values())
-for f in sorted(RUST.rglob("*.rs")):
-    if f.name in ("lib.rs", "main.rs"):
-        continue
-    if f not in declared_files:
-        report(f, 1, "file exists but is not declared by any `mod`")
-
-# ----------------------------------- 3. public item surface per module
-
-ITEM_RE = re.compile(
-    r"^\s*pub(?:\s*\(.*?\))?\s+"
-    r"(?:unsafe\s+)?(?:async\s+)?"
-    r"(?:struct|enum|trait|fn|type|const|static|mod|union)\s+"
-    r"(\w+)",
-    re.M,
-)
-USE_DECL_RE = re.compile(r"^\s*(?:pub\s+)?use\s+([^;]+);", re.M)
-
-surface: dict[str, set[str]] = {}
-for key, path in mod_tree.items():
-    text = stripped_cache.get(path) or strip_rust(path.read_text())
-    items = set(ITEM_RE.findall(text))
-    # macro_rules! exports and re-exports land in the surface too
-    items |= set(re.findall(r"macro_rules!\s*(\w+)", text))
-    surface[key] = items
-
-
-def expand_use(clause: str) -> list[str]:
-    """`a::{b, c::d}` -> ['a::b', 'a::c::d'] (handles nesting, `as`)."""
-    clause = clause.strip()
-    m = re.match(r"^(.*?)\{(.*)\}$", clause, re.S)
-    if not m:
-        return [re.sub(r"\s+as\s+\w+$", "", clause).strip()]
-    head, body = m.group(1), m.group(2)
-    parts, depth, cur = [], 0, ""
-    for ch in body:
-        if ch == "{":
-            depth += 1
-        elif ch == "}":
-            depth -= 1
-        if ch == "," and depth == 0:
-            parts.append(cur)
-            cur = ""
-        else:
-            cur += ch
-    if cur.strip():
-        parts.append(cur)
-    out = []
-    for p in parts:
-        out.extend(expand_use(head + p.strip()))
-    return out
-
-
-def resolve(path_str: str) -> bool:
-    """True when `crate::a::b::Item` resolves against the module tree.
-
-    A path resolves when its module prefix exists and the leaf is a
-    declared item, a re-export, a submodule, `self`, or `*`.
-    """
-    segs = [s.strip() for s in path_str.split("::")]
-    segs = [s for s in segs if s]
-    if not segs:
-        return True
-    leaf = segs[-1]
-    mods = segs[:-1]
-    mod_key = "::".join(mods)
-    if mod_key not in mod_tree:
-        return False
-    if leaf in ("self", "*"):
-        return True
-    if "::".join(segs) in mod_tree:  # leaf is itself a module
-        return True
-    if leaf in surface.get(mod_key, set()):
-        return True
-    # re-exports: `pub use x::y::Leaf;` inside the module
-    text = stripped_cache.get(mod_tree[mod_key]) or ""
-    for use in USE_DECL_RE.findall(text):
-        for full in expand_use(use):
-            if full.split("::")[-1] == leaf or full.endswith("::*"):
-                return True
-    return False
-
-
-for f in rust_files:
-    text = stripped_cache.get(f) or strip_rust(f.read_text())
-    for m in USE_DECL_RE.finditer(text):
-        for full in expand_use(m.group(1)):
-            full = full.strip()
-            if full.startswith("crate::"):
-                rel = full[len("crate::"):]
-            elif full.startswith("knn_merge::"):
-                rel = full[len("knn_merge::"):]
-            elif full.startswith("super::") or full.startswith("self::"):
-                continue  # needs position context; compiler territory
-            else:
-                continue  # std / external crates
-            if not resolve(rel):
-                report(f, text[: m.start()].count("\n") + 1,
-                       f"unresolved import `{full}`")
-
-# -------------------------------------------- 4. Cargo target paths
-
-cargo = (ROOT / "Cargo.toml").read_text()
-for m in re.finditer(r'path\s*=\s*"([^"]+)"', cargo):
-    if not (ROOT / m.group(1)).exists():
-        report(ROOT / "Cargo.toml", cargo[: m.start()].count("\n") + 1,
-               f"target path {m.group(1)} does not exist")
-
-# ----------------------------------- 5. test fixtures are referenced
-
-FIXTURE_DIR = ROOT / "rust" / "tests" / "data"
-if FIXTURE_DIR.is_dir():
-    # Raw test sources (NOT stripped: fixture names live in string
-    # literals, which strip_rust removes).
-    test_texts = [p.read_text() for p in sorted((ROOT / "rust" / "tests").glob("*.rs"))]
-    for fx in sorted(FIXTURE_DIR.iterdir()):
-        if fx.is_file() and not any(fx.name in t for t in test_texts):
-            report(fx, 1, "fixture is not referenced by any rust/tests/*.rs test")
-
-# ------------------------------ 6. Span guards are RAII, never manual
-
-# A `Span::enter` whose guard is not bound to a variable is dropped at
-# the end of the statement — it times nothing. `let _ =` is the same
-# bug spelled differently (`_` drops immediately; `_span` does not),
-# and a manual `Span::exit` API must never grow back: unwinds would
-# skip it and corrupt the nesting stack.
-SPAN_ENTER_RE = re.compile(r"Span\s*::\s*enter(?:_billed)?\b")
-SPAN_BARE_RE = re.compile(r"^\s*(?:crate::metrics::|metrics::)?Span\s*::\s*enter")
-SPAN_WILD_RE = re.compile(r"let\s+_\s*=")
-for f in rust_files:
-    text = stripped_cache.get(f) or strip_rust(f.read_text())
-    for lineno, line in enumerate(text.split("\n"), 1):
-        if re.search(r"Span\s*::\s*exit\b", line):
-            report(f, lineno, "Span::exit: spans are RAII-only, use the guard")
-        if not SPAN_ENTER_RE.search(line):
-            continue
-        if SPAN_BARE_RE.match(line):
-            report(f, lineno,
-                   "Span::enter guard dropped immediately — bind it: "
-                   "`let _span = Span::enter(...)`")
-        elif SPAN_WILD_RE.search(line.split("Span")[0]):
-            report(f, lineno,
-                   "`let _ = Span::enter(...)` drops the guard at once — "
-                   "name it `_span`")
-
-# ----------------------------- 7. SIMD unsafe is gated and documented
-
-# Intrinsics are the one place this repo allows `unsafe`. Two rules for
-# any file that touches std::arch / core::arch (checked on RAW text —
-# the SAFETY comments rule 7 wants are exactly what strip_rust drops):
-#  - every `unsafe` fn/block carries a `// SAFETY:` comment (or, for
-#    `unsafe fn` declarations, a `/// # Safety` doc section) on the
-#    same line or in the contiguous comment/attribute block above it,
-#    so the contract (feature detection, slice bounds) is written down;
-#  - every `#[target_feature(...)]` fn lives behind a
-#    `cfg(target_arch = ...)` gate earlier in the file, so the crate
-#    still compiles (scalar-only) on other architectures.
-SAFETY_WINDOW = 4
-for f in rust_files:
-    raw = f.read_text()
-    if "std::arch" not in raw and "core::arch" not in raw:
-        continue
-    lines = raw.split("\n")
-    has_arch_gate = False
-    for lineno, line in enumerate(lines, 1):
-        if re.search(r"cfg\s*\(\s*target_arch", line):
-            has_arch_gate = True
-        if re.search(r"#\[target_feature", line) and not has_arch_gate:
-            report(f, lineno,
-                   "#[target_feature] with no cfg(target_arch=...) gate "
-                   "earlier in the file — non-x86 builds would break")
-        code = line.split("//")[0]  # `unsafe` in a comment is not a use
-        if not re.search(r"\bunsafe\b", code) or "// SAFETY:" in line:
-            continue
-        # Scan upward: a fixed window of plain lines, extended through
-        # the contiguous doc-comment/attribute block (where an
-        # `unsafe fn`'s `# Safety` section lives).
-        documented, plain = False, 0
-        for w in reversed(lines[:lineno - 1]):
-            ws = w.strip()
-            if "// SAFETY:" in w or "# Safety" in ws:
-                documented = True
-                break
-            if not (ws.startswith("//") or ws.startswith("#[")):
-                plain += 1
-                if plain >= SAFETY_WINDOW:
-                    break
-        if not documented:
-            report(f, lineno,
-                   "`unsafe` without a `// SAFETY:` comment (or `# Safety`"
-                   " doc section) above it")
-
-# ------------------------------------------------------------- result
-
-if findings:
-    print("\n".join(findings))
-    print(f"\n{len(findings)} finding(s)")
-    sys.exit(1)
-print(f"static sweep clean: {len(rust_files)} files, "
-      f"{len(mod_tree)} modules, no findings")
+if __name__ == "__main__":
+    sys.exit(main())

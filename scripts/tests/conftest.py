@@ -1,0 +1,53 @@
+"""Fixtures for the knnlint test suite.
+
+Tests build throwaway repo trees under tmp_path (a `rust/src/...`
+skeleton plus whatever files the scenario needs) and run individual
+rule modules against them through the real engine.
+"""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+SCRIPTS_DIR = Path(__file__).resolve().parents[1]
+if str(SCRIPTS_DIR) not in sys.path:
+    sys.path.insert(0, str(SCRIPTS_DIR))
+
+FIXTURES = Path(__file__).parent / "fixtures"
+
+
+@pytest.fixture
+def mkrepo(tmp_path):
+    """Factory: materialize `{relpath: content}` into a tmp repo root."""
+
+    def make(files):
+        for rel, content in files.items():
+            p = tmp_path / rel
+            p.parent.mkdir(parents=True, exist_ok=True)
+            if isinstance(content, bytes):
+                p.write_bytes(content)
+            else:
+                p.write_text(content)
+        return tmp_path
+
+    return make
+
+
+@pytest.fixture
+def lint():
+    """Run selected rule modules over a root; return the findings."""
+    from knnlint.engine import run
+
+    def go(root, only, rule=None):
+        ctx = run(root, only=set(only))
+        found = ctx.findings
+        if rule is not None:
+            found = [f for f in found if f.rule == rule]
+        return found
+
+    return go
+
+
+def fixture_text(name):
+    return (FIXTURES / name).read_text()

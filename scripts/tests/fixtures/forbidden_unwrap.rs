@@ -1,0 +1,10 @@
+// Negative fixture: an unwrap on a persistence error path. Placed at
+// rust/src/stream/persist.rs in the test repo, where the panic-path
+// rule escalates to error severity.
+pub fn parse_header(bytes: &[u8]) -> u32 {
+    u32::from_le_bytes(bytes[0..4].try_into().unwrap())
+}
+
+pub fn poisoned_lock_is_fine(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}

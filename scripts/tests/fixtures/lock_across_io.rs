@@ -1,0 +1,15 @@
+// Negative fixture: a guard held across file I/O.
+use std::sync::Mutex;
+
+pub struct Writer {
+    // LOCK-ORDER: fix.w
+    w: Mutex<u32>,
+}
+
+impl Writer {
+    pub fn held_across_io(&self) -> u32 {
+        let g = self.w.lock().unwrap();
+        let _ = std::fs::read("state.bin");
+        *g
+    }
+}

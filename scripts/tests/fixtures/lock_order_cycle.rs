@@ -1,0 +1,19 @@
+// Negative fixture: the declarations themselves form a cycle.
+use std::sync::Mutex;
+
+// LOCK-ORDER: fix.a -> fix.b
+// LOCK-ORDER: fix.b -> fix.a
+
+pub struct Pair {
+    // LOCK-ORDER: fix.a
+    a: Mutex<u32>,
+    // LOCK-ORDER: fix.b
+    b: Mutex<u32>,
+}
+
+impl Pair {
+    pub fn touch(&self) -> u32 {
+        let ga = self.a.lock().unwrap();
+        *ga
+    }
+}

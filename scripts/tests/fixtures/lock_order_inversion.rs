@@ -1,0 +1,23 @@
+// Negative fixture: the declared order is a -> b, the code takes b
+// then a — the seeded inversion the suite must detect.
+use std::sync::Mutex;
+
+// LOCK-ORDER: fix.a -> fix.b
+
+pub struct Pair {
+    // LOCK-ORDER: fix.a
+    a: Mutex<u32>,
+    // LOCK-ORDER: fix.b
+    b: Mutex<u32>,
+}
+
+impl Pair {
+    pub fn inverted(&self) -> u32 {
+        let gb = self.b.lock().unwrap();
+        let ga = self.a.lock().unwrap();
+        let sum = *ga + *gb;
+        drop(ga);
+        drop(gb);
+        sum
+    }
+}

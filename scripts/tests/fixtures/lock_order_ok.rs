@@ -1,0 +1,22 @@
+// Positive fixture: acquisitions follow the declared order exactly.
+use std::sync::Mutex;
+
+// LOCK-ORDER: fix.a -> fix.b
+
+pub struct Pair {
+    // LOCK-ORDER: fix.a
+    a: Mutex<u32>,
+    // LOCK-ORDER: fix.b
+    b: Mutex<u32>,
+}
+
+impl Pair {
+    pub fn ordered(&self) -> u32 {
+        let ga = self.a.lock().unwrap();
+        let gb = self.b.lock().unwrap();
+        let sum = *ga + *gb;
+        drop(gb);
+        drop(ga);
+        sum
+    }
+}

@@ -1,0 +1,4 @@
+// Negative fixture: GRAPH_MAGIC spells "KNG1", not the expected
+// "KNG2" — a stale wire magic. BLOCKED_MAGIC is correct.
+pub(crate) const GRAPH_MAGIC: u32 = 0x4B_4E_47_31;
+pub(crate) const BLOCKED_MAGIC: u32 = 0x4B_4E_47_33;

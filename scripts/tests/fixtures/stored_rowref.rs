@@ -1,0 +1,7 @@
+// Negative fixture: a pin guard stored in a struct field.
+use crate::dataset::store::RowRef;
+
+pub struct Cache<'a> {
+    row: RowRef<'a>,
+    len: usize,
+}

@@ -1,0 +1,64 @@
+"""Baseline semantics: count budgets, staleness, justification carry."""
+
+from knnlint import baseline
+from knnlint.findings import Finding
+
+
+def mk(rule="panic-path", path="rust/src/a.rs", line=1, message="m"):
+    return Finding(rule=rule, path=path, line=line, message=message,
+                   severity="warning")
+
+
+def test_matching_is_line_number_independent():
+    data = baseline.build([mk(line=10)])
+    fresh = [mk(line=999)]
+    stale = baseline.apply(fresh, data)
+    assert fresh[0].baselined
+    assert stale == []
+
+
+def test_count_budget_limits_identical_findings():
+    data = baseline.build([mk(), mk()])  # budget of 2 for the same key
+    fresh = [mk(line=1), mk(line=2), mk(line=3)]
+    baseline.apply(fresh, data)
+    assert [f.baselined for f in fresh] == [True, True, False]
+
+
+def test_stale_entries_are_reported_not_fatal():
+    data = baseline.build([mk(message="gone"), mk(message="kept")])
+    fresh = [mk(message="kept")]
+    stale = baseline.apply(fresh, data)
+    assert fresh[0].baselined
+    assert len(stale) == 1
+    assert stale[0][0][2] == "gone"
+
+
+def test_build_preserves_hand_edited_justifications():
+    first = baseline.build([mk()])
+    first["entries"][0]["justification"] = "hand-written rationale"
+    second = baseline.build([mk(), mk(message="new one")], previous=first)
+    by_msg = {e["message"]: e for e in second["entries"]}
+    assert by_msg["m"]["justification"] == "hand-written rationale"
+    # New keys get the per-rule default.
+    assert by_msg["new one"]["justification"]
+    assert by_msg["new one"]["justification"] != "hand-written rationale"
+
+
+def test_every_built_entry_has_a_justification():
+    data = baseline.build(
+        [mk(rule=r) for r in ("panic-path", "lock-io", "metrics-coupling", "weird")]
+    )
+    assert len(data["entries"]) == 4
+    for e in data["entries"]:
+        assert e["justification"].strip()
+
+
+def test_unsupported_version_is_rejected(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text('{"version": 99, "entries": []}')
+    try:
+        baseline.load(p)
+    except ValueError as e:
+        assert "version" in str(e)
+    else:
+        raise AssertionError("expected ValueError")

@@ -1,0 +1,101 @@
+"""Invariant-coupling rule tests: wire magics, metrics names, guards."""
+
+from conftest import fixture_text
+
+KNG2 = 0x4B4E4732
+
+
+def test_stale_magic_constant_is_detected(mkrepo, lint):
+    root = mkrepo(
+        {
+            "rust/src/lib.rs": "pub mod graph;\n",
+            "rust/src/graph/mod.rs": "pub mod serial;\n",
+            "rust/src/graph/serial.rs": fixture_text("stale_magic.rs"),
+        }
+    )
+    found = lint(root, {"coupling"}, rule="magic-coupling")
+    assert len(found) == 1
+    assert "stale wire-format magic" in found[0].message
+    assert "KNG2" in found[0].message
+
+
+def test_fixture_bytes_must_match_the_constant(mkrepo, lint):
+    good = fixture_text("stale_magic.rs").replace("0x4B_4E_47_31", "0x4B_4E_47_32")
+    root = mkrepo(
+        {
+            "rust/src/lib.rs": "pub mod graph;\n",
+            "rust/src/graph/mod.rs": "pub mod serial;\n",
+            "rust/src/graph/serial.rs": good,
+            # Golden fixture whose first 4 bytes are NOT the magic.
+            "rust/tests/data/golden.kng2": b"XXXXrest-of-payload",
+        }
+    )
+    found = lint(root, {"coupling"}, rule="magic-coupling")
+    assert len(found) == 1
+    assert "regenerate" in found[0].message
+
+
+def test_matching_constant_and_fixture_are_clean(mkrepo, lint):
+    good = fixture_text("stale_magic.rs").replace("0x4B_4E_47_31", "0x4B_4E_47_32")
+    root = mkrepo(
+        {
+            "rust/src/lib.rs": "pub mod graph;\n",
+            "rust/src/graph/mod.rs": "pub mod serial;\n",
+            "rust/src/graph/serial.rs": good,
+            "rust/tests/data/golden.kng2": KNG2.to_bytes(4, "little") + b"rest",
+        }
+    )
+    assert lint(root, {"coupling"}, rule="magic-coupling") == []
+
+
+def test_stored_rowref_is_detected(mkrepo, lint):
+    root = mkrepo(
+        {
+            "rust/src/lib.rs": "pub mod cache;\n",
+            "rust/src/cache.rs": fixture_text("stored_rowref.rs"),
+        }
+    )
+    found = lint(root, {"coupling"}, rule="ref-guards")
+    assert len(found) == 1
+    assert "`Cache` stores a `RowRef`" in found[0].message
+
+
+def test_static_rowref_return_is_detected(mkrepo, lint):
+    src = """
+use crate::dataset::store::RowRef;
+
+pub fn leak(store: &Store) -> RowRef<'static> {
+    store.row(0)
+}
+"""
+    root = mkrepo({"rust/src/lib.rs": "pub mod m;\n", "rust/src/m.rs": src})
+    found = lint(root, {"coupling"}, rule="ref-guards")
+    assert len(found) == 1
+    assert "'static" in found[0].message or "outlive" in found[0].message
+
+
+def test_checker_asserting_unrecorded_metric_is_an_error(mkrepo, lint):
+    checker = (
+        "def main(dump):\n"
+        "    assert 'stream.ghost_metric' in dump\n"
+    )
+    rust = (
+        "pub fn record(reg: &Registry) {\n"
+        "    reg.counter(\"stream.real_metric\").inc(1);\n"
+        "}\n"
+    )
+    root = mkrepo(
+        {
+            "rust/src/lib.rs": "pub mod m;\n",
+            "rust/src/m.rs": rust,
+            "scripts/check_metrics_snapshot.py": checker,
+        }
+    )
+    found = lint(root, {"coupling"}, rule="metrics-coupling")
+    errors = [f for f in found if f.severity == "error"]
+    infos = [f for f in found if f.severity == "info"]
+    assert len(errors) == 1
+    assert "stream.ghost_metric" in errors[0].message
+    # The unasserted Rust-side name surfaces as info, not as a failure.
+    assert len(infos) == 1
+    assert "stream.real_metric" in infos[0].message

@@ -1,0 +1,92 @@
+"""Regression tests for the shared Rust lexer/stripper."""
+
+from knnlint.lexer import (
+    cfg_test_ranges,
+    drop_cfg_test_lines,
+    line_of,
+    strip_rust,
+)
+
+
+def test_strips_plain_strings_and_comments():
+    src = 'let s = "a//b"; // trailing\nlet t = 1; /* block */ let u = 2;\n'
+    out = strip_rust(src)
+    assert "a//b" not in out
+    assert "trailing" not in out
+    assert "block" not in out
+    assert "let t = 1;" in out
+    assert "let u = 2;" in out
+
+
+def test_strips_cooked_byte_strings():
+    # Regression: `b"..."` used to lex as identifier `b` + string, so
+    # the content leaked into the stripped text.
+    out = strip_rust('const MAGIC: &[u8; 4] = b"KSQ8";\nlet x = 1;\n')
+    assert "KSQ8" not in out
+    assert '"' not in out
+    assert "let x = 1;" in out
+
+
+def test_strips_raw_byte_strings_any_hash_count():
+    # Regression: the old fixed-width prefix window broke on long hash
+    # runs and on the `br` prefix itself.
+    for hashes in ("", "#", "##", "#####"):
+        src = 'let m = br%s"quote \\" and // inside"%s;\nlet y = 2;\n' % (
+            hashes,
+            hashes,
+        )
+        out = strip_rust(src)
+        assert "inside" not in out, hashes
+        assert "let y = 2;" in out, hashes
+
+
+def test_raw_strings_preserve_newline_count():
+    src = 'let m = r#"line1\nline2\nline3"#;\nlet z = 3;\n'
+    out = strip_rust(src)
+    assert out.count("\n") == src.count("\n")
+    assert "line2" not in out
+    assert line_of(out, out.index("let z")) == 4
+
+
+def test_byte_char_literals():
+    out = strip_rust("let c = b'x'; let d = b'\\xff'; let e = 5;")
+    assert "x" not in out.replace("let e", "")  # b'x' content gone
+    assert "let e = 5;" in out
+
+
+def test_ident_cont_guard_keeps_identifiers_ending_in_b():
+    # `ab"..."` is the identifier `ab` followed by a plain string, not
+    # a byte-string literal: the identifier must survive.
+    assert strip_rust('ab"cd"') == "ab"
+    assert strip_rust('b"cd"') == ""
+
+
+def test_lifetimes_keep_identifier():
+    out = strip_rust("fn f<'a>(x: &'a u32) -> &'a u32 { x }")
+    assert "f<a>" in out.replace(" ", "")
+    assert "'" not in out
+
+
+def test_nested_block_comments():
+    out = strip_rust("a /* x /* y */ z */ b")
+    assert out.replace(" ", "") == "ab"
+
+
+def test_cfg_test_ranges_and_line_blanking():
+    src = (
+        "pub fn live() {}\n"
+        "#[cfg(test)]\n"
+        "mod tests {\n"
+        '    fn t() { let s = "secret"; }\n'
+        "}\n"
+        "pub fn also_live() {}\n"
+    )
+    stripped = strip_rust(src)
+    ranges = cfg_test_ranges(stripped)
+    assert len(ranges) == 1
+    cleaned = drop_cfg_test_lines(stripped, src)
+    assert "secret" not in cleaned
+    assert "live()" in cleaned
+    assert "also_live" in cleaned
+    # Blanking preserves line numbers.
+    assert cleaned.count("\n") == src.count("\n")

@@ -1,0 +1,220 @@
+"""Lock-order and lock-across-I/O rule tests over seeded fixtures."""
+
+from conftest import fixture_text
+
+LIB = "pub mod fix;\n"
+
+
+def put(mkrepo, body, extra=None):
+    files = {"rust/src/lib.rs": LIB, "rust/src/fix.rs": body}
+    files.update(extra or {})
+    return mkrepo(files)
+
+
+def test_declared_order_is_clean(mkrepo, lint):
+    root = put(mkrepo, fixture_text("lock_order_ok.rs"))
+    assert lint(root, {"locks"}) == []
+
+
+def test_seeded_inversion_is_detected(mkrepo, lint):
+    root = put(mkrepo, fixture_text("lock_order_inversion.rs"))
+    found = lint(root, {"locks"}, rule="lock-order")
+    assert len(found) == 1
+    assert "inversion" in found[0].message
+    assert "`fix.b` held while acquiring `fix.a`" in found[0].message
+
+
+def test_declared_cycle_is_detected(mkrepo, lint):
+    root = put(mkrepo, fixture_text("lock_order_cycle.rs"))
+    found = lint(root, {"locks"}, rule="lock-order")
+    assert any("form a cycle" in f.message for f in found)
+
+
+def test_undeclared_edge_is_detected(mkrepo, lint):
+    src = fixture_text("lock_order_ok.rs").replace(
+        "// LOCK-ORDER: fix.a -> fix.b\n", ""
+    )
+    root = put(mkrepo, src)
+    found = lint(root, {"locks"}, rule="lock-order")
+    assert len(found) == 1
+    assert "undeclared lock-order edge" in found[0].message
+
+
+def test_interprocedural_edge_through_same_file_call(mkrepo, lint):
+    src = """
+use std::sync::Mutex;
+
+pub struct Pair {
+    // LOCK-ORDER: fix.a
+    a: Mutex<u32>,
+    // LOCK-ORDER: fix.b
+    b: Mutex<u32>,
+}
+
+impl Pair {
+    fn inner(&self) -> u32 {
+        let g = self.b.lock().unwrap();
+        *g
+    }
+
+    pub fn outer(&self) -> u32 {
+        let g = self.a.lock().unwrap();
+        let v = self.inner();
+        *g + v
+    }
+}
+"""
+    root = put(mkrepo, src)
+    found = lint(root, {"locks"}, rule="lock-order")
+    assert len(found) == 1
+    assert "`fix.a` held while acquiring `fix.b`" in found[0].message
+
+
+def test_drop_call_is_not_a_dispatch_to_drop_impl(mkrepo, lint):
+    # Regression: `drop(guard)` statements used to resolve as calls to a
+    # same-file `Drop::drop` impl, importing its acquisition set.
+    src = """
+use std::sync::Mutex;
+
+// LOCK-ORDER: fix.a -> fix.b
+
+pub struct Trio {
+    // LOCK-ORDER: fix.a
+    a: Mutex<u32>,
+    // LOCK-ORDER: fix.b
+    b: Mutex<u32>,
+    // LOCK-ORDER: fix.c
+    c: Mutex<u32>,
+}
+
+impl Drop for Trio {
+    fn drop(&mut self) {
+        let g = self.c.lock().unwrap();
+        let _ = *g;
+    }
+}
+
+impl Trio {
+    pub fn ordered(&self) -> u32 {
+        let ga = self.a.lock().unwrap();
+        let gb = self.b.lock().unwrap();
+        let sum = *ga + *gb;
+        drop(gb);
+        drop(ga);
+        sum
+    }
+}
+"""
+    root = put(mkrepo, src)
+    found = lint(root, {"locks"}, rule="lock-order")
+    assert found == [], [f.message for f in found]
+
+
+def test_reentrant_acquisition_is_detected(mkrepo, lint):
+    src = """
+use std::sync::Mutex;
+
+pub struct One {
+    // LOCK-ORDER: fix.a
+    a: Mutex<u32>,
+}
+
+impl One {
+    pub fn twice(&self) -> u32 {
+        let g1 = self.a.lock().unwrap();
+        let g2 = self.a.lock().unwrap();
+        *g1 + *g2
+    }
+}
+"""
+    root = put(mkrepo, src)
+    found = lint(root, {"locks"}, rule="lock-order")
+    assert len(found) == 1
+    assert "re-entrant" in found[0].message
+
+
+def test_terminal_lock_must_be_a_leaf(mkrepo, lint):
+    src = """
+use std::sync::Mutex;
+
+pub struct Pair {
+    // LOCK-ORDER: fix.t terminal
+    t: Mutex<u32>,
+    // LOCK-ORDER: fix.b
+    b: Mutex<u32>,
+}
+
+impl Pair {
+    pub fn bad(&self) -> u32 {
+        let gt = self.t.lock().unwrap();
+        let gb = self.b.lock().unwrap();
+        *gt + *gb
+    }
+
+    pub fn fine(&self) -> u32 {
+        let gb = self.b.lock().unwrap();
+        let gt = self.t.lock().unwrap();
+        *gt + *gb
+    }
+}
+"""
+    root = put(mkrepo, src)
+    found = lint(root, {"locks"}, rule="lock-order")
+    assert len(found) == 1
+    assert "terminal lock `fix.t`" in found[0].message
+
+
+def test_lock_held_across_io_warns(mkrepo, lint):
+    root = put(mkrepo, fixture_text("lock_across_io.rs"))
+    found = lint(root, {"locks"}, rule="lock-io")
+    assert len(found) == 1
+    assert found[0].severity == "warning"
+    assert "held across" in found[0].message
+
+
+def test_allow_io_suppresses_the_io_finding(mkrepo, lint):
+    src = fixture_text("lock_across_io.rs").replace(
+        "// LOCK-ORDER: fix.w", "// LOCK-ORDER: fix.w allow-io"
+    )
+    root = put(mkrepo, src)
+    assert lint(root, {"locks"}, rule="lock-io") == []
+
+
+def test_try_lock_is_exempt(mkrepo, lint):
+    src = """
+use std::sync::Mutex;
+
+pub struct Pair {
+    // LOCK-ORDER: fix.a
+    a: Mutex<u32>,
+    // LOCK-ORDER: fix.b
+    b: Mutex<u32>,
+}
+
+impl Pair {
+    pub fn opportunistic(&self) -> u32 {
+        let ga = self.a.lock().unwrap();
+        if let Ok(gb) = self.b.try_lock() {
+            return *ga + *gb;
+        }
+        *ga
+    }
+}
+"""
+    root = put(mkrepo, src)
+    assert lint(root, {"locks"}, rule="lock-order") == []
+
+
+def test_malformed_annotation_is_a_finding(mkrepo, lint):
+    src = """
+use std::sync::Mutex;
+
+pub struct One {
+    // LOCK-ORDER: fix.a sideways
+    a: Mutex<u32>,
+}
+"""
+    root = put(mkrepo, src)
+    found = lint(root, {"locks"}, rule="lock-order")
+    assert len(found) == 1
+    assert "malformed" in found[0].message

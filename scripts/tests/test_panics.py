@@ -1,0 +1,86 @@
+"""Panic-path audit rule tests."""
+
+from conftest import fixture_text
+
+LIB = "pub mod stream;\n"
+STREAM_MOD = "pub mod persist;\n"
+
+
+def test_forbidden_file_unwrap_is_an_error(mkrepo, lint):
+    root = mkrepo(
+        {
+            "rust/src/lib.rs": LIB,
+            "rust/src/stream/mod.rs": STREAM_MOD,
+            "rust/src/stream/persist.rs": fixture_text("forbidden_unwrap.rs"),
+        }
+    )
+    found = lint(root, {"panics"}, rule="panic-path")
+    assert len(found) == 1
+    assert found[0].severity == "error"
+    assert found[0].path == "rust/src/stream/persist.rs"
+    assert "try_into().unwrap()" in found[0].message
+
+
+def test_same_unwrap_elsewhere_is_a_warning(mkrepo, lint):
+    root = mkrepo(
+        {
+            "rust/src/lib.rs": "pub mod other;\n",
+            "rust/src/other.rs": fixture_text("forbidden_unwrap.rs"),
+        }
+    )
+    found = lint(root, {"panics"}, rule="panic-path")
+    assert len(found) == 1
+    assert found[0].severity == "warning"
+
+
+def test_poisoned_lock_idiom_is_allowed(mkrepo, lint):
+    src = """
+use std::sync::{Mutex, RwLock};
+
+pub fn all_allowed(m: &Mutex<u32>, rw: &RwLock<u32>) -> u32 {
+    let a = *m.lock().unwrap();
+    let b = *rw.read().unwrap();
+    let c = *rw.write().unwrap();
+    a + b + c
+}
+"""
+    root = mkrepo({"rust/src/lib.rs": "pub mod m;\n", "rust/src/m.rs": src})
+    assert lint(root, {"panics"}, rule="panic-path") == []
+
+
+def test_panic_ok_comment_suppresses(mkrepo, lint):
+    src = """
+pub fn f(v: &[u32]) -> u32 {
+    // PANIC-OK: the caller guarantees v is non-empty.
+    *v.first().unwrap()
+}
+"""
+    root = mkrepo({"rust/src/lib.rs": "pub mod m;\n", "rust/src/m.rs": src})
+    assert lint(root, {"panics"}, rule="panic-path") == []
+
+
+def test_cfg_test_modules_are_exempt(mkrepo, lint):
+    src = """
+pub fn live() {}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let v: Vec<u32> = vec![1];
+        assert_eq!(*v.first().unwrap(), 1);
+    }
+}
+"""
+    root = mkrepo({"rust/src/lib.rs": "pub mod m;\n", "rust/src/m.rs": src})
+    assert lint(root, {"panics"}, rule="panic-path") == []
+
+
+def test_unwrap_or_is_not_a_panic_site(mkrepo, lint):
+    src = """
+pub fn f(v: Option<u32>) -> u32 {
+    v.unwrap_or(0) + v.unwrap_or_default()
+}
+"""
+    root = mkrepo({"rust/src/lib.rs": "pub mod m;\n", "rust/src/m.rs": src})
+    assert lint(root, {"panics"}, rule="panic-path") == []

@@ -1,0 +1,69 @@
+"""End-to-end gate: knnlint over the real repo must be clean, and the
+machine-readable output must obey the published schema."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+
+FINDING_KEYS = {"rule", "severity", "path", "line", "message", "baselined",
+                "justification"}
+
+
+def run_knnlint(*args):
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "knnlint"), *args],
+        cwd=REPO, capture_output=True, text=True,
+    )
+
+
+def test_repo_is_clean_under_the_committed_baseline(tmp_path):
+    out = tmp_path / "lint.json"
+    proc = run_knnlint("--json", str(out))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    data = json.loads(out.read_text())
+    assert data["version"] == 1
+    assert data["tool"] == "knnlint"
+    assert data["files_scanned"] > 0
+    assert set(data["counts"]) == {"error", "warning", "info", "baselined", "new"}
+    assert data["counts"]["new"] == 0
+    assert data["counts"]["baselined"] == len(data["findings"]) >= 0
+    for f in data["findings"]:
+        assert FINDING_KEYS <= set(f), f
+        assert f["baselined"] is True
+        assert f["severity"] in ("error", "warning", "info")
+        assert isinstance(f["line"], int) and f["line"] >= 1
+
+
+def test_no_baseline_mode_fails_when_findings_exist():
+    # Sanity that the gate has teeth: with the baseline ignored, the
+    # grandfathered findings must fail the run (exit 1) — unless the
+    # tree is genuinely finding-free, which also proves the gate works.
+    proc = run_knnlint("--no-baseline", "-q")
+    baseline = json.loads(
+        (REPO / "scripts" / "knnlint" / "baseline.json").read_text()
+    )
+    if baseline["entries"]:
+        assert proc.returncode == 1, proc.stdout + proc.stderr
+    else:
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_committed_baseline_entries_are_justified():
+    data = json.loads(
+        (REPO / "scripts" / "knnlint" / "baseline.json").read_text()
+    )
+    assert data["version"] == 1
+    assert data["entries"], "baseline should carry the grandfathered findings"
+    for e in data["entries"]:
+        assert e["justification"].strip(), e
+        assert e["count"] >= 1
+
+
+def test_unknown_rule_module_is_an_error():
+    proc = run_knnlint("--rules", "nonexistent")
+    assert proc.returncode == 2
+    assert "unknown rule" in proc.stderr

@@ -20,6 +20,13 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# Static analysis first, unconditionally: knnlint needs no toolchain,
+# so it gates even containers where every cargo step below is skipped.
+# New findings (not in scripts/knnlint/baseline.json) fail the run;
+# the machine-readable report lands next to the bench outputs.
+mkdir -p results
+python3 scripts/knnlint --json results/lint.json -q
+
 cargo build --release
 # Benches are plain binaries outside the default build graph; compiling
 # them here keeps bench rot a verify failure even when clippy (which
