@@ -1,0 +1,262 @@
+//! Mixed-workload SLO harness for `serve` mode: N client threads issue
+//! a search/insert/delete/upsert mix over real `KSRV` TCP connections
+//! against a live server while the background compactor runs, then a
+//! degradation drill hammers a deliberately tiny admission gate to
+//! prove load shedding (ingest `Overloaded`) and search degradation
+//! fire while searches keep answering.
+//!
+//! Per-class p50/p95/p99 come from the server-side `service.*`
+//! histograms — the same instruments an operator scrapes — not from
+//! client-side stopwatches. Emits `results/serve_slo.json`
+//! (validated by `scripts/check_serve_slo.py`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use knn_merge::config::{ServeConfig, StreamConfig};
+use knn_merge::dataset::DatasetFamily;
+use knn_merge::distance::Metric;
+use knn_merge::eval::bench::{scaled, BenchReport, Row};
+use knn_merge::merge::MergeParams;
+use knn_merge::service::server::{spawn, ServeClient, ServerOptions};
+use knn_merge::stream::StreamingIndex;
+use knn_merge::{Request, Response, Service};
+
+const TOPK: usize = 10;
+const EF: usize = 64;
+const CLIENTS: usize = 4;
+const DRILL_CLIENTS: usize = 8;
+
+fn main() {
+    let n = scaled(4000);
+    let ops_per_client = (n / 2).max(200);
+    let family = DatasetFamily::Sift;
+    let ds = family.generate(n, 42);
+    let queries = family.generate_queries(64, 7);
+    let cfg = StreamConfig {
+        segment_size: (n / 8).max(128),
+        seal_threads: 1,
+        merge: MergeParams {
+            k: 10,
+            lambda: 10,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let index = Arc::new(StreamingIndex::new(ds.dim, Metric::L2, cfg));
+    let compactor = Arc::clone(&index).spawn_compactor(Duration::from_millis(5));
+
+    let mut report = BenchReport::new("serve_slo");
+    report.note(format!(
+        "mixed workload over KSRV TCP: {CLIENTS} clients x {ops_per_client} ops \
+         (60/25/10/5 search/insert/delete/upsert), sift-like n={n} dim={}, \
+         compactor live throughout; quantiles from server-side service.* histograms \
+         (insert histogram includes the preload)",
+        ds.dim
+    ));
+    report.note(format!(
+        "drill: {DRILL_CLIENTS} burst clients against max_inflight_ingest=0 / \
+         max_inflight_search=0 — every insert must shed (Overloaded), every search \
+         must still answer with the beam degraded to topk"
+    ));
+
+    // ------------------------------------------------- mixed workload
+    let svc = Arc::new(Service::with_options(
+        Arc::clone(&index),
+        ServeConfig {
+            max_inflight_search: 64,
+            max_inflight_ingest: 8,
+            max_seal_backlog: 16,
+            retry_after_ms: 2,
+            ..ServeConfig::default()
+        },
+    ));
+    let mut server =
+        spawn(Arc::clone(&svc), &ServerOptions::default()).expect("bind serve_slo server");
+    let addr = server.addr();
+
+    // Preload through the wire like any other client.
+    let mut loader = ServeClient::connect(addr).expect("connect preload client");
+    for i in 0..ds.len() {
+        let vector = ds.vector(i).to_vec();
+        loop {
+            match loader
+                .request(Request::Insert { vector: vector.clone() })
+                .expect("preload request")
+            {
+                Response::Inserted { .. } => break,
+                Response::Overloaded { retry_after_ms, .. } => {
+                    std::thread::sleep(Duration::from_millis(retry_after_ms.max(1)))
+                }
+                other => panic!("preload insert failed: {other:?}"),
+            }
+        }
+    }
+
+    let live_floor = ds.len() as u32; // preloaded gids: deletable targets
+    let overloaded = Arc::new(AtomicUsize::new(0));
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|t| {
+            let queries = queries.clone();
+            let ds = ds.clone();
+            let overloaded = Arc::clone(&overloaded);
+            std::thread::spawn(move || {
+                let mut client = ServeClient::connect(addr).expect("connect mixed client");
+                for i in 0..ops_per_client {
+                    let roll = (t * ops_per_client + i) % 20;
+                    // 12/5/2/1 of 20 = 60/25/10/5 percent.
+                    let req = if roll < 12 {
+                        Request::Search {
+                            query: queries.vector(i % queries.len()).to_vec(),
+                            topk: TOPK,
+                            ef: EF,
+                        }
+                    } else if roll < 17 {
+                        Request::Insert {
+                            vector: ds.vector(i % ds.len()).to_vec(),
+                        }
+                    } else if roll < 19 {
+                        Request::Delete {
+                            gid: ((t * ops_per_client + i) as u32) % live_floor,
+                        }
+                    } else {
+                        Request::Upsert {
+                            gid: ((t * ops_per_client + i) as u32) % live_floor,
+                            vector: ds.vector((i + 1) % ds.len()).to_vec(),
+                        }
+                    };
+                    match client.request(req).expect("mixed request") {
+                        Response::Hits { .. }
+                        | Response::Inserted { .. }
+                        | Response::Deleted { .. }
+                        | Response::Upserted { .. } => {}
+                        // Real clients back off; the bench just counts.
+                        Response::Overloaded { retry_after_ms, .. } => {
+                            overloaded.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(Duration::from_millis(retry_after_ms.max(1)));
+                        }
+                        other => panic!("unexpected mixed response: {other:?}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("mixed client");
+    }
+
+    let obs = index.metrics();
+    for class in ["search", "insert", "delete", "upsert"] {
+        let h = obs.histogram(&format!("service.{class}_ns")).snapshot();
+        report.push(
+            Row::new(class)
+                .col("count", h.count as f64)
+                .col("p50_ms", h.quantile_secs(0.50) * 1e3)
+                .col("p95_ms", h.quantile_secs(0.95) * 1e3)
+                .col("p99_ms", h.quantile_secs(0.99) * 1e3),
+        );
+    }
+
+    // ---------------------------------------------- degradation drill
+    let rejected_before: u64 = ["insert", "delete", "upsert"]
+        .iter()
+        .map(|c| obs.counter(&format!("service.rejected_{c}")).get())
+        .sum();
+    let degraded_before = obs.counter("service.degraded_searches").get();
+    // A second service over the same index with the gate slammed shut:
+    // zero ingest permits (every mutation sheds deterministically) and
+    // zero search permits (every search runs over-committed, so the
+    // beam degrades to topk) — the compactor is still running
+    // underneath.
+    let drill_svc = Arc::new(Service::with_options(
+        Arc::clone(&index),
+        ServeConfig {
+            max_inflight_search: 0,
+            max_inflight_ingest: 0,
+            max_seal_backlog: 2,
+            retry_after_ms: 1,
+            ..ServeConfig::default()
+        },
+    ));
+    let mut drill_server =
+        spawn(Arc::clone(&drill_svc), &ServerOptions::default()).expect("bind drill server");
+    let drill_addr = drill_server.addr();
+    let drill_ops = (ops_per_client / 4).max(50);
+    let shed = Arc::new(AtomicUsize::new(0));
+    let answered = Arc::new(AtomicUsize::new(0));
+    let drill: Vec<_> = (0..DRILL_CLIENTS)
+        .map(|t| {
+            let queries = queries.clone();
+            let ds = ds.clone();
+            let shed = Arc::clone(&shed);
+            let answered = Arc::clone(&answered);
+            std::thread::spawn(move || {
+                let mut client =
+                    ServeClient::connect(drill_addr).expect("connect drill client");
+                for i in 0..drill_ops {
+                    // Alternate insert/search so overload and
+                    // degradation are exercised in the same burst.
+                    let req = if (t + i) % 2 == 0 {
+                        Request::Insert {
+                            vector: ds.vector(i % ds.len()).to_vec(),
+                        }
+                    } else {
+                        Request::Search {
+                            query: queries.vector(i % queries.len()).to_vec(),
+                            topk: TOPK,
+                            ef: EF,
+                        }
+                    };
+                    match client.request(req).expect("drill request") {
+                        Response::Overloaded { .. } => {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Response::Hits { .. } => {
+                            answered.fetch_add(1, Ordering::Relaxed);
+                        }
+                        other => panic!("unexpected drill response: {other:?}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    for c in drill {
+        c.join().expect("drill client");
+    }
+    let rejected_after: u64 = ["insert", "delete", "upsert"]
+        .iter()
+        .map(|c| obs.counter(&format!("service.rejected_{c}")).get())
+        .sum();
+    let drill_search = obs.histogram("service.search_ns").snapshot();
+    report.push(
+        Row::new("drill")
+            .col("ops", (DRILL_CLIENTS * drill_ops) as f64)
+            .col("rejected", (rejected_after - rejected_before) as f64)
+            .col("shed_seen_by_clients", shed.load(Ordering::Relaxed) as f64)
+            .col("searches_answered", answered.load(Ordering::Relaxed) as f64)
+            .col(
+                "degraded_searches",
+                (obs.counter("service.degraded_searches").get() - degraded_before) as f64,
+            )
+            .col("search_p99_ms", drill_search.quantile_secs(0.99) * 1e3),
+    );
+
+    // --------------------------------------------------------- drain
+    drill_server.shutdown();
+    let mut closer = ServeClient::connect(addr).expect("connect closer");
+    closer.shutdown_server().expect("shutdown ack");
+    server.wait_with_deadline(Duration::from_secs(10));
+    compactor.stop();
+    let st = index.stats();
+    report.note(format!(
+        "final engine state: {} inserted, {} deleted, {} compactions, {} live segments, \
+         mixed-phase overloads seen by clients: {}",
+        st.inserted,
+        st.deleted,
+        st.compactions,
+        st.live_segments,
+        overloaded.load(Ordering::Relaxed)
+    ));
+    report.finish();
+}

@@ -284,6 +284,95 @@ impl StreamConfig {
     }
 }
 
+/// Admission-control and serving knobs of the [`service`] layer (the
+/// `serve` CLI mode and any embedded [`Service`]).
+///
+/// All limits act per [`Service`] instance. Searches are never
+/// rejected: past 50% pressure the beam width degrades linearly toward
+/// `topk`, and an over-committed search class (more than
+/// `max_inflight_search` concurrent searches) runs fully degraded.
+/// Ingest (insert/delete/upsert) is rejected with `Overloaded` +
+/// `retry_after_ms` once `max_inflight_ingest` operations are in
+/// flight or pressure reaches 1.0.
+///
+/// [`Service`]: crate::service::Service
+/// [`service`]: crate::service
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Concurrent searches before the class is over-committed and new
+    /// searches run at the fully degraded beam width (`ef == topk`).
+    pub max_inflight_search: usize,
+    /// Concurrent ingest operations admitted; the rest see
+    /// `Overloaded`.
+    pub max_inflight_ingest: usize,
+    /// Seal backlog (frozen batches queued for off-thread build) that
+    /// counts as pressure 1.0. The engine's own dispatch valve blocks
+    /// inserts at `2 * seal_threads + 2`, so the default sits above
+    /// any common valve: batch drivers never trip it accidentally,
+    /// while a server can lower it to shed load before the valve
+    /// stalls a connection thread.
+    pub max_seal_backlog: usize,
+    /// Retry hint attached to `Overloaded` responses, milliseconds.
+    pub retry_after_ms: u64,
+    /// `serve` mode: checkpoint the log every this many seconds when a
+    /// checkpoint dir is configured (0 = only at shutdown).
+    pub checkpoint_interval_s: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_inflight_search: 64,
+            max_inflight_ingest: 16,
+            max_seal_backlog: 16,
+            retry_after_ms: 25,
+            checkpoint_interval_s: 0.0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Admission control effectively off: never reject, never degrade.
+    /// The batch ingest driver uses this so a `Service`-routed run
+    /// behaves exactly like the direct-engine path it replaced.
+    pub fn unbounded() -> ServeConfig {
+        ServeConfig {
+            max_inflight_search: usize::MAX,
+            max_inflight_ingest: usize::MAX,
+            max_seal_backlog: usize::MAX,
+            retry_after_ms: 1,
+            checkpoint_interval_s: 0.0,
+        }
+    }
+
+    /// Build from a parsed [`ConfigMap`] `[serve]` section; missing
+    /// keys keep defaults.
+    pub fn apply_map(&mut self, map: &ConfigMap) -> Result<()> {
+        if let Some(v) = map.get_usize("serve.max_inflight_search")? {
+            self.max_inflight_search = v;
+        }
+        if let Some(v) = map.get_usize("serve.max_inflight_ingest")? {
+            self.max_inflight_ingest = v;
+        }
+        if let Some(v) = map.get_usize("serve.max_seal_backlog")? {
+            if v == 0 {
+                bail!("serve.max_seal_backlog must be positive");
+            }
+            self.max_seal_backlog = v;
+        }
+        if let Some(v) = map.get_u64("serve.retry_after_ms")? {
+            self.retry_after_ms = v;
+        }
+        if let Some(v) = map.get_f64("serve.checkpoint_interval_s")? {
+            if v < 0.0 {
+                bail!("serve.checkpoint_interval_s must be >= 0, got {v}");
+            }
+            self.checkpoint_interval_s = v;
+        }
+        Ok(())
+    }
+}
+
 /// A complete run configuration for the coordinator.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -315,6 +404,8 @@ pub struct RunConfig {
     pub seed: u64,
     /// Online streaming subsystem parameters.
     pub stream: StreamConfig,
+    /// Service-layer admission control (`serve` mode knobs).
+    pub serve: ServeConfig,
 }
 
 impl Default for RunConfig {
@@ -336,6 +427,7 @@ impl Default for RunConfig {
             memory_budget: 0,
             seed: 42,
             stream: StreamConfig::default(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -402,6 +494,7 @@ impl RunConfig {
         cfg.stream.nnd = cfg.nnd;
         cfg.stream.max_degree = cfg.merge.k;
         cfg.stream.apply_map(map)?;
+        cfg.serve.apply_map(map)?;
         Ok(cfg)
     }
 
@@ -455,6 +548,26 @@ latency_us = 50
         assert_eq!(cfg.nnd.k, 40);
         assert!((cfg.bandwidth_bps - 10e9).abs() < 1.0);
         assert!((cfg.latency_s - 50e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serve_config_from_map() {
+        let map = ConfigMap::parse(
+            "[serve]\nmax_inflight_search = 8\nmax_inflight_ingest = 2\n\
+             max_seal_backlog = 4\nretry_after_ms = 7\ncheckpoint_interval_s = 1.5\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_map(&map).unwrap();
+        assert_eq!(cfg.serve.max_inflight_search, 8);
+        assert_eq!(cfg.serve.max_inflight_ingest, 2);
+        assert_eq!(cfg.serve.max_seal_backlog, 4);
+        assert_eq!(cfg.serve.retry_after_ms, 7);
+        assert!((cfg.serve.checkpoint_interval_s - 1.5).abs() < 1e-12);
+
+        let bad = ConfigMap::parse("[serve]\nmax_seal_backlog = 0\n").unwrap();
+        assert!(RunConfig::from_map(&bad).is_err());
+        let neg = ConfigMap::parse("[serve]\ncheckpoint_interval_s = -1\n").unwrap();
+        assert!(RunConfig::from_map(&neg).is_err());
     }
 
     #[test]

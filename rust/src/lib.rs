@@ -41,10 +41,12 @@ pub mod index;
 pub mod merge;
 pub mod metrics;
 pub mod runtime;
+pub mod service;
 pub mod stream;
 pub mod util;
 
 pub use config::RunConfig;
 pub use dataset::Dataset;
 pub use graph::KnnGraph;
+pub use service::{Request, Response, Service};
 pub use stream::StreamingIndex;

@@ -35,6 +35,7 @@ COMMANDS:
   distributed   multi-node pipeline (Alg. 3, simulated cluster)
   out-of-core   single node with external storage (Sec. IV)
   stream        online ingest: insert-while-search over the segment log
+  serve         KSRV TCP server over a live streaming index
   lid           estimate a dataset family's LID
   artifacts     list loadable AOT kernel artifacts
 
@@ -80,6 +81,26 @@ STREAM OPTIONS:
                                      versioned JSON at the end of the run
   --metrics-interval <secs>          also rewrite --metrics-out every
                                      <secs> seconds while ingesting
+
+SERVE OPTIONS (plus the stream index/checkpoint/metrics knobs above):
+  --addr <host:port>                 bind address (default 127.0.0.1:7700;
+                                     use :0 for an ephemeral port)
+  --dim <d>                          dimension of a fresh empty index
+  --preload <n>                      preload n --family vectors through
+                                     the service before listening
+  --max-inflight-search <n>          searches in flight before new ones
+                                     run fully degraded (ef -> topk)
+  --max-inflight-ingest <n>          ingest ops in flight before
+                                     Overloaded/retry-after
+  --max-seal-backlog <n>             queued seal builds that count as
+                                     pressure 1.0 (ingest shed point)
+  --retry-after-ms <ms>              retry hint on Overloaded responses
+  --checkpoint-interval <secs>       periodic checkpoint to
+                                     --checkpoint-dir while serving
+  --max-seconds <secs>               auto-shutdown deadline (0 = serve
+                                     until a client sends Shutdown)
+  --no-compactor                     do not run the background
+                                     compaction thread
 ";
 
 fn main() {
@@ -233,6 +254,9 @@ fn run() -> Result<()> {
         }
         "stream" => {
             knn_merge::stream::ingest::cli_stream(&args)?;
+        }
+        "serve" => {
+            knn_merge::service::server::cli_serve(&args)?;
         }
         "lid" => {
             let cfg = build_config(&args)?;

@@ -1,0 +1,717 @@
+//! Transport-independent service layer over [`StreamingIndex`].
+//!
+//! Every request path into the engine — the `stream` batch driver, the
+//! `serve` TCP server, tests, embedders — goes through one typed
+//! surface: [`Request`] in, [`Response`] out, via [`Service::handle`].
+//! The service owns what a transport must never re-implement:
+//!
+//! * **Admission control.** A bounded in-flight permit gate per
+//!   request class, plus pressure probes (seal backlog, paged-memory
+//!   residency). Ingest past the gate or at pressure 1.0 is rejected
+//!   with [`Response::Overloaded`] and a retry-after hint. Searches
+//!   are *never* rejected: past 50% pressure the beam width degrades
+//!   linearly from the requested `ef` toward `topk`, trading recall
+//!   for bounded latency instead of queueing.
+//! * **Instrumentation.** Per-class `service.*` latency histograms,
+//!   rejection/degradation counters, and in-flight gauges on the same
+//!   [`Registry`] the engine records into, so one snapshot covers the
+//!   whole request path.
+//! * **Durability hooks.** `Checkpoint` requests (and the periodic
+//!   checkpoint thread in `serve` mode) write to the service's
+//!   configured directory — a client never names server paths.
+//!
+//! [`Service::handle`] never panics on malformed input (dimension
+//! mismatches come back as [`Response::Error`]) and is `&self`: one
+//! service is shared across connection threads.
+
+pub mod server;
+pub mod wire;
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::ServeConfig;
+use crate::metrics::{Counter, Gauge, Histogram};
+use crate::stream::{StreamStats, StreamingIndex};
+
+/// One typed request into the engine surface.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// k-NN search. `ef == 0` means "the engine's configured default";
+    /// the effective beam width may degrade under pressure (see
+    /// [`Response::Hits::degraded`]).
+    Search {
+        query: Vec<f32>,
+        topk: usize,
+        ef: usize,
+    },
+    /// Append a vector; the engine assigns the global id.
+    Insert { vector: Vec<f32> },
+    /// Tombstone a global id.
+    Delete { gid: u32 },
+    /// Replace the vector of a live global id.
+    Upsert { gid: u32, vector: Vec<f32> },
+    /// Seal the memtable and wait for in-flight builds.
+    Flush,
+    /// Point-in-time engine statistics.
+    Stats,
+    /// Full metrics-registry snapshot as schema-v1 JSON.
+    MetricsSnapshot,
+    /// Checkpoint to the service's configured directory.
+    Checkpoint,
+}
+
+impl Request {
+    /// The admission class this request is gated under.
+    pub fn class(&self) -> RequestClass {
+        match self {
+            Request::Search { .. } => RequestClass::Search,
+            Request::Insert { .. } => RequestClass::Insert,
+            Request::Delete { .. } => RequestClass::Delete,
+            Request::Upsert { .. } => RequestClass::Upsert,
+            Request::Flush | Request::Stats | Request::MetricsSnapshot | Request::Checkpoint => {
+                RequestClass::Control
+            }
+        }
+    }
+}
+
+/// Typed reply to a [`Request`].
+#[derive(Clone, Debug)]
+pub enum Response {
+    /// Search results (distance, gid), nearest first. `degraded` marks
+    /// a search answered below the requested beam width.
+    Hits { hits: Vec<(f32, u32)>, degraded: bool },
+    Inserted { gid: u32 },
+    /// `existed` is false when the gid was already dead or unknown.
+    Deleted { existed: bool },
+    /// `applied` is false when the gid was not live.
+    Upserted { applied: bool },
+    Flushed,
+    Stats(StreamStats),
+    /// Schema-v1 metrics snapshot, pretty-printed JSON.
+    Metrics { json: String },
+    Checkpointed {
+        segments: u64,
+        files_written: u64,
+        files_reused: u64,
+        gc_removed: u64,
+        memtable_rows: u64,
+        manifest_bytes: u64,
+    },
+    /// Ingest admission failed; retry after the hinted delay.
+    Overloaded {
+        class: RequestClass,
+        retry_after_ms: u64,
+    },
+    /// The request was invalid or the operation failed. Never used for
+    /// load shedding (that is `Overloaded`) and never a panic.
+    Error { message: String },
+}
+
+/// Request classes of the permit gate (and the wire protocol).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestClass {
+    Search,
+    Insert,
+    Delete,
+    Upsert,
+    Control,
+}
+
+impl RequestClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestClass::Search => "search",
+            RequestClass::Insert => "insert",
+            RequestClass::Delete => "delete",
+            RequestClass::Upsert => "upsert",
+            RequestClass::Control => "control",
+        }
+    }
+
+    /// Stable wire code (`wire::` Overloaded payloads).
+    pub fn code(self) -> u8 {
+        match self {
+            RequestClass::Search => 0,
+            RequestClass::Insert => 1,
+            RequestClass::Delete => 2,
+            RequestClass::Upsert => 3,
+            RequestClass::Control => 4,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Option<RequestClass> {
+        Some(match code {
+            0 => RequestClass::Search,
+            1 => RequestClass::Insert,
+            2 => RequestClass::Delete,
+            3 => RequestClass::Upsert,
+            4 => RequestClass::Control,
+            _ => return None,
+        })
+    }
+}
+
+/// In-flight request counts behind the permit gate.
+#[derive(Default)]
+struct Inflight {
+    search: usize,
+    ingest: usize,
+}
+
+/// The transport-independent engine surface. Cheap to share
+/// (`Arc<Service>`); all methods are `&self`.
+pub struct Service {
+    index: Arc<StreamingIndex>,
+    cfg: ServeConfig,
+    checkpoint_dir: Option<PathBuf>,
+    // The permit gate sits strictly above every engine lock: handlers
+    // bump the in-flight counts under `service.permits`, drop the
+    // guard, and only then enter the engine (which starts its own
+    // chain at `stream.compact`).
+    // LOCK-ORDER: service.permits -> stream.compact
+    // LOCK-ORDER: service.permits
+    permits: Mutex<Inflight>,
+    search_ns: Arc<Histogram>,
+    insert_ns: Arc<Histogram>,
+    delete_ns: Arc<Histogram>,
+    upsert_ns: Arc<Histogram>,
+    control_ns: Arc<Histogram>,
+    rejected_insert: Arc<Counter>,
+    rejected_delete: Arc<Counter>,
+    rejected_upsert: Arc<Counter>,
+    degraded_searches: Arc<Counter>,
+    inflight_search: Arc<Gauge>,
+    inflight_ingest: Arc<Gauge>,
+}
+
+/// RAII permit: decrements its class count (and gauge) on drop, so a
+/// panicking engine call can never leak an in-flight slot.
+struct Permit<'a> {
+    svc: &'a Service,
+    search: bool,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        let mut st = self.svc.permits.lock().unwrap();
+        if self.search {
+            st.search -= 1;
+            self.svc.inflight_search.set(st.search as i64);
+        } else {
+            st.ingest -= 1;
+            self.svc.inflight_ingest.set(st.ingest as i64);
+        }
+    }
+}
+
+impl Service {
+    /// Wrap `index` with the default admission knobs.
+    pub fn new(index: Arc<StreamingIndex>) -> Service {
+        Service::with_options(index, ServeConfig::default())
+    }
+
+    /// Wrap `index` with explicit admission knobs. Instruments are
+    /// registered on the index's own registry (register-once: two
+    /// services over one index share handles).
+    pub fn with_options(index: Arc<StreamingIndex>, cfg: ServeConfig) -> Service {
+        let obs = Arc::clone(index.metrics());
+        Service {
+            cfg,
+            checkpoint_dir: None,
+            permits: Mutex::new(Inflight::default()),
+            search_ns: obs.histogram("service.search_ns"),
+            insert_ns: obs.histogram("service.insert_ns"),
+            delete_ns: obs.histogram("service.delete_ns"),
+            upsert_ns: obs.histogram("service.upsert_ns"),
+            control_ns: obs.histogram("service.control_ns"),
+            rejected_insert: obs.counter("service.rejected_insert"),
+            rejected_delete: obs.counter("service.rejected_delete"),
+            rejected_upsert: obs.counter("service.rejected_upsert"),
+            degraded_searches: obs.counter("service.degraded_searches"),
+            inflight_search: obs.gauge("service.inflight_search"),
+            inflight_ingest: obs.gauge("service.inflight_ingest"),
+            index,
+        }
+    }
+
+    /// Set the directory `Checkpoint` requests (and the periodic
+    /// checkpoint hook) write to.
+    pub fn with_checkpoint_dir(mut self, dir: Option<PathBuf>) -> Service {
+        self.checkpoint_dir = dir;
+        self
+    }
+
+    /// The wrapped engine, for maintenance paths (compaction driving,
+    /// registry access) that are not request-shaped.
+    pub fn index(&self) -> &Arc<StreamingIndex> {
+        &self.index
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// The directory `Checkpoint` requests write to, if configured.
+    pub fn checkpoint_dir(&self) -> Option<&Path> {
+        self.checkpoint_dir.as_deref()
+    }
+
+    /// Combined load pressure in [0, 1+]: the max of seal-backlog
+    /// occupancy (backlog / `max_seal_backlog`) and paged-memory
+    /// residency (resident / budget). 1.0 means "shed ingest".
+    pub fn pressure(&self) -> f64 {
+        let backlog = match self.cfg.max_seal_backlog {
+            0 => 0.0,
+            max => self.index.seal_backlog() as f64 / max as f64,
+        };
+        backlog.max(self.index.memory_pressure())
+    }
+
+    /// Serve one request. Never panics on malformed input; transport
+    /// layers can forward any byte-decoded request straight in.
+    pub fn handle(&self, req: Request) -> Response {
+        match req {
+            Request::Search { query, topk, ef } => self.search(query, topk, ef),
+            Request::Insert { vector } => self.insert(vector),
+            Request::Delete { gid } => self.delete(gid),
+            Request::Upsert { gid, vector } => self.upsert(gid, vector),
+            Request::Flush => self.control(|idx| {
+                idx.flush();
+                Response::Flushed
+            }),
+            Request::Stats => self.control(|idx| Response::Stats(idx.stats())),
+            Request::MetricsSnapshot => self.control(|idx| Response::Metrics {
+                json: idx.metrics_snapshot().to_json().to_pretty(),
+            }),
+            Request::Checkpoint => self.checkpoint(),
+        }
+    }
+
+    // ------------------------------------------------------- searches
+
+    fn search(&self, query: Vec<f32>, topk: usize, ef: usize) -> Response {
+        if query.len() != self.index.dim() {
+            return Response::Error {
+                message: format!(
+                    "query dimension {} != index dimension {}",
+                    query.len(),
+                    self.index.dim()
+                ),
+            };
+        }
+        // Searches are always admitted; over-commit only degrades.
+        let over = {
+            let mut st = self.permits.lock().unwrap();
+            st.search += 1;
+            self.inflight_search.set(st.search as i64);
+            st.search > self.cfg.max_inflight_search
+        };
+        let permit = Permit {
+            svc: self,
+            search: true,
+        };
+        let requested = if ef == 0 { self.index.default_ef() } else { ef }.max(topk);
+        let frac = if over {
+            1.0
+        } else {
+            ((self.pressure() - 0.5) / 0.5).clamp(0.0, 1.0)
+        };
+        let ef_eff = requested - ((requested - topk) as f64 * frac).round() as usize;
+        let degraded = ef_eff < requested;
+        if degraded {
+            self.degraded_searches.inc();
+        }
+        let t = Instant::now();
+        let hits = self.index.search_ef(&query, topk, ef_eff);
+        self.search_ns.record_duration(t.elapsed());
+        drop(permit);
+        Response::Hits { hits, degraded }
+    }
+
+    // --------------------------------------------------------- ingest
+
+    /// Admit one ingest operation or explain the rejection.
+    fn ingest_permit(&self, class: RequestClass) -> Result<Permit<'_>, Response> {
+        let shed = self.pressure() >= 1.0;
+        let admitted = {
+            let mut st = self.permits.lock().unwrap();
+            if shed || st.ingest >= self.cfg.max_inflight_ingest {
+                false
+            } else {
+                st.ingest += 1;
+                self.inflight_ingest.set(st.ingest as i64);
+                true
+            }
+        };
+        if admitted {
+            return Ok(Permit {
+                svc: self,
+                search: false,
+            });
+        }
+        match class {
+            RequestClass::Insert => self.rejected_insert.inc(),
+            RequestClass::Delete => self.rejected_delete.inc(),
+            RequestClass::Upsert => self.rejected_upsert.inc(),
+            _ => {}
+        }
+        Err(Response::Overloaded {
+            class,
+            retry_after_ms: self.cfg.retry_after_ms,
+        })
+    }
+
+    fn insert(&self, vector: Vec<f32>) -> Response {
+        if vector.len() != self.index.dim() {
+            return Response::Error {
+                message: format!(
+                    "insert dimension {} != index dimension {}",
+                    vector.len(),
+                    self.index.dim()
+                ),
+            };
+        }
+        let permit = match self.ingest_permit(RequestClass::Insert) {
+            Ok(p) => p,
+            Err(r) => return r,
+        };
+        let t = Instant::now();
+        let gid = self.index.insert(&vector);
+        self.insert_ns.record_duration(t.elapsed());
+        drop(permit);
+        Response::Inserted { gid }
+    }
+
+    fn delete(&self, gid: u32) -> Response {
+        let permit = match self.ingest_permit(RequestClass::Delete) {
+            Ok(p) => p,
+            Err(r) => return r,
+        };
+        let t = Instant::now();
+        let existed = self.index.delete(gid);
+        self.delete_ns.record_duration(t.elapsed());
+        drop(permit);
+        Response::Deleted { existed }
+    }
+
+    fn upsert(&self, gid: u32, vector: Vec<f32>) -> Response {
+        if vector.len() != self.index.dim() {
+            return Response::Error {
+                message: format!(
+                    "upsert dimension {} != index dimension {}",
+                    vector.len(),
+                    self.index.dim()
+                ),
+            };
+        }
+        let permit = match self.ingest_permit(RequestClass::Upsert) {
+            Ok(p) => p,
+            Err(r) => return r,
+        };
+        let t = Instant::now();
+        let applied = self.index.upsert(gid, &vector);
+        self.upsert_ns.record_duration(t.elapsed());
+        drop(permit);
+        Response::Upserted { applied }
+    }
+
+    // -------------------------------------------------------- control
+
+    fn control(&self, op: impl FnOnce(&StreamingIndex) -> Response) -> Response {
+        let t = Instant::now();
+        let resp = op(&self.index);
+        self.control_ns.record_duration(t.elapsed());
+        resp
+    }
+
+    fn checkpoint(&self) -> Response {
+        let Some(dir) = self.checkpoint_dir.clone() else {
+            return Response::Error {
+                message: "no checkpoint directory configured".to_string(),
+            };
+        };
+        self.control(|idx| match idx.checkpoint(&dir) {
+            Ok(st) => Response::Checkpointed {
+                segments: st.segments as u64,
+                files_written: st.segment_files_written as u64,
+                files_reused: st.segment_files_reused as u64,
+                gc_removed: st.gc_removed as u64,
+                memtable_rows: st.memtable_rows as u64,
+                manifest_bytes: st.manifest_bytes,
+            },
+            Err(e) => Response::Error {
+                message: format!("checkpoint failed: {e:#}"),
+            },
+        })
+    }
+}
+
+// ------------------------------------------------------------ metrics
+
+/// Atomically write `index`'s metrics snapshot as pretty JSON (temp
+/// file + rename, so a reader never sees a half-written dump).
+pub fn write_metrics(index: &StreamingIndex, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create metrics dir {parent:?}"))?;
+        }
+    }
+    let json = index.metrics_snapshot().to_json();
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, json.to_pretty()).with_context(|| format!("write {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+    Ok(())
+}
+
+/// Background `--metrics-interval` dumper with a real shutdown: the
+/// channel closes (or receives a stop signal) and the thread is
+/// *joined*, in every exit path — RAII, so the early-return leak the
+/// old ad-hoc thread had cannot recur.
+pub struct MetricsDumper {
+    tx: Option<mpsc::Sender<()>>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsDumper {
+    /// Rewrite `path` every `interval` until stopped/dropped.
+    /// Snapshots are a few lock-free loads per instrument; a mid-run
+    /// dump never perturbs the run it observes.
+    pub fn spawn(index: Arc<StreamingIndex>, path: PathBuf, interval: Duration) -> MetricsDumper {
+        let (tx, rx) = mpsc::channel::<()>();
+        let join = std::thread::spawn(move || loop {
+            match rx.recv_timeout(interval) {
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if let Err(e) = write_metrics(&index, &path) {
+                        eprintln!("metrics dump failed: {e:#}");
+                    }
+                }
+                // Stop signal or sender dropped: shut down.
+                _ => break,
+            }
+        });
+        MetricsDumper {
+            tx: Some(tx),
+            join: Some(join),
+        }
+    }
+
+    /// Stop and join the dumper thread (also done on drop).
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        // Dropping the sender closes the channel, which wakes
+        // `recv_timeout` immediately — no park/unpark race window.
+        self.tx.take();
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for MetricsDumper {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StreamConfig;
+    use crate::distance::Metric;
+
+    fn tiny_service(cfg: ServeConfig) -> Service {
+        let index = Arc::new(StreamingIndex::new(
+            4,
+            Metric::L2,
+            StreamConfig {
+                segment_size: 16,
+                ..Default::default()
+            },
+        ));
+        Service::with_options(index, cfg)
+    }
+
+    fn vec4(x: f32) -> Vec<f32> {
+        vec![x, x + 1.0, x + 2.0, x + 3.0]
+    }
+
+    #[test]
+    fn basic_request_lifecycle() {
+        let svc = tiny_service(ServeConfig::default());
+        let gid = match svc.handle(Request::Insert { vector: vec4(1.0) }) {
+            Response::Inserted { gid } => gid,
+            other => panic!("unexpected: {other:?}"),
+        };
+        match svc.handle(Request::Search {
+            query: vec4(1.0),
+            topk: 1,
+            ef: 0,
+        }) {
+            Response::Hits { hits, degraded } => {
+                assert_eq!(hits[0].1, gid);
+                assert!(!degraded);
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        match svc.handle(Request::Upsert {
+            gid,
+            vector: vec4(2.0),
+        }) {
+            Response::Upserted { applied } => assert!(applied),
+            other => panic!("unexpected: {other:?}"),
+        }
+        let st = match svc.handle(Request::Stats) {
+            Response::Stats(st) => st,
+            other => panic!("unexpected: {other:?}"),
+        };
+        assert_eq!(st.upserts, 1);
+        match svc.handle(Request::Flush) {
+            Response::Flushed => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+        match svc.handle(Request::MetricsSnapshot) {
+            Response::Metrics { json } => {
+                let parsed = crate::util::json::Json::parse(&json).unwrap();
+                assert_eq!(parsed.get("version").unwrap().as_f64(), Some(1.0));
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dimension_mismatch_is_an_error_not_a_panic() {
+        let svc = tiny_service(ServeConfig::default());
+        for req in [
+            Request::Search {
+                query: vec![1.0; 3],
+                topk: 1,
+                ef: 0,
+            },
+            Request::Insert {
+                vector: vec![1.0; 5],
+            },
+            Request::Upsert {
+                gid: 0,
+                vector: vec![],
+            },
+        ] {
+            match svc.handle(req) {
+                Response::Error { message } => assert!(message.contains("dimension")),
+                other => panic!("unexpected: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn zero_ingest_permits_reject_every_mutation_but_never_searches() {
+        let svc = tiny_service(ServeConfig {
+            max_inflight_ingest: 0,
+            retry_after_ms: 9,
+            ..ServeConfig::default()
+        });
+        match svc.handle(Request::Insert { vector: vec4(0.0) }) {
+            Response::Overloaded {
+                class,
+                retry_after_ms,
+            } => {
+                assert_eq!(class, RequestClass::Insert);
+                assert_eq!(retry_after_ms, 9);
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        match svc.handle(Request::Delete { gid: 0 }) {
+            Response::Overloaded { class, .. } => assert_eq!(class, RequestClass::Delete),
+            other => panic!("unexpected: {other:?}"),
+        }
+        match svc.handle(Request::Upsert {
+            gid: 0,
+            vector: vec4(0.0),
+        }) {
+            Response::Overloaded { class, .. } => assert_eq!(class, RequestClass::Upsert),
+            other => panic!("unexpected: {other:?}"),
+        }
+        // Searches still answer (empty index -> empty hits, no error).
+        match svc.handle(Request::Search {
+            query: vec4(0.0),
+            topk: 3,
+            ef: 8,
+        }) {
+            Response::Hits { hits, .. } => assert!(hits.is_empty()),
+            other => panic!("unexpected: {other:?}"),
+        }
+        let obs = svc.index().metrics();
+        assert_eq!(obs.counter("service.rejected_insert").get(), 1);
+        assert_eq!(obs.counter("service.rejected_delete").get(), 1);
+        assert_eq!(obs.counter("service.rejected_upsert").get(), 1);
+    }
+
+    #[test]
+    fn overcommitted_search_class_degrades_to_topk_beam() {
+        let svc = tiny_service(ServeConfig {
+            max_inflight_search: 0,
+            ..ServeConfig::default()
+        });
+        for i in 0..8 {
+            match svc.handle(Request::Insert {
+                vector: vec4(i as f32),
+            }) {
+                Response::Inserted { .. } => {}
+                other => panic!("unexpected: {other:?}"),
+            }
+        }
+        match svc.handle(Request::Search {
+            query: vec4(3.0),
+            topk: 2,
+            ef: 64,
+        }) {
+            Response::Hits { hits, degraded } => {
+                assert!(degraded, "inflight 1 > max 0 must degrade");
+                assert!(!hits.is_empty());
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert_eq!(
+            svc.index().metrics().counter("service.degraded_searches").get(),
+            1
+        );
+    }
+
+    #[test]
+    fn checkpoint_without_dir_is_a_clean_error() {
+        let svc = tiny_service(ServeConfig::default());
+        match svc.handle(Request::Checkpoint) {
+            Response::Error { message } => assert!(message.contains("checkpoint")),
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn metrics_dumper_joins_on_drop() {
+        let dir = std::env::temp_dir().join(format!(
+            "knnmerge-dumper-{}",
+            crate::util::unique_scratch_suffix()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let svc = tiny_service(ServeConfig::default());
+        let path = dir.join("metrics.json");
+        let dumper = MetricsDumper::spawn(
+            Arc::clone(svc.index()),
+            path.clone(),
+            Duration::from_millis(5),
+        );
+        std::thread::sleep(Duration::from_millis(40));
+        dumper.stop(); // joins: after this no thread is writing
+        assert!(path.exists(), "periodic dump ran");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,436 @@
+//! `serve` mode: a thread-per-connection TCP listener speaking the
+//! [`wire`] `KSRV` frame protocol over a shared [`Service`].
+//!
+//! The listener accepts with a non-blocking poll and every connection
+//! socket carries a short read timeout, so a stop signal (a `Shutdown`
+//! frame from any client, or [`ServerHandle::shutdown`]) drains the
+//! whole server within one timeout tick: the accept loop closes, every
+//! connection thread notices the flag at its next poll and is joined,
+//! and the periodic checkpoint thread is stopped — no detached threads
+//! survive.
+//!
+//! The server owns no engine logic: admission control, degradation,
+//! and instrumentation all live in [`Service`], so the CLI batch
+//! driver and this listener exercise the identical surface.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::wire::{self, ClientFrame, ServerFrame};
+use super::{MetricsDumper, Request, Response, Service};
+use crate::cli::Args;
+use crate::config::{ConfigMap, RunConfig};
+use crate::stream::{persist::RestoreOptions, StreamingIndex};
+
+/// Listener options (the admission knobs live in
+/// [`ServeConfig`](crate::config::ServeConfig) on the [`Service`]).
+#[derive(Clone, Debug)]
+pub struct ServerOptions {
+    /// Bind address, e.g. `127.0.0.1:0` for an ephemeral port.
+    pub addr: String,
+    /// Per-socket read timeout: the drain-notice latency of idle
+    /// connections, and the patience for a peer stalled mid-frame.
+    pub read_timeout: Duration,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            addr: "127.0.0.1:0".to_string(),
+            read_timeout: Duration::from_millis(100),
+        }
+    }
+}
+
+/// A running server; dropping it drains and joins everything.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    ckpt_tx: Option<mpsc::Sender<()>>,
+    ckpt: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Has a shutdown been requested (by a client frame or locally)?
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Block until a client sends `Shutdown` (or `shutdown()` is
+    /// called from another thread), then drain.
+    pub fn wait(&mut self) {
+        while !self.stopped() {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        self.shutdown();
+    }
+
+    /// [`wait`](ServerHandle::wait), but stop the server ourselves
+    /// after `limit` if no client did first.
+    pub fn wait_with_deadline(&mut self, limit: Duration) {
+        let deadline = Instant::now() + limit;
+        while !self.stopped() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        self.shutdown();
+    }
+
+    /// Stop accepting, join every connection thread, stop the
+    /// checkpoint ticker. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(join) = self.accept.take() {
+            let _ = join.join();
+        }
+        self.ckpt_tx.take(); // closing the channel wakes the ticker
+        if let Some(join) = self.ckpt.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Bind and start serving `svc`. Returns once the listener is live.
+pub fn spawn(svc: Arc<Service>, opts: &ServerOptions) -> Result<ServerHandle> {
+    let listener =
+        TcpListener::bind(&opts.addr).with_context(|| format!("bind {}", opts.addr))?;
+    let addr = listener.local_addr().context("local_addr")?;
+    listener
+        .set_nonblocking(true)
+        .context("set_nonblocking on listener")?;
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let accept = {
+        let svc = Arc::clone(&svc);
+        let stop = Arc::clone(&stop);
+        let read_timeout = opts.read_timeout;
+        std::thread::spawn(move || {
+            // The accept thread owns the connection handles: no shared
+            // registry lock, and drain = this loop joining its own list.
+            let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((sock, _peer)) => {
+                        let _ = sock.set_nodelay(true);
+                        let _ = sock.set_read_timeout(Some(read_timeout));
+                        let svc = Arc::clone(&svc);
+                        let stop = Arc::clone(&stop);
+                        conns.push(std::thread::spawn(move || {
+                            serve_conn(&svc, &stop, sock);
+                        }));
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for join in conns {
+                let _ = join.join();
+            }
+        })
+    };
+
+    // Periodic checkpoint hook: only when the service has both a
+    // directory and a positive interval configured.
+    let interval = svc.config().checkpoint_interval_s;
+    let (ckpt_tx, ckpt) = if interval > 0.0 && svc.checkpoint_dir().is_some() {
+        let (tx, rx) = mpsc::channel::<()>();
+        let svc = Arc::clone(&svc);
+        let every = Duration::from_secs_f64(interval);
+        let join = std::thread::spawn(move || loop {
+            match rx.recv_timeout(every) {
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if let Response::Error { message } = svc.handle(Request::Checkpoint) {
+                        eprintln!("periodic checkpoint failed: {message}");
+                    }
+                }
+                // Stop signal or sender dropped: shut down.
+                _ => break,
+            }
+        });
+        (Some(tx), Some(join))
+    } else {
+        (None, None)
+    };
+
+    Ok(ServerHandle {
+        addr,
+        stop,
+        accept: Some(accept),
+        ckpt_tx,
+        ckpt,
+    })
+}
+
+/// One connection: frames in, frames out, until EOF, a broken frame
+/// stream, or server drain.
+fn serve_conn(svc: &Service, stop: &AtomicBool, mut sock: TcpStream) {
+    loop {
+        // Poll for the first header byte so an idle connection notices
+        // drain within one read timeout; the rest of the frame is then
+        // read under the same timeout (a peer stalled mid-frame is a
+        // broken connection, not an idle one).
+        let first = loop {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let mut b = [0u8; 1];
+            match sock.read(&mut b) {
+                Ok(0) => return, // clean EOF
+                Ok(_) => break b[0],
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    continue
+                }
+                Err(_) => return,
+            }
+        };
+        let raw = match wire::read_raw_after(first, &mut sock) {
+            Ok(raw) => raw,
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                // Header-level garbage (bad magic/version/length): the
+                // byte stream is desynchronized — answer once, close.
+                let err = ServerFrame::Response(Response::Error {
+                    message: e.to_string(),
+                });
+                let _ = sock.write_all(&wire::encode_server(&err));
+                return;
+            }
+            Err(_) => return, // timeout mid-frame, EOF, reset
+        };
+        let reply = match wire::decode_client(&raw) {
+            Ok(ClientFrame::Shutdown) => {
+                let _ = sock.write_all(&wire::encode_server(&ServerFrame::ShuttingDown));
+                stop.store(true, Ordering::Relaxed);
+                return;
+            }
+            Ok(ClientFrame::Request(req)) => ServerFrame::Response(svc.handle(req)),
+            // Payload-level garbage: framing is still aligned (the
+            // payload was length-prefixed), so answer and keep serving.
+            Err(e) => ServerFrame::Response(Response::Error {
+                message: format!("{e:#}"),
+            }),
+        };
+        if sock.write_all(&wire::encode_server(&reply)).is_err() {
+            return;
+        }
+    }
+}
+
+/// A blocking client for the `KSRV` protocol (benches, tests, and the
+/// smoke harness; any language can speak the 12-byte frame header).
+pub struct ServeClient {
+    sock: TcpStream,
+}
+
+impl ServeClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<ServeClient> {
+        let sock = TcpStream::connect(addr).context("connect to serve addr")?;
+        sock.set_nodelay(true).context("set_nodelay")?;
+        Ok(ServeClient { sock })
+    }
+
+    /// Issue one request and read its response.
+    pub fn request(&mut self, req: Request) -> Result<Response> {
+        self.sock
+            .write_all(&wire::encode_client(&ClientFrame::Request(req)))
+            .context("write request frame")?;
+        let raw = wire::read_raw(&mut self.sock).context("read response frame")?;
+        match wire::decode_server(&raw)? {
+            ServerFrame::Response(resp) => Ok(resp),
+            ServerFrame::ShuttingDown => bail!("server is shutting down"),
+        }
+    }
+
+    /// Ask the server to drain and stop; returns once acknowledged.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        self.sock
+            .write_all(&wire::encode_client(&ClientFrame::Shutdown))
+            .context("write shutdown frame")?;
+        let raw = wire::read_raw(&mut self.sock).context("read shutdown ack")?;
+        match wire::decode_server(&raw)? {
+            ServerFrame::ShuttingDown => Ok(()),
+            ServerFrame::Response(resp) => bail!("expected shutdown ack, got {resp:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- CLI
+
+/// The CLI `serve` subcommand: build or restore an index, wrap it in a
+/// [`Service`], serve `KSRV` frames until a client sends `Shutdown`
+/// (or `--max-seconds` elapses), then drain, checkpoint, and dump
+/// metrics.
+pub fn cli_serve(args: &Args) -> Result<()> {
+    let mut map = match args.get("config") {
+        Some(path) => ConfigMap::load(std::path::Path::new(path))?,
+        None => ConfigMap::default(),
+    };
+    for (k, v) in &args.overrides {
+        map.set(k, v);
+    }
+    let mut cfg = RunConfig::from_map(&map)?;
+    if let Some(f) = args.get("family") {
+        cfg.family = crate::dataset::DatasetFamily::from_name(f)
+            .with_context(|| format!("unknown family '{f}'"))?;
+    }
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    let k = args.get_usize("k", cfg.merge.k)?;
+    let lambda = args.get_usize("lambda", cfg.merge.lambda)?;
+    cfg.stream.merge.k = k;
+    cfg.stream.merge.lambda = lambda;
+    cfg.stream.nnd.k = k;
+    cfg.stream.nnd.lambda = lambda;
+    cfg.stream.max_degree = args.get_usize("max-degree", cfg.stream.max_degree)?;
+    cfg.stream.segment_size = args.get_usize("segment-size", cfg.stream.segment_size)?;
+    cfg.stream.ef = args.get_usize("ef", cfg.stream.ef)?;
+    cfg.stream.seal_threads = args.get_usize("seal-threads", cfg.stream.seal_threads)?;
+    cfg.serve.max_inflight_search =
+        args.get_usize("max-inflight-search", cfg.serve.max_inflight_search)?;
+    cfg.serve.max_inflight_ingest =
+        args.get_usize("max-inflight-ingest", cfg.serve.max_inflight_ingest)?;
+    cfg.serve.max_seal_backlog = args.get_usize("max-seal-backlog", cfg.serve.max_seal_backlog)?;
+    cfg.serve.retry_after_ms = args.get_u64("retry-after-ms", cfg.serve.retry_after_ms)?;
+    cfg.serve.checkpoint_interval_s =
+        args.get_f64("checkpoint-interval", cfg.serve.checkpoint_interval_s)?;
+
+    let checkpoint_dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
+    let preload = args.get_usize("preload", 0)?;
+    let index = if args.get_flag("restore") {
+        let Some(dir) = &checkpoint_dir else {
+            bail!("--restore requires --checkpoint-dir");
+        };
+        let idx =
+            StreamingIndex::restore(dir, cfg.stream.clone(), &RestoreOptions::default())
+                .with_context(|| format!("restore from {dir:?}"))?;
+        println!(
+            "restored from {dir:?}: {} segments, {} live rows",
+            idx.stats().live_segments,
+            idx.live_len()
+        );
+        Arc::new(idx)
+    } else {
+        let dim = if preload > 0 {
+            cfg.family.generate(1, cfg.seed).dim
+        } else {
+            args.get_usize("dim", 0)?
+        };
+        if dim == 0 {
+            bail!("serve needs --dim <d>, --preload <n> (with --family), or --restore");
+        }
+        Arc::new(StreamingIndex::new(dim, cfg.metric, cfg.stream.clone()))
+    };
+
+    let svc = Arc::new(
+        Service::with_options(Arc::clone(&index), cfg.serve).with_checkpoint_dir(checkpoint_dir),
+    );
+    if preload > 0 {
+        let ds = cfg.family.generate(preload, cfg.seed);
+        for i in 0..ds.len() {
+            // Preload through the service like any other client; the
+            // gate is idle here, so Overloaded only means seal
+            // pressure — wait it out.
+            loop {
+                match svc.handle(Request::Insert {
+                    vector: ds.vector(i).to_vec(),
+                }) {
+                    Response::Inserted { .. } => break,
+                    Response::Overloaded { retry_after_ms, .. } => {
+                        std::thread::sleep(Duration::from_millis(retry_after_ms.max(1)))
+                    }
+                    Response::Error { message } => bail!("preload insert failed: {message}"),
+                    other => bail!("unexpected preload response: {other:?}"),
+                }
+            }
+        }
+        svc.handle(Request::Flush);
+        println!("preloaded {} x {} ({})", preload, index.dim(), cfg.family.name());
+    }
+
+    let compactor = (!args.get_flag("no-compactor"))
+        .then(|| Arc::clone(&index).spawn_compactor(Duration::from_millis(10)));
+    let dumper = match (
+        args.get("metrics-out").map(std::path::PathBuf::from),
+        args.get_f64("metrics-interval", 0.0)?,
+    ) {
+        (Some(path), secs) if secs > 0.0 => Some(MetricsDumper::spawn(
+            Arc::clone(&index),
+            path,
+            Duration::from_secs_f64(secs),
+        )),
+        _ => None,
+    };
+
+    let opts = ServerOptions {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7700").to_string(),
+        ..Default::default()
+    };
+    let mut server = spawn(Arc::clone(&svc), &opts)?;
+    println!(
+        "serving on {} (dim={}, KSRV v{}, max inflight search/ingest {}/{}, \
+         seal backlog cap {})",
+        server.addr(),
+        index.dim(),
+        wire::SERVE_VERSION,
+        cfg.serve.max_inflight_search,
+        cfg.serve.max_inflight_ingest,
+        cfg.serve.max_seal_backlog,
+    );
+    let _ = io::stdout().flush();
+
+    let max_seconds = args.get_f64("max-seconds", 0.0)?;
+    if max_seconds > 0.0 {
+        server.wait_with_deadline(Duration::from_secs_f64(max_seconds));
+    } else {
+        server.wait();
+    }
+    println!("draining: listener closed, connections joined");
+
+    if let Some(handle) = compactor {
+        handle.stop();
+    }
+    svc.handle(Request::Flush);
+    if svc.checkpoint_dir().is_some() {
+        match svc.handle(Request::Checkpoint) {
+            Response::Checkpointed {
+                segments,
+                manifest_bytes,
+                ..
+            } => println!("final checkpoint: {segments} segments, manifest {manifest_bytes} B"),
+            Response::Error { message } => eprintln!("final checkpoint failed: {message}"),
+            other => eprintln!("unexpected checkpoint response: {other:?}"),
+        }
+    }
+    if let Some(d) = dumper {
+        d.stop();
+    }
+    if let Some(path) = args.get("metrics-out").map(std::path::PathBuf::from) {
+        super::write_metrics(&index, &path)?;
+        println!("metrics -> {path:?}");
+    }
+    let st = index.stats();
+    println!(
+        "served: {} inserted, {} deleted, {} segments live",
+        st.inserted, st.deleted, st.live_segments
+    );
+    Ok(())
+}

@@ -1,0 +1,403 @@
+//! `KSRV` frame protocol: the length-prefixed wire format the `serve`
+//! TCP listener speaks, built on the same [`util::le`] cursor
+//! discipline as every other wire format in this crate.
+//!
+//! One frame per request or response:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic      u32 LE = 0x4B535256 ("KSRV" big-endian ASCII)
+//! 4       2     version    u16 LE = 1
+//! 6       1     kind       request/response discriminant (below)
+//! 7       1     reserved   must be 0
+//! 8       4     len        payload length in bytes, u32 LE
+//! 12      len   payload    kind-specific, little-endian fields
+//! ```
+//!
+//! Truncated, oversized, or mis-tagged frames fail with clean errors —
+//! never a panic — so a hostile or confused peer cannot take down the
+//! server. Payload decoders call [`Cursor::finish`], so trailing bytes
+//! are corruption, same as the checkpoint formats.
+//!
+//! [`util::le`]: crate::util::le
+
+use std::io::{self, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::stream::StreamStats;
+use crate::util::le::{Cursor, PutLe};
+
+use super::{Request, RequestClass, Response};
+
+pub const SERVE_MAGIC: u32 = 0x4B53_5256; // "KSRV"
+pub const SERVE_VERSION: u16 = 1;
+/// Frame header bytes before the payload.
+pub const HEADER_LEN: usize = 12;
+/// Payload-size sanity cap (64 MiB): a corrupt length prefix must not
+/// become an allocation bomb.
+pub const MAX_PAYLOAD: u32 = 64 << 20;
+
+// Request frame kinds (client -> server).
+pub const KIND_SEARCH: u8 = 1;
+pub const KIND_INSERT: u8 = 2;
+pub const KIND_DELETE: u8 = 3;
+pub const KIND_UPSERT: u8 = 4;
+pub const KIND_FLUSH: u8 = 5;
+pub const KIND_STATS: u8 = 6;
+pub const KIND_METRICS: u8 = 7;
+pub const KIND_CHECKPOINT: u8 = 8;
+/// Connection-level: drain and stop the server (not a [`Request`]).
+pub const KIND_SHUTDOWN: u8 = 9;
+
+// Response frame kinds (server -> client): request kind | 0x80.
+pub const KIND_HITS: u8 = 0x81;
+pub const KIND_INSERTED: u8 = 0x82;
+pub const KIND_DELETED: u8 = 0x83;
+pub const KIND_UPSERTED: u8 = 0x84;
+pub const KIND_FLUSHED: u8 = 0x85;
+pub const KIND_STATS_RESP: u8 = 0x86;
+pub const KIND_METRICS_RESP: u8 = 0x87;
+pub const KIND_CHECKPOINTED: u8 = 0x88;
+pub const KIND_OVERLOADED: u8 = 0xBE;
+pub const KIND_ERROR: u8 = 0xBF;
+pub const KIND_SHUTTING_DOWN: u8 = 0xC0;
+
+/// A client-originated frame: a service request or the server-level
+/// shutdown signal.
+#[derive(Clone, Debug)]
+pub enum ClientFrame {
+    Request(Request),
+    Shutdown,
+}
+
+/// A server-originated frame: a service response or the shutdown ack.
+#[derive(Clone, Debug)]
+pub enum ServerFrame {
+    Response(Response),
+    ShuttingDown,
+}
+
+/// A parsed frame header + raw payload, transport-agnostic.
+#[derive(Clone, Debug)]
+pub struct RawFrame {
+    pub kind: u8,
+    pub payload: Vec<u8>,
+}
+
+// ------------------------------------------------------------ framing
+
+/// Assemble a complete frame (header + payload) for the wire.
+pub fn frame_bytes(kind: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.put_u32(SERVE_MAGIC);
+    out.put_u16(SERVE_VERSION);
+    out.put_u8(kind);
+    out.put_u8(0); // reserved
+    out.put_u32(payload.len() as u32);
+    out.extend_from_slice(payload);
+    out
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// Parse a header whose first byte was already consumed (the
+/// connection loop reads byte 0 separately so idle-poll timeouts never
+/// land mid-header), then read the rest of the frame.
+pub fn read_raw_after(first: u8, r: &mut impl Read) -> io::Result<RawFrame> {
+    let mut header = [0u8; HEADER_LEN];
+    header[0] = first;
+    r.read_exact(&mut header[1..])?;
+    // PANIC-OK: exact-length subslices of a fixed 12-byte header.
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != SERVE_MAGIC {
+        return Err(bad(format!(
+            "bad frame magic {magic:#010x} (expected KSRV {SERVE_MAGIC:#010x})"
+        )));
+    }
+    // PANIC-OK: exact-length subslice of a fixed 12-byte header.
+    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    if version != SERVE_VERSION {
+        return Err(bad(format!(
+            "unsupported KSRV frame version {version} (speak {SERVE_VERSION})"
+        )));
+    }
+    let kind = header[6];
+    if header[7] != 0 {
+        return Err(bad(format!("reserved frame byte must be 0, got {}", header[7])));
+    }
+    // PANIC-OK: exact-length subslice of a fixed 12-byte header.
+    let len = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return Err(bad(format!("frame payload {len} B exceeds cap {MAX_PAYLOAD} B")));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok(RawFrame { kind, payload })
+}
+
+/// Read one complete frame from `r`.
+pub fn read_raw(r: &mut impl Read) -> io::Result<RawFrame> {
+    let mut first = [0u8; 1];
+    r.read_exact(&mut first)?;
+    read_raw_after(first[0], r)
+}
+
+/// Write a complete frame to `w`.
+pub fn write_frame(w: &mut impl Write, kind: u8, payload: &[u8]) -> io::Result<()> {
+    w.write_all(&frame_bytes(kind, payload))?;
+    w.flush()
+}
+
+// ----------------------------------------------------------- requests
+
+fn put_vector(buf: &mut Vec<u8>, v: &[f32]) {
+    buf.put_u32(v.len() as u32);
+    for &x in v {
+        buf.put_f32(x);
+    }
+}
+
+fn take_vector(cur: &mut Cursor<'_>) -> Result<Vec<f32>> {
+    let len = cur.u32()? as usize;
+    // The remaining-bytes check makes a hostile length fail before the
+    // allocation, not after.
+    if cur.remaining() < len * 4 {
+        bail!("vector length {len} exceeds frame payload");
+    }
+    (0..len).map(|_| cur.f32()).collect()
+}
+
+/// Encode a client frame (request or shutdown) for the wire.
+pub fn encode_client(frame: &ClientFrame) -> Vec<u8> {
+    let mut p: Vec<u8> = Vec::new();
+    let kind = match frame {
+        ClientFrame::Shutdown => KIND_SHUTDOWN,
+        ClientFrame::Request(req) => match req {
+            Request::Search { query, topk, ef } => {
+                p.put_u32(*topk as u32);
+                p.put_u32(*ef as u32);
+                put_vector(&mut p, query);
+                KIND_SEARCH
+            }
+            Request::Insert { vector } => {
+                put_vector(&mut p, vector);
+                KIND_INSERT
+            }
+            Request::Delete { gid } => {
+                p.put_u32(*gid);
+                KIND_DELETE
+            }
+            Request::Upsert { gid, vector } => {
+                p.put_u32(*gid);
+                put_vector(&mut p, vector);
+                KIND_UPSERT
+            }
+            Request::Flush => KIND_FLUSH,
+            Request::Stats => KIND_STATS,
+            Request::MetricsSnapshot => KIND_METRICS,
+            Request::Checkpoint => KIND_CHECKPOINT,
+        },
+    };
+    frame_bytes(kind, &p)
+}
+
+/// Decode a client frame. Unknown kinds and malformed payloads are
+/// clean errors the server answers with an `Error` frame.
+pub fn decode_client(raw: &RawFrame) -> Result<ClientFrame> {
+    let mut cur = Cursor::new(&raw.payload, "KSRV request payload");
+    let frame = match raw.kind {
+        KIND_SEARCH => {
+            let topk = cur.u32()? as usize;
+            let ef = cur.u32()? as usize;
+            let query = take_vector(&mut cur)?;
+            ClientFrame::Request(Request::Search { query, topk, ef })
+        }
+        KIND_INSERT => ClientFrame::Request(Request::Insert {
+            vector: take_vector(&mut cur)?,
+        }),
+        KIND_DELETE => ClientFrame::Request(Request::Delete { gid: cur.u32()? }),
+        KIND_UPSERT => {
+            let gid = cur.u32()?;
+            let vector = take_vector(&mut cur)?;
+            ClientFrame::Request(Request::Upsert { gid, vector })
+        }
+        KIND_FLUSH => ClientFrame::Request(Request::Flush),
+        KIND_STATS => ClientFrame::Request(Request::Stats),
+        KIND_METRICS => ClientFrame::Request(Request::MetricsSnapshot),
+        KIND_CHECKPOINT => ClientFrame::Request(Request::Checkpoint),
+        KIND_SHUTDOWN => ClientFrame::Shutdown,
+        k => bail!("unknown KSRV request kind {k:#04x}"),
+    };
+    cur.finish()?;
+    Ok(frame)
+}
+
+// ---------------------------------------------------------- responses
+
+/// Encode a server frame (response or shutdown ack) for the wire.
+pub fn encode_server(frame: &ServerFrame) -> Vec<u8> {
+    let mut p: Vec<u8> = Vec::new();
+    let kind = match frame {
+        ServerFrame::ShuttingDown => KIND_SHUTTING_DOWN,
+        ServerFrame::Response(resp) => match resp {
+            Response::Hits { hits, degraded } => {
+                p.put_u8(*degraded as u8);
+                p.put_u32(hits.len() as u32);
+                for (dist, gid) in hits {
+                    p.put_f32(*dist);
+                    p.put_u32(*gid);
+                }
+                KIND_HITS
+            }
+            Response::Inserted { gid } => {
+                p.put_u32(*gid);
+                KIND_INSERTED
+            }
+            Response::Deleted { existed } => {
+                p.put_u8(*existed as u8);
+                KIND_DELETED
+            }
+            Response::Upserted { applied } => {
+                p.put_u8(*applied as u8);
+                KIND_UPSERTED
+            }
+            Response::Flushed => KIND_FLUSHED,
+            Response::Stats(st) => {
+                for v in [
+                    st.inserted,
+                    st.deleted,
+                    st.upserts,
+                    st.sealed,
+                    st.compactions,
+                    st.reclaimed,
+                    st.seal_dropped,
+                    st.live_segments,
+                    st.memtable_len,
+                    st.sealing,
+                    st.tombstones,
+                ] {
+                    p.put_u64(v as u64);
+                }
+                KIND_STATS_RESP
+            }
+            Response::Metrics { json } => {
+                p.put_u32(json.len() as u32);
+                p.extend_from_slice(json.as_bytes());
+                KIND_METRICS_RESP
+            }
+            Response::Checkpointed {
+                segments,
+                files_written,
+                files_reused,
+                gc_removed,
+                memtable_rows,
+                manifest_bytes,
+            } => {
+                for v in [
+                    segments,
+                    files_written,
+                    files_reused,
+                    gc_removed,
+                    memtable_rows,
+                    manifest_bytes,
+                ] {
+                    p.put_u64(*v);
+                }
+                KIND_CHECKPOINTED
+            }
+            Response::Overloaded {
+                class,
+                retry_after_ms,
+            } => {
+                p.put_u8(class.code());
+                p.put_u64(*retry_after_ms);
+                KIND_OVERLOADED
+            }
+            Response::Error { message } => {
+                p.put_u32(message.len() as u32);
+                p.extend_from_slice(message.as_bytes());
+                KIND_ERROR
+            }
+        },
+    };
+    frame_bytes(kind, &p)
+}
+
+fn take_string(cur: &mut Cursor<'_>) -> Result<String> {
+    let len = cur.u32()? as usize;
+    let bytes = cur.take(len)?;
+    String::from_utf8(bytes.to_vec()).context("KSRV string payload is not UTF-8")
+}
+
+/// Decode a server frame.
+pub fn decode_server(raw: &RawFrame) -> Result<ServerFrame> {
+    let mut cur = Cursor::new(&raw.payload, "KSRV response payload");
+    let frame = match raw.kind {
+        KIND_HITS => {
+            let degraded = cur.u8()? != 0;
+            let n = cur.u32()? as usize;
+            if cur.remaining() < n * 8 {
+                bail!("hit count {n} exceeds frame payload");
+            }
+            let hits = (0..n)
+                .map(|_| Ok((cur.f32()?, cur.u32()?)))
+                .collect::<Result<Vec<_>>>()?;
+            ServerFrame::Response(Response::Hits { hits, degraded })
+        }
+        KIND_INSERTED => ServerFrame::Response(Response::Inserted { gid: cur.u32()? }),
+        KIND_DELETED => ServerFrame::Response(Response::Deleted {
+            existed: cur.u8()? != 0,
+        }),
+        KIND_UPSERTED => ServerFrame::Response(Response::Upserted {
+            applied: cur.u8()? != 0,
+        }),
+        KIND_FLUSHED => ServerFrame::Response(Response::Flushed),
+        KIND_STATS_RESP => {
+            let mut take = || -> Result<usize> { Ok(cur.u64()? as usize) };
+            let st = StreamStats {
+                inserted: take()?,
+                deleted: take()?,
+                upserts: take()?,
+                sealed: take()?,
+                compactions: take()?,
+                reclaimed: take()?,
+                seal_dropped: take()?,
+                live_segments: take()?,
+                memtable_len: take()?,
+                sealing: take()?,
+                tombstones: take()?,
+            };
+            ServerFrame::Response(Response::Stats(st))
+        }
+        KIND_METRICS_RESP => ServerFrame::Response(Response::Metrics {
+            json: take_string(&mut cur)?,
+        }),
+        KIND_CHECKPOINTED => ServerFrame::Response(Response::Checkpointed {
+            segments: cur.u64()?,
+            files_written: cur.u64()?,
+            files_reused: cur.u64()?,
+            gc_removed: cur.u64()?,
+            memtable_rows: cur.u64()?,
+            manifest_bytes: cur.u64()?,
+        }),
+        KIND_OVERLOADED => {
+            let code = cur.u8()?;
+            let class = RequestClass::from_code(code)
+                .with_context(|| format!("unknown request class code {code}"))?;
+            ServerFrame::Response(Response::Overloaded {
+                class,
+                retry_after_ms: cur.u64()?,
+            })
+        }
+        KIND_ERROR => ServerFrame::Response(Response::Error {
+            message: take_string(&mut cur)?,
+        }),
+        KIND_SHUTTING_DOWN => ServerFrame::ShuttingDown,
+        k => bail!("unknown KSRV response kind {k:#04x}"),
+    };
+    cur.finish()?;
+    Ok(frame)
+}

@@ -521,6 +521,31 @@ impl StreamingIndex {
         self.shared.metric
     }
 
+    /// Frozen batches currently queued for (or mid-) off-thread seal
+    /// build — the admission-control backlog probe the service layer's
+    /// backpressure reads. 0 whenever `seal_threads == 0` (inline
+    /// builds never queue).
+    pub fn seal_backlog(&self) -> usize {
+        self.shared.sealing.lock().unwrap().len()
+    }
+
+    /// Fraction of the paged-storage budget currently resident, in
+    /// [0, 1+]. 0.0 for an unbounded budget (purely in-memory logs):
+    /// memory pressure only exists when `restore` installed a bounded
+    /// budget.
+    pub fn memory_pressure(&self) -> f64 {
+        match self.budget.limit() {
+            Some(limit) if limit > 0 => self.budget.resident_bytes() as f64 / limit as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// The configured default beam width (`StreamConfig::ef`), used by
+    /// callers that accept "0 = default" ef requests.
+    pub fn default_ef(&self) -> usize {
+        self.shared.cfg.ef
+    }
+
     /// Total vectors inserted so far (== the next global id).
     pub fn len(&self) -> usize {
         self.shared.stats.inserted.get() as usize

@@ -7,10 +7,11 @@
 
 use super::engine::StreamingIndex;
 use crate::cli::Args;
-use crate::config::{ConfigMap, RunConfig, StreamConfig};
+use crate::config::{ConfigMap, RunConfig, ServeConfig, StreamConfig};
 use crate::dataset::{io, Dataset};
 use crate::distance::Metric;
 use crate::eval::recall::{search_recall, GroundTruth};
+use crate::service::{MetricsDumper, Request, Response, Service};
 use crate::util::Rng;
 use anyhow::{Context, Result};
 use std::sync::Arc;
@@ -38,6 +39,11 @@ pub struct IngestOptions {
     pub background_compaction: bool,
     /// Compact down to a single segment after the last insert.
     pub final_compact: bool,
+    /// Admission knobs of the [`Service`] the driver routes through.
+    /// Defaults to [`ServeConfig::unbounded`]: a batch driver wants
+    /// the exact engine behaviour, not load shedding — the CLI passes
+    /// the configured `[serve]` knobs instead.
+    pub serve: ServeConfig,
 }
 
 impl Default for IngestOptions {
@@ -51,6 +57,7 @@ impl Default for IngestOptions {
             ef: 64,
             background_compaction: false,
             final_compact: true,
+            serve: ServeConfig::unbounded(),
         }
     }
 }
@@ -111,9 +118,40 @@ pub fn stream_ingest(
 }
 
 /// [`stream_ingest`] into a caller-owned index (kept alive afterwards,
-/// e.g. to inspect the final segment graph).
+/// e.g. to inspect the final segment graph). Wraps the index in an
+/// admission-free [`Service`] (or the one configured by
+/// `opts.serve`) and drives through it.
 pub fn stream_ingest_into(
     index: &Arc<StreamingIndex>,
+    ds: &Dataset,
+    queries: &Dataset,
+    opts: &IngestOptions,
+    observer: &mut dyn FnMut(&IngestReportRow),
+) -> IngestSummary {
+    let svc = Service::with_options(Arc::clone(index), opts.serve);
+    stream_ingest_service(&svc, ds, queries, opts, observer)
+}
+
+/// Issue one ingest mutation through the service, sleeping out
+/// `Overloaded` backpressure (the driver is the only client, so the
+/// overload is seal/memory pressure and always clears).
+fn ingest_op(svc: &Service, req: Request) -> Response {
+    loop {
+        match svc.handle(req.clone()) {
+            Response::Overloaded { retry_after_ms, .. } => {
+                std::thread::sleep(Duration::from_millis(retry_after_ms.max(1)));
+            }
+            resp => return resp,
+        }
+    }
+}
+
+/// The ingest/churn driver proper: every insert, delete, and measured
+/// search goes through `svc` — the same typed surface the TCP server
+/// speaks — so this path proves the service layer is sufficient for
+/// the batch workloads too.
+pub fn stream_ingest_service(
+    svc: &Service,
     ds: &Dataset,
     queries: &Dataset,
     opts: &IngestOptions,
@@ -124,6 +162,7 @@ pub fn stream_ingest_into(
         (0.0..1.0).contains(&opts.delete_rate),
         "delete_rate must be in [0, 1)"
     );
+    let index = svc.index();
     let background = opts
         .background_compaction
         .then(|| Arc::clone(index).spawn_compactor(Duration::from_millis(1)));
@@ -135,14 +174,27 @@ pub fn stream_ingest_into(
     let start = Instant::now();
     let mut rows: Vec<IngestReportRow> = Vec::new();
     for i in 0..ds.len() {
-        let gid = index.insert(&ds.vector(i));
+        let gid = match ingest_op(
+            svc,
+            Request::Insert {
+                vector: ds.vector(i).to_vec(),
+            },
+        ) {
+            Response::Inserted { gid } => gid,
+            other => panic!("unexpected insert response: {other:?}"),
+        };
         live.push(gid);
         if opts.delete_rate > 0.0
             && live.len() > 1
             && (rng.gen_range(1_000_000) as f64) < opts.delete_rate * 1e6
         {
             let victim = live.swap_remove(rng.gen_range(live.len()));
-            assert!(index.delete(victim), "victim {victim} was live");
+            match ingest_op(svc, Request::Delete { gid: victim }) {
+                Response::Deleted { existed } => {
+                    assert!(existed, "victim {victim} was live")
+                }
+                other => panic!("unexpected delete response: {other:?}"),
+            }
             deleted.push(victim);
         }
         if !opts.background_compaction {
@@ -156,7 +208,7 @@ pub fn stream_ingest_into(
             }
         }
         if opts.report_every > 0 && (i + 1) % opts.report_every == 0 && (i + 1) < ds.len() {
-            let row = measure(index, ds, queries, i + 1, &deleted, opts, &start);
+            let row = measure(svc, ds, queries, i + 1, &deleted, opts, &start);
             observer(&row);
             rows.push(row);
         }
@@ -164,12 +216,12 @@ pub fn stream_ingest_into(
     if let Some(handle) = background {
         handle.stop();
     }
-    index.flush();
+    svc.handle(Request::Flush);
     if opts.final_compact {
         index.compact_all();
     }
     let total_secs = start.elapsed().as_secs_f64();
-    let final_row = measure(index, ds, queries, ds.len(), &deleted, opts, &start);
+    let final_row = measure(svc, ds, queries, ds.len(), &deleted, opts, &start);
     observer(&final_row);
     rows.push(final_row);
     // Per-operation latency percentiles come from the engine's always-on
@@ -199,7 +251,7 @@ pub fn stream_ingest_into(
 /// `ds` minus the deleted gids — under churn, truth must not credit
 /// dead neighbors). Panics if a search surfaces a deleted id.
 fn measure(
-    index: &StreamingIndex,
+    svc: &Service,
     ds: &Dataset,
     queries: &Dataset,
     inserted: usize,
@@ -207,6 +259,7 @@ fn measure(
     opts: &IngestOptions,
     start: &Instant,
 ) -> IngestReportRow {
+    let index = svc.index();
     let stats = index.stats();
     if queries.is_empty() {
         return IngestReportRow {
@@ -229,9 +282,15 @@ fn measure(
     let t = Instant::now();
     let results: Vec<Vec<u32>> = (0..queries.len())
         .map(|q| {
-            index
-                .search_ef(&queries.vector(q), opts.topk, opts.ef)
-                .into_iter()
+            let hits = match svc.handle(Request::Search {
+                query: queries.vector(q).to_vec(),
+                topk: opts.topk,
+                ef: opts.ef,
+            }) {
+                Response::Hits { hits, .. } => hits,
+                other => panic!("unexpected search response: {other:?}"),
+            };
+            hits.into_iter()
                 .map(|(_, gid)| {
                     // Truth ids are live-subset positions; translate
                     // (and hard-fail if a tombstoned id leaked out).
@@ -321,21 +380,13 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
         None => cfg.family.generate_queries(n_queries, cfg.seed ^ 0x51EA),
     };
 
-    let parse_f64 = |key: &str| -> Result<f64> {
-        match args.get(key) {
-            Some(v) => v
-                .parse::<f64>()
-                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
-            None => Ok(0.0),
-        }
-    };
-    let rate = parse_f64("rate")?;
-    let delete_rate = parse_f64("delete-rate")?;
+    let rate = args.get_f64("rate", 0.0)?;
+    let delete_rate = args.get_f64("delete-rate", 0.0)?;
     if !(0.0..1.0).contains(&delete_rate) {
         anyhow::bail!("--delete-rate must be in [0, 1), got {delete_rate}");
     }
     let metrics_out = args.get("metrics-out").map(std::path::PathBuf::from);
-    let metrics_interval = parse_f64("metrics-interval")?;
+    let metrics_interval = args.get_f64("metrics-interval", 0.0)?;
     if metrics_interval > 0.0 && metrics_out.is_none() {
         anyhow::bail!("--metrics-interval requires --metrics-out");
     }
@@ -347,6 +398,7 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
         ef: cfg.stream.ef,
         background_compaction: args.get_flag("background"),
         final_compact: !args.get_flag("no-final-compact"),
+        serve: cfg.serve,
         ..Default::default()
     };
 
@@ -405,30 +457,24 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
     } else {
         queries
     };
+    // One Service fronts the whole run: the driver below, the periodic
+    // checkpoint, and the metrics dump all go through the same typed
+    // surface the `serve` TCP listener speaks.
+    let svc = Service::with_options(Arc::clone(&index), cfg.serve)
+        .with_checkpoint_dir(checkpoint_dir.clone());
     // Periodic `--metrics-interval` dumper: snapshots are cheap (a few
     // lock-free loads per instrument), so a mid-run dump never perturbs
-    // the ingest it is observing.
+    // the ingest it is observing. `MetricsDumper` owns the shutdown
+    // channel and joins the thread on stop/drop — no leaked dumper.
     let dumper = match (&metrics_out, metrics_interval > 0.0) {
-        (Some(path), true) => {
-            let idx = Arc::clone(&index);
-            let path = path.clone();
-            let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
-            let flag = Arc::clone(&stop);
-            let interval = Duration::from_secs_f64(metrics_interval);
-            let join = std::thread::spawn(move || loop {
-                std::thread::park_timeout(interval);
-                if flag.load(std::sync::atomic::Ordering::Relaxed) {
-                    break;
-                }
-                if let Err(e) = write_metrics(&idx, &path) {
-                    eprintln!("metrics dump failed: {e:#}");
-                }
-            });
-            Some((stop, join))
-        }
+        (Some(path), true) => Some(MetricsDumper::spawn(
+            Arc::clone(&index),
+            path.clone(),
+            Duration::from_secs_f64(metrics_interval),
+        )),
         _ => None,
     };
-    let summary = stream_ingest_into(&index, &ds, &queries, &opts, &mut |row| {
+    let summary = stream_ingest_service(&svc, &ds, &queries, &opts, &mut |row| {
         println!(
             "  t={:6.2}s  inserted {:>8}  deleted {:>7}  segments {:>3}  qps {:>8.0}  \
              recall@{} {:.4}",
@@ -452,46 +498,32 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
         summary.total_secs
     );
     if let Some(dir) = &checkpoint_dir {
-        let st = index.checkpoint(dir).with_context(|| format!("checkpoint to {dir:?}"))?;
-        println!(
-            "checkpoint -> {dir:?}: {} segments ({} spilled, {} reused), {} memtable rows, \
-             manifest {} B, {} stale files removed",
-            st.segments,
-            st.segment_files_written,
-            st.segment_files_reused,
-            st.memtable_rows,
-            st.manifest_bytes,
-            st.gc_removed
-        );
+        match svc.handle(Request::Checkpoint) {
+            Response::Checkpointed {
+                segments,
+                files_written,
+                files_reused,
+                gc_removed,
+                memtable_rows,
+                manifest_bytes,
+            } => println!(
+                "checkpoint -> {dir:?}: {segments} segments ({files_written} spilled, \
+                 {files_reused} reused), {memtable_rows} memtable rows, \
+                 manifest {manifest_bytes} B, {gc_removed} stale files removed"
+            ),
+            other => anyhow::bail!("checkpoint to {dir:?} failed: {other:?}"),
+        }
     }
-    if let Some((stop, join)) = dumper {
-        stop.store(true, std::sync::atomic::Ordering::Relaxed);
-        join.thread().unpark();
-        let _ = join.join();
+    if let Some(dumper) = dumper {
+        dumper.stop();
     }
     // Final dump AFTER the checkpoint so its span and journal event are
     // part of the snapshot the run leaves behind.
     if let Some(path) = &metrics_out {
-        write_metrics(&index, path)?;
+        crate::service::write_metrics(&index, path)?;
         println!("metrics -> {path:?}");
     }
     Ok(summary)
-}
-
-/// Atomically write `index`'s metrics snapshot as pretty JSON (temp
-/// file + rename, so a reader never sees a half-written dump).
-fn write_metrics(index: &StreamingIndex, path: &std::path::Path) -> Result<()> {
-    if let Some(parent) = path.parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent)
-                .with_context(|| format!("create metrics dir {parent:?}"))?;
-        }
-    }
-    let json = index.metrics_snapshot().to_json();
-    let tmp = path.with_extension("json.tmp");
-    std::fs::write(&tmp, json.to_pretty()).with_context(|| format!("write {tmp:?}"))?;
-    std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
-    Ok(())
 }
 
 #[cfg(test)]

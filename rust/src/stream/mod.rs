@@ -51,7 +51,9 @@ pub mod tombstones;
 
 pub use compactor::{Compaction, Compactor};
 pub use engine::{CompactorHandle, StreamStats, StreamingIndex};
-pub use ingest::{stream_ingest, stream_ingest_into, IngestOptions, IngestSummary};
+pub use ingest::{
+    stream_ingest, stream_ingest_into, stream_ingest_service, IngestOptions, IngestSummary,
+};
 pub use memtable::{MemSnapshot, MemTable};
 pub use persist::{CheckpointStats, Manifest, RestoreOptions, SegmentRecord};
 pub use segment::Segment;

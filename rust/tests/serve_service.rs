@@ -1,0 +1,415 @@
+//! Service-layer and `KSRV` wire integration tests: concurrent mixed
+//! workloads through [`Service`] (searches must always answer, even
+//! when every ingest op is shed), frame-protocol roundtrips, truncation
+//! and corruption handling, and a live TCP server drain.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use knn_merge::config::{ServeConfig, StreamConfig};
+use knn_merge::distance::Metric;
+use knn_merge::service::server::{spawn, ServeClient, ServerOptions};
+use knn_merge::service::wire::{
+    self, ClientFrame, RawFrame, ServerFrame, HEADER_LEN, MAX_PAYLOAD,
+};
+use knn_merge::stream::{StreamStats, StreamingIndex};
+use knn_merge::{Request, Response, Service};
+
+const DIM: usize = 8;
+
+fn vec_at(x: f32) -> Vec<f32> {
+    (0..DIM).map(|i| x + i as f32).collect()
+}
+
+fn fresh_index() -> Arc<StreamingIndex> {
+    Arc::new(StreamingIndex::new(
+        DIM,
+        Metric::L2,
+        StreamConfig {
+            segment_size: 32,
+            ..Default::default()
+        },
+    ))
+}
+
+/// Preload `n` rows through an unbounded service (register-once
+/// instruments: a second service over the same index shares handles).
+fn preload(index: &Arc<StreamingIndex>, n: usize) {
+    let svc = Service::with_options(Arc::clone(index), ServeConfig::unbounded());
+    for i in 0..n {
+        match svc.handle(Request::Insert {
+            vector: vec_at(i as f32),
+        }) {
+            Response::Inserted { .. } => {}
+            other => panic!("preload insert failed: {other:?}"),
+        }
+    }
+    svc.handle(Request::Flush);
+}
+
+#[test]
+fn searches_always_answer_while_every_ingest_op_is_shed() {
+    let index = fresh_index();
+    preload(&index, 64);
+    let rejected_before = index.metrics().counter("service.rejected_insert").get();
+    // Zero ingest permits: deterministic total overload for mutations.
+    let svc = Arc::new(Service::with_options(
+        Arc::clone(&index),
+        ServeConfig {
+            max_inflight_ingest: 0,
+            retry_after_ms: 3,
+            ..ServeConfig::default()
+        },
+    ));
+    let searchers: Vec<_> = (0..4)
+        .map(|t| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                for i in 0..25 {
+                    match svc.handle(Request::Search {
+                        query: vec_at((t * 25 + i) as f32 % 64.0),
+                        topk: 5,
+                        ef: 32,
+                    }) {
+                        Response::Hits { hits, .. } => {
+                            assert!(!hits.is_empty(), "preloaded index answered empty")
+                        }
+                        other => panic!("search must never fail under overload: {other:?}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    let inserters: Vec<_> = (0..4)
+        .map(|t| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                for i in 0..25 {
+                    match svc.handle(Request::Insert {
+                        vector: vec_at((1000 + t * 25 + i) as f32),
+                    }) {
+                        Response::Overloaded {
+                            class,
+                            retry_after_ms,
+                        } => {
+                            assert_eq!(class.name(), "insert");
+                            assert_eq!(retry_after_ms, 3);
+                        }
+                        other => panic!("expected Overloaded, got {other:?}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in searchers.into_iter().chain(inserters) {
+        h.join().unwrap();
+    }
+    // Every shed insert was counted; none reached the engine.
+    let rejected = index.metrics().counter("service.rejected_insert").get();
+    assert_eq!(rejected - rejected_before, 100);
+    assert_eq!(index.stats().inserted, 64);
+}
+
+#[test]
+fn concurrent_mixed_workload_with_admission() {
+    let index = fresh_index();
+    preload(&index, 32);
+    let svc = Arc::new(Service::with_options(
+        Arc::clone(&index),
+        ServeConfig {
+            max_inflight_ingest: 2,
+            retry_after_ms: 1,
+            ..ServeConfig::default()
+        },
+    ));
+    let workers: Vec<_> = (0..6)
+        .map(|t| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                let mut applied = 0usize;
+                for i in 0..40 {
+                    let req = match (t + i) % 4 {
+                        0 | 1 => Request::Search {
+                            query: vec_at(i as f32),
+                            topk: 4,
+                            ef: 24,
+                        },
+                        2 => Request::Insert {
+                            vector: vec_at((t * 100 + i) as f32),
+                        },
+                        _ => Request::Delete { gid: (i % 32) as u32 },
+                    };
+                    match svc.handle(req) {
+                        Response::Hits { .. } => {}
+                        Response::Inserted { .. } | Response::Deleted { .. } => applied += 1,
+                        // Bounded permits: mutations may shed; retry once
+                        // after the hint like a real client.
+                        Response::Overloaded { retry_after_ms, .. } => {
+                            std::thread::sleep(Duration::from_millis(retry_after_ms))
+                        }
+                        other => panic!("unexpected response: {other:?}"),
+                    }
+                }
+                applied
+            })
+        })
+        .collect();
+    let applied: usize = workers.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(applied > 0, "some mutations must land with 2 permits");
+    // The gate drained: no in-flight count leaked by a worker.
+    let snap = index.metrics_snapshot().to_json();
+    let gauges = snap.get("gauges").unwrap();
+    assert_eq!(
+        gauges.get("service.inflight_ingest").unwrap().as_f64(),
+        Some(0.0)
+    );
+    assert_eq!(
+        gauges.get("service.inflight_search").unwrap().as_f64(),
+        Some(0.0)
+    );
+}
+
+#[test]
+fn wire_roundtrips_every_request_and_response_variant() {
+    let requests = [
+        ClientFrame::Request(Request::Search {
+            query: vec![1.5, -2.25, 0.0],
+            topk: 7,
+            ef: 65,
+        }),
+        ClientFrame::Request(Request::Insert {
+            vector: vec![0.125, 3.5],
+        }),
+        ClientFrame::Request(Request::Delete { gid: 42 }),
+        ClientFrame::Request(Request::Upsert {
+            gid: 7,
+            vector: vec![9.0, -1.0, 2.5],
+        }),
+        ClientFrame::Request(Request::Flush),
+        ClientFrame::Request(Request::Stats),
+        ClientFrame::Request(Request::MetricsSnapshot),
+        ClientFrame::Request(Request::Checkpoint),
+        ClientFrame::Shutdown,
+    ];
+    for frame in &requests {
+        let bytes = wire::encode_client(frame);
+        let raw = wire::read_raw(&mut bytes.as_slice()).unwrap();
+        let back = wire::decode_client(&raw).unwrap();
+        assert_eq!(format!("{back:?}"), format!("{frame:?}"));
+    }
+    let stats = StreamStats {
+        inserted: 1,
+        deleted: 2,
+        upserts: 3,
+        sealed: 4,
+        compactions: 5,
+        reclaimed: 6,
+        seal_dropped: 7,
+        live_segments: 8,
+        memtable_len: 9,
+        sealing: 10,
+        tombstones: 11,
+    };
+    let responses = [
+        ServerFrame::Response(Response::Hits {
+            hits: vec![(0.5, 3), (1.25, 9)],
+            degraded: true,
+        }),
+        ServerFrame::Response(Response::Inserted { gid: 12 }),
+        ServerFrame::Response(Response::Deleted { existed: false }),
+        ServerFrame::Response(Response::Upserted { applied: true }),
+        ServerFrame::Response(Response::Flushed),
+        ServerFrame::Response(Response::Stats(stats)),
+        ServerFrame::Response(Response::Metrics {
+            json: "{\"version\": 1}".to_string(),
+        }),
+        ServerFrame::Response(Response::Checkpointed {
+            segments: 3,
+            files_written: 2,
+            files_reused: 1,
+            gc_removed: 0,
+            memtable_rows: 17,
+            manifest_bytes: 512,
+        }),
+        ServerFrame::Response(Response::Overloaded {
+            class: Request::Insert { vector: vec![] }.class(),
+            retry_after_ms: 25,
+        }),
+        ServerFrame::Response(Response::Error {
+            message: "query dimension 3 != index dimension 8".to_string(),
+        }),
+        ServerFrame::ShuttingDown,
+    ];
+    for frame in &responses {
+        let bytes = wire::encode_server(frame);
+        let raw = wire::read_raw(&mut bytes.as_slice()).unwrap();
+        let back = wire::decode_server(&raw).unwrap();
+        assert_eq!(format!("{back:?}"), format!("{frame:?}"));
+    }
+}
+
+#[test]
+fn truncated_frames_fail_cleanly_at_every_prefix() {
+    let bytes = wire::encode_client(&ClientFrame::Request(Request::Search {
+        query: vec![1.0, 2.0, 3.0, 4.0],
+        topk: 3,
+        ef: 17,
+    }));
+    assert!(bytes.len() > HEADER_LEN);
+    for cut in 0..bytes.len() {
+        let err = wire::read_raw(&mut &bytes[..cut])
+            .expect_err("truncated frame must not parse");
+        // EOF mid-header or mid-payload, never a panic.
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof, "cut={cut}");
+    }
+    // The intact frame still parses (the loop above did not assert
+    // against an already-broken encoding).
+    let raw = wire::read_raw(&mut bytes.as_slice()).unwrap();
+    assert!(wire::decode_client(&raw).is_ok());
+    // Payload-level truncation after a valid header: length-checked
+    // vector decode fails before allocating.
+    let hostile = RawFrame {
+        kind: raw.kind,
+        payload: raw.payload[..raw.payload.len() - 4].to_vec(),
+    };
+    assert!(wire::decode_client(&hostile).is_err());
+}
+
+#[test]
+fn corrupt_headers_are_invalid_data_errors() {
+    let good = wire::encode_client(&ClientFrame::Request(Request::Delete { gid: 5 }));
+    let cases: &[(&str, Box<dyn Fn(&mut Vec<u8>)>)] = &[
+        ("bad magic", Box::new(|b: &mut Vec<u8>| b[0] ^= 0xFF)),
+        ("bad version", Box::new(|b: &mut Vec<u8>| b[4] = 0x7F)),
+        ("reserved byte set", Box::new(|b: &mut Vec<u8>| b[7] = 1)),
+        (
+            "oversized length",
+            Box::new(|b: &mut Vec<u8>| {
+                b[8..12].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes())
+            }),
+        ),
+    ];
+    for (what, corrupt) in cases {
+        let mut bytes = good.clone();
+        corrupt(&mut bytes);
+        let err = wire::read_raw(&mut bytes.as_slice()).expect_err(what);
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{what}");
+    }
+    // Unknown kinds pass framing (length-prefixed) but fail decode.
+    let raw = RawFrame {
+        kind: 0x77,
+        payload: Vec::new(),
+    };
+    assert!(wire::decode_client(&raw).is_err());
+    assert!(wire::decode_server(&raw).is_err());
+    // A hostile vector length fails before the allocation.
+    let mut p = Vec::new();
+    p.extend_from_slice(&u32::MAX.to_le_bytes());
+    let bomb = RawFrame {
+        kind: wire::KIND_INSERT,
+        payload: p,
+    };
+    assert!(wire::decode_client(&bomb).is_err());
+}
+
+#[test]
+fn tcp_server_roundtrip_and_shutdown_drain() {
+    let index = fresh_index();
+    let svc = Arc::new(Service::with_options(
+        Arc::clone(&index),
+        ServeConfig::default(),
+    ));
+    let mut server = spawn(
+        Arc::clone(&svc),
+        &ServerOptions {
+            addr: "127.0.0.1:0".to_string(),
+            read_timeout: Duration::from_millis(25),
+        },
+    )
+    .unwrap();
+    let mut c1 = ServeClient::connect(server.addr()).unwrap();
+    let gid = match c1.request(Request::Insert { vector: vec_at(1.0) }).unwrap() {
+        Response::Inserted { gid } => gid,
+        other => panic!("unexpected: {other:?}"),
+    };
+    match c1
+        .request(Request::Search {
+            query: vec_at(1.0),
+            topk: 1,
+            ef: 0,
+        })
+        .unwrap()
+    {
+        Response::Hits { hits, degraded } => {
+            assert_eq!(hits[0].1, gid);
+            assert!(!degraded);
+        }
+        other => panic!("unexpected: {other:?}"),
+    }
+    // A dimension mismatch comes back as a typed Error over the wire
+    // and the connection keeps serving.
+    match c1
+        .request(Request::Insert {
+            vector: vec![1.0; DIM + 1],
+        })
+        .unwrap()
+    {
+        Response::Error { message } => assert!(message.contains("dimension")),
+        other => panic!("unexpected: {other:?}"),
+    }
+    match c1.request(Request::Stats).unwrap() {
+        Response::Stats(st) => assert_eq!(st.inserted, 1),
+        other => panic!("unexpected: {other:?}"),
+    }
+    // A second concurrent connection shares the same service.
+    let mut c2 = ServeClient::connect(server.addr()).unwrap();
+    match c2.request(Request::Flush).unwrap() {
+        Response::Flushed => {}
+        other => panic!("unexpected: {other:?}"),
+    }
+    // Client-initiated drain: acked, then the whole server joins.
+    c2.shutdown_server().unwrap();
+    server.wait_with_deadline(Duration::from_secs(5));
+    assert!(server.stopped());
+}
+
+#[test]
+fn tcp_overload_is_a_typed_response() {
+    let index = fresh_index();
+    let svc = Arc::new(Service::with_options(
+        Arc::clone(&index),
+        ServeConfig {
+            max_inflight_ingest: 0,
+            retry_after_ms: 11,
+            ..ServeConfig::default()
+        },
+    ));
+    let mut server = spawn(Arc::clone(&svc), &ServerOptions::default()).unwrap();
+    let mut client = ServeClient::connect(server.addr()).unwrap();
+    match client
+        .request(Request::Insert { vector: vec_at(0.0) })
+        .unwrap()
+    {
+        Response::Overloaded {
+            class,
+            retry_after_ms,
+        } => {
+            assert_eq!(class.name(), "insert");
+            assert_eq!(retry_after_ms, 11);
+        }
+        other => panic!("unexpected: {other:?}"),
+    }
+    // Searches on the same overloaded server still answer.
+    match client
+        .request(Request::Search {
+            query: vec_at(0.0),
+            topk: 3,
+            ef: 16,
+        })
+        .unwrap()
+    {
+        Response::Hits { hits, .. } => assert!(hits.is_empty()),
+        other => panic!("unexpected: {other:?}"),
+    }
+    server.shutdown();
+}

@@ -92,6 +92,24 @@ def main():
     for name in ["stream.insert_ns", "stream.search_ns"]:
         check_histogram(hists, name)
 
+    # Service-layer surface: the stream driver routes every insert,
+    # delete, and measured search through the Service, so the per-class
+    # histograms must carry samples. The admission counters and
+    # in-flight gauges are registered at service construction; a smoke
+    # run that never sheds legitimately leaves them at 0, so presence
+    # (not value) is the contract.
+    for name in ["service.insert_ns", "service.search_ns"]:
+        check_histogram(hists, name)
+    for name in ["service.delete_ns", "service.upsert_ns", "service.control_ns"]:
+        require(hists, name, dict, "histograms")
+    for key in ["service.rejected_insert", "service.rejected_delete",
+                "service.rejected_upsert", "service.degraded_searches"]:
+        if key not in counters:
+            err(f"counters: missing {key!r}")
+    for key in ["service.inflight_search", "service.inflight_ingest"]:
+        if key not in gauges:
+            err(f"gauges: missing {key!r}")
+
     spans = require(snap, "spans", dict) or {}
     for name in ["seal_build", "compaction", "checkpoint"]:
         check_span(spans, name)

@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Validate results/serve_slo.json from the serve_slo bench.
+
+Used by scripts/verify.sh as the serve smoke: after the mixed-workload
+run over a live KSRV TCP server, the report must carry one quantile row
+per request class (search/insert/delete/upsert, each with server-side
+p50/p95/p99 and a sample count) plus the degradation-drill row proving
+admission control fired: ingest was shed (Overloaded), searches kept
+answering, and their beams degraded.
+
+Usage: check_serve_slo.py <serve_slo.json>
+"""
+
+import json
+import sys
+
+ERRORS = []
+
+CLASS_LABELS = ["search", "insert", "delete", "upsert"]
+QUANTILE_KEYS = ["p50_ms", "p95_ms", "p99_ms"]
+DRILL_KEYS = ["ops", "rejected", "shed_seen_by_clients",
+              "searches_answered", "degraded_searches", "search_p99_ms"]
+
+
+def err(msg):
+    ERRORS.append(msg)
+
+
+def check_class_row(row, label):
+    if row.get("count", 0) <= 0:
+        err(f"{label}: count must be > 0, got {row.get('count')}")
+    for key in QUANTILE_KEYS:
+        if not isinstance(row.get(key), (int, float)):
+            err(f"{label}: missing quantile column {key!r}")
+            return
+        if row[key] < 0:
+            err(f"{label}: {key} is negative ({row[key]})")
+    if row.get("p50_ms", 0) > row.get("p99_ms", 0):
+        err(f"{label}: p50 {row.get('p50_ms')} > p99 {row.get('p99_ms')}")
+
+
+def check_drill_row(row):
+    for key in DRILL_KEYS:
+        if not isinstance(row.get(key), (int, float)):
+            err(f"drill: missing column {key!r}")
+    if row.get("rejected", 0) < 1:
+        err(f"drill: no ingest was shed (rejected={row.get('rejected')}) — "
+            f"the overload drill did not fire")
+    if row.get("shed_seen_by_clients", 0) < 1:
+        err("drill: no client observed an Overloaded response")
+    if row.get("searches_answered", 0) < 1:
+        err("drill: no search answered while ingest was shed — searches "
+            "must never be rejected")
+    if row.get("degraded_searches", 0) < 1:
+        err(f"drill: no search degraded "
+            f"(degraded_searches={row.get('degraded_searches')}) — the "
+            f"over-committed search class must degrade toward topk")
+
+
+def main():
+    if len(sys.argv) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    path = sys.argv[1]
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"FAIL {path}: unreadable or invalid JSON: {e}", file=sys.stderr)
+        return 1
+
+    if report.get("name") != "serve_slo":
+        err(f"name must be 'serve_slo', got {report.get('name')!r}")
+    rows = report.get("rows")
+    if not isinstance(rows, list):
+        err("rows: missing or not a list")
+        rows = []
+    by_label = {}
+    for row in rows:
+        if isinstance(row, dict) and isinstance(row.get("label"), str):
+            by_label[row["label"]] = row
+
+    for label in CLASS_LABELS:
+        if label not in by_label:
+            err(f"rows: missing per-class row {label!r}")
+        else:
+            check_class_row(by_label[label], label)
+    if "drill" not in by_label:
+        err("rows: missing the 'drill' row")
+    else:
+        check_drill_row(by_label["drill"])
+
+    if ERRORS:
+        print(f"FAIL {path}: {len(ERRORS)} problem(s)", file=sys.stderr)
+        for e in ERRORS:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    drill = by_label["drill"]
+    print(f"OK {path}: {len(CLASS_LABELS)} class rows + drill "
+          f"(rejected={drill['rejected']:.0f}, "
+          f"searches_answered={drill['searches_answered']:.0f}, "
+          f"degraded={drill['degraded_searches']:.0f})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

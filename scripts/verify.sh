@@ -13,6 +13,8 @@
 #   SKIP_METRICS_SMOKE=1 bash scripts/verify.sh # skip the ~5s metrics smoke
 #   SKIP_KERNEL_SMOKE=1 bash scripts/verify.sh  # skip the ~5s kernel smoke
 #   KERNEL_SMOKE_SCALE=1 bash scripts/verify.sh # bigger kernel workload
+#   SKIP_SERVE_SMOKE=1 bash scripts/verify.sh   # skip the ~5s serve SLO smoke
+#   SERVE_SMOKE_SCALE=0.5 bash scripts/verify.sh # bigger serve workload
 #
 # `cargo fmt` / `cargo clippy` are skipped automatically when the
 # component is not installed (minimal CI containers); the build + test
@@ -72,6 +74,17 @@ fi
 if [ "${SKIP_KERNEL_SMOKE:-0}" != "1" ]; then
   KNN_BENCH_SCALE="${KERNEL_SMOKE_SCALE:-0.5}" cargo bench --bench kernels
   python3 scripts/check_kernels.py results/kernels.json
+fi
+
+# Serve smoke (~5s at this scale): the serve_slo bench stands up a live
+# KSRV TCP server, drives a mixed search/insert/delete/upsert workload
+# from concurrent clients while the compactor runs, then slams the
+# admission gate shut for the degradation drill. The checker gates the
+# per-class quantile rows and that the drill actually shed ingest and
+# degraded searches while every search still answered.
+if [ "${SKIP_SERVE_SMOKE:-0}" != "1" ]; then
+  KNN_BENCH_SCALE="${SERVE_SMOKE_SCALE:-0.05}" cargo bench --bench serve_slo
+  python3 scripts/check_serve_slo.py results/serve_slo.json
 fi
 
 # Formatting is a hard gate (STRICT_FMT defaults to on). FMT_FIX=1 (the
