@@ -70,7 +70,8 @@ fn main() {
                 ..Default::default()
             },
             &mut |_| {},
-        );
+        )
+        .expect("unthrottled bench ingest never exhausts retries");
         // QPS under churn: the mid-ingest batches, not the final
         // (fully compacted) state.
         let mid = &summary.rows[..summary.rows.len() - 1];

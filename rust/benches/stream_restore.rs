@@ -2,7 +2,10 @@
 //! log. Measures checkpoint cost (cold spill vs. warm reuse), restore
 //! cost (eager vs. demand-paged under a `MemoryBudget`), on-disk
 //! footprint, and verifies the restored index answers a probe set
-//! bit-identically before reporting. Emits `results/stream_restore.json`.
+//! bit-identically before reporting. Two WAL drills follow: recovery
+//! time as a function of the replayed tail length (`wal_replay_len_*`),
+//! and the fsync tax on insert latency across group-commit windows
+//! (`wal_fsync_*`). Emits `results/stream_restore.json`.
 //!
 //! verify.sh runs this at a small scale (`KNN_BENCH_SCALE`) as the
 //! checkpoint→kill→restore smoke, so a broken durability path fails
@@ -155,6 +158,88 @@ fn main() {
         "torn tmp write must not affect the published checkpoint"
     );
     report.push(Row::new("restore_after_torn_write").col("secs", secs));
+
+    // WAL drill 1: recovery time vs. tail length. A run is killed with
+    // NO checkpoint, so the whole history lives in the group-committed
+    // log; a fresh index adopts it and replays (seals included).
+    for frac in [0.25f64, 0.5, 1.0] {
+        let m = ((n as f64 * frac) as usize).max(200).min(n);
+        let wdir = std::env::temp_dir().join(format!(
+            "knnmerge-bench-wal-replay-{}",
+            knn_merge::util::unique_scratch_suffix()
+        ));
+        let mut wcfg = cfg.clone();
+        wcfg.wal_group_commit_us = 0;
+        let mut idx = StreamingIndex::new(ds.dim, Metric::L2, wcfg.clone());
+        idx.attach_durability(&wdir).unwrap();
+        for i in 0..m {
+            idx.insert(&ds.vector(i));
+        }
+        drop(idx); // the kill: acknowledged rows exist only in the WAL
+        let wal_mib = std::fs::metadata(wdir.join("WAL"))
+            .map(|md| md.len())
+            .unwrap_or(0) as f64
+            / (1 << 20) as f64;
+        let (revived, secs) = time(|| {
+            let mut r = StreamingIndex::new(ds.dim, Metric::L2, wcfg.clone());
+            r.attach_durability(&wdir).unwrap();
+            r
+        });
+        assert_eq!(revived.live_len(), m, "replay lost acknowledged rows");
+        report.push(
+            Row::new(format!("wal_replay_len_{m}"))
+                .col("records", m as f64)
+                .col("wal_mib", wal_mib)
+                .col("secs", secs)
+                .col("records_per_sec", m as f64 / secs.max(1e-9)),
+        );
+        drop(revived);
+        std::fs::remove_dir_all(&wdir).ok();
+    }
+
+    // WAL drill 2: what durability costs the insert path. Same insert
+    // loop with the WAL off, then attached under widening group-commit
+    // windows; the p99 shows the fsync (and window sleep) tax a single
+    // uncontended writer pays per acknowledged insert.
+    let m = (n / 8).max(200);
+    for (label, window_us) in [
+        ("wal_fsync_off", None),
+        ("wal_fsync_group_0us", Some(0u64)),
+        ("wal_fsync_group_200us", Some(200)),
+        ("wal_fsync_group_1000us", Some(1000)),
+    ] {
+        let wdir = std::env::temp_dir().join(format!(
+            "knnmerge-bench-wal-fsync-{}",
+            knn_merge::util::unique_scratch_suffix()
+        ));
+        let mut wcfg = cfg.clone();
+        if let Some(us) = window_us {
+            wcfg.wal_group_commit_us = us;
+        }
+        let mut idx = StreamingIndex::new(ds.dim, Metric::L2, wcfg.clone());
+        if window_us.is_some() {
+            idx.attach_durability(&wdir).unwrap();
+        }
+        let mut lats = Vec::with_capacity(m);
+        let t0 = std::time::Instant::now();
+        for i in 0..m {
+            let t = std::time::Instant::now();
+            idx.insert(&ds.vector(i));
+            lats.push(t.elapsed().as_secs_f64());
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        lats.sort_by(f64::total_cmp);
+        let pick = |q: f64| lats[((lats.len() as f64 * q) as usize).min(lats.len() - 1)];
+        report.push(
+            Row::new(label)
+                .col("inserts", m as f64)
+                .col("p50_us", pick(0.50) * 1e6)
+                .col("p99_us", pick(0.99) * 1e6)
+                .col("inserts_per_sec", m as f64 / wall.max(1e-9)),
+        );
+        drop(idx);
+        std::fs::remove_dir_all(&wdir).ok();
+    }
 
     report.finish();
     std::fs::remove_dir_all(&dir).ok();

@@ -156,6 +156,14 @@ pub struct StreamConfig {
     /// misrank within the reconstruction error, so the true top-k is
     /// recovered from a slightly widened pool).
     pub rerank_slack: usize,
+    /// Group-commit window of the write-ahead log, in microseconds:
+    /// how long the first committer of a group waits for more appends
+    /// before paying the single fsync that makes the whole group
+    /// durable. Larger windows amortize fsyncs under concurrent ingest
+    /// at the cost of per-op ack latency; `0` flushes immediately
+    /// (still batching whatever accumulated). Only consulted when a
+    /// WAL is attached (`StreamingIndex::attach_durability`).
+    pub wal_group_commit_us: u64,
     /// Compaction / graph parameters (k, lambda, delta, iters, seed).
     pub merge: MergeParams,
     /// Segment-build parameters (NN-Descent above `brute_threshold`).
@@ -176,6 +184,7 @@ impl Default for StreamConfig {
             compact_dead_fraction: 0.25,
             quantized_tier: false,
             rerank_slack: 32,
+            wal_group_commit_us: 200,
             merge,
             nnd: NnDescentParams::default(),
         }
@@ -228,6 +237,9 @@ impl StreamConfig {
         if let Some(v) = map.get_usize("stream.rerank_slack")? {
             self.rerank_slack = v;
         }
+        if let Some(v) = map.get_u64("stream.wal_group_commit_us")? {
+            self.wal_group_commit_us = v;
+        }
         Ok(())
     }
 
@@ -238,8 +250,9 @@ impl StreamConfig {
     /// knobs that do not affect stored structure — `ef`,
     /// `seal_threads`, `compact_dead_fraction`, `quantized_tier`,
     /// `rerank_slack` (the SQ8 tier is *derived* from segment data, so
-    /// a restored log may toggle it freely) — are deliberately
-    /// excluded, so a restored log may retune them freely.
+    /// a restored log may toggle it freely), `wal_group_commit_us`
+    /// (fsync batching changes latency, never bytes) — are
+    /// deliberately excluded, so a restored log may retune them freely.
     pub fn fingerprint(&self) -> u64 {
         // FNV-1a 64 over the field values in a fixed order.
         let mut h: u64 = 0xCBF2_9CE4_8422_2325;
@@ -657,6 +670,7 @@ seal_threads = 3
         tunable.compact_dead_fraction = 0.9;
         tunable.quantized_tier = true;
         tunable.rerank_slack = 128;
+        tunable.wal_group_commit_us = 5_000;
         assert_eq!(tunable.fingerprint(), base.fingerprint());
     }
 

@@ -48,5 +48,5 @@ pub mod util;
 pub use config::RunConfig;
 pub use dataset::Dataset;
 pub use graph::KnnGraph;
-pub use service::{Request, Response, Service};
+pub use service::{Request, Response, RetriesExhausted, Service};
 pub use stream::StreamingIndex;

@@ -70,9 +70,17 @@ STREAM OPTIONS:
                                      beyond topk for exact rerank (default 32)
   --checkpoint-dir <dir>             checkpoint the segment log there at
                                      the end of the run (atomic manifest,
-                                     KNG3 segment spills)
+                                     KNG3 segment spills) and keep a
+                                     group-committed KWAL write-ahead log
+                                     so every acknowledged write survives
+                                     a crash between checkpoints
+  --wal-group-commit-us <us>         WAL group-commit window: writes
+                                     acknowledged in the same window
+                                     share one fsync (default 200)
   --restore                          resume from --checkpoint-dir before
-                                     ingesting (recall reporting skipped)
+                                     ingesting: load the manifest, then
+                                     replay the WAL tail (recall
+                                     reporting skipped)
   --report-every <n> --queries <q> --topk <k> --ef <ef>
   --background                       compact from a background thread
   --metrics-out <path>               write the metrics registry snapshot

@@ -157,6 +157,61 @@ impl RequestClass {
     }
 }
 
+/// Typed failure of a bounded retry loop: the service answered
+/// [`Response::Overloaded`] on every one of the budgeted attempts.
+/// The saturation is not clearing, so the caller must surface this
+/// instead of spinning forever against a permanently full gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetriesExhausted {
+    /// The admission class that kept being shed.
+    pub class: RequestClass,
+    /// How many attempts were made before giving up.
+    pub attempts: u32,
+}
+
+impl std::fmt::Display for RetriesExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "service still overloaded ({}) after {} attempts",
+            self.class.name(),
+            self.attempts
+        )
+    }
+}
+
+impl std::error::Error for RetriesExhausted {}
+
+/// Default attempt budget for [`retry_overloaded`] callers.
+pub const DEFAULT_RETRY_BUDGET: u32 = 64;
+
+/// Drive `op` until it stops answering [`Response::Overloaded`],
+/// sleeping out the server's retry-after hint between attempts, for at
+/// most `budget` attempts. A saturated service that never clears
+/// surfaces a typed [`RetriesExhausted`] error instead of an
+/// unbounded spin (the bug every ad-hoc retry loop used to have).
+pub fn retry_overloaded(
+    budget: u32,
+    mut op: impl FnMut() -> Response,
+) -> Result<Response, RetriesExhausted> {
+    let mut attempts = 0u32;
+    loop {
+        match op() {
+            Response::Overloaded {
+                class,
+                retry_after_ms,
+            } => {
+                attempts += 1;
+                if attempts >= budget {
+                    return Err(RetriesExhausted { class, attempts });
+                }
+                std::thread::sleep(Duration::from_millis(retry_after_ms.max(1)));
+            }
+            resp => return Ok(resp),
+        }
+    }
+}
+
 /// In-flight request counts behind the permit gate.
 #[derive(Default)]
 struct Inflight {
@@ -186,6 +241,7 @@ pub struct Service {
     rejected_delete: Arc<Counter>,
     rejected_upsert: Arc<Counter>,
     degraded_searches: Arc<Counter>,
+    search_degradation: Arc<Histogram>,
     inflight_search: Arc<Gauge>,
     inflight_ingest: Arc<Gauge>,
 }
@@ -234,6 +290,7 @@ impl Service {
             rejected_delete: obs.counter("service.rejected_delete"),
             rejected_upsert: obs.counter("service.rejected_upsert"),
             degraded_searches: obs.counter("service.degraded_searches"),
+            search_degradation: obs.histogram("service.search_degradation"),
             inflight_search: obs.gauge("service.inflight_search"),
             inflight_ingest: obs.gauge("service.inflight_ingest"),
             index,
@@ -305,27 +362,36 @@ impl Service {
                 ),
             };
         }
-        // Searches are always admitted; over-commit only degrades.
-        let over = {
+        // Searches are always admitted; over-commit only degrades —
+        // and degrades *proportionally*: one request past the limit is
+        // a 1/max nudge, not an instant collapse to `ef = topk` (the
+        // old cliff cost a full recall tier for a single extra
+        // in-flight search at zero pressure).
+        let over_frac = {
             let mut st = self.permits.lock().unwrap();
             st.search += 1;
             self.inflight_search.set(st.search as i64);
-            st.search > self.cfg.max_inflight_search
+            let max = self.cfg.max_inflight_search;
+            if st.search > max {
+                ((st.search - max) as f64 / max.max(1) as f64).clamp(0.0, 1.0)
+            } else {
+                0.0
+            }
         };
         let permit = Permit {
             svc: self,
             search: true,
         };
         let requested = if ef == 0 { self.index.default_ef() } else { ef }.max(topk);
-        let frac = if over {
-            1.0
-        } else {
-            ((self.pressure() - 0.5) / 0.5).clamp(0.0, 1.0)
-        };
+        let pressure_frac = ((self.pressure() - 0.5) / 0.5).clamp(0.0, 1.0);
+        let frac = over_frac.max(pressure_frac);
         let ef_eff = requested - ((requested - topk) as f64 * frac).round() as usize;
         let degraded = ef_eff < requested;
         if degraded {
             self.degraded_searches.inc();
+            // Magnitude in per-mille of the requested→topk span: 1000
+            // means the beam fully collapsed to `topk`.
+            self.search_degradation.record_ns((frac * 1000.0).round() as u64);
         }
         let t = Instant::now();
         let hits = self.index.search_ef(&query, topk, ef_eff);
@@ -684,6 +750,76 @@ mod tests {
             svc.index().metrics().counter("service.degraded_searches").get(),
             1
         );
+        // max_inflight_search == 0 is the degenerate limit: a single
+        // in-flight search is a full over-commit, so the magnitude
+        // histogram records the whole requested→topk span (1000‰).
+        let h = svc.index().metrics().histogram("service.search_degradation").snapshot();
+        assert_eq!(h.count, 1);
+        assert_eq!(h.max_ns, 1000);
+    }
+
+    #[test]
+    fn one_extra_search_degrades_proportionally_not_to_the_topk_cliff() {
+        let svc = tiny_service(ServeConfig {
+            max_inflight_search: 4,
+            ..ServeConfig::default()
+        });
+        for i in 0..8 {
+            match svc.handle(Request::Insert {
+                vector: vec4(i as f32),
+            }) {
+                Response::Inserted { .. } => {}
+                other => panic!("unexpected: {other:?}"),
+            }
+        }
+        // Pretend four searches are already in flight; the next one is
+        // the fifth — over the limit by exactly one.
+        svc.permits.lock().unwrap().search = 4;
+        match svc.handle(Request::Search {
+            query: vec4(3.0),
+            topk: 2,
+            ef: 66,
+        }) {
+            Response::Hits { hits, degraded } => {
+                assert!(degraded, "over by one must still mark degraded");
+                assert!(!hits.is_empty());
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        // Over by 1 of 4 → frac 0.25 → 250‰, nowhere near the old
+        // straight-to-1000 cliff.
+        let h = svc.index().metrics().histogram("service.search_degradation").snapshot();
+        assert_eq!(h.count, 1);
+        assert_eq!(h.max_ns, 250);
+        // The permit of the real search released; the phantoms remain.
+        assert_eq!(svc.permits.lock().unwrap().search, 4);
+    }
+
+    #[test]
+    fn retry_overloaded_surfaces_a_typed_error_when_saturation_never_clears() {
+        let mut calls = 0u32;
+        let err = retry_overloaded(3, || {
+            calls += 1;
+            Response::Overloaded {
+                class: RequestClass::Upsert,
+                retry_after_ms: 0,
+            }
+        })
+        .unwrap_err();
+        assert_eq!(calls, 3, "exactly the budgeted attempts, then stop");
+        assert_eq!(
+            err,
+            RetriesExhausted {
+                class: RequestClass::Upsert,
+                attempts: 3
+            }
+        );
+        assert!(err.to_string().contains("upsert"));
+        // A success inside the budget passes straight through.
+        match retry_overloaded(3, || Response::Flushed).unwrap() {
+            Response::Flushed => {}
+            other => panic!("unexpected: {other:?}"),
+        }
     }
 
     #[test]

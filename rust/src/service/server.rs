@@ -148,7 +148,10 @@ pub fn spawn(svc: Arc<Service>, opts: &ServerOptions) -> Result<ServerHandle> {
     };
 
     // Periodic checkpoint hook: only when the service has both a
-    // directory and a positive interval configured.
+    // directory and a positive interval configured. With the WAL
+    // attached this is cheap — sealed segments were already spilled
+    // eagerly at publish, so a tick is mostly a manifest roll plus a
+    // WAL truncate, not a bulk segment rewrite.
     let interval = svc.config().checkpoint_interval_s;
     let (ckpt_tx, ckpt) = if interval > 0.0 && svc.checkpoint_dir().is_some() {
         let (tx, rx) = mpsc::channel::<()>();
@@ -312,6 +315,8 @@ pub fn cli_serve(args: &Args) -> Result<()> {
     cfg.serve.retry_after_ms = args.get_u64("retry-after-ms", cfg.serve.retry_after_ms)?;
     cfg.serve.checkpoint_interval_s =
         args.get_f64("checkpoint-interval", cfg.serve.checkpoint_interval_s)?;
+    cfg.stream.wal_group_commit_us =
+        args.get_u64("wal-group-commit-us", cfg.stream.wal_group_commit_us)?;
 
     let checkpoint_dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
     let preload = args.get_usize("preload", 0)?;
@@ -319,9 +324,13 @@ pub fn cli_serve(args: &Args) -> Result<()> {
         let Some(dir) = &checkpoint_dir else {
             bail!("--restore requires --checkpoint-dir");
         };
-        let idx =
+        let mut idx =
             StreamingIndex::restore(dir, cfg.stream.clone(), &RestoreOptions::default())
                 .with_context(|| format!("restore from {dir:?}"))?;
+        // Replay the WAL tail (acknowledged writes after the last
+        // checkpoint) before the listener goes live.
+        idx.attach_durability(dir)
+            .with_context(|| format!("attach WAL in {dir:?}"))?;
         println!(
             "restored from {dir:?}: {} segments, {} live rows",
             idx.stats().live_segments,
@@ -337,7 +346,13 @@ pub fn cli_serve(args: &Args) -> Result<()> {
         if dim == 0 {
             bail!("serve needs --dim <d>, --preload <n> (with --family), or --restore");
         }
-        Arc::new(StreamingIndex::new(dim, cfg.metric, cfg.stream.clone()))
+        let mut idx = StreamingIndex::new(dim, cfg.metric, cfg.stream.clone());
+        if let Some(dir) = &checkpoint_dir {
+            // Durable from the first acknowledged frame.
+            idx.attach_durability(dir)
+                .with_context(|| format!("attach WAL in {dir:?}"))?;
+        }
+        Arc::new(idx)
     };
 
     let svc = Arc::new(
@@ -347,19 +362,18 @@ pub fn cli_serve(args: &Args) -> Result<()> {
         let ds = cfg.family.generate(preload, cfg.seed);
         for i in 0..ds.len() {
             // Preload through the service like any other client; the
-            // gate is idle here, so Overloaded only means seal
-            // pressure — wait it out.
-            loop {
-                match svc.handle(Request::Insert {
+            // gate is idle here, so Overloaded normally means seal
+            // pressure and clears. The retry budget turns a gate that
+            // never clears (e.g. zero configured permits) into a typed
+            // startup error instead of a silent hang.
+            match super::retry_overloaded(super::DEFAULT_RETRY_BUDGET, || {
+                svc.handle(Request::Insert {
                     vector: ds.vector(i).to_vec(),
-                }) {
-                    Response::Inserted { .. } => break,
-                    Response::Overloaded { retry_after_ms, .. } => {
-                        std::thread::sleep(Duration::from_millis(retry_after_ms.max(1)))
-                    }
-                    Response::Error { message } => bail!("preload insert failed: {message}"),
-                    other => bail!("unexpected preload response: {other:?}"),
-                }
+                })
+            })? {
+                Response::Inserted { .. } => {}
+                Response::Error { message } => bail!("preload insert failed: {message}"),
+                other => bail!("unexpected preload response: {other:?}"),
             }
         }
         svc.handle(Request::Flush);

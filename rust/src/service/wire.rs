@@ -163,8 +163,14 @@ fn put_vector(buf: &mut Vec<u8>, v: &[f32]) {
 fn take_vector(cur: &mut Cursor<'_>) -> Result<Vec<f32>> {
     let len = cur.u32()? as usize;
     // The remaining-bytes check makes a hostile length fail before the
-    // allocation, not after.
-    if cur.remaining() < len * 4 {
+    // allocation, not after. checked_mul: on a 32-bit target a crafted
+    // length near usize::MAX/4 would wrap the product under the
+    // remaining() bound and sail past the guard.
+    let fits = len
+        .checked_mul(4)
+        .filter(|&b| cur.remaining() >= b)
+        .is_some();
+    if !fits {
         bail!("vector length {len} exceeds frame payload");
     }
     (0..len).map(|_| cur.f32()).collect()
@@ -339,7 +345,13 @@ pub fn decode_server(raw: &RawFrame) -> Result<ServerFrame> {
         KIND_HITS => {
             let degraded = cur.u8()? != 0;
             let n = cur.u32()? as usize;
-            if cur.remaining() < n * 8 {
+            // checked_mul mirrors take_vector: a wrapping product on
+            // 32-bit targets must not bypass the pre-allocation guard.
+            let fits = n
+                .checked_mul(8)
+                .filter(|&b| cur.remaining() >= b)
+                .is_some();
+            if !fits {
                 bail!("hit count {n} exceeds frame payload");
             }
             let hits = (0..n)

@@ -33,6 +33,7 @@ use super::memtable::MemTable;
 use super::persist::{self, CheckpointStats, Manifest, RestoreOptions, SegmentRecord};
 use super::snapshot::{merge_topk, SegmentSet};
 use super::tombstones::TombstoneSet;
+use super::wal::{self, Wal, WalRecord};
 use crate::config::StreamConfig;
 use crate::dataset::store::MemoryBudget;
 use crate::dataset::{Dataset, SQ8Store};
@@ -41,10 +42,10 @@ use crate::graph::NeighborList;
 use crate::metrics::{Counter, Histogram, MetricsSnapshot, Phase, Registry, Span};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 /// Counters exposed by [`StreamingIndex::stats`].
 ///
@@ -154,6 +155,16 @@ impl StatCounters {
     }
 }
 
+/// Durability hooks installed (at most once) by
+/// [`StreamingIndex::attach_durability`]: the group-committed
+/// write-ahead log plus the checkpoint directory eager seal spills and
+/// WAL truncation target. `None` until attached — a purely in-memory
+/// index pays nothing for the machinery.
+struct Durability {
+    wal: Wal,
+    dir: PathBuf,
+}
+
 /// Why a batch of tombstones is being purged — selects which counter
 /// absorbs them so `deleted == tombstones + reclaimed + seal_dropped`
 /// stays exact.
@@ -208,6 +219,15 @@ struct Shared {
     kernel_ns: Arc<Histogram>,
     /// Full-precision rows faulted for SQ8 exact rerank (cumulative).
     rerank_faults: Arc<Counter>,
+    /// Write-ahead durability, absent until
+    /// [`StreamingIndex::attach_durability`] installs it. `OnceLock`:
+    /// write paths and seal workers probe it without a lock.
+    durability: OnceLock<Durability>,
+    /// Group-commit wait per acknowledged write (recorded only while a
+    /// WAL is attached).
+    wal_commit_ns: Arc<Histogram>,
+    /// Records appended to the WAL (one per acknowledged write).
+    wal_records: Arc<Counter>,
 }
 
 impl Shared {
@@ -240,7 +260,7 @@ impl Shared {
             )
         };
         let rows = gids.len();
-        if !gids.is_empty() {
+        let published: Option<Arc<super::Segment>> = if !gids.is_empty() {
             // Materialize off the insert path: the frozen batch is a
             // chained (or, post-filter, gather) view; the segment is
             // long-lived and its data sits in every beam-search
@@ -264,7 +284,7 @@ impl Shared {
             let _st = self.stats.lock.lock().unwrap();
             let mut cur = self.segments.lock().unwrap();
             let mut v = cur.segments.clone();
-            v.push(seg);
+            v.push(Arc::clone(&seg));
             v.sort_by_key(|s| s.id);
             *cur = Arc::new(SegmentSet { segments: v });
             drop(cur);
@@ -272,12 +292,14 @@ impl Shared {
             let mut sealing = self.sealing.lock().unwrap();
             sealing.retain(|b| b.id != batch.id);
             drop(sealing);
+            Some(seg)
         } else {
             let _st = self.stats.lock.lock().unwrap();
             let mut sealing = self.sealing.lock().unwrap();
             sealing.retain(|b| b.id != batch.id);
             drop(sealing);
-        }
+            None
+        };
         self.sealing_done.notify_all();
         // Rows dropped at seal time never made it into any segment;
         // their tombstones have nothing left to mask, so purge them
@@ -288,6 +310,25 @@ impl Shared {
         // purging first would open a window where a dead row
         // resurfaces from the in-flight list.
         self.purge_tombstones(&dropped, PurgeKind::SealDrop);
+        // Incremental checkpoint: spill files are immutable and keyed
+        // by segment id, so writing the triple the moment a seal
+        // publishes (outside every lock, off the insert path) turns
+        // the next full checkpoint into a cheap manifest roll — it
+        // finds the files already on disk and reuses them. A spill
+        // failure is not fatal: the rows are already WAL-durable, and
+        // the next full checkpoint retries the write.
+        if let (Some(d), Some(seg)) = (self.durability.get(), &published) {
+            match persist::write_segment_files(&d.dir, seg) {
+                Ok(written) => self.obs.event(
+                    "incremental_spill",
+                    &[("segment", seg.id as f64), ("written", written as u8 as f64)],
+                ),
+                Err(_) => self.obs.event(
+                    "incremental_spill",
+                    &[("segment", seg.id as f64), ("failed", 1.0)],
+                ),
+            }
+        }
         self.obs.event(
             "seal_published",
             &[
@@ -434,6 +475,8 @@ impl StreamingIndex {
         let upsert_ns = obs.histogram("stream.upsert_ns");
         let kernel_ns = obs.histogram("distance.kernel_ns");
         let rerank_faults = obs.counter("search.rerank_faults");
+        let wal_commit_ns = obs.histogram("stream.wal_commit_ns");
+        let wal_records = obs.counter("stream.wal_records");
         let shared = Arc::new(Shared {
             cfg,
             metric,
@@ -450,6 +493,9 @@ impl StreamingIndex {
             upsert_ns,
             kernel_ns,
             rerank_faults,
+            durability: OnceLock::new(),
+            wal_commit_ns,
+            wal_records,
         });
         let (seal_tx, seal_workers) = if seal_threads > 0 {
             let (tx, rx) = mpsc::channel::<Arc<SealingBatch>>();
@@ -573,13 +619,26 @@ impl StreamingIndex {
     pub fn insert(&self, v: &[f32]) -> u32 {
         assert_eq!(v.len(), self.dim, "vector dimension mismatch");
         let t = Instant::now();
+        let dur = self.shared.durability.get();
         let frozen;
         let gid;
+        let wal_pos;
         {
             let mut mt = self.memtable.lock().unwrap();
             gid = self.next_gid.fetch_add(1, Ordering::Relaxed);
             mt.insert(v, gid);
             self.shared.stats.inserted.inc();
+            // Enqueue inside the allocation critical section (a pure
+            // memory append) so WAL order matches gid order — replay
+            // relies on it. The durable wait happens after the lock
+            // drops.
+            wal_pos = dur.map(|d| {
+                self.shared.wal_records.inc();
+                d.wal.append(&WalRecord::Insert {
+                    gid,
+                    vector: v.to_vec(),
+                })
+            });
             frozen = if mt.len() >= self.shared.cfg.segment_size {
                 self.freeze_locked(&mut mt)
             } else {
@@ -589,11 +648,29 @@ impl StreamingIndex {
         if let Some(batch) = frozen {
             self.dispatch_seal(batch);
         }
+        if let (Some(d), Some(pos)) = (dur, wal_pos) {
+            self.commit_wal(d, pos);
+        }
         // Timed through the seal dispatch: in inline mode (or under the
         // overload valve) the insert really does pay the build, and the
         // histogram should show that spike.
         self.shared.insert_ns.record_duration(t.elapsed());
         gid
+    }
+
+    /// Wait out the group commit for an enqueued WAL record — the
+    /// write is acknowledged only once this returns.
+    fn commit_wal(&self, d: &Durability, pos: u64) {
+        let t = Instant::now();
+        // A failed WAL write/fsync is unrecoverable (the OS may already
+        // have dropped the dirty pages; re-fsyncing cannot resurrect
+        // them) and the row is already applied in memory — returning
+        // normally would acknowledge an undurable write.
+        d.wal
+            .commit(pos)
+            // PANIC-OK: crashing is the only honest response to a lost fsync.
+            .expect("WAL group commit failed; cannot acknowledge an undurable write");
+        self.shared.wal_commit_ns.record_duration(t.elapsed());
     }
 
     /// Delete a previously inserted vector by global id. Returns `true`
@@ -613,6 +690,7 @@ impl StreamingIndex {
         if gid >= self.next_gid.load(Ordering::Relaxed) {
             return false;
         }
+        let dur = self.shared.durability.get();
         // Resolve AND tombstone under the bindings lock: a concurrent
         // `upsert` of the same gid serializes against it, so either
         // the upsert sees our tombstone (and refuses to resurrect) or
@@ -625,7 +703,21 @@ impl StreamingIndex {
         }
         let internal = b.internal_of(gid);
         let deleted = self.delete_internal(internal);
+        // Enqueue while the bindings lock is still held, so the WAL
+        // replays a delete-vs-upsert race on one gid in the order the
+        // engine serialized it.
+        let wal_pos = if deleted {
+            dur.map(|d| {
+                self.shared.wal_records.inc();
+                d.wal.append(&WalRecord::Delete { gid })
+            })
+        } else {
+            None
+        };
         drop(b);
+        if let (Some(d), Some(pos)) = (dur, wal_pos) {
+            self.commit_wal(d, pos);
+        }
         deleted
     }
 
@@ -662,23 +754,25 @@ impl StreamingIndex {
     /// were newly deleted; unknown and already-dead ids are skipped.
     pub fn delete_batch(&self, gids: &[u32]) -> usize {
         let limit = self.next_gid.load(Ordering::Relaxed);
+        let dur = self.shared.durability.get();
         // Held across the swap, like `delete` (see there for why).
         let b = self.shared.bindings.lock().unwrap();
-        let internals: Vec<u32> = gids
+        let pairs: Vec<(u32, u32)> = gids
             .iter()
             .copied()
             .filter(|&g| g < limit && b.is_user_gid(g))
-            .map(|g| b.internal_of(g))
+            .map(|g| (g, b.internal_of(g)))
             .collect();
-        loop {
+        let mut wal_pos = None;
+        let count = loop {
             let cur = self.tombstones();
-            let fresh: Vec<u32> = internals
+            let fresh: Vec<u32> = pairs
                 .iter()
-                .copied()
+                .map(|&(_, i)| i)
                 .filter(|&g| !cur.contains(g))
                 .collect();
             if fresh.is_empty() {
-                return 0;
+                break 0;
             }
             let next = Arc::new(cur.with_all(&fresh));
             let _st = self.shared.stats.lock.lock().unwrap();
@@ -687,9 +781,27 @@ impl StreamingIndex {
                 *tombs = next;
                 drop(tombs);
                 self.shared.stats.deleted.add(fresh.len() as u64);
-                return fresh.len();
+                // One WAL record per freshly dead gid, enqueued under
+                // the bindings lock like `delete`; a single group
+                // commit at the batch's end position covers them all.
+                if let Some(d) = dur {
+                    let fresh_set: std::collections::HashSet<u32> =
+                        fresh.iter().copied().collect();
+                    for &(g, i) in &pairs {
+                        if fresh_set.contains(&i) {
+                            self.shared.wal_records.inc();
+                            wal_pos = Some(d.wal.append(&WalRecord::Delete { gid: g }));
+                        }
+                    }
+                }
+                break fresh.len();
             }
+        };
+        drop(b);
+        if let (Some(d), Some(pos)) = (dur, wal_pos) {
+            self.commit_wal(d, pos);
         }
+        count
     }
 
     /// Replace the vector stored under `gid` in place: the old row is
@@ -721,6 +833,7 @@ impl StreamingIndex {
 
     fn upsert_inner(&self, gid: u32, v: &[f32]) -> bool {
         assert_eq!(v.len(), self.dim, "vector dimension mismatch");
+        let dur = self.shared.durability.get();
         // Hold the bindings lock across resolve + rebind so concurrent
         // upserts of one gid serialize (each replaces the previous
         // binding, never a stale read of it).
@@ -733,9 +846,10 @@ impl StreamingIndex {
             return false; // deleted; upsert is not an insert
         }
         let frozen;
+        let internal;
         {
             let mut mt = self.memtable.lock().unwrap();
-            let internal = self.next_gid.fetch_add(1, Ordering::Relaxed);
+            internal = self.next_gid.fetch_add(1, Ordering::Relaxed);
             // Publish the binding before the row becomes searchable:
             // any reader that can surface `internal` can already
             // translate it. (Copy-on-write: O(live bindings), the
@@ -760,9 +874,23 @@ impl StreamingIndex {
         // build reaches `purge_tombstones`, which takes this lock.
         self.delete_internal(old);
         self.shared.stats.upserts.inc();
+        // Enqueue under the bindings lock (like `delete`): the record
+        // carries the freshly allocated internal id, so replay rebinds
+        // and tombstones exactly the rows this call did.
+        let wal_pos = dur.map(|d| {
+            self.shared.wal_records.inc();
+            d.wal.append(&WalRecord::Upsert {
+                gid,
+                internal,
+                vector: v.to_vec(),
+            })
+        });
         drop(b);
         if let Some(batch) = frozen {
             self.dispatch_seal(batch);
+        }
+        if let (Some(d), Some(pos)) = (dur, wal_pos) {
+            self.commit_wal(d, pos);
         }
         true
     }
@@ -1065,6 +1193,7 @@ impl StreamingIndex {
         replacement: Option<super::Segment>,
         dropped: &[u32],
     ) {
+        let replacement = replacement.map(Arc::new);
         let mut cur = self.shared.segments.lock().unwrap();
         let mut v: Vec<Arc<super::Segment>> = cur
             .segments
@@ -1072,8 +1201,8 @@ impl StreamingIndex {
             .filter(|s| s.id != remove[0] && s.id != remove[1])
             .cloned()
             .collect();
-        if let Some(m) = replacement {
-            v.push(Arc::new(m));
+        if let Some(m) = &replacement {
+            v.push(Arc::clone(m));
         }
         v.sort_by_key(|s| s.id);
         *cur = Arc::new(SegmentSet { segments: v });
@@ -1081,6 +1210,21 @@ impl StreamingIndex {
         // The purge credits `reclaimed` under the stats lock.
         self.shared.purge_tombstones(dropped, PurgeKind::Reclaim);
         self.shared.stats.compactions.inc();
+        // Compaction outputs eager-spill like seals do (see
+        // `build_and_publish`): the next full checkpoint reuses the
+        // triple instead of rewriting the (large) fused segment.
+        if let (Some(d), Some(seg)) = (self.shared.durability.get(), &replacement) {
+            match persist::write_segment_files(&d.dir, seg) {
+                Ok(written) => self.shared.obs.event(
+                    "incremental_spill",
+                    &[("segment", seg.id as f64), ("written", written as u8 as f64)],
+                ),
+                Err(_) => self.shared.obs.event(
+                    "incremental_spill",
+                    &[("segment", seg.id as f64), ("failed", 1.0)],
+                ),
+            }
+        }
     }
 
     /// The dead-fraction trigger's candidate scan: the first eligible
@@ -1166,9 +1310,21 @@ impl StreamingIndex {
         // (binding without tombstone, or row without binding). Only
         // O(1) snapshots are taken under the locks; the row payload
         // copies happen after release.
-        let (next_gid, counts, mem_snap, sealing, snap, tombs, b) = {
+        let (next_gid, counts, mem_snap, sealing, snap, tombs, b, wal_cut) = {
             let bindings_guard = self.shared.bindings.lock().unwrap();
             let mt = self.memtable.lock().unwrap();
+            // The WAL cut rides the same critical section: every write
+            // path enqueues its record inside one of these two locks,
+            // so records below this position are exactly the
+            // operations the manifest captures — truncating through it
+            // once the manifest is durable drops nothing that is not
+            // already checkpointed. Only taken when the WAL lives in
+            // *this* directory; a checkpoint elsewhere must not
+            // truncate the attached log.
+            let wal_cut = match self.shared.durability.get() {
+                Some(d) if d.dir == dir => Some(d.wal.cut_pos()),
+                _ => None,
+            };
             // Stats lock inside the cut (bindings → memtable → stats;
             // nothing ever takes memtable or bindings under stats), so
             // the manifest's counters agree with the captured sources.
@@ -1189,7 +1345,7 @@ impl StreamingIndex {
             let snap = self.snapshot();
             let tombs = self.tombstones();
             let b = Arc::clone(&bindings_guard);
-            (next_gid, counts, mem_snap, sealing, snap, tombs, b)
+            (next_gid, counts, mem_snap, sealing, snap, tombs, b, wal_cut)
         };
         let mut rows = mem_snap.rows();
         let seg_ids: std::collections::HashSet<u64> =
@@ -1250,6 +1406,16 @@ impl StreamingIndex {
             memtable: rows,
         };
         let stats = persist::write_checkpoint(dir, &manifest, &snap)?;
+        // Only after the manifest is durably renamed may the covered
+        // WAL prefix go: a crash between the two replays the (now
+        // redundant) records idempotently, never loses them.
+        if let (Some(d), Some(cut)) = (self.shared.durability.get(), wal_cut) {
+            let dropped = d.wal.truncate_through(cut)?;
+            self.shared.obs.event(
+                "wal_truncate",
+                &[("cut_pos", cut as f64), ("bytes_dropped", dropped as f64)],
+            );
+        }
         self.shared.obs.event(
             "checkpoint",
             &[
@@ -1406,6 +1572,186 @@ impl StreamingIndex {
             ],
         );
         Ok(index)
+    }
+
+    /// Attach a group-committed write-ahead log in `dir`, replaying
+    /// any existing tail first. After this returns, every `insert` /
+    /// `delete` / `upsert` is fsync-durable (batched under the
+    /// `wal_group_commit_us` window) **before** the call returns — the
+    /// acknowledgment is the durability contract. [`Self::checkpoint`]
+    /// calls against the same `dir` truncate the covered prefix.
+    ///
+    /// Call it on a fresh index (the WAL of a crashed, never-
+    /// checkpointed log is adopted and replayed) or on one restored
+    /// from `dir` (the tail beyond the manifest replays idempotently:
+    /// ids are never reused, so records the manifest already covers
+    /// are skipped by their id, and replayed deletes re-tombstone at
+    /// most what is live). Attaching over rows the log did not
+    /// produce, or to a directory holding someone else's checkpoint,
+    /// is refused — that data could not be recovered coherently.
+    pub fn attach_durability(&mut self, dir: &Path) -> Result<()> {
+        if self.shared.durability.get().is_some() {
+            bail!("durability already attached");
+        }
+        std::fs::create_dir_all(dir)?;
+        let window = Duration::from_micros(self.shared.cfg.wal_group_commit_us);
+        let fresh = self.next_gid.load(Ordering::Relaxed) == 0
+            && self.shared.stats.inserted.get() == 0;
+        let wal = if dir.join(wal::WAL_NAME).exists() {
+            let (wal, records) = Wal::open(dir, window)?;
+            if wal.log_id() != self.log_id {
+                // A fresh index may adopt an orphaned log (crash
+                // before the first checkpoint); anything else risks
+                // interleaving two histories.
+                if !fresh {
+                    bail!(
+                        "WAL in {dir:?} belongs to log {:#018x}; this index \
+                         ({:#018x}) already holds rows — restore from the \
+                         checkpoint before attaching",
+                        wal.log_id(),
+                        self.log_id
+                    );
+                }
+                if persist::read_manifest(dir).is_ok() {
+                    bail!(
+                        "{dir:?} holds a checkpoint manifest; restore from it \
+                         before attaching durability, or acknowledged rows \
+                         captured by the manifest would be lost"
+                    );
+                }
+                self.log_id = wal.log_id();
+            }
+            // The id frontier the already-loaded state covers: insert/
+            // upsert records below it are no-ops (ids are never
+            // reused), which makes replay idempotent across a crash
+            // between manifest publish and WAL truncation.
+            let cut_gid = self.next_gid.load(Ordering::Relaxed);
+            let total = records.len();
+            let mut applied = 0usize;
+            for rec in records {
+                applied += usize::from(self.replay_record(rec, cut_gid)?);
+            }
+            self.shared.obs.event(
+                "wal_replay",
+                &[("records", total as f64), ("applied", applied as f64)],
+            );
+            wal
+        } else {
+            // No WAL, but a manifest from another log: the caller
+            // forgot to restore. Writing a fresh log here would let a
+            // later checkpoint shadow the existing one.
+            if fresh {
+                if let Ok(m) = persist::read_manifest(dir) {
+                    if m.log_id != self.log_id {
+                        bail!(
+                            "{dir:?} holds a checkpoint of log {:#018x}; \
+                             restore from it before attaching durability",
+                            m.log_id
+                        );
+                    }
+                }
+            }
+            let wal = Wal::create(dir, self.log_id, window)?;
+            self.shared.obs.event(
+                "wal_replay",
+                &[("records", 0.0), ("applied", 0.0)],
+            );
+            wal
+        };
+        if self
+            .shared
+            .durability
+            .set(Durability {
+                wal,
+                dir: dir.to_path_buf(),
+            })
+            .is_err()
+        {
+            bail!("durability already attached");
+        }
+        Ok(())
+    }
+
+    /// Re-apply one WAL record during [`Self::attach_durability`].
+    /// Runs before the `Durability` hooks are installed, so nothing
+    /// here re-appends to the log. Returns whether the record changed
+    /// state (`false` = already covered by the restored manifest).
+    fn replay_record(&self, rec: WalRecord, cut_gid: u32) -> Result<bool> {
+        match rec {
+            WalRecord::Insert { gid, vector } => {
+                if gid < cut_gid {
+                    return Ok(false);
+                }
+                if vector.len() != self.dim {
+                    bail!(
+                        "WAL insert for gid {gid} has dim {}, index has {}",
+                        vector.len(),
+                        self.dim
+                    );
+                }
+                let frozen = {
+                    let mut mt = self.memtable.lock().unwrap();
+                    let next = self.next_gid.load(Ordering::Relaxed);
+                    self.next_gid.store(next.max(gid + 1), Ordering::Relaxed);
+                    mt.insert(&vector, gid);
+                    self.shared.stats.inserted.inc();
+                    if mt.len() >= self.shared.cfg.segment_size {
+                        self.freeze_locked(&mut mt)
+                    } else {
+                        None
+                    }
+                };
+                if let Some(batch) = frozen {
+                    self.dispatch_seal(batch);
+                }
+                Ok(true)
+            }
+            // Naturally idempotent: resolves the gid's *current* row
+            // and tombstones it only if still live — a record already
+            // covered by the manifest finds it dead and no-ops, and a
+            // replayed delete can never resurrect anything.
+            WalRecord::Delete { gid } => Ok(self.delete_gid(gid)),
+            WalRecord::Upsert { gid, internal, vector } => {
+                if internal < cut_gid {
+                    return Ok(false);
+                }
+                if vector.len() != self.dim {
+                    bail!(
+                        "WAL upsert for gid {gid} has dim {}, index has {}",
+                        vector.len(),
+                        self.dim
+                    );
+                }
+                // The single-threaded mirror of `upsert_inner`, forcing
+                // the recorded internal id instead of allocating one.
+                let mut b = self.shared.bindings.lock().unwrap();
+                let old = b.internal_of(gid);
+                let frozen = {
+                    let mut mt = self.memtable.lock().unwrap();
+                    let next = self.next_gid.load(Ordering::Relaxed);
+                    self.next_gid
+                        .store(next.max(internal + 1), Ordering::Relaxed);
+                    let mut nextb = (**b).clone();
+                    nextb.by_internal.insert(internal, gid);
+                    nextb.current.insert(gid, internal);
+                    *b = Arc::new(nextb);
+                    mt.insert(&vector, internal);
+                    self.shared.stats.inserted.inc();
+                    if mt.len() >= self.shared.cfg.segment_size {
+                        self.freeze_locked(&mut mt)
+                    } else {
+                        None
+                    }
+                };
+                self.delete_internal(old);
+                self.shared.stats.upserts.inc();
+                drop(b);
+                if let Some(batch) = frozen {
+                    self.dispatch_seal(batch);
+                }
+                Ok(true)
+            }
+        }
     }
 
     /// Spawn a background compaction thread polling `tick()`; idle

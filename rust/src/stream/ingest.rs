@@ -11,7 +11,10 @@ use crate::config::{ConfigMap, RunConfig, ServeConfig, StreamConfig};
 use crate::dataset::{io, Dataset};
 use crate::distance::Metric;
 use crate::eval::recall::{search_recall, GroundTruth};
-use crate::service::{MetricsDumper, Request, Response, Service};
+use crate::service::{
+    retry_overloaded, MetricsDumper, Request, Response, RetriesExhausted, Service,
+    DEFAULT_RETRY_BUDGET,
+};
 use crate::util::Rng;
 use anyhow::{Context, Result};
 use std::sync::Arc;
@@ -112,7 +115,7 @@ pub fn stream_ingest(
     metric: Metric,
     opts: &IngestOptions,
     observer: &mut dyn FnMut(&IngestReportRow),
-) -> IngestSummary {
+) -> Result<IngestSummary> {
     let index = Arc::new(StreamingIndex::new(ds.dim, metric, cfg.clone()));
     stream_ingest_into(&index, ds, queries, opts, observer)
 }
@@ -127,23 +130,19 @@ pub fn stream_ingest_into(
     queries: &Dataset,
     opts: &IngestOptions,
     observer: &mut dyn FnMut(&IngestReportRow),
-) -> IngestSummary {
+) -> Result<IngestSummary> {
     let svc = Service::with_options(Arc::clone(index), opts.serve);
     stream_ingest_service(&svc, ds, queries, opts, observer)
 }
 
 /// Issue one ingest mutation through the service, sleeping out
-/// `Overloaded` backpressure (the driver is the only client, so the
-/// overload is seal/memory pressure and always clears).
-fn ingest_op(svc: &Service, req: Request) -> Response {
-    loop {
-        match svc.handle(req.clone()) {
-            Response::Overloaded { retry_after_ms, .. } => {
-                std::thread::sleep(Duration::from_millis(retry_after_ms.max(1)));
-            }
-            resp => return resp,
-        }
-    }
+/// `Overloaded` backpressure (the driver is usually the only client,
+/// so the overload is seal/memory pressure and normally clears). The
+/// retry budget bounds the pathological case — a gate that never
+/// clears (e.g. zero permits) surfaces [`RetriesExhausted`] instead
+/// of spinning the driver forever.
+fn ingest_op(svc: &Service, req: Request) -> Result<Response, RetriesExhausted> {
+    retry_overloaded(DEFAULT_RETRY_BUDGET, || svc.handle(req.clone()))
 }
 
 /// The ingest/churn driver proper: every insert, delete, and measured
@@ -156,7 +155,7 @@ pub fn stream_ingest_service(
     queries: &Dataset,
     opts: &IngestOptions,
     observer: &mut dyn FnMut(&IngestReportRow),
-) -> IngestSummary {
+) -> Result<IngestSummary> {
     assert!(!ds.is_empty(), "nothing to ingest");
     assert!(
         (0.0..1.0).contains(&opts.delete_rate),
@@ -179,7 +178,7 @@ pub fn stream_ingest_service(
             Request::Insert {
                 vector: ds.vector(i).to_vec(),
             },
-        ) {
+        )? {
             Response::Inserted { gid } => gid,
             other => panic!("unexpected insert response: {other:?}"),
         };
@@ -189,7 +188,7 @@ pub fn stream_ingest_service(
             && (rng.gen_range(1_000_000) as f64) < opts.delete_rate * 1e6
         {
             let victim = live.swap_remove(rng.gen_range(live.len()));
-            match ingest_op(svc, Request::Delete { gid: victim }) {
+            match ingest_op(svc, Request::Delete { gid: victim })? {
                 Response::Deleted { existed } => {
                     assert!(existed, "victim {victim} was live")
                 }
@@ -230,7 +229,7 @@ pub fn stream_ingest_service(
     let insert_lat = index.metrics().histogram("stream.insert_ns").snapshot();
     let search_lat = index.metrics().histogram("stream.search_ns").snapshot();
     let stats = index.stats();
-    IngestSummary {
+    Ok(IngestSummary {
         final_recall: final_row.recall,
         final_qps: final_row.qps,
         insert_rate: ds.len() as f64 / total_secs.max(1e-9),
@@ -243,7 +242,7 @@ pub fn stream_ingest_service(
         compactions: stats.compactions,
         segments: stats.live_segments,
         rows,
-    }
+    })
 }
 
 /// Answer the query batch against the live index and score it against
@@ -358,6 +357,8 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
         cfg.stream.quantized_tier = true;
     }
     cfg.stream.rerank_slack = args.get_usize("rerank-slack", cfg.stream.rerank_slack)?;
+    cfg.stream.wal_group_commit_us =
+        args.get_u64("wal-group-commit-us", cfg.stream.wal_group_commit_us)?;
 
     let ds = match args.get("file") {
         Some(path) => {
@@ -426,7 +427,7 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
         let Some(dir) = &checkpoint_dir else {
             anyhow::bail!("--restore requires --checkpoint-dir");
         };
-        let idx = StreamingIndex::restore(
+        let mut idx = StreamingIndex::restore(
             dir,
             cfg.stream.clone(),
             &super::persist::RestoreOptions::default(),
@@ -438,6 +439,10 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
             idx.dim(),
             ds.dim
         );
+        // Replay the WAL tail (acknowledged writes after the last
+        // checkpoint) before the driver sees the index.
+        idx.attach_durability(dir)
+            .with_context(|| format!("attach WAL in {dir:?}"))?;
         let st = idx.stats();
         println!(
             "restored from {dir:?}: {} segments, {} live rows, {} pending tombstones",
@@ -447,7 +452,14 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
         );
         Arc::new(idx)
     } else {
-        Arc::new(StreamingIndex::new(ds.dim, cfg.metric, cfg.stream.clone()))
+        let mut idx = StreamingIndex::new(ds.dim, cfg.metric, cfg.stream.clone());
+        if let Some(dir) = &checkpoint_dir {
+            // Durable from the first insert: acknowledged rows survive
+            // a crash before the first checkpoint.
+            idx.attach_durability(dir)
+                .with_context(|| format!("attach WAL in {dir:?}"))?;
+        }
+        Arc::new(idx)
     };
     // A restored log's global ids do not align with this run's row
     // numbers, so recall-vs-truth would mis-score; ingest unmeasured.
@@ -480,7 +492,7 @@ pub fn cli_stream(args: &Args) -> Result<IngestSummary> {
              recall@{} {:.4}",
             row.elapsed_s, row.inserted, row.deleted, row.segments, row.qps, opts.topk, row.recall
         );
-    });
+    })?;
     println!(
         "final: recall@{} {:.4}  inserts/s {:.0}  insert p50/p99 {:.2}/{:.2}ms  \
          search p50/p99 {:.2}/{:.2}ms  deleted {}  compactions {}  live segments {}  \
@@ -556,7 +568,8 @@ mod tests {
                 ..Default::default()
             },
             &mut |_| seen += 1,
-        );
+        )
+        .unwrap();
         // 200/400 mid-ingest rows plus the final row.
         assert_eq!(summary.rows.len(), 3);
         assert_eq!(seen, 3);
@@ -592,10 +605,35 @@ mod tests {
                 ..Default::default()
             },
             &mut |_| {},
-        );
+        )
+        .unwrap();
         // 50 inserts at 1000/s >= 50ms of wall clock.
         assert!(summary.total_secs >= 0.045, "took {}", summary.total_secs);
         assert!(summary.insert_rate <= 1200.0);
+    }
+
+    #[test]
+    fn saturated_gate_surfaces_a_typed_error_not_an_infinite_spin() {
+        use crate::service::RequestClass;
+        let index = Arc::new(StreamingIndex::new(4, Metric::L2, StreamConfig::default()));
+        // Zero ingest permits with no pressure: Overloaded forever.
+        let svc = Service::with_options(
+            index,
+            ServeConfig {
+                max_inflight_ingest: 0,
+                retry_after_ms: 0,
+                ..ServeConfig::default()
+            },
+        );
+        let err = ingest_op(
+            &svc,
+            Request::Insert {
+                vector: vec![0.0; 4],
+            },
+        )
+        .unwrap_err();
+        assert_eq!(err.class, RequestClass::Insert);
+        assert_eq!(err.attempts, crate::service::DEFAULT_RETRY_BUDGET);
     }
 
     #[test]
@@ -696,7 +734,8 @@ mod tests {
             // measure() panics if a search ever surfaces a deleted id,
             // so the observer doubles as the safety assertion.
             &mut |_| {},
-        );
+        )
+        .unwrap();
         assert!(summary.deleted > 100, "deletes ran: {}", summary.deleted);
         assert_eq!(summary.segments, 1);
         // Reclaim, not masking: the compacted index holds live rows only.

@@ -31,6 +31,11 @@
 //!   [`StreamingIndex::restore`] rebuilds the exact
 //!   memtable→segments→tombstones state — optionally demand-paged
 //!   under a `MemoryBudget`.
+//! - [`wal`] — the group-committed `KWAL` write-ahead row log:
+//!   every `insert`/`delete`/`upsert` is appended and fsynced (once
+//!   per group-commit window, not per op) before it is acknowledged,
+//!   so a crash between checkpoints loses nothing; `restore` replays
+//!   the WAL tail idempotently and `checkpoint` truncates it.
 //! - [`ingest`] — the rate-controlled ingest/churn driver behind the
 //!   CLI `stream` subcommand, the smoke test, and the example.
 //!
@@ -48,6 +53,7 @@ pub mod persist;
 pub mod segment;
 pub mod snapshot;
 pub mod tombstones;
+pub mod wal;
 
 pub use compactor::{Compaction, Compactor};
 pub use engine::{CompactorHandle, StreamStats, StreamingIndex};
@@ -59,3 +65,4 @@ pub use persist::{CheckpointStats, Manifest, RestoreOptions, SegmentRecord};
 pub use segment::Segment;
 pub use snapshot::{merge_topk, SegmentSet};
 pub use tombstones::TombstoneSet;
+pub use wal::{Wal, WalRecord};

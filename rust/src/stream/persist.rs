@@ -709,6 +709,14 @@ fn fsync_dir(dir: &Path) {
 /// Remove `seg-*` files whose id is not referenced by `manifest`
 /// (compacted-away generations from earlier checkpoints). Only safe
 /// after the manifest swap has been published.
+///
+/// Files with `id >= manifest.next_segment_id` are preserved: segment
+/// ids are allocated monotonically, so such a file is an *eager*
+/// incremental spill of a segment sealed or compacted after this
+/// manifest's cut (the engine writes triples the moment a seal
+/// publishes when a WAL is attached) — deleting it would undo that
+/// work and can race the spill itself. Stale generations always carry
+/// ids below the cut's high-water mark.
 fn gc_stale_segments(dir: &Path, manifest: &Manifest) -> Result<usize> {
     let live: std::collections::HashSet<u64> =
         manifest.segments.iter().map(|r| r.id).collect();
@@ -734,6 +742,9 @@ fn gc_stale_segments(dir: &Path, manifest: &Manifest) -> Result<usize> {
         let Ok(id) = id_str.parse::<u64>() else {
             continue;
         };
+        if id >= manifest.next_segment_id {
+            continue; // post-cut eager spill, not stale
+        }
         if !live.contains(&id) && std::fs::remove_file(entry.path()).is_ok() {
             removed += 1;
         }

@@ -1,0 +1,573 @@
+//! Group-committed write-ahead row log (`KWAL`).
+//!
+//! The checkpoint manifest (`stream::persist`) is a point-in-time cut:
+//! everything between two cuts lives only in memory and dies with the
+//! process. This module closes that window. Every `insert` / `delete` /
+//! `upsert` appends one CRC-framed record here and **blocks until the
+//! record is fsynced** before the engine acknowledges the call — the
+//! acknowledgment *is* the durability contract. To keep that affordable
+//! at full ingest speed, appends from concurrent writers batch under a
+//! group-commit window: the first committer becomes the *leader*,
+//! sleeps `group_commit` to let more appends pile up, then writes and
+//! fsyncs the whole batch with a single syscall pair while the other
+//! committers wait on a condvar. One fsync pays for the whole group.
+//!
+//! On-disk layout (little-endian throughout, like every wire format in
+//! this crate):
+//!
+//! ```text
+//! header   magic "KWAL" (u32)  version (u16)  reserved (u16 = 0)
+//!          log_id (u64)        base_pos (u64)
+//! record   payload_len (u32)   crc32(payload) (u32)   payload
+//! payload  kind (u8) ...
+//!   kind 0 insert  gid (u32)  dim (u32)  f32 * dim
+//!   kind 1 delete  gid (u32)
+//!   kind 2 upsert  gid (u32)  internal (u32)  dim (u32)  f32 * dim
+//! ```
+//!
+//! Positions are *logical*: `base_pos` is the logical offset of the
+//! first record byte after the header, so positions stay monotonic
+//! across truncations — a committer can hold a position across a
+//! concurrent checkpoint without ambiguity. A truncated or CRC-failing
+//! record is a *torn tail* (the crash hit mid group commit) and marks a
+//! clean end-of-log: no record behind it was ever acknowledged, because
+//! the group's fsync never returned.
+//!
+//! Crash recovery replays the tail on top of the restored manifest; the
+//! engine's ids-never-reused invariant makes re-applied records no-ops
+//! (see `StreamingIndex::attach_durability`). At checkpoint the engine
+//! reads [`Wal::cut_pos`] inside its cut critical section and calls
+//! [`Wal::truncate_through`] once the manifest is durable — records
+//! captured by the manifest are dropped, records appended during the
+//! (long) spill phase survive.
+//!
+//! The file is named [`WAL_NAME`], deliberately outside the `seg-*`
+//! namespace that `persist::gc_stale_segments` reaps.
+
+use crate::util::crc32;
+use crate::util::le::{Cursor, PutLe};
+use anyhow::{bail, Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// `"KWAL"` as a big-endian u32, written little-endian like every magic
+/// in this crate (`KNG3`, `KNM1`, `KSRV`).
+pub const WAL_MAGIC: u32 = 0x4B57_414C;
+pub const WAL_VERSION: u16 = 1;
+/// File name inside the checkpoint directory. Must never match the
+/// `seg-*` spill namespace: `gc_stale_segments` deletes unreferenced
+/// files with that prefix.
+pub const WAL_NAME: &str = "WAL";
+const HEADER_LEN: u64 = 24;
+
+/// One logged row operation, mirroring the engine's write API. Insert
+/// and upsert carry the allocated ids so replay re-applies under the
+/// *same* ids the caller was acknowledged with.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WalRecord {
+    Insert { gid: u32, vector: Vec<f32> },
+    Delete { gid: u32 },
+    Upsert { gid: u32, internal: u32, vector: Vec<f32> },
+}
+
+const KIND_INSERT: u8 = 0;
+const KIND_DELETE: u8 = 1;
+const KIND_UPSERT: u8 = 2;
+
+/// Serialize the 24-byte file header.
+pub fn header_bytes(log_id: u64, base_pos: u64) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN as usize);
+    out.put_u32(WAL_MAGIC);
+    out.put_u16(WAL_VERSION);
+    out.put_u16(0);
+    out.put_u64(log_id);
+    out.put_u64(base_pos);
+    out
+}
+
+/// Serialize one record as a full CRC frame (length + crc + payload).
+pub fn encode_record(rec: &WalRecord) -> Vec<u8> {
+    let mut payload = Vec::new();
+    match rec {
+        WalRecord::Insert { gid, vector } => {
+            payload.put_u8(KIND_INSERT);
+            payload.put_u32(*gid);
+            payload.put_u32(vector.len() as u32);
+            for &v in vector {
+                payload.put_f32(v);
+            }
+        }
+        WalRecord::Delete { gid } => {
+            payload.put_u8(KIND_DELETE);
+            payload.put_u32(*gid);
+        }
+        WalRecord::Upsert { gid, internal, vector } => {
+            payload.put_u8(KIND_UPSERT);
+            payload.put_u32(*gid);
+            payload.put_u32(*internal);
+            payload.put_u32(vector.len() as u32);
+            for &v in vector {
+                payload.put_f32(v);
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(8 + payload.len());
+    out.put_u32(payload.len() as u32);
+    out.put_u32(crc32(&payload));
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn decode_payload(payload: &[u8]) -> Result<WalRecord> {
+    let mut cur = Cursor::new(payload, "WAL record");
+    let rec = match cur.u8()? {
+        KIND_INSERT => {
+            let gid = cur.u32()?;
+            let dim = cur.u32()? as usize;
+            if cur.remaining() != dim * 4 {
+                bail!("WAL insert record dim {dim} disagrees with payload length");
+            }
+            let mut vector = Vec::with_capacity(dim);
+            for _ in 0..dim {
+                vector.push(cur.f32()?);
+            }
+            WalRecord::Insert { gid, vector }
+        }
+        KIND_DELETE => WalRecord::Delete { gid: cur.u32()? },
+        KIND_UPSERT => {
+            let gid = cur.u32()?;
+            let internal = cur.u32()?;
+            let dim = cur.u32()? as usize;
+            if cur.remaining() != dim * 4 {
+                bail!("WAL upsert record dim {dim} disagrees with payload length");
+            }
+            let mut vector = Vec::with_capacity(dim);
+            for _ in 0..dim {
+                vector.push(cur.f32()?);
+            }
+            WalRecord::Upsert { gid, internal, vector }
+        }
+        k => bail!("unknown WAL record kind {k}"),
+    };
+    cur.finish()?;
+    Ok(rec)
+}
+
+/// A decoded log: header fields, every intact record, and how far the
+/// valid prefix reaches (`valid_len < bytes.len()` means a torn tail).
+pub struct WalContents {
+    pub log_id: u64,
+    pub base_pos: u64,
+    pub records: Vec<WalRecord>,
+    /// Byte length of the valid prefix (header + intact records).
+    pub valid_len: u64,
+}
+
+/// Parse a WAL image. A malformed *header* is an error (the file is not
+/// a WAL); a malformed record merely ends the log — the crash hit mid
+/// group commit, and nothing at or past that point was acknowledged.
+pub fn decode_wal(bytes: &[u8]) -> Result<WalContents> {
+    let mut cur = Cursor::new(bytes, "WAL header");
+    let magic = cur.u32()?;
+    if magic != WAL_MAGIC {
+        bail!("bad WAL magic {magic:#010x} (want {WAL_MAGIC:#010x})");
+    }
+    let version = cur.u16()?;
+    if version != WAL_VERSION {
+        bail!("unsupported WAL version {version} (want {WAL_VERSION})");
+    }
+    cur.u16()?; // reserved
+    let log_id = cur.u64()?;
+    let base_pos = cur.u64()?;
+    let mut records = Vec::new();
+    let mut valid_len = cur.pos() as u64;
+    loop {
+        // Each frame parses on a scratch cursor; any failure — short
+        // frame, CRC mismatch, garbled payload — is the torn tail.
+        let rest = &bytes[valid_len as usize..];
+        if rest.is_empty() {
+            break;
+        }
+        let mut frame = Cursor::new(rest, "WAL frame");
+        let parsed = (|| -> Result<(WalRecord, usize)> {
+            let len = frame.u32()? as usize;
+            let crc = frame.u32()?;
+            let payload = frame.take(len)?;
+            if crc32(payload) != crc {
+                bail!("WAL record CRC mismatch");
+            }
+            Ok((decode_payload(payload)?, frame.pos()))
+        })();
+        match parsed {
+            Ok((rec, consumed)) => {
+                records.push(rec);
+                valid_len += consumed as u64;
+            }
+            Err(_) => break,
+        }
+    }
+    Ok(WalContents {
+        log_id,
+        base_pos,
+        records,
+        valid_len,
+    })
+}
+
+struct WalState {
+    /// Encoded frames appended but not yet handed to a leader.
+    pending: Vec<u8>,
+    /// Logical position after the last *enqueued* byte.
+    next_pos: u64,
+    /// Logical position through which the file is fsynced.
+    durable_pos: u64,
+    /// Whether a leader is currently running a group flush.
+    leader: bool,
+}
+
+struct WalFile {
+    file: File,
+    /// Logical position of the first record byte in this file (bumped
+    /// by [`Wal::truncate_through`]).
+    base_pos: u64,
+}
+
+/// The group-committed log handle. `&self` throughout: appends run
+/// under the engine's own write locks, flushes and truncations
+/// serialize on the internal file mutex.
+pub struct Wal {
+    dir: PathBuf,
+    path: PathBuf,
+    log_id: u64,
+    group_commit: Duration,
+    /// Append/commit bookkeeping. Terminal: nothing is ever acquired
+    /// (and no I/O runs) while it is held — engine write paths enqueue
+    /// under their own locks with only this lock nested inside.
+    // LOCK-ORDER: stream.wal terminal
+    state: Mutex<WalState>,
+    /// Committers park here until the leader's fsync covers them.
+    done: Condvar,
+    /// The file handle + its logical origin. Held across write+fsync
+    /// (that is its whole job) and never while `state` is held.
+    // LOCK-ORDER: stream.wal_file terminal allow-io
+    file: Mutex<WalFile>,
+}
+
+impl Wal {
+    /// Create a fresh log at `dir/WAL` (atomically: temp + rename, so a
+    /// crash mid-create can never leave a torn header behind).
+    pub fn create(dir: &Path, log_id: u64, group_commit: Duration) -> Result<Wal> {
+        let path = dir.join(WAL_NAME);
+        let tmp = dir.join("WAL.tmp");
+        std::fs::write(&tmp, header_bytes(log_id, 0))
+            .with_context(|| format!("writing {tmp:?}"))?;
+        File::open(&tmp)?.sync_all()?;
+        std::fs::rename(&tmp, &path)?;
+        fsync_dir(dir);
+        Self::from_parts(dir, path, log_id, 0, HEADER_LEN, group_commit)
+    }
+
+    /// Open an existing log, returning the intact records for replay.
+    /// A torn tail is chopped off in place — nothing in it was ever
+    /// acknowledged, and leaving it would corrupt later appends.
+    pub fn open(dir: &Path, group_commit: Duration) -> Result<(Wal, Vec<WalRecord>)> {
+        let path = dir.join(WAL_NAME);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        let contents = decode_wal(&bytes).with_context(|| format!("parsing {path:?}"))?;
+        if contents.valid_len < bytes.len() as u64 {
+            let f = OpenOptions::new().write(true).open(&path)?;
+            f.set_len(contents.valid_len)?;
+            f.sync_all()?;
+        }
+        let wal = Self::from_parts(
+            dir,
+            path,
+            contents.log_id,
+            contents.base_pos,
+            contents.valid_len,
+            group_commit,
+        )?;
+        Ok((wal, contents.records))
+    }
+
+    fn from_parts(
+        dir: &Path,
+        path: PathBuf,
+        log_id: u64,
+        base_pos: u64,
+        valid_len: u64,
+        group_commit: Duration,
+    ) -> Result<Wal> {
+        let file = OpenOptions::new().append(true).open(&path)?;
+        let end = base_pos + (valid_len - HEADER_LEN);
+        Ok(Wal {
+            dir: dir.to_path_buf(),
+            path,
+            log_id,
+            group_commit,
+            state: Mutex::new(WalState {
+                pending: Vec::new(),
+                next_pos: end,
+                durable_pos: end,
+                leader: false,
+            }),
+            done: Condvar::new(),
+            file: Mutex::new(WalFile { file, base_pos }),
+        })
+    }
+
+    pub fn log_id(&self) -> u64 {
+        self.log_id
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Enqueue one record; returns the logical end position to hand to
+    /// [`Wal::commit`]. Pure memory append — safe to call inside the
+    /// engine critical section that linearizes the operation, which is
+    /// exactly what makes WAL order match engine order for same-gid
+    /// operations.
+    pub fn append(&self, rec: &WalRecord) -> u64 {
+        let frame = encode_record(rec);
+        let mut st = self.state.lock().unwrap();
+        st.pending.extend_from_slice(&frame);
+        st.next_pos += frame.len() as u64;
+        st.next_pos
+    }
+
+    /// Block until everything through `pos` is durable. The first
+    /// committer to arrive leads: it sleeps the group-commit window
+    /// (outside every lock), takes the accumulated batch, writes and
+    /// fsyncs it in one go, then wakes the group.
+    pub fn commit(&self, pos: u64) -> Result<()> {
+        loop {
+            let mut st = self.state.lock().unwrap();
+            if st.durable_pos >= pos {
+                return Ok(());
+            }
+            if st.leader {
+                let _st = self.done.wait(st).unwrap();
+                continue;
+            }
+            st.leader = true;
+            drop(st);
+            if !self.group_commit.is_zero() {
+                std::thread::sleep(self.group_commit);
+            }
+            let (batch, end_pos) = {
+                let mut st = self.state.lock().unwrap();
+                let batch = std::mem::take(&mut st.pending);
+                (batch, st.next_pos)
+            };
+            let res = self.flush_batch(&batch);
+            let mut st2 = self.state.lock().unwrap();
+            st2.leader = false;
+            match &res {
+                Ok(()) => st2.durable_pos = end_pos,
+                Err(_) => {
+                    // Put the batch back in front of anything enqueued
+                    // meanwhile, so a retry re-writes it in order.
+                    let mut restored = batch;
+                    restored.append(&mut st2.pending);
+                    st2.pending = restored;
+                }
+            }
+            drop(st2);
+            self.done.notify_all();
+            res?;
+        }
+    }
+
+    /// Write + fsync one batch. On error the file is clipped back to
+    /// its pre-write length so a torn frame never precedes a later one.
+    fn flush_batch(&self, batch: &[u8]) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        let mut f = self.file.lock().unwrap();
+        let before = f.file.metadata()?.len();
+        let res = f
+            .file
+            .write_all(batch)
+            .and_then(|()| f.file.sync_data())
+            .with_context(|| format!("group-committing {:?}", self.path));
+        if res.is_err() {
+            let _ = f.file.set_len(before);
+        }
+        res
+    }
+
+    /// The logical position a checkpoint cut should record: everything
+    /// enqueued so far. Read it inside the engine's cut critical
+    /// section so record-vs-manifest attribution is exact.
+    pub fn cut_pos(&self) -> u64 {
+        self.state.lock().unwrap().next_pos
+    }
+
+    /// Drop every record below `cut` (they are covered by a durable
+    /// manifest); records at or past `cut` survive with their logical
+    /// positions intact. Rewrites the file atomically (temp + rename)
+    /// with `base_pos = cut`, then swaps in a handle to the new inode.
+    /// Returns the number of logical bytes dropped.
+    pub fn truncate_through(&self, cut: u64) -> Result<u64> {
+        // Everything below the cut must be in the *file* before the
+        // rewrite, or a pre-cut pending byte would later be appended
+        // after a header claiming `base_pos = cut`.
+        self.commit(cut)?;
+        let mut f = self.file.lock().unwrap();
+        if cut <= f.base_pos {
+            return Ok(0);
+        }
+        let bytes = std::fs::read(&self.path)?;
+        let keep_from = (HEADER_LEN + (cut - f.base_pos)) as usize;
+        let mut img = header_bytes(self.log_id, cut);
+        if keep_from < bytes.len() {
+            img.extend_from_slice(&bytes[keep_from..]);
+        }
+        let tmp = self.dir.join("WAL.tmp");
+        std::fs::write(&tmp, &img)?;
+        File::open(&tmp)?.sync_all()?;
+        std::fs::rename(&tmp, &self.path)?;
+        fsync_dir(&self.dir);
+        // The old handle points at the unlinked inode; appends must go
+        // to the new file.
+        f.file = OpenOptions::new().append(true).open(&self.path)?;
+        let dropped = cut - f.base_pos;
+        f.base_pos = cut;
+        Ok(dropped)
+    }
+}
+
+/// Best-effort directory fsync (same contract as `persist`'s: some
+/// filesystems reject opening a directory for sync).
+fn fsync_dir(dir: &Path) {
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("knn-wal-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_records() -> Vec<WalRecord> {
+        vec![
+            WalRecord::Insert { gid: 0, vector: vec![1.0, -2.5] },
+            WalRecord::Delete { gid: 0 },
+            WalRecord::Upsert { gid: 1, internal: 7, vector: vec![0.25, 4.0] },
+        ]
+    }
+
+    #[test]
+    fn records_roundtrip_through_the_frame_codec() {
+        for rec in sample_records() {
+            let frame = encode_record(&rec);
+            let mut img = header_bytes(9, 0);
+            img.extend_from_slice(&frame);
+            let c = decode_wal(&img).unwrap();
+            assert_eq!(c.log_id, 9);
+            assert_eq!(c.records, vec![rec]);
+            assert_eq!(c.valid_len, img.len() as u64);
+        }
+    }
+
+    #[test]
+    fn torn_tail_ends_the_log_cleanly() {
+        let mut img = header_bytes(3, 0);
+        let good = encode_record(&WalRecord::Delete { gid: 5 });
+        img.extend_from_slice(&good);
+        let torn = encode_record(&WalRecord::Insert { gid: 6, vector: vec![1.0; 4] });
+        img.extend_from_slice(&torn[..torn.len() - 3]); // crash mid-write
+        let c = decode_wal(&img).unwrap();
+        assert_eq!(c.records, vec![WalRecord::Delete { gid: 5 }]);
+        assert_eq!(c.valid_len, (HEADER_LEN as usize + good.len()) as u64);
+        // A flipped payload byte is equally a clean end-of-log.
+        let mut bad = header_bytes(3, 0);
+        bad.extend_from_slice(&good);
+        let n = bad.len();
+        bad[n - 1] ^= 0xFF;
+        assert!(decode_wal(&bad).unwrap().records.is_empty());
+    }
+
+    #[test]
+    fn bad_header_is_an_error_not_an_empty_log() {
+        assert!(decode_wal(&[0u8; 8]).is_err());
+        let mut img = header_bytes(1, 0);
+        img[0] ^= 0xFF;
+        assert!(decode_wal(&img).is_err());
+    }
+
+    #[test]
+    fn append_commit_reopen_replays_everything() {
+        let dir = tmpdir("reopen");
+        let wal = Wal::create(&dir, 42, Duration::ZERO).unwrap();
+        let mut last = 0;
+        for rec in sample_records() {
+            last = wal.append(&rec);
+        }
+        wal.commit(last).unwrap();
+        drop(wal);
+        let (wal, records) = Wal::open(&dir, Duration::ZERO).unwrap();
+        assert_eq!(wal.log_id(), 42);
+        assert_eq!(records, sample_records());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncate_through_keeps_only_the_tail() {
+        let dir = tmpdir("trunc");
+        let wal = Wal::create(&dir, 7, Duration::ZERO).unwrap();
+        let cut = wal.append(&WalRecord::Delete { gid: 1 });
+        let end = wal.append(&WalRecord::Delete { gid: 2 });
+        wal.commit(end).unwrap();
+        let dropped = wal.truncate_through(cut).unwrap();
+        assert!(dropped > 0);
+        assert_eq!(wal.truncate_through(cut).unwrap(), 0, "idempotent");
+        // Post-truncation appends land after the surviving tail.
+        let end2 = wal.append(&WalRecord::Delete { gid: 3 });
+        wal.commit(end2).unwrap();
+        drop(wal);
+        let (wal, records) = Wal::open(&dir, Duration::ZERO).unwrap();
+        assert_eq!(
+            records,
+            vec![WalRecord::Delete { gid: 2 }, WalRecord::Delete { gid: 3 }]
+        );
+        assert_eq!(wal.cut_pos(), end2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_committers_share_one_group() {
+        let dir = tmpdir("group");
+        let wal = std::sync::Arc::new(
+            Wal::create(&dir, 1, Duration::from_micros(200)).unwrap(),
+        );
+        std::thread::scope(|scope| {
+            for t in 0..4u32 {
+                let wal = std::sync::Arc::clone(&wal);
+                scope.spawn(move || {
+                    for i in 0..25u32 {
+                        let pos = wal.append(&WalRecord::Delete { gid: t * 100 + i });
+                        wal.commit(pos).unwrap();
+                    }
+                });
+            }
+        });
+        drop(wal);
+        let (_, records) = Wal::open(&dir, Duration::ZERO).unwrap();
+        assert_eq!(records.len(), 100);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -10,7 +10,13 @@
 //! - a crash-recovery property test interleaves
 //!   insert/delete/upsert/seal/compact to a random depth, checkpoints,
 //!   drops the index, restores, and checks the restored index is
-//!   indistinguishable — including "no resurrected gids".
+//!   indistinguishable — including "no resurrected gids";
+//! - the group-committed KWAL closes the window *between* checkpoints:
+//!   a kill with no checkpoint at all replays from the orphaned log, a
+//!   torn final frame loses exactly the unacknowledged record, a crash
+//!   between manifest publish and WAL truncation replays idempotently
+//!   (ids are never reused), and a crash-point property test checks
+//!   the manifest + WAL-tail composition at random depths.
 
 use knn_merge::config::StreamConfig;
 use knn_merge::dataset::{DatasetFamily, MemoryBudget};
@@ -358,6 +364,214 @@ fn upsert_bindings_prune_to_live_state() {
     let gone = restored.search_ef(&ds.vector(300), 5, 96);
     assert!(gone.iter().all(|&(_, id)| id != 9), "gid 9 resurrected");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wal_replay_recovers_acknowledged_writes_without_a_checkpoint() {
+    // kill -9 before the first checkpoint: every acknowledged write
+    // exists only in the group-committed WAL. A fresh index adopts the
+    // orphaned log and replays it back to the exact pre-crash state.
+    let dir = ckpt_dir("wal-orphan");
+    let ds = DatasetFamily::Deep.generate(320, 71);
+    let queries = DatasetFamily::Deep.generate_queries(8, 72);
+    let config = cfg(6, 64); // default 200us window: exercise the group sleep
+    let mut index = StreamingIndex::new(ds.dim, Metric::L2, config.clone());
+    index.attach_durability(&dir).unwrap();
+    for i in 0..250 {
+        index.insert(&ds.vector(i));
+    }
+    for gid in (0..100u32).step_by(5) {
+        assert!(index.delete(gid));
+    }
+    for (j, gid) in (120..140u32).step_by(4).enumerate() {
+        assert!(index.upsert(gid, &ds.vector(260 + j)));
+    }
+    let pre_results = topk_all(&index, &queries);
+    let pre_live = index.live_len();
+    drop(index); // the kill: no checkpoint was ever written
+
+    let mut revived = StreamingIndex::new(ds.dim, Metric::L2, config.clone());
+    revived.attach_durability(&dir).unwrap();
+    assert_eq!(revived.live_len(), pre_live, "replay must rebuild every row");
+    assert_eq!(topk_all(&revived, &queries), pre_results);
+    let hits = revived.search_ef(&ds.vector(0), 5, 64);
+    assert!(hits.iter().all(|&(_, id)| id != 0), "deleted gid 0 resurrected");
+    let hit = revived.search_ef(&ds.vector(260), 1, 96);
+    assert_eq!(hit[0].1, 120, "upserted payload must survive replay");
+    assert!(hit[0].0 <= 1e-6);
+    // The adopted log keeps going: it can checkpoint and restore.
+    revived.insert(&ds.vector(300));
+    revived.checkpoint(&dir).unwrap();
+    let restored =
+        StreamingIndex::restore(&dir, config, &RestoreOptions::default()).unwrap();
+    assert_eq!(restored.live_len(), pre_live + 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn torn_wal_tail_recovers_exactly_the_acknowledged_prefix() {
+    let dir = ckpt_dir("wal-torn");
+    let ds = DatasetFamily::Sift.generate(60, 79);
+    let mut config = cfg(6, 1000); // memtable only: count rows precisely
+    config.wal_group_commit_us = 0;
+    let mut index = StreamingIndex::new(ds.dim, Metric::L2, config.clone());
+    index.attach_durability(&dir).unwrap();
+    for i in 0..60 {
+        index.insert(&ds.vector(i));
+    }
+    drop(index);
+    // Tear the final frame mid-payload, as a crash inside the group
+    // commit's write() would: replay keeps the acknowledged prefix and
+    // treats the torn record as a clean end-of-log.
+    let wal = dir.join("WAL");
+    let bytes = std::fs::read(&wal).unwrap();
+    std::fs::write(&wal, &bytes[..bytes.len() - 3]).unwrap();
+    let mut revived = StreamingIndex::new(ds.dim, Metric::L2, config.clone());
+    revived.attach_durability(&dir).unwrap();
+    assert_eq!(revived.live_len(), 59, "all but the torn last record replay");
+    let hits = revived.search_ef(&ds.vector(59), 1, 64);
+    assert!(hits.iter().all(|&(_, id)| id != 59), "torn record must not apply");
+    let hit = revived.search_ef(&ds.vector(58), 1, 64);
+    assert_eq!(hit[0].1, 58, "the last intact record must apply");
+    assert!(hit[0].0 <= 1e-6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wal_replay_after_checkpoint_is_idempotent() {
+    // Crash in the gap between manifest publish and WAL truncation:
+    // the restored manifest already covers every WAL record. Because
+    // ids are never reused, replay must recognize that and no-op —
+    // never double-apply a row.
+    let dir = ckpt_dir("wal-idem");
+    let ds = DatasetFamily::Deep.generate(300, 77);
+    let queries = DatasetFamily::Deep.generate_queries(8, 78);
+    let mut config = cfg(6, 64);
+    config.wal_group_commit_us = 0;
+    let mut index = StreamingIndex::new(ds.dim, Metric::L2, config.clone());
+    index.attach_durability(&dir).unwrap();
+    for i in 0..220 {
+        index.insert(&ds.vector(i));
+    }
+    for gid in (0..80u32).step_by(4) {
+        assert!(index.delete(gid));
+    }
+    assert!(index.upsert(100, &ds.vector(260)));
+    let wal_before = std::fs::read(dir.join("WAL")).unwrap();
+    let pre_results = topk_all(&index, &queries);
+    let pre_live = index.live_len();
+    let pre_inserted = index.stats().inserted;
+    let pre_deleted = index.stats().deleted;
+    index.checkpoint(&dir).unwrap(); // publishes the manifest, truncates the WAL
+    drop(index);
+    // Undo the truncation: the full pre-checkpoint log is back on disk.
+    std::fs::write(dir.join("WAL"), &wal_before).unwrap();
+
+    let mut restored =
+        StreamingIndex::restore(&dir, config.clone(), &RestoreOptions::default()).unwrap();
+    restored.attach_durability(&dir).unwrap();
+    assert_eq!(restored.live_len(), pre_live, "replay must not change live rows");
+    assert_eq!(restored.stats().inserted, pre_inserted, "double-applied inserts");
+    assert_eq!(restored.stats().deleted, pre_deleted, "double-applied deletes");
+    assert_eq!(topk_all(&restored, &queries), pre_results);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// WAL crash-point property: a random interleaving of insert / delete /
+/// upsert / seal (flush) / compact (tick) runs with durability attached,
+/// takes ONE incremental checkpoint at a random depth (manifest roll +
+/// WAL truncate), keeps mutating, then crashes with the tail of the
+/// history living only in the WAL. Restore + attach must compose the
+/// manifest with the replayed tail into exactly the acknowledged state:
+/// same `live_len`, same `search_ef` answers, no resurrected gids, and
+/// every live payload still answering. (Segment structure may differ —
+/// flush/tick are not logged — but every segment stays under the brute
+/// threshold, so answers are exact either way.)
+#[test]
+fn wal_crash_point_property() {
+    check_property_cases("stream-wal-crash-point", 303, 5, |rng: &mut Rng| {
+        let n_rows = 220 + rng.gen_range(120);
+        let ds = DatasetFamily::Deep.generate(n_rows + 400, rng.next_u64());
+        let queries = DatasetFamily::Deep.generate_queries(6, rng.next_u64());
+        let mut config = cfg(6, 48);
+        config.compact_dead_fraction = 0.3;
+        config.wal_group_commit_us = 0;
+        let dir = ckpt_dir("wal-prop");
+        let mut index = StreamingIndex::new(ds.dim, Metric::L2, config.clone());
+        index.attach_durability(&dir).unwrap();
+
+        let mut live: Vec<u32> = Vec::new();
+        let mut dead: HashSet<u32> = HashSet::new();
+        let mut payload: HashMap<u32, usize> = HashMap::new();
+        let mut born: HashMap<u32, usize> = HashMap::new();
+        let mut next_insert = 0usize;
+        let mut next_fresh = n_rows;
+        let ops = 120 + rng.gen_range(n_rows);
+        let ckpt_at = rng.gen_range(ops);
+        for step in 0..ops {
+            if step == ckpt_at {
+                index.checkpoint(&dir).unwrap();
+            }
+            match rng.gen_range(10) {
+                0..=4 => {
+                    if next_insert < n_rows {
+                        let gid = index.insert(&ds.vector(next_insert));
+                        payload.insert(gid, next_insert);
+                        born.insert(gid, next_insert);
+                        live.push(gid);
+                        next_insert += 1;
+                    }
+                }
+                5 | 6 => {
+                    if live.len() > 1 {
+                        let victim = live.swap_remove(rng.gen_range(live.len()));
+                        assert!(index.delete(victim));
+                        dead.insert(victim);
+                        payload.remove(&victim);
+                    }
+                }
+                7 => {
+                    if !live.is_empty() {
+                        let gid = live[rng.gen_range(live.len())];
+                        assert!(index.upsert(gid, &ds.vector(next_fresh)));
+                        payload.insert(gid, next_fresh);
+                        next_fresh += 1;
+                    }
+                }
+                8 => index.flush(),
+                _ => {
+                    index.tick();
+                }
+            }
+        }
+
+        let pre_results = topk_all(&index, &queries);
+        let pre_live = index.live_len();
+        drop(index); // crash: the tail since `ckpt_at` lives only in the WAL
+
+        let mut restored =
+            StreamingIndex::restore(&dir, config.clone(), &RestoreOptions::default()).unwrap();
+        restored.attach_durability(&dir).unwrap();
+        assert_eq!(restored.live_len(), pre_live, "live_len after tail replay");
+        assert_eq!(
+            topk_all(&restored, &queries),
+            pre_results,
+            "manifest + WAL tail must answer exactly like the pre-crash index"
+        );
+        for g in dead.iter().copied().take(12) {
+            let hits = restored.search_ef(&ds.vector(born[&g]), 5, 64);
+            assert!(
+                hits.iter().all(|&(_, id)| id != g),
+                "deleted gid {g} resurrected after tail replay"
+            );
+        }
+        for (&gid, &row) in payload.iter().take(10) {
+            let hits = restored.search_ef(&ds.vector(row), 1, 96);
+            assert_eq!(hits[0].1, gid, "live gid {gid} lost its payload");
+            assert!(hits[0].0 <= 1e-6);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    });
 }
 
 /// The crash-recovery property test of the ISSUE: a random interleaving

@@ -109,6 +109,17 @@ def main():
     for key in ["service.inflight_search", "service.inflight_ingest"]:
         if key not in gauges:
             err(f"gauges: missing {key!r}")
+    # Degradation magnitude histogram: registered at service
+    # construction; a smoke run that never degrades leaves count 0, so
+    # presence (not value) is the contract.
+    require(hists, "service.search_degradation", dict, "histograms")
+
+    # WAL surface: the smoke runs with --checkpoint-dir, so the engine
+    # attaches the group-committed KWAL — every insert/delete lands in
+    # the commit histogram and record counter.
+    check_histogram(hists, "stream.wal_commit_ns")
+    if counters.get("stream.wal_records", 0) <= 0:
+        err("counters.stream.wal_records must be > 0")
 
     spans = require(snap, "spans", dict) or {}
     for name in ["seal_build", "compaction", "checkpoint"]:
@@ -118,7 +129,10 @@ def main():
     if not events:
         err("events: journal is empty")
     kinds = {e.get("kind") for e in events if isinstance(e, dict)}
-    for kind in ["seal_published", "compaction", "checkpoint"]:
+    # wal_replay fires even on a fresh WAL (records=0); wal_truncate at
+    # the final checkpoint; incremental_spill at every seal publish.
+    for kind in ["seal_published", "compaction", "checkpoint",
+                 "wal_replay", "wal_truncate", "incremental_spill"]:
         if kind not in kinds:
             err(f"events: no {kind!r} event (got kinds {sorted(k for k in kinds if k)})")
 

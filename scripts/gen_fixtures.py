@@ -7,6 +7,7 @@ The fixtures pin the on-disk byte layout of:
   - the row-blocked spill format (KNG3, graph::serial::write_graph_blocked)
   - the search-graph spill       (KIDX, stream::persist::index_to_bytes)
   - the checkpoint manifest      (KNM1, stream::persist::manifest_to_bytes)
+  - the write-ahead row log      (KWAL, stream::wal::encode_record)
 
 plus deliberately damaged variants (truncation, flipped CRC byte) that
 readers must reject with a clean error. `rust/tests/wire_golden.rs`
@@ -129,6 +130,39 @@ manifest = (
 bad = bytearray(manifest)
 bad[16 + len(payload) // 2] ^= 0x20  # flip one payload bit -> CRC must catch it
 (OUT / "golden_badcrc.manifest").write_bytes(bytes(bad))
+
+# -------------------------------------------------------------- KWAL
+# Group-committed write-ahead row log: 24-byte header (magic, version,
+# reserved, log id, logical base position), then length+CRC-framed
+# records. Unlike the manifest, damage is NOT an error here: a torn or
+# garbled record frame is a clean end-of-log (the crash hit mid group
+# commit, so nothing at or past it was ever acknowledged).
+wal_header = (
+    u32(0x4B57414C)  # "KWAL"
+    + u16(1)  # version
+    + u16(0)  # reserved
+    + u64(0xB10C1D0000000001)  # log id (same world as golden.manifest)
+    + u64(0)  # base_pos: nothing truncated yet
+)
+
+
+def wal_frame(payload):
+    return u32(len(payload)) + u32(zlib.crc32(payload) & 0xFFFFFFFF) + payload
+
+
+wal_payloads = [
+    u8(0) + u32(9) + u32(2) + f32(1.5) + f32(-2.0),  # insert gid 9, dim 2
+    u8(1) + u32(3),  # delete gid 3
+    u8(2) + u32(2) + u32(10) + u32(2) + f32(0.25) + f32(4.0),  # upsert gid 2 -> internal 10
+]
+kwal = wal_header + b"".join(wal_frame(p) for p in wal_payloads)
+(OUT / "golden.kwal").write_bytes(kwal)
+# Torn tail: the last frame lost its final 3 bytes mid-write.
+(OUT / "golden_truncated.kwal").write_bytes(kwal[:-3])
+# Flipped payload bit in the last record: the CRC drops exactly it.
+badw = bytearray(kwal)
+badw[-1] ^= 0x20
+(OUT / "golden_badcrc.kwal").write_bytes(bytes(badw))
 
 for f in sorted(OUT.iterdir()):
     print(f"{f.relative_to(OUT.parent.parent.parent)}  {f.stat().st_size} bytes")

@@ -11,6 +11,7 @@
 #   SKIP_RESTORE_SMOKE=1 bash scripts/verify.sh # skip the ~5s durability smoke
 #   RESTORE_SMOKE_SCALE=0.5 bash scripts/verify.sh # bigger restore workload
 #   SKIP_METRICS_SMOKE=1 bash scripts/verify.sh # skip the ~5s metrics smoke
+#   SKIP_WAL_SMOKE=1 bash scripts/verify.sh     # skip the ~5s WAL crash smoke
 #   SKIP_KERNEL_SMOKE=1 bash scripts/verify.sh  # skip the ~5s kernel smoke
 #   KERNEL_SMOKE_SCALE=1 bash scripts/verify.sh # bigger kernel workload
 #   SKIP_SERVE_SMOKE=1 bash scripts/verify.sh   # skip the ~5s serve SLO smoke
@@ -58,13 +59,43 @@ fi
 # histograms with quantiles, seal/compaction/checkpoint span totals,
 # budget gauges, and the event journal. Guards the snapshot schema the
 # way wire_golden guards the checkpoint format.
+smoke_cleanup() { rm -rf ${mdir:+"$mdir"} ${wdir:+"$wdir"}; }
+trap smoke_cleanup EXIT
+
 if [ "${SKIP_METRICS_SMOKE:-0}" != "1" ]; then
   mdir=$(mktemp -d)
-  trap 'rm -rf "$mdir"' EXIT
   target/release/knn-merge stream --family sift --n 3000 --k 8 --lambda 8 \
     --segment-size 500 --report-every 0 --queries 8 --delete-rate 0.2 \
     --checkpoint-dir "$mdir/ckpt" --metrics-out "$mdir/metrics.json" >/dev/null
   python3 scripts/check_metrics_snapshot.py "$mdir/metrics.json"
+fi
+
+# WAL crash smoke (~5s): an acknowledged write must survive kill -9.
+# First a short run checkpoints cleanly (manifest + truncated WAL).
+# Then a throttled run resumes from that checkpoint and is SIGKILLed
+# mid-ingest, so the rows it acknowledged live only in the
+# group-committed KWAL tail. The final --restore run must come back up
+# by replaying that tail and still answer queries — the end-to-end
+# durability contract the stream_restore proptests check in-process.
+if [ "${SKIP_WAL_SMOKE:-0}" != "1" ]; then
+  wdir=$(mktemp -d)
+  target/release/knn-merge stream --family sift --n 2000 --k 8 --lambda 8 \
+    --segment-size 500 --report-every 0 --queries 0 \
+    --checkpoint-dir "$wdir/ckpt" >/dev/null
+  target/release/knn-merge stream --family sift --n 20000 --k 8 --lambda 8 \
+    --segment-size 500 --rate 2000 --report-every 0 --queries 0 \
+    --checkpoint-dir "$wdir/ckpt" --restore >/dev/null 2>&1 &
+  wpid=$!
+  sleep 2
+  kill -9 "$wpid" 2>/dev/null || true
+  wait "$wpid" 2>/dev/null || true
+  if [ ! -f "$wdir/ckpt/WAL" ]; then
+    echo "WAL crash smoke FAILED: no WAL file in the checkpoint dir"; exit 1
+  fi
+  target/release/knn-merge stream --family sift --n 500 --k 8 --lambda 8 \
+    --segment-size 500 --report-every 0 --queries 8 \
+    --checkpoint-dir "$wdir/ckpt" --restore >/dev/null
+  echo "WAL crash smoke OK: killed mid-ingest, restore replayed the tail"
 fi
 
 # Kernel smoke (~5s): the kernels bench must run end to end — scalar vs
